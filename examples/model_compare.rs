@@ -1,0 +1,65 @@
+//! Model comparison (the paper's §5.1 workflow): evaluate many zoo models
+//! on one system under online + batched scenarios and produce the Table-2
+//! style summary + Fig-4/5 scatters through the analysis workflow.
+//!
+//! ```sh
+//! cargo run --release --example model_compare [-- --models a,b,c]
+//! ```
+
+use mlmodelscope::agent::sim_agent;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::util::cli::Args;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let models: Vec<String> = if args.opt("models").is_some() {
+        args.list("models")
+    } else {
+        // A representative slice of Table 2: one per architecture family.
+        [
+            "Inception_v3",
+            "MLPerf_ResNet50_v1.5",
+            "ResNet_v2_101",
+            "AI_Matrix_DenseNet121",
+            "MLPerf_MobileNet_v1",
+            "VGG16",
+            "BVLC_GoogLeNet",
+            "BVLC_AlexNet",
+            "MobileNet_v1_0.25_128",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+    };
+
+    let server = Server::standalone();
+    server.register_zoo();
+    let (agent, _sim, _t) = sim_agent(
+        "aws_p3",
+        Device::Gpu,
+        TraceLevel::Model,
+        server.evaldb.clone(),
+        server.traces.clone(),
+    );
+    server.attach_local_agent(agent);
+
+    for model in &models {
+        // Online latency.
+        let job = EvalJob::new(model, Scenario::Online { count: 16 });
+        server.evaluate(&job)?;
+        // Batched throughput sweep → optimal batch discovery.
+        for batch in [1usize, 8, 32, 64, 128, 256] {
+            let job = EvalJob::new(model, Scenario::Batched { batch_size: batch, batches: 3 });
+            server.evaluate(&job)?;
+        }
+        println!("evaluated {model}");
+    }
+
+    // The full analysis report: Table 2 + Figs 4/5.
+    println!("{}", server.report(&models));
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: the smallest end-to-end MLModelScope-RS usage.
+//!
+//! Builds an in-process platform (server + one simulated V100 agent),
+//! registers the built-in zoo, evaluates ResNet-50 online, and prints the
+//! paper's metrics. Run with:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mlmodelscope::agent::sim_agent;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. A server with its own registry, evaluation DB and trace server.
+    let server = Server::standalone();
+    server.register_zoo();
+
+    // 2. One agent on a simulated AWS P3 (Tesla V100), full tracing.
+    let (agent, _sim, _tracer) = sim_agent(
+        "aws_p3",
+        Device::Gpu,
+        TraceLevel::Full,
+        server.evaldb.clone(),
+        server.traces.clone(),
+    );
+    server.attach_local_agent(agent);
+
+    // 3. Evaluate MLPerf ResNet-50 v1.5 in the online scenario.
+    let job = EvalJob::new("MLPerf_ResNet50_v1.5", Scenario::Online { count: 16 });
+    let records = server.evaluate(&job)?;
+    let r = &records[0];
+    println!(
+        "{} on {}: trimmed-mean {:.2} ms, p90 {:.2} ms ({} requests)",
+        r.key.model,
+        r.key.system,
+        r.trimmed_mean_ms(),
+        r.p90_ms(),
+        r.latencies.len()
+    );
+
+    // 4. Inspect the trace (F9): the longest framework-level layer.
+    let timeline = server.traces.timeline(r.trace_id.unwrap());
+    if let Some(layer) = timeline.longest(TraceLevel::Framework) {
+        println!(
+            "longest layer: {} ({:.3} ms, kind {})",
+            layer.name,
+            layer.duration_ms(),
+            layer.tag("kind").unwrap_or("?")
+        );
+    }
+
+    // 5. The analysis workflow (F8).
+    println!("{}", server.report(&["MLPerf_ResNet50_v1.5".to_string()]));
+    Ok(())
+}

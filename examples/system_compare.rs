@@ -1,0 +1,72 @@
+//! System comparison (the paper's Fig-7 workflow): one model across all
+//! Table-1 systems — GPUs and CPUs — plus the cost-efficiency analysis
+//! (M60-vs-K80 discussion of §5.1).
+//!
+//! ```sh
+//! cargo run --release --example system_compare [-- --model ResNet_v1_50]
+//! ```
+
+use mlmodelscope::agent::sim_agent;
+use mlmodelscope::manifest::{Accelerator, SystemRequirements};
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::util::cli::Args;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let model = args.opt_or("model", "ResNet_v1_50").to_string();
+
+    let server = Server::standalone();
+    server.register_zoo();
+    for sys in ["aws_p3", "aws_g3", "aws_p2", "ibm_p8"] {
+        for dev in [Device::Gpu, Device::Cpu] {
+            let (agent, _s, _t) = sim_agent(
+                sys,
+                dev,
+                TraceLevel::Model,
+                server.evaldb.clone(),
+                server.traces.clone(),
+            );
+            server.attach_local_agent(agent);
+        }
+    }
+
+    // Batched latency across batch sizes on every agent (the paper's
+    // "evaluations run in parallel across systems" F4: all_agents=true
+    // fans one job out to every resolved agent).
+    for batch in [1usize, 16, 64, 256] {
+        for acc in [Accelerator::Gpu, Accelerator::Cpu] {
+            let mut job = EvalJob::new(&model, Scenario::Batched { batch_size: batch, batches: 3 });
+            job.all_agents = true;
+            job.requirements = SystemRequirements { accelerator: acc, ..SystemRequirements::any() };
+            server.evaluate(&job)?;
+        }
+    }
+
+    println!("{}", mlmodelscope::analysis::system_comparison(&model, &server.evaldb).render());
+
+    // The paper's CPU observation: P8 vs Xeon speedup range.
+    let q = |sys: &str, dev: &str| {
+        server
+            .evaldb
+            .latest(&mlmodelscope::evaldb::EvalQuery {
+                model: Some(model.clone()),
+                system: Some(sys.into()),
+                device: Some(dev.into()),
+                batch_size: Some(16),
+                ..Default::default()
+            })
+            .first()
+            .map(|r| r.trimmed_mean_ms())
+            .unwrap_or(f64::NAN)
+    };
+    let speedup = q("aws_p3", "cpu") / q("ibm_p8", "cpu");
+    println!("P8 CPU speedup over Xeon @batch16: {speedup:.2}x (paper: 1.7x–4.1x)");
+    let m60 = q("aws_g3", "gpu");
+    let k80 = q("aws_p2", "gpu");
+    println!("M60 vs K80 latency ratio @batch16: {:.2}x (paper: 1.2x–1.7x faster)", k80 / m60);
+    Ok(())
+}

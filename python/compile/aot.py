@@ -1,0 +1,75 @@
+"""AOT compile path: lower every (family, batch) model variant to HLO text.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never appears on the request path.
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Must match rust/src/runtime/mod.rs::ARTIFACT_BATCHES.
+BATCHES = (1, 2, 4, 8, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the rust
+    side unwraps a 1-tuple, matching the load_hlo reference)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_family(family: str, batch: int) -> str:
+    fn = model.forward(family)
+    lowered = jax.jit(fn).lower(model.input_spec(batch))
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--families", default=",".join(model.FAMILIES))
+    ap.add_argument(
+        "--batches", default=",".join(str(b) for b in BATCHES),
+        help="comma-separated batch sizes",
+    )
+    ap.add_argument("--force", action="store_true", help="rebuild even if up to date")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    families = [f for f in args.families.split(",") if f]
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    src_mtime = max(
+        p.stat().st_mtime for p in pathlib.Path(__file__).parent.rglob("*.py")
+    )
+    built = skipped = 0
+    for family in families:
+        for batch in batches:
+            out = out_dir / f"{family}_b{batch}.hlo.txt"
+            if not args.force and out.exists() and out.stat().st_mtime >= src_mtime:
+                skipped += 1
+                continue
+            text = lower_family(family, batch)
+            out.write_text(text)
+            built += 1
+            print(f"wrote {out} ({len(text)} chars)")
+    print(f"artifacts: {built} built, {skipped} up-to-date")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""L1 — convolution via im2col + the Pallas matmul kernel.
+
+The paper's evaluation (§5.3) shows framework conv layers lowering to GEMM
+kernels (``volta_scudnn_128x128_relu``...); we take the same route
+explicitly: NHWC conv → im2col patch matrix → `matmul.matmul_bias_act` on
+the MXU, with the bias+ReLU fused into the GEMM epilogue exactly as the
+cuDNN `_relu_` kernels do.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str = "SAME") -> jax.Array:
+    """Extract conv patches: (N, H, W, C) → (N·Ho·Wo, kh·kw·C).
+
+    Patch extraction is pure data movement — XLA fuses it with the
+    surrounding reshape; the FLOPs all land in the Pallas GEMM.
+    """
+    n, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches yields features as C*kh*kw (channel-major);
+    # reorder to kh*kw*C to match HWIO weight layout.
+    ho, wo = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(n, ho, wo, c, kh * kw)
+    patches = jnp.transpose(patches, (0, 1, 2, 4, 3))
+    return patches.reshape(n * ho * wo, kh * kw * c), (n, ho, wo)
+
+
+def conv2d_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    activation: str = "relu",
+    interpret: bool = True,
+) -> jax.Array:
+    """NHWC convolution with fused bias + activation on the Pallas GEMM.
+
+    x: (N, H, W, Cin); w: (kh, kw, Cin, Cout) HWIO; b: (Cout,).
+    """
+    kh, kw, cin, cout = w.shape
+    cols, (n, ho, wo) = im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = matmul.matmul_bias_act(cols, wmat, b, activation=activation, interpret=interpret)
+    return out.reshape(n, ho, wo, cout)
+
+
+def depthwise_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    activation: str = "relu",
+) -> jax.Array:
+    """Depthwise conv (MobileNet family). Bandwidth-bound, no GEMM to win —
+    stays on XLA's native op (the same choice cuDNN makes).
+
+    Weight layout HWIO with I=1, O=C: ``(kh, kw, 1, C)``."""
+    c = w.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    out = out + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out

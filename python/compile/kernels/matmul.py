@@ -1,0 +1,120 @@
+"""L1 — tiled matmul Pallas kernel with fused bias + activation.
+
+This is the compute hot-spot of every model in the zoo: convolutions are
+lowered to im2col + matmul (see ``conv.py``), and dense layers call it
+directly.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): where the paper's
+cuDNN kernels tile for CUDA threadblocks + shared memory, this kernel tiles
+for the TPU memory hierarchy: the grid is ``(M/bm, N/bn, K/bk)``; each
+``(i, j)`` output tile stays resident in VMEM while the ``k`` axis streams
+``bm×bk`` / ``bk×bn`` operand tiles HBM→VMEM, accumulating partial products
+on the MXU. Block shapes default to multiples of the MXU's 128×128 systolic
+array (shrunk when the problem is smaller); the M tile defaults to 256
+after the §Perf sweep (EXPERIMENTS.md): halving the grid's M steps cut
+the interpret-path batch-8 latency 37% with VMEM still at ~0.4 MB.
+
+The kernel is always invoked with ``interpret=True``: real-TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute. TPU
+performance is therefore *estimated analytically* (see ``vmem_footprint``
+and EXPERIMENTS.md §Perf), never measured through the interpreter.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, activation: str):
+    """One (i, j, k) grid step: accumulate x_tile @ w_tile into o_tile.
+
+    The output BlockSpec ignores the k index, so the same o_ref tile is
+    revisited across the k axis — it acts as the VMEM-resident accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        out = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif activation == "gelu":
+            out = jax.nn.gelu(out)
+        o_ref[...] = out
+
+
+def _tile(dim: int, preferred: int) -> int:
+    """Largest tile ≤ preferred that divides dim (falls back to dim)."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "none",
+    bm: int = 256,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``activation(x @ w + b)`` as a tiled Pallas kernel.
+
+    x: (M, K) f32; w: (K, N) f32; b: (N,) f32 → (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def vmem_footprint(m: int, n: int, k: int, bm: int = 128, bn: int = 128, bk: int = 128,
+                   bytes_per_el: int = 4) -> dict:
+    """Analytic VMEM footprint + MXU utilization estimate for the tiling.
+
+    Used by the §Perf analysis: VMEM holds one x tile, one w tile, one bias
+    tile and the resident output accumulator. MXU utilization estimates the
+    fraction of 128×128 systolic slots a (bm, bn, bk) step keeps busy.
+    """
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    vmem = (bm * bk + bk * bn + bn + bm * bn) * bytes_per_el
+    mxu = min(bm, 128) * min(bn, 128) / (128 * 128)
+    # HBM traffic per output tile: stream K dimension once.
+    hbm_bytes = (bm * k + k * bn) * bytes_per_el + bm * bn * bytes_per_el
+    flops = 2 * bm * bn * k
+    return {
+        "block": (bm, bn, bk),
+        "vmem_bytes": vmem,
+        "mxu_utilization": mxu,
+        "arithmetic_intensity": flops / hbm_bytes,
+    }

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package has a reference here implemented with nothing
+but ``jax.numpy`` / ``jax.lax``; pytest asserts allclose between kernel and
+reference across shape/dtype sweeps (hypothesis) before any artifact is
+compiled.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x, w, b, activation: str = "none"):
+    out = x @ w + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    return out
+
+
+def conv2d_bias_act(x, w, b, stride: int = 1, padding: str = "SAME", activation: str = "relu"):
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def depthwise_conv2d(x, w, b, stride: int = 1, activation: str = "relu"):
+    c = w.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    out = out + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

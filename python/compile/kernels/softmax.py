@@ -1,0 +1,35 @@
+"""L1 — row-softmax Pallas kernel (the classification head's epilogue).
+
+One grid row per block of rows; the full class axis stays in VMEM (the
+zoo's heads are ≤ 1000 classes ≈ 4 KB/row — trivially VMEM-resident), so
+max/sub/exp/sum fuse into a single pass without HBM round-trips.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax(x: jax.Array, *, block_rows: int = 128, interpret: bool = True) -> jax.Array:
+    """Numerically-stable softmax over the last axis of a 2-D array."""
+    m, n = x.shape
+    br = min(block_rows, m)
+    while m % br != 0:
+        br -= 1
+    return pl.pallas_call(
+        functools.partial(_softmax_kernel),
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,183 @@
+"""L2 — the JAX model zoo: five tiny CNN families mirroring the paper's
+Table-2 architecture classes.
+
+Each family is a forward function ``(N, 32, 32, 3) f32 → (N, 10)``
+probabilities whose convolutions and dense layers run on the L1 Pallas
+GEMM (``kernels.matmul`` via ``kernels.conv``) and whose head runs the L1
+Pallas softmax. Weights are deterministic (fixed per-family PRNG seed) and
+closed over, so they lower into the HLO as constants — the Rust runtime
+feeds exactly one input tensor per execution.
+
+These are the *real* executables behind the zoo's ``hlo_family`` mapping:
+``tiny_resnet`` ↔ the ResNet rows of Table 2, ``tiny_vgg`` ↔ VGG16/19, etc.
+Full-size architectures are simulated on the Table-1 system models; these
+tiny twins prove the platform's full compile→serve path end to end.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import matmul as kmatmul
+from .kernels import softmax as ksoftmax
+
+INPUT_RES = 32
+NUM_CLASSES = 10
+FAMILIES = ("tiny_resnet", "tiny_vgg", "tiny_mobilenet", "tiny_inception", "tiny_alexnet")
+
+_SEEDS = {name: i + 1 for i, name in enumerate(FAMILIES)}
+
+
+def _param(key, shape, scale=None):
+    if scale is None:
+        fan_in = 1
+        for d in shape[:-1]:
+            fan_in *= d
+        scale = (2.0 / max(fan_in, 1)) ** 0.5
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+class _ParamBank:
+    """Deterministic parameter factory: one split per request."""
+
+    def __init__(self, seed: int):
+        self.key = jax.random.PRNGKey(seed)
+
+    def take(self, shape, scale=None):
+        self.key, sub = jax.random.split(self.key)
+        return _param(sub, shape, scale)
+
+    def conv(self, kh, kw, cin, cout):
+        return self.take((kh, kw, cin, cout)), jnp.zeros((cout,), jnp.float32)
+
+    def dense(self, cin, cout):
+        return self.take((cin, cout)), jnp.zeros((cout,), jnp.float32)
+
+
+def _global_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _head(x, w, b):
+    logits = kmatmul.matmul_bias_act(x, w, b, activation="none")
+    return ksoftmax.softmax(logits)
+
+
+def tiny_resnet(x):
+    """Stem + two residual stages (the ResNet rows' tiny twin)."""
+    p = _ParamBank(_SEEDS["tiny_resnet"])
+    w, b = p.conv(3, 3, 3, 16)
+    h = kconv.conv2d_bias_act(x, w, b, stride=1)
+    for cout, stride in [(16, 1), (32, 2)]:
+        cin = h.shape[-1]
+        # projection shortcut when shape changes
+        if stride != 1 or cin != cout:
+            ws, bs = p.conv(1, 1, cin, cout)
+            shortcut = kconv.conv2d_bias_act(h, ws, bs, stride=stride, activation="none")
+        else:
+            shortcut = h
+        w1, b1 = p.conv(3, 3, cin, cout)
+        w2, b2 = p.conv(3, 3, cout, cout)
+        y = kconv.conv2d_bias_act(h, w1, b1, stride=stride)
+        y = kconv.conv2d_bias_act(y, w2, b2, activation="none")
+        h = jnp.maximum(y + shortcut, 0.0)
+    wd, bd = p.dense(h.shape[-1], NUM_CLASSES)
+    return _head(_global_pool(h), wd, bd)
+
+
+def tiny_vgg(x):
+    """Stacked 3×3 conv stages + two dense layers (VGG's tiny twin)."""
+    p = _ParamBank(_SEEDS["tiny_vgg"])
+    h = x
+    for cout in (16, 16):
+        w, b = p.conv(3, 3, h.shape[-1], cout)
+        h = kconv.conv2d_bias_act(h, w, b)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    for cout in (32, 32):
+        w, b = p.conv(3, 3, h.shape[-1], cout)
+        h = kconv.conv2d_bias_act(h, w, b)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    # The weight-heavy FC pair that makes VGG VGG.
+    w1, b1 = p.dense(h.shape[-1], 64)
+    h = kmatmul.matmul_bias_act(h, w1, b1, activation="relu")
+    wd, bd = p.dense(64, NUM_CLASSES)
+    return _head(h, wd, bd)
+
+
+def tiny_mobilenet(x):
+    """Depthwise-separable stacks (MobileNet's tiny twin)."""
+    p = _ParamBank(_SEEDS["tiny_mobilenet"])
+    w, b = p.conv(3, 3, 3, 16)
+    h = kconv.conv2d_bias_act(x, w, b, stride=2)
+    for cout, stride in [(32, 1), (32, 2), (64, 1)]:
+        cin = h.shape[-1]
+        wd_, bd_ = p.conv(3, 3, 1, cin)  # HWIO depthwise: I=1, O=C
+        h = kconv.depthwise_conv2d(h, wd_, bd_, stride=stride)
+        wp, bp = p.conv(1, 1, cin, cout)
+        h = kconv.conv2d_bias_act(h, wp, bp)  # pointwise = Pallas GEMM
+    wd, bd = p.dense(h.shape[-1], NUM_CLASSES)
+    return _head(_global_pool(h), wd, bd)
+
+
+def tiny_inception(x):
+    """Two inception modules with 1×1 / 3×3 / 5×5 branches (tiny twin)."""
+    p = _ParamBank(_SEEDS["tiny_inception"])
+    w, b = p.conv(3, 3, 3, 16)
+    h = kconv.conv2d_bias_act(x, w, b, stride=2)
+    for base in (8, 16):
+        cin = h.shape[-1]
+        w1, b1 = p.conv(1, 1, cin, base)
+        b1x1 = kconv.conv2d_bias_act(h, w1, b1)
+        w3a, b3a = p.conv(1, 1, cin, base)
+        w3b, b3b = p.conv(3, 3, base, base * 2)
+        b3x3 = kconv.conv2d_bias_act(kconv.conv2d_bias_act(h, w3a, b3a), w3b, b3b)
+        w5a, b5a = p.conv(1, 1, cin, base // 2)
+        w5b, b5b = p.conv(5, 5, base // 2, base)
+        b5x5 = kconv.conv2d_bias_act(kconv.conv2d_bias_act(h, w5a, b5a), w5b, b5b)
+        h = jnp.concatenate([b1x1, b3x3, b5x5], axis=-1)
+    wd, bd = p.dense(h.shape[-1], NUM_CLASSES)
+    return _head(_global_pool(h), wd, bd)
+
+
+def tiny_alexnet(x):
+    """Large-kernel convs + a weight-dominant fc6 (AlexNet's tiny twin —
+    the cold-start experiment subject)."""
+    p = _ParamBank(_SEEDS["tiny_alexnet"])
+    w, b = p.conv(5, 5, 3, 24)
+    h = kconv.conv2d_bias_act(x, w, b, stride=2)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    w2, b2 = p.conv(3, 3, 24, 48)
+    h = kconv.conv2d_bias_act(h, w2, b2)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    # "fc6": the dominant weight matrix, as in BVLC AlexNet.
+    w6, b6 = p.dense(h.shape[-1], 128)
+    h = kmatmul.matmul_bias_act(h, w6, b6, activation="relu")
+    wd, bd = p.dense(128, NUM_CLASSES)
+    return _head(h, wd, bd)
+
+
+_FORWARD = {
+    "tiny_resnet": tiny_resnet,
+    "tiny_vgg": tiny_vgg,
+    "tiny_mobilenet": tiny_mobilenet,
+    "tiny_inception": tiny_inception,
+    "tiny_alexnet": tiny_alexnet,
+}
+
+
+def forward(family: str):
+    """The forward function for a family (probabilities over 10 classes)."""
+    return _FORWARD[family]
+
+
+@functools.lru_cache(maxsize=None)
+def jitted(family: str):
+    return jax.jit(_FORWARD[family])
+
+
+def input_spec(batch: int):
+    return jax.ShapeDtypeStruct((batch, INPUT_RES, INPUT_RES, 3), jnp.float32)

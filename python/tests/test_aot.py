@@ -1,0 +1,64 @@
+"""AOT path: HLO-text lowering is well-formed, deterministic, and
+batch-parameterized correctly; the artifact naming contract matches the
+Rust runtime.
+"""
+
+import pathlib
+import re
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("family", model.FAMILIES)
+def test_lowering_produces_hlo_text(family):
+    text = aot.lower_family(family, 1)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Single input parameter at the compiled batch size (weights are consts).
+    m = re.search(r"entry_computation_layout=\{\(([^)]*)\)", text)
+    assert m, "entry layout missing"
+    params = [p for p in m.group(1).split(",") if "f32" in p]
+    assert len(params) == 1, f"expected 1 input param, got {params}"
+    assert "f32[1,32,32,3]" in m.group(1)
+    # Output is a 1-tuple of (batch, classes).
+    assert "(f32[1,10]" in text
+
+
+def test_batch_dimension_propagates():
+    text = aot.lower_family("tiny_vgg", 8)
+    assert "f32[8,32,32,3]" in text
+    assert "f32[8,10]" in text
+
+
+def test_lowering_deterministic():
+    a = aot.lower_family("tiny_mobilenet", 2)
+    b = aot.lower_family("tiny_mobilenet", 2)
+    assert a == b
+
+
+def test_artifact_naming_contract():
+    # Must match rust/src/runtime/mod.rs::{artifact_path, ARTIFACT_BATCHES}.
+    assert aot.BATCHES == (1, 2, 4, 8, 16, 32)
+    out = pathlib.Path("x") / "tiny_resnet_b4.hlo.txt"
+    assert out.name == f"tiny_resnet_b{4}.hlo.txt"
+
+
+def test_main_incremental(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr(
+        "sys.argv",
+        ["aot", "--out-dir", str(tmp_path), "--families", "tiny_resnet", "--batches", "1"],
+    )
+    assert aot.main() == 0
+    out1 = capsys.readouterr().out
+    assert "1 built" in out1
+    # Second run: up to date, nothing rebuilt.
+    monkeypatch.setattr(
+        "sys.argv",
+        ["aot", "--out-dir", str(tmp_path), "--families", "tiny_resnet", "--batches", "1"],
+    )
+    assert aot.main() == 0
+    out2 = capsys.readouterr().out
+    assert "0 built, 1 up-to-date" in out2
+    assert (tmp_path / "tiny_resnet_b1.hlo.txt").exists()

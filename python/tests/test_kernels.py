@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; fixed cases pin the tile-edge
+conditions (non-divisible dims, single-row, K == block).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import matmul as kmatmul
+from compile.kernels import ref
+from compile.kernels import softmax as ksoftmax
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    activation=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_hypothesis(m, k, n, activation, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+    got = kmatmul.matmul_bias_act(x, w, b, activation=activation)
+    want = ref.matmul_bias_act(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),  # exactly one MXU tile
+        (256, 128, 384),  # multi-tile grid
+        (1, 7, 13),       # degenerate row
+        (129, 130, 131),  # nothing divides the preferred tiles
+        (64, 576, 16),    # conv-like K (3*3*64)
+    ],
+)
+def test_matmul_tile_edges(m, k, n):
+    x = rand(7, (m, k))
+    w = rand(8, (k, n))
+    b = rand(9, (n,))
+    got = kmatmul.matmul_bias_act(x, w, b, activation="relu")
+    want = ref.matmul_bias_act(x, w, b, activation="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_under_jit_and_grad_path():
+    # The kernel must trace cleanly under jit (the AOT path does exactly this).
+    x, w, b = rand(1, (32, 48)), rand(2, (48, 24)), rand(3, (24,))
+    f = jax.jit(lambda x: kmatmul.matmul_bias_act(x, w, b, activation="relu"))
+    np.testing.assert_allclose(
+        f(x), ref.matmul_bias_act(x, w, b, "relu"), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_vmem_footprint_analysis():
+    fp = kmatmul.vmem_footprint(1024, 1024, 1024)
+    assert fp["block"] == (128, 128, 128)
+    # 3 tiles + bias in f32: (128·128)·3·4 + 128·4 ≈ 197 KB — far below 16 MB VMEM.
+    assert fp["vmem_bytes"] < 16 * 2**20
+    assert fp["mxu_utilization"] == 1.0
+    small = kmatmul.vmem_footprint(32, 32, 32)
+    assert small["mxu_utilization"] < 0.1
+
+
+# ---------------------------------------------------------------- conv
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(4, 20),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_im2col_matches_lax_hypothesis(n, hw, cin, cout, k, stride, seed):
+    x = rand(seed, (n, hw, hw, cin))
+    w = rand(seed + 1, (k, k, cin, cout), -0.5, 0.5)
+    b = rand(seed + 2, (cout,))
+    got = kconv.conv2d_bias_act(x, w, b, stride=stride)
+    want = ref.conv2d_bias_act(x, w, b, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_conv_valid_padding():
+    x = rand(1, (2, 8, 8, 4))
+    w = rand(2, (3, 3, 4, 6), -0.5, 0.5)
+    b = rand(3, (6,))
+    got = kconv.conv2d_bias_act(x, w, b, padding="VALID")
+    want = ref.conv2d_bias_act(x, w, b, padding="VALID")
+    assert got.shape == (2, 6, 6, 6)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_depthwise_matches_ref():
+    x = rand(4, (2, 10, 10, 8))
+    w = rand(5, (3, 3, 1, 8), -0.5, 0.5)
+    b = rand(6, (8,))
+    for stride in (1, 2):
+        got = kconv.depthwise_conv2d(x, w, b, stride=stride)
+        want = ref.depthwise_conv2d(x, w, b, stride=stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_shapes():
+    x = rand(1, (2, 9, 9, 3))
+    cols, (n, ho, wo) = kconv.im2col(x, 3, 3, 2, "SAME")
+    assert (n, ho, wo) == (2, 5, 5)
+    assert cols.shape == (2 * 5 * 5, 3 * 3 * 3)
+
+
+# ---------------------------------------------------------------- softmax
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(2, 64),
+    scale=st.sampled_from([1.0, 50.0, 1000.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_matches_ref_hypothesis(m, n, scale, seed):
+    x = rand(seed, (m, n), -scale, scale)
+    got = ksoftmax.softmax(x)
+    want = ref.softmax(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got).sum(-1), np.ones(m), rtol=1e-5)
+
+
+def test_softmax_stability_extremes():
+    x = jnp.array([[1e4, 1e4 + 1.0, -1e4]], jnp.float32)
+    got = np.asarray(ksoftmax.softmax(x))
+    assert np.isfinite(got).all()
+    assert got[0, 1] > got[0, 0] > got[0, 2]

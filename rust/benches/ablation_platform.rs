@@ -1,0 +1,120 @@
+//! Ablation — platform machinery costs: registry resolution at scale (F4),
+//! wire-RPC round-trips, and manifest parsing. The platform should never
+//! be the bottleneck relative to model compute.
+
+use mlmodelscope::benchkit::{bench, bench_header, BenchConfig, Table};
+use mlmodelscope::manifest::{ModelManifest, SystemRequirements};
+use mlmodelscope::registry::{AgentInfo, Registry};
+use mlmodelscope::util::json::Json;
+
+fn agent(i: usize) -> AgentInfo {
+    AgentInfo {
+        id: format!("agent-{i}"),
+        endpoint: String::new(),
+        framework: "TensorFlow".into(),
+        framework_version: "1.15.0".parse().unwrap(),
+        system: ["aws_p3", "aws_g3", "aws_p2", "ibm_p8"][i % 4].into(),
+        architecture: if i % 4 == 3 { "ppc64le" } else { "x86_64" }.into(),
+        devices: vec!["cpu".into(), "gpu".into()],
+        interconnect: if i % 4 == 3 { "nvlink" } else { "pcie3" }.into(),
+        host_memory_gb: 61.0,
+        device_memory_gb: 16.0,
+        models: Vec::new(),
+    }
+}
+
+fn main() {
+    bench_header("ablation_platform", "registry resolution, wire RPC, manifest parse costs");
+    let cfg = BenchConfig::default();
+    let mut table = Table::new("platform machinery", &["operation", "trimmed mean", "unit"]);
+
+    // Registry resolution across N agents.
+    for n in [10usize, 100, 1000] {
+        let reg = Registry::new();
+        for i in 0..n {
+            reg.register_agent(agent(i), None);
+        }
+        let manifest = mlmodelscope::zoo::by_name("MLPerf_ResNet50_v1.5").unwrap().manifest();
+        let req = SystemRequirements {
+            interconnect: Some("nvlink".into()),
+            ..SystemRequirements::any()
+        };
+        let m = bench(&format!("resolve/{n}"), &cfg, || {
+            let r = reg.resolve(&manifest, &req);
+            std::hint::black_box(r);
+        });
+        table.row(&[
+            format!("resolve over {n} agents"),
+            format!("{:.1}", m.samples.trimmed_mean() * 1e6),
+            "µs".into(),
+        ]);
+    }
+
+    // Wire RPC round-trip (echo) + 600 KB tensor payload.
+    let service: std::sync::Arc<dyn mlmodelscope::wire::Service> =
+        std::sync::Arc::new(|_m: &str, p: &Json| -> Result<Json, String> { Ok(p.clone()) });
+    let rpc = mlmodelscope::wire::RpcServer::serve("127.0.0.1:0", service).unwrap();
+    let client = mlmodelscope::wire::RpcClient::connect(rpc.addr()).unwrap();
+    let m = bench("rpc_small", &cfg, || {
+        client.call("echo", Json::num(1.0)).unwrap();
+    });
+    table.row(&[
+        "wire RPC round-trip (small)".into(),
+        format!("{:.1}", m.samples.trimmed_mean() * 1e6),
+        "µs".into(),
+    ]);
+    let tensor = mlmodelscope::preprocess::Tensor::random(vec![1, 224, 224, 3], 1);
+    let payload = tensor.to_json();
+    let m = bench("rpc_tensor_json", &BenchConfig::quick(), || {
+        client.call("echo", payload.clone()).unwrap();
+    });
+    let json_ms = m.samples.trimmed_mean() * 1e3;
+    table.row(&[
+        "wire RPC round-trip (224² f32 tensor as JSON) [before]".into(),
+        format!("{json_ms:.2}"),
+        "ms".into(),
+    ]);
+    // §Perf optimization: the same tensor as a raw binary attachment.
+    let blob = tensor.to_bytes();
+    let m = bench("rpc_tensor_binary", &BenchConfig::quick(), || {
+        client.call_binary("echo", Json::Null, Some(&blob)).unwrap();
+    });
+    let bin_ms = m.samples.trimmed_mean() * 1e3;
+    table.row(&[
+        "wire RPC round-trip (224² f32 tensor, binary frame) [after]".into(),
+        format!("{bin_ms:.2}"),
+        "ms".into(),
+    ]);
+    println!("tensor payload: JSON {json_ms:.2} ms → binary {bin_ms:.2} ms ({:.0}x)", json_ms / bin_ms);
+
+    // Manifest YAML parse.
+    let m = bench("manifest_parse", &cfg, || {
+        let mm = ModelManifest::from_yaml(mlmodelscope::manifest::model_listing1()).unwrap();
+        std::hint::black_box(mm);
+    });
+    table.row(&[
+        "model manifest parse (Listing 1)".into(),
+        format!("{:.1}", m.samples.trimmed_mean() * 1e6),
+        "µs".into(),
+    ]);
+
+    // Heartbeat + TTL sweep cost.
+    let reg = Registry::new();
+    let ids: Vec<String> = (0..100)
+        .map(|i| reg.register_agent(agent(i), Some(std::time::Duration::from_secs(60))))
+        .collect();
+    let m = bench("heartbeat_100", &cfg, || {
+        for id in &ids {
+            reg.heartbeat(id, std::time::Duration::from_secs(60));
+        }
+    });
+    table.row(&[
+        "heartbeat ×100 agents".into(),
+        format!("{:.1}", m.samples.trimmed_mean() * 1e6),
+        "µs".into(),
+    ]);
+
+    println!("{}", table.render());
+    table.save_csv("target/bench_results/ablation_platform.csv").ok();
+    rpc.stop();
+}

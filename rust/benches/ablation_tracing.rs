@@ -1,0 +1,80 @@
+//! Ablation — F9 tracing overhead by level: NONE → MODEL → FRAMEWORK →
+//! SYSTEM/FULL on the same evaluation.
+//!
+//! The paper's design lets users "selectively enable/disable the
+//! integrated profilers" because overhead can be high; this measures the
+//! platform-side cost of each level (span creation + publication) on a
+//! real evaluation loop, and the pure hot-path cost of a disabled tracer.
+
+use mlmodelscope::benchkit::{bench, bench_header, BenchConfig, Table};
+use mlmodelscope::manifest::SystemRequirements;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::tracing::{TraceLevel, Tracer};
+use std::time::Instant;
+
+fn main() {
+    bench_header("ablation_tracing", "F9 — tracing overhead by level (§4.4.4)");
+
+    // Disabled-tracer hot path: the cost of the enabled-check alone.
+    let cfg = BenchConfig::default();
+    let tracer = Tracer::disabled();
+    let m = bench("disabled_span_attempt", &cfg, || {
+        for _ in 0..1000 {
+            std::hint::black_box(tracer.start(1, None, TraceLevel::Model, "x"));
+        }
+    });
+    println!(
+        "disabled tracer: {:.1} ns per span attempt",
+        m.samples.trimmed_mean() * 1e9 / 1000.0
+    );
+
+    let (tracer_on, sink) = Tracer::in_memory(TraceLevel::Full);
+    let m = bench("enabled_span", &cfg, || {
+        for _ in 0..1000 {
+            let t = tracer_on.new_trace();
+            let s = tracer_on.start(t, None, TraceLevel::Model, "predict").unwrap();
+            std::hint::black_box(s).finish();
+        }
+    });
+    println!(
+        "enabled tracer: {:.1} ns per span (in-memory sink, {} spans collected)",
+        m.samples.trimmed_mean() * 1e9 / 1000.0,
+        sink.len()
+    );
+
+    // Whole-evaluation overhead per level: wall time of the simulated
+    // evaluation (span machinery is the only real-time component; the
+    // simulated model time is logical).
+    let mut table = Table::new(
+        "evaluation wall time by trace level (ResNet_v1_50 online ×32, simulated V100)",
+        &["level", "wall (ms)", "spans published"],
+    );
+    let mut base_ms = 0.0;
+    for level in [
+        TraceLevel::None,
+        TraceLevel::Model,
+        TraceLevel::Framework,
+        TraceLevel::Full,
+    ] {
+        let server = Server::sim_platform(level);
+        let mut job = EvalJob::new("ResNet_v1_50", Scenario::Online { count: 32 });
+        job.trace_level = level;
+        job.requirements = SystemRequirements::on_system("aws_p3");
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+        let t0 = Instant::now();
+        let records = server.evaluate(&job).expect("eval");
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let spans = records[0]
+            .trace_id
+            .map(|t| server.traces.timeline(t).spans.len())
+            .unwrap_or(0);
+        if level == TraceLevel::None {
+            base_ms = wall;
+        }
+        table.row(&[level.as_str().to_string(), format!("{wall:.1}"), spans.to_string()]);
+    }
+    println!("{}", table.render());
+    table.save_csv("target/bench_results/ablation_tracing.csv").ok();
+    println!("baseline (none): {base_ms:.1} ms — higher levels add span volume, as §4.4.4 warns.");
+}

@@ -1,0 +1,84 @@
+//! Fig 2 — language-binding / input-marshalling overhead.
+//!
+//! Paper: TensorFlow inference via the C API vs Python (native lists) vs
+//! NumPy, across batch sizes, on CPU and GPU. Python is 64% (CPU) to 3–11×
+//! (GPU) slower; NumPy ~10–15% slower; overhead grows with input size
+//! because list inputs are unboxed element by element.
+//!
+//! Here: the same mechanism on the predictor boundary — `Direct` (zero-copy
+//! C path), `NumpyLike` (one buffer copy), `Boxed` (per-element unboxing).
+//! Expected shape: boxed ≫ numpy > c, gap growing with batch.
+
+use mlmodelscope::benchkit::{bench, bench_header, BenchConfig, Table};
+use mlmodelscope::predictor::InputMode;
+use mlmodelscope::preprocess::Tensor;
+
+fn main() {
+    bench_header("fig2_api_overhead", "Paper Fig. 2 (§4.4.3)");
+    let cfg = BenchConfig { max_time: std::time::Duration::from_secs(1), ..Default::default() };
+
+    // Marshalling cost alone (what the paper attributes to the binding):
+    // tensor sized like Inception-v3 input (299×299×3) per batch.
+    let mut t = Table::new(
+        "input marshalling cost by mode (Inception-v3-sized input)",
+        &["batch", "c (ms)", "numpy (ms)", "python (ms)", "numpy/c", "python/c"],
+    );
+    for batch in [1usize, 2, 4, 8, 16, 32] {
+        let input = Tensor::random(vec![batch, 299, 299, 3], batch as u64);
+        let mut ms = Vec::new();
+        for mode in [InputMode::Direct, InputMode::NumpyLike, InputMode::Boxed] {
+            let m = bench(mode.as_str(), &cfg, || {
+                std::hint::black_box(mode.marshal(&input));
+            });
+            ms.push(m.trimmed_mean_ms());
+        }
+        t.row(&[
+            batch.to_string(),
+            format!("{:.3}", ms[0]),
+            format!("{:.3}", ms[1]),
+            format!("{:.3}", ms[2]),
+            format!("{:.2}x", ms[1] / ms[0]),
+            format!("{:.2}x", ms[2] / ms[0]),
+        ]);
+    }
+    println!("{}", t.render());
+    t.save_csv("target/bench_results/fig2_marshalling.csv").ok();
+
+    // End-to-end: marshalling + real PJRT inference (when artifacts exist),
+    // mirroring the paper's full tf.Session.Run measurement.
+    if !mlmodelscope::runtime::available_families().is_empty() {
+        let rt = mlmodelscope::runtime::Runtime::cpu().expect("PJRT");
+        let mut t = Table::new(
+            "end-to-end predict by input mode (real tiny_resnet, PJRT CPU)",
+            &["batch", "c (ms)", "numpy (ms)", "python (ms)", "python/c"],
+        );
+        let quick = BenchConfig::quick();
+        for batch in [1usize, 4, 16] {
+            let path = mlmodelscope::runtime::artifact_path("tiny_resnet", batch);
+            if !path.exists() {
+                continue;
+            }
+            let input = Tensor::random(vec![batch, 32, 32, 3], 1);
+            let mut ms = Vec::new();
+            for mode in [InputMode::Direct, InputMode::NumpyLike, InputMode::Boxed] {
+                let m = bench(mode.as_str(), &quick, || {
+                    let marshalled = mode.marshal(&input);
+                    std::hint::black_box(rt.run(&path, &marshalled).expect("run"));
+                });
+                ms.push(m.trimmed_mean_ms());
+            }
+            t.row(&[
+                batch.to_string(),
+                format!("{:.3}", ms[0]),
+                format!("{:.3}", ms[1]),
+                format!("{:.3}", ms[2]),
+                format!("{:.2}x", ms[2] / ms[0]),
+            ]);
+        }
+        println!("{}", t.render());
+        t.save_csv("target/bench_results/fig2_e2e.csv").ok();
+    } else {
+        println!("(skipping real-PJRT section: run `make artifacts`)");
+    }
+    println!("paper shape check: python/c ratio must exceed numpy/c and grow with batch.");
+}

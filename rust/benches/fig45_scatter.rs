@@ -1,0 +1,89 @@
+//! Figs 4 & 5 — accuracy vs online latency (Fig 4) and accuracy vs max
+//! throughput (Fig 5) scatter plots over the 37-model zoo on AWS P3.
+//!
+//! Paper findings these must reproduce: *limited correlation* between
+//! accuracy and either metric (e.g. models 15 vs 22: similar latency,
+//! different accuracy), and graph size not predicting either.
+
+use mlmodelscope::benchkit::bench_header;
+use mlmodelscope::manifest::SystemRequirements;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::tracing::TraceLevel;
+
+fn main() {
+    bench_header("fig45_scatter", "Paper Figs 4 & 5 (§5.1)");
+    let server = Server::sim_platform(TraceLevel::None);
+    let models: Vec<String> = mlmodelscope::zoo::all().iter().map(|m| m.name.clone()).collect();
+
+    for model in &models {
+        let mut job = EvalJob::new(model, Scenario::Online { count: 16 });
+        job.requirements = SystemRequirements::on_system("aws_p3");
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+        server.evaluate(&job).expect("online");
+        for b in [1usize, 64, 256] {
+            let mut job = EvalJob::new(model, Scenario::Batched { batch_size: b, batches: 3 });
+            job.requirements = SystemRequirements::on_system("aws_p3");
+            job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+            server.evaluate(&job).expect("batched");
+        }
+    }
+
+    let summaries: Vec<_> = models
+        .iter()
+        .filter_map(|m| mlmodelscope::analysis::summarize_model(m, &server.evaldb))
+        .collect();
+    println!("{}", mlmodelscope::analysis::render_accuracy_figure(&summaries, false));
+    println!("{}", mlmodelscope::analysis::render_accuracy_figure(&summaries, true));
+
+    // CSV series (id, accuracy, latency, throughput, graph size) — the
+    // figure's underlying data.
+    let mut t = mlmodelscope::benchkit::Table::new(
+        "fig4/5 series",
+        &["id", "model", "accuracy", "online_ms", "max_tput", "graph_mb"],
+    );
+    for (i, s) in summaries.iter().enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            s.model.clone(),
+            format!("{:.2}", s.accuracy.unwrap_or(f64::NAN)),
+            format!("{:.2}", s.online_trimmed_mean_ms),
+            format!("{:.1}", s.max_throughput),
+            format!("{:.1}", s.graph_size_mb.unwrap_or(f64::NAN)),
+        ]);
+    }
+    t.save_csv("target/bench_results/fig45.csv").ok();
+
+    // "Limited correlation": Pearson r between accuracy and online latency
+    // must be weak-to-moderate, and graph size must not predict latency.
+    let xs: Vec<f64> = summaries.iter().map(|s| s.online_trimmed_mean_ms).collect();
+    let ys: Vec<f64> = summaries.iter().map(|s| s.accuracy.unwrap_or(0.0)).collect();
+    let r = pearson(&xs, &ys);
+    println!("accuracy↔latency Pearson r = {r:.3} (paper: limited correlation)");
+    assert!(r.abs() < 0.9, "correlation should be far from perfect: {r}");
+    // Counter-example pair, as in the paper: a small model slower than a
+    // larger one (model 14 DenseNet121 vs ResNet50 class).
+    let dense = summaries.iter().find(|s| s.model.contains("DenseNet")).unwrap();
+    let r50 = summaries.iter().find(|s| s.model == "ResNet_v1_50").unwrap();
+    println!(
+        "DenseNet121 ({} MB) online {:.2} ms vs ResNet_v1_50 ({} MB) {:.2} ms",
+        dense.graph_size_mb.unwrap(),
+        dense.online_trimmed_mean_ms,
+        r50.graph_size_mb.unwrap(),
+        r50.online_trimmed_mean_ms
+    );
+    assert!(
+        dense.online_trimmed_mean_ms > r50.online_trimmed_mean_ms,
+        "smaller-but-slower counter-example must hold (paper: model 14)"
+    );
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum::<f64>().sqrt();
+    let sy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum::<f64>().sqrt();
+    cov / (sx * sy)
+}

@@ -1,0 +1,68 @@
+//! Fig 6 — throughput-speedup-over-batch-1 heatmap: batch sizes × the 37
+//! models on AWS P3.
+//!
+//! Shape expectations: small models (MobileNets) scale far better than
+//! large ones; similar architectures can scale differently; the VGGs are
+//! the paper's exception — large models that still scale well (their FC
+//! weights amortize across the batch).
+
+use mlmodelscope::benchkit::bench_header;
+use mlmodelscope::manifest::SystemRequirements;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::tracing::TraceLevel;
+
+fn main() {
+    bench_header("fig6_heatmap", "Paper Fig 6 (§5.1) — throughput scalability");
+    let server = Server::sim_platform(TraceLevel::None);
+    let models: Vec<String> = mlmodelscope::zoo::all().iter().map(|m| m.name.clone()).collect();
+    let batch_sizes = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+
+    for model in &models {
+        for b in batch_sizes {
+            let mut job = EvalJob::new(model, Scenario::Batched { batch_size: b, batches: 3 });
+            job.requirements = SystemRequirements::on_system("aws_p3");
+            job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+            server.evaluate(&job).expect("batched");
+        }
+    }
+
+    println!("{}", mlmodelscope::analysis::render_fig6(&models, &batch_sizes, &server.evaldb));
+
+    let matrix =
+        mlmodelscope::analysis::throughput_speedup_matrix(&models, &batch_sizes, &server.evaldb);
+    // CSV dump.
+    let mut t = mlmodelscope::benchkit::Table::new(
+        "fig6 speedups",
+        &std::iter::once("batch")
+            .chain(models.iter().map(|s| s.as_str()))
+            .collect::<Vec<_>>(),
+    );
+    for (bi, b) in batch_sizes.iter().enumerate() {
+        let mut row = vec![b.to_string()];
+        row.extend(matrix[bi].iter().map(|v| format!("{v:.2}")));
+        t.row(&row);
+    }
+    t.save_csv("target/bench_results/fig6.csv").ok();
+
+    // Shape assertions.
+    let idx = |name: &str| models.iter().position(|m| m == name).unwrap();
+    let speedup_at = |name: &str, b: usize| {
+        matrix[batch_sizes.iter().position(|x| *x == b).unwrap()][idx(name)]
+    };
+    let mob = speedup_at("MobileNet_v1_0.25_128", 256);
+    let incep = speedup_at("Inception_ResNet_v2", 256);
+    println!("speedup@256 — MobileNet_v1_0.25_128: {mob:.1}x, Inception_ResNet_v2: {incep:.1}x");
+    assert!(mob > incep, "small models must scale better (paper Fig 6)");
+    let vgg = speedup_at("VGG16", 256);
+    println!("VGG16 speedup@256: {vgg:.1}x (paper: the large-model exception, scales well)");
+    assert!(vgg > 3.0, "VGG must scale well despite its size");
+    // Monotone non-decreasing speedup with batch for a well-behaved model.
+    for w in batch_sizes.windows(2) {
+        assert!(
+            speedup_at("ResNet_v1_50", w[1]) >= speedup_at("ResNet_v1_50", w[0]) * 0.95,
+            "resnet50 speedup should not regress with batch"
+        );
+    }
+    println!("shape checks passed.");
+}

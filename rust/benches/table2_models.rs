@@ -1,0 +1,52 @@
+//! Table 2 — the full 37-model characterization on AWS P3: published
+//! accuracy + graph size, measured online trimmed-mean / p90 latency,
+//! max throughput and the optimal batch size.
+//!
+//! Shape expectations vs the paper: MobileNets ~2–3 ms online and the
+//! highest throughputs at batch 64–256; ResNet50 mid-single-digit ms;
+//! VGG/Inception-ResNet the slowest online; optimal batch grows with
+//! model regularity.
+
+use mlmodelscope::benchkit::bench_header;
+use mlmodelscope::manifest::SystemRequirements;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::tracing::TraceLevel;
+
+fn main() {
+    bench_header("table2_models", "Paper Table 2 (§5.1), 37 models on aws_p3 GPU");
+    let server = Server::sim_platform(TraceLevel::None);
+    let models: Vec<String> = mlmodelscope::zoo::all().iter().map(|m| m.name.clone()).collect();
+
+    let batches = [1usize, 8, 32, 64, 128, 256];
+    for (i, model) in models.iter().enumerate() {
+        let mut job = EvalJob::new(model, Scenario::Online { count: 32 });
+        job.requirements = SystemRequirements::on_system("aws_p3");
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+        server.evaluate(&job).expect("online");
+        for b in batches {
+            let mut job = EvalJob::new(model, Scenario::Batched { batch_size: b, batches: 4 });
+            job.requirements = SystemRequirements::on_system("aws_p3");
+            job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+            server.evaluate(&job).expect("batched");
+        }
+        eprintln!("  [{:2}/37] {model}", i + 1);
+    }
+
+    let table = mlmodelscope::analysis::table2(&models, &server.evaldb);
+    println!("{}", table.render());
+    table.save_csv("target/bench_results/table2.csv").ok();
+
+    // Paper-shape assertions (who wins, roughly by how much).
+    let s = |name: &str| mlmodelscope::analysis::summarize_model(name, &server.evaldb).unwrap();
+    let r50 = s("MLPerf_ResNet50_v1.5");
+    let mob = s("MLPerf_MobileNet_v1");
+    let vgg = s("VGG16");
+    let m25 = s("MobileNet_v1_0.25_128");
+    assert!(mob.online_trimmed_mean_ms < r50.online_trimmed_mean_ms, "MobileNet beats ResNet50 online");
+    assert!(r50.online_trimmed_mean_ms < vgg.online_trimmed_mean_ms, "ResNet50 beats VGG16 online");
+    assert!(mob.max_throughput > r50.max_throughput, "MobileNet out-throughputs ResNet50");
+    assert!(m25.max_throughput > mob.max_throughput, "0.25x MobileNet highest throughput");
+    assert!(vgg.optimal_batch >= 64, "VGG prefers large batches (paper: 256)");
+    println!("shape checks passed: mobilenet < resnet50 < vgg online; throughput ordering holds.");
+}

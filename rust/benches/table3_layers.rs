@@ -1,0 +1,62 @@
+//! Table 3 — ResNet-50 layer↔GPU-kernel correlation at batch 256 on AWS P3
+//! (V100), from the SYSTEM-level trace.
+//!
+//! Shape expectations (paper §5.3): the top layers are late-stage Conv2D
+//! layers whose dominant kernel is `volta_cgemm_32x32_tn` (FFT conv path,
+//! 7 kernels) or `volta_scudnn_128x*` (implicit GEMM); the first conv
+//! appears with a large allocation; most layers take < 1 ms (paper: 143 of
+//! 234).
+
+use mlmodelscope::benchkit::bench_header;
+use mlmodelscope::manifest::SystemRequirements;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::tracing::TraceLevel;
+
+fn main() {
+    bench_header("table3_layers", "Paper Table 3 (§5.3) — ResNet_50 @256 layer/kernel");
+    let server = Server::sim_platform(TraceLevel::Full);
+    let mut job = EvalJob::new("ResNet_v1_50", Scenario::Batched { batch_size: 256, batches: 1 });
+    job.trace_level = TraceLevel::Full;
+    job.requirements = SystemRequirements::on_system("aws_p3");
+    job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+    let records = server.evaluate(&job).expect("eval");
+    let trace_id = records[0].trace_id.expect("trace id");
+    let tl = server.traces.timeline(trace_id);
+
+    let table = mlmodelscope::analysis::layer_kernel_table(&tl, 5);
+    println!("{}", table.render());
+    table.save_csv("target/bench_results/table3.csv").ok();
+
+    let (total, fast) = mlmodelscope::analysis::layer_population(&tl);
+    println!("{total} layers traced, {fast} take < 1 ms (paper: 234 layers, 143 < 1 ms)");
+
+    // Shape assertions.
+    let corr = tl.layer_kernel_correlation();
+    let top5: Vec<_> = corr.iter().take(5).collect();
+    assert!(top5.iter().all(|(l, _)| l.tag("kind") == Some("Conv2D") || l.tag("kind") == Some("Dense")),
+        "top layers are Conv2D/Dense");
+    let conv_tops = top5.iter().filter(|(l, _)| l.tag("kind") == Some("Conv2D")).count();
+    assert!(conv_tops >= 4, "≥4 of top-5 are convs (paper: 5/5)");
+    // At least one top conv goes down the FFT path with the cgemm kernel
+    // and 7 launched kernels, like the paper's layer 208.
+    let fft_layer = corr
+        .iter()
+        .find(|(_, ks)| ks.iter().any(|k| k.name.contains("cgemm")));
+    let (l, ks) = fft_layer.expect("an FFT-path conv must exist at batch 256");
+    println!(
+        "FFT-path layer: {} with {} kernels, dominant {}",
+        l.name,
+        ks.len(),
+        ks.iter().max_by_key(|k| k.duration_ns()).unwrap().name
+    );
+    assert_eq!(ks.len(), 7, "FFT conv launches 7 kernels (paper K1–K7)");
+    let dominant = ks.iter().max_by_key(|k| k.duration_ns()).unwrap();
+    assert!(dominant.name.contains("volta_cgemm_32x32_tn"));
+    // Dominant-kernel share ≈ paper's 6.03/7.59 ≈ 0.79.
+    let share = dominant.duration_ns() as f64 / l.duration_ns() as f64;
+    assert!((0.6..0.95).contains(&share), "cgemm share {share:.2}");
+    // Majority of layers are sub-millisecond.
+    assert!(fast * 2 > total, "most layers < 1 ms");
+    println!("shape checks passed.");
+}

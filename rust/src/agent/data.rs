@@ -1,0 +1,242 @@
+//! The data manager (§4.4.1): downloads and caches evaluation assets
+//! (models, datasets) on demand, validating checksums.
+//!
+//! Offline substitution: "remote" assets materialize from builtin
+//! generators (`builtin://` URLs — zoo datasets are synthesized
+//! deterministically), while `file://` and bare paths read the local
+//! filesystem, exactly the three asset locations the paper lists (artifact
+//! repository / web / local file system). Checksums use SHA-256; a cached
+//! asset is re-validated before reuse, as in the paper.
+
+use sha2::{Digest, Sha256};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum DataError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("unsupported asset url {0:?}")]
+    BadUrl(String),
+    #[error("checksum mismatch for {path}: expected {expected}, got {got}")]
+    Checksum { path: String, expected: String, got: String },
+}
+
+/// Hex SHA-256 of a byte slice.
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    let digest = h.finalize();
+    digest.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Asset cache rooted at a directory.
+pub struct DataManager {
+    cache_dir: PathBuf,
+}
+
+impl DataManager {
+    pub fn new(cache_dir: impl Into<PathBuf>) -> DataManager {
+        DataManager { cache_dir: cache_dir.into() }
+    }
+
+    /// Default cache under the target dir (kept out of the source tree).
+    pub fn default_cache() -> DataManager {
+        DataManager::new(
+            std::env::var("MLMS_CACHE")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| std::env::temp_dir().join("mlms_cache")),
+        )
+    }
+
+    pub fn cache_dir(&self) -> &Path {
+        &self.cache_dir
+    }
+
+    /// Fetch an asset by URL + relative path, returning the local path.
+    /// Downloads (materializes) on miss; validates `checksum` when given.
+    pub fn fetch(
+        &self,
+        base_url: &str,
+        rel_path: &str,
+        checksum: Option<&str>,
+    ) -> Result<PathBuf, DataError> {
+        let local = self.cache_dir.join(sanitize(base_url)).join(rel_path);
+        if !local.exists() {
+            let bytes = self.materialize(base_url, rel_path)?;
+            if let Some(dir) = local.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(&local, bytes)?;
+        }
+        if let Some(expected) = checksum {
+            // Zoo checksums (`zoo-<id>`) are identity markers, not hashes;
+            // only hex-looking checksums are verified byte-wise.
+            if expected.len() == 64 && expected.chars().all(|c| c.is_ascii_hexdigit()) {
+                let got = sha256_hex(&std::fs::read(&local)?);
+                if got != expected {
+                    return Err(DataError::Checksum {
+                        path: local.display().to_string(),
+                        expected: expected.to_string(),
+                        got,
+                    });
+                }
+            }
+        }
+        Ok(local)
+    }
+
+    fn materialize(&self, base_url: &str, rel_path: &str) -> Result<Vec<u8>, DataError> {
+        if let Some(rest) = base_url.strip_prefix("builtin://") {
+            // Builtin generators: zoo model stubs and synthetic datasets.
+            return Ok(builtin_asset(rest, rel_path));
+        }
+        if let Some(path) = base_url.strip_prefix("file://") {
+            return Ok(std::fs::read(Path::new(path).join(rel_path))?);
+        }
+        if base_url.is_empty() || base_url.starts_with('/') || base_url.starts_with("./") {
+            return Ok(std::fs::read(Path::new(base_url).join(rel_path))?);
+        }
+        // http(s) URLs are unreachable in the offline environment.
+        Err(DataError::BadUrl(base_url.to_string()))
+    }
+
+    /// Synthesize (and cache) a dataset of `n` encoded images at `res`².
+    /// Stand-in for TFRecord/RecordIO dataset files: one contiguous binary
+    /// file, read back via offsets (same sequential-read profile).
+    pub fn synthetic_dataset(&self, name: &str, n: usize, res: usize) -> Result<Vec<Vec<u8>>, DataError> {
+        let path = self.cache_dir.join("datasets").join(format!("{name}_{n}x{res}.bin"));
+        if !path.exists() {
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let mut blob = Vec::new();
+            for i in 0..n {
+                let img = crate::preprocess::RawImage::synthetic(res, res, i as u64 + 1);
+                let enc = img.encode();
+                blob.extend_from_slice(&(enc.len() as u32).to_be_bytes());
+                blob.extend_from_slice(&enc);
+            }
+            std::fs::write(&path, blob)?;
+        }
+        // Read back as records.
+        let blob = std::fs::read(&path)?;
+        let mut out = Vec::with_capacity(n);
+        let mut off = 0usize;
+        while off + 4 <= blob.len() {
+            let len = u32::from_be_bytes(blob[off..off + 4].try_into().unwrap()) as usize;
+            off += 4;
+            out.push(blob[off..off + len].to_vec());
+            off += len;
+        }
+        Ok(out)
+    }
+}
+
+fn sanitize(url: &str) -> String {
+    url.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect()
+}
+
+/// Builtin asset generator: deterministic bytes per (namespace, path).
+fn builtin_asset(namespace: &str, rel_path: &str) -> Vec<u8> {
+    let tag = format!("builtin asset {namespace}/{rel_path}");
+    // A model "graph" stub: header + deterministic filler proportional to a
+    // plausible graph size (capped so tests stay fast).
+    let mut out = tag.clone().into_bytes();
+    let mut rng = crate::util::rng::Xorshift::new(
+        tag.bytes().fold(7u64, |acc, b| acc.wrapping_mul(31).wrapping_add(b as u64)),
+    );
+    for _ in 0..4096 {
+        out.push(rng.below(256) as u8);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dm() -> DataManager {
+        DataManager::new(
+            std::env::temp_dir().join(format!("mlms_dm_{}_{}", std::process::id(), rand_tag())),
+        )
+    }
+
+    fn rand_tag() -> u64 {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now().duration_since(UNIX_EPOCH).unwrap().subsec_nanos() as u64
+    }
+
+    #[test]
+    fn builtin_fetch_and_cache() {
+        let dm = dm();
+        let p1 = dm.fetch("builtin://zoo/", "ResNet_v1_50.pb", None).unwrap();
+        assert!(p1.exists());
+        let bytes1 = std::fs::read(&p1).unwrap();
+        // Second fetch hits the cache (same contents).
+        let p2 = dm.fetch("builtin://zoo/", "ResNet_v1_50.pb", None).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(bytes1, std::fs::read(&p2).unwrap());
+    }
+
+    #[test]
+    fn checksum_validation() {
+        let dm = dm();
+        let p = dm.fetch("builtin://zoo/", "m.pb", None).unwrap();
+        let good = sha256_hex(&std::fs::read(&p).unwrap());
+        // Correct checksum passes.
+        dm.fetch("builtin://zoo/", "m.pb", Some(&good)).unwrap();
+        // Wrong (hex) checksum fails.
+        let bad = "0".repeat(64);
+        assert!(matches!(
+            dm.fetch("builtin://zoo/", "m.pb", Some(&bad)),
+            Err(DataError::Checksum { .. })
+        ));
+        // Non-hex marker checksums (zoo-7) are identity tags, not verified.
+        dm.fetch("builtin://zoo/", "m.pb", Some("zoo-7")).unwrap();
+    }
+
+    #[test]
+    fn file_url_fetch() {
+        let dir = std::env::temp_dir().join(format!("mlms_src_{}", rand_tag()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("weights.bin"), b"weights!").unwrap();
+        let dm = dm();
+        let p = dm
+            .fetch(&format!("file://{}", dir.display()), "weights.bin", None)
+            .unwrap();
+        assert_eq!(std::fs::read(p).unwrap(), b"weights!");
+    }
+
+    #[test]
+    fn http_url_rejected_offline() {
+        let dm = dm();
+        assert!(matches!(
+            dm.fetch("https://zenodo.org/record/1/files/", "m.pb", None),
+            Err(DataError::BadUrl(_))
+        ));
+    }
+
+    #[test]
+    fn synthetic_dataset_roundtrip() {
+        let dm = dm();
+        let records = dm.synthetic_dataset("imagenet_val", 10, 64).unwrap();
+        assert_eq!(records.len(), 10);
+        for rec in &records {
+            let img = crate::preprocess::RawImage::decode(rec).unwrap();
+            assert_eq!((img.height, img.width), (64, 64));
+        }
+        // Deterministic: same dataset on re-read.
+        let again = dm.synthetic_dataset("imagenet_val", 10, 64).unwrap();
+        assert_eq!(records[3], again[3]);
+    }
+
+    #[test]
+    fn sha256_known_vector() {
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+}

@@ -1,0 +1,682 @@
+//! The MLModelScope agent (§4.4): a model-serving process running on a
+//! system of interest.
+//!
+//! An agent self-registers its HW/SW stack + built-in models into the
+//! registry (initialization workflow ①), then serves evaluation requests:
+//! it ⑤ downloads the evaluation assets via the data manager, runs the
+//! model-evaluation pipeline (pre-process → predict → post-process) under
+//! the requested benchmarking scenario, ⑥ publishes trace events, and ⑦
+//! stores the benchmarking result in the evaluation database.
+//!
+//! Aside from the predictor, all agent code is framework-agnostic — the
+//! paper's "all code within an agent is common across frameworks".
+
+pub mod data;
+
+pub use data::{sha256_hex, DataManager};
+
+use crate::evaldb::{EvalDb, EvalKey, EvalRecord};
+use crate::manifest::ModelManifest;
+use crate::predictor::{InputMode, PredictOptions, Predictor};
+use crate::preprocess::Tensor;
+use crate::registry::{AgentInfo, Registry};
+use crate::scenario::{Scenario, Workload};
+use crate::tracing::{TraceLevel, Tracer};
+use crate::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Agent configuration.
+pub struct AgentConfig {
+    /// System profile name advertised to the registry.
+    pub system: String,
+    pub architecture: String,
+    pub devices: Vec<String>,
+    pub interconnect: String,
+    pub host_memory_gb: f64,
+    pub device_memory_gb: f64,
+    /// Models this agent serves (empty = any the predictor can load).
+    pub models: Vec<String>,
+    /// Registration TTL; heartbeats must arrive within it.
+    pub ttl: Duration,
+    /// Inputs are synthesized at this resolution when the manifest's
+    /// pre-processing pipeline doesn't dictate one.
+    pub input_resolution: usize,
+    /// Wall-clock measurement (real predictors) vs simulated-clock
+    /// measurement (simulator predictors, §4.4.4).
+    pub simulated_time: bool,
+}
+
+impl Default for AgentConfig {
+    fn default() -> Self {
+        AgentConfig {
+            system: "local".into(),
+            architecture: std::env::consts::ARCH.to_string(),
+            devices: vec!["cpu".into()],
+            interconnect: "none".into(),
+            host_memory_gb: 4.0,
+            device_memory_gb: 0.0,
+            models: Vec::new(),
+            ttl: Duration::from_secs(30),
+            input_resolution: 32,
+            simulated_time: false,
+        }
+    }
+}
+
+/// One evaluation request, as dispatched by the server (④).
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    pub manifest: ModelManifest,
+    pub scenario: Scenario,
+    pub trace_level: TraceLevel,
+    pub input_mode: InputMode,
+    /// Workload seed (reproducible evaluation, F1).
+    pub seed: u64,
+}
+
+/// The result returned to the server (⑧).
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub record: EvalRecord,
+    pub trace_id: u64,
+}
+
+/// The agent.
+pub struct Agent {
+    pub config: AgentConfig,
+    predictor: Arc<dyn Predictor>,
+    /// Concrete handle when the predictor is the simulator (needed to attach
+    /// per-evaluation trace context; `dyn Predictor` has no downcast).
+    sim: Option<Arc<crate::predictor::SimPredictor>>,
+    data: DataManager,
+    tracer: Arc<Tracer>,
+    evaldb: Arc<EvalDb>,
+    id: std::sync::Mutex<String>,
+}
+
+impl Agent {
+    pub fn new(
+        config: AgentConfig,
+        predictor: Arc<dyn Predictor>,
+        tracer: Arc<Tracer>,
+        evaldb: Arc<EvalDb>,
+    ) -> Arc<Agent> {
+        Arc::new(Agent {
+            config,
+            predictor,
+            sim: None,
+            data: DataManager::default_cache(),
+            tracer,
+            evaldb,
+            id: std::sync::Mutex::new(String::new()),
+        })
+    }
+
+    /// As [`Agent::new`], keeping the concrete simulator handle for trace
+    /// context attachment.
+    pub fn new_sim(
+        config: AgentConfig,
+        sim: Arc<crate::predictor::SimPredictor>,
+        tracer: Arc<Tracer>,
+        evaldb: Arc<EvalDb>,
+    ) -> Arc<Agent> {
+        Arc::new(Agent {
+            config,
+            predictor: sim.clone(),
+            sim: Some(sim),
+            data: DataManager::default_cache(),
+            tracer,
+            evaldb,
+            id: std::sync::Mutex::new(String::new()),
+        })
+    }
+
+    pub fn predictor(&self) -> &Arc<dyn Predictor> {
+        &self.predictor
+    }
+
+    pub fn id(&self) -> String {
+        self.id.lock().unwrap().clone()
+    }
+
+    /// Initialization workflow ①: publish HW/SW stack + models, with the
+    /// config's TTL (remote agents must heartbeat within it).
+    pub fn register(&self, registry: &Registry, endpoint: &str) -> String {
+        self.register_with_ttl(registry, endpoint, Some(self.config.ttl))
+    }
+
+    /// As [`Agent::register`] with an explicit TTL. In-process agents pass
+    /// `None`: they live exactly as long as the server and must not expire
+    /// mid-evaluation.
+    pub fn register_with_ttl(
+        &self,
+        registry: &Registry,
+        endpoint: &str,
+        ttl: Option<Duration>,
+    ) -> String {
+        let (fw, fw_ver) = self.predictor.framework();
+        let info = AgentInfo {
+            id: String::new(),
+            endpoint: endpoint.to_string(),
+            framework: fw,
+            framework_version: fw_ver.parse().unwrap_or(crate::util::semver::Version::new(0, 0, 0)),
+            system: self.config.system.clone(),
+            architecture: self.config.architecture.clone(),
+            devices: self.config.devices.clone(),
+            interconnect: self.config.interconnect.clone(),
+            host_memory_gb: self.config.host_memory_gb,
+            device_memory_gb: self.config.device_memory_gb,
+            models: self.config.models.clone(),
+        };
+        let id = registry.register_agent(info, ttl);
+        *self.id.lock().unwrap() = id.clone();
+        id
+    }
+
+    /// Run one evaluation request end to end; stores the record (⑦) and
+    /// returns it (⑧).
+    pub fn evaluate(&self, req: &EvalRequest) -> Result<EvalResult, String> {
+        let trace_id = self.tracer.new_trace();
+        let root = self.tracer.start(trace_id, None, TraceLevel::Model, "evaluate");
+        let root_id = root.as_ref().map(|s| s.id());
+
+        // ⑤ Fetch model assets (graph + optional weights), checksum-verified.
+        let assets = &req.manifest.assets;
+        self.data
+            .fetch(&assets.base_url, &assets.graph_path, assets.checksum.as_deref())
+            .map_err(|e| format!("asset fetch: {e}"))?;
+        if let Some(w) = &assets.weights_path {
+            self.data
+                .fetch(&assets.base_url, w, None)
+                .map_err(|e| format!("asset fetch: {e}"))?;
+        }
+
+        // Load the model through the predictor interface.
+        let batch = req.scenario.batch_size();
+        let handle = self
+            .predictor
+            .model_load(&self.model_key(&req.manifest), batch)
+            .map_err(|e| e.to_string())?;
+
+        // Attach trace context for simulator predictors.
+        if let Some(sim) = self.as_sim() {
+            sim.attach_tracer(self.tracer.clone(), trace_id, root_id);
+        }
+
+        // Build the input: decode+preprocess once per distinct item, then
+        // batch. (Dataset read path exercises the data manager.)
+        let res = self.input_resolution(&req.manifest);
+        let records = self
+            .data
+            .synthetic_dataset(&req.manifest.name, 4.min(batch.max(1)), res)
+            .map_err(|e| format!("dataset: {e}"))?;
+        let pre_span = self.tracer.start(trace_id, root_id, TraceLevel::Model, "preprocess");
+        // Real (non-simulated) agents serve artifacts compiled for a fixed
+        // input size; retarget the manifest's resize step to it so the
+        // preprocessing path is still exercised end to end.
+        let steps: Vec<crate::manifest::PreprocessStep> = req.manifest.inputs[0]
+            .steps
+            .iter()
+            .cloned()
+            .map(|s| match s {
+                crate::manifest::PreprocessStep::Resize { method, keep_aspect_ratio, .. }
+                    if !self.config.simulated_time =>
+                {
+                    crate::manifest::PreprocessStep::Resize {
+                        dimensions: [3, res, res],
+                        method,
+                        keep_aspect_ratio,
+                    }
+                }
+                other => other,
+            })
+            .collect();
+        let one = if steps.is_empty() {
+            Tensor::random(vec![1, res, res, 3], req.seed)
+        } else {
+            crate::preprocess::run_pipeline(&steps, &records[0])
+                .map_err(|e| format!("preprocess: {e}"))?
+        };
+        drop(pre_span);
+        let refs: Vec<&Tensor> = std::iter::repeat(&one).take(batch.max(1)).collect();
+        let batched = Tensor::stack(&refs).ok_or("batching failed")?;
+
+        // Generate the workload and run it.
+        let workload = Workload::generate(&req.scenario, req.seed);
+        let opts = PredictOptions { batch_size: batch, input_mode: req.input_mode };
+        let clock = self.tracer.clock().clone();
+        let mut latencies = Vec::with_capacity(workload.requests.len());
+        let run_start = clock.now_ns();
+        for r in &workload.requests {
+            let span = self.tracer.start(trace_id, root_id, TraceLevel::Model, "predict");
+            let t0 = clock.now_ns();
+            let out = self
+                .predictor
+                .predict(handle, &batched, &opts)
+                .map_err(|e| e.to_string())?;
+            // Post-process (top-K) — part of the measured request.
+            let _preds = crate::postprocess::run_pipeline(&req.manifest.outputs[0].steps, &out);
+            let dt = (clock.now_ns() - t0) as f64 / 1e9;
+            if let Some(mut s) = span {
+                s.tag("request", r.id.to_string());
+                s.tag("batch", r.batch_size.to_string());
+                s.finish();
+            }
+            latencies.push(dt);
+        }
+        let total_secs = ((clock.now_ns() - run_start) as f64 / 1e9).max(1e-12);
+        let items = (workload.requests.len() * batch.max(1)) as f64;
+        let throughput = items / total_secs;
+        self.predictor.model_unload(handle).map_err(|e| e.to_string())?;
+        drop(root);
+
+        // ⑦ Store the result.
+        let (fw, fw_ver) = self.predictor.framework();
+        let device = self
+            .config
+            .devices
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "cpu".to_string());
+        let key = EvalKey {
+            model: req.manifest.name.clone(),
+            model_version: req.manifest.version.to_string(),
+            framework: fw,
+            framework_version: fw_ver,
+            system: self.config.system.clone(),
+            device,
+            scenario: req.scenario.name().to_string(),
+            batch_size: batch,
+        };
+        let mut record = EvalRecord::new(key, latencies, throughput);
+        record.trace_id = Some(trace_id);
+        record.meta = Json::obj(vec![
+            (
+                "accuracy",
+                req.manifest.accuracy().map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "graph_size_mb",
+                req.manifest.graph_size_mb().map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("agent", Json::str(self.id())),
+            ("input_mode", Json::str(req.input_mode.as_str())),
+            ("trace_level", Json::str(req.trace_level.as_str())),
+        ]);
+        let mut record_out = record.clone();
+        record_out.seq = self.evaldb.put(record);
+        Ok(EvalResult { record: record_out, trace_id })
+    }
+
+    /// Map a manifest onto the predictor's model namespace: real XLA agents
+    /// serve artifact families; simulator agents serve zoo names directly.
+    fn model_key(&self, manifest: &ModelManifest) -> String {
+        if self.config.simulated_time {
+            manifest.name.clone()
+        } else {
+            crate::zoo::by_name(&manifest.name)
+                .and_then(|z| z.hlo_family().map(str::to_string))
+                .unwrap_or_else(|| manifest.name.clone())
+        }
+    }
+
+    fn input_resolution(&self, manifest: &ModelManifest) -> usize {
+        for s in &manifest.inputs[0].steps {
+            if let crate::manifest::PreprocessStep::Resize { dimensions, .. } = s {
+                // Real XLA artifacts are compiled for the agent's fixed
+                // input size; simulators honour the manifest.
+                if self.config.simulated_time {
+                    return dimensions[1];
+                }
+            }
+        }
+        self.config.input_resolution
+    }
+
+    fn as_sim(&self) -> Option<&crate::predictor::SimPredictor> {
+        self.sim.as_deref()
+    }
+}
+
+/// Construct a simulator-backed agent for a Table-1 system. Returns the
+/// agent plus the concrete simulator handle (for tracer attachment).
+pub fn sim_agent(
+    system: &str,
+    device: crate::sysmodel::Device,
+    trace_level: TraceLevel,
+    evaldb: Arc<EvalDb>,
+    sink: Arc<dyn crate::tracing::SpanSink>,
+) -> (Arc<Agent>, Arc<crate::predictor::SimPredictor>, Arc<Tracer>) {
+    let profile = crate::sysmodel::systems()[system].clone();
+    let sim = Arc::new(crate::predictor::SimPredictor::new(crate::sysmodel::Simulator::new(
+        profile.clone(),
+        device,
+    )));
+    let tracer = Tracer::new(trace_level, sim.clock(), sink);
+    let config = AgentConfig {
+        system: system.to_string(),
+        architecture: profile.architecture.clone(),
+        devices: vec![match device {
+            crate::sysmodel::Device::Cpu => "cpu".to_string(),
+            crate::sysmodel::Device::Gpu => "gpu".to_string(),
+        }],
+        interconnect: profile.interconnect.clone(),
+        host_memory_gb: profile.host_mem_gb,
+        device_memory_gb: profile.gpu_mem_gb,
+        models: crate::zoo::all().iter().map(|m| m.name.clone()).collect(),
+        ttl: Duration::from_secs(30),
+        input_resolution: 224,
+        simulated_time: true,
+    };
+    let agent = Agent::new_sim(config, sim.clone(), tracer.clone(), evaldb);
+    (agent, sim, tracer)
+}
+
+/// Construct a real XLA/PJRT agent serving the AOT artifact families.
+pub fn xla_agent(
+    runtime: Arc<crate::runtime::Runtime>,
+    trace_level: TraceLevel,
+    evaldb: Arc<EvalDb>,
+    sink: Arc<dyn crate::tracing::SpanSink>,
+) -> (Arc<Agent>, Arc<Tracer>) {
+    let tracer = Tracer::new(trace_level, Arc::new(crate::tracing::WallClock::new()), sink);
+    let families = crate::runtime::available_families();
+    let config = AgentConfig {
+        system: "local".into(),
+        devices: vec!["cpu".into()],
+        models: families,
+        input_resolution: 32,
+        simulated_time: false,
+        ..AgentConfig::default()
+    };
+    let predictor = Arc::new(crate::predictor::XlaPredictor::new(runtime));
+    let agent = Agent::new(config, predictor, tracer.clone(), evaldb);
+    (agent, tracer)
+}
+
+/// Wire service wrapper with the binary-tensor fast path (§Perf).
+struct AgentService {
+    agent: Arc<Agent>,
+}
+
+impl crate::wire::Service for AgentService {
+    fn call(&self, method: &str, params: &Json) -> Result<Json, String> {
+        agent_call(&self.agent, method, params)
+    }
+
+    /// `PredictBin`: input tensor as a raw binary attachment instead of
+    /// JSON — the tensor-payload bottleneck fix measured in
+    /// `ablation_platform` / EXPERIMENTS.md §Perf.
+    fn call_binary(
+        &self,
+        method: &str,
+        params: &Json,
+        blob: Option<&[u8]>,
+    ) -> Result<(Json, Option<Vec<u8>>), String> {
+        if method == "PredictBin" {
+            let input = blob
+                .and_then(Tensor::from_bytes)
+                .ok_or("PredictBin requires a binary tensor attachment")?;
+            let h = crate::predictor::ModelHandle(params.f64_or("handle", 0.0) as u64);
+            let opts = PredictOptions {
+                batch_size: input.batch(),
+                input_mode: InputMode::parse(params.str_or("input_mode", "c")),
+            };
+            let out = self
+                .agent
+                .predictor
+                .predict(h, &input, &opts)
+                .map_err(|e| e.to_string())?;
+            return Ok((Json::Null, Some(out.to_bytes())));
+        }
+        self.call(method, params).map(|j| (j, None))
+    }
+}
+
+/// Expose an agent over the wire protocol — the paper's Listing-4 service:
+/// `Open`, `Predict` (runs a full scenario), `Close`, plus `Evaluate` which
+/// bundles the three for the server's dispatch path, and `PredictBin`
+/// (binary tensor attachment fast path).
+pub fn agent_service(agent: Arc<Agent>) -> Arc<dyn crate::wire::Service> {
+    Arc::new(AgentService { agent })
+}
+
+fn agent_call(agent: &Arc<Agent>, method: &str, params: &Json) -> Result<Json, String> {
+    {
+        match method {
+            "Evaluate" => {
+                let manifest = ModelManifest::from_json(
+                    params.get("manifest").ok_or("missing manifest")?,
+                )
+                .map_err(|e| e.to_string())?;
+                let scenario = Scenario::from_json(
+                    params.get("scenario").ok_or("missing scenario")?,
+                )
+                .ok_or("bad scenario")?;
+                let req = EvalRequest {
+                    manifest,
+                    scenario,
+                    trace_level: TraceLevel::parse(params.str_or("trace_level", "model")),
+                    input_mode: InputMode::parse(params.str_or("input_mode", "c")),
+                    seed: params.f64_or("seed", 42.0) as u64,
+                };
+                let result = agent.evaluate(&req)?;
+                Ok(Json::obj(vec![
+                    ("record", result.record.to_json()),
+                    ("trace_id", Json::num(result.trace_id as f64)),
+                ]))
+            }
+            "Open" => {
+                let model = params.str_or("model_name", "");
+                let batch = params.f64_or("batch_size", 1.0) as usize;
+                let h = agent
+                    .predictor
+                    .model_load(model, batch)
+                    .map_err(|e| e.to_string())?;
+                Ok(Json::obj(vec![("handle", Json::num(h.0 as f64))]))
+            }
+            "Predict" => {
+                let h = crate::predictor::ModelHandle(params.f64_or("handle", 0.0) as u64);
+                let input = Tensor::from_json(params.get("input").ok_or("missing input")?)
+                    .ok_or("bad input tensor")?;
+                let opts = PredictOptions {
+                    batch_size: input.batch(),
+                    input_mode: InputMode::parse(params.str_or("input_mode", "c")),
+                };
+                let out = agent.predictor.predict(h, &input, &opts).map_err(|e| e.to_string())?;
+                Ok(out.to_json())
+            }
+            "Close" => {
+                let h = crate::predictor::ModelHandle(params.f64_or("handle", 0.0) as u64);
+                agent.predictor.model_unload(h).map_err(|e| e.to_string())?;
+                Ok(Json::Null)
+            }
+            other => Err(format!("unknown agent method {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracing::MemorySink;
+
+    fn sim_setup(system: &str) -> (Arc<Agent>, Arc<crate::predictor::SimPredictor>, Arc<Tracer>, Arc<EvalDb>, Arc<MemorySink>) {
+        let db = Arc::new(EvalDb::in_memory());
+        let sink = MemorySink::new();
+        let (agent, sim, tracer) =
+            sim_agent(system, crate::sysmodel::Device::Gpu, TraceLevel::Full, db.clone(), sink.clone());
+        (agent, sim, tracer, db, sink)
+    }
+
+    #[test]
+    fn sim_agent_online_evaluation() {
+        let (agent, _sim, _tracer, db, _sink) = sim_setup("aws_p3");
+        let manifest = crate::zoo::by_name("ResNet_v1_50").unwrap().manifest();
+        let req = EvalRequest {
+            manifest,
+            scenario: Scenario::Online { count: 12 },
+            trace_level: TraceLevel::Model,
+            input_mode: InputMode::Direct,
+            seed: 1,
+        };
+        let result = agent.evaluate(&req).unwrap();
+        assert_eq!(result.record.latencies.len(), 12);
+        assert!(result.record.throughput > 0.0);
+        assert_eq!(db.len(), 1);
+        assert_eq!(result.record.key.system, "aws_p3");
+        assert_eq!(result.record.meta.get("accuracy").unwrap().as_f64(), Some(75.2));
+    }
+
+    #[test]
+    fn sim_agent_batched_evaluation_scales() {
+        let (agent, _sim, _t, db, _s) = sim_setup("aws_p3");
+        let manifest = crate::zoo::by_name("MobileNet_v1_1.0_224").unwrap().manifest();
+        for batch in [1usize, 32] {
+            let req = EvalRequest {
+                manifest: manifest.clone(),
+                scenario: Scenario::Batched { batch_size: batch, batches: 4 },
+                trace_level: TraceLevel::None,
+                input_mode: InputMode::Direct,
+                seed: 2,
+            };
+            agent.evaluate(&req).unwrap();
+        }
+        let recs = db.query(&crate::evaldb::EvalQuery::model("MobileNet_v1_1.0_224"));
+        assert_eq!(recs.len(), 2);
+        let tp1 = recs.iter().find(|r| r.key.batch_size == 1).unwrap().throughput;
+        let tp32 = recs.iter().find(|r| r.key.batch_size == 32).unwrap().throughput;
+        assert!(tp32 > tp1 * 2.0, "batching must raise throughput: {tp1} → {tp32}");
+    }
+
+    #[test]
+    fn registration_publishes_stack() {
+        let (agent, _sim, _t, _db, _s) = sim_setup("ibm_p8");
+        let registry = Registry::new();
+        let id = agent.register(&registry, "127.0.0.1:9999");
+        assert!(!id.is_empty());
+        let agents = registry.agents();
+        assert_eq!(agents.len(), 1);
+        assert_eq!(agents[0].system, "ibm_p8");
+        assert_eq!(agents[0].architecture, "ppc64le");
+        assert_eq!(agents[0].interconnect, "nvlink");
+        assert_eq!(agents[0].models.len(), 37);
+    }
+
+    #[test]
+    fn agent_service_evaluate_over_wire() {
+        let (agent, _sim, _t, db, _s) = sim_setup("aws_g3");
+        let server =
+            crate::wire::RpcServer::serve("127.0.0.1:0", agent_service(agent)).unwrap();
+        let client = crate::wire::RpcClient::connect(server.addr()).unwrap();
+        let manifest = crate::zoo::by_name("BVLC_AlexNet").unwrap().manifest();
+        let resp = client
+            .call(
+                "Evaluate",
+                Json::obj(vec![
+                    ("manifest", manifest.to_json()),
+                    ("scenario", Scenario::Online { count: 5 }.to_json()),
+                    ("trace_level", Json::str("framework")),
+                    ("seed", Json::num(7.0)),
+                ]),
+            )
+            .unwrap();
+        let record = crate::evaldb::EvalRecord::from_json(resp.get("record").unwrap()).unwrap();
+        assert_eq!(record.latencies.len(), 5);
+        assert_eq!(db.len(), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn open_predict_close_over_wire() {
+        let (agent, _sim, _t, _db, _s) = sim_setup("aws_p3");
+        let server =
+            crate::wire::RpcServer::serve("127.0.0.1:0", agent_service(agent)).unwrap();
+        let client = crate::wire::RpcClient::connect(server.addr()).unwrap();
+        let h = client
+            .call(
+                "Open",
+                Json::obj(vec![
+                    ("model_name", Json::str("Inception_v3")),
+                    ("batch_size", Json::num(2.0)),
+                ]),
+            )
+            .unwrap()
+            .f64_or("handle", 0.0);
+        assert!(h > 0.0);
+        let input = Tensor::zeros(vec![2, 8, 8, 3]);
+        let out = client
+            .call(
+                "Predict",
+                Json::obj(vec![("handle", Json::num(h)), ("input", input.to_json())]),
+            )
+            .unwrap();
+        let out = Tensor::from_json(&out).unwrap();
+        assert_eq!(out.shape, vec![2, 1000]);
+        client.call("Close", Json::obj(vec![("handle", Json::num(h))])).unwrap();
+        let err = client
+            .call("Close", Json::obj(vec![("handle", Json::num(h))]))
+            .unwrap_err();
+        assert!(err.to_string().contains("handle"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn predict_bin_binary_fast_path() {
+        let (agent, _sim, _t, _db, _s) = sim_setup("aws_p3");
+        let server =
+            crate::wire::RpcServer::serve("127.0.0.1:0", agent_service(agent)).unwrap();
+        let client = crate::wire::RpcClient::connect(server.addr()).unwrap();
+        let h = client
+            .call(
+                "Open",
+                Json::obj(vec![
+                    ("model_name", Json::str("ResNet_v1_50")),
+                    ("batch_size", Json::num(2.0)),
+                ]),
+            )
+            .unwrap()
+            .f64_or("handle", 0.0);
+        let input = Tensor::random(vec![2, 16, 16, 3], 3);
+        let (_j, blob) = client
+            .call_binary(
+                "PredictBin",
+                Json::obj(vec![("handle", Json::num(h))]),
+                Some(&input.to_bytes()),
+            )
+            .unwrap();
+        let out = Tensor::from_bytes(&blob.expect("binary response")).unwrap();
+        assert_eq!(out.shape, vec![2, 1000]);
+        // Missing attachment is a clean remote error.
+        let err = client
+            .call_binary("PredictBin", Json::obj(vec![("handle", Json::num(h))]), None)
+            .unwrap_err();
+        assert!(err.to_string().contains("binary tensor"), "{err}");
+        server.stop();
+    }
+
+    /// Real PJRT agent end-to-end (skipped without artifacts).
+    #[test]
+    fn xla_agent_runs_artifacts_if_present() {
+        if crate::runtime::available_families().is_empty() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let db = Arc::new(EvalDb::in_memory());
+        let sink = MemorySink::new();
+        let rt = crate::runtime::Runtime::cpu().unwrap();
+        let (agent, _tracer) = xla_agent(rt, TraceLevel::Model, db.clone(), sink);
+        let manifest = crate::zoo::by_name("ResNet_v1_50").unwrap().manifest();
+        let req = EvalRequest {
+            manifest,
+            scenario: Scenario::Online { count: 3 },
+            trace_level: TraceLevel::Model,
+            input_mode: InputMode::Direct,
+            seed: 3,
+        };
+        let result = agent.evaluate(&req).unwrap();
+        assert_eq!(result.record.latencies.len(), 3);
+        assert!(result.record.latencies.iter().all(|l| *l > 0.0));
+    }
+}

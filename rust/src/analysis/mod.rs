@@ -1,0 +1,434 @@
+//! The automated benchmarking analysis + reporting workflow (§4.3, §5.3, F8).
+//!
+//! Consumes evaluation records from the [`crate::evaldb`] and aggregated
+//! timelines from the [`crate::traceserver`], correlates and summarizes
+//! them, and renders the human-readable reports the paper's server returns
+//! in the analysis workflow (steps a–e): per-model summaries (Table 2),
+//! accuracy-vs-performance scatters (Figs 4/5), throughput-scalability
+//! heatmaps (Fig 6), cross-system comparisons (Fig 7 + cost efficiency),
+//! and the layer↔kernel breakdown (Table 3).
+
+use crate::benchkit::{heatmap, scatter, Table};
+use crate::evaldb::{EvalDb, EvalQuery, EvalRecord};
+use crate::traceserver::Timeline;
+use crate::tracing::TraceLevel;
+use crate::util::json::Json;
+
+/// Per-model summary across scenarios — one Table-2 row.
+#[derive(Debug, Clone)]
+pub struct ModelSummary {
+    pub model: String,
+    pub accuracy: Option<f64>,
+    pub graph_size_mb: Option<f64>,
+    /// Online (batch 1) trimmed-mean latency, ms.
+    pub online_trimmed_mean_ms: f64,
+    /// Online 90th-percentile latency, ms.
+    pub online_p90_ms: f64,
+    /// Maximum throughput over all batched runs, items/s.
+    pub max_throughput: f64,
+    /// Batch size achieving `max_throughput`.
+    pub optimal_batch: usize,
+}
+
+/// Summarize one model's records (online + batched) into a Table-2 row.
+pub fn summarize_model(model: &str, db: &EvalDb) -> Option<ModelSummary> {
+    let online: Vec<EvalRecord> = db
+        .latest(&EvalQuery {
+            model: Some(model.to_string()),
+            scenario: Some("online".into()),
+            ..Default::default()
+        })
+        .into_iter()
+        .collect();
+    let batched = db.latest(&EvalQuery {
+        model: Some(model.to_string()),
+        scenario: Some("batched".into()),
+        ..Default::default()
+    });
+    if online.is_empty() && batched.is_empty() {
+        return None;
+    }
+    let (tm, p90) = online
+        .first()
+        .map(|r| (r.trimmed_mean_ms(), r.p90_ms()))
+        .unwrap_or((f64::NAN, f64::NAN));
+    let (max_tp, opt_batch) = batched
+        .iter()
+        .map(|r| (r.throughput, r.key.batch_size))
+        .fold((0.0f64, 1usize), |acc, x| if x.0 > acc.0 { x } else { acc });
+    let meta = online.first().or_else(|| batched.first()).map(|r| r.meta.clone());
+    Some(ModelSummary {
+        model: model.to_string(),
+        accuracy: meta.as_ref().and_then(|m| m.get("accuracy")).and_then(|v| v.as_f64()),
+        graph_size_mb: meta
+            .as_ref()
+            .and_then(|m| m.get("graph_size_mb"))
+            .and_then(|v| v.as_f64()),
+        online_trimmed_mean_ms: tm,
+        online_p90_ms: p90,
+        max_throughput: max_tp,
+        optimal_batch: opt_batch,
+    })
+}
+
+/// Render Table 2 for a set of models.
+pub fn table2(models: &[String], db: &EvalDb) -> Table {
+    let mut t = Table::new(
+        "Table 2 — model accuracy, size, online latency, max throughput",
+        &[
+            "ID",
+            "Name",
+            "Top1 Acc",
+            "Graph (MB)",
+            "Online TM (ms)",
+            "Online p90 (ms)",
+            "Max Tput (items/s)",
+            "Opt Batch",
+        ],
+    );
+    for (i, m) in models.iter().enumerate() {
+        if let Some(s) = summarize_model(m, db) {
+            t.row(&[
+                (i + 1).to_string(),
+                s.model.clone(),
+                s.accuracy.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+                s.graph_size_mb.map(|g| format!("{g:.1}")).unwrap_or_else(|| "-".into()),
+                format!("{:.2}", s.online_trimmed_mean_ms),
+                format!("{:.2}", s.online_p90_ms),
+                format!("{:.1}", s.max_throughput),
+                s.optimal_batch.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figure 4/5 scatter points: (x = latency ms | throughput, y = accuracy,
+/// label = table id).
+pub fn accuracy_scatter(
+    summaries: &[ModelSummary],
+    use_throughput: bool,
+) -> Vec<(f64, f64, String)> {
+    summaries
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| {
+            let acc = s.accuracy?;
+            let x = if use_throughput { s.max_throughput } else { s.online_trimmed_mean_ms };
+            if !x.is_finite() {
+                return None;
+            }
+            Some((x, acc, (i + 1).to_string()))
+        })
+        .collect()
+}
+
+/// Render Fig 4 (accuracy vs online latency) or Fig 5 (vs max throughput).
+pub fn render_accuracy_figure(summaries: &[ModelSummary], use_throughput: bool) -> String {
+    let pts = accuracy_scatter(summaries, use_throughput);
+    scatter(
+        if use_throughput {
+            "Fig 5 — accuracy vs max throughput"
+        } else {
+            "Fig 4 — accuracy vs online latency"
+        },
+        if use_throughput { "items/s" } else { "ms" },
+        "top-1 accuracy %",
+        &pts,
+        48,
+        16,
+    )
+}
+
+/// Fig 6: throughput speedup over batch 1 for each (model, batch) pair.
+/// `rows` = batch sizes, `cols` = models.
+pub fn throughput_speedup_matrix(
+    models: &[String],
+    batch_sizes: &[usize],
+    db: &EvalDb,
+) -> Vec<Vec<f64>> {
+    let tput = |model: &str, batch: usize| -> f64 {
+        db.latest(&EvalQuery {
+            model: Some(model.to_string()),
+            scenario: Some("batched".into()),
+            batch_size: Some(batch),
+            ..Default::default()
+        })
+        .first()
+        .map(|r| r.throughput)
+        .unwrap_or(f64::NAN)
+    };
+    batch_sizes
+        .iter()
+        .map(|b| {
+            models
+                .iter()
+                .map(|m| {
+                    let base = tput(m, 1);
+                    let t = tput(m, *b);
+                    if base > 0.0 {
+                        t / base
+                    } else {
+                        f64::NAN
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Render the Fig-6 heatmap.
+pub fn render_fig6(models: &[String], batch_sizes: &[usize], db: &EvalDb) -> String {
+    let matrix = throughput_speedup_matrix(models, batch_sizes, db);
+    let rows: Vec<String> = batch_sizes.iter().map(|b| format!("b{b}")).collect();
+    let cols: Vec<String> = (1..=models.len()).map(|i| i.to_string()).collect();
+    heatmap("Fig 6 — throughput speedup over batch 1", &rows, &cols, &matrix)
+}
+
+/// Fig 7: one model's latency across systems/devices at a set of batch
+/// sizes, plus the paper's cost-efficiency observation ($/1k inferences).
+pub fn system_comparison(model: &str, db: &EvalDb) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 7 — {model} latency across systems"),
+        &["System", "Device", "Batch", "TrimmedMean (ms)", "Tput (items/s)", "$ / 1M items"],
+    );
+    let recs = db.latest(&EvalQuery::model(model));
+    let systems = crate::sysmodel::profile_map();
+    let mut rows: Vec<&EvalRecord> = recs.iter().collect();
+    rows.sort_by(|a, b| {
+        (&a.key.system, &a.key.device, a.key.batch_size)
+            .cmp(&(&b.key.system, &b.key.device, b.key.batch_size))
+    });
+    for r in rows {
+        let cost = systems
+            .get(&r.key.system)
+            .map(|p| p.cost_per_hr)
+            .filter(|c| *c > 0.0)
+            .map(|c| format!("{:.3}", c / 3600.0 / r.throughput * 1e6))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            r.key.system.clone(),
+            r.key.device.clone(),
+            r.key.batch_size.to_string(),
+            format!("{:.2}", r.trimmed_mean_ms()),
+            format!("{:.1}", r.throughput),
+            cost,
+        ]);
+    }
+    t
+}
+
+/// Table 3: top-N most time-consuming FRAMEWORK layers with their dominant
+/// SYSTEM kernel, from an aggregated timeline.
+pub fn layer_kernel_table(timeline: &Timeline, top_n: usize) -> Table {
+    let mut t = Table::new(
+        "Table 3 — top layers and dominant GPU kernels",
+        &["Layer Idx", "Layer Name", "Layer Type", "Shape", "Dominant Kernel", "Latency (ms)", "Alloc (MB)"],
+    );
+    let corr = timeline.layer_kernel_correlation();
+    for (layer, kernels) in corr.iter().take(top_n) {
+        let dominant = kernels.iter().max_by_key(|k| k.duration_ns());
+        t.row(&[
+            layer.tag("layer_index").unwrap_or("-").to_string(),
+            layer.name.clone(),
+            layer.tag("kind").unwrap_or("-").to_string(),
+            layer.tag("shape").unwrap_or("-").to_string(),
+            dominant.map(|k| k.name.clone()).unwrap_or_else(|| "-".into()),
+            format!("{:.2}", layer.duration_ms()),
+            layer
+                .tag("alloc_mb")
+                .map(|a| a.to_string())
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+/// Summary counts the paper quotes under Table 3 ("234 layers of which 143
+/// take less than 1ms").
+pub fn layer_population(timeline: &Timeline) -> (usize, usize) {
+    let layers = timeline.at_level(TraceLevel::Framework);
+    let fast = layers.iter().filter(|l| l.duration_ms() < 1.0).count();
+    (layers.len(), fast)
+}
+
+/// Full analysis report for a set of models — the analysis workflow's
+/// output artifact (step e).
+pub fn full_report(models: &[String], db: &EvalDb) -> String {
+    let summaries: Vec<ModelSummary> =
+        models.iter().filter_map(|m| summarize_model(m, db)).collect();
+    let mut out = String::new();
+    out.push_str(&table2(models, db).render());
+    out.push_str(&render_accuracy_figure(&summaries, false));
+    out.push_str(&render_accuracy_figure(&summaries, true));
+    out
+}
+
+/// Write the full analysis report + per-figure CSVs to a directory — the
+/// paper's published report pages (scalable20.mlmodelscope.org) as local
+/// artifacts: `report.txt`, `summaries.json`, `table2.csv`.
+pub fn write_report_dir(
+    models: &[String],
+    db: &EvalDb,
+    dir: &std::path::Path,
+) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("report.txt"), full_report(models, db))?;
+    std::fs::write(
+        dir.join("summaries.json"),
+        summaries_json(models, db).to_pretty(),
+    )?;
+    table2(models, db).save_csv(dir.join("table2.csv").to_str().unwrap())?;
+    Ok(())
+}
+
+/// JSON form of the summaries (REST analysis endpoint payload).
+pub fn summaries_json(models: &[String], db: &EvalDb) -> Json {
+    Json::arr(
+        models
+            .iter()
+            .filter_map(|m| summarize_model(m, db))
+            .map(|s| {
+                Json::obj(vec![
+                    ("model", Json::str(&s.model)),
+                    ("accuracy", s.accuracy.map(Json::num).unwrap_or(Json::Null)),
+                    ("online_trimmed_mean_ms", Json::num(s.online_trimmed_mean_ms)),
+                    ("online_p90_ms", Json::num(s.online_p90_ms)),
+                    ("max_throughput", Json::num(s.max_throughput)),
+                    ("optimal_batch", Json::num(s.optimal_batch as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evaldb::EvalKey;
+
+    fn put(db: &EvalDb, model: &str, system: &str, scenario: &str, batch: usize, lat_ms: f64, tput: f64, acc: f64) {
+        let key = EvalKey {
+            model: model.into(),
+            model_version: "1.0.0".into(),
+            framework: "TensorFlow".into(),
+            framework_version: "1.15.0".into(),
+            system: system.into(),
+            device: "gpu".into(),
+            scenario: scenario.into(),
+            batch_size: batch,
+        };
+        let mut r = EvalRecord::new(key, vec![lat_ms / 1e3; 10], tput);
+        r.meta = Json::obj(vec![
+            ("accuracy", Json::num(acc)),
+            ("graph_size_mb", Json::num(100.0)),
+        ]);
+        db.put(r);
+    }
+
+    fn seed_db() -> EvalDb {
+        let db = EvalDb::in_memory();
+        put(&db, "resnet50", "aws_p3", "online", 1, 6.33, 158.0, 76.46);
+        for (b, tp) in [(1, 158.0), (32, 700.0), (256, 930.7), (64, 800.0)] {
+            put(&db, "resnet50", "aws_p3", "batched", b, 6.33, tp, 76.46);
+        }
+        put(&db, "mobilenet", "aws_p3", "online", 1, 2.46, 406.0, 71.68);
+        for (b, tp) in [(1, 406.0), (64, 2000.0), (128, 2576.4)] {
+            put(&db, "mobilenet", "aws_p3", "batched", b, 2.46, tp, 71.68);
+        }
+        db
+    }
+
+    #[test]
+    fn summarize_finds_optimal_batch() {
+        let db = seed_db();
+        let s = summarize_model("resnet50", &db).unwrap();
+        assert_eq!(s.optimal_batch, 256);
+        assert!((s.max_throughput - 930.7).abs() < 1e-9);
+        assert!((s.online_trimmed_mean_ms - 6.33).abs() < 1e-9);
+        assert_eq!(s.accuracy, Some(76.46));
+    }
+
+    #[test]
+    fn table2_renders_rows() {
+        let db = seed_db();
+        let t = table2(&["resnet50".into(), "mobilenet".into(), "missing".into()], &db);
+        let text = t.render();
+        assert!(text.contains("resnet50"));
+        assert!(text.contains("930.7"));
+        assert!(!text.contains("missing"));
+    }
+
+    #[test]
+    fn scatter_points_use_ids() {
+        let db = seed_db();
+        let sums: Vec<ModelSummary> = ["resnet50", "mobilenet"]
+            .iter()
+            .filter_map(|m| summarize_model(m, &db))
+            .collect();
+        let pts = accuracy_scatter(&sums, true);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].2, "1");
+        assert!(pts[1].0 > pts[0].0, "mobilenet throughput higher");
+        assert!(pts[1].1 < pts[0].1, "mobilenet accuracy lower");
+    }
+
+    #[test]
+    fn fig6_speedups_relative_to_batch1() {
+        let db = seed_db();
+        let m = throughput_speedup_matrix(
+            &["resnet50".into(), "mobilenet".into()],
+            &[1, 64, 256],
+            &db,
+        );
+        assert!((m[0][0] - 1.0).abs() < 1e-9, "batch 1 speedup is 1.0");
+        assert!(m[2][0] > 5.0, "resnet50 @256 speedup {}", m[2][0]);
+        assert!(m[1][1] > 4.0, "mobilenet @64 speedup {}", m[1][1]);
+        assert!(m[2][1].is_nan(), "mobilenet has no 256 record");
+    }
+
+    #[test]
+    fn system_comparison_includes_cost() {
+        let db = seed_db();
+        let t = system_comparison("resnet50", &db);
+        let text = t.render();
+        assert!(text.contains("aws_p3"));
+        // $3.06/hr ÷ 3600 × 1e6 / 930.7 ≈ 0.913 $/1M items at max tput.
+        assert!(text.contains("0.913"), "{text}");
+    }
+
+    #[test]
+    fn full_report_contains_all_sections() {
+        let db = seed_db();
+        let rep = full_report(&["resnet50".into(), "mobilenet".into()], &db);
+        assert!(rep.contains("Table 2"));
+        assert!(rep.contains("Fig 4"));
+        assert!(rep.contains("Fig 5"));
+    }
+
+    #[test]
+    fn report_dir_artifacts_written() {
+        let db = seed_db();
+        let dir = std::env::temp_dir().join(format!("mlms_report_{}", std::process::id()));
+        write_report_dir(&["resnet50".into(), "mobilenet".into()], &db, &dir).unwrap();
+        let report = std::fs::read_to_string(dir.join("report.txt")).unwrap();
+        assert!(report.contains("Table 2") && report.contains("Fig 5"));
+        let sums = crate::util::json::Json::parse(
+            &std::fs::read_to_string(dir.join("summaries.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sums.as_arr().unwrap().len(), 2);
+        let csv = std::fs::read_to_string(dir.join("table2.csv")).unwrap();
+        assert!(csv.lines().count() >= 3);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn summaries_json_shape() {
+        let db = seed_db();
+        let j = summaries_json(&["resnet50".into()], &db);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("optimal_batch").unwrap().as_f64(), Some(256.0));
+    }
+}

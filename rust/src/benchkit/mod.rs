@@ -1,0 +1,363 @@
+//! Measurement harness for `cargo bench` targets (offline substitute for
+//! criterion).
+//!
+//! Every paper table/figure has a `rust/benches/*.rs` target built on this:
+//! warmup, timed iterations, trimmed-mean / p90 summaries (the paper's own
+//! statistics via [`crate::metrics`]), and aligned table / CSV / heatmap
+//! rendering so benches print the same rows and series the paper reports.
+
+use crate::metrics::LatencySamples;
+use std::time::{Duration, Instant};
+
+/// Configuration for one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop early once this much wall-clock time has been spent measuring.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            max_time: Duration::from_secs(3),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            max_time: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Result of measuring one case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: LatencySamples,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn trimmed_mean_ms(&self) -> f64 {
+        self.samples.trimmed_mean() * 1e3
+    }
+
+    pub fn p90_ms(&self) -> f64 {
+        self.samples.p90() * 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.samples.mean() * 1e3
+    }
+}
+
+/// Measure `f` per the config; each call is one sample.
+pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = LatencySamples::new();
+    let started = Instant::now();
+    let mut iters = 0;
+    while iters < cfg.max_iters && (iters < cfg.min_iters || started.elapsed() < cfg.max_time) {
+        let t0 = Instant::now();
+        f();
+        samples.record(t0.elapsed());
+        iters += 1;
+    }
+    Measurement { name: name.to_string(), samples, iters }
+}
+
+/// Measure a function that reports how many items it processed, returning
+/// throughput (items/sec) alongside latency.
+pub fn bench_throughput(
+    name: &str,
+    cfg: &BenchConfig,
+    mut f: impl FnMut() -> u64,
+) -> (Measurement, f64) {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = LatencySamples::new();
+    let mut items = 0u64;
+    let started = Instant::now();
+    let mut iters = 0;
+    while iters < cfg.max_iters && (iters < cfg.min_iters || started.elapsed() < cfg.max_time) {
+        let t0 = Instant::now();
+        items += f();
+        samples.record(t0.elapsed());
+        iters += 1;
+    }
+    let total = samples.samples().iter().sum::<f64>();
+    let tput = if total > 0.0 { items as f64 / total } else { f64::NAN };
+    (Measurement { name: name.to_string(), samples, iters }, tput)
+}
+
+/// A column-aligned text table (the benches' stdout mirrors paper tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:width$}  ", c, width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV serialization for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.header.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV next to the bench output for plotting.
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// ASCII heatmap (Fig 6): rows × cols of values rendered as shade ramps.
+pub fn heatmap(title: &str, row_labels: &[String], col_labels: &[String], values: &[Vec<f64>]) -> String {
+    const RAMP: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let max = values
+        .iter()
+        .flat_map(|r| r.iter())
+        .copied()
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(1e-12);
+    let label_w = row_labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("\n== {title} (max={max:.1}) ==\n");
+    for (ri, row) in values.iter().enumerate() {
+        out.push_str(&format!("{:label_w$} |", row_labels[ri], label_w = label_w));
+        for v in row {
+            let idx = ((v / max) * (RAMP.len() - 1) as f64).round().clamp(0.0, 9.0) as usize;
+            out.push(RAMP[idx]);
+            out.push(RAMP[idx]);
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:label_w$} +{}\n  cols: {}\n",
+        "",
+        "-".repeat(col_labels.len() * 2),
+        col_labels.join(","),
+        label_w = label_w
+    ));
+    out
+}
+
+/// ASCII scatter plot (Figs 4/5): points labelled by id.
+pub fn scatter(
+    title: &str,
+    x_label: &str,
+    y_label: &str,
+    points: &[(f64, f64, String)],
+    width: usize,
+    height: usize,
+) -> String {
+    if points.is_empty() {
+        return format!("\n== {title} == (no points)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y, _) in points {
+        xmin = xmin.min(*x);
+        xmax = xmax.max(*x);
+        ymin = ymin.min(*y);
+        ymax = ymax.max(*y);
+    }
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+    let mut grid = vec![vec![String::new(); width]; height];
+    for (x, y, label) in points {
+        let cx = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+        let cy = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+        let cell = &mut grid[height - 1 - cy][cx];
+        if cell.is_empty() {
+            *cell = label.clone();
+        } else {
+            cell.push(',');
+            cell.push_str(label);
+        }
+    }
+    let mut out = format!("\n== {title} ==  (y: {y_label}, x: {x_label})\n");
+    for row in &grid {
+        out.push('|');
+        for cell in row {
+            if cell.is_empty() {
+                out.push_str(" .");
+            } else {
+                // Print the first id; multiple points collapse visually.
+                let id = cell.split(',').next().unwrap();
+                out.push_str(&format!("{:>2}", &id[..id.len().min(2)]));
+            }
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "+{}\n x: [{:.3}, {:.3}]  y: [{:.3}, {:.3}]\n",
+        "-".repeat(width * 2),
+        xmin,
+        xmax,
+        ymin,
+        ymax
+    ));
+    out
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(name: &str, paper_ref: &str) {
+    println!("\n######################################################");
+    println!("# bench: {name}");
+    println!("# reproduces: {paper_ref}");
+    println!("######################################################");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let cfg = BenchConfig { warmup_iters: 1, min_iters: 5, max_iters: 5, max_time: Duration::from_secs(1) };
+        let m = bench("noop", &cfg, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.iters, 5);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.mean_ms() >= 0.0);
+    }
+
+    #[test]
+    fn bench_respects_max_time() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 1_000_000,
+            max_time: Duration::from_millis(50),
+        };
+        let m = bench("sleepy", &cfg, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(m.iters < 1000, "stopped early, got {}", m.iters);
+    }
+
+    #[test]
+    fn throughput_bench() {
+        let cfg = BenchConfig::quick();
+        let (_m, tput) = bench_throughput("batch", &cfg, || {
+            std::thread::sleep(Duration::from_millis(1));
+            100
+        });
+        assert!(tput > 0.0 && tput.is_finite());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["model", "latency (ms)"]);
+        t.row(&["resnet50".into(), "6.33".into()]);
+        t.row(&["vgg16".into(), "22.43".into()]);
+        let s = t.render();
+        assert!(s.contains("resnet50"));
+        assert!(s.contains("== demo =="));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("model,latency (ms)\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let s = heatmap(
+            "h",
+            &["b1".into(), "b2".into()],
+            &["m1".into(), "m2".into(), "m3".into()],
+            &[vec![1.0, 2.0, 3.0], vec![3.0, 2.0, 1.0]],
+        );
+        assert!(s.contains("b1"));
+        assert!(s.contains("cols: m1,m2,m3"));
+    }
+
+    #[test]
+    fn scatter_renders() {
+        let pts = vec![(1.0, 2.0, "1".to_string()), (3.0, 4.0, "2".to_string())];
+        let s = scatter("sc", "lat", "acc", &pts, 20, 10);
+        assert!(s.contains("== sc =="));
+        assert!(s.contains("x: [1.000, 3.000]"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["hello, world".into()]);
+        assert!(t.to_csv().contains("\"hello, world\""));
+    }
+}

@@ -1,0 +1,343 @@
+//! The evaluation database (§4.5.2).
+//!
+//! After an evaluation, the agent stores the benchmarking result (and a
+//! pointer to its profiling trace) keyed by the full user input — model,
+//! framework, system, scenario — so the analysis workflow can query across
+//! historical runs ("MLModelScope allows one to track which model version
+//! produced the best result"). The store is an embedded append-only JSONL
+//! segment log with in-memory secondary indexes — the offline substitute
+//! for the paper's hosted document database.
+
+use crate::metrics::LatencySamples;
+
+use crate::util::json::Json;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// The key identifying one evaluation configuration (the "user input").
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EvalKey {
+    pub model: String,
+    pub model_version: String,
+    pub framework: String,
+    pub framework_version: String,
+    pub system: String,
+    pub device: String,
+    pub scenario: String,
+    pub batch_size: usize,
+}
+
+impl EvalKey {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("model_version", Json::str(&self.model_version)),
+            ("framework", Json::str(&self.framework)),
+            ("framework_version", Json::str(&self.framework_version)),
+            ("system", Json::str(&self.system)),
+            ("device", Json::str(&self.device)),
+            ("scenario", Json::str(&self.scenario)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> EvalKey {
+        EvalKey {
+            model: j.str_or("model", "").into(),
+            model_version: j.str_or("model_version", "1.0.0").into(),
+            framework: j.str_or("framework", "").into(),
+            framework_version: j.str_or("framework_version", "0.0.0").into(),
+            system: j.str_or("system", "local").into(),
+            device: j.str_or("device", "cpu").into(),
+            scenario: j.str_or("scenario", "online").into(),
+            batch_size: j.f64_or("batch_size", 1.0) as usize,
+        }
+    }
+}
+
+/// One stored evaluation record.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub key: EvalKey,
+    /// Monotonic sequence number assigned by the database.
+    pub seq: u64,
+    /// Latency samples (seconds per request).
+    pub latencies: Vec<f64>,
+    /// Achieved throughput, items/sec.
+    pub throughput: f64,
+    /// Trace id in the tracing server, if profiling was enabled.
+    pub trace_id: Option<u64>,
+    /// Free-form metadata (accuracy, graph size, agent id, ...).
+    pub meta: Json,
+}
+
+impl EvalRecord {
+    pub fn new(key: EvalKey, latencies: Vec<f64>, throughput: f64) -> EvalRecord {
+        EvalRecord { key, seq: 0, latencies, throughput, trace_id: None, meta: Json::Null }
+    }
+
+    pub fn samples(&self) -> LatencySamples {
+        LatencySamples::from_secs(self.latencies.clone())
+    }
+
+    pub fn trimmed_mean_ms(&self) -> f64 {
+        self.samples().trimmed_mean() * 1e3
+    }
+
+    pub fn p90_ms(&self) -> f64 {
+        self.samples().p90() * 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", self.key.to_json()),
+            ("seq", Json::num(self.seq as f64)),
+            (
+                "latencies",
+                Json::arr(self.latencies.iter().map(|l| Json::num(*l)).collect()),
+            ),
+            ("throughput", Json::num(self.throughput)),
+            (
+                "trace_id",
+                self.trace_id.map(|t| Json::num(t as f64)).unwrap_or(Json::Null),
+            ),
+            ("meta", self.meta.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<EvalRecord> {
+        Some(EvalRecord {
+            key: EvalKey::from_json(j.get("key")?),
+            seq: j.f64_or("seq", 0.0) as u64,
+            latencies: j
+                .get("latencies")?
+                .as_arr()?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect(),
+            throughput: j.f64_or("throughput", f64::NAN),
+            trace_id: j.get("trace_id").and_then(|v| v.as_u64()),
+            meta: j.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+/// Query filter: all `Some` fields must match.
+#[derive(Debug, Clone, Default)]
+pub struct EvalQuery {
+    pub model: Option<String>,
+    pub framework: Option<String>,
+    pub system: Option<String>,
+    pub device: Option<String>,
+    pub scenario: Option<String>,
+    pub batch_size: Option<usize>,
+}
+
+impl EvalQuery {
+    pub fn model(name: &str) -> EvalQuery {
+        EvalQuery { model: Some(name.to_string()), ..Default::default() }
+    }
+
+    fn matches(&self, k: &EvalKey) -> bool {
+        self.model.as_deref().map_or(true, |m| m == k.model)
+            && self.framework.as_deref().map_or(true, |f| f == k.framework)
+            && self.system.as_deref().map_or(true, |s| s == k.system)
+            && self.device.as_deref().map_or(true, |d| d == k.device)
+            && self.scenario.as_deref().map_or(true, |s| s == k.scenario)
+            && self.batch_size.map_or(true, |b| b == k.batch_size)
+    }
+}
+
+/// The embedded evaluation database.
+pub struct EvalDb {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    records: Vec<EvalRecord>,
+    next_seq: u64,
+    /// Append log path; `None` → memory-only (tests, benches).
+    log_path: Option<PathBuf>,
+}
+
+impl EvalDb {
+    /// Memory-only database.
+    pub fn in_memory() -> EvalDb {
+        EvalDb { inner: Mutex::new(Inner { records: Vec::new(), next_seq: 1, log_path: None }) }
+    }
+
+    /// Open (or create) a file-backed database, replaying the existing log.
+    pub fn open(path: impl Into<PathBuf>) -> std::io::Result<EvalDb> {
+        let path = path.into();
+        let mut records = Vec::new();
+        let mut next_seq = 1;
+        if path.exists() {
+            let file = std::fs::File::open(&path)?;
+            for line in std::io::BufReader::new(file).lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if let Ok(j) = Json::parse(&line) {
+                    if let Some(r) = EvalRecord::from_json(&j) {
+                        next_seq = next_seq.max(r.seq + 1);
+                        records.push(r);
+                    }
+                }
+            }
+        } else if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(EvalDb { inner: Mutex::new(Inner { records, next_seq, log_path: Some(path) }) })
+    }
+
+    /// Store a record; assigns and returns its sequence number.
+    pub fn put(&self, mut record: EvalRecord) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        record.seq = inner.next_seq;
+        inner.next_seq += 1;
+        if let Some(path) = inner.log_path.clone() {
+            if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+                let _ = writeln!(f, "{}", record.to_json().to_string());
+            }
+        }
+        let seq = record.seq;
+        inner.records.push(record);
+        seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All records matching the query, in insertion order.
+    pub fn query(&self, q: &EvalQuery) -> Vec<EvalRecord> {
+        self.inner
+            .lock()
+            .unwrap()
+            .records
+            .iter()
+            .filter(|r| q.matches(&r.key))
+            .cloned()
+            .collect()
+    }
+
+    /// The latest record per distinct key matching the query (history keeps
+    /// every run; comparisons usually want the newest).
+    pub fn latest(&self, q: &EvalQuery) -> Vec<EvalRecord> {
+        let mut by_key: std::collections::HashMap<String, EvalRecord> =
+            std::collections::HashMap::new();
+        for r in self.query(q) {
+            let k = r.key.to_json().to_string();
+            match by_key.get(&k) {
+                Some(prev) if prev.seq >= r.seq => {}
+                _ => {
+                    by_key.insert(k, r);
+                }
+            }
+        }
+        let mut out: Vec<EvalRecord> = by_key.into_values().collect();
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    fn key(model: &str, system: &str, batch: usize) -> EvalKey {
+        EvalKey {
+            model: model.into(),
+            model_version: "1.0.0".into(),
+            framework: "TensorFlow".into(),
+            framework_version: "1.15.0".into(),
+            system: system.into(),
+            device: "gpu".into(),
+            scenario: Scenario::Online { count: 10 }.name().into(),
+            batch_size: batch,
+        }
+    }
+
+    #[test]
+    fn put_query_roundtrip() {
+        let db = EvalDb::in_memory();
+        db.put(EvalRecord::new(key("resnet50", "aws_p3", 1), vec![0.006, 0.0063], 158.0));
+        db.put(EvalRecord::new(key("vgg16", "aws_p3", 1), vec![0.022], 45.0));
+        db.put(EvalRecord::new(key("resnet50", "ibm_p8", 1), vec![0.008], 125.0));
+        assert_eq!(db.len(), 3);
+        let r = db.query(&EvalQuery::model("resnet50"));
+        assert_eq!(r.len(), 2);
+        let q = EvalQuery { system: Some("aws_p3".into()), ..Default::default() };
+        assert_eq!(db.query(&q).len(), 2);
+    }
+
+    #[test]
+    fn latest_deduplicates_by_key() {
+        let db = EvalDb::in_memory();
+        db.put(EvalRecord::new(key("m", "s", 1), vec![0.010], 100.0));
+        db.put(EvalRecord::new(key("m", "s", 1), vec![0.005], 200.0));
+        db.put(EvalRecord::new(key("m", "s", 8), vec![0.020], 400.0));
+        let latest = db.latest(&EvalQuery::model("m"));
+        assert_eq!(latest.len(), 2);
+        let b1 = latest.iter().find(|r| r.key.batch_size == 1).unwrap();
+        assert_eq!(b1.throughput, 200.0, "latest run wins");
+    }
+
+    #[test]
+    fn persistence_across_reopen() {
+        let dir = std::env::temp_dir().join(format!("evaldb_test_{}", std::process::id()));
+        let path = dir.join("eval.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let db = EvalDb::open(&path).unwrap();
+            let mut r = EvalRecord::new(key("resnet50", "aws_p3", 256), vec![0.275], 930.7);
+            r.trace_id = Some(42);
+            r.meta = Json::obj(vec![("accuracy", Json::num(76.46))]);
+            db.put(r);
+        }
+        let db = EvalDb::open(&path).unwrap();
+        assert_eq!(db.len(), 1);
+        let r = &db.query(&EvalQuery::model("resnet50"))[0];
+        assert_eq!(r.trace_id, Some(42));
+        assert_eq!(r.key.batch_size, 256);
+        assert_eq!(r.meta.get("accuracy").unwrap().as_f64(), Some(76.46));
+        // Appending after reopen continues the sequence.
+        let seq = db.put(EvalRecord::new(key("x", "s", 1), vec![0.1], 10.0));
+        assert_eq!(seq, 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_stats_use_paper_metrics() {
+        let lat: Vec<f64> = (1..=10).map(|i| i as f64 / 1e3).collect();
+        let r = EvalRecord::new(key("m", "s", 1), lat, 0.0);
+        // trimmed mean over 3..8 ms = 5.5ms
+        assert!((r.trimmed_mean_ms() - 5.5).abs() < 1e-9);
+        assert!(r.p90_ms() >= 9.0);
+    }
+
+    #[test]
+    fn corrupt_log_lines_skipped() {
+        let dir = std::env::temp_dir().join(format!("evaldb_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("eval.jsonl");
+        let mut good = EvalRecord::new(key("m", "s", 1), vec![0.1], 1.0);
+        good.seq = 1;
+        std::fs::write(
+            &path,
+            format!("{}\nnot json at all\n{{\"half\": true}}\n", good.to_json().to_string()),
+        )
+        .unwrap();
+        let db = EvalDb::open(&path).unwrap();
+        // Good line kept; garbage skipped; half-record (no key) skipped.
+        assert_eq!(db.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,463 @@
+//! Minimal HTTP/1.1 server + client for the REST API (§4.2–4.3, F10).
+//!
+//! The MLModelScope clients (web UI / CLI) talk REST to the server; gRPC is
+//! reserved for server↔agent traffic. This module implements just enough of
+//! HTTP/1.1 for that API: request-line + headers parsing, `Content-Length`
+//! bodies, JSON responses, a tiny router with path parameters
+//! (`/api/trace/:id`), and a blocking client.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const MAX_BODY: usize = 256 << 20;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Query string, raw (after `?`).
+    pub query: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    /// Path parameters bound by the router (`:id` → value).
+    pub params: BTreeMap<String, String>,
+}
+
+impl HttpRequest {
+    pub fn json(&self) -> Option<Json> {
+        Json::parse(std::str::from_utf8(&self.body).ok()?).ok()
+    }
+
+    /// Parse the query string into a map.
+    pub fn query_map(&self) -> BTreeMap<String, String> {
+        self.query
+            .split('&')
+            .filter(|kv| !kv.is_empty())
+            .filter_map(|kv| {
+                let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+                Some((url_decode(k), url_decode(v)))
+            })
+            .collect()
+    }
+
+    pub fn param(&self, name: &str) -> Option<&str> {
+        self.params.get(name).map(|s| s.as_str())
+    }
+}
+
+fn url_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() => {
+                match u8::from_str_radix(
+                    std::str::from_utf8(&bytes[i + 1..i + 3]).unwrap_or("zz"),
+                    16,
+                ) {
+                    Ok(v) => {
+                        out.push(v);
+                        i += 3;
+                    }
+                    Err(_) => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// An HTTP response under construction.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(value: &Json) -> HttpResponse {
+        HttpResponse {
+            status: 200,
+            content_type: "application/json".into(),
+            body: value.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> HttpResponse {
+        HttpResponse { status, content_type: "text/plain".into(), body: body.into().into_bytes() }
+    }
+
+    pub fn error(status: u16, msg: impl Into<String>) -> HttpResponse {
+        HttpResponse::json_status(status, &Json::obj(vec![("error", Json::str(msg.into()))]))
+    }
+
+    pub fn json_status(status: u16, value: &Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json".into(),
+            body: value.to_string().into_bytes(),
+        }
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            400 => "Bad Request",
+            404 => "Not Found",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    fn write_to(&self, stream: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len()
+        )?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+type Handler = Box<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// Route table: method + pattern (`/api/trace/:id`) → handler.
+pub struct Router {
+    routes: Vec<(String, Vec<String>, Handler)>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router { routes: Vec::new() }
+    }
+
+    pub fn route(
+        mut self,
+        method: &str,
+        pattern: &str,
+        handler: impl Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    ) -> Router {
+        let segs = pattern.trim_matches('/').split('/').map(String::from).collect();
+        self.routes.push((method.to_string(), segs, Box::new(handler)));
+        self
+    }
+
+    fn dispatch(&self, req: &mut HttpRequest) -> HttpResponse {
+        let path_segs: Vec<&str> = req.path.trim_matches('/').split('/').collect();
+        'routes: for (method, pattern, handler) in &self.routes {
+            if method != &req.method || pattern.len() != path_segs.len() {
+                continue;
+            }
+            let mut params = BTreeMap::new();
+            for (p, s) in pattern.iter().zip(&path_segs) {
+                if let Some(name) = p.strip_prefix(':') {
+                    params.insert(name.to_string(), s.to_string());
+                } else if p != s {
+                    continue 'routes;
+                }
+            }
+            req.params = params;
+            return handler(req);
+        }
+        HttpResponse::error(404, format!("no route for {} /{}", req.method, req.path))
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A running HTTP server.
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    pub fn serve(addr: &str, router: Router) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = shutdown.clone();
+        let router = Arc::new(router);
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("http-accept-{local}"))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if sd.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        let router = router.clone();
+                        let sd = sd.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_http(stream, router, sd);
+                        });
+                    }
+                }
+            })?;
+        Ok(HttpServer { addr: local, shutdown, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn handle_http(
+    stream: TcpStream,
+    router: Arc<Router>,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    while !shutdown.load(Ordering::Relaxed) {
+        let mut req = match read_request(&mut reader)? {
+            Some(r) => r,
+            None => return Ok(()),
+        };
+        let keep_alive = req
+            .headers
+            .get("connection")
+            .map(|c| !c.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        let resp = router.dispatch(&mut req);
+        resp.write_to(&mut stream)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+fn read_request(reader: &mut impl BufRead) -> std::io::Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None); // EOF
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().unwrap_or("/").to_string();
+    let (path, query) = target.split_once('?').unwrap_or((target.as_str(), ""));
+    let (path, query) = (path.to_string(), query.to_string());
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Ok(None);
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "body too large"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Some(HttpRequest { method, path, query, headers, body, params: BTreeMap::new() }))
+}
+
+/// Blocking HTTP client (one request per call; fresh connection).
+pub fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> std::io::Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let body_bytes = body.map(|b| b.to_string().into_bytes()).unwrap_or_default();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: mlms\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body_bytes.len()
+    )?;
+    stream.write_all(&body_bytes)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    let json = Json::parse(std::str::from_utf8(&body).unwrap_or("null"))
+        .unwrap_or(Json::Null);
+    Ok((status, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_router() -> Router {
+        Router::new()
+            .route("GET", "/api/ping", |_req| {
+                HttpResponse::json(&Json::obj(vec![("pong", Json::Bool(true))]))
+            })
+            .route("GET", "/api/model/:name", |req| {
+                HttpResponse::json(&Json::obj(vec![(
+                    "model",
+                    Json::str(req.param("name").unwrap_or("?")),
+                )]))
+            })
+            .route("POST", "/api/echo", |req| match req.json() {
+                Some(j) => HttpResponse::json(&j),
+                None => HttpResponse::error(400, "bad json"),
+            })
+    }
+
+    #[test]
+    fn get_route() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let (status, body) = http_request(server.addr(), "GET", "/api/ping", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.get("pong").unwrap().as_bool(), Some(true));
+        server.stop();
+    }
+
+    #[test]
+    fn path_params() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let (status, body) =
+            http_request(server.addr(), "GET", "/api/model/ResNet_v1_50", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.get("model").unwrap().as_str(), Some("ResNet_v1_50"));
+        server.stop();
+    }
+
+    #[test]
+    fn post_json_body() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let payload = Json::obj(vec![("x", Json::num(42.0))]);
+        let (status, body) =
+            http_request(server.addr(), "POST", "/api/echo", Some(&payload)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.get("x").unwrap().as_f64(), Some(42.0));
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_route_404() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let (status, body) = http_request(server.addr(), "GET", "/nope", None).unwrap();
+        assert_eq!(status, 404);
+        assert!(body.get("error").is_some());
+        server.stop();
+    }
+
+    #[test]
+    fn query_string_parsing() {
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/api/eval".into(),
+            query: "model=ResNet_v1_50&batch=8&name=hello%20world+x".into(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+            params: BTreeMap::new(),
+        };
+        let q = req.query_map();
+        assert_eq!(q["model"], "ResNet_v1_50");
+        assert_eq!(q["batch"], "8");
+        assert_eq!(q["name"], "hello world x");
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let (status, body) = http_request(
+                        addr,
+                        "GET",
+                        &format!("/api/model/m{i}"),
+                        None,
+                    )
+                    .unwrap();
+                    assert_eq!(status, 200);
+                    assert_eq!(body.get("model").unwrap().as_str(), Some(format!("m{i}").as_str()));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+}

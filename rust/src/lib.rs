@@ -1,0 +1,69 @@
+//! # MLModelScope-RS
+//!
+//! A scalable DL benchmarking platform — a from-scratch reproduction of
+//! *"The Design and Implementation of a Scalable DL Benchmarking Platform"*
+//! (Li, Dakkak, Xiong, Hwu; 2019).
+//!
+//! The crate implements the paper's full platform (Fig. 1):
+//!
+//! - **specification**: model + framework manifests ([`manifest`]),
+//!   versioned with semantic-version constraints ([`util::semver`]);
+//! - **distribution**: a TTL'd registry ([`registry`]), a framed RPC wire
+//!   protocol ([`wire`]), an HTTP REST server ([`httpd`]), the MLModelScope
+//!   server ([`server`]) and agents ([`agent`]);
+//! - **evaluation**: the streaming pipeline executor ([`pipeline`]) running
+//!   pre-processing ([`preprocess`]), framework predictors ([`predictor`])
+//!   and post-processing ([`postprocess`]) under pluggable benchmarking
+//!   scenarios ([`scenario`]);
+//! - **inspection**: across-stack tracing ([`tracing`]) aggregated by a
+//!   trace server ([`traceserver`]), with model/framework/system levels;
+//! - **analysis**: the evaluation database ([`evaldb`]) and the automated
+//!   analysis + reporting workflow ([`analysis`]);
+//! - **models**: the 37-model zoo of the paper's Table 2 ([`zoo`]) — five
+//!   families also exist as *real* JAX/Pallas models AOT-compiled to HLO and
+//!   executed through the PJRT runtime ([`runtime`]);
+//! - **systems**: roofline models of the paper's Table 1 hardware
+//!   ([`sysmodel`]) used to simulate GPU execution (the paper §4.4.4
+//!   explicitly supports simulator-published trace times).
+//!
+//! Python/JAX runs only at build time (`make artifacts`); the `mlms` binary
+//! is self-contained afterwards.
+
+pub mod util {
+    pub mod cli;
+    pub mod json;
+    pub mod rng;
+    pub mod semver;
+    pub mod threadpool;
+    pub mod yamlmini;
+}
+
+pub mod benchkit;
+pub mod metrics;
+
+pub mod manifest;
+pub mod sysmodel;
+pub mod zoo;
+
+pub mod postprocess;
+pub mod preprocess;
+
+pub mod pipeline;
+pub mod scenario;
+
+pub mod tracing;
+pub mod traceserver;
+
+pub mod analysis;
+pub mod evaldb;
+
+pub mod predictor;
+pub mod runtime;
+
+pub mod registry;
+pub mod wire;
+
+pub mod agent;
+
+pub mod httpd;
+pub mod server;

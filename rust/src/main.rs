@@ -1,0 +1,395 @@
+//! `mlms` — the MLModelScope-RS command-line interface (F10).
+//!
+//! Subcommands mirror the paper's deployment units:
+//!
+//! - `server`  — run the MLModelScope server (REST API + registry + eval DB)
+//! - `agent`   — run an agent (simulator or XLA/PJRT) serving the wire RPC
+//! - `eval`    — one-shot evaluation through an in-process platform
+//! - `analyze` — run the analysis workflow over a stored evaluation DB
+//! - `zoo`     — list built-in models / systems
+//! - `trace`   — render a trace timeline
+//!
+//! `eval` is the "push-button" path: it assembles server + agents in one
+//! process, evaluates, and prints the analysis — the CLI equivalent of the
+//! paper's web-UI flow.
+
+use mlmodelscope::agent::{sim_agent, xla_agent};
+use mlmodelscope::manifest::SystemRequirements;
+use mlmodelscope::predictor::InputMode;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::util::cli::{usage, Args, Command};
+use std::sync::Arc;
+
+const COMMANDS: &[Command] = &[
+    Command { name: "server", about: "run the MLModelScope server (REST API)" },
+    Command { name: "agent", about: "run an agent process (wire RPC)" },
+    Command { name: "eval", about: "one-shot evaluation (in-process platform)" },
+    Command { name: "analyze", about: "analysis workflow over a stored eval DB" },
+    Command { name: "zoo", about: "list built-in models / systems" },
+    Command { name: "trace", about: "evaluate with tracing and render the timeline" },
+    Command { name: "client", about: "talk to a running mlms server over REST" },
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print!("{}", usage("mlms", "a scalable DL benchmarking platform", COMMANDS));
+            return;
+        }
+    };
+    let args = Args::parse(&rest);
+    let code = match cmd {
+        "server" => cmd_server(&args),
+        "agent" => cmd_agent(&args),
+        "eval" => cmd_eval(&args),
+        "analyze" => cmd_analyze(&args),
+        "zoo" => cmd_zoo(&args),
+        "trace" => cmd_trace(&args),
+        "client" => cmd_client(&args),
+        _ => {
+            eprint!("{}", usage("mlms", "a scalable DL benchmarking platform", COMMANDS));
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Build a standalone in-process platform: server + the four Table-1
+/// simulated GPU agents (+ CPU agents) + optionally a real XLA agent.
+fn build_platform(args: &Args) -> Arc<Server> {
+    let server = Server::standalone();
+    server.register_zoo();
+    let level = TraceLevel::parse(args.opt_or("trace-level", "model"));
+    for sys in ["aws_p3", "aws_g3", "aws_p2", "ibm_p8"] {
+        for dev in [Device::Gpu, Device::Cpu] {
+            let (agent, _sim, _t) =
+                sim_agent(sys, dev, level, server.evaldb.clone(), server.traces.clone());
+            server.attach_local_agent(agent);
+        }
+    }
+    if !args.flag("no-xla") && !mlmodelscope::runtime::available_families().is_empty() {
+        match mlmodelscope::runtime::Runtime::cpu() {
+            Ok(rt) => {
+                let (agent, _t) =
+                    xla_agent(rt, level, server.evaldb.clone(), server.traces.clone());
+                server.attach_local_agent(agent);
+            }
+            Err(e) => eprintln!("warning: PJRT unavailable: {e}"),
+        }
+    }
+    server
+}
+
+fn parse_scenario(args: &Args) -> Scenario {
+    match args.opt_or("scenario", "online") {
+        "batched" => Scenario::Batched {
+            batch_size: args.usize_or("batch", 8),
+            batches: args.usize_or("batches", 4),
+        },
+        "poisson" => Scenario::Poisson {
+            rate: args.f64_or("rate", 20.0),
+            count: args.usize_or("count", 32),
+        },
+        "fixed_qps" => Scenario::FixedQps {
+            qps: args.f64_or("qps", 10.0),
+            count: args.usize_or("count", 32),
+        },
+        "burst" => Scenario::Burst {
+            burst_size: args.usize_or("burst-size", 8),
+            period_s: args.f64_or("period", 1.0),
+            bursts: args.usize_or("bursts", 4),
+        },
+        _ => Scenario::Online { count: args.usize_or("count", 16) },
+    }
+}
+
+fn cmd_server(args: &Args) -> i32 {
+    let server = build_platform(args);
+    let addr = args.opt_or("listen", "127.0.0.1:8080");
+    match mlmodelscope::httpd::HttpServer::serve(addr, server.router()) {
+        Ok(http) => {
+            println!("mlms server listening on http://{}", http.addr());
+            println!("  GET  /api/models /api/agents /api/systems");
+            println!("  POST /api/evaluate");
+            println!("  GET  /api/analyze?models=a,b  /api/report?models=a,b  /api/trace/:id");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_agent(args: &Args) -> i32 {
+    let system = args.opt_or("system", "aws_p3").to_string();
+    let db_path = args.opt_or("evaldb", "").to_string();
+    let evaldb = Arc::new(if db_path.is_empty() {
+        mlmodelscope::evaldb::EvalDb::in_memory()
+    } else {
+        match mlmodelscope::evaldb::EvalDb::open(&db_path) {
+            Ok(db) => db,
+            Err(e) => {
+                eprintln!("open {db_path}: {e}");
+                return 1;
+            }
+        }
+    });
+    let sink = mlmodelscope::traceserver::TraceServer::new();
+    let level = TraceLevel::parse(args.opt_or("trace-level", "model"));
+    let agent = if system == "local" {
+        match mlmodelscope::runtime::Runtime::cpu() {
+            Ok(rt) => xla_agent(rt, level, evaldb, sink).0,
+            Err(e) => {
+                eprintln!("PJRT: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let device = match args.opt_or("device", "gpu") {
+            "cpu" => Device::Cpu,
+            _ => Device::Gpu,
+        };
+        sim_agent(&system, device, level, evaldb, sink).0
+    };
+    let addr = args.opt_or("listen", "127.0.0.1:0");
+    match mlmodelscope::wire::RpcServer::serve(addr, mlmodelscope::agent::agent_service(agent)) {
+        Ok(rpc) => {
+            println!("mlms agent ({system}) serving wire RPC on {}", rpc.addr());
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let model = match args.require("model") {
+        Ok(m) => m.to_string(),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let server = build_platform(args);
+    let mut job = EvalJob::new(&model, parse_scenario(args));
+    job.trace_level = TraceLevel::parse(args.opt_or("trace-level", "model"));
+    job.input_mode = InputMode::parse(args.opt_or("input-mode", "c"));
+    job.seed = args.u64_or("seed", 42);
+    job.all_agents = args.flag("all-agents");
+    if let Some(sys) = args.opt("system") {
+        job.requirements = SystemRequirements::on_system(sys);
+    }
+    if let Some(acc) = args.opt("accelerator") {
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::parse(acc);
+    }
+    match server.evaluate(&job) {
+        Ok(records) => {
+            for r in &records {
+                println!(
+                    "{} on {} [{}] batch={}: trimmed-mean {:.3} ms, p90 {:.3} ms, throughput {:.1} items/s",
+                    r.key.model,
+                    r.key.system,
+                    r.key.device,
+                    r.key.batch_size,
+                    r.trimmed_mean_ms(),
+                    r.p90_ms(),
+                    r.throughput,
+                );
+            }
+            println!("{}", server.report(&[model]));
+            0
+        }
+        Err(e) => {
+            eprintln!("evaluation failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_analyze(args: &Args) -> i32 {
+    let db_path = args.opt_or("evaldb", "");
+    if db_path.is_empty() {
+        eprintln!("--evaldb <path> required (a JSONL evaluation database)");
+        return 2;
+    }
+    let db = match mlmodelscope::evaldb::EvalDb::open(db_path) {
+        Ok(db) => db,
+        Err(e) => {
+            eprintln!("open {db_path}: {e}");
+            return 1;
+        }
+    };
+    let models: Vec<String> = if args.opt("models").is_some() {
+        args.list("models")
+    } else {
+        mlmodelscope::zoo::all().iter().map(|m| m.name.clone()).collect()
+    };
+    println!("{}", mlmodelscope::analysis::full_report(&models, &db));
+    if let Some(dir) = args.opt("out-dir") {
+        match mlmodelscope::analysis::write_report_dir(&models, &db, std::path::Path::new(dir)) {
+            Ok(()) => println!("report artifacts written to {dir}/"),
+            Err(e) => {
+                eprintln!("write {dir}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_zoo(args: &Args) -> i32 {
+    if args.positional.first().map(|s| s.as_str()) == Some("systems") {
+        let mut t = mlmodelscope::benchkit::Table::new(
+            "Table 1 — systems",
+            &["Name", "CPU", "GPU", "Arch", "TFLOPs", "Mem BW (GB/s)", "$/hr"],
+        );
+        for p in mlmodelscope::sysmodel::systems().values() {
+            t.row(&[
+                p.name.clone(),
+                p.cpu_name.clone(),
+                p.gpu_name.clone(),
+                p.gpu_architecture.clone(),
+                format!("{:.1}", p.gpu_tflops),
+                format!("{:.0}", p.gpu_mem_bw_gbs),
+                format!("{:.2}", p.cost_per_hr),
+            ]);
+        }
+        println!("{}", t.render());
+        return 0;
+    }
+    let mut t = mlmodelscope::benchkit::Table::new(
+        "built-in model zoo (Table 2 metadata)",
+        &["ID", "Name", "Top-1 Acc", "Graph (MB)", "Input", "Family", "HLO artifact"],
+    );
+    for m in mlmodelscope::zoo::all() {
+        t.row(&[
+            m.id.to_string(),
+            m.name.clone(),
+            format!("{:.2}", m.top1_accuracy),
+            format!("{}", m.graph_size_mb),
+            format!("{0}x{0}", m.resolution),
+            m.family.to_string(),
+            m.hlo_family().unwrap_or("-").to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let model = args.opt_or("model", "BVLC_AlexNet").to_string();
+    let full: Vec<String> = vec!["--trace-level".into(), "full".into()];
+    let server = build_platform(&Args::parse(&full));
+    let mut job = EvalJob::new(&model, Scenario::Online { count: 1 });
+    job.trace_level = TraceLevel::Full;
+    if let Some(sys) = args.opt("system") {
+        job.requirements = SystemRequirements::on_system(sys);
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+    } else {
+        job.requirements = SystemRequirements::gpu();
+    }
+    match server.evaluate(&job) {
+        Ok(records) => {
+            let trace_id = records[0].trace_id.unwrap_or(0);
+            let tl = server.traces.timeline(trace_id);
+            println!("{}", tl.render());
+            println!(
+                "{}",
+                mlmodelscope::analysis::layer_kernel_table(&tl, args.usize_or("top", 5)).render()
+            );
+            let (total, fast) = mlmodelscope::analysis::layer_population(&tl);
+            println!("{total} layers, {fast} under 1 ms");
+            0
+        }
+        Err(e) => {
+            eprintln!("trace failed: {e}");
+            1
+        }
+    }
+}
+
+/// The REST client (§4.2): the command-line counterpart of the web UI,
+/// driving a *remote* mlms server. Subactions (first positional):
+/// `models`, `agents`, `systems`, `evaluate`, `analyze`, `report`, `trace`.
+fn cmd_client(args: &Args) -> i32 {
+    use mlmodelscope::httpd::http_request;
+    use mlmodelscope::util::json::Json;
+    let addr: std::net::SocketAddr = match args.opt_or("server", "127.0.0.1:8080").parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad --server address: {e}");
+            return 2;
+        }
+    };
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("models");
+    let result = match action {
+        "models" => http_request(addr, "GET", "/api/models", None),
+        "agents" => http_request(addr, "GET", "/api/agents", None),
+        "systems" => http_request(addr, "GET", "/api/systems", None),
+        "analyze" => http_request(
+            addr,
+            "GET",
+            &format!("/api/analyze?models={}", args.opt_or("models", "")),
+            None,
+        ),
+        "report" => http_request(
+            addr,
+            "GET",
+            &format!("/api/report?models={}", args.opt_or("models", "")),
+            None,
+        ),
+        "trace" => http_request(
+            addr,
+            "GET",
+            &format!("/api/trace/{}", args.opt_or("id", "0")),
+            None,
+        ),
+        "evaluate" => {
+            let model = match args.require("model") {
+                Ok(m) => m.to_string(),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let payload = Json::obj(vec![
+                ("model", Json::str(model)),
+                ("scenario", parse_scenario(args).to_json()),
+                ("trace_level", Json::str(args.opt_or("trace-level", "model"))),
+                ("all_agents", Json::Bool(args.flag("all-agents"))),
+            ]);
+            http_request(addr, "POST", "/api/evaluate", Some(&payload))
+        }
+        other => {
+            eprintln!("unknown client action {other:?} (models|agents|systems|evaluate|analyze|report|trace)");
+            return 2;
+        }
+    };
+    match result {
+        Ok((status, body)) => {
+            println!("{}", body.to_pretty());
+            if (200..300).contains(&status) {
+                0
+            } else {
+                eprintln!("server returned HTTP {status}");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("request failed: {e} (is `mlms server` running at {addr}?)");
+            1
+        }
+    }
+}

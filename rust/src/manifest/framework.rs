@@ -1,0 +1,136 @@
+//! The framework manifest (paper §4.1.2, Listing 2).
+
+use super::{opt_str, req_str, ManifestError};
+use crate::util::json::Json;
+use crate::util::semver::Version;
+use crate::util::yamlmini;
+use std::collections::BTreeMap;
+
+/// A parsed framework manifest: the software stack an evaluation runs on.
+///
+/// `containers` maps architecture (`amd64`, `ppc64le`, ...) → device class
+/// (`cpu`/`gpu`) → container image. In the paper these are Docker images
+/// guaranteeing SW-stack isolation; here they are recorded verbatim and
+/// folded into the agent's software-stack fingerprint used during agent
+/// resolution (container launch itself is environment-gated — see
+/// DESIGN.md substitutions).
+#[derive(Debug, Clone)]
+pub struct FrameworkManifest {
+    pub name: String,
+    pub version: Version,
+    pub description: String,
+    pub containers: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl FrameworkManifest {
+    pub fn from_yaml(text: &str) -> Result<FrameworkManifest, ManifestError> {
+        let doc = yamlmini::parse(text)?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<FrameworkManifest, ManifestError> {
+        let name = req_str(doc, "name")?;
+        let version: Version = req_str(doc, "version")?
+            .parse()
+            .map_err(|e: crate::util::semver::SemverError| ManifestError::field("version", e.to_string()))?;
+        let mut containers = BTreeMap::new();
+        if let Some(obj) = doc.get("containers").and_then(|v| v.as_obj()) {
+            for (arch, devices) in obj {
+                let mut per_device = BTreeMap::new();
+                if let Some(dmap) = devices.as_obj() {
+                    for (device, image) in dmap {
+                        let image = image.as_str().ok_or_else(|| {
+                            ManifestError::field(
+                                &format!("containers.{arch}.{device}"),
+                                "container image must be a string",
+                            )
+                        })?;
+                        per_device.insert(device.clone(), image.to_string());
+                    }
+                }
+                containers.insert(arch.clone(), per_device);
+            }
+        }
+        Ok(FrameworkManifest {
+            name,
+            version,
+            description: opt_str(doc, "description").unwrap_or_default(),
+            containers,
+        })
+    }
+
+    /// Stable registry key: `name:version` (F5).
+    pub fn key(&self) -> String {
+        format!("{}:{}", self.name, self.version)
+    }
+
+    /// Container image for an (architecture, device-class) pair.
+    pub fn container(&self, arch: &str, device: &str) -> Option<&str> {
+        self.containers.get(arch)?.get(device).map(|s| s.as_str())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let containers = Json::Obj(
+            self.containers
+                .iter()
+                .map(|(arch, devices)| {
+                    (
+                        arch.clone(),
+                        Json::Obj(
+                            devices
+                                .iter()
+                                .map(|(d, img)| (d.clone(), Json::str(img)))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("version", Json::str(self.version.to_string())),
+            ("description", Json::str(&self.description)),
+            ("containers", containers),
+        ])
+    }
+}
+
+/// The paper's Listing 2 framework manifest, kept as test vector + example.
+pub const LISTING2_EXAMPLE: &str = r#"
+name: TensorFlow # framework name
+version: 1.15.0 # semantic version of the framework
+description: TensorFlow framework manifest
+containers: # containers
+  amd64:
+    cpu: carml/tensorflow:1-15-0_amd64-cpu
+    gpu: carml/tensorflow:1-15-0_amd64-gpu
+  ppc64le:
+    cpu: carml/tensorflow:1-15-0_ppc64le-cpu
+    gpu: carml/tensorflow:1-15-0_ppc64le-gpu
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_listing2() {
+        let f = FrameworkManifest::from_yaml(LISTING2_EXAMPLE).unwrap();
+        assert_eq!(f.key(), "TensorFlow:1.15.0");
+        assert_eq!(f.containers.len(), 2);
+        assert_eq!(f.container("amd64", "cpu"), Some("carml/tensorflow:1-15-0_amd64-cpu"));
+        assert_eq!(f.container("riscv", "cpu"), None);
+    }
+
+    #[test]
+    fn no_containers_ok() {
+        // FPGA-style agents don't use containers (§4.1.2).
+        let f = FrameworkManifest::from_yaml("name: FpgaRuntime\nversion: 0.1.0\n").unwrap();
+        assert!(f.containers.is_empty());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        assert!(FrameworkManifest::from_yaml("name: X\nversion: not-a-version\n").is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Benchmarking specification: model and framework manifests (§4.1).
+//!
+//! The paper's central reproducibility mechanism (F1/F2) is that *all*
+//! aspects of an evaluation are specified declaratively: the model manifest
+//! (Listing 1: assets, pre/post-processing, framework constraints,
+//! metadata) and the framework manifest (Listing 2: software stack +
+//! containers). This module defines those data types and their YAML
+//! parsing/validation, plus the user's system requirements and the JSON
+//! round-trip used when manifests travel over the wire or into the
+//! evaluation database.
+
+mod framework;
+mod model;
+mod system;
+
+pub use framework::FrameworkManifest;
+pub use model::{
+    ModelAssets, ModelInput, ModelManifest, ModelOutput, PostprocessStep, PreprocessStep,
+};
+pub use system::{Accelerator, SystemRequirements};
+
+use crate::util::json::Json;
+
+/// The paper's Listing-1 example manifest (test vector + documentation).
+pub fn model_listing1() -> &'static str {
+    model::LISTING1_EXAMPLE
+}
+
+/// The paper's Listing-2 example framework manifest.
+pub fn framework_listing2() -> &'static str {
+    framework::LISTING2_EXAMPLE
+}
+
+/// Shared manifest error type.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("yaml: {0}")]
+    Yaml(#[from] crate::util::yamlmini::YamlError),
+    #[error("semver: {0}")]
+    Semver(#[from] crate::util::semver::SemverError),
+    #[error("manifest field {field:?}: {msg}")]
+    Field { field: String, msg: String },
+}
+
+impl ManifestError {
+    pub fn field(field: &str, msg: impl Into<String>) -> Self {
+        ManifestError::Field { field: field.to_string(), msg: msg.into() }
+    }
+}
+
+pub(crate) fn req_str(doc: &Json, field: &str) -> Result<String, ManifestError> {
+    doc.get_path(field)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| ManifestError::field(field, "missing or not a string"))
+}
+
+pub(crate) fn opt_str(doc: &Json, field: &str) -> Option<String> {
+    doc.get_path(field).and_then(|v| v.as_str()).map(|s| s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full Listing-1 manifest parses end-to-end.
+    #[test]
+    fn listing1_roundtrip() {
+        let m = ModelManifest::from_yaml(model::LISTING1_EXAMPLE).unwrap();
+        assert_eq!(m.name, "MLPerf_ResNet50_v1.5");
+        assert_eq!(m.version.to_string(), "1.0.0");
+        assert_eq!(m.framework_name, "TensorFlow");
+        assert!(m.framework_constraint.matches_str("1.15.0"));
+        assert!(!m.framework_constraint.matches_str("2.0.0"));
+        assert_eq!(m.inputs.len(), 1);
+        assert_eq!(m.inputs[0].steps.len(), 3);
+        assert_eq!(m.outputs.len(), 1);
+        // JSON round-trip preserves identity.
+        let j = m.to_json();
+        let m2 = ModelManifest::from_json(&j).unwrap();
+        assert_eq!(m2.name, m.name);
+        assert_eq!(m2.inputs[0].steps.len(), 3);
+    }
+
+    #[test]
+    fn listing2_roundtrip() {
+        let f = FrameworkManifest::from_yaml(framework::LISTING2_EXAMPLE).unwrap();
+        assert_eq!(f.name, "TensorFlow");
+        assert_eq!(f.version.to_string(), "1.15.0");
+        assert_eq!(
+            f.container("amd64", "gpu"),
+            Some("carml/tensorflow:1-15-0_amd64-gpu")
+        );
+        let j = f.to_json();
+        let f2 = FrameworkManifest::from_json(&j).unwrap();
+        assert_eq!(f2.container("ppc64le", "cpu"), f.container("ppc64le", "cpu"));
+    }
+}

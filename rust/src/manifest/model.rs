@@ -1,0 +1,553 @@
+//! The model manifest (paper §4.1.1, Listing 1).
+
+use super::{opt_str, req_str, ManifestError};
+use crate::util::json::Json;
+use crate::util::semver::{Constraint, Version};
+use crate::util::yamlmini;
+
+/// A parsed, validated model manifest.
+///
+/// Field-for-field this mirrors Listing 1: identity + semantic version,
+/// framework constraint, typed inputs with pre-processing pipelines, typed
+/// outputs with post-processing pipelines, optional custom processing code,
+/// model assets with checksum, and free-form attributes.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub version: Version,
+    pub description: String,
+    pub framework_name: String,
+    pub framework_constraint: Constraint,
+    pub inputs: Vec<ModelInput>,
+    pub outputs: Vec<ModelOutput>,
+    /// Custom pre-processing code (Listing 1 line 29). In the paper this is
+    /// Python run in a sub-interpreter; here the built-in step pipeline is
+    /// the supported path and custom code is carried as opaque text for
+    /// forward compatibility (mutually exclusive with `inputs[].steps`).
+    pub preprocess_code: Option<String>,
+    pub postprocess_code: Option<String>,
+    pub assets: ModelAssets,
+    /// `attributes:` metadata (training dataset, published accuracy, ...).
+    pub attributes: Json,
+}
+
+/// One input modality + its pre-processing pipeline.
+#[derive(Debug, Clone)]
+pub struct ModelInput {
+    pub ty: String,
+    pub layer_name: String,
+    pub element_type: String,
+    pub steps: Vec<PreprocessStep>,
+}
+
+/// One output modality + its post-processing pipeline.
+#[derive(Debug, Clone)]
+pub struct ModelOutput {
+    pub ty: String,
+    pub layer_name: String,
+    pub element_type: String,
+    pub steps: Vec<PostprocessStep>,
+}
+
+/// Built-in pre-processing pipeline operators (§4.1.1 "Built-in Pre- and
+/// Post-Processing"). Executed in manifest order by the pipeline executor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PreprocessStep {
+    Decode { data_layout: String, color_mode: String },
+    Resize { dimensions: [usize; 3], method: String, keep_aspect_ratio: bool },
+    Normalize { mean: [f64; 3], rescale: f64 },
+    CenterCrop { height: usize, width: usize },
+    CastTo { element_type: String },
+}
+
+/// Built-in post-processing operators.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PostprocessStep {
+    /// Sort class probabilities descending; `labels_url` names the synset.
+    Argsort { labels_url: String },
+    TopK { k: usize },
+    Softmax,
+    /// Detection-style intersection-over-union filter.
+    Iou { threshold: f64 },
+}
+
+/// Model asset locations (graph/weights) + integrity checksum.
+#[derive(Debug, Clone, Default)]
+pub struct ModelAssets {
+    pub base_url: String,
+    pub graph_path: String,
+    /// Omitted for frameworks that deploy a single file (§4.1.1).
+    pub weights_path: Option<String>,
+    pub checksum: Option<String>,
+}
+
+impl ModelManifest {
+    pub fn from_yaml(text: &str) -> Result<ModelManifest, ManifestError> {
+        let doc = yamlmini::parse(text)?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ModelManifest, ManifestError> {
+        let name = req_str(doc, "name")?;
+        let version: Version = req_str(doc, "version")?
+            .parse()
+            .map_err(|e: crate::util::semver::SemverError| ManifestError::field("version", e.to_string()))?;
+        let framework_name = req_str(doc, "framework.name")?;
+        let framework_constraint: Constraint = opt_str(doc, "framework.version")
+            .unwrap_or_default()
+            .parse()
+            .map_err(|e: crate::util::semver::SemverError| {
+                ManifestError::field("framework.version", e.to_string())
+            })?;
+
+        let mut inputs = Vec::new();
+        if let Some(arr) = doc.get("inputs").and_then(|v| v.as_arr()) {
+            for (i, inp) in arr.iter().enumerate() {
+                inputs.push(parse_input(inp, i)?);
+            }
+        }
+        let mut outputs = Vec::new();
+        if let Some(arr) = doc.get("outputs").and_then(|v| v.as_arr()) {
+            for (i, out) in arr.iter().enumerate() {
+                outputs.push(parse_output(out, i)?);
+            }
+        }
+        if inputs.is_empty() {
+            return Err(ManifestError::field("inputs", "at least one input required"));
+        }
+        if outputs.is_empty() {
+            return Err(ManifestError::field("outputs", "at least one output required"));
+        }
+
+        let preprocess_code = opt_str(doc, "preprocess");
+        let postprocess_code = opt_str(doc, "postprocess");
+        // §4.1.1: built-in steps and custom functions are mutually exclusive.
+        if preprocess_code.is_some() && inputs.iter().any(|i| !i.steps.is_empty()) {
+            return Err(ManifestError::field(
+                "preprocess",
+                "custom preprocess code and built-in steps are mutually exclusive",
+            ));
+        }
+
+        let assets = ModelAssets {
+            base_url: opt_str(doc, "model.base_url").unwrap_or_default(),
+            graph_path: req_str(doc, "model.graph_path")?,
+            weights_path: opt_str(doc, "model.weights_path"),
+            checksum: opt_str(doc, "model.checksum"),
+        };
+
+        let attributes = doc.get("attributes").cloned().unwrap_or(Json::Null);
+
+        Ok(ModelManifest {
+            name,
+            version,
+            description: opt_str(doc, "description").unwrap_or_default(),
+            framework_name,
+            framework_constraint,
+            inputs,
+            outputs,
+            preprocess_code,
+            postprocess_code,
+            assets,
+            attributes,
+        })
+    }
+
+    /// Stable registry key: `name:version` (F5 artifact versioning).
+    pub fn key(&self) -> String {
+        format!("{}:{}", self.name, self.version)
+    }
+
+    /// Published accuracy if carried in `attributes` (Table 2 column).
+    pub fn accuracy(&self) -> Option<f64> {
+        self.attributes.get("top1_accuracy").and_then(|v| v.as_f64())
+    }
+
+    /// Graph size in MB if carried in `attributes` (Table 2 column).
+    pub fn graph_size_mb(&self) -> Option<f64> {
+        self.attributes.get("graph_size_mb").and_then(|v| v.as_f64())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let input_json = |inp: &ModelInput| {
+            Json::obj(vec![
+                ("type", Json::str(&inp.ty)),
+                ("layer_name", Json::str(&inp.layer_name)),
+                ("element_type", Json::str(&inp.element_type)),
+                ("steps", Json::arr(inp.steps.iter().map(pre_step_json).collect())),
+            ])
+        };
+        let output_json = |out: &ModelOutput| {
+            Json::obj(vec![
+                ("type", Json::str(&out.ty)),
+                ("layer_name", Json::str(&out.layer_name)),
+                ("element_type", Json::str(&out.element_type)),
+                ("steps", Json::arr(out.steps.iter().map(post_step_json).collect())),
+            ])
+        };
+        let mut model = vec![
+            ("base_url", Json::str(&self.assets.base_url)),
+            ("graph_path", Json::str(&self.assets.graph_path)),
+        ];
+        if let Some(w) = &self.assets.weights_path {
+            model.push(("weights_path", Json::str(w)));
+        }
+        if let Some(c) = &self.assets.checksum {
+            model.push(("checksum", Json::str(c)));
+        }
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("version", Json::str(self.version.to_string())),
+            ("description", Json::str(&self.description)),
+            (
+                "framework",
+                Json::obj(vec![
+                    ("name", Json::str(&self.framework_name)),
+                    ("version", Json::str(self.framework_constraint.source())),
+                ]),
+            ),
+            ("inputs", Json::arr(self.inputs.iter().map(input_json).collect())),
+            ("outputs", Json::arr(self.outputs.iter().map(output_json).collect())),
+            ("model", Json::obj(model)),
+            ("attributes", self.attributes.clone()),
+        ];
+        if let Some(p) = &self.preprocess_code {
+            fields.push(("preprocess", Json::str(p)));
+        }
+        if let Some(p) = &self.postprocess_code {
+            fields.push(("postprocess", Json::str(p)));
+        }
+        Json::obj(fields)
+    }
+}
+
+fn parse_input(inp: &Json, idx: usize) -> Result<ModelInput, ManifestError> {
+    let field = format!("inputs[{idx}]");
+    let ty = inp
+        .get("type")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| ManifestError::field(&field, "missing type"))?;
+    let mut steps = Vec::new();
+    if let Some(arr) = inp.get("steps").and_then(|v| v.as_arr()) {
+        for s in arr {
+            steps.push(parse_pre_step(s, &field)?);
+        }
+    }
+    Ok(ModelInput {
+        ty: ty.to_string(),
+        layer_name: inp.str_or("layer_name", "input").to_string(),
+        element_type: inp.str_or("element_type", "float32").to_string(),
+        steps,
+    })
+}
+
+fn parse_output(out: &Json, idx: usize) -> Result<ModelOutput, ManifestError> {
+    let field = format!("outputs[{idx}]");
+    let ty = out
+        .get("type")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| ManifestError::field(&field, "missing type"))?;
+    let mut steps = Vec::new();
+    if let Some(arr) = out.get("steps").and_then(|v| v.as_arr()) {
+        for s in arr {
+            steps.push(parse_post_step(s, &field)?);
+        }
+    }
+    Ok(ModelOutput {
+        ty: ty.to_string(),
+        layer_name: out.str_or("layer_name", "output").to_string(),
+        element_type: out.str_or("element_type", "float32").to_string(),
+        steps,
+    })
+}
+
+fn triple_f64(v: &Json) -> Option<[f64; 3]> {
+    let a = v.as_arr()?;
+    if a.len() != 3 {
+        return None;
+    }
+    Some([a[0].as_f64()?, a[1].as_f64()?, a[2].as_f64()?])
+}
+
+fn parse_pre_step(step: &Json, ctx: &str) -> Result<PreprocessStep, ManifestError> {
+    let obj = step
+        .as_obj()
+        .filter(|m| m.len() == 1)
+        .ok_or_else(|| ManifestError::field(ctx, "step must be a single-key mapping"))?;
+    let (op, body) = obj.iter().next().unwrap();
+    match op.as_str() {
+        "decode" => Ok(PreprocessStep::Decode {
+            data_layout: body.str_or("data_layout", "NHWC").to_string(),
+            color_mode: body.str_or("color_mode", "RGB").to_string(),
+        }),
+        "resize" => {
+            let dims = body
+                .get("dimensions")
+                .and_then(triple_f64)
+                .ok_or_else(|| ManifestError::field(ctx, "resize.dimensions must be [c,h,w]"))?;
+            Ok(PreprocessStep::Resize {
+                dimensions: [dims[0] as usize, dims[1] as usize, dims[2] as usize],
+                method: body.str_or("method", "bilinear").to_string(),
+                keep_aspect_ratio: body
+                    .get("keep_aspect_ratio")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+            })
+        }
+        "normalize" => {
+            let mean = body
+                .get("mean")
+                .and_then(triple_f64)
+                .ok_or_else(|| ManifestError::field(ctx, "normalize.mean must be [r,g,b]"))?;
+            Ok(PreprocessStep::Normalize { mean, rescale: body.f64_or("rescale", 1.0) })
+        }
+        "center_crop" => Ok(PreprocessStep::CenterCrop {
+            height: body.f64_or("height", 224.0) as usize,
+            width: body.f64_or("width", 224.0) as usize,
+        }),
+        "cast" => Ok(PreprocessStep::CastTo {
+            element_type: body.str_or("element_type", "float32").to_string(),
+        }),
+        other => Err(ManifestError::field(ctx, format!("unknown preprocess op {other:?}"))),
+    }
+}
+
+fn parse_post_step(step: &Json, ctx: &str) -> Result<PostprocessStep, ManifestError> {
+    let obj = step
+        .as_obj()
+        .filter(|m| m.len() == 1)
+        .ok_or_else(|| ManifestError::field(ctx, "step must be a single-key mapping"))?;
+    let (op, body) = obj.iter().next().unwrap();
+    match op.as_str() {
+        "argsort" => Ok(PostprocessStep::Argsort {
+            labels_url: body.str_or("labels_url", "").to_string(),
+        }),
+        "top_k" => Ok(PostprocessStep::TopK { k: body.f64_or("k", 5.0) as usize }),
+        "softmax" => Ok(PostprocessStep::Softmax),
+        "iou" => Ok(PostprocessStep::Iou { threshold: body.f64_or("threshold", 0.5) }),
+        other => Err(ManifestError::field(ctx, format!("unknown postprocess op {other:?}"))),
+    }
+}
+
+fn pre_step_json(s: &PreprocessStep) -> Json {
+    match s {
+        PreprocessStep::Decode { data_layout, color_mode } => Json::obj(vec![(
+            "decode",
+            Json::obj(vec![
+                ("data_layout", Json::str(data_layout)),
+                ("color_mode", Json::str(color_mode)),
+            ]),
+        )]),
+        PreprocessStep::Resize { dimensions, method, keep_aspect_ratio } => Json::obj(vec![(
+            "resize",
+            Json::obj(vec![
+                (
+                    "dimensions",
+                    Json::arr(dimensions.iter().map(|d| Json::num(*d as f64)).collect()),
+                ),
+                ("method", Json::str(method)),
+                ("keep_aspect_ratio", Json::Bool(*keep_aspect_ratio)),
+            ]),
+        )]),
+        PreprocessStep::Normalize { mean, rescale } => Json::obj(vec![(
+            "normalize",
+            Json::obj(vec![
+                ("mean", Json::arr(mean.iter().map(|m| Json::num(*m)).collect())),
+                ("rescale", Json::num(*rescale)),
+            ]),
+        )]),
+        PreprocessStep::CenterCrop { height, width } => Json::obj(vec![(
+            "center_crop",
+            Json::obj(vec![
+                ("height", Json::num(*height as f64)),
+                ("width", Json::num(*width as f64)),
+            ]),
+        )]),
+        PreprocessStep::CastTo { element_type } => Json::obj(vec![(
+            "cast",
+            Json::obj(vec![("element_type", Json::str(element_type))]),
+        )]),
+    }
+}
+
+fn post_step_json(s: &PostprocessStep) -> Json {
+    match s {
+        PostprocessStep::Argsort { labels_url } => Json::obj(vec![(
+            "argsort",
+            Json::obj(vec![("labels_url", Json::str(labels_url))]),
+        )]),
+        PostprocessStep::TopK { k } => {
+            Json::obj(vec![("top_k", Json::obj(vec![("k", Json::num(*k as f64))]))])
+        }
+        PostprocessStep::Softmax => Json::obj(vec![("softmax", Json::obj(vec![]))]),
+        PostprocessStep::Iou { threshold } => {
+            Json::obj(vec![("iou", Json::obj(vec![("threshold", Json::num(*threshold))]))])
+        }
+    }
+}
+
+/// The paper's Listing 1 manifest, kept verbatim-equivalent as a test
+/// vector and documentation example.
+pub const LISTING1_EXAMPLE: &str = r#"
+name: MLPerf_ResNet50_v1.5 # model name
+version: 1.0.0 # semantic version of the model
+description: MLPerf ResNet50 v1.5 image classification model
+framework: # framework information
+  name: TensorFlow
+  version: '>=1.12.0 <2.0' # framework ver constraint
+inputs: # model inputs
+  - type: image # first input modality
+    layer_name: 'input_tensor'
+    element_type: float32
+    steps: # pre-processing steps
+      - decode:
+          data_layout: NHWC
+          color_mode: RGB
+      - resize:
+          dimensions: [3, 224, 224]
+          method: bilinear
+          keep_aspect_ratio: true
+      - normalize:
+          mean: [123.68, 116.78, 103.94]
+          rescale: 1.0
+outputs: # model outputs
+  - type: probability # first output modality
+    layer_name: prob
+    element_type: float32
+    steps: # post-processing steps
+      - argsort:
+          labels_url: https://mlmodelscope.example/synset.txt
+model: # model sources
+  base_url: https://zenodo.org/record/2535873/files/
+  graph_path: resnet50_v1.pb
+  checksum: 7b94a2da05d23a46bc08886
+attributes: # extra model attributes
+  training_dataset: ImageNet
+  top1_accuracy: 76.46
+  graph_size_mb: 103
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_listing1() {
+        let m = ModelManifest::from_yaml(LISTING1_EXAMPLE).unwrap();
+        assert_eq!(m.inputs[0].layer_name, "input_tensor");
+        assert_eq!(
+            m.inputs[0].steps[1],
+            PreprocessStep::Resize {
+                dimensions: [3, 224, 224],
+                method: "bilinear".into(),
+                keep_aspect_ratio: true
+            }
+        );
+        assert_eq!(m.assets.checksum.as_deref(), Some("7b94a2da05d23a46bc08886"));
+        assert_eq!(m.accuracy(), Some(76.46));
+        assert_eq!(m.graph_size_mb(), Some(103.0));
+        assert_eq!(m.key(), "MLPerf_ResNet50_v1.5:1.0.0");
+    }
+
+    #[test]
+    fn missing_required_fields() {
+        assert!(ModelManifest::from_yaml("name: x\n").is_err());
+        let no_inputs = r#"
+name: x
+version: 1.0.0
+framework:
+  name: TF
+outputs:
+  - type: probability
+model:
+  graph_path: g.pb
+"#;
+        let err = ModelManifest::from_yaml(no_inputs).unwrap_err().to_string();
+        assert!(err.contains("inputs"), "{err}");
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let y = r#"
+name: x
+version: 1.0.0
+framework:
+  name: TF
+inputs:
+  - type: image
+    steps:
+      - frobnicate:
+          a: 1
+outputs:
+  - type: probability
+model:
+  graph_path: g.pb
+"#;
+        let err = ModelManifest::from_yaml(y).unwrap_err().to_string();
+        assert!(err.contains("frobnicate"), "{err}");
+    }
+
+    #[test]
+    fn custom_code_exclusive_with_steps() {
+        let y = r#"
+name: x
+version: 1.0.0
+framework:
+  name: TF
+preprocess: |
+  def fun(env, data):
+      return data
+inputs:
+  - type: image
+    steps:
+      - decode:
+          data_layout: NHWC
+outputs:
+  - type: probability
+model:
+  graph_path: g.pb
+"#;
+        let err = ModelManifest::from_yaml(y).unwrap_err().to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn custom_code_alone_ok() {
+        let y = r#"
+name: x
+version: 1.0.0
+framework:
+  name: TF
+preprocess: |
+  def fun(env, data):
+      return data
+inputs:
+  - type: image
+outputs:
+  - type: probability
+model:
+  graph_path: g.pb
+"#;
+        let m = ModelManifest::from_yaml(y).unwrap();
+        assert!(m.preprocess_code.unwrap().contains("def fun"));
+    }
+
+    #[test]
+    fn no_framework_constraint_means_any() {
+        let y = r#"
+name: onnx_model
+version: 1.0.0
+framework:
+  name: ONNX
+inputs:
+  - type: image
+outputs:
+  - type: probability
+model:
+  graph_path: m.onnx
+"#;
+        let m = ModelManifest::from_yaml(y).unwrap();
+        assert!(m.framework_constraint.is_any());
+        assert!(m.framework_constraint.matches_str("0.1.0"));
+    }
+}

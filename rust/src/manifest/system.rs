@@ -1,0 +1,157 @@
+//! User-specified system requirements (§4.1, §4.7).
+//!
+//! "During the evaluation, users can specify hardware constraints such as:
+//! whether to run on CPU/GPU/FPGA, type of architecture, type of
+//! interconnect, and minimum memory requirements — which MLModelScope uses
+//! for agent resolution."
+
+use crate::util::json::Json;
+
+/// Accelerator class requested for the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Accelerator {
+    Cpu,
+    Gpu,
+    Fpga,
+    /// Don't care — any device class the agent offers.
+    Any,
+}
+
+impl Accelerator {
+    pub fn parse(s: &str) -> Accelerator {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Accelerator::Cpu,
+            "gpu" => Accelerator::Gpu,
+            "fpga" => Accelerator::Fpga,
+            _ => Accelerator::Any,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Accelerator::Cpu => "cpu",
+            Accelerator::Gpu => "gpu",
+            Accelerator::Fpga => "fpga",
+            Accelerator::Any => "any",
+        }
+    }
+}
+
+/// Hardware constraints the server matches against registered agents
+/// during agent resolution (§4.3 step 3).
+#[derive(Debug, Clone)]
+pub struct SystemRequirements {
+    pub accelerator: Accelerator,
+    /// CPU architecture constraint, e.g. `x86_64`, `ppc64le`, `aarch64`.
+    pub architecture: Option<String>,
+    /// Interconnect requirement, e.g. `nvlink`, `pcie3`.
+    pub interconnect: Option<String>,
+    /// Minimum host memory in GB.
+    pub min_memory_gb: Option<f64>,
+    /// Minimum accelerator memory in GB.
+    pub min_device_memory_gb: Option<f64>,
+    /// Exact system name pin (e.g. `aws_p3`), used by benches to target one
+    /// of the Table-1 systems deterministically.
+    pub system_name: Option<String>,
+}
+
+impl Default for SystemRequirements {
+    fn default() -> Self {
+        SystemRequirements {
+            accelerator: Accelerator::Any,
+            architecture: None,
+            interconnect: None,
+            min_memory_gb: None,
+            min_device_memory_gb: None,
+            system_name: None,
+        }
+    }
+}
+
+impl SystemRequirements {
+    pub fn any() -> Self {
+        Self::default()
+    }
+
+    pub fn on_system(name: &str) -> Self {
+        SystemRequirements { system_name: Some(name.to_string()), ..Self::default() }
+    }
+
+    pub fn gpu() -> Self {
+        SystemRequirements { accelerator: Accelerator::Gpu, ..Self::default() }
+    }
+
+    pub fn cpu() -> Self {
+        SystemRequirements { accelerator: Accelerator::Cpu, ..Self::default() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("accelerator", Json::str(self.accelerator.as_str()))];
+        if let Some(a) = &self.architecture {
+            fields.push(("architecture", Json::str(a)));
+        }
+        if let Some(i) = &self.interconnect {
+            fields.push(("interconnect", Json::str(i)));
+        }
+        if let Some(m) = self.min_memory_gb {
+            fields.push(("min_memory_gb", Json::num(m)));
+        }
+        if let Some(m) = self.min_device_memory_gb {
+            fields.push(("min_device_memory_gb", Json::num(m)));
+        }
+        if let Some(s) = &self.system_name {
+            fields.push(("system_name", Json::str(s)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(doc: &Json) -> SystemRequirements {
+        SystemRequirements {
+            accelerator: Accelerator::parse(doc.str_or("accelerator", "any")),
+            architecture: doc.get("architecture").and_then(|v| v.as_str()).map(String::from),
+            interconnect: doc.get("interconnect").and_then(|v| v.as_str()).map(String::from),
+            min_memory_gb: doc.get("min_memory_gb").and_then(|v| v.as_f64()),
+            min_device_memory_gb: doc.get("min_device_memory_gb").and_then(|v| v.as_f64()),
+            system_name: doc.get("system_name").and_then(|v| v.as_str()).map(String::from),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accelerator_parse_roundtrip() {
+        for a in [Accelerator::Cpu, Accelerator::Gpu, Accelerator::Fpga, Accelerator::Any] {
+            assert_eq!(Accelerator::parse(a.as_str()), a);
+        }
+        assert_eq!(Accelerator::parse("GPU"), Accelerator::Gpu);
+        assert_eq!(Accelerator::parse("tpu"), Accelerator::Any);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let req = SystemRequirements {
+            accelerator: Accelerator::Gpu,
+            architecture: Some("ppc64le".into()),
+            interconnect: Some("nvlink".into()),
+            min_memory_gb: Some(32.0),
+            min_device_memory_gb: Some(16.0),
+            system_name: Some("ibm_p8".into()),
+        };
+        let j = req.to_json();
+        let back = SystemRequirements::from_json(&j);
+        assert_eq!(back.accelerator, Accelerator::Gpu);
+        assert_eq!(back.architecture.as_deref(), Some("ppc64le"));
+        assert_eq!(back.min_memory_gb, Some(32.0));
+        assert_eq!(back.system_name.as_deref(), Some("ibm_p8"));
+    }
+
+    #[test]
+    fn default_is_unconstrained() {
+        let req = SystemRequirements::any();
+        assert_eq!(req.accelerator, Accelerator::Any);
+        assert!(req.architecture.is_none());
+    }
+}

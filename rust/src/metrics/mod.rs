@@ -1,0 +1,301 @@
+//! Benchmark metric primitives: latency samples, percentiles, trimmed mean,
+//! throughput counters.
+//!
+//! The paper reports *trimmed mean* latency (drop the lowest/highest 20% and
+//! average the rest — Table 2 footnote), 90th-percentile latency, and
+//! maximum throughput. These definitions live here so every layer (agent,
+//! analysis workflow, benches) computes them identically — the paper's F2
+//! "consistent evaluation" applied to the metrics themselves.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A set of latency samples (seconds) with the paper's summary statistics.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySamples {
+    samples: Vec<f64>,
+}
+
+impl LatencySamples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_secs(samples: Vec<f64>) -> Self {
+        LatencySamples { samples }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Paper Table 2 footnote: sort, drop `floor(0.2*n)` from each end, mean
+    /// of the remainder.
+    pub fn trimmed_mean(&self) -> f64 {
+        trimmed_mean(&self.samples, 0.2)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by nearest-rank on the sorted samples; `q` in `[0, 100]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile(&self.samples, q)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// `TrimmedMean(list) = Mean(Sort(list)[⌊0.2·len⌋ : -⌊0.2·len⌋])` — the exact
+/// definition in the paper's footnote 1 (with a configurable fraction).
+pub fn trimmed_mean(samples: &[f64], frac: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut = ((frac * sorted.len() as f64).floor() as usize).min((sorted.len() - 1) / 2);
+    let kept = &sorted[cut..sorted.len() - cut];
+    kept.iter().sum::<f64>() / kept.len() as f64
+}
+
+/// Nearest-rank percentile over unsorted samples; `q` in `[0, 100]`.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// A fixed-boundary histogram for cheap hot-path latency recording (used by
+/// the agent where keeping every raw sample would be a scaling hazard, F4).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds, seconds, ascending; final bucket is +inf.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Exponential buckets from `start` seconds, `factor` growth, `n` buckets.
+    pub fn exponential(start: f64, factor: f64, n: usize) -> Histogram {
+        assert!(start > 0.0 && factor > 1.0 && n > 0);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = start;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Histogram { counts: vec![0; n + 1], bounds, total: 0, sum: 0.0 }
+    }
+
+    /// Default latency histogram: 10µs → ~84s in 32 ×1.6 buckets.
+    pub fn latency_default() -> Histogram {
+        Histogram::exponential(10e-6, 1.6, 32)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let idx = self.bounds.partition_point(|b| *b < secs);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += secs;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Quantile estimate by linear interpolation within the bucket.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { self.bounds[self.bounds.len() - 1] * 2.0 };
+                let frac = (target - seen) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            seen += c;
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Monotonic throughput counter (inputs/sec over a window).
+#[derive(Debug, Default)]
+pub struct Throughput {
+    items: AtomicU64,
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, n: u64) {
+        self.items.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.items.load(Ordering::Relaxed)
+    }
+
+    /// Items/sec given the wall-clock window that produced them.
+    pub fn per_sec(&self, window: Duration) -> f64 {
+        let s = window.as_secs_f64();
+        if s <= 0.0 {
+            return f64::NAN;
+        }
+        self.total() as f64 / s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_mean_matches_paper_definition() {
+        // 10 samples, 20% trim → drop 2 from each end.
+        let xs: Vec<f64> = vec![100.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 0.0];
+        // sorted: 0,1,2,3,4,5,6,7,8,100 → keep 2..8 → mean(2..=7) = 4.5
+        assert!((trimmed_mean(&xs, 0.2) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_small_inputs() {
+        assert_eq!(trimmed_mean(&[5.0], 0.2), 5.0);
+        assert_eq!(trimmed_mean(&[1.0, 3.0], 0.2), 2.0);
+        assert!(trimmed_mean(&[], 0.2).is_nan());
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        let p90 = percentile(&xs, 90.0);
+        assert!((89.0..=91.0).contains(&p90), "p90 {p90}");
+    }
+
+    #[test]
+    fn latency_samples_stats() {
+        let mut l = LatencySamples::new();
+        for ms in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            l.record_secs(ms / 1e3);
+        }
+        assert_eq!(l.len(), 5);
+        assert!((l.mean() - 0.030).abs() < 1e-12);
+        assert!((l.min() - 0.010).abs() < 1e-12);
+        assert!((l.max() - 0.050).abs() < 1e-12);
+        assert!(l.p90() >= l.p50());
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_truth() {
+        let mut h = Histogram::latency_default();
+        let mut l = LatencySamples::new();
+        let mut rng = crate::util::rng::Xorshift::new(11);
+        for _ in 0..10_000 {
+            let v = rng.range_f64(0.001, 0.050);
+            h.record(v);
+            l.record_secs(v);
+        }
+        let hq = h.quantile(0.90);
+        let lq = l.p90();
+        // Bucketed estimate within one bucket factor of the exact value.
+        assert!(hq / lq < 1.7 && lq / hq < 1.7, "hist {hq} exact {lq}");
+        assert_eq!(h.count(), 10_000);
+        assert!((h.mean() - l.mean()).abs() / l.mean() < 0.01);
+    }
+
+    #[test]
+    fn property_quantiles_monotone() {
+        crate::util::rng::forall(21, 50, |rng| {
+            let n = 1 + rng.below(300) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            let l = LatencySamples::from_secs(xs.clone());
+            let (p50, p90, p99) = (l.p50(), l.p90(), l.p99());
+            assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+            let tm = l.trimmed_mean();
+            assert!(tm >= l.min() - 1e-12 && tm <= l.max() + 1e-12);
+        });
+    }
+
+    #[test]
+    fn throughput_counter() {
+        let t = Throughput::new();
+        t.add(500);
+        t.add(500);
+        assert_eq!(t.total(), 1000);
+        assert!((t.per_sec(Duration::from_secs(2)) - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! Output post-processing operators (§2.1, §4.1.1): softmax, argsort,
+//! top-K, IoU — transforming raw model outputs into metric-ready results.
+
+use crate::manifest::PostprocessStep;
+use crate::preprocess::Tensor;
+
+/// One classification result: label index + probability, sorted descending.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub label: usize,
+    pub probability: f32,
+}
+
+/// Numerically-stable softmax over the last axis of a `[N, classes]` tensor.
+pub fn softmax(t: &Tensor) -> Tensor {
+    let classes = *t.shape.last().unwrap_or(&1);
+    let n = t.data.len() / classes.max(1);
+    let mut out = Vec::with_capacity(t.data.len());
+    for i in 0..n {
+        let row = &t.data[i * classes..(i + 1) * classes];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        out.extend(exps.iter().map(|e| e / sum));
+    }
+    Tensor::new(t.shape.clone(), out)
+}
+
+/// Argsort a probability row descending → full ranking.
+pub fn argsort_desc(row: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|a, b| row[*b].partial_cmp(&row[*a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Top-K predictions per batch item of a `[N, classes]` tensor.
+pub fn top_k(t: &Tensor, k: usize) -> Vec<Vec<Prediction>> {
+    let classes = *t.shape.last().unwrap_or(&1);
+    let n = t.data.len() / classes.max(1);
+    (0..n)
+        .map(|i| {
+            let row = &t.data[i * classes..(i + 1) * classes];
+            argsort_desc(row)
+                .into_iter()
+                .take(k)
+                .map(|label| Prediction { label, probability: row[label] })
+                .collect()
+        })
+        .collect()
+}
+
+/// Intersection-over-union of two `[x0, y0, x1, y1]` boxes.
+pub fn iou(a: [f32; 4], b: [f32; 4]) -> f32 {
+    let ix0 = a[0].max(b[0]);
+    let iy0 = a[1].max(b[1]);
+    let ix1 = a[2].min(b[2]);
+    let iy1 = a[3].min(b[3]);
+    let iw = (ix1 - ix0).max(0.0);
+    let ih = (iy1 - iy0).max(0.0);
+    let inter = iw * ih;
+    let area = |r: [f32; 4]| ((r[2] - r[0]).max(0.0)) * ((r[3] - r[1]).max(0.0));
+    let union = area(a) + area(b) - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Execute a manifest's post-processing pipeline on the raw output tensor.
+/// Returns per-item top-5 predictions (after any softmax/argsort steps).
+pub fn run_pipeline(steps: &[PostprocessStep], output: &Tensor) -> Vec<Vec<Prediction>> {
+    let mut current = output.clone();
+    let mut k = 5usize;
+    for step in steps {
+        match step {
+            PostprocessStep::Softmax => current = softmax(&current),
+            PostprocessStep::TopK { k: kk } => k = *kk,
+            PostprocessStep::Argsort { .. } => { /* ranking applied at the end */ }
+            PostprocessStep::Iou { .. } => { /* detection-only; no-op for classification */ }
+        }
+    }
+    top_k(&current, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::random(vec![4, 10], 3);
+        let s = softmax(&t);
+        for i in 0..4 {
+            let sum: f32 = s.data[i * 10..(i + 1) * 10].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sums to {sum}");
+        }
+        assert!(s.data.iter().all(|p| (0.0..=1.0).contains(p)));
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let t = Tensor::new(vec![1, 3], vec![1000.0, 1001.0, 999.0]);
+        let s = softmax(&t);
+        assert!(s.data.iter().all(|p| p.is_finite()));
+        assert!(s.data[1] > s.data[0] && s.data[0] > s.data[2]);
+    }
+
+    #[test]
+    fn argsort_and_topk() {
+        let row = [0.1f32, 0.7, 0.05, 0.15];
+        assert_eq!(argsort_desc(&row), vec![1, 3, 0, 2]);
+        let t = Tensor::new(vec![1, 4], row.to_vec());
+        let preds = top_k(&t, 2);
+        assert_eq!(preds[0].len(), 2);
+        assert_eq!(preds[0][0], Prediction { label: 1, probability: 0.7 });
+        assert_eq!(preds[0][1].label, 3);
+    }
+
+    #[test]
+    fn topk_per_batch_item() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, 1.0, 0.5, 0.9, 0.1, 0.2]);
+        let preds = top_k(&t, 1);
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[0][0].label, 1);
+        assert_eq!(preds[1][0].label, 0);
+    }
+
+    #[test]
+    fn iou_cases() {
+        let a = [0.0, 0.0, 2.0, 2.0];
+        assert!((iou(a, a) - 1.0).abs() < 1e-6);
+        assert_eq!(iou(a, [3.0, 3.0, 4.0, 4.0]), 0.0);
+        let half = iou(a, [1.0, 0.0, 3.0, 2.0]); // overlap 2, union 6
+        assert!((half - 2.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn listing1_postprocess_pipeline() {
+        let m = crate::manifest::ModelManifest::from_yaml(crate::manifest::model_listing1())
+            .unwrap();
+        let logits = Tensor::random(vec![2, 1000], 5);
+        let preds = run_pipeline(&m.outputs[0].steps, &logits);
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[0].len(), 5);
+        // Sorted descending.
+        for w in preds[0].windows(2) {
+            assert!(w[0].probability >= w[1].probability);
+        }
+    }
+
+    #[test]
+    fn property_topk_is_sorted_prefix_of_argsort() {
+        crate::util::rng::forall(51, 40, |rng| {
+            let classes = 2 + rng.below(50) as usize;
+            let t = Tensor::random(vec![1, classes], rng.next_u64());
+            let k = 1 + rng.below(classes as u64) as usize;
+            let top = &top_k(&t, k)[0];
+            let full = argsort_desc(&t.data);
+            assert_eq!(top.len(), k.min(classes));
+            for (p, idx) in top.iter().zip(full.iter()) {
+                assert_eq!(p.label, *idx);
+            }
+        });
+    }
+}

@@ -1,0 +1,158 @@
+//! The XLA/PJRT framework predictor: executes real AOT artifacts.
+
+use super::{InputMode, ModelHandle, PredictError, PredictOptions, Predictor};
+use crate::preprocess::Tensor;
+use crate::runtime::{artifact_path, Runtime};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A [`Predictor`] backed by the PJRT runtime. `model_load` resolves a
+/// model-family artifact for the requested batch size and compiles it;
+/// `predict` executes with zero Python involvement.
+pub struct XlaPredictor {
+    runtime: Arc<Runtime>,
+    handles: Mutex<HashMap<u64, PathBuf>>,
+    next: AtomicU64,
+}
+
+impl XlaPredictor {
+    pub fn new(runtime: Arc<Runtime>) -> XlaPredictor {
+        XlaPredictor { runtime, handles: Mutex::new(HashMap::new()), next: AtomicU64::new(1) }
+    }
+
+    /// Load a model by explicit artifact path (tests / custom models).
+    pub fn load_path(&self, path: PathBuf) -> Result<ModelHandle, PredictError> {
+        self.runtime
+            .load(&path)
+            .map_err(|e| PredictError::Load(e.to_string()))?;
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.handles.lock().unwrap().insert(id, path);
+        Ok(ModelHandle(id))
+    }
+
+    fn path_of(&self, handle: ModelHandle) -> Result<PathBuf, PredictError> {
+        self.handles
+            .lock()
+            .unwrap()
+            .get(&handle.0)
+            .cloned()
+            .ok_or(PredictError::BadHandle)
+    }
+}
+
+impl Predictor for XlaPredictor {
+    fn framework(&self) -> (String, String) {
+        ("XLA-PJRT".to_string(), "0.5.1".to_string())
+    }
+
+    fn model_load(&self, model: &str, batch: usize) -> Result<ModelHandle, PredictError> {
+        // `model` is an artifact family name (e.g. `tiny_resnet`); pick the
+        // artifact compiled for this batch size.
+        let path = artifact_path(model, batch);
+        if !path.exists() {
+            return Err(PredictError::Load(format!(
+                "artifact {} not found (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        self.load_path(path)
+    }
+
+    fn predict(
+        &self,
+        handle: ModelHandle,
+        input: &Tensor,
+        opts: &PredictOptions,
+    ) -> Result<Tensor, PredictError> {
+        let path = self.path_of(handle)?;
+        let marshalled = if opts.input_mode == InputMode::Direct {
+            // Avoid even the clone on the direct path.
+            None
+        } else {
+            Some(opts.input_mode.marshal(input))
+        };
+        let input = marshalled.as_ref().unwrap_or(input);
+        self.runtime
+            .run(&path, input)
+            .map_err(|e| PredictError::Inference(e.to_string()))
+    }
+
+    fn model_unload(&self, handle: ModelHandle) -> Result<(), PredictError> {
+        let path = self
+            .handles
+            .lock()
+            .unwrap()
+            .remove(&handle.0)
+            .ok_or(PredictError::BadHandle)?;
+        self.runtime.unload(&path);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_artifact() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mlms_xp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("identityish.hlo.txt");
+        // f32[1,4] -> (f32[1,4]) : x * 2
+        std::fs::write(
+            &path,
+            r#"
+HloModule jit_double, entry_computation_layout={(f32[1,4]{1,0})->(f32[1,4]{1,0})}
+
+ENTRY main.6 {
+  Arg_0.1 = f32[1,4]{1,0} parameter(0)
+  constant.2 = f32[] constant(2)
+  broadcast.3 = f32[1,4]{1,0} broadcast(constant.2), dimensions={}
+  multiply.4 = f32[1,4]{1,0} multiply(Arg_0.1, broadcast.3)
+  ROOT tuple.5 = (f32[1,4]{1,0}) tuple(multiply.4)
+}
+"#,
+        )
+        .unwrap();
+        path
+    }
+
+    #[test]
+    fn load_predict_unload_lifecycle() {
+        let rt = Runtime::cpu().unwrap();
+        let p = XlaPredictor::new(rt);
+        let h = p.load_path(smoke_artifact()).unwrap();
+        let input = Tensor::new(vec![1, 4], vec![1., 2., 3., 4.]);
+        let out = p.predict(h, &input, &PredictOptions::default()).unwrap();
+        assert_eq!(out.data, vec![2., 4., 6., 8.]);
+        p.model_unload(h).unwrap();
+        assert!(matches!(
+            p.predict(h, &input, &PredictOptions::default()),
+            Err(PredictError::BadHandle)
+        ));
+    }
+
+    #[test]
+    fn all_input_modes_same_result() {
+        let rt = Runtime::cpu().unwrap();
+        let p = XlaPredictor::new(rt);
+        let h = p.load_path(smoke_artifact()).unwrap();
+        let input = Tensor::new(vec![1, 4], vec![0.5, -1.0, 2.5, 0.0]);
+        let mut outs = Vec::new();
+        for mode in [InputMode::Direct, InputMode::NumpyLike, InputMode::Boxed] {
+            let opts = PredictOptions { batch_size: 1, input_mode: mode };
+            outs.push(p.predict(h, &input, &opts).unwrap());
+        }
+        assert_eq!(outs[0].data, outs[1].data);
+        assert_eq!(outs[1].data, outs[2].data);
+    }
+
+    #[test]
+    fn missing_family_reports_make_artifacts() {
+        let rt = Runtime::cpu().unwrap();
+        let p = XlaPredictor::new(rt);
+        let err = p.model_load("no_such_family", 1).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,313 @@
+//! Input pre-processing operators (§2.1, §4.1.1).
+//!
+//! Implements the built-in pipeline steps of the model manifest: image
+//! decode → resize → normalize (+ crop/cast), operating on the same
+//! `[N, H, W, C]` layout convention the paper describes. The "image codec"
+//! here is a minimal PPM-style raw format ([`RawImage`]) — datasets in this
+//! reproduction are synthetic, but the code path (decode bytes → u8 tensor
+//! → resize → f32 normalize) is byte-for-byte the shape of a real
+//! JPEG→tensor pipeline and carries the same data-movement cost profile.
+
+pub mod tensor;
+
+pub use tensor::Tensor;
+
+use crate::manifest::PreprocessStep;
+
+/// A raw interleaved-RGB image (the decoded form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RawImage {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    /// Row-major interleaved `H×W×C` bytes.
+    pub pixels: Vec<u8>,
+}
+
+impl RawImage {
+    pub fn new(height: usize, width: usize, channels: usize) -> RawImage {
+        RawImage { height, width, channels, pixels: vec![0; height * width * channels] }
+    }
+
+    /// Deterministic synthetic image (gradient + seed hash) — the dataset
+    /// substitute; content is irrelevant to benchmarking, size is not.
+    pub fn synthetic(height: usize, width: usize, seed: u64) -> RawImage {
+        let mut img = RawImage::new(height, width, 3);
+        let mut rng = crate::util::rng::Xorshift::new(seed);
+        let bias = rng.below(64) as usize;
+        for y in 0..height {
+            for x in 0..width {
+                let o = (y * width + x) * 3;
+                img.pixels[o] = ((x + bias) % 256) as u8;
+                img.pixels[o + 1] = ((y + bias) % 256) as u8;
+                img.pixels[o + 2] = ((x + y) % 256) as u8;
+            }
+        }
+        img
+    }
+
+    /// Serialize to the wire/disk format: `P7 <h> <w> <c>\n` + raw bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let header = format!("P7 {} {} {}\n", self.height, self.width, self.channels);
+        let mut out = header.into_bytes();
+        out.extend_from_slice(&self.pixels);
+        out
+    }
+
+    /// Decode the raw format; the manifest `decode` step's implementation.
+    pub fn decode(bytes: &[u8]) -> Result<RawImage, PreprocessError> {
+        let nl = bytes
+            .iter()
+            .position(|b| *b == b'\n')
+            .ok_or_else(|| PreprocessError::Decode("missing header".into()))?;
+        let header = std::str::from_utf8(&bytes[..nl])
+            .map_err(|_| PreprocessError::Decode("bad header utf8".into()))?;
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("P7") {
+            return Err(PreprocessError::Decode("bad magic".into()));
+        }
+        let mut dim = || -> Result<usize, PreprocessError> {
+            parts
+                .next()
+                .and_then(|p| p.parse().ok())
+                .ok_or_else(|| PreprocessError::Decode("bad dims".into()))
+        };
+        let (height, width, channels) = (dim()?, dim()?, dim()?);
+        let body = &bytes[nl + 1..];
+        if body.len() != height * width * channels {
+            return Err(PreprocessError::Decode(format!(
+                "size mismatch: {} vs {}",
+                body.len(),
+                height * width * channels
+            )));
+        }
+        Ok(RawImage { height, width, channels, pixels: body.to_vec() })
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PreprocessError {
+    #[error("decode: {0}")]
+    Decode(String),
+    #[error("unsupported step: {0}")]
+    Unsupported(String),
+}
+
+/// Bilinear resize to `(out_h, out_w)`.
+pub fn resize_bilinear(img: &RawImage, out_h: usize, out_w: usize) -> RawImage {
+    let mut out = RawImage::new(out_h, out_w, img.channels);
+    let sy = img.height as f32 / out_h as f32;
+    let sx = img.width as f32 / out_w as f32;
+    for y in 0..out_h {
+        let fy = ((y as f32 + 0.5) * sy - 0.5).max(0.0);
+        let y0 = fy.floor() as usize;
+        let y1 = (y0 + 1).min(img.height - 1);
+        let wy = fy - y0 as f32;
+        for x in 0..out_w {
+            let fx = ((x as f32 + 0.5) * sx - 0.5).max(0.0);
+            let x0 = fx.floor() as usize;
+            let x1 = (x0 + 1).min(img.width - 1);
+            let wx = fx - x0 as f32;
+            for c in 0..img.channels {
+                let p = |yy: usize, xx: usize| {
+                    img.pixels[(yy * img.width + xx) * img.channels + c] as f32
+                };
+                let top = p(y0, x0) * (1.0 - wx) + p(y0, x1) * wx;
+                let bot = p(y1, x0) * (1.0 - wx) + p(y1, x1) * wx;
+                out.pixels[(y * out_w + x) * img.channels + c] =
+                    (top * (1.0 - wy) + bot * wy).round().clamp(0.0, 255.0) as u8;
+            }
+        }
+    }
+    out
+}
+
+/// Nearest-neighbour resize (the cheap path).
+pub fn resize_nearest(img: &RawImage, out_h: usize, out_w: usize) -> RawImage {
+    let mut out = RawImage::new(out_h, out_w, img.channels);
+    for y in 0..out_h {
+        let sy = y * img.height / out_h;
+        for x in 0..out_w {
+            let sx = x * img.width / out_w;
+            for c in 0..img.channels {
+                out.pixels[(y * out_w + x) * img.channels + c] =
+                    img.pixels[(sy * img.width + sx) * img.channels + c];
+            }
+        }
+    }
+    out
+}
+
+/// Center-crop to `(h, w)` (pads with zeros if the source is smaller).
+pub fn center_crop(img: &RawImage, h: usize, w: usize) -> RawImage {
+    let mut out = RawImage::new(h, w, img.channels);
+    let oy = img.height.saturating_sub(h) / 2;
+    let ox = img.width.saturating_sub(w) / 2;
+    for y in 0..h.min(img.height) {
+        for x in 0..w.min(img.width) {
+            for c in 0..img.channels {
+                out.pixels[(y * w + x) * img.channels + c] =
+                    img.pixels[((y + oy) * img.width + (x + ox)) * img.channels + c];
+            }
+        }
+    }
+    out
+}
+
+/// Normalize `u8 HWC` → `f32 NHWC` tensor: `(px - mean[c]) / rescale`.
+pub fn normalize(img: &RawImage, mean: [f64; 3], rescale: f64) -> Tensor {
+    let mut data = Vec::with_capacity(img.pixels.len());
+    let inv = 1.0 / rescale as f32;
+    let mean_f: [f32; 3] = [mean[0] as f32, mean[1] as f32, mean[2] as f32];
+    for (i, px) in img.pixels.iter().enumerate() {
+        let c = i % img.channels;
+        data.push((*px as f32 - mean_f[c.min(2)]) * inv);
+    }
+    Tensor::new(vec![1, img.height, img.width, img.channels], data)
+}
+
+/// Execute a manifest's pre-processing pipeline on encoded input bytes,
+/// producing the model-ready tensor. Steps run in manifest order (§4.1.1).
+pub fn run_pipeline(steps: &[PreprocessStep], input: &[u8]) -> Result<Tensor, PreprocessError> {
+    let mut img: Option<RawImage> = None;
+    let mut tensor: Option<Tensor> = None;
+    for step in steps {
+        match step {
+            PreprocessStep::Decode { .. } => {
+                img = Some(RawImage::decode(input)?);
+            }
+            PreprocessStep::Resize { dimensions, method, .. } => {
+                let cur = img.take().ok_or_else(|| {
+                    PreprocessError::Unsupported("resize before decode".into())
+                })?;
+                let (h, w) = (dimensions[1], dimensions[2]);
+                img = Some(match method.as_str() {
+                    "nearest" => resize_nearest(&cur, h, w),
+                    _ => resize_bilinear(&cur, h, w),
+                });
+            }
+            PreprocessStep::CenterCrop { height, width } => {
+                let cur = img.take().ok_or_else(|| {
+                    PreprocessError::Unsupported("crop before decode".into())
+                })?;
+                img = Some(center_crop(&cur, *height, *width));
+            }
+            PreprocessStep::Normalize { mean, rescale } => {
+                let cur = img.take().ok_or_else(|| {
+                    PreprocessError::Unsupported("normalize before decode".into())
+                })?;
+                tensor = Some(normalize(&cur, *mean, *rescale));
+            }
+            PreprocessStep::CastTo { .. } => { /* f32 is native */ }
+        }
+    }
+    match (tensor, img) {
+        (Some(t), _) => Ok(t),
+        // Pipelines without an explicit normalize still produce a tensor.
+        (None, Some(img)) => Ok(normalize(&img, [0.0; 3], 1.0)),
+        (None, None) => Err(PreprocessError::Unsupported("pipeline produced no tensor".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_image_roundtrip() {
+        let img = RawImage::synthetic(33, 47, 7);
+        let enc = img.encode();
+        let dec = RawImage::decode(&enc).unwrap();
+        assert_eq!(dec, img);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(RawImage::decode(b"JPEG....").is_err());
+        assert!(RawImage::decode(b"P7 2 2 3\nxx").is_err()); // truncated
+    }
+
+    #[test]
+    fn resize_shapes() {
+        let img = RawImage::synthetic(100, 200, 1);
+        let out = resize_bilinear(&img, 224, 224);
+        assert_eq!((out.height, out.width), (224, 224));
+        let out = resize_nearest(&img, 16, 16);
+        assert_eq!(out.pixels.len(), 16 * 16 * 3);
+    }
+
+    #[test]
+    fn resize_identity_preserves_content() {
+        let img = RawImage::synthetic(64, 64, 3);
+        let same = resize_bilinear(&img, 64, 64);
+        // Identity resize must be (nearly) exact.
+        let diffs = img
+            .pixels
+            .iter()
+            .zip(&same.pixels)
+            .filter(|(a, b)| (**a as i16 - **b as i16).abs() > 1)
+            .count();
+        assert_eq!(diffs, 0);
+    }
+
+    #[test]
+    fn center_crop_extracts_middle() {
+        let mut img = RawImage::new(4, 4, 1);
+        for (i, p) in img.pixels.iter_mut().enumerate() {
+            *p = i as u8;
+        }
+        let c = center_crop(&img, 2, 2);
+        assert_eq!(c.pixels, vec![5, 6, 9, 10]);
+    }
+
+    #[test]
+    fn normalize_applies_mean_and_rescale() {
+        let mut img = RawImage::new(1, 1, 3);
+        img.pixels = vec![200, 150, 100];
+        let t = normalize(&img, [123.68, 116.78, 103.94], 2.0);
+        assert_eq!(t.shape, vec![1, 1, 1, 3]);
+        assert!((t.data[0] - (200.0 - 123.68) / 2.0).abs() < 1e-4);
+        assert!((t.data[1] - (150.0 - 116.78) / 2.0).abs() < 1e-4);
+        assert!((t.data[2] - (100.0 - 103.94) / 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn listing1_pipeline_end_to_end() {
+        let m = crate::manifest::ModelManifest::from_yaml(
+            crate::manifest::model_listing1(),
+        )
+        .unwrap();
+        let input = RawImage::synthetic(480, 640, 3).encode();
+        let t = run_pipeline(&m.inputs[0].steps, &input).unwrap();
+        assert_eq!(t.shape, vec![1, 224, 224, 3]);
+        // Normalized values centred around zero-ish.
+        let mean: f32 = t.data.iter().sum::<f32>() / t.data.len() as f32;
+        assert!(mean.abs() < 128.0);
+    }
+
+    #[test]
+    fn pipeline_order_enforced() {
+        let steps = vec![PreprocessStep::Resize {
+            dimensions: [3, 8, 8],
+            method: "bilinear".into(),
+            keep_aspect_ratio: false,
+        }];
+        assert!(run_pipeline(&steps, b"P7 1 1 3\nabc").is_err());
+    }
+
+    #[test]
+    fn property_resize_bounds_preserved() {
+        crate::util::rng::forall(41, 30, |rng| {
+            let h = 8 + rng.below(64) as usize;
+            let w = 8 + rng.below(64) as usize;
+            let img = RawImage::synthetic(h, w, rng.next_u64());
+            let out = resize_bilinear(&img, 16 + rng.below(48) as usize, 16 + rng.below(48) as usize);
+            // Bilinear interpolation can't exceed source value range.
+            let (smin, smax) = (
+                *img.pixels.iter().min().unwrap(),
+                *img.pixels.iter().max().unwrap(),
+            );
+            assert!(out.pixels.iter().all(|p| *p >= smin && *p <= smax));
+        });
+    }
+}

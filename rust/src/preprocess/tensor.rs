@@ -1,0 +1,210 @@
+//! A minimal dense f32 tensor — the unit of data between pipeline stages
+//! and the predictor boundary.
+
+use crate::util::json::Json;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random tensor (synthetic model inputs).
+    pub fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut rng = crate::util::rng::Xorshift::new(seed);
+        Tensor { shape, data: (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Stack `n` copies along a new leading batch axis — how the batcher
+    /// turns per-request tensors into a batched predictor call.
+    pub fn stack(items: &[&Tensor]) -> Option<Tensor> {
+        let first = items.first()?;
+        if items.iter().any(|t| t.shape != first.shape) {
+            return None;
+        }
+        // Leading dim of each item must be 1 (single-input tensors).
+        let mut inner = first.shape.clone();
+        if inner.first() == Some(&1) {
+            inner.remove(0);
+        }
+        let mut shape = vec![items.len()];
+        shape.extend(inner);
+        let mut data = Vec::with_capacity(first.data.len() * items.len());
+        for t in items {
+            data.extend_from_slice(&t.data);
+        }
+        Some(Tensor::new(shape, data))
+    }
+
+    /// Split a batched tensor back into per-item tensors (leading axis).
+    pub fn unstack(&self) -> Vec<Tensor> {
+        let n = self.batch().max(1);
+        let per = self.data.len() / n;
+        let mut inner = vec![1];
+        inner.extend_from_slice(&self.shape[1..]);
+        (0..n)
+            .map(|i| Tensor::new(inner.clone(), self.data[i * per..(i + 1) * per].to_vec()))
+            .collect()
+    }
+
+    /// Binary codec: `u32 ndim | u32×ndim shape | f32×n data`, all LE.
+    /// The wire protocol's fast path (§Perf: JSON float formatting was the
+    /// RPC bottleneck for tensor payloads).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + self.shape.len() * 4 + self.data.len() * 4);
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for d in &self.shape {
+            out.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode the binary codec; `None` on malformed input.
+    pub fn from_bytes(bytes: &[u8]) -> Option<Tensor> {
+        if bytes.len() < 4 {
+            return None;
+        }
+        let ndim = u32::from_le_bytes(bytes[0..4].try_into().ok()?) as usize;
+        if ndim > 16 || bytes.len() < 4 + ndim * 4 {
+            return None;
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for i in 0..ndim {
+            let o = 4 + i * 4;
+            shape.push(u32::from_le_bytes(bytes[o..o + 4].try_into().ok()?) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let body = &bytes[4 + ndim * 4..];
+        if body.len() != n * 4 {
+            return None;
+        }
+        let data = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Some(Tensor { shape, data })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "shape",
+                Json::arr(self.shape.iter().map(|s| Json::num(*s as f64)).collect()),
+            ),
+            (
+                "data",
+                Json::arr(self.data.iter().map(|v| Json::num(*v as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Tensor> {
+        let shape: Vec<usize> = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as usize)
+            .collect();
+        let data: Vec<f32> = j
+            .get("data")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        if shape.iter().product::<usize>() != data.len() {
+            return None;
+        }
+        Some(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::random(vec![1, 2, 2, 3], 1);
+        let b = Tensor::random(vec![1, 2, 2, 3], 2);
+        let stacked = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(stacked.shape, vec![2, 2, 2, 3]);
+        let parts = stacked.unstack();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched_shapes() {
+        let a = Tensor::zeros(vec![1, 4]);
+        let b = Tensor::zeros(vec![1, 5]);
+        assert!(Tensor::stack(&[&a, &b]).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Tensor::random(vec![2, 3], 9);
+        let back = Tensor::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.shape, t.shape);
+        for (a, b) in t.data.iter().zip(&back.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let t = Tensor::random(vec![3, 5, 7], 17);
+        let back = Tensor::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(back, t, "binary codec must be bit-exact");
+    }
+
+    #[test]
+    fn binary_rejects_malformed() {
+        assert!(Tensor::from_bytes(&[]).is_none());
+        assert!(Tensor::from_bytes(&[1, 0, 0, 0]).is_none()); // shape missing
+        let mut good = Tensor::zeros(vec![2, 2]).to_bytes();
+        good.pop(); // truncated data
+        assert!(Tensor::from_bytes(&good).is_none());
+        let huge_ndim = 1000u32.to_le_bytes().to_vec();
+        assert!(Tensor::from_bytes(&huge_ndim).is_none());
+    }
+
+    #[test]
+    fn byte_size_and_batch() {
+        let t = Tensor::zeros(vec![8, 224, 224, 3]);
+        assert_eq!(t.batch(), 8);
+        assert_eq!(t.byte_size(), 8 * 224 * 224 * 3 * 4);
+    }
+}

@@ -1,0 +1,453 @@
+//! The distributed registry (§4.5.1).
+//!
+//! A TTL'd key-value store holding registered model manifests and running
+//! agents. The server uses it to discover models, solve user constraints
+//! during agent resolution (§4.3 step 3), and load-balance requests across
+//! agents. It is dynamic: agents heartbeat their entries and disappear when
+//! the TTL lapses; manifests can be added/removed at runtime (§4.6).
+//!
+//! The store itself is in-process (the consul/etcd substitute); it is also
+//! exposed over [`crate::wire`] so separate agent processes can register —
+//! see [`registry_service`].
+
+use crate::manifest::{Accelerator, ModelManifest, SystemRequirements};
+use crate::util::json::Json;
+use crate::util::semver::Version;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A registered agent's advertisement: its HW/SW stack + built-in models
+/// (published during the paper's initialization workflow, step ①).
+#[derive(Debug, Clone)]
+pub struct AgentInfo {
+    /// Unique agent id (assigned at registration).
+    pub id: String,
+    /// RPC endpoint (`host:port`) the server dispatches to; empty for
+    /// in-process agents.
+    pub endpoint: String,
+    /// Framework name/version of the agent's predictor.
+    pub framework: String,
+    pub framework_version: Version,
+    /// System profile name (a Table-1 row or `local`).
+    pub system: String,
+    /// CPU architecture (`x86_64`, `ppc64le`, ...).
+    pub architecture: String,
+    /// Device classes offered: `cpu`, `gpu`, `fpga`.
+    pub devices: Vec<String>,
+    pub interconnect: String,
+    pub host_memory_gb: f64,
+    pub device_memory_gb: f64,
+    /// Model names this agent can evaluate.
+    pub models: Vec<String>,
+}
+
+impl AgentInfo {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("endpoint", Json::str(&self.endpoint)),
+            ("framework", Json::str(&self.framework)),
+            ("framework_version", Json::str(self.framework_version.to_string())),
+            ("system", Json::str(&self.system)),
+            ("architecture", Json::str(&self.architecture)),
+            ("devices", Json::arr(self.devices.iter().map(Json::str).collect())),
+            ("interconnect", Json::str(&self.interconnect)),
+            ("host_memory_gb", Json::num(self.host_memory_gb)),
+            ("device_memory_gb", Json::num(self.device_memory_gb)),
+            ("models", Json::arr(self.models.iter().map(Json::str).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<AgentInfo> {
+        Some(AgentInfo {
+            id: j.get("id")?.as_str()?.to_string(),
+            endpoint: j.str_or("endpoint", "").to_string(),
+            framework: j.str_or("framework", "").to_string(),
+            framework_version: j.str_or("framework_version", "0.0.0").parse().ok()?,
+            system: j.str_or("system", "local").to_string(),
+            architecture: j.str_or("architecture", "x86_64").to_string(),
+            devices: j
+                .get("devices")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|d| d.as_str()).map(String::from).collect())
+                .unwrap_or_default(),
+            interconnect: j.str_or("interconnect", "none").to_string(),
+            host_memory_gb: j.f64_or("host_memory_gb", 0.0),
+            device_memory_gb: j.f64_or("device_memory_gb", 0.0),
+            models: j
+                .get("models")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|d| d.as_str()).map(String::from).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+struct Entry<T> {
+    value: T,
+    expires: Option<Instant>,
+}
+
+/// The registry. Thread-safe; cheap to clone via `Arc`.
+pub struct Registry {
+    agents: Mutex<BTreeMap<String, Entry<AgentInfo>>>,
+    manifests: Mutex<BTreeMap<String, Entry<ModelManifest>>>,
+    next_agent: AtomicU64,
+    /// Round-robin cursor for load balancing.
+    rr: AtomicU64,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry {
+            agents: Mutex::new(BTreeMap::new()),
+            manifests: Mutex::new(BTreeMap::new()),
+            next_agent: AtomicU64::new(1),
+            rr: AtomicU64::new(0),
+        })
+    }
+
+    /// Register an agent with a TTL; returns the assigned id. The agent
+    /// must re-register (heartbeat) within the TTL to stay visible.
+    pub fn register_agent(&self, mut info: AgentInfo, ttl: Option<Duration>) -> String {
+        if info.id.is_empty() {
+            info.id = format!("agent-{}", self.next_agent.fetch_add(1, Ordering::Relaxed));
+        }
+        let id = info.id.clone();
+        self.agents.lock().unwrap().insert(
+            id.clone(),
+            Entry { value: info, expires: ttl.map(|t| Instant::now() + t) },
+        );
+        id
+    }
+
+    /// Heartbeat: extend an agent's TTL. Returns false if it had expired.
+    pub fn heartbeat(&self, id: &str, ttl: Duration) -> bool {
+        let mut agents = self.agents.lock().unwrap();
+        match agents.get_mut(id) {
+            Some(e) if e.expires.map_or(true, |t| t > Instant::now()) => {
+                e.expires = Some(Instant::now() + ttl);
+                true
+            }
+            _ => {
+                agents.remove(id);
+                false
+            }
+        }
+    }
+
+    pub fn deregister_agent(&self, id: &str) {
+        self.agents.lock().unwrap().remove(id);
+    }
+
+    /// Live agents (expired entries are swept on read).
+    pub fn agents(&self) -> Vec<AgentInfo> {
+        let now = Instant::now();
+        let mut agents = self.agents.lock().unwrap();
+        agents.retain(|_, e| e.expires.map_or(true, |t| t > now));
+        agents.values().map(|e| e.value.clone()).collect()
+    }
+
+    /// Register a model manifest (F5: keyed `name:version`).
+    pub fn register_manifest(&self, m: ModelManifest) {
+        self.manifests
+            .lock()
+            .unwrap()
+            .insert(m.key(), Entry { value: m, expires: None });
+    }
+
+    pub fn manifest(&self, name: &str, version: Option<&str>) -> Option<ModelManifest> {
+        let manifests = self.manifests.lock().unwrap();
+        match version {
+            Some(v) => manifests.get(&format!("{name}:{v}")).map(|e| e.value.clone()),
+            None => manifests
+                .iter()
+                .filter(|(k, _)| k.starts_with(&format!("{name}:")))
+                .map(|(_, e)| e.value.clone())
+                .max_by_key(|m| m.version),
+        }
+    }
+
+    pub fn manifest_names(&self) -> Vec<String> {
+        self.manifests.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn remove_manifest(&self, key: &str) {
+        self.manifests.lock().unwrap().remove(key);
+    }
+
+    /// Agent resolution (§4.3 step 3): agents satisfying the model's
+    /// framework constraint + the user's system requirements, that also
+    /// advertise the model (or are wildcard agents with no model list).
+    pub fn resolve(
+        &self,
+        manifest: &ModelManifest,
+        req: &SystemRequirements,
+    ) -> Vec<AgentInfo> {
+        self.agents()
+            .into_iter()
+            .filter(|a| {
+                // Framework name + version constraint.
+                let fw_ok = manifest.framework_constraint.is_any()
+                    && (manifest.framework_name.is_empty() || manifest.framework_name == a.framework)
+                    || (manifest.framework_name == a.framework
+                        && manifest.framework_constraint.matches(a.framework_version));
+                // Wildcard frameworks (e.g. the simulator advertises the
+                // paper's TensorFlow models) match by model list instead.
+                let fw_ok = fw_ok || a.models.contains(&manifest.name);
+                if !fw_ok {
+                    return false;
+                }
+                if !a.models.is_empty() && !a.models.contains(&manifest.name) {
+                    return false;
+                }
+                // System requirements.
+                match req.accelerator {
+                    Accelerator::Any => {}
+                    acc => {
+                        if !a.devices.iter().any(|d| d == acc.as_str()) {
+                            return false;
+                        }
+                    }
+                }
+                if let Some(arch) = &req.architecture {
+                    if arch != &a.architecture {
+                        return false;
+                    }
+                }
+                if let Some(ic) = &req.interconnect {
+                    if ic != &a.interconnect {
+                        return false;
+                    }
+                }
+                if let Some(mem) = req.min_memory_gb {
+                    if a.host_memory_gb < mem {
+                        return false;
+                    }
+                }
+                if let Some(mem) = req.min_device_memory_gb {
+                    if a.device_memory_gb < mem {
+                        return false;
+                    }
+                }
+                if let Some(sys) = &req.system_name {
+                    if sys != &a.system {
+                        return false;
+                    }
+                }
+                true
+            })
+            .collect()
+    }
+
+    /// Pick one resolved agent round-robin (load balancing across agents).
+    pub fn pick(&self, candidates: &[AgentInfo]) -> Option<AgentInfo> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) as usize % candidates.len();
+        Some(candidates[i].clone())
+    }
+}
+
+/// Expose a registry over the wire protocol (methods: `register_agent`,
+/// `heartbeat`, `agents`, `register_manifest`, `manifest_names`).
+pub fn registry_service(registry: Arc<Registry>) -> Arc<dyn crate::wire::Service> {
+    Arc::new(move |method: &str, params: &Json| -> Result<Json, String> {
+        match method {
+            "register_agent" => {
+                let info = AgentInfo::from_json(params).ok_or("bad agent info")?;
+                let ttl = params.get("ttl_secs").and_then(|v| v.as_f64());
+                let id = registry.register_agent(info, ttl.map(Duration::from_secs_f64));
+                Ok(Json::obj(vec![("id", Json::str(id))]))
+            }
+            "heartbeat" => {
+                let id = params.str_or("id", "");
+                let ttl = Duration::from_secs_f64(params.f64_or("ttl_secs", 10.0));
+                Ok(Json::Bool(registry.heartbeat(id, ttl)))
+            }
+            "deregister_agent" => {
+                registry.deregister_agent(params.str_or("id", ""));
+                Ok(Json::Null)
+            }
+            "agents" => Ok(Json::arr(registry.agents().iter().map(|a| a.to_json()).collect())),
+            "register_manifest" => {
+                let m = ModelManifest::from_json(params).map_err(|e| e.to_string())?;
+                registry.register_manifest(m);
+                Ok(Json::Null)
+            }
+            "manifest_names" => {
+                Ok(Json::arr(registry.manifest_names().iter().map(Json::str).collect()))
+            }
+            other => Err(format!("unknown registry method {other:?}")),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agent(system: &str, devices: &[&str], arch: &str, models: &[&str]) -> AgentInfo {
+        AgentInfo {
+            id: String::new(),
+            endpoint: String::new(),
+            framework: "TensorFlow".into(),
+            framework_version: "1.15.0".parse().unwrap(),
+            system: system.into(),
+            architecture: arch.into(),
+            devices: devices.iter().map(|d| d.to_string()).collect(),
+            interconnect: if system == "ibm_p8" { "nvlink" } else { "pcie3" }.into(),
+            host_memory_gb: 61.0,
+            device_memory_gb: 16.0,
+            models: models.iter().map(|m| m.to_string()).collect(),
+        }
+    }
+
+    fn r50() -> ModelManifest {
+        crate::zoo::by_name("MLPerf_ResNet50_v1.5").unwrap().manifest()
+    }
+
+    #[test]
+    fn register_and_list() {
+        let reg = Registry::new();
+        let id = reg.register_agent(agent("aws_p3", &["cpu", "gpu"], "x86_64", &[]), None);
+        assert!(id.starts_with("agent-"));
+        assert_eq!(reg.agents().len(), 1);
+        reg.deregister_agent(&id);
+        assert!(reg.agents().is_empty());
+    }
+
+    #[test]
+    fn ttl_expiry_and_heartbeat() {
+        let reg = Registry::new();
+        let id = reg.register_agent(
+            agent("aws_p3", &["gpu"], "x86_64", &[]),
+            Some(Duration::from_millis(30)),
+        );
+        assert_eq!(reg.agents().len(), 1);
+        assert!(reg.heartbeat(&id, Duration::from_millis(60)));
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(reg.agents().len(), 1, "heartbeat extended the TTL");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(reg.agents().is_empty(), "expired after TTL");
+        assert!(!reg.heartbeat(&id, Duration::from_millis(50)), "expired heartbeat fails");
+    }
+
+    #[test]
+    fn manifest_versioning_latest_wins() {
+        let reg = Registry::new();
+        let mut m1 = r50();
+        reg.register_manifest(m1.clone());
+        m1.version = "1.2.0".parse().unwrap();
+        reg.register_manifest(m1.clone());
+        let got = reg.manifest("MLPerf_ResNet50_v1.5", None).unwrap();
+        assert_eq!(got.version.to_string(), "1.2.0");
+        let pinned = reg.manifest("MLPerf_ResNet50_v1.5", Some("1.0.0")).unwrap();
+        assert_eq!(pinned.version.to_string(), "1.0.0");
+        assert_eq!(reg.manifest_names().len(), 2);
+    }
+
+    #[test]
+    fn resolution_matches_framework_constraint() {
+        let reg = Registry::new();
+        reg.register_agent(agent("aws_p3", &["gpu"], "x86_64", &[]), None);
+        let mut old = agent("aws_p2", &["gpu"], "x86_64", &[]);
+        old.framework_version = "2.1.0".parse().unwrap(); // outside >=1.12 <2
+        reg.register_agent(old, None);
+        let m = r50();
+        let resolved = reg.resolve(&m, &SystemRequirements::any());
+        assert_eq!(resolved.len(), 1);
+        assert_eq!(resolved[0].system, "aws_p3");
+    }
+
+    #[test]
+    fn resolution_honours_system_requirements() {
+        let reg = Registry::new();
+        reg.register_agent(agent("aws_p3", &["cpu", "gpu"], "x86_64", &[]), None);
+        reg.register_agent(agent("ibm_p8", &["cpu", "gpu"], "ppc64le", &[]), None);
+        let m = r50();
+        // By accelerator + architecture.
+        let req = SystemRequirements {
+            accelerator: Accelerator::Gpu,
+            architecture: Some("ppc64le".into()),
+            ..SystemRequirements::any()
+        };
+        let resolved = reg.resolve(&m, &req);
+        assert_eq!(resolved.len(), 1);
+        assert_eq!(resolved[0].system, "ibm_p8");
+        // By interconnect.
+        let req = SystemRequirements {
+            interconnect: Some("nvlink".into()),
+            ..SystemRequirements::any()
+        };
+        assert_eq!(reg.resolve(&m, &req).len(), 1);
+        // By memory floor nothing satisfies.
+        let req = SystemRequirements { min_memory_gb: Some(1024.0), ..SystemRequirements::any() };
+        assert!(reg.resolve(&m, &req).is_empty());
+        // By exact system pin.
+        let req = SystemRequirements::on_system("aws_p3");
+        assert_eq!(reg.resolve(&m, &req)[0].system, "aws_p3");
+    }
+
+    #[test]
+    fn model_list_filter() {
+        let reg = Registry::new();
+        reg.register_agent(agent("aws_p3", &["gpu"], "x86_64", &["VGG16"]), None);
+        let resolved = reg.resolve(&r50(), &SystemRequirements::any());
+        assert!(resolved.is_empty(), "agent only serves VGG16");
+        let vgg = crate::zoo::by_name("VGG16").unwrap().manifest();
+        assert_eq!(reg.resolve(&vgg, &SystemRequirements::any()).len(), 1);
+    }
+
+    #[test]
+    fn round_robin_pick_balances() {
+        let reg = Registry::new();
+        for sys in ["aws_p3", "aws_g3", "aws_p2"] {
+            reg.register_agent(agent(sys, &["gpu"], "x86_64", &[]), None);
+        }
+        let cands = reg.resolve(&r50(), &SystemRequirements::any());
+        assert_eq!(cands.len(), 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            seen.insert(reg.pick(&cands).unwrap().system);
+        }
+        assert_eq!(seen.len(), 3, "round robin visits all agents");
+    }
+
+    #[test]
+    fn registry_over_the_wire() {
+        let reg = Registry::new();
+        let server =
+            crate::wire::RpcServer::serve("127.0.0.1:0", registry_service(reg.clone())).unwrap();
+        let client = crate::wire::RpcClient::connect(server.addr()).unwrap();
+        let mut info = agent("aws_p3", &["gpu"], "x86_64", &[]).to_json();
+        if let Json::Obj(m) = &mut info {
+            m.insert("ttl_secs".into(), Json::num(60.0));
+        }
+        let resp = client.call("register_agent", info).unwrap();
+        let id = resp.get("id").unwrap().as_str().unwrap().to_string();
+        assert!(client
+            .call("heartbeat", Json::obj(vec![("id", Json::str(&id)), ("ttl_secs", Json::num(60.0))]))
+            .unwrap()
+            .as_bool()
+            .unwrap());
+        let agents = client.call("agents", Json::Null).unwrap();
+        assert_eq!(agents.as_arr().unwrap().len(), 1);
+        // Local view agrees (same registry behind the service).
+        assert_eq!(reg.agents().len(), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn agent_info_json_roundtrip() {
+        let a = agent("ibm_p8", &["cpu", "gpu"], "ppc64le", &["VGG16", "ResNet_v1_50"]);
+        let back = AgentInfo::from_json(&a.to_json()).unwrap();
+        assert_eq!(back.system, "ibm_p8");
+        assert_eq!(back.devices, vec!["cpu", "gpu"]);
+        assert_eq!(back.models.len(), 2);
+        assert_eq!(back.interconnect, "nvlink");
+    }
+}

@@ -1,0 +1,491 @@
+//! The MLModelScope server (§4.3): accepts client requests over REST,
+//! resolves agents via the registry, dispatches evaluations over the wire
+//! protocol (or in-process), and runs the analysis workflow against the
+//! evaluation database.
+//!
+//! Workload generation note: scenarios are materialized deterministically
+//! from `(scenario, seed)` by [`crate::scenario::Workload::generate`]; the
+//! server chooses the seed and ships `(scenario, seed)` to the agent, which
+//! regenerates the identical schedule — the request load is thus
+//! server-defined (paper: "the server generates an inference request load
+//! based on the benchmarking scenario") without shipping every request
+//! over the wire individually.
+
+pub mod webui;
+
+use crate::agent::{Agent, EvalRequest};
+use crate::evaldb::{EvalDb, EvalRecord};
+use crate::manifest::SystemRequirements;
+use crate::predictor::InputMode;
+use crate::registry::{AgentInfo, Registry};
+use crate::scenario::Scenario;
+use crate::traceserver::TraceServer;
+use crate::tracing::TraceLevel;
+use crate::util::json::Json;
+use crate::util::threadpool::parallel_map;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A fully-specified evaluation job (the paper's "user input": model,
+/// SW stack, system requirements, benchmarking scenario).
+#[derive(Debug, Clone)]
+pub struct EvalJob {
+    pub model: String,
+    pub model_version: Option<String>,
+    pub requirements: SystemRequirements,
+    pub scenario: Scenario,
+    pub trace_level: TraceLevel,
+    pub input_mode: InputMode,
+    pub seed: u64,
+    /// Evaluate on every resolved agent (the paper's "or, at the user
+    /// request, all of" the resolved agents) instead of one.
+    pub all_agents: bool,
+}
+
+impl EvalJob {
+    pub fn new(model: &str, scenario: Scenario) -> EvalJob {
+        EvalJob {
+            model: model.to_string(),
+            model_version: None,
+            requirements: SystemRequirements::any(),
+            scenario,
+            trace_level: TraceLevel::Model,
+            input_mode: InputMode::Direct,
+            seed: 42,
+            all_agents: false,
+        }
+    }
+}
+
+/// The server.
+pub struct Server {
+    pub registry: Arc<Registry>,
+    pub evaldb: Arc<EvalDb>,
+    pub traces: Arc<TraceServer>,
+    /// In-process agents by id (agents may instead be remote, reached via
+    /// their registered endpoint).
+    local_agents: Mutex<HashMap<String, Arc<Agent>>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ServerError {
+    #[error("model {0:?} not found in registry")]
+    UnknownModel(String),
+    #[error("no agent satisfies the request (model {model}, requirements {req})")]
+    NoAgent { model: String, req: String },
+    #[error("agent {0} failed: {1}")]
+    AgentFailed(String, String),
+}
+
+impl Server {
+    pub fn new(
+        registry: Arc<Registry>,
+        evaldb: Arc<EvalDb>,
+        traces: Arc<TraceServer>,
+    ) -> Arc<Server> {
+        Arc::new(Server { registry, evaldb, traces, local_agents: Mutex::new(HashMap::new()) })
+    }
+
+    /// Fresh server with its own registry/db/trace services (common setup).
+    pub fn standalone() -> Arc<Server> {
+        Server::new(Registry::new(), Arc::new(EvalDb::in_memory()), TraceServer::new())
+    }
+
+    /// Attach an in-process agent: registers it (no TTL — it lives exactly
+    /// as long as the server) and remembers the handle.
+    pub fn attach_local_agent(&self, agent: Arc<Agent>) -> String {
+        let id = agent.register_with_ttl(&self.registry, "", None);
+        self.local_agents.lock().unwrap().insert(id.clone(), agent);
+        id
+    }
+
+    /// Register all 37 zoo manifests (bootstrap, §4.7).
+    pub fn register_zoo(&self) {
+        for m in crate::zoo::all() {
+            self.registry.register_manifest(m.manifest());
+        }
+    }
+
+    /// The evaluation workflow ②–⑨ for one job. Returns one record per
+    /// agent evaluated.
+    pub fn evaluate(&self, job: &EvalJob) -> Result<Vec<EvalRecord>, ServerError> {
+        // ③ resolve the manifest + agents.
+        let manifest = self
+            .registry
+            .manifest(&job.model, job.model_version.as_deref())
+            .ok_or_else(|| ServerError::UnknownModel(job.model.clone()))?;
+        let candidates = self.registry.resolve(&manifest, &job.requirements);
+        if candidates.is_empty() {
+            return Err(ServerError::NoAgent {
+                model: job.model.clone(),
+                req: job.requirements.to_json().to_string(),
+            });
+        }
+        let targets: Vec<AgentInfo> = if job.all_agents {
+            candidates
+        } else {
+            vec![self.registry.pick(&candidates).unwrap()]
+        };
+
+        // ④ dispatch — remote agents in parallel (F4), local ones inline.
+        let req = EvalRequest {
+            manifest,
+            scenario: job.scenario.clone(),
+            trace_level: job.trace_level,
+            input_mode: job.input_mode,
+            seed: job.seed,
+        };
+        let mut results = Vec::new();
+        let mut remote = Vec::new();
+        for target in targets {
+            if let Some(agent) = self.local_agents.lock().unwrap().get(&target.id).cloned() {
+                let r = agent
+                    .evaluate(&req)
+                    .map_err(|e| ServerError::AgentFailed(target.id.clone(), e))?;
+                results.push(r.record);
+            } else {
+                remote.push(target);
+            }
+        }
+        if !remote.is_empty() {
+            let payload = Json::obj(vec![
+                ("manifest", req.manifest.to_json()),
+                ("scenario", req.scenario.to_json()),
+                ("trace_level", Json::str(req.trace_level.as_str())),
+                ("input_mode", Json::str(req.input_mode.as_str())),
+                ("seed", Json::num(req.seed as f64)),
+            ]);
+            let remote_results = parallel_map(remote, 8, move |target| {
+                let client = crate::wire::RpcClient::connect(&target.endpoint)
+                    .map_err(|e| (target.id.clone(), e.to_string()))?;
+                let resp = client
+                    .call("Evaluate", payload.clone())
+                    .map_err(|e| (target.id.clone(), e.to_string()))?;
+                EvalRecord::from_json(resp.get("record").ok_or_else(|| {
+                    (target.id.clone(), "missing record".to_string())
+                })?)
+                .ok_or_else(|| (target.id.clone(), "bad record".to_string()))
+            });
+            for r in remote_results {
+                match r {
+                    Ok(rec) => {
+                        // Remote agents store into their own DB shard; the
+                        // server also records centrally (the paper's
+                        // "centralized management of benchmarking results").
+                        self.evaldb.put(rec.clone());
+                        results.push(rec);
+                    }
+                    Err((id, e)) => return Err(ServerError::AgentFailed(id, e)),
+                }
+            }
+        }
+        Ok(results)
+    }
+
+    /// Standard simulation platform: the four Table-1 systems, GPU + CPU
+    /// agents each, zoo registered. Shared by benches/examples.
+    pub fn sim_platform(trace_level: TraceLevel) -> Arc<Server> {
+        let server = Server::standalone();
+        server.register_zoo();
+        for sys in ["aws_p3", "aws_g3", "aws_p2", "ibm_p8"] {
+            for dev in [crate::sysmodel::Device::Gpu, crate::sysmodel::Device::Cpu] {
+                let (agent, _sim, _t) = crate::agent::sim_agent(
+                    sys,
+                    dev,
+                    trace_level,
+                    server.evaldb.clone(),
+                    server.traces.clone(),
+                );
+                server.attach_local_agent(agent);
+            }
+        }
+        server
+    }
+
+    /// The analysis workflow (a–e): summarize models across stored runs.
+    pub fn analyze(&self, models: &[String]) -> Json {
+        crate::analysis::summaries_json(models, &self.evaldb)
+    }
+
+    pub fn report(&self, models: &[String]) -> String {
+        crate::analysis::full_report(models, &self.evaldb)
+    }
+
+    /// Build the REST API router (F10; consumed by web/CLI clients).
+    pub fn router(self: &Arc<Self>) -> crate::httpd::Router {
+        use crate::httpd::{HttpResponse, Router};
+        let s = self.clone();
+        let r = Router::new()
+            .route("GET", "/api/ping", |_| {
+                HttpResponse::json(&Json::obj(vec![("ok", Json::Bool(true))]))
+            })
+            // The web UI (F10) at the root.
+            .route("GET", "/", |_| HttpResponse {
+                status: 200,
+                content_type: "text/html".into(),
+                body: webui::INDEX_HTML.as_bytes().to_vec(),
+            });
+        let r = {
+            let s = s.clone();
+            r.route("GET", "/api/models", move |_| {
+                HttpResponse::json(&Json::arr(
+                    s.registry.manifest_names().iter().map(Json::str).collect(),
+                ))
+            })
+        };
+        let r = {
+            let s = s.clone();
+            r.route("GET", "/api/agents", move |_| {
+                HttpResponse::json(&Json::arr(
+                    s.registry.agents().iter().map(|a| a.to_json()).collect(),
+                ))
+            })
+        };
+        let r = {
+            let _s = s.clone();
+            r.route("GET", "/api/systems", move |_| {
+                HttpResponse::json(&Json::arr(
+                    crate::sysmodel::systems().values().map(|p| p.to_json()).collect(),
+                ))
+            })
+        };
+        let r = {
+            let s = s.clone();
+            r.route("POST", "/api/evaluate", move |req| {
+                let body = match req.json() {
+                    Some(b) => b,
+                    None => return HttpResponse::error(400, "invalid JSON body"),
+                };
+                let scenario = match body.get("scenario").and_then(Scenario::from_json) {
+                    Some(sc) => sc,
+                    None => return HttpResponse::error(400, "missing/invalid scenario"),
+                };
+                let model = body.str_or("model", "");
+                let mut job = EvalJob::new(model, scenario);
+                job.model_version =
+                    body.get("version").and_then(|v| v.as_str()).map(String::from);
+                job.trace_level = TraceLevel::parse(body.str_or("trace_level", "model"));
+                job.input_mode = InputMode::parse(body.str_or("input_mode", "c"));
+                job.seed = body.f64_or("seed", 42.0) as u64;
+                job.all_agents = body.get("all_agents").and_then(|v| v.as_bool()).unwrap_or(false);
+                if let Some(reqs) = body.get("requirements") {
+                    job.requirements = SystemRequirements::from_json(reqs);
+                }
+                match s.evaluate(&job) {
+                    Ok(records) => HttpResponse::json(&Json::arr(
+                        records.iter().map(|r| r.to_json()).collect(),
+                    )),
+                    Err(e @ ServerError::UnknownModel(_)) => HttpResponse::error(404, e.to_string()),
+                    Err(e @ ServerError::NoAgent { .. }) => HttpResponse::error(503, e.to_string()),
+                    Err(e) => HttpResponse::error(500, e.to_string()),
+                }
+            })
+        };
+        let r = {
+            let s = s.clone();
+            r.route("GET", "/api/analyze", move |req| {
+                let q = req.query_map();
+                let models: Vec<String> = q
+                    .get("models")
+                    .map(|m| m.split(',').map(str::to_string).collect())
+                    .unwrap_or_default();
+                HttpResponse::json(&s.analyze(&models))
+            })
+        };
+        let r = {
+            let s = s.clone();
+            r.route("GET", "/api/report", move |req| {
+                let q = req.query_map();
+                let models: Vec<String> = q
+                    .get("models")
+                    .map(|m| m.split(',').map(str::to_string).collect())
+                    .unwrap_or_default();
+                HttpResponse::text(200, s.report(&models))
+            })
+        };
+        {
+            let s = s.clone();
+            r.route("GET", "/api/trace/:id", move |req| {
+                match req.param("id").and_then(|i| i.parse::<u64>().ok()) {
+                    Some(id) => {
+                        let tl = s.traces.timeline(id);
+                        if tl.is_empty() {
+                            HttpResponse::error(404, format!("trace {id} not found"))
+                        } else {
+                            HttpResponse::json(&tl.to_json())
+                        }
+                    }
+                    None => HttpResponse::error(400, "bad trace id"),
+                }
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::sim_agent;
+    use crate::sysmodel::Device;
+
+    /// Server + two simulated GPU agents (P3 + P8) sharing the server's DB
+    /// and trace sink — the standard in-proc topology.
+    fn testbed() -> Arc<Server> {
+        let server = Server::standalone();
+        server.register_zoo();
+        for sys in ["aws_p3", "ibm_p8"] {
+            let (agent, _sim, _tracer) = sim_agent(
+                sys,
+                Device::Gpu,
+                TraceLevel::Full,
+                server.evaldb.clone(),
+                server.traces.clone(),
+            );
+            server.attach_local_agent(agent);
+        }
+        server
+    }
+
+    #[test]
+    fn evaluation_workflow_end_to_end() {
+        let server = testbed();
+        let job = EvalJob::new("ResNet_v1_50", Scenario::Online { count: 8 });
+        let records = server.evaluate(&job).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].latencies.len(), 8);
+        // Result is queryable through the analysis workflow.
+        let analysis = server.analyze(&["ResNet_v1_50".to_string()]);
+        assert_eq!(analysis.as_arr().unwrap().len(), 1);
+        // The trace made it to the trace server.
+        let trace_id = records[0].trace_id.unwrap();
+        assert!(!server.traces.timeline(trace_id).is_empty());
+    }
+
+    #[test]
+    fn all_agents_fanout() {
+        let server = testbed();
+        let mut job = EvalJob::new("Inception_v3", Scenario::Online { count: 4 });
+        job.all_agents = true;
+        let records = server.evaluate(&job).unwrap();
+        assert_eq!(records.len(), 2, "both P3 and P8 evaluated");
+        let systems: std::collections::HashSet<String> =
+            records.iter().map(|r| r.key.system.clone()).collect();
+        assert!(systems.contains("aws_p3") && systems.contains("ibm_p8"));
+    }
+
+    #[test]
+    fn requirements_narrow_resolution() {
+        let server = testbed();
+        let mut job = EvalJob::new("VGG16", Scenario::Online { count: 2 });
+        job.requirements = SystemRequirements {
+            interconnect: Some("nvlink".into()),
+            ..SystemRequirements::any()
+        };
+        let records = server.evaluate(&job).unwrap();
+        assert_eq!(records[0].key.system, "ibm_p8");
+        // Impossible requirements → NoAgent.
+        job.requirements = SystemRequirements {
+            min_memory_gb: Some(10_000.0),
+            ..SystemRequirements::any()
+        };
+        assert!(matches!(server.evaluate(&job), Err(ServerError::NoAgent { .. })));
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let server = testbed();
+        let job = EvalJob::new("NotInZoo", Scenario::Online { count: 1 });
+        assert!(matches!(server.evaluate(&job), Err(ServerError::UnknownModel(_))));
+    }
+
+    #[test]
+    fn rest_api_round_trip() {
+        let server = testbed();
+        let http = crate::httpd::HttpServer::serve("127.0.0.1:0", server.router()).unwrap();
+        let addr = http.addr();
+
+        let (status, models) = crate::httpd::http_request(addr, "GET", "/api/models", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(models.as_arr().unwrap().len(), 37);
+
+        let (status, agents) = crate::httpd::http_request(addr, "GET", "/api/agents", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(agents.as_arr().unwrap().len(), 2);
+
+        let payload = Json::obj(vec![
+            ("model", Json::str("MobileNet_v1_1.0_224")),
+            ("scenario", Scenario::Batched { batch_size: 8, batches: 2 }.to_json()),
+            ("trace_level", Json::str("framework")),
+        ]);
+        let (status, records) =
+            crate::httpd::http_request(addr, "POST", "/api/evaluate", Some(&payload)).unwrap();
+        assert_eq!(status, 200, "{records}");
+        let rec = &records.as_arr().unwrap()[0];
+        let trace_id = rec.get_path("trace_id").unwrap().as_u64().unwrap();
+
+        let (status, timeline) = crate::httpd::http_request(
+            addr,
+            "GET",
+            &format!("/api/trace/{trace_id}"),
+            None,
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(!timeline.get("spans").unwrap().as_arr().unwrap().is_empty());
+
+        let (status, analysis) = crate::httpd::http_request(
+            addr,
+            "GET",
+            "/api/analyze?models=MobileNet_v1_1.0_224",
+            None,
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(analysis.as_arr().unwrap().len(), 1);
+
+        let (status, _) =
+            crate::httpd::http_request(addr, "GET", "/api/trace/999999", None).unwrap();
+        assert_eq!(status, 404);
+        http.stop();
+    }
+
+    #[test]
+    fn remote_agent_dispatch() {
+        // A remote agent process: own evaldb shard, served over the wire.
+        let agent_db = Arc::new(EvalDb::in_memory());
+        let sink = crate::tracing::MemorySink::new();
+        let (agent, _sim, _tracer) =
+            sim_agent("aws_g3", Device::Gpu, TraceLevel::Model, agent_db.clone(), sink);
+        let rpc =
+            crate::wire::RpcServer::serve("127.0.0.1:0", crate::agent::agent_service(agent.clone()))
+                .unwrap();
+
+        let server = Server::standalone();
+        server.register_zoo();
+        // Register the remote agent by endpoint (no local handle).
+        let mut info = crate::registry::AgentInfo {
+            id: String::new(),
+            endpoint: rpc.addr().to_string(),
+            framework: "SimFramework-Maxwell".into(),
+            framework_version: "1.0.0".parse().unwrap(),
+            system: "aws_g3".into(),
+            architecture: "x86_64".into(),
+            devices: vec!["gpu".into()],
+            interconnect: "pcie3".into(),
+            host_memory_gb: 30.5,
+            device_memory_gb: 8.0,
+            models: crate::zoo::all().iter().map(|m| m.name.clone()).collect(),
+        };
+        info.id = String::new();
+        server.registry.register_agent(info, None);
+
+        let job = EvalJob::new("BVLC_AlexNet", Scenario::Online { count: 3 });
+        let records = server.evaluate(&job).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].key.system, "aws_g3");
+        // Stored both agent-side and centrally.
+        assert_eq!(agent_db.len(), 1);
+        assert_eq!(server.evaldb.len(), 1);
+        rpc.stop();
+    }
+}

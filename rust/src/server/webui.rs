@@ -1,0 +1,143 @@
+//! The web UI (F10): a single-page dashboard served by the MLModelScope
+//! server — the "push-button" interface of §4.2 ("allows users to specify
+//! a model evaluation through simple clicks").
+//!
+//! The page is static HTML + vanilla JS speaking the same REST API the CLI
+//! uses (`/api/models`, `/api/agents`, `/api/evaluate`, `/api/analyze`,
+//! `/api/trace/:id`), so everything the UI can do is scriptable — the
+//! paper's claim that the web UI and command line are views over one API.
+
+/// The dashboard page.
+pub const INDEX_HTML: &str = r#"<!doctype html>
+<html>
+<head>
+<meta charset="utf-8">
+<title>MLModelScope-RS</title>
+<style>
+  body { font-family: ui-monospace, Menlo, monospace; margin: 2rem; background: #101418; color: #d7dde4; }
+  h1 { font-size: 1.3rem; } h2 { font-size: 1.05rem; margin-top: 1.6rem; }
+  select, button, input { background: #1b222b; color: #d7dde4; border: 1px solid #37414d; padding: .35rem .6rem; border-radius: 4px; }
+  button { cursor: pointer; } button:hover { border-color: #6ea8fe; }
+  table { border-collapse: collapse; margin-top: .6rem; }
+  td, th { border: 1px solid #2a333e; padding: .25rem .6rem; text-align: right; }
+  th { background: #161c23; }
+  td:first-child, th:first-child { text-align: left; }
+  pre { background: #0b0e12; padding: .8rem; border-radius: 6px; overflow-x: auto; }
+  .muted { color: #7b8794; }
+</style>
+</head>
+<body>
+<h1>MLModelScope-RS — scalable DL benchmarking</h1>
+<p class="muted">web UI (F10) over the REST API; everything here is also available via <code>mlms</code> and <code>curl</code>.</p>
+
+<h2>Run an evaluation</h2>
+<div>
+  model <select id="model"></select>
+  scenario <select id="scenario">
+    <option value="online">online</option>
+    <option value="batched">batched</option>
+    <option value="poisson">poisson</option>
+  </select>
+  batch <input id="batch" value="8" size="4">
+  trace <select id="level">
+    <option>none</option><option selected>model</option>
+    <option>framework</option><option>full</option>
+  </select>
+  <button onclick="evaluate()">evaluate</button>
+</div>
+<div id="result"></div>
+
+<h2>Agents</h2><div id="agents"></div>
+<h2>Analysis (stored runs)</h2>
+<button onclick="analyze()">refresh analysis</button>
+<div id="analysis"></div>
+<h2>Trace</h2>
+<div>trace id <input id="traceid" size="8"> <button onclick="trace()">view</button></div>
+<pre id="tracebox" class="muted">run an evaluation with trace ≥ model, then enter its trace id.</pre>
+
+<script>
+async function j(path, opts) { const r = await fetch(path, opts); return r.json(); }
+function table(rows, cols) {
+  if (!rows.length) return '<p class="muted">no data</p>';
+  let h = '<table><tr>' + cols.map(c => `<th>${c}</th>`).join('') + '</tr>';
+  for (const r of rows) h += '<tr>' + cols.map(c => `<td>${r[c] ?? ''}</td>`).join('') + '</tr>';
+  return h + '</table>';
+}
+async function init() {
+  const models = await j('/api/models');
+  document.getElementById('model').innerHTML =
+    models.map(m => `<option>${m.split(':')[0]}</option>`).join('');
+  const agents = await j('/api/agents');
+  document.getElementById('agents').innerHTML = table(agents,
+    ['id','system','framework','architecture','interconnect','devices']);
+}
+async function evaluate() {
+  const scenario = { kind: document.getElementById('scenario').value,
+                     count: 8,
+                     batch_size: +document.getElementById('batch').value,
+                     batches: 3, rate: 20 };
+  const body = { model: document.getElementById('model').value,
+                 scenario, trace_level: document.getElementById('level').value };
+  document.getElementById('result').innerHTML = '<p class="muted">running…</p>';
+  const recs = await j('/api/evaluate', { method: 'POST', body: JSON.stringify(body) });
+  if (recs.error) { document.getElementById('result').innerHTML = `<p>${recs.error}</p>`; return; }
+  const rows = recs.map(r => ({
+    system: r.key.system, device: r.key.device, batch: r.key.batch_size,
+    'throughput (items/s)': r.throughput.toFixed(1), trace: r.trace_id,
+    'requests': r.latencies.length,
+  }));
+  document.getElementById('result').innerHTML =
+    table(rows, ['system','device','batch','requests','throughput (items/s)','trace']);
+}
+async function analyze() {
+  const models = (await j('/api/models')).map(m => m.split(':')[0]);
+  const s = await j('/api/analyze?models=' + models.join(','));
+  const rows = s.map(r => ({ model: r.model, accuracy: r.accuracy,
+    'online TM (ms)': (r.online_trimmed_mean_ms ?? 0).toFixed(2),
+    'p90 (ms)': (r.online_p90_ms ?? 0).toFixed(2),
+    'max tput': (r.max_throughput ?? 0).toFixed(1), 'opt batch': r.optimal_batch }));
+  document.getElementById('analysis').innerHTML =
+    table(rows, ['model','accuracy','online TM (ms)','p90 (ms)','max tput','opt batch']);
+}
+async function trace() {
+  const id = document.getElementById('traceid').value;
+  const t = await j('/api/trace/' + id);
+  if (t.error) { document.getElementById('tracebox').textContent = t.error; return; }
+  const origin = Math.min(...t.spans.map(s => s.start_ns));
+  document.getElementById('tracebox').textContent = t.spans.map(s =>
+    `[${((s.start_ns - origin)/1e6).toFixed(3).padStart(10)} ms +${((s.end_ns - s.start_ns)/1e6).toFixed(3).padStart(9)} ms] ${s.level.padEnd(9)} ${s.name}`
+  ).join('\n');
+}
+init();
+</script>
+</body>
+</html>
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_references_every_api_endpoint() {
+        for ep in ["/api/models", "/api/agents", "/api/evaluate", "/api/analyze", "/api/trace/"] {
+            assert!(INDEX_HTML.contains(ep), "missing {ep}");
+        }
+    }
+
+    #[test]
+    fn served_at_root() {
+        let server = crate::server::Server::sim_platform(crate::tracing::TraceLevel::None);
+        let http = crate::httpd::HttpServer::serve("127.0.0.1:0", server.router()).unwrap();
+        // Raw request since the helper client assumes JSON.
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(http.addr()).unwrap();
+        write!(s, "GET / HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200"));
+        assert!(buf.contains("MLModelScope-RS"));
+        assert!(buf.contains("text/html"));
+        http.stop();
+    }
+}

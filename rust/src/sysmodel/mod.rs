@@ -1,0 +1,316 @@
+//! System models: roofline simulation of the paper's Table-1 hardware.
+//!
+//! The paper evaluates on four systems (AWS P3/V100, AWS G3/M60, AWS P2/K80,
+//! IBM P8/P100) that are not available here. Paper §4.4.4 explicitly allows
+//! the trace pipeline to consume *simulated* time ("users may integrate a
+//! system simulator and publish simulated time rather than wall-clock time
+//! to the tracing server"); this module is that simulator.
+//!
+//! The model is an analytic roofline:
+//!
+//! ```text
+//! t_kernel = t_launch + max(flops / (peak_flops · eff), bytes / mem_bw)
+//! t_copy   = bytes / interconnect_bw          (host→device, cold start)
+//! ```
+//!
+//! with per-batch weight amortization: weights are read once per kernel
+//! regardless of batch size, activations scale with batch. This single
+//! mechanism reproduces the paper's qualitative results: small models are
+//! launch-bound at batch 1 (good throughput scalability, Fig 6), VGG's huge
+//! FC weights amortize across the batch (the paper's "VGG exception"),
+//! cold-start AlexNet is bound by the fc6 weight copy where NVLink beats
+//! PCIe (Fig 8), and V100 < P100 < M60 < K80 latency ordering (Fig 7).
+
+mod kernels;
+mod profile;
+
+pub use kernels::{dominant_kernels, KernelSim};
+pub use profile::{systems, SystemProfile, INTERCONNECTS};
+pub use profile::systems as profile_map;
+
+use crate::util::json::Json;
+
+/// The device class a simulated execution runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    Cpu,
+    Gpu,
+}
+
+/// An abstract unit of device work — one framework-level layer's worth.
+///
+/// Produced by [`crate::zoo`] layer generators, consumed by the simulator.
+#[derive(Debug, Clone)]
+pub struct WorkUnit {
+    /// Layer kind, e.g. `Conv2D`, `MatMul`, `Pool`, `BatchNorm`, `Relu`.
+    pub kind: String,
+    /// FLOPs per *single* input (batch of 1).
+    pub flops_per_item: f64,
+    /// Activation bytes (read + written) per single input.
+    pub act_bytes_per_item: f64,
+    /// Weight bytes — read once per kernel, *not* scaled by batch.
+    pub weight_bytes: f64,
+}
+
+impl WorkUnit {
+    pub fn new(kind: &str, flops_per_item: f64, act_bytes_per_item: f64, weight_bytes: f64) -> Self {
+        WorkUnit {
+            kind: kind.to_string(),
+            flops_per_item,
+            act_bytes_per_item,
+            weight_bytes,
+        }
+    }
+}
+
+/// Simulated timing breakdown for one work unit at a given batch size.
+#[derive(Debug, Clone)]
+pub struct SimTiming {
+    /// Total kernel time (seconds) including launch overhead.
+    pub total: f64,
+    /// Compute-limited component.
+    pub compute: f64,
+    /// Memory-bandwidth-limited component.
+    pub memory: f64,
+    /// Kernel launch / framework dispatch overhead.
+    pub launch: f64,
+    /// True when `memory > compute` (the kernel is bandwidth-bound).
+    pub memory_bound: bool,
+}
+
+/// Simulated host→device copy (cold-start weight upload, Fig 8).
+#[derive(Debug, Clone)]
+pub struct SimCopy {
+    pub bytes: f64,
+    pub seconds: f64,
+}
+
+/// Per-(system, device) simulator.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub profile: SystemProfile,
+    pub device: Device,
+}
+
+impl Simulator {
+    pub fn new(profile: SystemProfile, device: Device) -> Simulator {
+        Simulator { profile, device }
+    }
+
+    fn peak_flops(&self) -> f64 {
+        match self.device {
+            Device::Gpu => self.profile.gpu_tflops * 1e12,
+            Device::Cpu => self.profile.cpu_gflops * 1e9,
+        }
+    }
+
+    fn mem_bw(&self) -> f64 {
+        match self.device {
+            Device::Gpu => self.profile.gpu_mem_bw_gbs * 1e9,
+            Device::Cpu => self.profile.cpu_mem_bw_gbs * 1e9,
+        }
+    }
+
+    fn launch_overhead(&self) -> f64 {
+        match self.device {
+            // CUDA kernel launch + framework dispatch.
+            Device::Gpu => 8e-6,
+            // Framework op dispatch on CPU.
+            Device::Cpu => 2e-6,
+        }
+    }
+
+    /// Sustained-efficiency model: large regular kernels (conv/matmul)
+    /// approach a high fraction of peak; small/elementwise ops are far from
+    /// it. Efficiency ramps with *batch* (device occupancy): the paper's own
+    /// batch-1 Table-2 data implies ~9% of peak for every model at batch 1
+    /// (ResNet50 7.7 GFLOPs / 6.33 ms, VGG16 31 GFLOPs / 22.4 ms,
+    /// Inception-v3 11.5 GFLOPs / 9.2 ms all sit on the same effective-
+    /// throughput line), saturating as batching fills the SMs — which is
+    /// what makes throughput scale with batch until saturation (Fig 6).
+    fn efficiency(&self, kind: &str, batch: f64) -> f64 {
+        let eff_max: f64 = match kind {
+            "Conv2D" | "MatMul" | "Dense" => match self.device {
+                Device::Gpu => 0.62,
+                Device::Cpu => 0.45,
+            },
+            "DepthwiseConv2D" => 0.18, // bandwidth-starved on every arch
+            "Pool" | "BatchNorm" | "Relu" | "Add" | "Concat" => 0.08,
+            "Softmax" | "LRN" => 0.05,
+            _ => 0.10,
+        };
+        // Occupancy half-point: GPUs need ~6 concurrent items to fill the
+        // SMs; CPUs saturate almost immediately.
+        let b_half = match self.device {
+            Device::Gpu => 6.0,
+            Device::Cpu => 1.0,
+        };
+        let ramp = batch / (batch + b_half);
+        eff_max * ramp.max(0.02)
+    }
+
+    /// Simulate one work unit at `batch`.
+    pub fn layer_time(&self, w: &WorkUnit, batch: usize) -> SimTiming {
+        let b = batch.max(1) as f64;
+        let flops = w.flops_per_item * b;
+        let eff = self.efficiency(&w.kind, b);
+        let compute = flops / (self.peak_flops() * eff);
+        // Activations scale with batch; weights stream once per kernel.
+        let bytes = w.act_bytes_per_item * b + w.weight_bytes;
+        let memory = bytes / self.mem_bw();
+        let launch = self.launch_overhead();
+        let total = launch + compute.max(memory);
+        SimTiming { total, compute, memory, launch, memory_bound: memory > compute }
+    }
+
+    /// Simulate an entire model (list of work units) at `batch`; returns
+    /// (total seconds, per-layer timings).
+    pub fn model_time(&self, layers: &[WorkUnit], batch: usize) -> (f64, Vec<SimTiming>) {
+        let timings: Vec<SimTiming> = layers.iter().map(|l| self.layer_time(l, batch)).collect();
+        let total = timings.iter().map(|t| t.total).sum();
+        (total, timings)
+    }
+
+    /// Host→device copy over the system interconnect (measured bandwidth).
+    pub fn host_to_device(&self, bytes: f64) -> SimCopy {
+        let bw = self.profile.interconnect_measured_gbs * 1e9;
+        SimCopy { bytes, seconds: bytes / bw }
+    }
+
+    /// Largest batch that fits device memory given per-item activation
+    /// footprint + weights (used to bound the Table-2 batch sweeps).
+    pub fn max_batch(&self, layers: &[WorkUnit]) -> usize {
+        let mem = match self.device {
+            Device::Gpu => self.profile.gpu_mem_gb * 1e9,
+            Device::Cpu => self.profile.host_mem_gb * 1e9,
+        };
+        let weights: f64 = layers.iter().map(|l| l.weight_bytes).sum();
+        // Peak live activations ≈ the largest single layer's activations ×2
+        // (in + out), a standard serving approximation.
+        let peak_act: f64 = layers
+            .iter()
+            .map(|l| l.act_bytes_per_item)
+            .fold(0.0, f64::max)
+            * 2.0;
+        if peak_act <= 0.0 {
+            return 1;
+        }
+        (((mem * 0.9 - weights) / peak_act).max(1.0)) as usize
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("system", Json::str(&self.profile.name)),
+            (
+                "device",
+                Json::str(match self.device {
+                    Device::Cpu => "cpu",
+                    Device::Gpu => "gpu",
+                }),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sysmodel::profile::systems;
+
+    fn conv() -> WorkUnit {
+        // A mid-size ResNet conv: ~200 MFLOPs/item, 3 MB activations, 2 MB weights.
+        WorkUnit::new("Conv2D", 2e8, 3e6, 2e6)
+    }
+
+    #[test]
+    fn v100_beats_k80() {
+        let p3 = Simulator::new(systems()["aws_p3"].clone(), Device::Gpu);
+        let p2 = Simulator::new(systems()["aws_p2"].clone(), Device::Gpu);
+        let w = conv();
+        assert!(p3.layer_time(&w, 32).total < p2.layer_time(&w, 32).total);
+    }
+
+    #[test]
+    fn latency_ordering_matches_paper_fig7() {
+        // V100 < P100 < M60 < K80 at moderate batch.
+        let order = ["aws_p3", "ibm_p8", "aws_g3", "aws_p2"];
+        let w = conv();
+        let times: Vec<f64> = order
+            .iter()
+            .map(|s| Simulator::new(systems()[*s].clone(), Device::Gpu).layer_time(&w, 64).total)
+            .collect();
+        for i in 1..times.len() {
+            assert!(times[i - 1] < times[i], "{order:?} → {times:?}");
+        }
+    }
+
+    #[test]
+    fn batch_amortizes_launch_and_weights() {
+        let sim = Simulator::new(systems()["aws_p3"].clone(), Device::Gpu);
+        let w = conv();
+        let t1 = sim.layer_time(&w, 1).total;
+        let t64 = sim.layer_time(&w, 64).total;
+        // Throughput at batch 64 must exceed batch 1 (Fig 6 speedup > 1).
+        assert!(64.0 / t64 > 1.0 / t1);
+    }
+
+    #[test]
+    fn weight_heavy_layer_is_memory_bound_at_batch1() {
+        // VGG/AlexNet fc6-style layer: moderate flops, huge weights.
+        let fc6 = WorkUnit::new("Dense", 7.5e7, 8e4, 150e6);
+        let sim = Simulator::new(systems()["aws_p3"].clone(), Device::Gpu);
+        let t = sim.layer_time(&fc6, 1);
+        assert!(t.memory_bound, "fc6 at batch 1 must be bandwidth-bound: {t:?}");
+        // …and becomes compute-bound only at large batch.
+        let t256 = sim.layer_time(&fc6, 256);
+        assert!(t256.compute > t.compute);
+    }
+
+    #[test]
+    fn nvlink_copy_faster_than_pcie_fig8() {
+        let p3 = Simulator::new(systems()["aws_p3"].clone(), Device::Gpu);
+        let p8 = Simulator::new(systems()["ibm_p8"].clone(), Device::Gpu);
+        let fc6_weights = 37_748_736.0 * 4.0; // AlexNet fc6 9216×4096 f32
+        let c_p3 = p3.host_to_device(fc6_weights);
+        let c_p8 = p8.host_to_device(fc6_weights);
+        assert!(c_p8.seconds < c_p3.seconds, "NVLink must beat PCIe");
+        // Ratio close to 33/12 measured bandwidth ratio.
+        let ratio = c_p3.seconds / c_p8.seconds;
+        assert!((2.0..4.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn p8_cpu_faster_than_xeon() {
+        let p8 = Simulator::new(systems()["ibm_p8"].clone(), Device::Cpu);
+        let p3 = Simulator::new(systems()["aws_p3"].clone(), Device::Cpu);
+        let w = conv();
+        let s = p3.layer_time(&w, 16).total / p8.layer_time(&w, 16).total;
+        // Paper: 1.7×–4.1× speedup of P8 over Xeon E5-2686.
+        assert!((1.3..5.0).contains(&s), "speedup {s}");
+    }
+
+    #[test]
+    fn max_batch_is_positive_and_memory_scaled() {
+        let sim_big = Simulator::new(systems()["aws_p3"].clone(), Device::Gpu);
+        let sim_small = Simulator::new(systems()["aws_g3"].clone(), Device::Gpu);
+        let layers = vec![conv(); 20];
+        assert!(sim_big.max_batch(&layers) >= sim_small.max_batch(&layers));
+        assert!(sim_small.max_batch(&layers) >= 1);
+    }
+
+    #[test]
+    fn property_more_work_never_faster() {
+        crate::util::rng::forall(31, 100, |rng| {
+            let sim = Simulator::new(systems()["aws_p3"].clone(), Device::Gpu);
+            let f = rng.range_f64(1e6, 1e10);
+            let a = rng.range_f64(1e4, 1e8);
+            let wt = rng.range_f64(0.0, 1e8);
+            let w1 = WorkUnit::new("Conv2D", f, a, wt);
+            let w2 = WorkUnit::new("Conv2D", f * 2.0, a, wt);
+            let b = 1 + rng.below(256) as usize;
+            assert!(sim.layer_time(&w2, b).total >= sim.layer_time(&w1, b).total);
+            // Larger batch never reduces total time either.
+            assert!(sim.layer_time(&w1, b + 1).total >= sim.layer_time(&w1, b).total * 0.999);
+        });
+    }
+}

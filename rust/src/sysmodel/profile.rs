@@ -1,0 +1,196 @@
+//! System profiles — the paper's Table 1, plus the host itself.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Static description of one benchmarking system (a Table-1 row).
+#[derive(Debug, Clone)]
+pub struct SystemProfile {
+    /// Registry name, e.g. `aws_p3`.
+    pub name: String,
+    pub cpu_name: String,
+    pub gpu_name: String,
+    pub gpu_architecture: String,
+    /// Theoretical FP32 throughput (TFLOPs) — Table 1 column.
+    pub gpu_tflops: f64,
+    /// GPU memory bandwidth (GB/s) — Table 1 column.
+    pub gpu_mem_bw_gbs: f64,
+    pub gpu_mem_gb: f64,
+    /// Host CPU sustained GFLOPs (estimated; used for CPU-side runs).
+    pub cpu_gflops: f64,
+    pub cpu_mem_bw_gbs: f64,
+    pub host_mem_gb: f64,
+    /// CPU architecture string for agent resolution (`x86_64`, `ppc64le`).
+    pub architecture: String,
+    /// Host↔device interconnect (`pcie3` or `nvlink`).
+    pub interconnect: String,
+    /// Measured interconnect bandwidth GB/s (paper §5.2: PCIe-3 12,
+    /// NVLink 33).
+    pub interconnect_measured_gbs: f64,
+    /// On-demand cost — Table 1 column; 0 for on-prem (IBM P8).
+    pub cost_per_hr: f64,
+}
+
+impl SystemProfile {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("cpu", Json::str(&self.cpu_name)),
+            ("gpu", Json::str(&self.gpu_name)),
+            ("gpu_architecture", Json::str(&self.gpu_architecture)),
+            ("gpu_tflops", Json::num(self.gpu_tflops)),
+            ("gpu_mem_bw_gbs", Json::num(self.gpu_mem_bw_gbs)),
+            ("gpu_mem_gb", Json::num(self.gpu_mem_gb)),
+            ("architecture", Json::str(&self.architecture)),
+            ("interconnect", Json::str(&self.interconnect)),
+            ("interconnect_measured_gbs", Json::num(self.interconnect_measured_gbs)),
+            ("cost_per_hr", Json::num(self.cost_per_hr)),
+        ])
+    }
+}
+
+/// Known interconnects with (theoretical, measured) GB/s — paper §5.2.
+pub const INTERCONNECTS: &[(&str, f64, f64)] =
+    &[("pcie3", 16.0, 12.0), ("nvlink", 40.0, 33.0)];
+
+/// The paper's Table 1 systems (plus `local` — the actual host, used when
+/// agents run real PJRT executions rather than simulations).
+pub fn systems() -> BTreeMap<String, SystemProfile> {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "aws_p3".to_string(),
+        SystemProfile {
+            name: "aws_p3".into(),
+            cpu_name: "Intel Xeon E5-2686 v4 @ 2.30GHz".into(),
+            gpu_name: "Tesla V100-SXM2-16GB".into(),
+            gpu_architecture: "Volta".into(),
+            gpu_tflops: 15.7,
+            gpu_mem_bw_gbs: 900.0,
+            gpu_mem_gb: 16.0,
+            cpu_gflops: 590.0,
+            cpu_mem_bw_gbs: 60.0,
+            host_mem_gb: 61.0,
+            architecture: "x86_64".into(),
+            interconnect: "pcie3".into(),
+            interconnect_measured_gbs: 12.0,
+            cost_per_hr: 3.06,
+        },
+    );
+    m.insert(
+        "aws_g3".to_string(),
+        SystemProfile {
+            name: "aws_g3".into(),
+            cpu_name: "Intel Xeon E5-2686 v4 @ 2.30GHz".into(),
+            gpu_name: "Tesla M60".into(),
+            gpu_architecture: "Maxwell".into(),
+            gpu_tflops: 9.6,
+            gpu_mem_bw_gbs: 320.0,
+            gpu_mem_gb: 8.0,
+            cpu_gflops: 295.0,
+            cpu_mem_bw_gbs: 40.0,
+            host_mem_gb: 30.5,
+            architecture: "x86_64".into(),
+            interconnect: "pcie3".into(),
+            interconnect_measured_gbs: 12.0,
+            cost_per_hr: 0.90,
+        },
+    );
+    m.insert(
+        "aws_p2".to_string(),
+        SystemProfile {
+            name: "aws_p2".into(),
+            cpu_name: "Intel Xeon E5-2686 v4 @ 2.30GHz".into(),
+            gpu_name: "Tesla K80".into(),
+            gpu_architecture: "Kepler".into(),
+            // K80 per-die FP32: 5.6 TFLOPs (Table 1) but Kepler sustains a
+            // far lower fraction on DL kernels; the lower memory clock of
+            // the K80 (480 GB/s shared across two dies → ~240 effective)
+            // is folded into the bandwidth figure.
+            gpu_tflops: 5.6,
+            gpu_mem_bw_gbs: 240.0,
+            gpu_mem_gb: 12.0,
+            cpu_gflops: 295.0,
+            cpu_mem_bw_gbs: 40.0,
+            host_mem_gb: 61.0,
+            architecture: "x86_64".into(),
+            interconnect: "pcie3".into(),
+            interconnect_measured_gbs: 12.0,
+            cost_per_hr: 0.75,
+        },
+    );
+    m.insert(
+        "ibm_p8".to_string(),
+        SystemProfile {
+            name: "ibm_p8".into(),
+            cpu_name: "IBM S822LC Power8 @ 3.5GHz".into(),
+            gpu_name: "Tesla P100-SXM2".into(),
+            gpu_architecture: "Pascal".into(),
+            gpu_tflops: 10.6,
+            gpu_mem_bw_gbs: 732.0,
+            gpu_mem_gb: 16.0,
+            // Paper §5.1: P8 1.7×–4.1× over the Xeon (10 cores × 80 SMT).
+            cpu_gflops: 1475.0,
+            cpu_mem_bw_gbs: 115.0,
+            host_mem_gb: 128.0,
+            architecture: "ppc64le".into(),
+            interconnect: "nvlink".into(),
+            interconnect_measured_gbs: 33.0,
+            cost_per_hr: 0.0,
+        },
+    );
+    m.insert(
+        "local".to_string(),
+        SystemProfile {
+            name: "local".into(),
+            cpu_name: "host CPU (PJRT CPU client)".into(),
+            gpu_name: "none".into(),
+            gpu_architecture: "none".into(),
+            gpu_tflops: 0.0,
+            gpu_mem_bw_gbs: 0.0,
+            gpu_mem_gb: 0.0,
+            cpu_gflops: 50.0,
+            cpu_mem_bw_gbs: 10.0,
+            host_mem_gb: 4.0,
+            architecture: std::env::consts::ARCH.to_string(),
+            interconnect: "none".into(),
+            interconnect_measured_gbs: f64::INFINITY,
+            cost_per_hr: 0.0,
+        },
+    );
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_present() {
+        let s = systems();
+        for name in ["aws_p3", "aws_g3", "aws_p2", "ibm_p8", "local"] {
+            assert!(s.contains_key(name), "missing {name}");
+        }
+        // Spot-check Table 1 numbers.
+        assert_eq!(s["aws_p3"].gpu_tflops, 15.7);
+        assert_eq!(s["aws_p3"].gpu_mem_bw_gbs, 900.0);
+        assert_eq!(s["aws_p3"].cost_per_hr, 3.06);
+        assert_eq!(s["ibm_p8"].gpu_architecture, "Pascal");
+        assert_eq!(s["ibm_p8"].interconnect, "nvlink");
+        assert_eq!(s["aws_g3"].cost_per_hr, 0.90);
+        assert_eq!(s["aws_p2"].cost_per_hr, 0.75);
+    }
+
+    #[test]
+    fn json_has_core_fields() {
+        let j = systems()["aws_p3"].to_json();
+        assert_eq!(j.get("gpu_architecture").unwrap().as_str(), Some("Volta"));
+        assert_eq!(j.get("interconnect").unwrap().as_str(), Some("pcie3"));
+    }
+
+    #[test]
+    fn interconnect_constants() {
+        let nv = INTERCONNECTS.iter().find(|(n, _, _)| *n == "nvlink").unwrap();
+        assert_eq!(nv.1, 40.0);
+        assert_eq!(nv.2, 33.0);
+    }
+}

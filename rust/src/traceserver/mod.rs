@@ -1,0 +1,268 @@
+//! The tracing server (paper §4.5.3): aggregates trace events published by
+//! agents into a single end-to-end timeline and supports the "zoom-in"
+//! analysis of §5.2 (Fig 8) and the layer↔kernel correlation of §5.3
+//! (Table 3).
+
+use crate::tracing::{Span, SpanSink, TraceLevel};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// In-process trace aggregation service. Accepts spans from any number of
+/// publishers (it is a [`SpanSink`], so tracers can point straight at it or
+/// reach it through the wire protocol) and assembles per-trace timelines.
+#[derive(Default)]
+pub struct TraceServer {
+    by_trace: Mutex<BTreeMap<u64, Vec<Span>>>,
+}
+
+impl TraceServer {
+    pub fn new() -> Arc<TraceServer> {
+        Arc::new(TraceServer::default())
+    }
+
+    pub fn trace_ids(&self) -> Vec<u64> {
+        self.by_trace.lock().unwrap().keys().copied().collect()
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.by_trace.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+
+    /// The assembled timeline for one trace, sorted by start time (ties
+    /// broken by span id so ordering is deterministic).
+    pub fn timeline(&self, trace_id: u64) -> Timeline {
+        let mut spans = self
+            .by_trace
+            .lock()
+            .unwrap()
+            .get(&trace_id)
+            .cloned()
+            .unwrap_or_default();
+        spans.sort_by_key(|s| (s.start_ns, s.span_id));
+        Timeline { trace_id, spans }
+    }
+
+    pub fn clear(&self) {
+        self.by_trace.lock().unwrap().clear();
+    }
+}
+
+impl SpanSink for TraceServer {
+    fn publish(&self, span: Span) {
+        self.by_trace.lock().unwrap().entry(span.trace_id).or_default().push(span);
+    }
+}
+
+/// One trace's spans, ordered, with zoom/correlation queries.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub trace_id: u64,
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Total traced interval (first start → last end), ms.
+    pub fn total_ms(&self) -> f64 {
+        let start = self.spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+        let end = self.spans.iter().map(|s| s.end_ns).max().unwrap_or(0);
+        (end.saturating_sub(start)) as f64 / 1e6
+    }
+
+    /// Spans at a given level.
+    pub fn at_level(&self, level: TraceLevel) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.level == level).collect()
+    }
+
+    /// "Zoom into" a span: the span plus its descendants (the paper's
+    /// Fig-8 workflow — zoom into the longest-running layer).
+    pub fn zoom(&self, span_id: u64) -> Vec<&Span> {
+        let mut keep: Vec<&Span> = Vec::new();
+        let mut frontier = vec![span_id];
+        // Include the root span itself.
+        if let Some(root) = self.spans.iter().find(|s| s.span_id == span_id) {
+            keep.push(root);
+        }
+        while let Some(pid) = frontier.pop() {
+            for s in self.spans.iter().filter(|s| s.parent_id == Some(pid)) {
+                keep.push(s);
+                frontier.push(s.span_id);
+            }
+        }
+        keep.sort_by_key(|s| (s.start_ns, s.span_id));
+        keep
+    }
+
+    /// The longest span at a level — e.g. "the longest-running layer (fc6)".
+    pub fn longest(&self, level: TraceLevel) -> Option<&Span> {
+        self.at_level(level).into_iter().max_by_key(|s| s.duration_ns())
+    }
+
+    /// Correlate SYSTEM-level kernels to their FRAMEWORK-level parent layer
+    /// (Table 3): returns (layer, kernels) pairs ordered by layer time desc.
+    pub fn layer_kernel_correlation(&self) -> Vec<(Span, Vec<Span>)> {
+        let mut out: Vec<(Span, Vec<Span>)> = Vec::new();
+        for layer in self.at_level(TraceLevel::Framework) {
+            let kernels: Vec<Span> = self
+                .spans
+                .iter()
+                .filter(|s| s.level == TraceLevel::System && s.parent_id == Some(layer.span_id))
+                .cloned()
+                .collect();
+            out.push(((*layer).clone(), kernels));
+        }
+        out.sort_by(|a, b| b.0.duration_ns().cmp(&a.0.duration_ns()));
+        out
+    }
+
+    /// ASCII rendering of the timeline (the web UI's visualization stand-in;
+    /// indentation mirrors span nesting).
+    pub fn render(&self) -> String {
+        let mut out = format!("trace {} — {:.3} ms total\n", self.trace_id, self.total_ms());
+        let origin = self.spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+        // depth by walking parents
+        let depth_of = |s: &Span| -> usize {
+            let mut d = 0;
+            let mut cur = s.parent_id;
+            while let Some(pid) = cur {
+                d += 1;
+                cur = self.spans.iter().find(|x| x.span_id == pid).and_then(|x| x.parent_id);
+                if d > 16 {
+                    break;
+                }
+            }
+            d
+        };
+        for s in &self.spans {
+            let indent = "  ".repeat(depth_of(s));
+            out.push_str(&format!(
+                "{indent}[{:>9.3}ms +{:>8.3}ms] {} ({})\n",
+                (s.start_ns - origin) as f64 / 1e6,
+                s.duration_ms(),
+                s.name,
+                s.level.as_str(),
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::num(self.trace_id as f64)),
+            ("total_ms", Json::num(self.total_ms())),
+            ("spans", Json::arr(self.spans.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracing::{SimClock, Tracer};
+
+    /// Build a synthetic cold-start-style trace: model → layers → kernels.
+    fn build_trace(server: &Arc<TraceServer>) -> u64 {
+        let clock = Arc::new(SimClock::new());
+        let tracer = Tracer::new(TraceLevel::Full, clock.clone(), server.clone());
+        let t = tracer.new_trace();
+        let root = tracer.start(t, None, TraceLevel::Model, "predict").unwrap();
+        let rid = root.id();
+        for (layer, _ms, kernels) in [
+            ("conv1", 2.0, vec![("im2col", 0.5), ("sgemm", 1.5)]),
+            ("fc6", 39.44, vec![("weight_copy_h2d", 35.0), ("sgemm", 4.44)]),
+            ("fc7", 5.0, vec![("sgemm", 5.0)]),
+        ] {
+            let lspan = tracer.start(t, Some(rid), TraceLevel::Framework, layer).unwrap();
+            let lid = lspan.id();
+            for (k, kms) in kernels {
+                let kspan = tracer.start(t, Some(lid), TraceLevel::System, k).unwrap();
+                clock.advance_secs(kms / 1e3);
+                kspan.finish();
+            }
+            lspan.finish();
+        }
+        root.finish();
+        t
+    }
+
+    #[test]
+    fn aggregates_into_single_timeline() {
+        let server = TraceServer::new();
+        let t = build_trace(&server);
+        let tl = server.timeline(t);
+        assert_eq!(tl.spans.len(), 1 + 3 + 5);
+        assert!((tl.total_ms() - 46.44).abs() < 0.01, "{}", tl.total_ms());
+    }
+
+    #[test]
+    fn zoom_into_longest_layer_finds_fc6_copy() {
+        // The paper's §5.2 workflow: longest layer is fc6; zooming in shows
+        // the weight copy dominates.
+        let server = TraceServer::new();
+        let t = build_trace(&server);
+        let tl = server.timeline(t);
+        let longest = tl.longest(TraceLevel::Framework).unwrap();
+        assert_eq!(longest.name, "fc6");
+        let inside = tl.zoom(longest.span_id);
+        assert_eq!(inside.len(), 3); // fc6 + 2 kernels
+        let copy = inside.iter().find(|s| s.name == "weight_copy_h2d").unwrap();
+        assert!(copy.duration_ms() > 30.0);
+    }
+
+    #[test]
+    fn layer_kernel_correlation_table3_shape() {
+        let server = TraceServer::new();
+        let t = build_trace(&server);
+        let tl = server.timeline(t);
+        let corr = tl.layer_kernel_correlation();
+        assert_eq!(corr.len(), 3);
+        // Ordered by layer time desc: fc6 first.
+        assert_eq!(corr[0].0.name, "fc6");
+        assert_eq!(corr[0].1.len(), 2);
+        // Dominant kernel of fc6 is the weight copy.
+        let dominant = corr[0].1.iter().max_by_key(|k| k.duration_ns()).unwrap();
+        assert_eq!(dominant.name, "weight_copy_h2d");
+    }
+
+    #[test]
+    fn multiple_traces_kept_separate() {
+        let server = TraceServer::new();
+        let t1 = build_trace(&server);
+        let t2 = build_trace(&server);
+        assert_ne!(t1, t2);
+        assert_eq!(server.trace_ids().len(), 2);
+        assert_eq!(server.timeline(t1).spans.len(), server.timeline(t2).spans.len());
+    }
+
+    #[test]
+    fn render_indents_by_nesting() {
+        let server = TraceServer::new();
+        let t = build_trace(&server);
+        let text = server.timeline(t).render();
+        assert!(text.contains("predict"));
+        assert!(text.contains("  ") && text.contains("fc6"));
+        assert!(text.contains("    ") && text.contains("weight_copy_h2d"));
+    }
+
+    #[test]
+    fn timeline_json_roundtrip_spans() {
+        let server = TraceServer::new();
+        let t = build_trace(&server);
+        let j = server.timeline(t).to_json();
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 9);
+        assert!(Span::from_json(&spans[0]).is_some());
+    }
+
+    #[test]
+    fn empty_trace_is_empty() {
+        let server = TraceServer::new();
+        let tl = server.timeline(999);
+        assert!(tl.is_empty());
+        assert_eq!(tl.total_ms(), 0.0);
+    }
+}

@@ -1,0 +1,459 @@
+//! Across-stack tracing hooks (paper §4.4.4, F9).
+//!
+//! A *tracing hook* is a start/end pair capturing an interval of time plus
+//! context and metadata — a *trace event* (span). Spans carry an
+//! OpenTracing-style identity (trace id, span id, parent span id) so the
+//! tracing server can assemble events from different levels — and even
+//! different processes — into a single end-to-end timeline.
+//!
+//! Levels follow the paper's `TraceLevel` enum (Listing 4):
+//! `NONE < MODEL < FRAMEWORK < SYSTEM ≤ FULL`. A span is recorded only when
+//! its level is enabled, so tracing can be switched off entirely on the hot
+//! path (the ablation bench `ablation_tracing` measures exactly this).
+//!
+//! Timestamps are *logical nanoseconds* supplied by a [`Clock`]: wall-clock
+//! by default, simulator-driven for the Table-1 system models (§4.4.4: "the
+//! timestamps of trace events do not need to reflect the actual wall clock
+//! time").
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Trace verbosity — mirrors the paper's protobuf enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    None = 0,
+    /// Steps in the evaluation pipeline (pre-process, predict, post-process).
+    Model = 1,
+    /// Layers within the framework.
+    Framework = 2,
+    /// System profilers: device kernels, memory copies, counters.
+    System = 3,
+    /// Everything.
+    Full = 4,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> TraceLevel {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => TraceLevel::None,
+            "model" => TraceLevel::Model,
+            "framework" => TraceLevel::Framework,
+            "system" => TraceLevel::System,
+            _ => TraceLevel::Full,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceLevel::None => "none",
+            TraceLevel::Model => "model",
+            TraceLevel::Framework => "framework",
+            TraceLevel::System => "system",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+/// A completed trace event.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: Option<u64>,
+    pub name: String,
+    pub level: TraceLevel,
+    /// Start timestamp, logical nanoseconds.
+    pub start_ns: u64,
+    /// End timestamp, logical nanoseconds.
+    pub end_ns: u64,
+    /// Free-form key/value metadata (layer shape, kernel name, bytes, ...).
+    pub tags: Vec<(String, String)>,
+}
+
+impl Span {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    pub fn duration_ms(&self) -> f64 {
+        self.duration_ns() as f64 / 1e6
+    }
+
+    pub fn tag(&self, key: &str) -> Option<&str> {
+        self.tags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::num(self.trace_id as f64)),
+            ("span_id", Json::num(self.span_id as f64)),
+            (
+                "parent_id",
+                self.parent_id.map(|p| Json::num(p as f64)).unwrap_or(Json::Null),
+            ),
+            ("name", Json::str(&self.name)),
+            ("level", Json::str(self.level.as_str())),
+            ("start_ns", Json::num(self.start_ns as f64)),
+            ("end_ns", Json::num(self.end_ns as f64)),
+            (
+                "tags",
+                Json::Obj(
+                    self.tags
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::str(v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Span> {
+        Some(Span {
+            trace_id: j.get("trace_id")?.as_u64()?,
+            span_id: j.get("span_id")?.as_u64()?,
+            parent_id: j.get("parent_id").and_then(|v| v.as_u64()),
+            name: j.get("name")?.as_str()?.to_string(),
+            level: TraceLevel::parse(j.str_or("level", "full")),
+            start_ns: j.get("start_ns")?.as_u64()?,
+            end_ns: j.get("end_ns")?.as_u64()?,
+            tags: j
+                .get("tags")
+                .and_then(|t| t.as_obj())
+                .map(|m| {
+                    m.iter()
+                        .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Time source. Wall-clock for real executions; simulators advance their own
+/// logical clock and stamp spans with simulated time.
+pub trait Clock: Send + Sync {
+    fn now_ns(&self) -> u64;
+}
+
+/// Monotonic wall-clock.
+pub struct WallClock {
+    origin: std::time::Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { origin: std::time::Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// A manually-advanced clock for simulators and tests.
+#[derive(Default)]
+pub struct SimClock {
+    ns: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance_ns(&self, ns: u64) {
+        self.ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn advance_secs(&self, s: f64) {
+        self.advance_ns((s * 1e9) as u64);
+    }
+
+    pub fn set_ns(&self, ns: u64) {
+        self.ns.store(ns, Ordering::Relaxed);
+    }
+}
+
+impl Clock for SimClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::Relaxed)
+    }
+}
+
+/// Destination for completed spans. The in-process collector and the remote
+/// trace-server client both implement this.
+pub trait SpanSink: Send + Sync {
+    fn publish(&self, span: Span);
+}
+
+/// Collects spans in memory — the default sink, also used by benches/tests.
+#[derive(Default)]
+pub struct MemorySink {
+    spans: Mutex<Vec<Span>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Arc<MemorySink> {
+        Arc::new(MemorySink::default())
+    }
+
+    pub fn drain(&self) -> Vec<Span> {
+        std::mem::take(&mut *self.spans.lock().unwrap())
+    }
+
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl SpanSink for MemorySink {
+    fn publish(&self, span: Span) {
+        self.spans.lock().unwrap().push(span);
+    }
+}
+
+/// Sink that drops everything (trace level NONE fast path).
+pub struct NullSink;
+
+impl SpanSink for NullSink {
+    fn publish(&self, _span: Span) {}
+}
+
+/// The tracer handed to agents/pipelines: filters by level, assigns ids,
+/// stamps times, forwards to the sink.
+pub struct Tracer {
+    level: TraceLevel,
+    clock: Arc<dyn Clock>,
+    sink: Arc<dyn SpanSink>,
+    next_id: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(level: TraceLevel, clock: Arc<dyn Clock>, sink: Arc<dyn SpanSink>) -> Arc<Tracer> {
+        // Ids draw from a process-global counter so spans from different
+        // tracers (one per agent) can never collide when aggregated by a
+        // shared trace server — the distributed-tracing requirement.
+        static NEXT: AtomicU64 = AtomicU64::new(1);
+        let base = NEXT.fetch_add(1 << 20, Ordering::Relaxed);
+        Arc::new(Tracer { level, clock, sink, next_id: AtomicU64::new(base) })
+    }
+
+    /// Wall-clock tracer into a fresh memory sink (common setup).
+    pub fn in_memory(level: TraceLevel) -> (Arc<Tracer>, Arc<MemorySink>) {
+        let sink = MemorySink::new();
+        let tracer = Tracer::new(level, Arc::new(WallClock::new()), sink.clone());
+        (tracer, sink)
+    }
+
+    /// Disabled tracer — no allocation, no publication.
+    pub fn disabled() -> Arc<Tracer> {
+        Tracer::new(TraceLevel::None, Arc::new(WallClock::new()), Arc::new(NullSink))
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    pub fn enabled(&self, level: TraceLevel) -> bool {
+        level != TraceLevel::None && self.level >= level
+    }
+
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// Allocate a fresh trace id for a new end-to-end evaluation.
+    pub fn new_trace(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Start a span; returns a guard that publishes on [`ActiveSpan::finish`]
+    /// (or drop). Returns `None` when the level is filtered out — callers
+    /// pay only the enabled-check.
+    pub fn start(
+        self: &Arc<Self>,
+        trace_id: u64,
+        parent_id: Option<u64>,
+        level: TraceLevel,
+        name: &str,
+    ) -> Option<ActiveSpan> {
+        if !self.enabled(level) {
+            return None;
+        }
+        let span_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Some(ActiveSpan {
+            tracer: self.clone(),
+            span: Some(Span {
+                trace_id,
+                span_id,
+                parent_id,
+                name: name.to_string(),
+                level,
+                start_ns: self.clock.now_ns(),
+                end_ns: 0,
+                tags: Vec::new(),
+            }),
+        })
+    }
+
+    /// Publish a pre-built span (used by simulators that compute intervals
+    /// analytically rather than measuring them).
+    pub fn publish(&self, span: Span) {
+        if self.enabled(span.level) {
+            self.sink.publish(span);
+        }
+    }
+}
+
+/// Live span guard.
+pub struct ActiveSpan {
+    tracer: Arc<Tracer>,
+    span: Option<Span>,
+}
+
+impl ActiveSpan {
+    pub fn id(&self) -> u64 {
+        self.span.as_ref().unwrap().span_id
+    }
+
+    pub fn tag(&mut self, key: &str, value: impl Into<String>) {
+        if let Some(s) = self.span.as_mut() {
+            s.tags.push((key.to_string(), value.into()));
+        }
+    }
+
+    /// Close and publish the span now.
+    pub fn finish(mut self) {
+        self.finish_inner();
+    }
+
+    fn finish_inner(&mut self) {
+        if let Some(mut s) = self.span.take() {
+            s.end_ns = self.tracer.clock.now_ns();
+            self.tracer.sink.publish(s);
+        }
+    }
+}
+
+impl Drop for ActiveSpan {
+    fn drop(&mut self) {
+        self.finish_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_matches_listing4() {
+        assert!(TraceLevel::None < TraceLevel::Model);
+        assert!(TraceLevel::Model < TraceLevel::Framework);
+        assert!(TraceLevel::Framework < TraceLevel::System);
+        assert!(TraceLevel::System < TraceLevel::Full);
+        assert_eq!(TraceLevel::parse("FRAMEWORK"), TraceLevel::Framework);
+    }
+
+    #[test]
+    fn level_filtering() {
+        let (tracer, sink) = Tracer::in_memory(TraceLevel::Model);
+        let t = tracer.new_trace();
+        assert!(tracer.start(t, None, TraceLevel::Model, "predict").is_some());
+        assert!(tracer.start(t, None, TraceLevel::Framework, "conv").is_none());
+        assert!(tracer.start(t, None, TraceLevel::System, "kernel").is_none());
+        drop(tracer);
+        assert_eq!(sink.len(), 1);
+    }
+
+    #[test]
+    fn full_level_records_everything() {
+        let (tracer, sink) = Tracer::in_memory(TraceLevel::Full);
+        let t = tracer.new_trace();
+        for level in [TraceLevel::Model, TraceLevel::Framework, TraceLevel::System] {
+            tracer.start(t, None, level, "x").unwrap().finish();
+        }
+        assert_eq!(sink.len(), 3);
+    }
+
+    #[test]
+    fn parent_child_identity() {
+        let (tracer, sink) = Tracer::in_memory(TraceLevel::Full);
+        let t = tracer.new_trace();
+        let parent = tracer.start(t, None, TraceLevel::Model, "predict").unwrap();
+        let pid = parent.id();
+        let child = tracer.start(t, Some(pid), TraceLevel::Framework, "conv2d/Conv2D").unwrap();
+        child.finish();
+        parent.finish();
+        let spans = sink.drain();
+        assert_eq!(spans.len(), 2);
+        let conv = spans.iter().find(|s| s.name == "conv2d/Conv2D").unwrap();
+        assert_eq!(conv.parent_id, Some(pid));
+        assert_eq!(conv.trace_id, t);
+    }
+
+    #[test]
+    fn sim_clock_stamps_logical_time() {
+        let clock = Arc::new(SimClock::new());
+        let sink = MemorySink::new();
+        let tracer = Tracer::new(TraceLevel::Full, clock.clone(), sink.clone());
+        let t = tracer.new_trace();
+        let span = tracer.start(t, None, TraceLevel::System, "volta_cgemm").unwrap();
+        clock.advance_secs(0.00603); // the paper's K1: 6.03 ms
+        span.finish();
+        let s = &sink.drain()[0];
+        assert!((s.duration_ms() - 6.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tags_and_json_roundtrip() {
+        let (tracer, sink) = Tracer::in_memory(TraceLevel::Full);
+        let t = tracer.new_trace();
+        let mut span = tracer.start(t, None, TraceLevel::Framework, "fc6").unwrap();
+        span.tag("shape", "(64, 4096)");
+        span.tag("kind", "Dense");
+        span.finish();
+        let s = &sink.drain()[0];
+        assert_eq!(s.tag("shape"), Some("(64, 4096)"));
+        let j = s.to_json();
+        let back = Span::from_json(&j).unwrap();
+        assert_eq!(back.name, "fc6");
+        assert_eq!(back.tag("kind"), Some("Dense"));
+        assert_eq!(back.span_id, s.span_id);
+    }
+
+    #[test]
+    fn disabled_tracer_is_silent() {
+        let tracer = Tracer::disabled();
+        let t = tracer.new_trace();
+        assert!(tracer.start(t, None, TraceLevel::Model, "x").is_none());
+        assert!(!tracer.enabled(TraceLevel::Model));
+    }
+
+    #[test]
+    fn drop_publishes_span() {
+        let (tracer, sink) = Tracer::in_memory(TraceLevel::Full);
+        let t = tracer.new_trace();
+        {
+            let _span = tracer.start(t, None, TraceLevel::Model, "scoped");
+        }
+        assert_eq!(sink.len(), 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny command-line parser (offline substitute for `clap`).
+//!
+//! Supports the patterns the `mlms` CLI (F10) needs: subcommands,
+//! `--flag`, `--key value`, `--key=value`, positional arguments, and
+//! auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// `--key value` / `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw token list (everything after the subcommand).
+    ///
+    /// A `--key` followed by a token that does not itself start with `--` is
+    /// treated as `--key value`; otherwise it is a flag. This is greedy:
+    /// boolean switches must therefore appear after positionals / before
+    /// another `--option`, or use the unambiguous `--key=true` form.
+    pub fn parse(tokens: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.opts.insert(rest.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.opt(key) == Some("true")
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list option, e.g. `--batch-sizes 1,2,4`.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.opt(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Required option or a readable error.
+    pub fn require(&self, key: &str) -> Result<&str, String> {
+        self.opt(key).ok_or_else(|| format!("missing required option --{key}"))
+    }
+}
+
+/// A subcommand description for usage output.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// Render a usage screen in the conventional style.
+pub fn usage(program: &str, about: &str, commands: &[Command]) -> String {
+    let mut s = format!("{program} — {about}\n\nUSAGE:\n    {program} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n");
+    let width = commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in commands {
+        s.push_str(&format!("    {:width$}  {}\n", c.name, c.about, width = width));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = Args::parse(&toks(&["--model", "resnet50", "--batch=8"]));
+        assert_eq!(a.opt("model"), Some("resnet50"));
+        assert_eq!(a.u64_or("batch", 1), 8);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&toks(&["run", "file.yml", "--verbose"]));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional, vec!["run", "file.yml"]);
+        // Greedy form: `--verbose` directly before a positional consumes it.
+        let b = Args::parse(&toks(&["--verbose=true", "file.yml"]));
+        assert!(b.flag("verbose"));
+        assert_eq!(b.positional, vec!["file.yml"]);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = Args::parse(&toks(&["--batch-sizes", "1,2, 4"]));
+        assert_eq!(a.list("batch-sizes"), vec!["1", "2", "4"]);
+        assert_eq!(a.opt_or("missing", "dflt"), "dflt");
+        assert_eq!(a.f64_or("rate", 1.5), 1.5);
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = Args::parse(&[]);
+        assert!(a.require("model").unwrap_err().contains("--model"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&toks(&["--trace", "--level", "full"]));
+        assert!(a.flag("trace"));
+        assert_eq!(a.opt("level"), Some("full"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "mlms",
+            "DL benchmarking platform",
+            &[
+                Command { name: "server", about: "run the server" },
+                Command { name: "agent", about: "run an agent" },
+            ],
+        );
+        assert!(u.contains("server"));
+        assert!(u.contains("COMMANDS"));
+    }
+}

@@ -1,0 +1,197 @@
+//! Deterministic PRNG + distribution sampling + property-test helper.
+//!
+//! No `rand` crate offline, so this xorshift64* generator backs: Poisson
+//! inter-arrival sampling for the online benchmarking scenario (§4.1.3),
+//! synthetic input generation, and the `proptest`-style randomized tests
+//! used across modules ([`forall`]).
+
+/// xorshift64* — tiny, fast, good-enough statistical quality for workload
+/// generation and tests (not cryptographic).
+#[derive(Debug, Clone)]
+pub struct Xorshift {
+    state: u64,
+}
+
+impl Xorshift {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        Xorshift { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in `[0, bound)`. `bound` must be > 0.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Rejection-free modulo is fine for our non-crypto uses.
+        self.next_u64() % bound
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Exponential inter-arrival gap with mean `1/rate` — the building block
+    /// of the Poisson request process in the online scenario.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let u = 1.0 - self.f64(); // (0, 1]
+        -u.ln() / rate
+    }
+
+    /// Poisson-distributed count with mean `lambda` (Knuth's method; fine
+    /// for the lambdas used by burst scenarios).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random ASCII identifier of length `n`.
+    pub fn ident(&mut self, n: usize) -> String {
+        const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_";
+        (0..n).map(|_| ALPHA[self.below(ALPHA.len() as u64) as usize] as char).collect()
+    }
+}
+
+/// Property-test driver: run `f` for `cases` seeded generators; on failure
+/// report the failing case index + seed so it can be replayed exactly.
+///
+/// This is the offline substitute for `proptest`: modules state invariants
+/// as `forall(seed, cases, |rng| ...)` blocks.
+pub fn forall(seed: u64, cases: usize, mut f: impl FnMut(&mut Xorshift)) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0xA24BAED4963EE407);
+        let mut rng = Xorshift::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {}",
+                panic_msg(&e)
+            );
+        }
+    }
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Xorshift::new(7);
+        let mut b = Xorshift::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xorshift::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Xorshift::new(2);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn exponential_mean_close() {
+        let mut r = Xorshift::new(3);
+        let rate = 50.0; // 50 req/s → mean gap 20ms
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.exponential(rate)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.001, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_close() {
+        let mut r = Xorshift::new(4);
+        let lambda = 6.5;
+        let n = 50_000;
+        let sum: u64 = (0..n).map(|_| r.poisson(lambda)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - lambda).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xorshift::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(9, 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(10, 5, |rng| {
+            let x = rng.below(10);
+            assert!(x < 5, "x was {x}"); // fails for roughly half the cases
+        });
+    }
+}

@@ -1,0 +1,296 @@
+//! Semantic versions and version constraints.
+//!
+//! Model manifests pin frameworks with constraint expressions like
+//! `'>=1.12.0 <2.0'` (paper Listing 1, lines 4–6); the server's agent
+//! resolution (§4.3 step 3) matches those constraints against the versions
+//! agents registered. This is the constraint engine for that path.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::str::FromStr;
+
+/// A `major.minor.patch` semantic version. Missing components default to 0,
+/// so `"2"` parses as `2.0.0` — matching how the paper writes `<2.0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Version {
+    pub major: u64,
+    pub minor: u64,
+    pub patch: u64,
+}
+
+impl Version {
+    pub const fn new(major: u64, minor: u64, patch: u64) -> Self {
+        Version { major, minor, patch }
+    }
+}
+
+impl FromStr for Version {
+    type Err = SemverError;
+
+    fn from_str(s: &str) -> Result<Self, SemverError> {
+        let s = s.trim().trim_start_matches('v');
+        // Ignore pre-release/build metadata if present ("1.2.0-rc1").
+        let core = s.split(|c| c == '-' || c == '+').next().unwrap_or("");
+        let mut parts = core.split('.');
+        let mut next = |name: &str| -> Result<u64, SemverError> {
+            match parts.next() {
+                None | Some("") => Ok(0),
+                Some(p) => p.parse::<u64>().map_err(|_| SemverError {
+                    input: s.to_string(),
+                    msg: format!("invalid {name} component {p:?}"),
+                }),
+            }
+        };
+        let major = next("major")?;
+        let minor = next("minor")?;
+        let patch = next("patch")?;
+        if parts.next().is_some() {
+            return Err(SemverError { input: s.to_string(), msg: "too many components".into() });
+        }
+        Ok(Version { major, minor, patch })
+    }
+}
+
+impl PartialOrd for Version {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Version {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.major, self.minor, self.patch).cmp(&(other.major, other.minor, other.patch))
+    }
+}
+
+impl fmt::Display for Version {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}.{}", self.major, self.minor, self.patch)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("invalid version/constraint {input:?}: {msg}")]
+pub struct SemverError {
+    pub input: String,
+    pub msg: String,
+}
+
+/// One comparison term of a constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// `^1.2.3`: compatible-within-major (within-minor when major == 0).
+    Caret,
+    /// `~1.2.3`: patch-level changes allowed.
+    Tilde,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Term {
+    op: Op,
+    version: Version,
+}
+
+impl Term {
+    fn matches(&self, v: Version) -> bool {
+        let c = v.cmp(&self.version);
+        match self.op {
+            Op::Eq => c == Ordering::Equal,
+            Op::Ne => c != Ordering::Equal,
+            Op::Lt => c == Ordering::Less,
+            Op::Le => c != Ordering::Greater,
+            Op::Gt => c == Ordering::Greater,
+            Op::Ge => c != Ordering::Less,
+            Op::Caret => {
+                let upper = if self.version.major > 0 {
+                    Version::new(self.version.major + 1, 0, 0)
+                } else {
+                    Version::new(0, self.version.minor + 1, 0)
+                };
+                v >= self.version && v < upper
+            }
+            Op::Tilde => {
+                let upper = Version::new(self.version.major, self.version.minor + 1, 0);
+                v >= self.version && v < upper
+            }
+        }
+    }
+}
+
+/// A conjunction of comparison terms, e.g. `>=1.12.0 <2.0`.
+///
+/// Terms may be separated by whitespace and/or commas. An empty or `*`
+/// constraint matches anything (the "ONNX model works across all
+/// frameworks" case in the paper).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Constraint {
+    terms: Vec<Term>,
+    source: String,
+}
+
+impl Constraint {
+    /// The match-anything constraint.
+    pub fn any() -> Constraint {
+        Constraint { terms: Vec::new(), source: "*".into() }
+    }
+
+    pub fn is_any(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn matches(&self, v: Version) -> bool {
+        self.terms.iter().all(|t| t.matches(v))
+    }
+
+    pub fn matches_str(&self, v: &str) -> bool {
+        v.parse::<Version>().map(|v| self.matches(v)).unwrap_or(false)
+    }
+
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+}
+
+impl FromStr for Constraint {
+    type Err = SemverError;
+
+    fn from_str(s: &str) -> Result<Self, SemverError> {
+        let src = s.trim();
+        if src.is_empty() || src == "*" {
+            return Ok(Constraint::any());
+        }
+        let mut terms = Vec::new();
+        for token in src.split(|c: char| c.is_whitespace() || c == ',') {
+            if token.is_empty() {
+                continue;
+            }
+            let (op, rest) = if let Some(r) = token.strip_prefix(">=") {
+                (Op::Ge, r)
+            } else if let Some(r) = token.strip_prefix("<=") {
+                (Op::Le, r)
+            } else if let Some(r) = token.strip_prefix("==") {
+                (Op::Eq, r)
+            } else if let Some(r) = token.strip_prefix("!=") {
+                (Op::Ne, r)
+            } else if let Some(r) = token.strip_prefix('>') {
+                (Op::Gt, r)
+            } else if let Some(r) = token.strip_prefix('<') {
+                (Op::Lt, r)
+            } else if let Some(r) = token.strip_prefix('^') {
+                (Op::Caret, r)
+            } else if let Some(r) = token.strip_prefix('~') {
+                (Op::Tilde, r)
+            } else if let Some(r) = token.strip_prefix('=') {
+                (Op::Eq, r)
+            } else {
+                (Op::Eq, token)
+            };
+            terms.push(Term { op, version: rest.parse()? });
+        }
+        Ok(Constraint { terms, source: src.to_string() })
+    }
+}
+
+impl fmt::Display for Constraint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.source)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &str) -> Version {
+        s.parse().unwrap()
+    }
+
+    fn c(s: &str) -> Constraint {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn parse_versions() {
+        assert_eq!(v("1.15.0"), Version::new(1, 15, 0));
+        assert_eq!(v("2"), Version::new(2, 0, 0));
+        assert_eq!(v("2.0"), Version::new(2, 0, 0));
+        assert_eq!(v("v1.2.3"), Version::new(1, 2, 3));
+        assert_eq!(v("1.2.3-rc1"), Version::new(1, 2, 3));
+        assert!("1.2.x".parse::<Version>().is_err());
+        assert!("1.2.3.4".parse::<Version>().is_err());
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(v("1.13.0") < v("1.15.0"));
+        assert!(v("2.0.0") > v("1.99.99"));
+        assert!(v("1.2.3") == v("1.2.3"));
+    }
+
+    #[test]
+    fn paper_listing1_constraint() {
+        // `>=1.12.0 < 2.0` from Listing 1.
+        let k = c(">=1.12.0 <2.0");
+        assert!(k.matches(v("1.12.0")));
+        assert!(k.matches(v("1.15.0")));
+        assert!(k.matches(v("1.13.1")));
+        assert!(!k.matches(v("2.0.0")));
+        assert!(!k.matches(v("1.11.9")));
+    }
+
+    #[test]
+    fn any_constraint() {
+        assert!(c("*").matches(v("0.0.1")));
+        assert!(c("").matches(v("99.0.0")));
+        assert!(c("*").is_any());
+    }
+
+    #[test]
+    fn exact_and_ne() {
+        assert!(c("1.15.0").matches(v("1.15.0")));
+        assert!(c("==1.15.0").matches(v("1.15.0")));
+        assert!(!c("1.15.0").matches(v("1.15.1")));
+        assert!(c("!=1.15.0").matches(v("1.15.1")));
+    }
+
+    #[test]
+    fn caret_and_tilde() {
+        assert!(c("^1.2.3").matches(v("1.9.0")));
+        assert!(!c("^1.2.3").matches(v("2.0.0")));
+        assert!(!c("^1.2.3").matches(v("1.2.2")));
+        assert!(c("^0.3.1").matches(v("0.3.9")));
+        assert!(!c("^0.3.1").matches(v("0.4.0")));
+        assert!(c("~1.2.3").matches(v("1.2.9")));
+        assert!(!c("~1.2.3").matches(v("1.3.0")));
+    }
+
+    #[test]
+    fn comma_separated() {
+        let k = c(">=1.0, <3");
+        assert!(k.matches(v("2.5.0")));
+        assert!(!k.matches(v("3.0.0")));
+    }
+
+    #[test]
+    fn property_constraint_boundaries() {
+        // Randomized boundary check: for any version range [lo, hi),
+        // >=lo <hi matches exactly versions in that half-open interval.
+        let mut rng = crate::util::rng::Xorshift::new(0xC0FFEE);
+        for _ in 0..200 {
+            let lo = Version::new(rng.below(4), rng.below(20), rng.below(10));
+            let hi = Version::new(lo.major + rng.below(3), rng.below(20), rng.below(10));
+            if hi <= lo {
+                continue;
+            }
+            let k: Constraint = format!(">={lo} <{hi}").parse().unwrap();
+            let probe = Version::new(rng.below(6), rng.below(25), rng.below(12));
+            assert_eq!(k.matches(probe), probe >= lo && probe < hi, "{k} vs {probe}");
+        }
+    }
+}

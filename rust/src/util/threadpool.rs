@@ -1,0 +1,347 @@
+//! Worker thread pool + bounded MPMC channel (offline substitute for tokio).
+//!
+//! The platform's concurrency points — the streaming evaluation pipeline
+//! (§4.4.2), the agent's request loop, the server's dispatcher, and the
+//! HTTP/RPC listeners — all run on these primitives. The bounded channel
+//! provides the back-pressure that makes the pipeline a true
+//! producer/consumer system ("overlap I/O with compute", F6).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A bounded multi-producer multi-consumer channel.
+///
+/// `send` blocks while the queue is at capacity (back-pressure); `recv`
+/// blocks while it is empty; both return `Err` once the channel is closed
+/// and drained. Constructed via [`Channel::bounded`], which hands out the
+/// two halves — the struct itself is a namespace.
+pub struct Channel<T> {
+    _marker: std::marker::PhantomData<T>,
+}
+
+pub(crate) struct Shared<T> {
+    queue: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    senders: usize,
+}
+
+/// Sending half. Cloneable; the channel closes when every sender is dropped
+/// or [`Sender::close`] is called.
+pub struct Sender<T> {
+    inner: Arc<Shared<T>>,
+}
+
+/// Receiving half. Cloneable for fan-out consumers.
+pub struct Receiver<T> {
+    inner: Arc<Shared<T>>,
+}
+
+/// Channel closed error.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[error("channel closed")]
+pub struct Closed;
+
+impl<T> Channel<T> {
+    pub fn bounded(capacity: usize) -> (Sender<T>, Receiver<T>) {
+        let inner = Arc::new(Shared {
+            queue: Mutex::new(State { items: VecDeque::new(), closed: false, senders: 1 }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        });
+        (Sender { inner: inner.clone() }, Receiver { inner })
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send with back-pressure.
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.inner.queue.lock().unwrap();
+        while st.items.len() >= self.inner.capacity && !st.closed {
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(Closed);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel; receivers drain remaining items then get `Err`.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.queue.lock().unwrap().senders += 1;
+        Sender { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            drop(st);
+            self.inner.not_empty.notify_all();
+            self.inner.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `Err(Closed)` after close + drain.
+    pub fn recv(&self) -> Result<T, Closed> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(Closed);
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Iterator that ends when the channel closes.
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver { inner: self.inner.clone() }
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool executing boxed jobs.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` named worker threads with a job queue of
+    /// `queue_capacity` (back-pressure on `execute`).
+    pub fn new(name: &str, workers: usize, queue_capacity: usize) -> ThreadPool {
+        let (tx, rx) = Channel::<Job>::bounded(queue_capacity);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let shutdown = shutdown.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while !shutdown.load(Ordering::Relaxed) {
+                            match rx.recv() {
+                                Ok(job) => job(),
+                                Err(Closed) => break,
+                            }
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers: handles, shutdown }
+    }
+
+    /// Enqueue a job; blocks when the queue is full.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool closed");
+    }
+
+    /// Wait for queued jobs to finish and join the workers.
+    pub fn join(mut self) {
+        self.tx.take(); // close the channel
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` over `items` with `workers` threads, preserving input order of
+/// results. Used by the server to fan an evaluation out to N agents (F4).
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let f = Arc::new(f);
+    let results: Arc<Mutex<Vec<Option<R>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let pool = ThreadPool::new("pmap", workers.max(1).min(n), n);
+    for (i, item) in items.into_iter().enumerate() {
+        let f = f.clone();
+        let results = results.clone();
+        pool.execute(move || {
+            let r = f(item);
+            results.lock().unwrap()[i] = Some(r);
+        });
+    }
+    pool.join();
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("pmap results leaked"))
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn channel_fifo() {
+        let (tx, rx) = Channel::bounded(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let got: Vec<i32> = (0..4).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_until_recv() {
+        let (tx, rx) = Channel::bounded(1);
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until the recv below
+            42
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(t.join().unwrap(), 42);
+        assert_eq!(rx.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn channel_close_drains() {
+        let (tx, rx) = Channel::bounded(8);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Err(Closed));
+    }
+
+    #[test]
+    fn pool_runs_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = ThreadPool::new("t", 4, 64);
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..50).collect::<Vec<u64>>(), 8, |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<u64> = parallel_map(Vec::<u64>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn mpmc_many_producers_consumers() {
+        let (tx, rx) = Channel::bounded(16);
+        let total = Arc::new(AtomicUsize::new(0));
+        let producers: Vec<_> = (0..4)
+            .map(|_| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..250usize {
+                        tx.send(i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    while let Ok(_v) = rx.recv() {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+}

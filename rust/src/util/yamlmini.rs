@@ -1,0 +1,591 @@
+//! A YAML-subset parser sufficient for MLModelScope manifests.
+//!
+//! The paper (§4.1) specifies model and framework manifests in YAML
+//! (Listings 1 and 2). The offline build has no `serde_yaml`, so this module
+//! implements the subset those manifests actually use, parsed into the same
+//! [`Json`] value model the rest of the platform speaks:
+//!
+//! - block mappings and block sequences, nested by indentation
+//! - inline (flow) sequences `[a, b, c]` and flow mappings `{a: 1}`
+//! - plain, single-quoted, and double-quoted scalars
+//! - `#` comments (full-line and trailing), blank lines
+//! - scalar typing: null/~, true/false, int, float, everything else string
+//! - multi-line literal block scalars (`|`), used for embedded
+//!   pre/post-processing code in model manifests (Listing 1 lines 29-30)
+//!
+//! Not supported (not needed by manifests, rejected loudly): anchors/aliases,
+//! tags, multi-document streams, folded scalars (`>`), complex keys.
+
+use crate::util::json::Json;
+
+/// Parse a YAML document into a [`Json`] value.
+pub fn parse(input: &str) -> Result<Json, YamlError> {
+    let lines = logical_lines(input);
+    if lines.is_empty() {
+        return Ok(Json::Null);
+    }
+    let mut p = YParser { lines, pos: 0 };
+    let v = p.block(0)?;
+    if p.pos != p.lines.len() {
+        return Err(YamlError {
+            line: p.lines[p.pos].number,
+            msg: "unexpected content after document (inconsistent indentation?)".into(),
+        });
+    }
+    Ok(v)
+}
+
+/// Parse error with 1-based source line for diagnostics.
+#[derive(Debug, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+#[derive(Debug)]
+struct Line {
+    indent: usize,
+    /// Content with indentation stripped; comments already removed except
+    /// inside quotes.
+    text: String,
+    number: usize,
+    /// Raw content (indent preserved) — needed for literal block scalars.
+    raw: String,
+}
+
+fn logical_lines(input: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw) in input.lines().enumerate() {
+        let trimmed_end = raw.trim_end();
+        let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+        let content = trimmed_end.trim_start();
+        if content.is_empty() {
+            // Keep blank lines: they matter inside literal block scalars. We
+            // mark them with usize::MAX indentation so block logic skips them.
+            out.push(Line {
+                indent: usize::MAX,
+                text: String::new(),
+                number: i + 1,
+                raw: raw.to_string(),
+            });
+            continue;
+        }
+        if content.starts_with('#') || content == "---" {
+            out.push(Line {
+                indent: usize::MAX,
+                text: String::new(),
+                number: i + 1,
+                raw: raw.to_string(),
+            });
+            continue;
+        }
+        out.push(Line {
+            indent,
+            text: strip_comment(content),
+            number: i + 1,
+            raw: raw.to_string(),
+        });
+    }
+    // Drop trailing blanks.
+    while matches!(out.last(), Some(l) if l.indent == usize::MAX) {
+        out.pop();
+    }
+    out
+}
+
+/// Remove a trailing ` # comment` that is not inside quotes.
+fn strip_comment(s: &str) -> String {
+    let mut in_single = false;
+    let mut in_double = false;
+    let b = s.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'#' if !in_single && !in_double => {
+                // YAML comments must be preceded by whitespace (or BOL).
+                if i == 0 || b[i - 1] == b' ' || b[i - 1] == b'\t' {
+                    return s[..i].trim_end().to_string();
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    s.to_string()
+}
+
+struct YParser {
+    lines: Vec<Line>,
+    pos: usize,
+}
+
+impl YParser {
+    fn err(&self, line: usize, msg: impl Into<String>) -> YamlError {
+        YamlError { line, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<&Line> {
+        self.lines[self.pos..].iter().find(|l| l.indent != usize::MAX)
+    }
+
+    /// Advance past blank/comment lines to the next significant line.
+    fn advance_to_significant(&mut self) {
+        while self.pos < self.lines.len() && self.lines[self.pos].indent == usize::MAX {
+            self.pos += 1;
+        }
+    }
+
+    /// Parse a block value whose items are indented at least `min_indent`.
+    fn block(&mut self, min_indent: usize) -> Result<Json, YamlError> {
+        self.advance_to_significant();
+        let first = match self.peek() {
+            None => return Ok(Json::Null),
+            Some(l) => l,
+        };
+        if first.indent < min_indent {
+            return Ok(Json::Null);
+        }
+        let indent = first.indent;
+        if first.text.starts_with("- ") || first.text == "-" {
+            self.sequence(indent)
+        } else {
+            self.mapping(indent)
+        }
+    }
+
+    fn sequence(&mut self, indent: usize) -> Result<Json, YamlError> {
+        let mut items = Vec::new();
+        loop {
+            self.advance_to_significant();
+            let line = match self.peek() {
+                None => break,
+                Some(l) if l.indent != indent => break,
+                Some(l) => l,
+            };
+            if !(line.text.starts_with("- ") || line.text == "-") {
+                break;
+            }
+            let number = line.number;
+            let rest = if line.text == "-" { "" } else { &line.text[2..] }.to_string();
+            self.pos += 1;
+            self.advance_to_significant();
+            if rest.is_empty() {
+                // Value is a nested block (or null).
+                items.push(self.block(indent + 1)?);
+            } else if let Some((k, v)) = split_key(&rest) {
+                // `- key: value` starts an inline mapping whose further keys
+                // sit at indent + 2 (the column of `key`).
+                items.push(self.seq_item_mapping(indent + 2, number, k, v)?);
+            } else {
+                items.push(self.scalar_or_flow(&rest, number)?);
+            }
+        }
+        Ok(Json::Arr(items))
+    }
+
+    /// A mapping that began on a `- key: value` sequence-item line.
+    fn seq_item_mapping(
+        &mut self,
+        indent: usize,
+        number: usize,
+        first_key: String,
+        first_val: String,
+    ) -> Result<Json, YamlError> {
+        let mut map = std::collections::BTreeMap::new();
+        let v = self.key_value(indent, number, &first_val)?;
+        map.insert(first_key, v);
+        loop {
+            self.advance_to_significant();
+            let line = match self.peek() {
+                None => break,
+                Some(l) if l.indent != indent => break,
+                Some(l) => l,
+            };
+            let number = line.number;
+            let text = line.text.clone();
+            let (k, rest) = split_key(&text)
+                .ok_or_else(|| self.err(number, format!("expected 'key:' got {text:?}")))?;
+            self.pos += 1;
+            let v = self.key_value(indent, number, &rest)?;
+            map.insert(k, v);
+        }
+        Ok(Json::Obj(map))
+    }
+
+    fn mapping(&mut self, indent: usize) -> Result<Json, YamlError> {
+        let mut map = std::collections::BTreeMap::new();
+        loop {
+            self.advance_to_significant();
+            let line = match self.peek() {
+                None => break,
+                Some(l) if l.indent != indent => break,
+                Some(l) => l,
+            };
+            let number = line.number;
+            let text = line.text.clone();
+            let (k, rest) = split_key(&text)
+                .ok_or_else(|| self.err(number, format!("expected 'key:' got {text:?}")))?;
+            if map.contains_key(&k) {
+                return Err(self.err(number, format!("duplicate mapping key {k:?}")));
+            }
+            self.pos += 1;
+            let v = self.key_value(indent, number, &rest)?;
+            map.insert(k, v);
+        }
+        if map.is_empty() {
+            let n = self.peek().map(|l| l.number).unwrap_or(0);
+            return Err(self.err(n, "expected a mapping entry"));
+        }
+        Ok(Json::Obj(map))
+    }
+
+    /// Parse the value part after `key:`.
+    fn key_value(&mut self, indent: usize, number: usize, rest: &str) -> Result<Json, YamlError> {
+        if rest.is_empty() {
+            // Nested block value, or null if nothing more-indented follows.
+            self.advance_to_significant();
+            match self.peek() {
+                Some(l) if l.indent > indent => self.block(indent + 1),
+                _ => Ok(Json::Null),
+            }
+        } else if rest == "|" || rest == "|-" {
+            Ok(Json::Str(self.literal_block(indent, rest == "|")?))
+        } else {
+            self.scalar_or_flow(rest, number)
+        }
+    }
+
+    /// Literal block scalar: all following lines more-indented than `indent`.
+    fn literal_block(&mut self, indent: usize, keep_final_newline: bool) -> Result<String, YamlError> {
+        // Find the indentation of the first non-blank content line.
+        let mut body: Vec<String> = Vec::new();
+        let mut block_indent: Option<usize> = None;
+        while self.pos < self.lines.len() {
+            let l = &self.lines[self.pos];
+            if l.indent == usize::MAX {
+                // blank line inside the block
+                body.push(String::new());
+                self.pos += 1;
+                continue;
+            }
+            if l.indent <= indent {
+                break;
+            }
+            let bi = *block_indent.get_or_insert(l.indent);
+            let raw = &l.raw;
+            let cut = raw.len().min(bi);
+            body.push(raw[cut.min(raw.len())..].to_string());
+            self.pos += 1;
+        }
+        // Trailing blank lines belong to the next block, not the scalar.
+        while matches!(body.last().map(|s| s.is_empty()), Some(true)) {
+            body.pop();
+        }
+        let mut s = body.join("\n");
+        if keep_final_newline && !s.is_empty() {
+            s.push('\n');
+        }
+        Ok(s)
+    }
+
+    fn scalar_or_flow(&self, text: &str, number: usize) -> Result<Json, YamlError> {
+        let t = text.trim();
+        if t.starts_with('[') || t.starts_with('{') {
+            let mut fp = FlowParser { bytes: t.as_bytes(), pos: 0, line: number };
+            let v = fp.value()?;
+            fp.skip_ws();
+            if fp.pos != t.len() {
+                return Err(YamlError { line: number, msg: "trailing content after flow value".into() });
+            }
+            return Ok(v);
+        }
+        Ok(typed_scalar(t))
+    }
+}
+
+/// Split `key: rest` at the first unquoted `: ` (or trailing `:`).
+fn split_key(text: &str) -> Option<(String, String)> {
+    let b = text.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b':' if !in_single && !in_double => {
+                if i + 1 == b.len() || b[i + 1] == b' ' {
+                    let key = unquote(text[..i].trim());
+                    let rest = if i + 1 >= b.len() { "" } else { text[i + 1..].trim() };
+                    return Some((key, rest.to_string()));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    if s.len() >= 2 && s.starts_with('\'') && s.ends_with('\'') {
+        s[1..s.len() - 1].replace("''", "'")
+    } else if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+        // Minimal double-quote unescaping; manifests only use \" and \\.
+        s[1..s.len() - 1].replace("\\\"", "\"").replace("\\\\", "\\")
+    } else {
+        s.to_string()
+    }
+}
+
+/// Apply YAML 1.2 core-schema-ish typing to a plain scalar.
+fn typed_scalar(t: &str) -> Json {
+    if t.is_empty() || t == "~" || t == "null" {
+        return Json::Null;
+    }
+    if (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+        || (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+    {
+        return Json::Str(unquote(t));
+    }
+    match t {
+        "true" | "True" => return Json::Bool(true),
+        "false" | "False" => return Json::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Json::Num(i as f64);
+    }
+    // Only accept floats that look numeric (avoid treating "1.0.0" or
+    // ">=1.12.0 <2.0" version strings as numbers).
+    if t.parse::<f64>().is_ok() && t.chars().all(|c| c.is_ascii_digit() || "+-.eE".contains(c)) {
+        if t.matches('.').count() <= 1 {
+            return Json::Num(t.parse::<f64>().unwrap());
+        }
+    }
+    Json::Str(t.to_string())
+}
+
+/// Parser for flow collections `[...]` / `{...}` on a single line.
+struct FlowParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> FlowParser<'a> {
+    fn err(&self, msg: &str) -> YamlError {
+        YamlError { line: self.line, msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, YamlError> {
+        self.skip_ws();
+        match self.bytes.get(self.pos) {
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.bytes.get(self.pos) == Some(&b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.skip_ws();
+                    match self.bytes.get(self.pos) {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(self.err("expected ',' or ']' in flow sequence")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut map = std::collections::BTreeMap::new();
+                self.skip_ws();
+                if self.bytes.get(self.pos) == Some(&b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                loop {
+                    self.skip_ws();
+                    let start = self.pos;
+                    while !matches!(self.bytes.get(self.pos), None | Some(b':')) {
+                        self.pos += 1;
+                    }
+                    let key = unquote(
+                        std::str::from_utf8(&self.bytes[start..self.pos]).unwrap().trim(),
+                    );
+                    if self.bytes.get(self.pos) != Some(&b':') {
+                        return Err(self.err("expected ':' in flow mapping"));
+                    }
+                    self.pos += 1;
+                    let v = self.value()?;
+                    map.insert(key, v);
+                    self.skip_ws();
+                    match self.bytes.get(self.pos) {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(map));
+                        }
+                        _ => return Err(self.err("expected ',' or '}' in flow mapping")),
+                    }
+                }
+            }
+            Some(_) => {
+                // Plain scalar until , ] } at this level.
+                let start = self.pos;
+                while let Some(&c) = self.bytes.get(self.pos) {
+                    if matches!(c, b',' | b']' | b'}') {
+                        break;
+                    }
+                    self.pos += 1;
+                }
+                let t = std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| self.err("invalid utf-8"))?
+                    .trim();
+                Ok(typed_scalar(t))
+            }
+            None => Err(self.err("unexpected end of flow value")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_typing() {
+        let v = parse("a: 1\nb: 2.5\nc: hello\nd: true\ne: null\nf: '>=1.12.0 <2.0'\ng: 1.0.0\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hello"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("e").unwrap(), &Json::Null);
+        assert_eq!(v.get("f").unwrap().as_str(), Some(">=1.12.0 <2.0"));
+        // "1.0.0" must stay a string (semantic version), not a float.
+        assert_eq!(v.get("g").unwrap().as_str(), Some("1.0.0"));
+    }
+
+    #[test]
+    fn nested_mapping() {
+        let y = "framework:\n  name: TensorFlow\n  version: '1.15.0'\n";
+        let v = parse(y).unwrap();
+        assert_eq!(v.get_path("framework.name").unwrap().as_str(), Some("TensorFlow"));
+    }
+
+    #[test]
+    fn block_sequence_of_scalars() {
+        let v = parse("xs:\n  - 1\n  - 2\n  - three\n").unwrap();
+        let xs = v.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_str(), Some("three"));
+    }
+
+    #[test]
+    fn sequence_of_mappings_listing1_style() {
+        // Mirrors the paper's Listing 1 `steps:` structure.
+        let y = r#"
+inputs:
+  - type: image
+    layer_name: 'input_tensor'
+    element_type: float32
+    steps:
+      - decode:
+          data_layout: NHWC
+          color_mode: RGB
+      - resize:
+          dimensions: [3, 224, 224]
+          method: bilinear
+          keep_aspect_ratio: true
+      - normalize:
+          mean: [123.68, 116.78, 103.94]
+          rescale: 1.0
+"#;
+        let v = parse(y).unwrap();
+        let inputs = v.get("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(inputs[0].get("type").unwrap().as_str(), Some("image"));
+        let steps = inputs[0].get("steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 3);
+        let resize = steps[1].get("resize").unwrap();
+        let dims = resize.get("dimensions").unwrap().as_arr().unwrap();
+        assert_eq!(dims.iter().map(|d| d.as_f64().unwrap()).collect::<Vec<_>>(), vec![3.0, 224.0, 224.0]);
+        assert_eq!(resize.get("keep_aspect_ratio").unwrap().as_bool(), Some(true));
+        let norm = steps[2].get("normalize").unwrap();
+        assert_eq!(norm.get("mean").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let y = "# header\na: 1 # trailing\n\n# mid\nb: 'x # not a comment'\n";
+        let v = parse(y).unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x # not a comment"));
+    }
+
+    #[test]
+    fn flow_collections() {
+        let v = parse("dims: [1, 2, 3]\nmeta: {k: v, n: 2}\nempty: []\n").unwrap();
+        assert_eq!(v.get("dims").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get_path("meta.k").unwrap().as_str(), Some("v"));
+        assert_eq!(v.get("empty").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn literal_block_scalar() {
+        let y = "preprocess: |\n  def fun(env, data):\n      return data\n\nname: x\n";
+        let v = parse(y).unwrap();
+        assert_eq!(
+            v.get("preprocess").unwrap().as_str(),
+            Some("def fun(env, data):\n    return data\n")
+        );
+        assert_eq!(v.get("name").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn nested_containers_listing2_style() {
+        let y = r#"
+name: TensorFlow
+version: 1.15.0
+containers:
+  amd64:
+    cpu: carml/tensorflow:1-15-0_amd64-cpu
+    gpu: carml/tensorflow:1-15-0_amd64-gpu
+  ppc64le:
+    cpu: carml/tensorflow:1-15-0_ppc64le-cpu
+    gpu: carml/tensorflow:1-15-0_ppc64le-gpu
+"#;
+        let v = parse(y).unwrap();
+        assert_eq!(
+            v.get_path("containers.amd64.gpu").unwrap().as_str(),
+            Some("carml/tensorflow:1-15-0_amd64-gpu")
+        );
+        // 1.15.0 has two dots → string
+        assert_eq!(v.get("version").unwrap().as_str(), Some("1.15.0"));
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("").unwrap(), Json::Null);
+        assert_eq!(parse("# only comments\n").unwrap(), Json::Null);
+    }
+}

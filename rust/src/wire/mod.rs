@@ -1,0 +1,382 @@
+//! The server↔agent RPC protocol (paper §4.3/§4.4 gRPC, Listing 4).
+//!
+//! gRPC is unavailable offline, so this is a length-prefixed framed RPC
+//! over TCP carrying JSON payloads, with the same service shape as the
+//! paper's protobuf definition:
+//!
+//! ```text
+//! Open(OpenRequest)        -> PredictorHandle
+//! Predict(handle, input)   -> FeaturesResponse   (unary or streamed)
+//! Close(handle)            -> CloseResponse
+//! ```
+//!
+//! Frame format: `u32 BE length | JSON bytes`. A request carries
+//! `{"id": n, "method": "...", "params": {...}}`; a response
+//! `{"id": n, "ok": bool, "result"| "error": ...}`. The server side
+//! dispatches to a [`Service`] implementation; one thread per connection.
+
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Max accepted frame: 256 MB (a batch-256 224² f32 tensor is ~154 MB).
+const MAX_FRAME: u32 = 256 << 20;
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("protocol: {0}")]
+    Protocol(String),
+    #[error("remote error: {0}")]
+    Remote(String),
+}
+
+/// Write one frame.
+pub fn write_frame(stream: &mut impl Write, payload: &[u8]) -> Result<(), WireError> {
+    if payload.len() as u64 > MAX_FRAME as u64 {
+        return Err(WireError::Protocol(format!("frame too large: {}", payload.len())));
+    }
+    stream.write_all(&(payload.len() as u32).to_be_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(stream: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(WireError::Protocol(format!("frame too large: {len}")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+/// A request handler: `method` + `params` → `Ok(result)` or `Err(message)`.
+pub trait Service: Send + Sync + 'static {
+    fn call(&self, method: &str, params: &Json) -> Result<Json, String>;
+
+    /// Binary-attachment fast path (§Perf): JSON float formatting made
+    /// tensor payloads the RPC bottleneck, so calls may carry one opaque
+    /// binary blob alongside the JSON envelope. Default: ignore the blob
+    /// and delegate to [`Service::call`].
+    fn call_binary(
+        &self,
+        method: &str,
+        params: &Json,
+        _blob: Option<&[u8]>,
+    ) -> Result<(Json, Option<Vec<u8>>), String> {
+        self.call(method, params).map(|j| (j, None))
+    }
+}
+
+impl<F> Service for F
+where
+    F: Fn(&str, &Json) -> Result<Json, String> + Send + Sync + 'static,
+{
+    fn call(&self, method: &str, params: &Json) -> Result<Json, String> {
+        self(method, params)
+    }
+}
+
+/// A running RPC server (one accept thread + one thread per connection).
+pub struct RpcServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind and serve `service` on `addr` (use port 0 for ephemeral).
+    pub fn serve(addr: &str, service: Arc<dyn Service>) -> Result<RpcServer, WireError> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("rpc-accept-{local}"))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if sd.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let service = service.clone();
+                            let sd = sd.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_connection(stream, service, sd);
+                            });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn rpc accept thread");
+        Ok(RpcServer { addr: local, shutdown, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. Existing connections
+    /// finish their in-flight request.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Nudge the blocking accept with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Frame content: pure JSON (starts with `{`, back-compat) or a binary
+/// envelope `0x01 | u32 BE json_len | json | blob`.
+fn encode_envelope(json: &Json, blob: Option<&[u8]>) -> Vec<u8> {
+    match blob {
+        None => json.to_string().into_bytes(),
+        Some(blob) => {
+            let j = json.to_string().into_bytes();
+            let mut out = Vec::with_capacity(5 + j.len() + blob.len());
+            out.push(0x01);
+            out.extend_from_slice(&(j.len() as u32).to_be_bytes());
+            out.extend_from_slice(&j);
+            out.extend_from_slice(blob);
+            out
+        }
+    }
+}
+
+fn decode_envelope(frame: &[u8]) -> Result<(Json, Option<Vec<u8>>), WireError> {
+    if frame.first() == Some(&0x01) {
+        if frame.len() < 5 {
+            return Err(WireError::Protocol("truncated binary envelope".into()));
+        }
+        let jlen = u32::from_be_bytes(frame[1..5].try_into().unwrap()) as usize;
+        if frame.len() < 5 + jlen {
+            return Err(WireError::Protocol("truncated binary envelope json".into()));
+        }
+        let json = Json::parse(
+            std::str::from_utf8(&frame[5..5 + jlen])
+                .map_err(|_| WireError::Protocol("envelope json not utf-8".into()))?,
+        )
+        .map_err(|e| WireError::Protocol(e.to_string()))?;
+        Ok((json, Some(frame[5 + jlen..].to_vec())))
+    } else {
+        let json = Json::parse(
+            std::str::from_utf8(frame)
+                .map_err(|_| WireError::Protocol("request not utf-8".into()))?,
+        )
+        .map_err(|e| WireError::Protocol(e.to_string()))?;
+        Ok((json, None))
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    service: Arc<dyn Service>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<(), WireError> {
+    stream.set_nodelay(true).ok();
+    while !shutdown.load(Ordering::Relaxed) {
+        let frame = match read_frame(&mut stream)? {
+            Some(f) => f,
+            None => return Ok(()), // clean disconnect
+        };
+        let (req, blob) = decode_envelope(&frame)?;
+        let id = req.f64_or("id", 0.0);
+        let method = req.str_or("method", "");
+        let params = req.get("params").cloned().unwrap_or(Json::Null);
+        let (response, out_blob) = match service.call_binary(method, &params, blob.as_deref()) {
+            Ok((result, out_blob)) => (
+                Json::obj(vec![
+                    ("id", Json::num(id)),
+                    ("ok", Json::Bool(true)),
+                    ("result", result),
+                ]),
+                out_blob,
+            ),
+            Err(msg) => (
+                Json::obj(vec![
+                    ("id", Json::num(id)),
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(msg)),
+                ]),
+                None,
+            ),
+        };
+        write_frame(&mut stream, &encode_envelope(&response, out_blob.as_deref()))?;
+    }
+    Ok(())
+}
+
+/// Client side: a persistent connection issuing unary calls.
+pub struct RpcClient {
+    stream: std::sync::Mutex<TcpStream>,
+    next_id: AtomicU64,
+}
+
+impl RpcClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<RpcClient, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(RpcClient { stream: std::sync::Mutex::new(stream), next_id: AtomicU64::new(1) })
+    }
+
+    /// Unary call: send request, await the matching response.
+    pub fn call(&self, method: &str, params: Json) -> Result<Json, WireError> {
+        self.call_binary(method, params, None).map(|(j, _)| j)
+    }
+
+    /// Unary call with an opaque binary attachment (the tensor fast path).
+    pub fn call_binary(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("method", Json::str(method)),
+            ("params", params),
+        ]);
+        let mut stream = self.stream.lock().unwrap();
+        write_frame(&mut *stream, &encode_envelope(&req, blob))?;
+        let frame = read_frame(&mut *stream)?
+            .ok_or_else(|| WireError::Protocol("connection closed mid-call".into()))?;
+        drop(stream);
+        let (resp, out_blob) = decode_envelope(&frame)?;
+        if resp.f64_or("id", -1.0) != id as f64 {
+            return Err(WireError::Protocol("response id mismatch".into()));
+        }
+        if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob))
+        } else {
+            Err(WireError::Remote(resp.str_or("error", "unknown error").to_string()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_service() -> Arc<dyn Service> {
+        Arc::new(|method: &str, params: &Json| -> Result<Json, String> {
+            match method {
+                "echo" => Ok(params.clone()),
+                "add" => {
+                    let a = params.f64_or("a", 0.0);
+                    let b = params.f64_or("b", 0.0);
+                    Ok(Json::obj(vec![("sum", Json::num(a + b))]))
+                }
+                "fail" => Err("deliberate failure".to_string()),
+                other => Err(format!("unknown method {other:?}")),
+            }
+        })
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        let out = client
+            .call("add", Json::obj(vec![("a", Json::num(2.0)), ("b", Json::num(40.0))]))
+            .unwrap();
+        assert_eq!(out.get("sum").unwrap().as_f64(), Some(42.0));
+        server.stop();
+    }
+
+    #[test]
+    fn remote_errors_propagate() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        let err = client.call("fail", Json::Null).unwrap_err();
+        assert!(matches!(err, WireError::Remote(ref m) if m.contains("deliberate")));
+        // Connection still usable after an error response.
+        let ok = client.call("echo", Json::str("still alive")).unwrap();
+        assert_eq!(ok.as_str(), Some("still alive"));
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_sequential_calls_one_connection() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        for i in 0..50 {
+            let out = client.call("echo", Json::num(i as f64)).unwrap();
+            assert_eq!(out.as_f64(), Some(i as f64));
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let client = RpcClient::connect(addr).unwrap();
+                    for i in 0..25 {
+                        let v = (t * 100 + i) as f64;
+                        let out = client.call("echo", Json::num(v)).unwrap();
+                        assert_eq!(out.as_f64(), Some(v));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn large_frame_roundtrip() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        // ~1 MB payload.
+        let big: Vec<Json> = (0..100_000).map(|i| Json::num(i as f64)).collect();
+        let out = client.call("echo", Json::arr(big)).unwrap();
+        assert_eq!(out.as_arr().unwrap().len(), 100_000);
+        server.stop();
+    }
+
+    #[test]
+    fn frame_encoding_rejects_oversize() {
+        let mut sink = Vec::new();
+        let huge = vec![0u8; (MAX_FRAME + 1) as usize];
+        assert!(write_frame(&mut sink, &huge).is_err());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let data: &[u8] = &[];
+        let mut cursor = std::io::Cursor::new(data);
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+}

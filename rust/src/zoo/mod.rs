@@ -1,0 +1,277 @@
+//! The built-in model zoo — the 37 Table-2 models.
+//!
+//! The paper bootstraps MLModelScope with built-in models; its evaluation
+//! (§5.1) uses 37 TensorFlow image-classification models. Each entry here
+//! carries the paper's published metadata (Top-1 accuracy, frozen-graph
+//! size) exactly as Table 2 lists it, plus an analytic layer description
+//! generated from the real architecture ([`arch`]). Five families also have
+//! *real* JAX/Pallas counterparts compiled into `artifacts/` and executed
+//! via PJRT (see `python/compile/model.py`); `hlo_family()` maps an entry to
+//! its artifact family.
+
+pub mod arch;
+
+pub use arch::LayerSpec;
+
+use crate::manifest::ModelManifest;
+use crate::util::json::Json;
+
+/// One catalog entry (a Table-2 row).
+#[derive(Debug, Clone)]
+pub struct ZooModel {
+    /// Table-2 ID (1–37), used as scatter-plot label in Figs 4/5.
+    pub id: usize,
+    pub name: String,
+    /// Published Top-1 accuracy (%, ImageNet) — metadata, as in the paper.
+    pub top1_accuracy: f64,
+    /// Frozen-graph size in MB — Table-2 column.
+    pub graph_size_mb: f64,
+    /// Input resolution (square).
+    pub resolution: usize,
+    /// Architecture family tag, e.g. `resnet`, `mobilenet`.
+    pub family: &'static str,
+    gen: fn(usize) -> Vec<LayerSpec>,
+}
+
+impl ZooModel {
+    /// Generate the per-layer workload description.
+    pub fn layers(&self) -> Vec<LayerSpec> {
+        (self.gen)(self.resolution)
+    }
+
+    /// Analytic weight size (MB) — cross-checked against `graph_size_mb`.
+    pub fn analytic_weight_mb(&self) -> f64 {
+        arch::total_weight_bytes(&self.layers()) / 1e6
+    }
+
+    /// The AOT artifact family exercising this architecture class for real
+    /// (`None` → simulation only).
+    pub fn hlo_family(&self) -> Option<&'static str> {
+        match self.family {
+            "resnet" | "resnet_v2" => Some("tiny_resnet"),
+            "vgg" => Some("tiny_vgg"),
+            "mobilenet" => Some("tiny_mobilenet"),
+            "inception" | "inception_resnet" | "googlenet" => Some("tiny_inception"),
+            "alexnet" => Some("tiny_alexnet"),
+            _ => None,
+        }
+    }
+
+    /// Build the built-in model manifest for this entry (§4.6 "Adding
+    /// Models": models are defined purely by manifest).
+    pub fn manifest(&self) -> ModelManifest {
+        let yaml = format!(
+            r#"
+name: {name}
+version: 1.0.0
+description: built-in zoo model (Table 2 id {id})
+framework:
+  name: TensorFlow
+  version: '>=1.12.0 <2.0'
+inputs:
+  - type: image
+    layer_name: input_tensor
+    element_type: float32
+    steps:
+      - decode:
+          data_layout: NHWC
+          color_mode: RGB
+      - resize:
+          dimensions: [3, {res}, {res}]
+          method: bilinear
+          keep_aspect_ratio: true
+      - normalize:
+          mean: [123.68, 116.78, 103.94]
+          rescale: 1.0
+outputs:
+  - type: probability
+    layer_name: prob
+    element_type: float32
+    steps:
+      - argsort:
+          labels_url: https://mlmodelscope.example/synset.txt
+model:
+  base_url: builtin://zoo/
+  graph_path: {name}.pb
+  checksum: zoo-{id}
+attributes:
+  training_dataset: ImageNet
+  top1_accuracy: {acc}
+  graph_size_mb: {size}
+  family: {family}
+"#,
+            name = self.name,
+            id = self.id,
+            res = self.resolution,
+            acc = self.top1_accuracy,
+            size = self.graph_size_mb,
+            family = self.family,
+        );
+        ModelManifest::from_yaml(&yaml).expect("zoo manifest must parse")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("name", Json::str(&self.name)),
+            ("top1_accuracy", Json::num(self.top1_accuracy)),
+            ("graph_size_mb", Json::num(self.graph_size_mb)),
+            ("resolution", Json::num(self.resolution as f64)),
+            ("family", Json::str(self.family)),
+        ])
+    }
+}
+
+macro_rules! zoo {
+    ($($id:expr, $name:expr, $acc:expr, $size:expr, $res:expr, $family:expr, $gen:expr;)*) => {
+        vec![$(ZooModel {
+            id: $id,
+            name: $name.to_string(),
+            top1_accuracy: $acc,
+            graph_size_mb: $size,
+            resolution: $res,
+            family: $family,
+            gen: $gen,
+        }),*]
+    };
+}
+
+/// The full Table-2 catalog, in the paper's accuracy-sorted order.
+pub fn all() -> Vec<ZooModel> {
+    zoo![
+        1,  "Inception_ResNet_v2",    80.40, 214.0, 299, "inception_resnet", |r| arch::inception_resnet_v2(r);
+        2,  "Inception_v4",           80.20, 163.0, 299, "inception", |r| arch::inception(4, r);
+        3,  "Inception_v3",           78.00,  91.0, 299, "inception", |r| arch::inception(3, r);
+        4,  "ResNet_v2_152",          77.80, 231.0, 224, "resnet_v2", |r| arch::resnet(152, true, r);
+        5,  "ResNet_v2_101",          77.00, 170.0, 224, "resnet_v2", |r| arch::resnet(101, true, r);
+        6,  "ResNet_v1_152",          76.80, 230.0, 224, "resnet", |r| arch::resnet(152, false, r);
+        7,  "MLPerf_ResNet50_v1.5",   76.46, 103.0, 224, "resnet", |r| arch::resnet(50, false, r);
+        8,  "ResNet_v1_101",          76.40, 170.0, 224, "resnet", |r| arch::resnet(101, false, r);
+        9,  "AI_Matrix_ResNet152",    75.93, 230.0, 224, "resnet", |r| arch::resnet(152, false, r);
+        10, "ResNet_v2_50",           75.60,  98.0, 224, "resnet_v2", |r| arch::resnet(50, true, r);
+        11, "ResNet_v1_50",           75.20,  98.0, 224, "resnet", |r| arch::resnet(50, false, r);
+        12, "AI_Matrix_ResNet50",     74.38,  98.0, 224, "resnet", |r| arch::resnet(50, false, r);
+        13, "Inception_v2",           73.90,  43.0, 224, "inception", |r| arch::inception(2, r);
+        14, "AI_Matrix_DenseNet121",  73.29,  31.0, 224, "densenet", |r| arch::densenet121(r);
+        15, "MLPerf_MobileNet_v1",    71.68,  17.0, 224, "mobilenet", |r| arch::mobilenet_v1(1.0, r);
+        16, "VGG16",                  71.50, 528.0, 224, "vgg", |r| arch::vgg(16, r);
+        17, "VGG19",                  71.10, 548.0, 224, "vgg", |r| arch::vgg(19, r);
+        18, "MobileNet_v1_1.0_224",   70.90,  16.0, 224, "mobilenet", |r| arch::mobilenet_v1(1.0, r);
+        19, "AI_Matrix_GoogleNet",    70.01,  27.0, 224, "googlenet", |r| arch::googlenet(r);
+        20, "MobileNet_v1_1.0_192",   70.00,  16.0, 192, "mobilenet", |r| arch::mobilenet_v1(1.0, r);
+        21, "Inception_v1",           69.80,  26.0, 224, "inception", |r| arch::inception(1, r);
+        22, "BVLC_GoogLeNet",         68.70,  27.0, 224, "googlenet", |r| arch::googlenet(r);
+        23, "MobileNet_v1_0.75_224",  68.40,  10.0, 224, "mobilenet", |r| arch::mobilenet_v1(0.75, r);
+        24, "MobileNet_v1_1.0_160",   68.00,  16.0, 160, "mobilenet", |r| arch::mobilenet_v1(1.0, r);
+        25, "MobileNet_v1_0.75_192",  67.20,  10.0, 192, "mobilenet", |r| arch::mobilenet_v1(0.75, r);
+        26, "MobileNet_v1_0.75_160",  65.30,  10.0, 160, "mobilenet", |r| arch::mobilenet_v1(0.75, r);
+        27, "MobileNet_v1_1.0_128",   65.20,  16.0, 128, "mobilenet", |r| arch::mobilenet_v1(1.0, r);
+        28, "MobileNet_v1_0.5_224",   63.30,   5.2, 224, "mobilenet", |r| arch::mobilenet_v1(0.5, r);
+        29, "MobileNet_v1_0.75_128",  62.10,  10.0, 128, "mobilenet", |r| arch::mobilenet_v1(0.75, r);
+        30, "MobileNet_v1_0.5_192",   61.70,   5.2, 192, "mobilenet", |r| arch::mobilenet_v1(0.5, r);
+        31, "MobileNet_v1_0.5_160",   59.10,   5.2, 160, "mobilenet", |r| arch::mobilenet_v1(0.5, r);
+        32, "BVLC_AlexNet",           57.10, 233.0, 224, "alexnet", |r| arch::alexnet(r);
+        33, "MobileNet_v1_0.5_128",   56.30,   5.2, 128, "mobilenet", |r| arch::mobilenet_v1(0.5, r);
+        34, "MobileNet_v1_0.25_224",  49.80,   1.9, 224, "mobilenet", |r| arch::mobilenet_v1(0.25, r);
+        35, "MobileNet_v1_0.25_192",  47.70,   1.9, 192, "mobilenet", |r| arch::mobilenet_v1(0.25, r);
+        36, "MobileNet_v1_0.25_160",  45.50,   1.9, 160, "mobilenet", |r| arch::mobilenet_v1(0.25, r);
+        37, "MobileNet_v1_0.25_128",  41.50,   1.9, 128, "mobilenet", |r| arch::mobilenet_v1(0.25, r);
+    ]
+}
+
+/// Look up a zoo model by name (case-sensitive, as registered).
+pub fn by_name(name: &str) -> Option<ZooModel> {
+    all().into_iter().find(|m| m.name == name)
+}
+
+/// Look up by Table-2 id.
+pub fn by_id(id: usize) -> Option<ZooModel> {
+    all().into_iter().find(|m| m.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_37_models_sorted_by_accuracy() {
+        let zoo = all();
+        assert_eq!(zoo.len(), 37);
+        for w in zoo.windows(2) {
+            assert!(
+                w[0].top1_accuracy >= w[1].top1_accuracy,
+                "{} vs {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+        // ids are 1..=37 in order.
+        for (i, m) in zoo.iter().enumerate() {
+            assert_eq!(m.id, i + 1);
+        }
+    }
+
+    #[test]
+    fn table2_spot_values() {
+        let r50 = by_name("MLPerf_ResNet50_v1.5").unwrap();
+        assert_eq!(r50.id, 7);
+        assert_eq!(r50.top1_accuracy, 76.46);
+        assert_eq!(r50.graph_size_mb, 103.0);
+        let alex = by_id(32).unwrap();
+        assert_eq!(alex.name, "BVLC_AlexNet");
+        assert_eq!(alex.graph_size_mb, 233.0);
+    }
+
+    #[test]
+    fn analytic_weights_track_graph_size() {
+        // The analytic FP32 weight estimate should be within 2.5× of the
+        // published frozen-graph size for the weight-dominated models
+        // (graph protos also carry topology, so exact match isn't expected).
+        for name in ["VGG16", "VGG19", "BVLC_AlexNet", "ResNet_v1_50", "MobileNet_v1_1.0_224"] {
+            let m = by_name(name).unwrap();
+            let est = m.analytic_weight_mb();
+            let ratio = est / m.graph_size_mb;
+            assert!(
+                (0.4..2.5).contains(&ratio),
+                "{name}: analytic {est:.0} MB vs table {} MB (ratio {ratio:.2})",
+                m.graph_size_mb
+            );
+        }
+    }
+
+    #[test]
+    fn manifests_parse_for_all_entries() {
+        for m in all() {
+            let manifest = m.manifest();
+            assert_eq!(manifest.name, m.name);
+            assert_eq!(manifest.accuracy(), Some(m.top1_accuracy));
+            assert_eq!(manifest.graph_size_mb(), Some(m.graph_size_mb));
+            assert_eq!(manifest.inputs[0].steps.len(), 3);
+        }
+    }
+
+    #[test]
+    fn every_model_generates_layers() {
+        for m in all() {
+            let layers = m.layers();
+            assert!(layers.len() > 10, "{} has {} layers", m.name, layers.len());
+            assert!(arch::total_flops(&layers) > 1e7, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn hlo_family_mapping() {
+        assert_eq!(by_name("ResNet_v1_50").unwrap().hlo_family(), Some("tiny_resnet"));
+        assert_eq!(by_name("VGG16").unwrap().hlo_family(), Some("tiny_vgg"));
+        assert_eq!(by_name("BVLC_AlexNet").unwrap().hlo_family(), Some("tiny_alexnet"));
+        assert_eq!(by_name("MobileNet_v1_0.5_160").unwrap().hlo_family(), Some("tiny_mobilenet"));
+        assert_eq!(by_name("AI_Matrix_DenseNet121").unwrap().hlo_family(), None);
+    }
+
+    #[test]
+    fn resolution_affects_workload_not_metadata() {
+        let m224 = by_name("MobileNet_v1_1.0_224").unwrap();
+        let m128 = by_name("MobileNet_v1_1.0_128").unwrap();
+        assert!(arch::total_flops(&m224.layers()) > arch::total_flops(&m128.layers()));
+    }
+}

@@ -1,0 +1,197 @@
+//! Failure-injection tests: the platform must degrade cleanly — remote
+//! agent errors propagate as typed failures, dead endpoints don't hang the
+//! dispatcher, malformed wire traffic doesn't poison connections.
+
+use mlmodelscope::predictor::{ModelHandle, PredictError, PredictOptions, Predictor};
+use mlmodelscope::preprocess::Tensor;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server, ServerError};
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::util::json::Json;
+use std::sync::Arc;
+
+/// A predictor that always fails inference — simulates a broken framework
+/// build on one agent.
+struct BrokenPredictor;
+
+impl Predictor for BrokenPredictor {
+    fn framework(&self) -> (String, String) {
+        ("BrokenFramework".into(), "0.0.1".into())
+    }
+
+    fn model_load(&self, _m: &str, _b: usize) -> Result<ModelHandle, PredictError> {
+        Ok(ModelHandle(1))
+    }
+
+    fn predict(
+        &self,
+        _h: ModelHandle,
+        _i: &Tensor,
+        _o: &PredictOptions,
+    ) -> Result<Tensor, PredictError> {
+        Err(PredictError::Inference("CUDA_ERROR_OUT_OF_MEMORY (injected)".into()))
+    }
+
+    fn model_unload(&self, _h: ModelHandle) -> Result<(), PredictError> {
+        Ok(())
+    }
+}
+
+#[test]
+fn broken_local_agent_yields_typed_error() {
+    let server = Server::standalone();
+    server.register_zoo();
+    let db = server.evaldb.clone();
+    let sink = server.traces.clone();
+    let tracer = mlmodelscope::tracing::Tracer::new(
+        TraceLevel::None,
+        Arc::new(mlmodelscope::tracing::WallClock::new()),
+        sink,
+    );
+    let agent = mlmodelscope::agent::Agent::new(
+        mlmodelscope::agent::AgentConfig {
+            models: vec!["ResNet_v1_50".into()],
+            ..Default::default()
+        },
+        Arc::new(BrokenPredictor),
+        tracer,
+        db,
+    );
+    server.attach_local_agent(agent);
+    let err = server
+        .evaluate(&EvalJob::new("ResNet_v1_50", Scenario::Online { count: 2 }))
+        .unwrap_err();
+    match err {
+        ServerError::AgentFailed(_, msg) => assert!(msg.contains("injected"), "{msg}"),
+        other => panic!("expected AgentFailed, got {other}"),
+    }
+    // Nothing stored for the failed run.
+    assert!(server.evaldb.is_empty());
+}
+
+#[test]
+fn remote_agent_error_propagates_over_wire() {
+    // Remote service that rejects every Evaluate.
+    let service: Arc<dyn mlmodelscope::wire::Service> =
+        Arc::new(|m: &str, _p: &Json| -> Result<Json, String> {
+            Err(format!("agent crashed handling {m} (injected)"))
+        });
+    let rpc = mlmodelscope::wire::RpcServer::serve("127.0.0.1:0", service).unwrap();
+
+    let server = Server::standalone();
+    server.register_zoo();
+    server.registry.register_agent(
+        mlmodelscope::registry::AgentInfo {
+            id: "flaky".into(),
+            endpoint: rpc.addr().to_string(),
+            framework: "TensorFlow".into(),
+            framework_version: "1.15.0".parse().unwrap(),
+            system: "aws_p3".into(),
+            architecture: "x86_64".into(),
+            devices: vec!["gpu".into()],
+            interconnect: "pcie3".into(),
+            host_memory_gb: 61.0,
+            device_memory_gb: 16.0,
+            models: vec![],
+            },
+        None,
+    );
+    let err = server
+        .evaluate(&EvalJob::new("VGG16", Scenario::Online { count: 1 }))
+        .unwrap_err();
+    assert!(matches!(err, ServerError::AgentFailed(ref id, ref m)
+        if id == "flaky" && m.contains("injected")));
+    rpc.stop();
+}
+
+#[test]
+fn dead_endpoint_fails_fast_not_hangs() {
+    let server = Server::standalone();
+    server.register_zoo();
+    // Reserve a port then close it, so nothing listens there.
+    let dead_addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    server.registry.register_agent(
+        mlmodelscope::registry::AgentInfo {
+            id: "gone".into(),
+            endpoint: dead_addr,
+            framework: "TensorFlow".into(),
+            framework_version: "1.15.0".parse().unwrap(),
+            system: "aws_p3".into(),
+            architecture: "x86_64".into(),
+            devices: vec!["gpu".into()],
+            interconnect: "pcie3".into(),
+            host_memory_gb: 61.0,
+            device_memory_gb: 16.0,
+            models: vec![],
+        },
+        None,
+    );
+    let t0 = std::time::Instant::now();
+    let err = server
+        .evaluate(&EvalJob::new("VGG16", Scenario::Online { count: 1 }))
+        .unwrap_err();
+    assert!(matches!(err, ServerError::AgentFailed(..)), "{err}");
+    assert!(t0.elapsed().as_secs() < 10, "must fail fast, took {:?}", t0.elapsed());
+}
+
+#[test]
+fn malformed_wire_frames_do_not_poison_server() {
+    let service: Arc<dyn mlmodelscope::wire::Service> =
+        Arc::new(|_m: &str, p: &Json| -> Result<Json, String> { Ok(p.clone()) });
+    let rpc = mlmodelscope::wire::RpcServer::serve("127.0.0.1:0", service).unwrap();
+    // Send garbage on one connection.
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(rpc.addr()).unwrap();
+        s.write_all(&(7u32).to_be_bytes()).unwrap();
+        s.write_all(b"garbage").unwrap();
+        // Server drops this connection; that's fine.
+    }
+    // A fresh well-formed client still works.
+    let client = mlmodelscope::wire::RpcClient::connect(rpc.addr()).unwrap();
+    assert_eq!(client.call("echo", Json::num(5.0)).unwrap().as_f64(), Some(5.0));
+    rpc.stop();
+}
+
+#[test]
+fn http_malformed_body_is_400_not_crash() {
+    let server = Server::sim_platform(TraceLevel::None);
+    let http = mlmodelscope::httpd::HttpServer::serve("127.0.0.1:0", server.router()).unwrap();
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(http.addr()).unwrap();
+    let body = b"not json {{{";
+    write!(
+        s,
+        "POST /api/evaluate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .unwrap();
+    s.write_all(body).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    // Server still serves afterwards.
+    let (status, _) =
+        mlmodelscope::httpd::http_request(http.addr(), "GET", "/api/ping", None).unwrap();
+    assert_eq!(status, 200);
+    http.stop();
+}
+
+#[test]
+fn checksum_corruption_detected_before_evaluation() {
+    // An on-disk asset corrupted after caching must be caught by the
+    // checksum re-validation path (§4.4.1).
+    let cache = std::env::temp_dir().join(format!("mlms_fi_{}", std::process::id()));
+    let dm = mlmodelscope::agent::DataManager::new(&cache);
+    let p = dm.fetch("builtin://zoo/", "victim.pb", None).unwrap();
+    let good = mlmodelscope::agent::sha256_hex(&std::fs::read(&p).unwrap());
+    dm.fetch("builtin://zoo/", "victim.pb", Some(&good)).unwrap();
+    // Corrupt the cached file.
+    std::fs::write(&p, b"tampered").unwrap();
+    let err = dm.fetch("builtin://zoo/", "victim.pb", Some(&good)).unwrap_err();
+    assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    let _ = std::fs::remove_dir_all(cache);
+}

@@ -1,0 +1,281 @@
+//! Cross-module integration tests: the full platform assembled the way a
+//! deployment would, exercised through its public API.
+
+use mlmodelscope::agent::{agent_service, sim_agent};
+use mlmodelscope::evaldb::{EvalDb, EvalQuery};
+use mlmodelscope::httpd::{http_request, HttpServer};
+use mlmodelscope::manifest::SystemRequirements;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::util::json::Json;
+use std::sync::Arc;
+
+/// The paper's full evaluation workflow ①–⑨ over REST + wire RPC with a
+/// remote agent process (thread-hosted here), verifying every middleware
+/// component sees the run.
+#[test]
+fn full_distributed_workflow() {
+    let server = Server::sim_platform(TraceLevel::Full);
+
+    // A remote agent over real TCP.
+    let remote_db = Arc::new(EvalDb::in_memory());
+    let (agent, _sim, _tracer) = sim_agent(
+        "aws_g3",
+        Device::Gpu,
+        TraceLevel::Framework,
+        remote_db.clone(),
+        server.traces.clone(),
+    );
+    let rpc = mlmodelscope::wire::RpcServer::serve("127.0.0.1:0", agent_service(agent)).unwrap();
+    server.registry.register_agent(
+        mlmodelscope::registry::AgentInfo {
+            id: "remote-g3".into(),
+            endpoint: rpc.addr().to_string(),
+            framework: "SimFramework-Maxwell".into(),
+            framework_version: "1.0.0".parse().unwrap(),
+            system: "aws_g3_remote".into(),
+            architecture: "x86_64".into(),
+            devices: vec!["gpu".into()],
+            interconnect: "pcie3".into(),
+            host_memory_gb: 30.5,
+            device_memory_gb: 8.0,
+            models: mlmodelscope::zoo::all().iter().map(|m| m.name.clone()).collect(),
+        },
+        None,
+    );
+
+    let http = HttpServer::serve("127.0.0.1:0", server.router()).unwrap();
+    let addr = http.addr();
+
+    // Evaluate on ALL resolved GPU agents (4 local sims + 1 remote).
+    let payload = Json::obj(vec![
+        ("model", Json::str("Inception_v1")),
+        ("scenario", Scenario::Online { count: 4 }.to_json()),
+        ("all_agents", Json::Bool(true)),
+        (
+            "requirements",
+            Json::obj(vec![("accelerator", Json::str("gpu"))]),
+        ),
+        ("trace_level", Json::str("full")),
+    ]);
+    let (status, records) = http_request(addr, "POST", "/api/evaluate", Some(&payload)).unwrap();
+    assert_eq!(status, 200, "{records}");
+    let records = records.as_arr().unwrap();
+    assert_eq!(records.len(), 5, "4 local GPU agents + 1 remote");
+
+    // The remote agent's own shard recorded its run.
+    assert_eq!(remote_db.len(), 1);
+    // The server's central DB has all 5.
+    assert_eq!(server.evaldb.query(&EvalQuery::model("Inception_v1")).len(), 5);
+
+    // Every local record's trace is in the trace server with framework spans.
+    for r in records {
+        let rec = mlmodelscope::evaldb::EvalRecord::from_json(r).unwrap();
+        if rec.key.system != "aws_g3_remote" {
+            let tl = server.traces.timeline(rec.trace_id.unwrap());
+            assert!(!tl.is_empty(), "trace for {}", rec.key.system);
+            assert!(!tl.at_level(TraceLevel::Framework).is_empty());
+        }
+    }
+    http.stop();
+    rpc.stop();
+}
+
+/// Reproducibility (F1): same job + seed → identical simulated latencies,
+/// across separately-constructed platforms.
+#[test]
+fn reproducible_evaluation_across_platforms() {
+    let run = || {
+        let server = Server::sim_platform(TraceLevel::None);
+        let mut job = EvalJob::new("ResNet_v2_50", Scenario::Batched { batch_size: 16, batches: 4 });
+        job.seed = 1234;
+        job.requirements = SystemRequirements::on_system("aws_p2");
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+        server.evaluate(&job).unwrap()[0].clone()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.latencies, b.latencies, "simulated latencies must be bit-identical");
+    assert_eq!(a.throughput, b.throughput);
+}
+
+/// Consistency (F2): two models evaluated through the identical pipeline
+/// produce records with the identical key structure and metric definitions.
+#[test]
+fn consistent_evaluation_methodology() {
+    let server = Server::sim_platform(TraceLevel::None);
+    for model in ["VGG19", "MobileNet_v1_0.5_160"] {
+        let mut job = EvalJob::new(model, Scenario::Online { count: 10 });
+        job.requirements = SystemRequirements::on_system("aws_p3");
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+        server.evaluate(&job).unwrap();
+    }
+    let recs = server.evaldb.query(&EvalQuery::default());
+    assert_eq!(recs.len(), 2);
+    assert!(recs.iter().all(|r| r.latencies.len() == 10));
+    assert!(recs.iter().all(|r| r.key.scenario == "online" && r.key.batch_size == 1));
+    // VGG19 slower than the small MobileNet — and both through the same path.
+    let vgg = recs.iter().find(|r| r.key.model == "VGG19").unwrap();
+    let mob = recs.iter().find(|r| r.key.model == "MobileNet_v1_0.5_160").unwrap();
+    assert!(vgg.trimmed_mean_ms() > mob.trimmed_mean_ms());
+}
+
+/// Versioned artifacts (F5): two versions of one model coexist; resolution
+/// picks latest unless pinned; history tracks which version produced which
+/// result.
+#[test]
+fn artifact_versioning_workflow() {
+    let server = Server::sim_platform(TraceLevel::None);
+    let mut m2 = mlmodelscope::zoo::by_name("BVLC_GoogLeNet").unwrap().manifest();
+    m2.version = "2.0.0".parse().unwrap();
+    server.registry.register_manifest(m2);
+
+    // Unpinned → v2.
+    let job = EvalJob::new("BVLC_GoogLeNet", Scenario::Online { count: 2 });
+    let rec = server.evaluate(&job).unwrap().remove(0);
+    assert_eq!(rec.key.model_version, "2.0.0");
+    // Pinned → v1.
+    let mut job = EvalJob::new("BVLC_GoogLeNet", Scenario::Online { count: 2 });
+    job.model_version = Some("1.0.0".into());
+    let rec = server.evaluate(&job).unwrap().remove(0);
+    assert_eq!(rec.key.model_version, "1.0.0");
+    // Both runs in history.
+    assert_eq!(server.evaldb.query(&EvalQuery::model("BVLC_GoogLeNet")).len(), 2);
+}
+
+/// Scenario coverage (F7): every scenario kind round-trips the platform.
+#[test]
+fn all_scenarios_execute() {
+    let server = Server::sim_platform(TraceLevel::None);
+    let scenarios = vec![
+        Scenario::Online { count: 3 },
+        Scenario::Poisson { rate: 100.0, count: 3 },
+        Scenario::Batched { batch_size: 4, batches: 2 },
+        Scenario::FixedQps { qps: 50.0, count: 3 },
+        Scenario::Burst { burst_size: 2, period_s: 0.01, bursts: 2 },
+    ];
+    for sc in scenarios {
+        let expected = match &sc {
+            Scenario::Batched { batches, .. } => *batches,
+            Scenario::Online { count }
+            | Scenario::Poisson { count, .. }
+            | Scenario::FixedQps { count, .. } => *count,
+            Scenario::Burst { burst_size, bursts, .. } => burst_size * bursts,
+        };
+        let mut job = EvalJob::new("Inception_v2", sc.clone());
+        job.requirements = SystemRequirements::on_system("ibm_p8");
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::Gpu;
+        let rec = server.evaluate(&job).unwrap().remove(0);
+        assert_eq!(rec.latencies.len(), expected, "{}", sc.name());
+    }
+}
+
+/// Evaluation DB persistence across "restarts" of the platform.
+#[test]
+fn evaldb_survives_restart() {
+    let path = std::env::temp_dir().join(format!("mlms_it_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    {
+        let db = Arc::new(EvalDb::open(&path).unwrap());
+        let server = Server::new(mlmodelscope::registry::Registry::new(), db, mlmodelscope::traceserver::TraceServer::new());
+        server.register_zoo();
+        let (agent, _s, _t) = sim_agent(
+            "aws_p3",
+            Device::Gpu,
+            TraceLevel::None,
+            server.evaldb.clone(),
+            server.traces.clone(),
+        );
+        server.attach_local_agent(agent);
+        server
+            .evaluate(&EvalJob::new("VGG16", Scenario::Online { count: 5 }))
+            .unwrap();
+    }
+    // "Restart": reopen the DB, run the analysis workflow on history.
+    let db = EvalDb::open(&path).unwrap();
+    assert_eq!(db.len(), 1);
+    let summary = mlmodelscope::analysis::summarize_model("VGG16", &db).unwrap();
+    assert!(summary.online_trimmed_mean_ms > 0.0);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Agent TTL expiry makes a dead agent unresolvable (liveness).
+#[test]
+fn dead_agents_expire_from_resolution() {
+    let server = Server::sim_platform(TraceLevel::None);
+    let before = server.registry.agents().len();
+    let (agent, _s, _t) = sim_agent(
+        "aws_p3",
+        Device::Gpu,
+        TraceLevel::None,
+        server.evaldb.clone(),
+        server.traces.clone(),
+    );
+    // Register with a tiny TTL directly (not via attach, to control TTL).
+    let mut cfg_agent_info = mlmodelscope::registry::AgentInfo {
+        id: String::new(),
+        endpoint: "127.0.0.1:1".into(), // nothing listens here
+        framework: "SimFramework-Volta".into(),
+        framework_version: "1.0.0".parse().unwrap(),
+        system: "ghost".into(),
+        architecture: "x86_64".into(),
+        devices: vec!["gpu".into()],
+        interconnect: "pcie3".into(),
+        host_memory_gb: 1.0,
+        device_memory_gb: 1.0,
+        models: vec!["ResNet_v1_50".into()],
+    };
+    cfg_agent_info.id = String::new();
+    server
+        .registry
+        .register_agent(cfg_agent_info, Some(std::time::Duration::from_millis(30)));
+    assert_eq!(server.registry.agents().len(), before + 1);
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    assert_eq!(server.registry.agents().len(), before, "ghost expired");
+    drop(agent);
+}
+
+/// Real-artifact integration across the whole platform (skips without
+/// `make artifacts`).
+#[test]
+fn xla_platform_end_to_end_if_artifacts() {
+    if mlmodelscope::runtime::available_families().is_empty() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = Server::standalone();
+    let rt = mlmodelscope::runtime::Runtime::cpu().unwrap();
+    let (agent, _t) = mlmodelscope::agent::xla_agent(
+        rt,
+        TraceLevel::Model,
+        server.evaldb.clone(),
+        server.traces.clone(),
+    );
+    server.attach_local_agent(agent);
+    let yaml = r#"
+name: tiny_vgg
+version: 1.0.0
+framework:
+  name: XLA-PJRT
+  version: '*'
+inputs:
+  - type: image
+outputs:
+  - type: probability
+    steps:
+      - top_k:
+          k: 3
+model:
+  base_url: builtin://artifacts/
+  graph_path: tiny_vgg.hlo.txt
+"#;
+    server
+        .registry
+        .register_manifest(mlmodelscope::manifest::ModelManifest::from_yaml(yaml).unwrap());
+    let job = EvalJob::new("tiny_vgg", Scenario::Batched { batch_size: 4, batches: 2 });
+    let rec = server.evaluate(&job).unwrap().remove(0);
+    assert_eq!(rec.latencies.len(), 2);
+    assert!(rec.throughput > 0.0 && rec.throughput.is_finite());
+}

@@ -1,0 +1,189 @@
+//! Property-based tests over the platform's specification layer: randomized
+//! manifests, scenarios, tensors and records must round-trip and satisfy
+//! their invariants (the `proptest` substitute from `util::rng::forall`).
+
+use mlmodelscope::evaldb::{EvalKey, EvalRecord};
+use mlmodelscope::preprocess::Tensor;
+use mlmodelscope::scenario::{Scenario, Workload};
+use mlmodelscope::util::json::Json;
+use mlmodelscope::util::rng::{forall, Xorshift};
+
+fn rand_scenario(rng: &mut Xorshift) -> Scenario {
+    match rng.below(5) {
+        0 => Scenario::Online { count: 1 + rng.below(100) as usize },
+        1 => Scenario::Poisson { rate: rng.range_f64(0.5, 500.0), count: 1 + rng.below(100) as usize },
+        2 => Scenario::Batched {
+            batch_size: 1 + rng.below(256) as usize,
+            batches: 1 + rng.below(16) as usize,
+        },
+        3 => Scenario::FixedQps { qps: rng.range_f64(0.5, 200.0), count: 1 + rng.below(100) as usize },
+        _ => Scenario::Burst {
+            burst_size: 1 + rng.below(32) as usize,
+            period_s: rng.range_f64(0.01, 5.0),
+            bursts: 1 + rng.below(8) as usize,
+        },
+    }
+}
+
+#[test]
+fn scenario_json_roundtrip_property() {
+    forall(0xA11CE, 200, |rng| {
+        let s = rand_scenario(rng);
+        let back = Scenario::from_json(&s.to_json()).expect("roundtrip");
+        // Counts survive exactly; rates within float-repr tolerance.
+        assert_eq!(back.name(), s.name());
+        assert_eq!(back.total_items(), s.total_items());
+        assert_eq!(back.batch_size(), s.batch_size());
+    });
+}
+
+#[test]
+fn workload_invariants_property() {
+    forall(0xB0B, 120, |rng| {
+        let s = rand_scenario(rng);
+        let w = Workload::generate(&s, rng.next_u64());
+        // Request count matches the scenario definition.
+        let expect = match &s {
+            Scenario::Batched { batches, .. } => *batches,
+            Scenario::Burst { burst_size, bursts, .. } => burst_size * bursts,
+            Scenario::Online { count }
+            | Scenario::Poisson { count, .. }
+            | Scenario::FixedQps { count, .. } => *count,
+        };
+        assert_eq!(w.requests.len(), expect);
+        // Arrival times are non-decreasing and non-negative; ids unique.
+        let mut last = 0.0f64;
+        let mut seen = std::collections::HashSet::new();
+        for r in &w.requests {
+            assert!(r.at_secs >= last - 1e-12);
+            last = last.max(r.at_secs);
+            assert!(seen.insert(r.id));
+            assert_eq!(r.batch_size, s.batch_size());
+        }
+    });
+}
+
+#[test]
+fn tensor_stack_unstack_property() {
+    forall(0x7E45, 100, |rng| {
+        let dims: Vec<usize> = vec![
+            1,
+            1 + rng.below(8) as usize,
+            1 + rng.below(8) as usize,
+            1 + rng.below(4) as usize,
+        ];
+        let n = 1 + rng.below(6) as usize;
+        let tensors: Vec<Tensor> =
+            (0..n).map(|i| Tensor::random(dims.clone(), rng.next_u64() ^ i as u64)).collect();
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        let stacked = Tensor::stack(&refs).expect("stack");
+        assert_eq!(stacked.batch(), n);
+        let parts = stacked.unstack();
+        assert_eq!(parts.len(), n);
+        for (orig, part) in tensors.iter().zip(&parts) {
+            assert_eq!(&orig.data, &part.data);
+        }
+    });
+}
+
+#[test]
+fn eval_record_json_roundtrip_property() {
+    forall(0x5EC5, 150, |rng| {
+        let key = EvalKey {
+            model: rng.ident(8),
+            model_version: format!("{}.{}.{}", rng.below(3), rng.below(20), rng.below(10)),
+            framework: rng.ident(6),
+            framework_version: "1.15.0".into(),
+            system: rng.ident(5),
+            device: if rng.below(2) == 0 { "cpu" } else { "gpu" }.into(),
+            scenario: "online".into(),
+            batch_size: 1 + rng.below(256) as usize,
+        };
+        let mut rec = EvalRecord::new(
+            key.clone(),
+            (0..rng.below(50)).map(|_| rng.range_f64(1e-5, 1.0)).collect(),
+            rng.range_f64(0.1, 1e5),
+        );
+        rec.trace_id = if rng.below(2) == 0 { Some(rng.next_u64() >> 12) } else { None };
+        rec.meta = Json::obj(vec![("k", Json::str(rng.ident(12)))]);
+        rec.seq = rng.below(1_000_000);
+        let back = EvalRecord::from_json(&rec.to_json()).expect("roundtrip");
+        assert_eq!(back.key, rec.key);
+        assert_eq!(back.seq, rec.seq);
+        assert_eq!(back.trace_id, rec.trace_id);
+        assert_eq!(back.latencies.len(), rec.latencies.len());
+        for (a, b) in back.latencies.iter().zip(&rec.latencies) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn json_fuzz_never_panics() {
+    forall(0xF422, 300, |rng| {
+        // Random byte soup + random structural fragments must never panic
+        // the parser — only return Ok/Err.
+        let len = rng.below(64) as usize;
+        let fragments = [
+            "{", "}", "[", "]", "\"", ":", ",", "null", "true", "1e9", "-", ".5", "\\u00",
+            "a", " ",
+        ];
+        let s: String = (0..len)
+            .map(|_| fragments[rng.below(fragments.len() as u64) as usize])
+            .collect();
+        let _ = Json::parse(&s);
+    });
+}
+
+#[test]
+fn yaml_fuzz_never_panics() {
+    forall(0xFA22, 300, |rng| {
+        let len = rng.below(32) as usize;
+        let fragments = [
+            "a:", " b", "\n", "  ", "- ", "x", "1", "'q'", "[1,2]", "{a: 1}", "|", "#c",
+            ":", "~",
+        ];
+        let s: String = (0..len)
+            .map(|_| fragments[rng.below(fragments.len() as u64) as usize])
+            .collect();
+        let _ = mlmodelscope::util::yamlmini::parse(&s);
+    });
+}
+
+#[test]
+fn manifest_roundtrip_through_json_property() {
+    // Zoo manifests (all 37) → JSON → manifest, preserving evaluation-
+    // relevant fields.
+    for zm in mlmodelscope::zoo::all() {
+        let m = zm.manifest();
+        let back = mlmodelscope::manifest::ModelManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.name, m.name);
+        assert_eq!(back.version, m.version);
+        assert_eq!(back.framework_name, m.framework_name);
+        assert_eq!(back.inputs.len(), m.inputs.len());
+        assert_eq!(back.inputs[0].steps, m.inputs[0].steps);
+        assert_eq!(back.outputs[0].steps, m.outputs[0].steps);
+        assert_eq!(back.accuracy(), m.accuracy());
+    }
+}
+
+#[test]
+fn trimmed_mean_robust_to_outliers_property() {
+    forall(0x0DD5, 100, |rng| {
+        // Core samples in [10, 20] ms + up to 15% huge outliers: trimmed
+        // mean must stay within the core range (the reason the paper uses
+        // it for Table 2).
+        let n = 20 + rng.below(200) as usize;
+        let outliers = n / 7;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.010, 0.020)).collect();
+        for i in 0..outliers {
+            xs[i] = rng.range_f64(1.0, 50.0);
+        }
+        rng.shuffle(&mut xs);
+        let tm = mlmodelscope::metrics::trimmed_mean(&xs, 0.2);
+        assert!(
+            (0.010..0.0201).contains(&tm),
+            "trimmed mean {tm} polluted by outliers (n={n}, outliers={outliers})"
+        );
+    });
+}
