@@ -8,25 +8,38 @@
 //! repository / web / local file system). Checksums use SHA-256; a cached
 //! asset is re-validated before reuse, as in the paper.
 
-use sha2::{Digest, Sha256};
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DataError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("unsupported asset url {0:?}")]
+    Io(std::io::Error),
     BadUrl(String),
-    #[error("checksum mismatch for {path}: expected {expected}, got {got}")]
     Checksum { path: String, expected: String, got: String },
+}
+
+impl std::fmt::Display for DataError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataError::Io(e) => write!(f, "io: {e}"),
+            DataError::BadUrl(u) => write!(f, "unsupported asset url {u:?}"),
+            DataError::Checksum { path, expected, got } => {
+                write!(f, "checksum mismatch for {path}: expected {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
+
+impl From<std::io::Error> for DataError {
+    fn from(e: std::io::Error) -> Self {
+        DataError::Io(e)
+    }
 }
 
 /// Hex SHA-256 of a byte slice.
 pub fn sha256_hex(bytes: &[u8]) -> String {
-    let mut h = Sha256::new();
-    h.update(bytes);
-    let digest = h.finalize();
-    digest.iter().map(|b| format!("{b:02x}")).collect()
+    crate::util::sha256::sha256_hex(bytes)
 }
 
 /// Asset cache rooted at a directory.

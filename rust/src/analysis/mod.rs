@@ -252,6 +252,49 @@ pub fn layer_population(timeline: &Timeline) -> (usize, usize) {
     (layers.len(), fast)
 }
 
+/// Batching/dispatch report: one row per stored record carrying the
+/// cross-request batcher's metadata ([`crate::batcher`]) — occupancy, fill
+/// ratio, queue-delay tail, and how the dispatcher sharded the job.
+pub fn batching_table(models: &[String], db: &EvalDb) -> Table {
+    let mut t = Table::new(
+        "Batching — occupancy, queue delay, dispatch sharding",
+        &[
+            "Model",
+            "Scenario",
+            "Agents",
+            "Batches",
+            "Mean Occ",
+            "Fill %",
+            "p90 Delay (ms)",
+            "Requeued",
+            "Tput (items/s)",
+        ],
+    );
+    for m in models {
+        for r in db.latest(&EvalQuery::model(m)) {
+            let series = match r.meta.get("batching") {
+                Some(bj) => match crate::metrics::BatchingSeries::from_json(bj) {
+                    Some(s) => s,
+                    None => continue,
+                },
+                None => continue,
+            };
+            t.row(&[
+                m.clone(),
+                r.key.scenario.clone(),
+                format!("{}", r.meta.f64_or("agents", 1.0) as u64),
+                series.batches().to_string(),
+                format!("{:.2}", series.mean_occupancy()),
+                format!("{:.0}", series.fill_ratio() * 100.0),
+                format!("{:.3}", series.p90_queue_delay_ms()),
+                format!("{}", r.meta.f64_or("requeued_batches", 0.0) as u64),
+                format!("{:.1}", r.throughput),
+            ]);
+        }
+    }
+    t
+}
+
 /// Full analysis report for a set of models — the analysis workflow's
 /// output artifact (step e).
 pub fn full_report(models: &[String], db: &EvalDb) -> String {
@@ -261,6 +304,12 @@ pub fn full_report(models: &[String], db: &EvalDb) -> String {
     out.push_str(&table2(models, db).render());
     out.push_str(&render_accuracy_figure(&summaries, false));
     out.push_str(&render_accuracy_figure(&summaries, true));
+    // The batching section appears only when some record carries the
+    // batcher's metadata (built once; rendered only if it gained rows).
+    let batching = batching_table(models, db);
+    if batching.row_count() > 0 {
+        out.push_str(&batching.render());
+    }
     out
 }
 
@@ -421,6 +470,43 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("table2.csv")).unwrap();
         assert!(csv.lines().count() >= 3);
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn batching_section_reports_series() {
+        let db = seed_db();
+        // A batched-dispatch record carrying the batcher's metadata.
+        let key = EvalKey {
+            model: "resnet50".into(),
+            model_version: "1.0.0".into(),
+            framework: "SimFramework-Volta".into(),
+            framework_version: "1.0.0".into(),
+            system: "aws_p3".into(),
+            device: "gpu".into(),
+            scenario: "poisson".into(),
+            batch_size: 8,
+        };
+        let series = crate::metrics::BatchingSeries {
+            capacity: 8,
+            occupancy: vec![8.0, 8.0, 6.0],
+            queue_delay_s: vec![0.002; 22],
+        };
+        let mut r = EvalRecord::new(key, vec![0.004; 22], 2400.0);
+        r.meta = Json::obj(vec![
+            ("batching", series.to_json()),
+            ("agents", Json::num(4.0)),
+            ("requeued_batches", Json::num(1.0)),
+        ]);
+        db.put(r);
+        let text = batching_table(&["resnet50".into(), "mobilenet".into()], &db).render();
+        assert!(text.contains("poisson"), "{text}");
+        assert!(text.contains("7.33"), "mean occupancy rendered: {text}");
+        assert!(text.contains("2400.0"), "{text}");
+        // full_report includes the section only when records carry it.
+        let with = full_report(&["resnet50".into()], &db);
+        assert!(with.contains("Batching —"), "{with}");
+        let without = full_report(&["mobilenet".into()], &db);
+        assert!(!without.contains("Batching —"));
     }
 
     #[test]

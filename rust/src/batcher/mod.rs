@@ -1,0 +1,688 @@
+//! Cross-request dynamic batching + load-balanced multi-agent dispatch.
+//!
+//! The original dispatch path resolves one agent and ships one scenario —
+//! correct, but it leaves throughput on the table for server-style
+//! workloads (`Poisson`, `FixedQps`, `Burst`, `Diurnal`, `TraceReplay`):
+//! requests arriving close together can share one predictor call, and a
+//! job's batches can spread over every agent that resolved. This module is
+//! that subsystem, in two deterministic halves:
+//!
+//! 1. **Planning** ([`plan_batches`]): fold a generated request schedule
+//!    into batches, flushing on `max_batch_size` *or* `max_wait_ms` —
+//!    whichever comes first. Planning is a pure function of
+//!    `(workload, config)`, so server and agent agree on the exact batch
+//!    boundaries the same way they agree on the workload itself
+//!    (regenerated from `(scenario, seed)`).
+//! 2. **Dispatch** ([`Dispatcher`]): spread planned batches across a pool
+//!    of [`BatchExecutor`]s with a least-outstanding-requests policy.
+//!    Executor liveness comes from the registry's TTL heartbeats at session
+//!    setup and from observed failures at run time: an executor that fails
+//!    a batch is marked dead and the batch is requeued to the survivors
+//!    **exactly once** — a second failure aborts the dispatch with a typed
+//!    error rather than looping.
+//!
+//! Per-request identity rides in [`Envelope::seq`] end to end: outputs are
+//! returned sorted by `seq` and are element-wise identical to per-request
+//! execution (batching must never change results — only their latency).
+//! Batch occupancy and per-request queue delay are surfaced as
+//! [`crate::metrics::BatchingSeries`] so the analysis workflow can report
+//! them next to the paper's latency/throughput metrics.
+
+use crate::metrics::BatchingSeries;
+use crate::pipeline::Envelope;
+use crate::scenario::{Request, Workload};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Batching policy: flush on size or deadline, whichever first.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum requests coalesced into one predictor call.
+    pub max_batch_size: usize,
+    /// Maximum time a request may wait in an open batch, milliseconds.
+    pub max_wait_ms: f64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0 }
+    }
+}
+
+impl BatcherConfig {
+    /// Degenerate config: every request is its own batch (the per-request
+    /// dispatch baseline the `fig_batching` bench compares against).
+    pub fn per_request() -> Self {
+        BatcherConfig { max_batch_size: 1, max_wait_ms: 0.0 }
+    }
+}
+
+/// One planned batch: coalesced request envelopes plus the timing facts the
+/// metrics layer needs.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Position in the planned batch stream.
+    pub index: u64,
+    /// Arrival of the first request in the batch (seconds from t0).
+    pub opened_at_secs: f64,
+    /// When the batch closed: last arrival for size-triggered flushes,
+    /// `opened_at + max_wait` for deadline-triggered ones.
+    pub formed_at_secs: f64,
+    /// The coalesced requests; `seq` carries each request's identity.
+    pub envelopes: Vec<Envelope>,
+    /// Arrival offset of each envelope, parallel to `envelopes`.
+    pub arrivals: Vec<f64>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.envelopes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envelopes.is_empty()
+    }
+
+    /// Per-request batching delay: time spent waiting for the batch to
+    /// close after the request arrived.
+    pub fn queue_delays_secs(&self) -> Vec<f64> {
+        self.arrivals
+            .iter()
+            .map(|a| (self.formed_at_secs - a).max(0.0))
+            .collect()
+    }
+}
+
+/// Coalesce a workload's request schedule into batches. `make` builds the
+/// envelope for each request (payload + `seq = request.id`); planning never
+/// reorders requests, so arrivals within a batch stay non-decreasing.
+pub fn plan_batches(
+    workload: &Workload,
+    cfg: &BatcherConfig,
+    mut make: impl FnMut(&Request) -> Envelope,
+) -> Vec<Batch> {
+    fn close(
+        batches: &mut Vec<Batch>,
+        cur: &mut Vec<Envelope>,
+        arrivals: &mut Vec<f64>,
+        opened_at: f64,
+        formed_at: f64,
+    ) {
+        if cur.is_empty() {
+            return;
+        }
+        batches.push(Batch {
+            index: batches.len() as u64,
+            opened_at_secs: opened_at,
+            formed_at_secs: formed_at,
+            envelopes: std::mem::take(cur),
+            arrivals: std::mem::take(arrivals),
+        });
+    }
+
+    let max_batch = cfg.max_batch_size.max(1);
+    let max_wait = (cfg.max_wait_ms / 1e3).max(0.0);
+    let mut batches = Vec::new();
+    let mut cur: Vec<Envelope> = Vec::new();
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut opened_at = 0.0;
+    for r in &workload.requests {
+        // Deadline flush: this request arrived after the open batch's wait
+        // window expired, so that batch left at `opened_at + max_wait`.
+        if !cur.is_empty() && r.at_secs > opened_at + max_wait {
+            close(&mut batches, &mut cur, &mut arrivals, opened_at, opened_at + max_wait);
+        }
+        if cur.is_empty() {
+            opened_at = r.at_secs;
+        }
+        cur.push(make(r));
+        arrivals.push(r.at_secs);
+        // Size flush: the batch is full the moment the last slot fills.
+        if cur.len() >= max_batch {
+            let formed = *arrivals.last().unwrap();
+            close(&mut batches, &mut cur, &mut arrivals, opened_at, formed);
+        }
+    }
+    // Stream end: the trailing partial batch leaves at its deadline.
+    let formed = opened_at + max_wait;
+    close(&mut batches, &mut cur, &mut arrivals, opened_at, formed);
+    batches
+}
+
+/// Occupancy + queue-delay series for a planned batch stream.
+pub fn batching_series(batches: &[Batch], cfg: &BatcherConfig) -> BatchingSeries {
+    BatchingSeries {
+        capacity: cfg.max_batch_size.max(1),
+        occupancy: batches.iter().map(|b| b.len() as f64).collect(),
+        queue_delay_s: batches.iter().flat_map(|b| b.queue_delays_secs()).collect(),
+    }
+}
+
+/// What one executed batch produced.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// One output envelope per input envelope, same `seq`s (any order).
+    pub outputs: Vec<Envelope>,
+    /// Time the executor spent on the batch, seconds. Simulator-backed
+    /// executors report simulated time (§4.4.4), real ones wall-clock.
+    pub latency_s: f64,
+}
+
+/// Something that can execute a coalesced batch — an in-process agent
+/// session, a remote-agent proxy, or a test double.
+pub trait BatchExecutor: Send + Sync {
+    /// Stable identity used in dispatch accounting (usually the agent id).
+    fn id(&self) -> String;
+
+    /// Execute one batch. `Err` marks this executor dead for the rest of
+    /// the dispatch; its in-flight batch is requeued to survivors.
+    fn execute(&self, batch: &Batch) -> Result<BatchResult, String>;
+}
+
+/// Least-outstanding-requests pick: among alive executors with spare
+/// batch slots, the one with the fewest in-flight requests (ties go to the
+/// lowest index, keeping the choice deterministic).
+pub fn least_outstanding(
+    alive: &[bool],
+    outstanding_items: &[usize],
+    in_flight_batches: &[usize],
+    max_in_flight: usize,
+) -> Option<usize> {
+    (0..alive.len())
+        .filter(|&i| alive[i] && in_flight_batches[i] < max_in_flight)
+        .min_by_key(|&i| (outstanding_items[i], i))
+}
+
+/// Typed dispatch failure.
+#[derive(Debug)]
+pub struct DispatchError {
+    /// Agent the failure is attributed to (`-` when no agent applies).
+    pub agent: String,
+    pub msg: String,
+}
+
+impl std::fmt::Display for DispatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dispatch via agent {}: {}", self.agent, self.msg)
+    }
+}
+
+impl std::error::Error for DispatchError {}
+
+/// Accounting row for one executed batch.
+#[derive(Debug, Clone)]
+pub struct BatchLogRow {
+    pub index: u64,
+    pub occupancy: usize,
+    pub latency_s: f64,
+    pub agent: String,
+}
+
+/// The dispatch result: outputs restored to request order plus the
+/// per-agent accounting the analysis layer reports.
+#[derive(Debug, Default)]
+pub struct DispatchOutcome {
+    /// One envelope per request, sorted by `seq`.
+    pub outputs: Vec<Envelope>,
+    /// Per executed batch: where it ran and how long it took.
+    pub batch_log: Vec<BatchLogRow>,
+    /// Requests served per agent.
+    pub per_agent_items: BTreeMap<String, usize>,
+    /// Busy time per agent, seconds — the makespan input for multi-agent
+    /// throughput (`items / max busy`).
+    pub per_agent_busy_s: BTreeMap<String, f64>,
+    /// Batches requeued after an executor death (each at most once).
+    pub requeued_batches: usize,
+}
+
+impl DispatchOutcome {
+    /// Makespan across the pool: the busiest agent's total busy time.
+    pub fn makespan_s(&self) -> f64 {
+        self.per_agent_busy_s.values().copied().fold(0.0, f64::max)
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+struct QueuedBatch {
+    batch: Batch,
+    retried: bool,
+}
+
+struct DispatchState {
+    queue: VecDeque<QueuedBatch>,
+    outstanding_items: Vec<usize>,
+    in_flight_batches: Vec<usize>,
+    alive: Vec<bool>,
+    /// Batches currently executing (any executor).
+    busy: usize,
+    outputs: Vec<Envelope>,
+    log: Vec<BatchLogRow>,
+    per_agent_items: BTreeMap<String, usize>,
+    per_agent_busy_s: BTreeMap<String, f64>,
+    requeued: usize,
+    fatal: Option<DispatchError>,
+}
+
+struct SharedDispatch {
+    state: Mutex<DispatchState>,
+    cv: Condvar,
+}
+
+/// The load-balancing dispatcher: one worker per executor pulls batches off
+/// a shared queue under the [`least_outstanding`] policy.
+pub struct Dispatcher {
+    executors: Vec<Arc<dyn BatchExecutor>>,
+    max_in_flight: usize,
+}
+
+impl Dispatcher {
+    pub fn new(executors: Vec<Arc<dyn BatchExecutor>>) -> Dispatcher {
+        Dispatcher { executors, max_in_flight: 1 }
+    }
+
+    /// Allow up to `n` concurrent batches per executor (default 1, which
+    /// serializes each executor and keeps simulated-clock latency
+    /// measurements clean).
+    pub fn with_max_in_flight(mut self, n: usize) -> Dispatcher {
+        self.max_in_flight = n.max(1);
+        self
+    }
+
+    pub fn agent_ids(&self) -> Vec<String> {
+        self.executors.iter().map(|e| e.id()).collect()
+    }
+
+    /// Run every batch to completion across the pool.
+    pub fn dispatch(&self, batches: Vec<Batch>) -> Result<DispatchOutcome, DispatchError> {
+        if self.executors.is_empty() {
+            return Err(DispatchError {
+                agent: "-".into(),
+                msg: "no executors in the dispatch pool".into(),
+            });
+        }
+        let expected: usize = batches.iter().map(Batch::len).sum();
+        if expected == 0 {
+            return Ok(DispatchOutcome::default());
+        }
+        let n = self.executors.len();
+        let shared = Arc::new(SharedDispatch {
+            state: Mutex::new(DispatchState {
+                queue: batches.into_iter().map(|b| QueuedBatch { batch: b, retried: false }).collect(),
+                outstanding_items: vec![0; n],
+                in_flight_batches: vec![0; n],
+                alive: vec![true; n],
+                busy: 0,
+                outputs: Vec::with_capacity(expected),
+                log: Vec::new(),
+                per_agent_items: BTreeMap::new(),
+                per_agent_busy_s: BTreeMap::new(),
+                requeued: 0,
+                fatal: None,
+            }),
+            cv: Condvar::new(),
+        });
+
+        let workers: Vec<_> = (0..n)
+            .map(|_| {
+                let shared = shared.clone();
+                let executors = self.executors.clone();
+                let max_in_flight = self.max_in_flight;
+                std::thread::spawn(move || loop {
+                    let (qb, idx) = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            if st.fatal.is_some() {
+                                shared.cv.notify_all();
+                                return;
+                            }
+                            if st.queue.is_empty() {
+                                if st.busy == 0 {
+                                    shared.cv.notify_all();
+                                    return;
+                                }
+                                st = shared.cv.wait(st).unwrap();
+                                continue;
+                            }
+                            if !st.alive.iter().any(|a| *a) {
+                                st.fatal = Some(DispatchError {
+                                    agent: "-".into(),
+                                    msg: "no surviving agents for queued batches".into(),
+                                });
+                                shared.cv.notify_all();
+                                return;
+                            }
+                            if let Some(i) = least_outstanding(
+                                &st.alive,
+                                &st.outstanding_items,
+                                &st.in_flight_batches,
+                                max_in_flight,
+                            ) {
+                                let qb = st.queue.pop_front().unwrap();
+                                st.outstanding_items[i] += qb.batch.len();
+                                st.in_flight_batches[i] += 1;
+                                st.busy += 1;
+                                break (qb, i);
+                            }
+                            // Every live executor is at capacity.
+                            st = shared.cv.wait(st).unwrap();
+                        }
+                    };
+                    // A panic inside an executor must behave like an agent
+                    // death (mark dead + requeue), not leave the busy
+                    // counters stuck and hang every other worker in wait().
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        executors[idx].execute(&qb.batch)
+                    }))
+                    .unwrap_or_else(|p| Err(format!("executor panicked: {}", panic_text(&p))));
+                    let agent = executors[idx].id();
+                    let mut st = shared.state.lock().unwrap();
+                    st.outstanding_items[idx] -= qb.batch.len();
+                    st.in_flight_batches[idx] -= 1;
+                    st.busy -= 1;
+                    match result {
+                        Ok(r) if r.outputs.len() == qb.batch.len() => {
+                            *st.per_agent_items.entry(agent.clone()).or_insert(0) +=
+                                r.outputs.len();
+                            *st.per_agent_busy_s.entry(agent.clone()).or_insert(0.0) +=
+                                r.latency_s;
+                            st.log.push(BatchLogRow {
+                                index: qb.batch.index,
+                                occupancy: r.outputs.len(),
+                                latency_s: r.latency_s,
+                                agent,
+                            });
+                            st.outputs.extend(r.outputs);
+                        }
+                        Ok(r) => {
+                            st.fatal = Some(DispatchError {
+                                agent,
+                                msg: format!(
+                                    "batch {} returned {} outputs for {} requests",
+                                    qb.batch.index,
+                                    r.outputs.len(),
+                                    qb.batch.len()
+                                ),
+                            });
+                        }
+                        Err(msg) => {
+                            st.alive[idx] = false;
+                            if qb.retried {
+                                st.fatal = Some(DispatchError {
+                                    agent,
+                                    msg: format!(
+                                        "batch {} failed after one requeue: {msg}",
+                                        qb.batch.index
+                                    ),
+                                });
+                            } else {
+                                st.requeued += 1;
+                                st.queue.push_back(QueuedBatch { batch: qb.batch, retried: true });
+                            }
+                        }
+                    }
+                    drop(st);
+                    shared.cv.notify_all();
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("dispatch worker");
+        }
+
+        let mut st = shared.state.lock().unwrap();
+        if let Some(e) = st.fatal.take() {
+            return Err(e);
+        }
+        let mut outputs = std::mem::take(&mut st.outputs);
+        outputs.sort_by_key(|e| e.seq);
+        if outputs.len() != expected {
+            return Err(DispatchError {
+                agent: "-".into(),
+                msg: format!("lost requests: {} of {expected} completed", outputs.len()),
+            });
+        }
+        Ok(DispatchOutcome {
+            outputs,
+            batch_log: std::mem::take(&mut st.log),
+            per_agent_items: std::mem::take(&mut st.per_agent_items),
+            per_agent_busy_s: std::mem::take(&mut st.per_agent_busy_s),
+            requeued_batches: st.requeued,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::Payload;
+    use crate::scenario::Scenario;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn byte_envelope(r: &Request) -> Envelope {
+        Envelope {
+            seq: r.id,
+            trace_id: 0,
+            parent_span: None,
+            payload: Payload::Bytes(vec![r.id as u8]),
+        }
+    }
+
+    /// Deterministic per-item transform + fixed per-item cost.
+    struct EchoExec {
+        name: String,
+        calls: AtomicUsize,
+    }
+
+    impl EchoExec {
+        fn new(name: &str) -> Arc<EchoExec> {
+            Arc::new(EchoExec { name: name.into(), calls: AtomicUsize::new(0) })
+        }
+    }
+
+    impl BatchExecutor for EchoExec {
+        fn id(&self) -> String {
+            self.name.clone()
+        }
+
+        fn execute(&self, batch: &Batch) -> Result<BatchResult, String> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let outputs = batch
+                .envelopes
+                .iter()
+                .map(|e| Envelope {
+                    payload: match &e.payload {
+                        Payload::Bytes(b) => Payload::Bytes(vec![b[0].wrapping_add(1)]),
+                        other => other.clone(),
+                    },
+                    ..e.clone()
+                })
+                .collect();
+            Ok(BatchResult { outputs, latency_s: 1e-4 * batch.len() as f64 })
+        }
+    }
+
+    /// Dies on every call — the injected agent failure.
+    struct DeadExec;
+
+    impl BatchExecutor for DeadExec {
+        fn id(&self) -> String {
+            "dead".into()
+        }
+
+        fn execute(&self, _batch: &Batch) -> Result<BatchResult, String> {
+            Err("CUDA_ERROR_OUT_OF_MEMORY (injected)".into())
+        }
+    }
+
+    #[test]
+    fn size_triggered_batches_fill_to_capacity() {
+        let w = Workload::generate(&Scenario::Online { count: 20 }, 1);
+        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0 };
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        let occ: Vec<usize> = batches.iter().map(Batch::len).collect();
+        assert_eq!(occ, vec![8, 8, 4]);
+        assert!(batches.iter().all(|b| b.formed_at_secs == 0.0));
+        assert!(batches
+            .iter()
+            .all(|b| b.queue_delays_secs().iter().all(|d| *d == 0.0)));
+    }
+
+    #[test]
+    fn deadline_bounds_queue_delay() {
+        let w = Workload::generate(&Scenario::Poisson { rate: 400.0, count: 300 }, 7);
+        let cfg = BatcherConfig { max_batch_size: 16, max_wait_ms: 10.0 };
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        let total: usize = batches.iter().map(Batch::len).sum();
+        assert_eq!(total, 300, "no request lost or duplicated in planning");
+        for b in &batches {
+            assert!(b.len() <= 16);
+            for d in b.queue_delays_secs() {
+                assert!((0.0..=0.010 + 1e-9).contains(&d), "delay {d}");
+            }
+        }
+        // High offered load at a 10ms window → real coalescing happens.
+        let mean_occ = total as f64 / batches.len() as f64;
+        assert!(mean_occ > 2.0, "mean occupancy {mean_occ}");
+        // Planning is deterministic (server and agent agree on boundaries).
+        let again = plan_batches(&w, &cfg, byte_envelope);
+        assert_eq!(batches.len(), again.len());
+        for (a, b) in batches.iter().zip(&again) {
+            assert_eq!(a.formed_at_secs, b.formed_at_secs);
+            assert_eq!(a.len(), b.len());
+        }
+    }
+
+    #[test]
+    fn per_request_config_never_coalesces() {
+        let w = Workload::generate(&Scenario::Poisson { rate: 10_000.0, count: 64 }, 3);
+        let batches = plan_batches(&w, &BatcherConfig::per_request(), byte_envelope);
+        assert_eq!(batches.len(), 64);
+        assert!(batches.iter().all(|b| b.len() == 1));
+    }
+
+    #[test]
+    fn least_outstanding_policy() {
+        // Fewest outstanding wins; ties go to the lowest index.
+        assert_eq!(
+            least_outstanding(&[true, true, true], &[4, 2, 2], &[0, 0, 0], 1),
+            Some(1)
+        );
+        // Dead executors are skipped even at zero load.
+        assert_eq!(
+            least_outstanding(&[false, true], &[0, 9], &[0, 0], 1),
+            Some(1)
+        );
+        // At capacity → not eligible.
+        assert_eq!(least_outstanding(&[true, true], &[0, 5], &[1, 0], 1), Some(1));
+        // Nobody eligible.
+        assert_eq!(least_outstanding(&[true], &[0], &[1], 1), None);
+        assert_eq!(least_outstanding(&[false], &[0], &[0], 1), None);
+    }
+
+    #[test]
+    fn dispatch_preserves_identity_and_order() {
+        let w = Workload::generate(&Scenario::Poisson { rate: 500.0, count: 120 }, 9);
+        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 8.0 };
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        let pool: Vec<Arc<dyn BatchExecutor>> =
+            vec![EchoExec::new("a"), EchoExec::new("b"), EchoExec::new("c")];
+        let outcome = Dispatcher::new(pool).dispatch(batches).unwrap();
+        assert_eq!(outcome.outputs.len(), 120);
+        for (i, env) in outcome.outputs.iter().enumerate() {
+            assert_eq!(env.seq, i as u64, "outputs restored to request order");
+            match &env.payload {
+                Payload::Bytes(b) => assert_eq!(b[0], (i as u8).wrapping_add(1)),
+                other => panic!("unexpected payload {other:?}"),
+            }
+        }
+        assert_eq!(outcome.requeued_batches, 0);
+        let served: usize = outcome.per_agent_items.values().sum();
+        assert_eq!(served, 120);
+        assert!(outcome.makespan_s() > 0.0);
+    }
+
+    #[test]
+    fn dead_executor_requeues_exactly_once() {
+        let w = Workload::generate(&Scenario::Online { count: 48 }, 1);
+        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 0.0 };
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        assert_eq!(batches.len(), 6);
+        let pool: Vec<Arc<dyn BatchExecutor>> =
+            vec![Arc::new(DeadExec), EchoExec::new("s1"), EchoExec::new("s2")];
+        let outcome = Dispatcher::new(pool).dispatch(batches).unwrap();
+        // Every request completed exactly once despite the mid-run death.
+        assert_eq!(outcome.outputs.len(), 48);
+        let seqs: std::collections::HashSet<u64> =
+            outcome.outputs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs.len(), 48, "no duplicates from the requeue");
+        // The dead agent appears in no accounting; its one batch requeued.
+        assert!(!outcome.per_agent_items.contains_key("dead"));
+        assert_eq!(outcome.requeued_batches, 1);
+        assert!(outcome.batch_log.iter().all(|r| r.agent != "dead"));
+    }
+
+    /// Panics in an executor must not hang the dispatch: they convert to
+    /// the dead-executor path (requeue once, survivors finish the queue).
+    struct PanicExec;
+
+    impl BatchExecutor for PanicExec {
+        fn id(&self) -> String {
+            "panicky".into()
+        }
+
+        fn execute(&self, _batch: &Batch) -> Result<BatchResult, String> {
+            panic!("index out of bounds (injected)");
+        }
+    }
+
+    #[test]
+    fn panicking_executor_is_treated_as_dead_not_a_hang() {
+        let w = Workload::generate(&Scenario::Online { count: 32 }, 1);
+        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 0.0 };
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        let pool: Vec<Arc<dyn BatchExecutor>> =
+            vec![Arc::new(PanicExec), EchoExec::new("survivor")];
+        let outcome = Dispatcher::new(pool).dispatch(batches).unwrap();
+        assert_eq!(outcome.outputs.len(), 32);
+        assert_eq!(outcome.requeued_batches, 1);
+        assert!(!outcome.per_agent_items.contains_key("panicky"));
+    }
+
+    #[test]
+    fn all_executors_dead_is_a_typed_error() {
+        let w = Workload::generate(&Scenario::Online { count: 8 }, 1);
+        let batches = plan_batches(&w, &BatcherConfig::default(), byte_envelope);
+        let pool: Vec<Arc<dyn BatchExecutor>> = vec![Arc::new(DeadExec)];
+        let err = Dispatcher::new(pool).dispatch(batches).unwrap_err();
+        assert!(err.msg.contains("injected") || err.msg.contains("surviving"), "{err}");
+    }
+
+    #[test]
+    fn empty_pool_rejected() {
+        let w = Workload::generate(&Scenario::Online { count: 2 }, 1);
+        let batches = plan_batches(&w, &BatcherConfig::default(), byte_envelope);
+        let err = Dispatcher::new(Vec::new()).dispatch(batches).unwrap_err();
+        assert!(err.msg.contains("no executors"));
+    }
+
+    #[test]
+    fn series_summarizes_occupancy_and_delay() {
+        let w = Workload::generate(&Scenario::Online { count: 20 }, 1);
+        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0 };
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        let series = batching_series(&batches, &cfg);
+        assert_eq!(series.batches(), 3);
+        assert_eq!(series.queue_delay_s.len(), 20);
+        assert!((series.mean_occupancy() - 20.0 / 3.0).abs() < 1e-9);
+        assert!(series.fill_ratio() > 0.8);
+    }
+}

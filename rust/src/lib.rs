@@ -14,7 +14,10 @@
 //! - **evaluation**: the streaming pipeline executor ([`pipeline`]) running
 //!   pre-processing ([`preprocess`]), framework predictors ([`predictor`])
 //!   and post-processing ([`postprocess`]) under pluggable benchmarking
-//!   scenarios ([`scenario`]);
+//!   scenarios ([`scenario`]) — including the recorded-arrival
+//!   `TraceReplay` and sinusoidal-rate `Diurnal` workloads — with
+//!   cross-request dynamic batching and load-balanced multi-agent dispatch
+//!   ([`batcher`]);
 //! - **inspection**: across-stack tracing ([`tracing`]) aggregated by a
 //!   trace server ([`traceserver`]), with model/framework/system levels;
 //! - **analysis**: the evaluation database ([`evaldb`]) and the automated
@@ -34,6 +37,7 @@ pub mod util {
     pub mod json;
     pub mod rng;
     pub mod semver;
+    pub mod sha256;
     pub mod threadpool;
     pub mod yamlmini;
 }
@@ -48,6 +52,7 @@ pub mod zoo;
 pub mod postprocess;
 pub mod preprocess;
 
+pub mod batcher;
 pub mod pipeline;
 pub mod scenario;
 

@@ -104,6 +104,20 @@ fn parse_scenario(args: &Args) -> Scenario {
             period_s: args.f64_or("period", 1.0),
             bursts: args.usize_or("bursts", 4),
         },
+        "diurnal" => Scenario::Diurnal {
+            peak_qps: args.f64_or("peak-qps", 100.0),
+            trough_qps: args.f64_or("trough-qps", 10.0),
+            period_s: args.f64_or("period", 60.0),
+            count: args.usize_or("count", 32),
+        },
+        // `--timestamps 0.0,0.01,0.5,...` — replay a recorded arrival log.
+        "trace_replay" => Scenario::TraceReplay {
+            timestamps: args
+                .list("timestamps")
+                .iter()
+                .filter_map(|t| t.parse::<f64>().ok())
+                .collect(),
+        },
         _ => Scenario::Online { count: args.usize_or("count", 16) },
     }
 }

@@ -32,14 +32,37 @@ pub fn framework_listing2() -> &'static str {
 }
 
 /// Shared manifest error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("yaml: {0}")]
-    Yaml(#[from] crate::util::yamlmini::YamlError),
-    #[error("semver: {0}")]
-    Semver(#[from] crate::util::semver::SemverError),
-    #[error("manifest field {field:?}: {msg}")]
+    Yaml(crate::util::yamlmini::YamlError),
+    Semver(crate::util::semver::SemverError),
     Field { field: String, msg: String },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Yaml(e) => write!(f, "yaml: {e}"),
+            ManifestError::Semver(e) => write!(f, "semver: {e}"),
+            ManifestError::Field { field, msg } => {
+                write!(f, "manifest field {field:?}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<crate::util::yamlmini::YamlError> for ManifestError {
+    fn from(e: crate::util::yamlmini::YamlError) -> Self {
+        ManifestError::Yaml(e)
+    }
+}
+
+impl From<crate::util::semver::SemverError> for ManifestError {
+    fn from(e: crate::util::semver::SemverError) -> Self {
+        ManifestError::Semver(e)
+    }
 }
 
 impl ManifestError {

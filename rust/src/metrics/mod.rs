@@ -189,6 +189,98 @@ impl Histogram {
     }
 }
 
+/// Batch-occupancy + queue-delay series produced by the cross-request
+/// batcher ([`crate::batcher`]) and reported by the analysis workflow.
+///
+/// Occupancy is recorded per executed batch (requests coalesced into one
+/// predictor call, out of `capacity`); queue delay is recorded per request
+/// (time spent waiting for its batch to close). Both use the same summary
+/// statistics as the paper's latency metrics so reports stay consistent
+/// (F2).
+#[derive(Debug, Clone, Default)]
+pub struct BatchingSeries {
+    /// The batcher's `max_batch_size`.
+    pub capacity: usize,
+    /// Requests per executed batch, in batch order.
+    pub occupancy: Vec<f64>,
+    /// Per-request batching delay, seconds.
+    pub queue_delay_s: Vec<f64>,
+}
+
+impl BatchingSeries {
+    pub fn batches(&self) -> usize {
+        self.occupancy.len()
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.occupancy.is_empty() {
+            return 0.0;
+        }
+        self.occupancy.iter().sum::<f64>() / self.occupancy.len() as f64
+    }
+
+    /// Mean occupancy as a fraction of capacity, in `[0, 1]`.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.capacity == 0 {
+            return 0.0;
+        }
+        self.mean_occupancy() / self.capacity as f64
+    }
+
+    pub fn mean_queue_delay_ms(&self) -> f64 {
+        if self.queue_delay_s.is_empty() {
+            return 0.0;
+        }
+        self.queue_delay_s.iter().sum::<f64>() / self.queue_delay_s.len() as f64 * 1e3
+    }
+
+    pub fn p90_queue_delay_ms(&self) -> f64 {
+        if self.queue_delay_s.is_empty() {
+            return 0.0;
+        }
+        percentile(&self.queue_delay_s, 90.0) * 1e3
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("capacity", Json::num(self.capacity as f64)),
+            ("batches", Json::num(self.batches() as f64)),
+            ("mean_occupancy", Json::num(self.mean_occupancy())),
+            ("fill_ratio", Json::num(self.fill_ratio())),
+            ("mean_queue_delay_ms", Json::num(self.mean_queue_delay_ms())),
+            ("p90_queue_delay_ms", Json::num(self.p90_queue_delay_ms())),
+            (
+                "occupancy",
+                Json::arr(self.occupancy.iter().map(|o| Json::num(*o)).collect()),
+            ),
+            (
+                "queue_delay_ms",
+                Json::arr(self.queue_delay_s.iter().map(|d| Json::num(d * 1e3)).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild from the JSON stored in an evaluation record's metadata.
+    pub fn from_json(j: &crate::util::json::Json) -> Option<BatchingSeries> {
+        Some(BatchingSeries {
+            capacity: j.f64_or("capacity", 0.0) as usize,
+            occupancy: j
+                .get("occupancy")?
+                .as_arr()?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect(),
+            queue_delay_s: j
+                .get("queue_delay_ms")?
+                .as_arr()?
+                .iter()
+                .filter_map(|v| v.as_f64().map(|d| d / 1e3))
+                .collect(),
+        })
+    }
+}
+
 /// Monotonic throughput counter (inputs/sec over a window).
 #[derive(Debug, Default)]
 pub struct Throughput {
@@ -288,6 +380,37 @@ mod tests {
             let tm = l.trimmed_mean();
             assert!(tm >= l.min() - 1e-12 && tm <= l.max() + 1e-12);
         });
+    }
+
+    #[test]
+    fn batching_series_summaries() {
+        let s = BatchingSeries {
+            capacity: 8,
+            occupancy: vec![8.0, 8.0, 4.0],
+            queue_delay_s: vec![0.001; 16]
+                .into_iter()
+                .chain(vec![0.009; 4])
+                .collect(),
+        };
+        assert_eq!(s.batches(), 3);
+        assert!((s.mean_occupancy() - 20.0 / 3.0).abs() < 1e-12);
+        assert!((s.fill_ratio() - 20.0 / 24.0).abs() < 1e-12);
+        assert!(s.mean_queue_delay_ms() > 1.0 && s.mean_queue_delay_ms() < 9.0);
+        assert!(s.p90_queue_delay_ms() >= s.mean_queue_delay_ms());
+        // JSON roundtrip preserves the series.
+        let back = BatchingSeries::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.capacity, 8);
+        assert_eq!(back.occupancy, s.occupancy);
+        assert_eq!(back.queue_delay_s.len(), 20);
+        assert!((back.p90_queue_delay_ms() - s.p90_queue_delay_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batching_series_empty_is_zero() {
+        let s = BatchingSeries::default();
+        assert_eq!(s.mean_occupancy(), 0.0);
+        assert_eq!(s.fill_ratio(), 0.0);
+        assert_eq!(s.p90_queue_delay_ms(), 0.0);
     }
 
     #[test]

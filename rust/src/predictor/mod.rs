@@ -96,17 +96,28 @@ impl InputMode {
 }
 
 /// Predictor errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PredictError {
-    #[error("model load failed: {0}")]
     Load(String),
-    #[error("unknown model handle")]
     BadHandle,
-    #[error("inference failed: {0}")]
     Inference(String),
-    #[error("input shape {got:?} incompatible with model {expect}")]
     Shape { got: Vec<usize>, expect: String },
 }
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredictError::Load(m) => write!(f, "model load failed: {m}"),
+            PredictError::BadHandle => f.write_str("unknown model handle"),
+            PredictError::Inference(m) => write!(f, "inference failed: {m}"),
+            PredictError::Shape { got, expect } => {
+                write!(f, "input shape {got:?} incompatible with model {expect}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
 
 /// The 3-function predictor interface (Listing 3).
 pub trait Predictor: Send + Sync {

@@ -85,13 +85,22 @@ impl RawImage {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PreprocessError {
-    #[error("decode: {0}")]
     Decode(String),
-    #[error("unsupported step: {0}")]
     Unsupported(String),
 }
+
+impl std::fmt::Display for PreprocessError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PreprocessError::Decode(m) => write!(f, "decode: {m}"),
+            PreprocessError::Unsupported(m) => write!(f, "unsupported step: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PreprocessError {}
 
 /// Bilinear resize to `(out_h, out_w)`.
 pub fn resize_bilinear(img: &RawImage, out_h: usize, out_w: usize) -> RawImage {

@@ -242,13 +242,35 @@ impl Registry {
             .collect()
     }
 
+    /// Is this agent still registered with an unexpired TTL? Expired
+    /// entries are dropped on the spot (expire on read, not only on sweep)
+    /// so a lapsed heartbeat can never win a selection race.
+    pub fn is_live(&self, id: &str) -> bool {
+        let mut agents = self.agents.lock().unwrap();
+        let live = match agents.get(id) {
+            Some(e) => e.expires.map_or(true, |t| t > Instant::now()),
+            None => return false,
+        };
+        if !live {
+            agents.remove(id);
+        }
+        live
+    }
+
     /// Pick one resolved agent round-robin (load balancing across agents).
+    ///
+    /// Candidates whose TTL lapsed *after* resolution are filtered here —
+    /// resolution results can be arbitrarily stale by the time dispatch
+    /// happens, and dispatching to a dead agent costs a full connect
+    /// timeout. Returns `None` when no candidate is still live.
     pub fn pick(&self, candidates: &[AgentInfo]) -> Option<AgentInfo> {
-        if candidates.is_empty() {
+        let live: Vec<&AgentInfo> =
+            candidates.iter().filter(|c| self.is_live(&c.id)).collect();
+        if live.is_empty() {
             return None;
         }
-        let i = self.rr.fetch_add(1, Ordering::Relaxed) as usize % candidates.len();
-        Some(candidates[i].clone())
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) as usize % live.len();
+        Some(live[i].clone())
     }
 }
 
@@ -415,6 +437,39 @@ mod tests {
             seen.insert(reg.pick(&cands).unwrap().system);
         }
         assert_eq!(seen.len(), 3, "round robin visits all agents");
+    }
+
+    #[test]
+    fn pick_never_selects_expired_agents() {
+        let reg = Registry::new();
+        reg.register_agent(agent("aws_p3", &["gpu"], "x86_64", &[]), None);
+        reg.register_agent(
+            agent("aws_p2", &["gpu"], "x86_64", &[]),
+            Some(Duration::from_millis(20)),
+        );
+        // Resolve while both are live: the candidate list holds two agents.
+        let cands = reg.resolve(&r50(), &SystemRequirements::any());
+        assert_eq!(cands.len(), 2);
+        // Let the TTL'd agent lapse *after* resolution; pick must skip it.
+        std::thread::sleep(Duration::from_millis(35));
+        for _ in 0..6 {
+            let picked = reg.pick(&cands).expect("one live candidate remains");
+            assert_eq!(picked.system, "aws_p3", "expired agent must never be picked");
+        }
+        // The lapsed entry was expired on read, not just skipped.
+        assert_eq!(reg.agents().len(), 1);
+        // All candidates expired → None, not a stale pick.
+        let ttl_only = {
+            let reg2 = Registry::new();
+            reg2.register_agent(
+                agent("aws_g3", &["gpu"], "x86_64", &[]),
+                Some(Duration::from_millis(10)),
+            );
+            let c = reg2.resolve(&r50(), &SystemRequirements::any());
+            std::thread::sleep(Duration::from_millis(25));
+            reg2.pick(&c)
+        };
+        assert!(ttl_only.is_none());
     }
 
     #[test]

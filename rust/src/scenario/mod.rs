@@ -26,6 +26,15 @@ pub enum Scenario {
     FixedQps { qps: f64, count: usize },
     /// Bursts of `burst_size` every `period_s` (interactive applications).
     Burst { burst_size: usize, period_s: f64, bursts: usize },
+    /// Replay a recorded arrival log: one request per timestamp (seconds
+    /// from workload start). Generation sanitizes the log — negatives clamp
+    /// to zero and timestamps are sorted — so the non-decreasing-arrivals
+    /// invariant holds for captured production traces too.
+    TraceReplay { timestamps: Vec<f64> },
+    /// Poisson arrivals whose rate swings sinusoidally between `trough_qps`
+    /// and `peak_qps` over `period_s` — the daily traffic curve the
+    /// cross-request batcher is designed for.
+    Diurnal { peak_qps: f64, trough_qps: f64, period_s: f64, count: usize },
 }
 
 impl Scenario {
@@ -36,6 +45,8 @@ impl Scenario {
             Scenario::Batched { .. } => "batched",
             Scenario::FixedQps { .. } => "fixed_qps",
             Scenario::Burst { .. } => "burst",
+            Scenario::TraceReplay { .. } => "trace_replay",
+            Scenario::Diurnal { .. } => "diurnal",
         }
     }
 
@@ -55,6 +66,8 @@ impl Scenario {
             Scenario::Batched { batch_size, batches } => batch_size * batches,
             Scenario::FixedQps { count, .. } => *count,
             Scenario::Burst { burst_size, bursts, .. } => burst_size * bursts,
+            Scenario::TraceReplay { timestamps } => timestamps.len(),
+            Scenario::Diurnal { count, .. } => *count,
         }
     }
 
@@ -85,6 +98,20 @@ impl Scenario {
                 ("period_s", Json::num(*period_s)),
                 ("bursts", Json::num(*bursts as f64)),
             ]),
+            Scenario::TraceReplay { timestamps } => Json::obj(vec![
+                ("kind", Json::str("trace_replay")),
+                (
+                    "timestamps",
+                    Json::arr(timestamps.iter().map(|t| Json::num(*t)).collect()),
+                ),
+            ]),
+            Scenario::Diurnal { peak_qps, trough_qps, period_s, count } => Json::obj(vec![
+                ("kind", Json::str("diurnal")),
+                ("peak_qps", Json::num(*peak_qps)),
+                ("trough_qps", Json::num(*trough_qps)),
+                ("period_s", Json::num(*period_s)),
+                ("count", Json::num(*count as f64)),
+            ]),
         }
     }
 
@@ -102,6 +129,20 @@ impl Scenario {
                 burst_size: j.f64_or("burst_size", 8.0) as usize,
                 period_s: j.f64_or("period_s", 1.0),
                 bursts: j.f64_or("bursts", 4.0) as usize,
+            }),
+            "trace_replay" => Some(Scenario::TraceReplay {
+                timestamps: j
+                    .get("timestamps")?
+                    .as_arr()?
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .collect(),
+            }),
+            "diurnal" => Some(Scenario::Diurnal {
+                peak_qps: j.f64_or("peak_qps", 100.0),
+                trough_qps: j.f64_or("trough_qps", 10.0),
+                period_s: j.f64_or("period_s", 60.0),
+                count,
             }),
             _ => None,
         }
@@ -205,6 +246,30 @@ impl Workload {
                         requests.push(Request { id, at_secs: b as f64 * period_s, batch_size: 1 });
                         id += 1;
                     }
+                }
+            }
+            Scenario::TraceReplay { timestamps } => {
+                // Sanitize the recorded log: clamp negatives, sort, so the
+                // non-decreasing invariant holds regardless of capture noise.
+                let mut ts: Vec<f64> = timestamps
+                    .iter()
+                    .map(|t| if t.is_finite() && *t > 0.0 { *t } else { 0.0 })
+                    .collect();
+                ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for (id, t) in ts.into_iter().enumerate() {
+                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1 });
+                }
+            }
+            Scenario::Diurnal { peak_qps, trough_qps, period_s, count } => {
+                let (hi, lo) = (peak_qps.max(*trough_qps), peak_qps.min(*trough_qps));
+                let period = period_s.max(1e-9);
+                let mut t = 0.0;
+                for id in 0..*count {
+                    let phase = (2.0 * std::f64::consts::PI * t / period).sin();
+                    // phase = +1 → peak, -1 → trough.
+                    let rate = (lo + (hi - lo) * (1.0 + phase) / 2.0).max(1e-6);
+                    t += rng.exponential(rate);
+                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1 });
                 }
             }
         }
@@ -325,11 +390,52 @@ mod tests {
             Scenario::Batched { batch_size: 8, batches: 2 },
             Scenario::FixedQps { qps: 3.0, count: 4 },
             Scenario::Burst { burst_size: 2, period_s: 0.5, bursts: 3 },
+            Scenario::TraceReplay { timestamps: vec![0.0, 0.125, 0.5, 2.0] },
+            Scenario::Diurnal { peak_qps: 200.0, trough_qps: 25.0, period_s: 10.0, count: 6 },
         ];
         for s in scenarios {
             let j = s.to_json();
             let back = Scenario::from_json(&j).unwrap();
             assert_eq!(back, s);
         }
+    }
+
+    #[test]
+    fn trace_replay_sanitizes_recorded_log() {
+        // Out-of-order + negative timestamps from a noisy capture.
+        let s = Scenario::TraceReplay { timestamps: vec![0.5, -0.1, 0.2, 0.2, 1.5] };
+        let w = Workload::generate(&s, 1);
+        assert_eq!(w.requests.len(), 5);
+        assert_eq!(s.total_items(), 5);
+        let times: Vec<f64> = w.requests.iter().map(|r| r.at_secs).collect();
+        assert_eq!(times, vec![0.0, 0.2, 0.2, 0.5, 1.5]);
+        // Replay ignores the seed: the log IS the schedule.
+        assert_eq!(w.requests, Workload::generate(&s, 2).requests);
+    }
+
+    #[test]
+    fn diurnal_rate_swings_between_peak_and_trough() {
+        let s = Scenario::Diurnal {
+            peak_qps: 400.0,
+            trough_qps: 40.0,
+            period_s: 4.0,
+            count: 2000,
+        };
+        let w = Workload::generate(&s, 11);
+        assert_eq!(w.requests.len(), 2000);
+        for pair in w.requests.windows(2) {
+            assert!(pair[1].at_secs >= pair[0].at_secs);
+        }
+        // First quarter-period sits at the sine peak, the third at the
+        // trough: request density must differ markedly.
+        let count_in = |lo: f64, hi: f64| {
+            w.requests.iter().filter(|r| r.at_secs >= lo && r.at_secs < hi).count()
+        };
+        let peak = count_in(0.0, 1.0);
+        let trough = count_in(2.0, 3.0);
+        assert!(peak as f64 > trough as f64 * 2.0, "peak {peak} vs trough {trough}");
+        // Deterministic per seed (F1).
+        assert_eq!(w.requests, Workload::generate(&s, 11).requests);
+        assert_ne!(w.requests, Workload::generate(&s, 12).requests);
     }
 }

@@ -14,11 +14,15 @@
 pub mod webui;
 
 use crate::agent::{Agent, EvalRequest};
-use crate::evaldb::{EvalDb, EvalRecord};
+use crate::batcher::{batching_series, plan_batches, BatchExecutor, BatcherConfig, Dispatcher, DispatchOutcome};
+use crate::evaldb::{EvalDb, EvalKey, EvalRecord};
 use crate::manifest::SystemRequirements;
+use crate::metrics::BatchingSeries;
+use crate::pipeline::{Envelope, Payload};
 use crate::predictor::InputMode;
+use crate::preprocess::Tensor;
 use crate::registry::{AgentInfo, Registry};
-use crate::scenario::Scenario;
+use crate::scenario::{Scenario, Workload};
 use crate::traceserver::TraceServer;
 use crate::tracing::TraceLevel;
 use crate::util::json::Json;
@@ -57,6 +61,14 @@ impl EvalJob {
     }
 }
 
+/// Result of a batched multi-agent evaluation: the stored record plus the
+/// dispatch accounting and batching series behind it.
+pub struct BatchedEval {
+    pub record: EvalRecord,
+    pub series: BatchingSeries,
+    pub outcome: DispatchOutcome,
+}
+
 /// The server.
 pub struct Server {
     pub registry: Arc<Registry>,
@@ -67,15 +79,28 @@ pub struct Server {
     local_agents: Mutex<HashMap<String, Arc<Agent>>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ServerError {
-    #[error("model {0:?} not found in registry")]
     UnknownModel(String),
-    #[error("no agent satisfies the request (model {model}, requirements {req})")]
     NoAgent { model: String, req: String },
-    #[error("agent {0} failed: {1}")]
     AgentFailed(String, String),
+    Unsupported(String),
 }
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServerError::UnknownModel(m) => write!(f, "model {m:?} not found in registry"),
+            ServerError::NoAgent { model, req } => {
+                write!(f, "no agent satisfies the request (model {model}, requirements {req})")
+            }
+            ServerError::AgentFailed(id, msg) => write!(f, "agent {id} failed: {msg}"),
+            ServerError::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 impl Server {
     pub fn new(
@@ -124,7 +149,17 @@ impl Server {
         let targets: Vec<AgentInfo> = if job.all_agents {
             candidates
         } else {
-            vec![self.registry.pick(&candidates).unwrap()]
+            // The pick re-checks liveness: every candidate may have expired
+            // between resolution and dispatch.
+            match self.registry.pick(&candidates) {
+                Some(target) => vec![target],
+                None => {
+                    return Err(ServerError::NoAgent {
+                        model: job.model.clone(),
+                        req: job.requirements.to_json().to_string(),
+                    })
+                }
+            }
         };
 
         // ④ dispatch — remote agents in parallel (F4), local ones inline.
@@ -180,6 +215,146 @@ impl Server {
             }
         }
         Ok(results)
+    }
+
+    /// Batched multi-agent evaluation (the scaling path): coalesce the
+    /// job's request stream into dynamic batches and shard them across
+    /// *every* resolved live in-process agent under the dispatcher's
+    /// least-outstanding-requests policy. Stores one evaluation record
+    /// whose metadata carries the batching series (occupancy, queue delay,
+    /// per-agent sharding) for the analysis workflow.
+    pub fn evaluate_batched(
+        &self,
+        job: &EvalJob,
+        cfg: &BatcherConfig,
+    ) -> Result<BatchedEval, ServerError> {
+        // The batcher coalesces *single-item* request streams; a scenario
+        // whose requests are already batches (`Batched`) would be silently
+        // miscounted here — its batching happens in the classic path.
+        if job.scenario.batch_size() > 1 {
+            return Err(ServerError::Unsupported(format!(
+                "batched dispatch requires per-request batch size 1; scenario {:?} carries {} — use Server::evaluate",
+                job.scenario.name(),
+                job.scenario.batch_size()
+            )));
+        }
+        let no_agent = || ServerError::NoAgent {
+            model: job.model.clone(),
+            req: job.requirements.to_json().to_string(),
+        };
+        let manifest = self
+            .registry
+            .manifest(&job.model, job.model_version.as_deref())
+            .ok_or_else(|| ServerError::UnknownModel(job.model.clone()))?;
+        let candidates = self.registry.resolve(&manifest, &job.requirements);
+        // Shard only across agents that are both still live (TTL re-checked
+        // at dispatch time) and in-process; remote batched sessions ride on
+        // the same executor trait but are a later step.
+        let locals: Vec<(String, Arc<Agent>)> = {
+            let agents = self.local_agents.lock().unwrap();
+            candidates
+                .iter()
+                .filter(|c| self.registry.is_live(&c.id))
+                .filter_map(|c| agents.get(&c.id).map(|a| (c.id.clone(), a.clone())))
+                .collect()
+        };
+        if locals.is_empty() {
+            return Err(no_agent());
+        }
+
+        // The server defines the workload (same `(scenario, seed)` contract
+        // as the classic path) and the batch plan is a pure function of it.
+        let workload = Workload::generate(&job.scenario, job.seed);
+        let batches = plan_batches(&workload, cfg, |r| Envelope {
+            seq: r.id,
+            trace_id: 0,
+            parent_span: None,
+            payload: Payload::Tensor(Tensor::random(vec![1, 4, 4, 3], job.seed ^ r.id)),
+        });
+        let series = batching_series(&batches, cfg);
+        let delay_of: HashMap<u64, (u64, f64)> = batches
+            .iter()
+            .flat_map(|b| {
+                b.envelopes
+                    .iter()
+                    .zip(b.queue_delays_secs())
+                    .map(|(e, d)| (e.seq, (b.index, d)))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+
+        let mut executors: Vec<Arc<dyn BatchExecutor>> = Vec::new();
+        let mut trace_ids = Vec::new();
+        for (id, agent) in &locals {
+            let session = agent
+                .open_batch_session(&manifest, cfg.max_batch_size)
+                .map_err(|e| ServerError::AgentFailed(id.clone(), e))?;
+            trace_ids.push(session.trace_id());
+            executors.push(Arc::new(session));
+        }
+        let outcome = Dispatcher::new(executors)
+            .dispatch(batches)
+            .map_err(|e| ServerError::AgentFailed(e.agent.clone(), e.msg))?;
+
+        // Per-request latency = batching delay + its batch's service time.
+        let batch_latency: HashMap<u64, f64> =
+            outcome.batch_log.iter().map(|r| (r.index, r.latency_s)).collect();
+        let latencies: Vec<f64> = outcome
+            .outputs
+            .iter()
+            .map(|env| {
+                let (bidx, delay) = delay_of.get(&env.seq).copied().unwrap_or((0, 0.0));
+                delay + batch_latency.get(&bidx).copied().unwrap_or(0.0)
+            })
+            .collect();
+        let items = outcome.outputs.len() as f64;
+        let throughput = items / outcome.makespan_s().max(1e-12);
+
+        let (fw, fw_ver) = locals[0].1.predictor().framework();
+        let systems: std::collections::BTreeSet<String> =
+            locals.iter().map(|(_, a)| a.config.system.clone()).collect();
+        let key = EvalKey {
+            model: manifest.name.clone(),
+            model_version: manifest.version.to_string(),
+            framework: fw,
+            framework_version: fw_ver,
+            system: if systems.len() == 1 {
+                systems.iter().next().unwrap().clone()
+            } else {
+                "multi".to_string()
+            },
+            device: locals[0]
+                .1
+                .config
+                .devices
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "cpu".to_string()),
+            scenario: job.scenario.name().to_string(),
+            batch_size: cfg.max_batch_size.max(1),
+        };
+        let mut record = EvalRecord::new(key, latencies, throughput);
+        record.trace_id = trace_ids.first().copied();
+        record.meta = Json::obj(vec![
+            ("batching", series.to_json()),
+            ("dispatch", Json::str("least_outstanding")),
+            ("agents", Json::num(locals.len() as f64)),
+            (
+                "per_agent_items",
+                Json::Obj(
+                    outcome
+                        .per_agent_items
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            ("requeued_batches", Json::num(outcome.requeued_batches as f64)),
+            ("makespan_s", Json::num(outcome.makespan_s())),
+        ]);
+        let mut record_out = record.clone();
+        record_out.seq = self.evaldb.put(record);
+        Ok(BatchedEval { record: record_out, series, outcome })
     }
 
     /// Standard simulation platform: the four Table-1 systems, GPU + CPU
@@ -359,6 +534,86 @@ mod tests {
         // The trace made it to the trace server.
         let trace_id = records[0].trace_id.unwrap();
         assert!(!server.traces.timeline(trace_id).is_empty());
+    }
+
+    #[test]
+    fn batched_dispatch_shards_and_records() {
+        let server = testbed();
+        let mut job = EvalJob::new(
+            "ResNet_v1_50",
+            Scenario::Poisson { rate: 2000.0, count: 64 },
+        );
+        job.seed = 7;
+        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 10.0 };
+        let result = server.evaluate_batched(&job, &cfg).unwrap();
+        // Every request came back, in order, exactly once.
+        assert_eq!(result.outcome.outputs.len(), 64);
+        for (i, env) in result.outcome.outputs.iter().enumerate() {
+            assert_eq!(env.seq, i as u64);
+        }
+        // Real coalescing happened and the series landed in the record.
+        assert!(result.series.mean_occupancy() > 1.5, "{}", result.series.mean_occupancy());
+        let meta = &result.record.meta;
+        assert!(meta.get("batching").is_some());
+        assert_eq!(meta.f64_or("agents", 0.0), 2.0);
+        assert_eq!(meta.f64_or("requeued_batches", 99.0), 0.0);
+        // Per-request latencies: one per request, all positive.
+        assert_eq!(result.record.latencies.len(), 64);
+        assert!(result.record.latencies.iter().all(|l| *l > 0.0));
+        assert!(result.record.throughput > 0.0);
+        // Stored centrally for the analysis workflow.
+        assert_eq!(server.evaldb.len(), 1);
+        let served: usize = result.outcome.per_agent_items.values().sum();
+        assert_eq!(served, 64);
+        // Pre-batched scenarios are rejected, not miscounted.
+        let job = EvalJob::new("ResNet_v1_50", Scenario::Batched { batch_size: 8, batches: 4 });
+        assert!(matches!(
+            server.evaluate_batched(&job, &cfg),
+            Err(ServerError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn batched_results_identical_to_per_request_baseline() {
+        // The same job through coalesced multi-agent dispatch and through
+        // the degenerate per-request single-agent config must produce
+        // element-wise identical outputs (batching never changes results).
+        let run = |cfg: &BatcherConfig, single_agent: bool| {
+            let server = Server::standalone();
+            server.register_zoo();
+            let systems: &[&str] = if single_agent { &["aws_p3"] } else { &["aws_p3", "ibm_p8"] };
+            for sys in systems {
+                let (agent, _sim, _tracer) = sim_agent(
+                    sys,
+                    Device::Gpu,
+                    TraceLevel::None,
+                    server.evaldb.clone(),
+                    server.traces.clone(),
+                );
+                server.attach_local_agent(agent);
+            }
+            let mut job = EvalJob::new(
+                "MobileNet_v1_1.0_224",
+                Scenario::FixedQps { qps: 5000.0, count: 40 },
+            );
+            job.seed = 11;
+            server.evaluate_batched(&job, cfg).unwrap()
+        };
+        let batched = run(&BatcherConfig { max_batch_size: 8, max_wait_ms: 20.0 }, false);
+        let baseline = run(&BatcherConfig::per_request(), true);
+        assert_eq!(batched.outcome.outputs.len(), baseline.outcome.outputs.len());
+        for (a, b) in batched.outcome.outputs.iter().zip(&baseline.outcome.outputs) {
+            assert_eq!(a.seq, b.seq);
+            match (&a.payload, &b.payload) {
+                (crate::pipeline::Payload::Tensor(x), crate::pipeline::Payload::Tensor(y)) => {
+                    assert_eq!(x, y, "request {} diverged under batching", a.seq)
+                }
+                other => panic!("unexpected payloads {other:?}"),
+            }
+        }
+        // And the batched run actually coalesced.
+        assert!(batched.series.mean_occupancy() > 1.5);
+        assert_eq!(baseline.series.mean_occupancy(), 1.0);
     }
 
     #[test]

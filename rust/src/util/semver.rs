@@ -69,12 +69,19 @@ impl fmt::Display for Version {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("invalid version/constraint {input:?}: {msg}")]
+#[derive(Debug)]
 pub struct SemverError {
     pub input: String,
     pub msg: String,
 }
+
+impl fmt::Display for SemverError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid version/constraint {:?}: {}", self.input, self.msg)
+    }
+}
+
+impl std::error::Error for SemverError {}
 
 /// One comparison term of a constraint.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -46,9 +46,16 @@ pub struct Receiver<T> {
 }
 
 /// Channel closed error.
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
-#[error("channel closed")]
+#[derive(Debug, PartialEq, Eq)]
 pub struct Closed;
+
+impl std::fmt::Display for Closed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("channel closed")
+    }
+}
+
+impl std::error::Error for Closed {}
 
 impl<T> Channel<T> {
     pub fn bounded(capacity: usize) -> (Sender<T>, Receiver<T>) {

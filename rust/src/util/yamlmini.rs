@@ -36,12 +36,19 @@ pub fn parse(input: &str) -> Result<Json, YamlError> {
 }
 
 /// Parse error with 1-based source line for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("yaml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct YamlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for YamlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 #[derive(Debug)]
 struct Line {

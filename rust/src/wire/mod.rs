@@ -24,14 +24,29 @@ use std::sync::Arc;
 /// Max accepted frame: 256 MB (a batch-256 224² f32 tensor is ~154 MB).
 const MAX_FRAME: u32 = 256 << 20;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("protocol: {0}")]
+    Io(std::io::Error),
     Protocol(String),
-    #[error("remote error: {0}")]
     Remote(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::Protocol(m) => write!(f, "protocol: {m}"),
+            WireError::Remote(m) => write!(f, "remote error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
 }
 
 /// Write one frame.

@@ -1,0 +1,216 @@
+//! Integration tests for the cross-request batching + multi-agent dispatch
+//! subsystem: identity preservation through `Envelope.seq`, failure
+//! injection with exactly-once requeue, and the batching metadata's path
+//! into the analysis workflow.
+
+use mlmodelscope::agent::sim_agent;
+use mlmodelscope::batcher::{
+    plan_batches, Batch, BatchExecutor, BatchResult, BatcherConfig, Dispatcher,
+};
+use mlmodelscope::pipeline::{Envelope, Payload};
+use mlmodelscope::scenario::{Scenario, Workload};
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn platform(systems: &[&str]) -> Arc<Server> {
+    let server = Server::standalone();
+    server.register_zoo();
+    for sys in systems {
+        let (agent, _sim, _tracer) = sim_agent(
+            sys,
+            Device::Gpu,
+            TraceLevel::None,
+            server.evaldb.clone(),
+            server.traces.clone(),
+        );
+        server.attach_local_agent(agent);
+    }
+    server
+}
+
+/// Batched multi-agent results must be element-wise identical to the
+/// per-request single-agent baseline, with identity/order carried by
+/// `Envelope.seq` end to end.
+#[test]
+fn batched_results_identical_to_unbatched() {
+    let run = |systems: &[&str], cfg: &BatcherConfig| {
+        let server = platform(systems);
+        let mut job = EvalJob::new(
+            "ResNet_v1_50",
+            Scenario::Poisson { rate: 3000.0, count: 96 },
+        );
+        job.seed = 2024;
+        server.evaluate_batched(&job, cfg).unwrap()
+    };
+    let batched = run(
+        &["aws_p3", "aws_g3", "ibm_p8"],
+        &BatcherConfig { max_batch_size: 12, max_wait_ms: 15.0 },
+    );
+    let baseline = run(&["aws_p3"], &BatcherConfig::per_request());
+
+    assert_eq!(batched.outcome.outputs.len(), 96);
+    assert_eq!(baseline.outcome.outputs.len(), 96);
+    for (i, (a, b)) in batched
+        .outcome
+        .outputs
+        .iter()
+        .zip(&baseline.outcome.outputs)
+        .enumerate()
+    {
+        assert_eq!(a.seq, i as u64, "outputs sorted back to request order");
+        assert_eq!(a.seq, b.seq);
+        match (&a.payload, &b.payload) {
+            (Payload::Tensor(x), Payload::Tensor(y)) => {
+                assert_eq!(x, y, "request {i} diverged under batching")
+            }
+            other => panic!("unexpected payloads {other:?}"),
+        }
+    }
+    // The batched run really coalesced, the baseline really didn't.
+    assert!(batched.series.mean_occupancy() > 2.0);
+    assert_eq!(baseline.series.mean_occupancy(), 1.0);
+}
+
+/// Deterministic per-item transform used by the failure-injection doubles.
+fn transform(e: &Envelope) -> Envelope {
+    Envelope {
+        payload: match &e.payload {
+            Payload::Bytes(b) => Payload::Bytes(vec![b[0].wrapping_mul(3).wrapping_add(1)]),
+            other => other.clone(),
+        },
+        ..e.clone()
+    }
+}
+
+struct HealthyExec {
+    name: String,
+}
+
+impl BatchExecutor for HealthyExec {
+    fn id(&self) -> String {
+        self.name.clone()
+    }
+
+    fn execute(&self, batch: &Batch) -> Result<BatchResult, String> {
+        // Hold the batch briefly so the queue cannot drain before the
+        // flaky agent comes back for (and dies on) its second batch —
+        // keeps the failure-injection timeline deterministic.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        Ok(BatchResult {
+            outputs: batch.envelopes.iter().map(transform).collect(),
+            latency_s: 1e-4 * batch.len() as f64,
+        })
+    }
+}
+
+/// Serves `survive_calls` batches, then dies mid-run — the injected agent
+/// failure.
+struct FlakyExec {
+    calls: AtomicUsize,
+    survive_calls: usize,
+}
+
+impl BatchExecutor for FlakyExec {
+    fn id(&self) -> String {
+        "flaky".into()
+    }
+
+    fn execute(&self, batch: &Batch) -> Result<BatchResult, String> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= self.survive_calls {
+            return Err("agent process died mid-batch (injected)".into());
+        }
+        Ok(BatchResult {
+            outputs: batch.envelopes.iter().map(transform).collect(),
+            latency_s: 1e-4 * batch.len() as f64,
+        })
+    }
+}
+
+/// An agent dying mid-dispatch must get its in-flight batch requeued to the
+/// survivors exactly once — no lost requests, no duplicates.
+#[test]
+fn agent_death_mid_batch_requeues_exactly_once() {
+    let w = Workload::generate(&Scenario::Online { count: 80 }, 5);
+    let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 0.0 };
+    let batches = plan_batches(&w, &cfg, |r| Envelope {
+        seq: r.id,
+        trace_id: 0,
+        parent_span: None,
+        payload: Payload::Bytes(vec![r.id as u8]),
+    });
+    assert_eq!(batches.len(), 10);
+    let pool: Vec<Arc<dyn BatchExecutor>> = vec![
+        Arc::new(FlakyExec { calls: AtomicUsize::new(0), survive_calls: 1 }),
+        Arc::new(HealthyExec { name: "s1".into() }),
+        Arc::new(HealthyExec { name: "s2".into() }),
+    ];
+    let outcome = Dispatcher::new(pool).dispatch(batches).unwrap();
+
+    // Exactly once per request, restored to order, correct values.
+    assert_eq!(outcome.outputs.len(), 80);
+    for (i, env) in outcome.outputs.iter().enumerate() {
+        assert_eq!(env.seq, i as u64);
+        match &env.payload {
+            Payload::Bytes(b) => {
+                assert_eq!(b[0], (i as u8).wrapping_mul(3).wrapping_add(1))
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+    }
+    // The dead agent's in-flight batch was requeued exactly once, and the
+    // survivors absorbed the rest of the queue.
+    assert_eq!(outcome.requeued_batches, 1);
+    let flaky_served = outcome.per_agent_items.get("flaky").copied().unwrap_or(0);
+    assert_eq!(flaky_served, 8, "exactly the one batch it completed before dying");
+    let survivor_served: usize = ["s1", "s2"]
+        .iter()
+        .filter_map(|a| outcome.per_agent_items.get(*a))
+        .sum();
+    assert_eq!(survivor_served, 72);
+    // After death, no batch in the log is attributed to the flaky agent
+    // beyond its single successful call.
+    assert_eq!(outcome.batch_log.iter().filter(|r| r.agent == "flaky").count(), 1);
+}
+
+/// Batching metadata stored by the batched path surfaces in the analysis
+/// report next to the paper's tables.
+#[test]
+fn batching_metadata_reaches_the_report() {
+    let server = platform(&["aws_p3", "ibm_p8"]);
+    let mut job = EvalJob::new(
+        "MobileNet_v1_1.0_224",
+        Scenario::Diurnal { peak_qps: 3000.0, trough_qps: 300.0, period_s: 0.5, count: 120 },
+    );
+    job.seed = 3;
+    let result = server
+        .evaluate_batched(&job, &BatcherConfig { max_batch_size: 8, max_wait_ms: 10.0 })
+        .unwrap();
+    assert_eq!(result.outcome.outputs.len(), 120);
+    assert_eq!(result.record.key.scenario, "diurnal");
+    let report = server.report(&["MobileNet_v1_1.0_224".to_string()]);
+    assert!(report.contains("Batching —"), "report missing batching section:\n{report}");
+    assert!(report.contains("diurnal"), "{report}");
+}
+
+/// TraceReplay feeds the batcher a recorded arrival log end to end.
+#[test]
+fn trace_replay_through_batched_dispatch() {
+    let server = platform(&["aws_p3", "aws_p2"]);
+    // A bursty recorded log: two tight clusters 50ms apart.
+    let mut timestamps: Vec<f64> = (0..24).map(|i| 0.001 * i as f64).collect();
+    timestamps.extend((0..24).map(|i| 0.050 + 0.001 * i as f64));
+    let mut job = EvalJob::new("BVLC_AlexNet", Scenario::TraceReplay { timestamps });
+    job.seed = 9;
+    let cfg = BatcherConfig { max_batch_size: 16, max_wait_ms: 8.0 };
+    let result = server.evaluate_batched(&job, &cfg).unwrap();
+    assert_eq!(result.outcome.outputs.len(), 48);
+    // The clusters coalesce into near-full batches.
+    assert!(result.series.mean_occupancy() > 4.0, "{}", result.series.mean_occupancy());
+    // Queue delays stay within the configured wait window.
+    for d in &result.series.queue_delay_s {
+        assert!(*d <= 0.008 + 1e-9, "delay {d}");
+    }
+}

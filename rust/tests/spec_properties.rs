@@ -9,7 +9,7 @@ use mlmodelscope::util::json::Json;
 use mlmodelscope::util::rng::{forall, Xorshift};
 
 fn rand_scenario(rng: &mut Xorshift) -> Scenario {
-    match rng.below(5) {
+    match rng.below(7) {
         0 => Scenario::Online { count: 1 + rng.below(100) as usize },
         1 => Scenario::Poisson { rate: rng.range_f64(0.5, 500.0), count: 1 + rng.below(100) as usize },
         2 => Scenario::Batched {
@@ -17,10 +17,22 @@ fn rand_scenario(rng: &mut Xorshift) -> Scenario {
             batches: 1 + rng.below(16) as usize,
         },
         3 => Scenario::FixedQps { qps: rng.range_f64(0.5, 200.0), count: 1 + rng.below(100) as usize },
-        _ => Scenario::Burst {
+        4 => Scenario::Burst {
             burst_size: 1 + rng.below(32) as usize,
             period_s: rng.range_f64(0.01, 5.0),
             bursts: 1 + rng.below(8) as usize,
+        },
+        5 => Scenario::TraceReplay {
+            // Deliberately noisy capture: unsorted, may contain negatives.
+            timestamps: (0..1 + rng.below(80))
+                .map(|_| rng.range_f64(-0.05, 3.0))
+                .collect(),
+        },
+        _ => Scenario::Diurnal {
+            peak_qps: rng.range_f64(50.0, 500.0),
+            trough_qps: rng.range_f64(0.5, 50.0),
+            period_s: rng.range_f64(0.1, 10.0),
+            count: 1 + rng.below(100) as usize,
         },
     }
 }
@@ -39,27 +51,57 @@ fn scenario_json_roundtrip_property() {
 
 #[test]
 fn workload_invariants_property() {
-    forall(0xB0B, 120, |rng| {
+    forall(0xB0B, 160, |rng| {
         let s = rand_scenario(rng);
         let w = Workload::generate(&s, rng.next_u64());
         // Request count matches the scenario definition.
         let expect = match &s {
             Scenario::Batched { batches, .. } => *batches,
             Scenario::Burst { burst_size, bursts, .. } => burst_size * bursts,
+            Scenario::TraceReplay { timestamps } => timestamps.len(),
             Scenario::Online { count }
             | Scenario::Poisson { count, .. }
-            | Scenario::FixedQps { count, .. } => *count,
+            | Scenario::FixedQps { count, .. }
+            | Scenario::Diurnal { count, .. } => *count,
         };
         assert_eq!(w.requests.len(), expect);
         // Arrival times are non-decreasing and non-negative; ids unique.
         let mut last = 0.0f64;
         let mut seen = std::collections::HashSet::new();
         for r in &w.requests {
+            assert!(r.at_secs >= 0.0);
             assert!(r.at_secs >= last - 1e-12);
             last = last.max(r.at_secs);
             assert!(seen.insert(r.id));
             assert_eq!(r.batch_size, s.batch_size());
         }
+        // `total_items` is exactly the sum of per-request batch sizes.
+        let items: usize = w.requests.iter().map(|r| r.batch_size).sum();
+        assert_eq!(items, s.total_items());
+    });
+}
+
+/// The server ships `(scenario, seed)`; the agent regenerates the schedule
+/// after a JSON round trip over the wire. Regeneration must be
+/// bit-identical on both sides for every scenario kind — the F1 contract
+/// the batcher's deterministic planning builds on.
+#[test]
+fn server_agent_regeneration_bit_identical_property() {
+    forall(0x5EED, 160, |rng| {
+        let s = rand_scenario(rng);
+        let seed = rng.next_u64();
+        // Server side: generate from the in-memory scenario.
+        let server_side = Workload::generate(&s, seed);
+        // Agent side: the scenario arrives as wire JSON, then regenerates.
+        let shipped = Scenario::from_json(&s.to_json()).expect("wire roundtrip");
+        let agent_side = Workload::generate(&shipped, seed);
+        assert_eq!(
+            server_side.requests, agent_side.requests,
+            "schedule diverged across the wire for {}",
+            s.name()
+        );
+        // And regeneration is stable against repeated generation.
+        assert_eq!(server_side.requests, Workload::generate(&s, seed).requests);
     });
 }
 
