@@ -49,7 +49,7 @@ fn main() {
         "fig_batching",
         "platform ablation — dynamic cross-request batching + load-balanced multi-agent dispatch",
     );
-    let batched_cfg = BatcherConfig { max_batch_size: 16, max_wait_ms: 10.0 };
+    let batched_cfg = BatcherConfig::new(16, 10.0);
     let cases = [
         (1usize, BatcherConfig::per_request(), "per-request"),
         (1, batched_cfg.clone(), "batched"),

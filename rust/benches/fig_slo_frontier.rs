@@ -1,0 +1,207 @@
+//! `fig_slo_frontier` — SLO-driven benchmarking ablation: the latency-
+//! bounded throughput frontier plus multi-tenant fairness.
+//!
+//! Self-asserted acceptance gates:
+//!
+//! 1. **Frontier monotonicity** — tightening the latency bound can never
+//!    raise the maximum sustainable rate: `max_qps@p99≤B'` ≤
+//!    `max_qps@p99≤B` for `B' < B`. All searches probe the same dyadic QPS
+//!    grid, so an inversion would mean the queueing model itself is broken.
+//! 2. **Fairness** — a 2-tenant `Mix` with fairness enabled reports
+//!    per-tenant p99s, and neither tenant's p99 regresses more than 2× vs.
+//!    running alone at the same per-tenant rate.
+//!
+//! The bench self-calibrates: it measures the per-batch service time of the
+//! simulated agents first and derives offered rates / latency bounds from
+//! it, so the assertions do not depend on absolute simulator constants.
+//! Time is simulated (§4.4.4); latencies come from the deterministic
+//! virtual-time queueing replay.
+
+use mlmodelscope::agent::sim_agent;
+use mlmodelscope::batcher::BatcherConfig;
+use mlmodelscope::benchkit::{bench_header, Table};
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::slo::{search_max_qps, store_frontier_point, SloSearchConfig, SloSpec};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+use std::sync::Arc;
+
+const MODEL: &str = "ResNet_v1_50";
+const AGENTS: usize = 2;
+
+fn platform() -> Arc<Server> {
+    let server = Server::standalone();
+    server.register_zoo();
+    for _ in 0..AGENTS {
+        let (agent, _sim, _tracer) = sim_agent(
+            "aws_p3",
+            Device::Gpu,
+            TraceLevel::None,
+            server.evaldb.clone(),
+            server.traces.clone(),
+        );
+        server.attach_local_agent(agent);
+    }
+    server
+}
+
+fn main() {
+    bench_header(
+        "fig_slo_frontier",
+        "SLO-driven benchmarking — latency-bounded throughput search + multi-tenant mixes",
+    );
+    let server = platform();
+    let cfg = BatcherConfig::new(8, 5.0);
+    let mut job = EvalJob::new(MODEL, Scenario::Online { count: 1 });
+    job.seed = 42;
+
+    // ── calibration: per-batch service time at negligible load ──────────
+    let cal_job = {
+        let mut j = job.clone();
+        j.scenario = Scenario::FixedQps { qps: 1.0, count: 8 };
+        j
+    };
+    let cal = server.evaluate_batched(&cal_job, &cfg).expect("calibration run");
+    let s_mean: f64 = cal.outcome.batch_log.iter().map(|r| r.latency_s).sum::<f64>()
+        / cal.outcome.batch_log.len() as f64;
+    assert!(s_mean > 0.0, "simulated service time must advance the clock");
+    // Single-item service rate of the pool → the rough capacity ceiling.
+    let capacity = AGENTS as f64 / s_mean;
+    // Lightly-loaded latency floor: deadline wait + one service.
+    let floor_ms = cfg.max_wait_ms + s_mean * 1e3;
+    println!(
+        "calibration: mean batch service {:.3} ms → ~{capacity:.0} qps ceiling, latency floor {floor_ms:.3} ms\n",
+        s_mean * 1e3
+    );
+
+    // ── part 1: the SLO frontier, loosest bound first ───────────────────
+    let sc = SloSearchConfig {
+        start_qps: (0.05 * capacity).max(0.5),
+        probe_count: 192,
+        steps_per_octave: 8,
+        max_probes: 26,
+    };
+    let mut table = Table::new(
+        &format!("SLO frontier — {MODEL}, batch<=8, wait 5 ms, {AGENTS} agents (simulated time)"),
+        &["SLO bound (ms)", "Max QPS", "Achieved p99 (ms)", "Probes", "Aborted probes"],
+    );
+    let mut prev: Option<(f64, f64)> = None; // (bound, max_qps)
+    for factor in [12.0, 6.0, 3.0, 1.5] {
+        let bound = floor_ms * factor;
+        let spec = SloSpec::p99(bound);
+        let point = search_max_qps(&server, &job, &cfg, spec, &sc).expect("search");
+        let aborted = point.probes.iter().filter(|p| p.aborted).count();
+        table.row(&[
+            format!("{bound:.2}"),
+            format!("{:.1}", point.max_qps),
+            format!("{:.2}", point.achieved_ms),
+            point.probes.len().to_string(),
+            aborted.to_string(),
+        ]);
+        if let Some((prev_bound, prev_qps)) = prev {
+            assert!(
+                point.max_qps <= prev_qps + 1e-9,
+                "acceptance: frontier must be monotone — bound {bound:.2} ms sustained \
+                 {:.1} qps but looser bound {prev_bound:.2} ms sustained {prev_qps:.1} qps",
+                point.max_qps
+            );
+        }
+        prev = Some((bound, point.max_qps));
+        store_frontier_point(&server, &point);
+    }
+    println!("{}", table.render());
+    let _ = table.save_csv("target/bench-results/fig_slo_frontier.csv");
+    // The stored points surface through the analysis workflow too.
+    let report = server.report(&[MODEL.to_string()]);
+    assert!(report.contains("SLO frontier"), "report missing the frontier section");
+    let tightest_qps = prev.unwrap().1;
+    println!(
+        "acceptance: max sustainable QPS is monotone non-increasing as the bound tightens \
+         (tightest bound sustains {tightest_qps:.1} qps)\n"
+    );
+
+    // ── part 2: 2-tenant mix, fairness on ───────────────────────────────
+    // Per-tenant rate at ~25% of pool capacity in total: comfortably
+    // sustainable alone and mixed.
+    let rate = capacity / 8.0;
+    let count = 96usize;
+    let fair_cfg = BatcherConfig::new(8, 5.0).with_fairness();
+    let alone_job = {
+        let mut j = job.clone();
+        j.scenario = Scenario::FixedQps { qps: rate, count };
+        j
+    };
+    let alone = server.evaluate_batched(&alone_job, &fair_cfg).expect("alone run");
+    let alone_p99 = alone.per_tenant.get("all").expect("single tenant").p99();
+    assert!(alone_p99 > 0.0);
+
+    let mix_job = {
+        let mut j = job.clone();
+        j.scenario = Scenario::Mix {
+            tenants: vec![
+                ("tenant_a".into(), Scenario::FixedQps { qps: rate, count }),
+                ("tenant_b".into(), Scenario::FixedQps { qps: rate, count }),
+            ],
+        };
+        j
+    };
+    let mix = server.evaluate_batched(&mix_job, &fair_cfg).expect("mix run");
+    let mut mix_table = Table::new(
+        &format!("2-tenant mix @ {rate:.1} qps/tenant — per-tenant p99 vs alone"),
+        &["Tenant", "Requests", "p99 mixed (ms)", "p99 alone (ms)", "Ratio"],
+    );
+    for tenant in ["tenant_a", "tenant_b"] {
+        let samples = mix.per_tenant.get(tenant).expect("per-tenant latencies reported");
+        assert_eq!(samples.len(), count);
+        let p99 = samples.p99();
+        mix_table.row(&[
+            tenant.to_string(),
+            samples.len().to_string(),
+            format!("{:.3}", p99 * 1e3),
+            format!("{:.3}", alone_p99 * 1e3),
+            format!("{:.2}x", p99 / alone_p99),
+        ]);
+        assert!(
+            p99 <= alone_p99 * 2.0,
+            "acceptance: {tenant} p99 {:.3} ms regressed >2x vs alone {:.3} ms under fairness",
+            p99 * 1e3,
+            alone_p99 * 1e3
+        );
+    }
+    println!("{}", mix_table.render());
+    println!("acceptance: neither tenant's p99 regressed >2x vs running alone (fairness on)\n");
+
+    // ── bonus: what fairness buys when one tenant bursts ────────────────
+    let burst_mix = |fair: bool| {
+        let mut j = job.clone();
+        j.scenario = Scenario::Mix {
+            tenants: vec![
+                ("steady".into(), Scenario::FixedQps { qps: rate, count: 64 }),
+                ("bursty".into(), Scenario::Burst { burst_size: 64, period_s: 1.0, bursts: 1 }),
+            ],
+        };
+        let c = if fair {
+            BatcherConfig::new(8, 5.0).with_fairness()
+        } else {
+            BatcherConfig::new(8, 5.0)
+        };
+        server.evaluate_batched(&j, &c).expect("burst mix")
+    };
+    let fifo = burst_mix(false);
+    let fair = burst_mix(true);
+    let steady_fifo = fifo.per_tenant.get("steady").unwrap().p99();
+    let steady_fair = fair.per_tenant.get("steady").unwrap().p99();
+    println!(
+        "burst isolation: steady-tenant p99 {:.3} ms under FIFO vs {:.3} ms with fairness ({:.2}x)",
+        steady_fifo * 1e3,
+        steady_fair * 1e3,
+        steady_fifo / steady_fair
+    );
+    assert!(
+        steady_fair <= steady_fifo * 1.25 + 1e-9,
+        "fair dispatch must not hurt the steady tenant: {:.3} ms vs {:.3} ms",
+        steady_fair * 1e3,
+        steady_fifo * 1e3
+    );
+}

@@ -295,6 +295,61 @@ pub fn batching_table(models: &[String], db: &EvalDb) -> Table {
     t
 }
 
+/// SLO frontier report: one row per stored frontier point
+/// ([`crate::slo::store_frontier_point`]) — the maximum sustainable rate
+/// each (model, batch config) reached under each latency bound.
+pub fn slo_frontier_table(models: &[String], db: &EvalDb) -> Table {
+    let mut t = Table::new(
+        "SLO frontier — max sustainable QPS under a latency bound",
+        &[
+            "Model",
+            "Batch",
+            "Wait (ms)",
+            "Fair",
+            "SLO",
+            "Max QPS",
+            "Achieved (ms)",
+            "Probes",
+        ],
+    );
+    for m in models {
+        let mut rows: Vec<EvalRecord> = db
+            .latest(&EvalQuery::model(m))
+            .into_iter()
+            .filter(|r| r.meta.get("slo").is_some())
+            .collect();
+        // Loosest bound first, so each column reads as a frontier.
+        rows.sort_by(|a, b| {
+            let bound = |r: &EvalRecord| {
+                r.meta.get("slo").map(|s| s.f64_or("bound_ms", 0.0)).unwrap_or(0.0)
+            };
+            bound(b).partial_cmp(&bound(a)).unwrap()
+        });
+        for r in rows {
+            let s = r.meta.get("slo").unwrap();
+            t.row(&[
+                m.clone(),
+                format!("{}", s.f64_or("batch_size", 1.0) as u64),
+                format!("{:.1}", s.f64_or("max_wait_ms", 0.0)),
+                if s.get("fair").and_then(|v| v.as_bool()).unwrap_or(false) {
+                    "yes".into()
+                } else {
+                    "no".into()
+                },
+                format!(
+                    "p{:.0}<={:.1}ms",
+                    s.f64_or("percentile", 99.0),
+                    s.f64_or("bound_ms", 0.0)
+                ),
+                format!("{:.1}", s.f64_or("max_qps", 0.0)),
+                format!("{:.2}", s.f64_or("achieved_ms", f64::NAN)),
+                format!("{}", s.f64_or("probes", 0.0) as u64),
+            ]);
+        }
+    }
+    t
+}
+
 /// Full analysis report for a set of models — the analysis workflow's
 /// output artifact (step e).
 pub fn full_report(models: &[String], db: &EvalDb) -> String {
@@ -309,6 +364,11 @@ pub fn full_report(models: &[String], db: &EvalDb) -> String {
     let batching = batching_table(models, db);
     if batching.row_count() > 0 {
         out.push_str(&batching.render());
+    }
+    // Likewise the SLO frontier section.
+    let frontier = slo_frontier_table(models, db);
+    if frontier.row_count() > 0 {
+        out.push_str(&frontier.render());
     }
     out
 }
@@ -507,6 +567,52 @@ mod tests {
         assert!(with.contains("Batching —"), "{with}");
         let without = full_report(&["mobilenet".into()], &db);
         assert!(!without.contains("Batching —"));
+    }
+
+    #[test]
+    fn slo_frontier_section_reports_points() {
+        let db = seed_db();
+        for (bound, qps) in [(20.0, 400.0), (5.0, 150.0)] {
+            let key = EvalKey {
+                model: "resnet50".into(),
+                model_version: "1.0.0".into(),
+                framework: "-".into(),
+                framework_version: "0.0.0".into(),
+                system: "multi".into(),
+                device: "-".into(),
+                scenario: format!("slo:p99<={bound:.1}ms"),
+                batch_size: 8,
+            };
+            let mut r = EvalRecord::new(key, vec![], qps);
+            r.meta = Json::obj(vec![(
+                "slo",
+                Json::obj(vec![
+                    ("batch_size", Json::num(8.0)),
+                    ("max_wait_ms", Json::num(5.0)),
+                    ("fair", Json::Bool(false)),
+                    ("percentile", Json::num(99.0)),
+                    ("bound_ms", Json::num(bound)),
+                    ("max_qps", Json::num(qps)),
+                    ("achieved_ms", Json::num(bound * 0.8)),
+                    ("probes", Json::num(9.0)),
+                ]),
+            )]);
+            db.put(r);
+        }
+        let text = slo_frontier_table(&["resnet50".into()], &db).render();
+        assert!(text.contains("p99<=20.0ms"), "{text}");
+        assert!(text.contains("p99<=5.0ms"), "{text}");
+        assert!(text.contains("400.0"), "{text}");
+        // Loosest bound renders first.
+        assert!(
+            text.find("p99<=20.0ms").unwrap() < text.find("p99<=5.0ms").unwrap(),
+            "{text}"
+        );
+        // The full report gains the section only when points exist.
+        let with = full_report(&["resnet50".into()], &db);
+        assert!(with.contains("SLO frontier"), "{with}");
+        let without = full_report(&["mobilenet".into()], &db);
+        assert!(!without.contains("SLO frontier"));
     }
 
     #[test]

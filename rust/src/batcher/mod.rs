@@ -41,19 +41,41 @@ pub struct BatcherConfig {
     pub max_batch_size: usize,
     /// Maximum time a request may wait in an open batch, milliseconds.
     pub max_wait_ms: f64,
+    /// Fairness-aware dispatch: pick the next batch from the tenant with
+    /// the fewest items served so far instead of strict FIFO, so one
+    /// tenant's burst cannot starve another tenant's latency SLO.
+    pub fair: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0 }
+        BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0, fair: false }
     }
 }
 
 impl BatcherConfig {
+    pub fn new(max_batch_size: usize, max_wait_ms: f64) -> Self {
+        BatcherConfig { max_batch_size, max_wait_ms, fair: false }
+    }
+
     /// Degenerate config: every request is its own batch (the per-request
     /// dispatch baseline the `fig_batching` bench compares against).
     pub fn per_request() -> Self {
-        BatcherConfig { max_batch_size: 1, max_wait_ms: 0.0 }
+        BatcherConfig { max_batch_size: 1, max_wait_ms: 0.0, fair: false }
+    }
+
+    pub fn with_fairness(mut self) -> Self {
+        self.fair = true;
+        self
+    }
+
+    /// The dispatch policy this config implies.
+    pub fn policy(&self) -> DispatchPolicy {
+        if self.fair {
+            DispatchPolicy::FairByTenant
+        } else {
+            DispatchPolicy::Fifo
+        }
     }
 }
 
@@ -61,7 +83,7 @@ impl BatcherConfig {
 /// metrics layer needs.
 #[derive(Debug, Clone)]
 pub struct Batch {
-    /// Position in the planned batch stream.
+    /// Position in the planned batch stream (formed-time order).
     pub index: u64,
     /// Arrival of the first request in the batch (seconds from t0).
     pub opened_at_secs: f64,
@@ -72,6 +94,9 @@ pub struct Batch {
     pub envelopes: Vec<Envelope>,
     /// Arrival offset of each envelope, parallel to `envelopes`.
     pub arrivals: Vec<f64>,
+    /// Tenant the batch belongs to. Planning never coalesces across
+    /// tenants, so a batch is single-tenant by construction.
+    pub tenant: u32,
 }
 
 impl Batch {
@@ -95,7 +120,11 @@ impl Batch {
 
 /// Coalesce a workload's request schedule into batches. `make` builds the
 /// envelope for each request (payload + `seq = request.id`); planning never
-/// reorders requests, so arrivals within a batch stay non-decreasing.
+/// reorders requests within a tenant, so arrivals within a batch stay
+/// non-decreasing. Multi-tenant workloads ([`crate::scenario::Scenario::Mix`])
+/// are planned per tenant — batches never mix tenants, which is what lets
+/// the dispatcher schedule fairly between them — then merged in formed-time
+/// order and reindexed. Single-tenant workloads plan exactly as before.
 pub fn plan_batches(
     workload: &Workload,
     cfg: &BatcherConfig,
@@ -107,6 +136,7 @@ pub fn plan_batches(
         arrivals: &mut Vec<f64>,
         opened_at: f64,
         formed_at: f64,
+        tenant: u32,
     ) {
         if cur.is_empty() {
             return;
@@ -117,35 +147,51 @@ pub fn plan_batches(
             formed_at_secs: formed_at,
             envelopes: std::mem::take(cur),
             arrivals: std::mem::take(arrivals),
+            tenant,
         });
     }
 
     let max_batch = cfg.max_batch_size.max(1);
     let max_wait = (cfg.max_wait_ms / 1e3).max(0.0);
+    let mut tenant_ids: Vec<u32> = workload.requests.iter().map(|r| r.tenant).collect();
+    tenant_ids.sort_unstable();
+    tenant_ids.dedup();
     let mut batches = Vec::new();
-    let mut cur: Vec<Envelope> = Vec::new();
-    let mut arrivals: Vec<f64> = Vec::new();
-    let mut opened_at = 0.0;
-    for r in &workload.requests {
-        // Deadline flush: this request arrived after the open batch's wait
-        // window expired, so that batch left at `opened_at + max_wait`.
-        if !cur.is_empty() && r.at_secs > opened_at + max_wait {
-            close(&mut batches, &mut cur, &mut arrivals, opened_at, opened_at + max_wait);
+    for tenant in tenant_ids {
+        let mut cur: Vec<Envelope> = Vec::new();
+        let mut arrivals: Vec<f64> = Vec::new();
+        let mut opened_at = 0.0;
+        for r in workload.requests.iter().filter(|r| r.tenant == tenant) {
+            // Deadline flush: this request arrived after the open batch's
+            // wait window expired, so that batch left at `opened_at +
+            // max_wait`.
+            if !cur.is_empty() && r.at_secs > opened_at + max_wait {
+                close(&mut batches, &mut cur, &mut arrivals, opened_at, opened_at + max_wait, tenant);
+            }
+            if cur.is_empty() {
+                opened_at = r.at_secs;
+            }
+            cur.push(make(r));
+            arrivals.push(r.at_secs);
+            // Size flush: the batch is full the moment the last slot fills.
+            if cur.len() >= max_batch {
+                let formed = *arrivals.last().unwrap();
+                close(&mut batches, &mut cur, &mut arrivals, opened_at, formed, tenant);
+            }
         }
-        if cur.is_empty() {
-            opened_at = r.at_secs;
-        }
-        cur.push(make(r));
-        arrivals.push(r.at_secs);
-        // Size flush: the batch is full the moment the last slot fills.
-        if cur.len() >= max_batch {
-            let formed = *arrivals.last().unwrap();
-            close(&mut batches, &mut cur, &mut arrivals, opened_at, formed);
-        }
+        // Stream end: the workload is complete, so the trailing partial
+        // batch flushes immediately at its last arrival — waiting out the
+        // deadline would add delay no further request can fill.
+        let formed = arrivals.last().copied().unwrap_or(opened_at);
+        close(&mut batches, &mut cur, &mut arrivals, opened_at, formed, tenant);
     }
-    // Stream end: the trailing partial batch leaves at its deadline.
-    let formed = opened_at + max_wait;
-    close(&mut batches, &mut cur, &mut arrivals, opened_at, formed);
+    // Merge tenant streams into one formed-time-ordered plan. The sort is
+    // stable, so equal formed times keep tenant order and within-tenant
+    // order — the plan stays a pure deterministic function of its inputs.
+    batches.sort_by(|a, b| a.formed_at_secs.partial_cmp(&b.formed_at_secs).unwrap());
+    for (i, b) in batches.iter_mut().enumerate() {
+        b.index = i as u64;
+    }
     batches
 }
 
@@ -177,6 +223,29 @@ pub trait BatchExecutor: Send + Sync {
     /// Execute one batch. `Err` marks this executor dead for the rest of
     /// the dispatch; its in-flight batch is requeued to survivors.
     fn execute(&self, batch: &Batch) -> Result<BatchResult, String>;
+}
+
+/// How the dispatcher (and the virtual-time queueing replay) picks the next
+/// queued batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    /// Strict formed-time order.
+    #[default]
+    Fifo,
+    /// Deficit fairness: among formed batches, serve the tenant with the
+    /// fewest items dispatched so far (ties go to formed-time order). One
+    /// tenant's burst then interleaves with — instead of blocking — the
+    /// other tenants' traffic.
+    FairByTenant,
+}
+
+/// Observer hooked into a running dispatch: called after every successfully
+/// executed batch. Returning `false` aborts the dispatch — remaining queued
+/// batches are dropped and the outcome comes back with `aborted = true`.
+/// The SLO probe runner uses this to cut a hopeless probe short instead of
+/// running it to completion.
+pub trait DispatchWatch: Send + Sync {
+    fn on_batch(&self, row: &BatchLogRow) -> bool;
 }
 
 /// Least-outstanding-requests pick: among alive executors with spare
@@ -233,6 +302,9 @@ pub struct DispatchOutcome {
     pub per_agent_busy_s: BTreeMap<String, f64>,
     /// Batches requeued after an executor death (each at most once).
     pub requeued_batches: usize,
+    /// True when a [`DispatchWatch`] aborted the run early; `outputs` then
+    /// covers only the batches that completed before the abort.
+    pub aborted: bool,
 }
 
 impl DispatchOutcome {
@@ -268,8 +340,33 @@ struct DispatchState {
     log: Vec<BatchLogRow>,
     per_agent_items: BTreeMap<String, usize>,
     per_agent_busy_s: BTreeMap<String, f64>,
+    /// Items handed out per tenant — the deficit counter behind
+    /// [`DispatchPolicy::FairByTenant`].
+    tenant_started: BTreeMap<u32, usize>,
     requeued: usize,
     fatal: Option<DispatchError>,
+    aborted: bool,
+}
+
+/// Queue position the policy would serve next (`None` on an empty queue).
+fn pick_queued(
+    queue: &VecDeque<QueuedBatch>,
+    tenant_started: &BTreeMap<u32, usize>,
+    policy: DispatchPolicy,
+) -> Option<usize> {
+    match policy {
+        DispatchPolicy::Fifo => {
+            if queue.is_empty() {
+                None
+            } else {
+                Some(0)
+            }
+        }
+        DispatchPolicy::FairByTenant => (0..queue.len()).min_by_key(|&i| {
+            let tenant = queue[i].batch.tenant;
+            (tenant_started.get(&tenant).copied().unwrap_or(0), i)
+        }),
+    }
 }
 
 struct SharedDispatch {
@@ -278,15 +375,17 @@ struct SharedDispatch {
 }
 
 /// The load-balancing dispatcher: one worker per executor pulls batches off
-/// a shared queue under the [`least_outstanding`] policy.
+/// a shared queue under the [`least_outstanding`] policy, choosing which
+/// queued batch to serve with a [`DispatchPolicy`].
 pub struct Dispatcher {
     executors: Vec<Arc<dyn BatchExecutor>>,
     max_in_flight: usize,
+    policy: DispatchPolicy,
 }
 
 impl Dispatcher {
     pub fn new(executors: Vec<Arc<dyn BatchExecutor>>) -> Dispatcher {
-        Dispatcher { executors, max_in_flight: 1 }
+        Dispatcher { executors, max_in_flight: 1, policy: DispatchPolicy::Fifo }
     }
 
     /// Allow up to `n` concurrent batches per executor (default 1, which
@@ -297,12 +396,28 @@ impl Dispatcher {
         self
     }
 
+    /// Choose the queue-service policy (default FIFO).
+    pub fn with_policy(mut self, policy: DispatchPolicy) -> Dispatcher {
+        self.policy = policy;
+        self
+    }
+
     pub fn agent_ids(&self) -> Vec<String> {
         self.executors.iter().map(|e| e.id()).collect()
     }
 
     /// Run every batch to completion across the pool.
     pub fn dispatch(&self, batches: Vec<Batch>) -> Result<DispatchOutcome, DispatchError> {
+        self.dispatch_watched(batches, None)
+    }
+
+    /// As [`Dispatcher::dispatch`], with an optional [`DispatchWatch`] that
+    /// can abort the run after any completed batch.
+    pub fn dispatch_watched(
+        &self,
+        batches: Vec<Batch>,
+        watch: Option<Arc<dyn DispatchWatch>>,
+    ) -> Result<DispatchOutcome, DispatchError> {
         if self.executors.is_empty() {
             return Err(DispatchError {
                 agent: "-".into(),
@@ -325,8 +440,10 @@ impl Dispatcher {
                 log: Vec::new(),
                 per_agent_items: BTreeMap::new(),
                 per_agent_busy_s: BTreeMap::new(),
+                tenant_started: BTreeMap::new(),
                 requeued: 0,
                 fatal: None,
+                aborted: false,
             }),
             cv: Condvar::new(),
         });
@@ -336,11 +453,13 @@ impl Dispatcher {
                 let shared = shared.clone();
                 let executors = self.executors.clone();
                 let max_in_flight = self.max_in_flight;
+                let policy = self.policy;
+                let watch = watch.clone();
                 std::thread::spawn(move || loop {
                     let (qb, idx) = {
                         let mut st = shared.state.lock().unwrap();
                         loop {
-                            if st.fatal.is_some() {
+                            if st.fatal.is_some() || st.aborted {
                                 shared.cv.notify_all();
                                 return;
                             }
@@ -366,10 +485,20 @@ impl Dispatcher {
                                 &st.in_flight_batches,
                                 max_in_flight,
                             ) {
-                                let qb = st.queue.pop_front().unwrap();
+                                let pos = pick_queued(&st.queue, &st.tenant_started, policy)
+                                    .expect("non-empty queue");
+                                let qb = st.queue.remove(pos).unwrap();
                                 st.outstanding_items[i] += qb.batch.len();
                                 st.in_flight_batches[i] += 1;
                                 st.busy += 1;
+                                // Deficit charge exactly once per batch: a
+                                // requeued batch was already charged on its
+                                // first dequeue — recharging would penalize
+                                // the tenant that suffered the agent death.
+                                if !qb.retried {
+                                    *st.tenant_started.entry(qb.batch.tenant).or_insert(0) +=
+                                        qb.batch.len();
+                                }
                                 break (qb, i);
                             }
                             // Every live executor is at capacity.
@@ -394,12 +523,18 @@ impl Dispatcher {
                                 r.outputs.len();
                             *st.per_agent_busy_s.entry(agent.clone()).or_insert(0.0) +=
                                 r.latency_s;
-                            st.log.push(BatchLogRow {
+                            let row = BatchLogRow {
                                 index: qb.batch.index,
                                 occupancy: r.outputs.len(),
                                 latency_s: r.latency_s,
                                 agent,
-                            });
+                            };
+                            if let Some(w) = &watch {
+                                if !w.on_batch(&row) {
+                                    st.aborted = true;
+                                }
+                            }
+                            st.log.push(row);
                             st.outputs.extend(r.outputs);
                         }
                         Ok(r) => {
@@ -444,7 +579,7 @@ impl Dispatcher {
         }
         let mut outputs = std::mem::take(&mut st.outputs);
         outputs.sort_by_key(|e| e.seq);
-        if outputs.len() != expected {
+        if !st.aborted && outputs.len() != expected {
             return Err(DispatchError {
                 agent: "-".into(),
                 msg: format!("lost requests: {} of {expected} completed", outputs.len()),
@@ -456,7 +591,174 @@ impl Dispatcher {
             per_agent_items: std::mem::take(&mut st.per_agent_items),
             per_agent_busy_s: std::mem::take(&mut st.per_agent_busy_s),
             requeued_batches: st.requeued,
+            aborted: st.aborted,
         })
+    }
+}
+
+/// One request completed by the [`QueueSim`] replay.
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    pub seq: u64,
+    pub tenant: u32,
+    /// Queueing-aware end-to-end latency: batching delay + wait for a free
+    /// agent + the batch's own service time.
+    pub latency_s: f64,
+}
+
+struct SimBatch {
+    formed_at: f64,
+    tenant: u32,
+    /// `(seq, arrival)` per coalesced request.
+    items: Vec<(u64, f64)>,
+}
+
+/// Deterministic virtual-time queueing replay of a batch plan over `n`
+/// servers.
+///
+/// The real [`Dispatcher`] runs on OS threads, so *when* a batch actually
+/// executed depends on thread scheduling — fine for outputs, useless for
+/// latency accounting. `QueueSim` recomputes the schedule analytically:
+/// batches become available at their formed time, each starts on the
+/// earliest-free server (never before it formed), and completes after its
+/// observed service time. Per-request latency is `completion - arrival`,
+/// which — unlike the naive `queue delay + service` sum — includes the time
+/// spent waiting for a free agent. That makes latency grow with offered
+/// load, which is exactly what the SLO search ([`crate::slo`]) probes for.
+///
+/// Service times are fed in as the real dispatch observes them
+/// ([`QueueSim::offer`]); the replay advances as far as its
+/// [`DispatchPolicy`] order allows and returns newly completed requests.
+/// The resulting schedule is a pure function of `(plan, services, servers,
+/// policy)` — independent of the order services are offered in.
+pub struct QueueSim {
+    meta: Vec<SimBatch>,
+    service: Vec<Option<f64>>,
+    started: Vec<bool>,
+    n_started: usize,
+    /// Free-at virtual times, one per server.
+    servers: Vec<f64>,
+    policy: DispatchPolicy,
+    tenant_started: BTreeMap<u32, usize>,
+}
+
+impl QueueSim {
+    /// Build a replay for a batch plan (`plan_batches` output: indices are
+    /// positions, formed times non-decreasing) on `servers` agents.
+    pub fn new(batches: &[Batch], servers: usize, policy: DispatchPolicy) -> QueueSim {
+        let meta: Vec<SimBatch> = batches
+            .iter()
+            .map(|b| SimBatch {
+                formed_at: b.formed_at_secs,
+                tenant: b.tenant,
+                items: b
+                    .envelopes
+                    .iter()
+                    .zip(&b.arrivals)
+                    .map(|(e, a)| (e.seq, *a))
+                    .collect(),
+            })
+            .collect();
+        QueueSim {
+            service: vec![None; meta.len()],
+            started: vec![false; meta.len()],
+            n_started: 0,
+            servers: vec![0.0; servers.max(1)],
+            policy,
+            tenant_started: BTreeMap::new(),
+            meta,
+        }
+    }
+
+    /// All planned batches have been scheduled.
+    pub fn is_complete(&self) -> bool {
+        self.n_started == self.meta.len()
+    }
+
+    /// Feed the observed service time for batch `index` and advance the
+    /// replay as far as possible, returning requests that just completed.
+    pub fn offer(&mut self, index: u64, service_s: f64) -> Vec<CompletedRequest> {
+        if let Some(slot) = self.service.get_mut(index as usize) {
+            *slot = Some(service_s.max(0.0));
+        }
+        self.drain()
+    }
+
+    fn drain(&mut self) -> Vec<CompletedRequest> {
+        let mut done = Vec::new();
+        loop {
+            let Some(next) = self.pick_next() else { break };
+            // The policy's next batch hasn't reported its service time yet:
+            // stall (later `offer`s resume from here). Scheduling order
+            // never depends on which services are known, so stalling keeps
+            // the replay deterministic.
+            let Some(service) = self.service[next] else { break };
+            let (si, free_at) = self
+                .servers
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+                .map(|(i, t)| (i, *t))
+                .unwrap();
+            let start = free_at.max(self.meta[next].formed_at);
+            let completion = start + service;
+            self.servers[si] = completion;
+            self.started[next] = true;
+            self.n_started += 1;
+            *self.tenant_started.entry(self.meta[next].tenant).or_insert(0) +=
+                self.meta[next].items.len();
+            for (seq, arrival) in &self.meta[next].items {
+                done.push(CompletedRequest {
+                    seq: *seq,
+                    tenant: self.meta[next].tenant,
+                    latency_s: (completion - arrival).max(0.0),
+                });
+            }
+        }
+        done
+    }
+
+    /// The batch the policy would start next. Candidates are unstarted
+    /// batches already formed by the earliest server-free time; if none has
+    /// formed yet the server idles until the earliest-formed one.
+    fn pick_next(&self) -> Option<usize> {
+        let free_at = self.servers.iter().copied().fold(f64::INFINITY, f64::min);
+        let mut first_unstarted = None;
+        let mut best: Option<usize> = None;
+        for i in 0..self.meta.len() {
+            if self.started[i] {
+                continue;
+            }
+            if first_unstarted.is_none() {
+                first_unstarted = Some(i);
+            }
+            if self.meta[i].formed_at <= free_at {
+                match self.policy {
+                    // Plan indices are formed-time-ordered, so the first
+                    // arrived unstarted batch is the FIFO pick.
+                    DispatchPolicy::Fifo => {
+                        best = Some(i);
+                        break;
+                    }
+                    DispatchPolicy::FairByTenant => {
+                        let credit = |j: usize| {
+                            self.tenant_started
+                                .get(&self.meta[j].tenant)
+                                .copied()
+                                .unwrap_or(0)
+                        };
+                        best = match best {
+                            Some(b) if credit(b) <= credit(i) => Some(b),
+                            _ => Some(i),
+                        };
+                    }
+                }
+            } else if self.policy == DispatchPolicy::Fifo {
+                // Formed-time-ordered: nothing later has arrived either.
+                break;
+            }
+        }
+        best.or(first_unstarted)
     }
 }
 
@@ -526,7 +828,7 @@ mod tests {
     #[test]
     fn size_triggered_batches_fill_to_capacity() {
         let w = Workload::generate(&Scenario::Online { count: 20 }, 1);
-        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0 };
+        let cfg = BatcherConfig::new(8, 5.0);
         let batches = plan_batches(&w, &cfg, byte_envelope);
         let occ: Vec<usize> = batches.iter().map(Batch::len).collect();
         assert_eq!(occ, vec![8, 8, 4]);
@@ -539,7 +841,7 @@ mod tests {
     #[test]
     fn deadline_bounds_queue_delay() {
         let w = Workload::generate(&Scenario::Poisson { rate: 400.0, count: 300 }, 7);
-        let cfg = BatcherConfig { max_batch_size: 16, max_wait_ms: 10.0 };
+        let cfg = BatcherConfig::new(16, 10.0);
         let batches = plan_batches(&w, &cfg, byte_envelope);
         let total: usize = batches.iter().map(Batch::len).sum();
         assert_eq!(total, 300, "no request lost or duplicated in planning");
@@ -591,7 +893,7 @@ mod tests {
     #[test]
     fn dispatch_preserves_identity_and_order() {
         let w = Workload::generate(&Scenario::Poisson { rate: 500.0, count: 120 }, 9);
-        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 8.0 };
+        let cfg = BatcherConfig::new(8, 8.0);
         let batches = plan_batches(&w, &cfg, byte_envelope);
         let pool: Vec<Arc<dyn BatchExecutor>> =
             vec![EchoExec::new("a"), EchoExec::new("b"), EchoExec::new("c")];
@@ -613,7 +915,7 @@ mod tests {
     #[test]
     fn dead_executor_requeues_exactly_once() {
         let w = Workload::generate(&Scenario::Online { count: 48 }, 1);
-        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 0.0 };
+        let cfg = BatcherConfig::new(8, 0.0);
         let batches = plan_batches(&w, &cfg, byte_envelope);
         assert_eq!(batches.len(), 6);
         let pool: Vec<Arc<dyn BatchExecutor>> =
@@ -647,7 +949,7 @@ mod tests {
     #[test]
     fn panicking_executor_is_treated_as_dead_not_a_hang() {
         let w = Workload::generate(&Scenario::Online { count: 32 }, 1);
-        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 0.0 };
+        let cfg = BatcherConfig::new(8, 0.0);
         let batches = plan_batches(&w, &cfg, byte_envelope);
         let pool: Vec<Arc<dyn BatchExecutor>> =
             vec![Arc::new(PanicExec), EchoExec::new("survivor")];
@@ -675,9 +977,141 @@ mod tests {
     }
 
     #[test]
+    fn plan_never_mixes_tenants() {
+        let s = Scenario::Mix {
+            tenants: vec![
+                ("a".into(), Scenario::FixedQps { qps: 1000.0, count: 20 }),
+                ("b".into(), Scenario::FixedQps { qps: 1000.0, count: 20 }),
+            ],
+        };
+        let w = Workload::generate(&s, 3);
+        let cfg = BatcherConfig::new(8, 5.0);
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        let total: usize = batches.iter().map(Batch::len).sum();
+        assert_eq!(total, 40);
+        // Indices are sequential and formed times non-decreasing.
+        for (i, b) in batches.iter().enumerate() {
+            assert_eq!(b.index, i as u64);
+        }
+        for pair in batches.windows(2) {
+            assert!(pair[1].formed_at_secs >= pair[0].formed_at_secs);
+        }
+        // Every batch is single-tenant: its envelopes' seqs map back to
+        // requests of exactly one tenant.
+        let tenant_of: std::collections::HashMap<u64, u32> =
+            w.requests.iter().map(|r| (r.id, r.tenant)).collect();
+        for b in &batches {
+            let tenants: std::collections::HashSet<u32> =
+                b.envelopes.iter().map(|e| tenant_of[&e.seq]).collect();
+            assert_eq!(tenants.len(), 1);
+            assert!(tenants.contains(&b.tenant));
+        }
+        assert!(batches.iter().any(|b| b.tenant == 0));
+        assert!(batches.iter().any(|b| b.tenant == 1));
+    }
+
+    fn mk_batch(index: u64, formed_at: f64, tenant: u32, seqs: &[u64]) -> Batch {
+        Batch {
+            index,
+            opened_at_secs: formed_at,
+            formed_at_secs: formed_at,
+            envelopes: seqs
+                .iter()
+                .map(|s| Envelope {
+                    seq: *s,
+                    trace_id: 0,
+                    parent_span: None,
+                    payload: Payload::Bytes(vec![*s as u8]),
+                })
+                .collect(),
+            arrivals: vec![formed_at; seqs.len()],
+            tenant,
+        }
+    }
+
+    #[test]
+    fn queue_sim_models_server_contention() {
+        // 3 single-request batches formed at t=0, one server, 1s service
+        // each: completions at 1, 2, 3 → latencies 1, 2, 3.
+        let batches =
+            vec![mk_batch(0, 0.0, 0, &[0]), mk_batch(1, 0.0, 0, &[1]), mk_batch(2, 0.0, 0, &[2])];
+        let mut sim = QueueSim::new(&batches, 1, DispatchPolicy::Fifo);
+        // Offer out of order: the replay stalls until batch 0 reports.
+        assert!(sim.offer(2, 1.0).is_empty());
+        assert!(sim.offer(1, 1.0).is_empty());
+        let done = sim.offer(0, 1.0);
+        assert!(sim.is_complete());
+        let mut lat: Vec<(u64, f64)> = done.iter().map(|c| (c.seq, c.latency_s)).collect();
+        lat.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(lat.len(), 3);
+        assert!((lat[0].1 - 1.0).abs() < 1e-9);
+        assert!((lat[1].1 - 2.0).abs() < 1e-9);
+        assert!((lat[2].1 - 3.0).abs() < 1e-9);
+        // Two servers halve the backlog: latencies 1, 1, 2.
+        let mut sim2 = QueueSim::new(&batches, 2, DispatchPolicy::Fifo);
+        let mut done2 = Vec::new();
+        for i in 0..3 {
+            done2.extend(sim2.offer(i, 1.0));
+        }
+        let mut lat2: Vec<f64> = done2.iter().map(|c| c.latency_s).collect();
+        lat2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(lat2, vec![1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn fair_policy_interleaves_a_burst() {
+        // Tenant 1 bursts 4 batches at t=0; tenant 0 has one batch formed
+        // at t=0 too (last in plan order). One server, 1s service.
+        let batches = vec![
+            mk_batch(0, 0.0, 1, &[0]),
+            mk_batch(1, 0.0, 1, &[1]),
+            mk_batch(2, 0.0, 1, &[2]),
+            mk_batch(3, 0.0, 1, &[3]),
+            mk_batch(4, 0.0, 0, &[4]),
+        ];
+        let run = |policy: DispatchPolicy| {
+            let mut sim = QueueSim::new(&batches, 1, policy);
+            let mut done = Vec::new();
+            for i in 0..5 {
+                done.extend(sim.offer(i, 1.0));
+            }
+            done.iter().find(|c| c.seq == 4).unwrap().latency_s
+        };
+        // FIFO: the steady tenant waits behind the whole burst.
+        assert!((run(DispatchPolicy::Fifo) - 5.0).abs() < 1e-9);
+        // Fair: after one burst batch, tenant 0 (credit 0) goes next.
+        assert!((run(DispatchPolicy::FairByTenant) - 2.0).abs() < 1e-9);
+    }
+
+    /// Aborts the dispatch on the first completed batch.
+    struct AbortImmediately;
+
+    impl DispatchWatch for AbortImmediately {
+        fn on_batch(&self, _row: &BatchLogRow) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn watch_abort_stops_dispatch_early() {
+        let w = Workload::generate(&Scenario::Online { count: 64 }, 1);
+        let cfg = BatcherConfig::new(8, 0.0);
+        let batches = plan_batches(&w, &cfg, byte_envelope);
+        assert_eq!(batches.len(), 8);
+        let pool: Vec<Arc<dyn BatchExecutor>> = vec![EchoExec::new("only")];
+        let watch: Arc<dyn DispatchWatch> = Arc::new(AbortImmediately);
+        let outcome =
+            Dispatcher::new(pool).dispatch_watched(batches, Some(watch)).unwrap();
+        assert!(outcome.aborted);
+        // The aborting batch's outputs are kept; queued ones never ran.
+        assert!(outcome.outputs.len() < 64, "{} outputs", outcome.outputs.len());
+        assert!(!outcome.outputs.is_empty());
+    }
+
+    #[test]
     fn series_summarizes_occupancy_and_delay() {
         let w = Workload::generate(&Scenario::Online { count: 20 }, 1);
-        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0 };
+        let cfg = BatcherConfig::new(8, 5.0);
         let batches = plan_batches(&w, &cfg, byte_envelope);
         let series = batching_series(&batches, &cfg);
         assert_eq!(series.batches(), 3);

@@ -72,3 +72,5 @@ pub mod agent;
 
 pub mod httpd;
 pub mod server;
+
+pub mod slo;

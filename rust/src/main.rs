@@ -8,6 +8,7 @@
 //! - `analyze` — run the analysis workflow over a stored evaluation DB
 //! - `zoo`     — list built-in models / systems
 //! - `trace`   — render a trace timeline
+//! - `slo-search` — latency-bounded throughput search (the SLO frontier)
 //!
 //! `eval` is the "push-button" path: it assembles server + agents in one
 //! process, evaluates, and prints the analysis — the CLI equivalent of the
@@ -30,6 +31,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "analyze", about: "analysis workflow over a stored eval DB" },
     Command { name: "zoo", about: "list built-in models / systems" },
     Command { name: "trace", about: "evaluate with tracing and render the timeline" },
+    Command { name: "slo-search", about: "max sustainable QPS under a latency SLO" },
     Command { name: "client", about: "talk to a running mlms server over REST" },
 ];
 
@@ -50,6 +52,7 @@ fn main() {
         "analyze" => cmd_analyze(&args),
         "zoo" => cmd_zoo(&args),
         "trace" => cmd_trace(&args),
+        "slo-search" => cmd_slo_search(&args),
         "client" => cmd_client(&args),
         _ => {
             eprint!("{}", usage("mlms", "a scalable DL benchmarking platform", COMMANDS));
@@ -59,12 +62,20 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Parse `--trace-level`, reporting invalid values as a usage error.
+fn parse_trace_level(args: &Args) -> Result<TraceLevel, i32> {
+    let raw = args.opt_or("trace-level", "model");
+    TraceLevel::parse(raw).ok_or_else(|| {
+        eprintln!("invalid --trace-level {raw:?} (none|model|framework|system|full)");
+        2
+    })
+}
+
 /// Build a standalone in-process platform: server + the four Table-1
 /// simulated GPU agents (+ CPU agents) + optionally a real XLA agent.
-fn build_platform(args: &Args) -> Arc<Server> {
+fn build_platform(args: &Args, level: TraceLevel) -> Arc<Server> {
     let server = Server::standalone();
     server.register_zoo();
-    let level = TraceLevel::parse(args.opt_or("trace-level", "model"));
     for sys in ["aws_p3", "aws_g3", "aws_p2", "ibm_p8"] {
         for dev in [Device::Gpu, Device::Cpu] {
             let (agent, _sim, _t) =
@@ -123,7 +134,11 @@ fn parse_scenario(args: &Args) -> Scenario {
 }
 
 fn cmd_server(args: &Args) -> i32 {
-    let server = build_platform(args);
+    let level = match parse_trace_level(args) {
+        Ok(l) => l,
+        Err(code) => return code,
+    };
+    let server = build_platform(args, level);
     let addr = args.opt_or("listen", "127.0.0.1:8080");
     match mlmodelscope::httpd::HttpServer::serve(addr, server.router()) {
         Ok(http) => {
@@ -157,7 +172,10 @@ fn cmd_agent(args: &Args) -> i32 {
         }
     });
     let sink = mlmodelscope::traceserver::TraceServer::new();
-    let level = TraceLevel::parse(args.opt_or("trace-level", "model"));
+    let level = match parse_trace_level(args) {
+        Ok(l) => l,
+        Err(code) => return code,
+    };
     let agent = if system == "local" {
         match mlmodelscope::runtime::Runtime::cpu() {
             Ok(rt) => xla_agent(rt, level, evaldb, sink).0,
@@ -196,9 +214,13 @@ fn cmd_eval(args: &Args) -> i32 {
             return 2;
         }
     };
-    let server = build_platform(args);
+    let level = match parse_trace_level(args) {
+        Ok(l) => l,
+        Err(code) => return code,
+    };
+    let server = build_platform(args, level);
     let mut job = EvalJob::new(&model, parse_scenario(args));
-    job.trace_level = TraceLevel::parse(args.opt_or("trace-level", "model"));
+    job.trace_level = level;
     job.input_mode = InputMode::parse(args.opt_or("input-mode", "c"));
     job.seed = args.u64_or("seed", 42);
     job.all_agents = args.flag("all-agents");
@@ -304,8 +326,7 @@ fn cmd_zoo(args: &Args) -> i32 {
 
 fn cmd_trace(args: &Args) -> i32 {
     let model = args.opt_or("model", "BVLC_AlexNet").to_string();
-    let full: Vec<String> = vec!["--trace-level".into(), "full".into()];
-    let server = build_platform(&Args::parse(&full));
+    let server = build_platform(args, TraceLevel::Full);
     let mut job = EvalJob::new(&model, Scenario::Online { count: 1 });
     job.trace_level = TraceLevel::Full;
     if let Some(sys) = args.opt("system") {
@@ -332,6 +353,87 @@ fn cmd_trace(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// SLO-driven benchmarking: find the maximum sustainable QPS for a model
+/// under one or more latency bounds and print the frontier table.
+///
+/// ```sh
+/// mlms slo-search --model ResNet_v1_50 --bounds-ms 50,20,10,5 \
+///     --percentile 99 --batch 8 --wait-ms 5 --count 256 --start-qps 50
+/// ```
+fn cmd_slo_search(args: &Args) -> i32 {
+    use mlmodelscope::batcher::BatcherConfig;
+    use mlmodelscope::slo::{search_max_qps, store_frontier_point, SloSearchConfig, SloSpec};
+    let model = match args.require("model") {
+        Ok(m) => m.to_string(),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let server = build_platform(args, TraceLevel::None);
+    let mut job = EvalJob::new(&model, Scenario::Online { count: 1 });
+    job.seed = args.u64_or("seed", 42);
+    if let Some(sys) = args.opt("system") {
+        job.requirements = SystemRequirements::on_system(sys);
+    }
+    if let Some(acc) = args.opt("accelerator") {
+        job.requirements.accelerator = mlmodelscope::manifest::Accelerator::parse(acc);
+    }
+    let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
+    cfg.fair = args.flag("fair");
+    let sc = SloSearchConfig {
+        start_qps: args.f64_or("start-qps", 50.0),
+        probe_count: args.usize_or("count", 256),
+        max_probes: args.usize_or("max-probes", 24),
+        ..SloSearchConfig::default()
+    };
+    let percentile = args.f64_or("percentile", 99.0);
+    let bounds: Vec<f64> = if args.opt("bounds-ms").is_some() {
+        let mut parsed = Vec::new();
+        for raw in args.list("bounds-ms") {
+            match raw.parse::<f64>() {
+                Ok(b) if b > 0.0 => parsed.push(b),
+                _ => {
+                    eprintln!("invalid --bounds-ms entry {raw:?} (positive ms expected)");
+                    return 2;
+                }
+            }
+        }
+        parsed
+    } else {
+        vec![50.0, 20.0, 10.0, 5.0]
+    };
+    if bounds.is_empty() {
+        eprintln!("--bounds-ms must list at least one latency bound");
+        return 2;
+    }
+    for bound in bounds {
+        let spec = SloSpec::new(percentile, bound);
+        match search_max_qps(&server, &job, &cfg, spec, &sc) {
+            Ok(point) => {
+                println!(
+                    "{} {}: max {:.1} qps (achieved {:.2} ms, {} probes)",
+                    model,
+                    spec.label(),
+                    point.max_qps,
+                    point.achieved_ms,
+                    point.probes.len()
+                );
+                store_frontier_point(&server, &point);
+            }
+            Err(e) => {
+                eprintln!("slo-search failed: {e}");
+                return 1;
+            }
+        }
+    }
+    println!(
+        "{}",
+        mlmodelscope::analysis::slo_frontier_table(&[model], &server.evaldb).render()
+    );
+    0
 }
 
 /// The REST client (§4.2): the command-line counterpart of the web UI,

@@ -108,6 +108,12 @@ pub fn trimmed_mean(samples: &[f64], frac: f64) -> f64 {
 }
 
 /// Nearest-rank percentile over unsorted samples; `q` in `[0, 100]`.
+///
+/// Edge cases (pinned by tests): an **empty** input returns `NaN` — there
+/// is no meaningful percentile of nothing, and `NaN` poisons downstream
+/// arithmetic instead of silently reading as "0 ms latency". A single
+/// sample is every percentile of itself; constant samples return that
+/// constant for every `q`.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
@@ -166,7 +172,14 @@ impl Histogram {
         }
     }
 
-    /// Quantile estimate by linear interpolation within the bucket.
+    /// Quantile estimate by linear interpolation within the bucket; `q` in
+    /// `[0, 1]`.
+    ///
+    /// Edge cases (pinned by tests): an **empty** histogram returns `NaN`
+    /// (same contract as [`percentile`]); single and constant samples
+    /// return a value inside the bucket holding them, i.e. within one
+    /// bucket growth factor of the true value — bucketing trades exactness
+    /// for O(1) streaming recording.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return f64::NAN;
@@ -281,6 +294,63 @@ impl BatchingSeries {
     }
 }
 
+/// Latency samples grouped by tenant — the per-tenant view of a
+/// multi-tenant ([`crate::scenario::Scenario::Mix`]) run. Each tenant gets
+/// its own [`LatencySamples`], so per-tenant tails (the fairness question:
+/// "did tenant B's burst blow up tenant A's p99?") use exactly the same
+/// summary statistics as single-tenant reports (F2).
+#[derive(Debug, Clone, Default)]
+pub struct TenantLatencies {
+    map: std::collections::BTreeMap<String, LatencySamples>,
+}
+
+impl TenantLatencies {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, tenant: &str, secs: f64) {
+        self.map.entry(tenant.to_string()).or_default().record_secs(secs);
+    }
+
+    pub fn get(&self, tenant: &str) -> Option<&LatencySamples> {
+        self.map.get(tenant)
+    }
+
+    pub fn tenants(&self) -> Vec<&str> {
+        self.map.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &LatencySamples)> {
+        self.map.iter()
+    }
+
+    /// Per-tenant summary (count, mean, p50/p99 in ms) for record metadata.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(
+            self.map
+                .iter()
+                .map(|(name, l)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(l.len() as f64)),
+                            ("mean_ms", Json::num(l.mean() * 1e3)),
+                            ("p50_ms", Json::num(l.p50() * 1e3)),
+                            ("p99_ms", Json::num(l.p99() * 1e3)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
 /// Monotonic throughput counter (inputs/sec over a window).
 #[derive(Debug, Default)]
 pub struct Throughput {
@@ -336,6 +406,73 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         let p90 = percentile(&xs, 90.0);
         assert!((89.0..=91.0).contains(&p90), "p90 {p90}");
+    }
+
+    #[test]
+    fn percentile_empty_single_and_constant_inputs() {
+        // Empty: NaN, never a fake "0 ms" (pinned contract).
+        assert!(percentile(&[], 0.0).is_nan());
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[], 100.0).is_nan());
+        let l = LatencySamples::new();
+        assert!(l.p50().is_nan() && l.p99().is_nan());
+        // Single sample: every percentile is that sample.
+        for q in [0.0, 1.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[0.25], q), 0.25);
+        }
+        // Constant samples: every percentile is the constant.
+        let xs = vec![3.5; 40];
+        for q in [0.0, 10.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, q), 3.5);
+        }
+    }
+
+    #[test]
+    fn histogram_quantile_empty_single_and_constant_inputs() {
+        // Empty: NaN (pinned, same contract as `percentile`).
+        let h = Histogram::latency_default();
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        // Single sample: quantiles land in the sample's bucket — within
+        // one ×1.6 bucket factor of the true value.
+        let mut h1 = Histogram::latency_default();
+        h1.record(0.004);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h1.quantile(q);
+            assert!(v >= 0.004 / 1.6 && v <= 0.004 * 1.6, "q{q} → {v}");
+        }
+        // Constant samples: same bucket bound, and monotone in q.
+        let mut hc = Histogram::latency_default();
+        for _ in 0..100 {
+            hc.record(0.004);
+        }
+        let mut prev = 0.0;
+        for q in [0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let v = hc.quantile(q);
+            assert!(v >= 0.004 / 1.6 && v <= 0.004 * 1.6, "q{q} → {v}");
+            assert!(v >= prev, "quantile not monotone at q{q}");
+            prev = v;
+        }
+        assert_eq!(hc.count(), 100);
+        assert!((hc.mean() - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_latencies_group_and_summarize() {
+        let mut t = TenantLatencies::new();
+        assert!(t.is_empty());
+        for ms in [10.0, 20.0, 30.0] {
+            t.record("steady", ms / 1e3);
+        }
+        t.record("bursty", 0.5);
+        assert_eq!(t.tenants(), vec!["bursty", "steady"]);
+        assert_eq!(t.get("steady").unwrap().len(), 3);
+        assert!((t.get("steady").unwrap().p99() - 0.030).abs() < 1e-12);
+        assert!((t.get("bursty").unwrap().mean() - 0.5).abs() < 1e-12);
+        assert!(t.get("missing").is_none());
+        let j = t.to_json();
+        assert_eq!(j.get_path("steady.count").unwrap().as_f64(), Some(3.0));
+        assert!((j.get_path("bursty.p99_ms").unwrap().as_f64().unwrap() - 500.0).abs() < 1e-9);
     }
 
     #[test]

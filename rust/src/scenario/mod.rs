@@ -35,6 +35,15 @@ pub enum Scenario {
     /// and `peak_qps` over `period_s` — the daily traffic curve the
     /// cross-request batcher is designed for.
     Diurnal { peak_qps: f64, trough_qps: f64, period_s: f64, count: usize },
+    /// Multi-tenant composition: several tenants (name + leaf scenario)
+    /// sharing one agent fleet. Generation merges the tenants' schedules by
+    /// arrival time while tagging every request with its tenant index, so
+    /// per-tenant identity survives through [`crate::pipeline::Envelope`]
+    /// (the request id carried as `seq` maps back to a tenant via the
+    /// workload) and per-tenant latency tails can be reported separately.
+    /// Tenants should be single-item scenarios (batch size 1); nesting a
+    /// `Mix` inside a `Mix` is not supported.
+    Mix { tenants: Vec<(String, Scenario)> },
 }
 
 impl Scenario {
@@ -47,13 +56,19 @@ impl Scenario {
             Scenario::Burst { .. } => "burst",
             Scenario::TraceReplay { .. } => "trace_replay",
             Scenario::Diurnal { .. } => "diurnal",
+            Scenario::Mix { .. } => "mix",
         }
     }
 
-    /// Batch size each request carries.
+    /// Batch size each request carries. For a `Mix` this is the largest
+    /// tenant batch size, so composing pre-batched scenarios is visible to
+    /// callers that require single-item request streams.
     pub fn batch_size(&self) -> usize {
         match self {
             Scenario::Batched { batch_size, .. } => *batch_size,
+            Scenario::Mix { tenants } => {
+                tenants.iter().map(|(_, s)| s.batch_size()).max().unwrap_or(1)
+            }
             _ => 1,
         }
     }
@@ -68,6 +83,16 @@ impl Scenario {
             Scenario::Burst { burst_size, bursts, .. } => burst_size * bursts,
             Scenario::TraceReplay { timestamps } => timestamps.len(),
             Scenario::Diurnal { count, .. } => *count,
+            Scenario::Mix { tenants } => tenants.iter().map(|(_, s)| s.total_items()).sum(),
+        }
+    }
+
+    /// Tenant names, in tenant-index order (single implicit tenant for
+    /// non-`Mix` scenarios).
+    pub fn tenant_names(&self) -> Vec<String> {
+        match self {
+            Scenario::Mix { tenants } => tenants.iter().map(|(n, _)| n.clone()).collect(),
+            _ => vec!["all".to_string()],
         }
     }
 
@@ -112,6 +137,23 @@ impl Scenario {
                 ("period_s", Json::num(*period_s)),
                 ("count", Json::num(*count as f64)),
             ]),
+            Scenario::Mix { tenants } => Json::obj(vec![
+                ("kind", Json::str("mix")),
+                (
+                    "tenants",
+                    Json::arr(
+                        tenants
+                            .iter()
+                            .map(|(name, s)| {
+                                Json::obj(vec![
+                                    ("name", Json::str(name)),
+                                    ("scenario", s.to_json()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         }
     }
 
@@ -144,6 +186,19 @@ impl Scenario {
                 period_s: j.f64_or("period_s", 60.0),
                 count,
             }),
+            "mix" => Some(Scenario::Mix {
+                tenants: j
+                    .get("tenants")?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| {
+                        Some((
+                            t.str_or("name", "").to_string(),
+                            Scenario::from_json(t.get("scenario")?)?,
+                        ))
+                    })
+                    .collect::<Option<Vec<_>>>()?,
+            }),
             _ => None,
         }
     }
@@ -156,6 +211,10 @@ pub struct Request {
     /// Arrival offset from workload start, seconds.
     pub at_secs: f64,
     pub batch_size: usize,
+    /// Tenant index within a [`Scenario::Mix`] (0 for single-tenant
+    /// scenarios). Carried so batching/dispatch can keep tenants separate
+    /// and metrics can report per-tenant latency tails.
+    pub tenant: u32,
 }
 
 /// An arrival process produces request offsets — implement to plug in a
@@ -189,7 +248,7 @@ impl ArrivalProcess for DiurnalProcess {
                 let phase = (2.0 * std::f64::consts::PI * t / self.period_s).sin();
                 let rate = (self.base_rate * (1.0 + self.amplitude * phase)).max(1e-6);
                 t += rng.exponential(rate);
-                Request { id: id as u64, at_secs: t, batch_size: 1 }
+                Request { id: id as u64, at_secs: t, batch_size: 1, tenant: 0 }
             })
             .collect()
     }
@@ -218,32 +277,32 @@ impl Workload {
                 // Closed loop: next request issues when the previous answer
                 // returns, so arrival offsets are all zero.
                 for id in 0..*count {
-                    requests.push(Request { id: id as u64, at_secs: 0.0, batch_size: 1 });
+                    requests.push(Request { id: id as u64, at_secs: 0.0, batch_size: 1, tenant: 0 });
                 }
             }
             Scenario::Poisson { rate, count } => {
                 let mut t = 0.0;
                 for id in 0..*count {
                     t += rng.exponential(*rate);
-                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1 });
+                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1, tenant: 0 });
                 }
             }
             Scenario::Batched { batch_size, batches } => {
                 for id in 0..*batches {
-                    requests.push(Request { id: id as u64, at_secs: 0.0, batch_size: *batch_size });
+                    requests.push(Request { id: id as u64, at_secs: 0.0, batch_size: *batch_size, tenant: 0 });
                 }
             }
             Scenario::FixedQps { qps, count } => {
                 let gap = 1.0 / qps.max(1e-9);
                 for id in 0..*count {
-                    requests.push(Request { id: id as u64, at_secs: id as f64 * gap, batch_size: 1 });
+                    requests.push(Request { id: id as u64, at_secs: id as f64 * gap, batch_size: 1, tenant: 0 });
                 }
             }
             Scenario::Burst { burst_size, period_s, bursts } => {
                 let mut id = 0u64;
                 for b in 0..*bursts {
                     for _ in 0..*burst_size {
-                        requests.push(Request { id, at_secs: b as f64 * period_s, batch_size: 1 });
+                        requests.push(Request { id, at_secs: b as f64 * period_s, batch_size: 1, tenant: 0 });
                         id += 1;
                     }
                 }
@@ -257,7 +316,7 @@ impl Workload {
                     .collect();
                 ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 for (id, t) in ts.into_iter().enumerate() {
-                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1 });
+                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1, tenant: 0 });
                 }
             }
             Scenario::Diurnal { peak_qps, trough_qps, period_s, count } => {
@@ -269,7 +328,25 @@ impl Workload {
                     // phase = +1 → peak, -1 → trough.
                     let rate = (lo + (hi - lo) * (1.0 + phase) / 2.0).max(1e-6);
                     t += rng.exponential(rate);
-                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1 });
+                    requests.push(Request { id: id as u64, at_secs: t, batch_size: 1, tenant: 0 });
+                }
+            }
+            Scenario::Mix { tenants } => {
+                // Each tenant generates from its own derived seed, then the
+                // schedules merge by arrival time. Ids are reassigned to be
+                // globally unique; the tenant index preserves identity.
+                for (ti, (_, sub)) in tenants.iter().enumerate() {
+                    let sub_seed =
+                        seed ^ (ti as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+                    for r in Workload::generate(sub, sub_seed).requests {
+                        requests.push(Request { tenant: ti as u32, ..r });
+                    }
+                }
+                // Stable sort: ties keep tenant-major generation order, so
+                // the merge is deterministic (F1).
+                requests.sort_by(|a, b| a.at_secs.partial_cmp(&b.at_secs).unwrap());
+                for (i, r) in requests.iter_mut().enumerate() {
+                    r.id = i as u64;
                 }
             }
         }
@@ -392,12 +469,51 @@ mod tests {
             Scenario::Burst { burst_size: 2, period_s: 0.5, bursts: 3 },
             Scenario::TraceReplay { timestamps: vec![0.0, 0.125, 0.5, 2.0] },
             Scenario::Diurnal { peak_qps: 200.0, trough_qps: 25.0, period_s: 10.0, count: 6 },
+            Scenario::Mix {
+                tenants: vec![
+                    ("steady".into(), Scenario::FixedQps { qps: 40.0, count: 12 }),
+                    ("bursty".into(), Scenario::Burst { burst_size: 4, period_s: 0.5, bursts: 2 }),
+                ],
+            },
         ];
         for s in scenarios {
             let j = s.to_json();
             let back = Scenario::from_json(&j).unwrap();
             assert_eq!(back, s);
         }
+    }
+
+    #[test]
+    fn mix_merges_tenants_preserving_identity() {
+        let s = Scenario::Mix {
+            tenants: vec![
+                ("a".into(), Scenario::FixedQps { qps: 100.0, count: 20 }),
+                ("b".into(), Scenario::Poisson { rate: 200.0, count: 30 }),
+            ],
+        };
+        assert_eq!(s.name(), "mix");
+        assert_eq!(s.batch_size(), 1);
+        assert_eq!(s.total_items(), 50);
+        assert_eq!(s.tenant_names(), vec!["a".to_string(), "b".to_string()]);
+        let w = Workload::generate(&s, 9);
+        assert_eq!(w.requests.len(), 50);
+        // Globally unique sequential ids, non-decreasing arrivals.
+        for (i, pair) in w.requests.windows(2).enumerate() {
+            assert_eq!(pair[0].id, i as u64);
+            assert!(pair[1].at_secs >= pair[0].at_secs);
+        }
+        // Per-tenant counts survive the merge.
+        let count_of = |t: u32| w.requests.iter().filter(|r| r.tenant == t).count();
+        assert_eq!(count_of(0), 20);
+        assert_eq!(count_of(1), 30);
+        // Deterministic per seed (F1); different seeds move the Poisson
+        // tenant.
+        assert_eq!(w.requests, Workload::generate(&s, 9).requests);
+        assert_ne!(w.requests, Workload::generate(&s, 10).requests);
+        // Non-mix scenarios are single-tenant.
+        let online = Workload::generate(&Scenario::Online { count: 4 }, 1);
+        assert!(online.requests.iter().all(|r| r.tenant == 0));
+        assert_eq!(Scenario::Online { count: 4 }.tenant_names(), vec!["all".to_string()]);
     }
 
     #[test]

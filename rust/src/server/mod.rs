@@ -14,10 +14,13 @@
 pub mod webui;
 
 use crate::agent::{Agent, EvalRequest};
-use crate::batcher::{batching_series, plan_batches, BatchExecutor, BatcherConfig, Dispatcher, DispatchOutcome};
+use crate::batcher::{
+    batching_series, plan_batches, Batch, BatchExecutor, BatcherConfig, Dispatcher,
+    DispatchOutcome, DispatchWatch, QueueSim,
+};
 use crate::evaldb::{EvalDb, EvalKey, EvalRecord};
 use crate::manifest::SystemRequirements;
-use crate::metrics::BatchingSeries;
+use crate::metrics::{BatchingSeries, TenantLatencies};
 use crate::pipeline::{Envelope, Payload};
 use crate::predictor::InputMode;
 use crate::preprocess::Tensor;
@@ -67,7 +70,20 @@ pub struct BatchedEval {
     pub record: EvalRecord,
     pub series: BatchingSeries,
     pub outcome: DispatchOutcome,
+    /// Queueing-aware latencies grouped by tenant (`"all"` for non-`Mix`
+    /// scenarios) — the fairness question's raw material.
+    pub per_tenant: TenantLatencies,
+    /// True when a [`DispatchWatch`] cut the run short (SLO probe abort);
+    /// the record is then *not* stored in the evaluation database and
+    /// covers only the completed prefix.
+    pub aborted: bool,
 }
+
+/// Builds a [`DispatchWatch`] for a batched evaluation, given the batch
+/// plan and the number of agents the dispatch will shard across. The SLO
+/// probe runner uses this to wire its early-abort judge to the exact plan
+/// the server executes.
+pub type WatchFactory<'a> = &'a dyn Fn(&[Batch], usize) -> Arc<dyn DispatchWatch>;
 
 /// The server.
 pub struct Server {
@@ -222,11 +238,32 @@ impl Server {
     /// *every* resolved live in-process agent under the dispatcher's
     /// least-outstanding-requests policy. Stores one evaluation record
     /// whose metadata carries the batching series (occupancy, queue delay,
-    /// per-agent sharding) for the analysis workflow.
+    /// per-agent sharding, per-tenant tails) for the analysis workflow.
+    ///
+    /// Per-request latency is computed by the deterministic virtual-time
+    /// queueing replay ([`QueueSim`]): batching delay + wait for a free
+    /// agent + batch service time. Latency therefore grows with offered
+    /// load — the property the SLO search ([`crate::slo`]) depends on.
     pub fn evaluate_batched(
         &self,
         job: &EvalJob,
         cfg: &BatcherConfig,
+    ) -> Result<BatchedEval, ServerError> {
+        self.evaluate_batched_watched(job, cfg, None)
+    }
+
+    /// As [`Server::evaluate_batched`], with an optional [`WatchFactory`]
+    /// whose watch observes every executed batch and may abort the run.
+    ///
+    /// Watched evaluations are *probes*, not benchmark results: they are
+    /// never persisted in the evaluation database (a 20-probe SLO search
+    /// would otherwise bury the real records under arbitrary-load
+    /// `fixed_qps` rows). Only the unwatched path stores.
+    pub fn evaluate_batched_watched(
+        &self,
+        job: &EvalJob,
+        cfg: &BatcherConfig,
+        watch: Option<WatchFactory<'_>>,
     ) -> Result<BatchedEval, ServerError> {
         // The batcher coalesces *single-item* request streams; a scenario
         // whose requests are already batches (`Batched`) would be silently
@@ -272,16 +309,9 @@ impl Server {
             payload: Payload::Tensor(Tensor::random(vec![1, 4, 4, 3], job.seed ^ r.id)),
         });
         let series = batching_series(&batches, cfg);
-        let delay_of: HashMap<u64, (u64, f64)> = batches
-            .iter()
-            .flat_map(|b| {
-                b.envelopes
-                    .iter()
-                    .zip(b.queue_delays_secs())
-                    .map(|(e, d)| (e.seq, (b.index, d)))
-                    .collect::<Vec<_>>()
-            })
-            .collect();
+        let mut replay = QueueSim::new(&batches, locals.len(), cfg.policy());
+        let is_probe = watch.is_some();
+        let watch = watch.map(|f| f(&batches, locals.len()));
 
         let mut executors: Vec<Arc<dyn BatchExecutor>> = Vec::new();
         let mut trace_ids = Vec::new();
@@ -293,19 +323,36 @@ impl Server {
             executors.push(Arc::new(session));
         }
         let outcome = Dispatcher::new(executors)
-            .dispatch(batches)
+            .with_policy(cfg.policy())
+            .dispatch_watched(batches, watch)
             .map_err(|e| ServerError::AgentFailed(e.agent.clone(), e.msg))?;
 
-        // Per-request latency = batching delay + its batch's service time.
-        let batch_latency: HashMap<u64, f64> =
-            outcome.batch_log.iter().map(|r| (r.index, r.latency_s)).collect();
+        // Queueing-aware per-request latency: feed the observed per-batch
+        // service times through the virtual-time replay in plan order.
+        let mut rows = outcome.batch_log.clone();
+        rows.sort_by_key(|r| r.index);
+        let mut completed = Vec::new();
+        for row in &rows {
+            completed.extend(replay.offer(row.index, row.latency_s));
+        }
+        let tenant_names = job.scenario.tenant_names();
+        let tenant_name = |t: u32| -> String {
+            tenant_names
+                .get(t as usize)
+                .cloned()
+                .unwrap_or_else(|| format!("t{t}"))
+        };
+        let mut by_seq: HashMap<u64, f64> = HashMap::with_capacity(completed.len());
+        let mut per_tenant = TenantLatencies::new();
+        for c in &completed {
+            by_seq.insert(c.seq, c.latency_s);
+            per_tenant.record(&tenant_name(c.tenant), c.latency_s);
+        }
+        // One latency per completed output (aborted runs cover a prefix).
         let latencies: Vec<f64> = outcome
             .outputs
             .iter()
-            .map(|env| {
-                let (bidx, delay) = delay_of.get(&env.seq).copied().unwrap_or((0, 0.0));
-                delay + batch_latency.get(&bidx).copied().unwrap_or(0.0)
-            })
+            .filter_map(|env| by_seq.get(&env.seq).copied())
             .collect();
         let items = outcome.outputs.len() as f64;
         let throughput = items / outcome.makespan_s().max(1e-12);
@@ -335,9 +382,13 @@ impl Server {
         };
         let mut record = EvalRecord::new(key, latencies, throughput);
         record.trace_id = trace_ids.first().copied();
-        record.meta = Json::obj(vec![
+        let mut meta = vec![
             ("batching", series.to_json()),
-            ("dispatch", Json::str("least_outstanding")),
+            (
+                "dispatch",
+                Json::str(if cfg.fair { "fair_by_tenant" } else { "least_outstanding" }),
+            ),
+            ("fair", Json::Bool(cfg.fair)),
             ("agents", Json::num(locals.len() as f64)),
             (
                 "per_agent_items",
@@ -351,10 +402,19 @@ impl Server {
             ),
             ("requeued_batches", Json::num(outcome.requeued_batches as f64)),
             ("makespan_s", Json::num(outcome.makespan_s())),
-        ]);
+        ];
+        if matches!(job.scenario, Scenario::Mix { .. }) {
+            meta.push(("tenants", per_tenant.to_json()));
+        }
+        record.meta = Json::obj(meta);
         let mut record_out = record.clone();
-        record_out.seq = self.evaldb.put(record);
-        Ok(BatchedEval { record: record_out, series, outcome })
+        // Probes (watched runs) and aborted runs are not benchmark
+        // results: don't store them.
+        if !outcome.aborted && !is_probe {
+            record_out.seq = self.evaldb.put(record);
+        }
+        let aborted = outcome.aborted;
+        Ok(BatchedEval { record: record_out, series, outcome, per_tenant, aborted })
     }
 
     /// Standard simulation platform: the four Table-1 systems, GPU + CPU
@@ -439,7 +499,16 @@ impl Server {
                 let mut job = EvalJob::new(model, scenario);
                 job.model_version =
                     body.get("version").and_then(|v| v.as_str()).map(String::from);
-                job.trace_level = TraceLevel::parse(body.str_or("trace_level", "model"));
+                job.trace_level =
+                    match TraceLevel::parse(body.str_or("trace_level", "model")) {
+                        Some(t) => t,
+                        None => {
+                            return HttpResponse::error(
+                                400,
+                                "invalid trace_level (none|model|framework|system|full)",
+                            )
+                        }
+                    };
                 job.input_mode = InputMode::parse(body.str_or("input_mode", "c"));
                 job.seed = body.f64_or("seed", 42.0) as u64;
                 job.all_agents = body.get("all_agents").and_then(|v| v.as_bool()).unwrap_or(false);
@@ -544,7 +613,7 @@ mod tests {
             Scenario::Poisson { rate: 2000.0, count: 64 },
         );
         job.seed = 7;
-        let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 10.0 };
+        let cfg = BatcherConfig::new(8, 10.0);
         let result = server.evaluate_batched(&job, &cfg).unwrap();
         // Every request came back, in order, exactly once.
         assert_eq!(result.outcome.outputs.len(), 64);
@@ -599,7 +668,7 @@ mod tests {
             job.seed = 11;
             server.evaluate_batched(&job, cfg).unwrap()
         };
-        let batched = run(&BatcherConfig { max_batch_size: 8, max_wait_ms: 20.0 }, false);
+        let batched = run(&BatcherConfig::new(8, 20.0), false);
         let baseline = run(&BatcherConfig::per_request(), true);
         assert_eq!(batched.outcome.outputs.len(), baseline.outcome.outputs.len());
         for (a, b) in batched.outcome.outputs.iter().zip(&baseline.outcome.outputs) {

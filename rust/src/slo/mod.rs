@@ -1,0 +1,572 @@
+//! SLO-driven benchmarking: latency-bounded throughput search.
+//!
+//! The paper's case studies (and the server-mode methodology MLCommons
+//! formalized) show that raw throughput is rarely the question — the
+//! question is *how much load can this (model, system, batching config)
+//! serve while still meeting a latency SLO* such as "p99 ≤ 10 ms". This
+//! module answers it:
+//!
+//! - [`SloSpec`] names the objective: a percentile and a bound.
+//! - [`SloJudge`] scores one probe *streamingly*: every completed request's
+//!   queueing-aware latency feeds a [`crate::metrics::Histogram`]-backed
+//!   running percentile, and an exact over-bound counter aborts the probe
+//!   the moment no completion could satisfy the SLO (if more than
+//!   `⌊(1-p)·n⌋` of `n` requests have already exceeded the bound, the
+//!   p-percentile over the full run must exceed it too) — a hopeless probe
+//!   stops early instead of running out the clock.
+//! - [`ProbeWatch`] wires the judge into the dispatcher through
+//!   [`crate::batcher::DispatchWatch`], replaying observed batch service
+//!   times through the deterministic virtual-time scheduler
+//!   ([`crate::batcher::QueueSim`]) so the judge sees the same
+//!   load-dependent latencies the server reports.
+//! - [`search_max_qps`] runs the adaptive search: a geometric ramp over
+//!   offered QPS (doubling octaves on a fixed dyadic grid) until a probe
+//!   fails, then bisection on the grid between the last pass and the first
+//!   fail. The result is the SLO frontier point
+//!   `(model, batch config) → max_qps@p≤bound`.
+//!
+//! Frontier points store into the evaluation database (scenario key
+//! `"slo:p99<=10.0ms"`-style) and render as the report's "SLO frontier"
+//! section ([`crate::analysis::slo_frontier_table`]); the `mlms slo-search`
+//! subcommand and `benches/fig_slo_frontier.rs` drive the whole path.
+
+use crate::batcher::{Batch, BatchLogRow, BatcherConfig, DispatchWatch, QueueSim};
+use crate::evaldb::{EvalKey, EvalRecord};
+use crate::metrics::Histogram;
+use crate::scenario::Scenario;
+use crate::server::{EvalJob, Server, ServerError};
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+
+/// A latency service-level objective: `percentile` (in `[0, 100]`) of
+/// request latencies must not exceed `bound_ms`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub percentile: f64,
+    pub bound_ms: f64,
+}
+
+impl SloSpec {
+    pub fn new(percentile: f64, bound_ms: f64) -> SloSpec {
+        SloSpec { percentile, bound_ms }
+    }
+
+    /// The common objective: p99 latency under `bound_ms`.
+    pub fn p99(bound_ms: f64) -> SloSpec {
+        SloSpec { percentile: 99.0, bound_ms }
+    }
+
+    pub fn bound_secs(&self) -> f64 {
+        self.bound_ms / 1e3
+    }
+
+    /// How many of `total` samples may exceed the bound while the
+    /// percentile still meets it: `⌊(1 - p/100)·total⌋`. This count-based
+    /// criterion is the compliance definition the judge enforces — it makes
+    /// early abort *exact*, not heuristic. A small epsilon absorbs the
+    /// binary-float error in `(100 - p)/100` (e.g. p99.9 × 1000 computes
+    /// as 0.99999…97, which must still floor to 1, not 0).
+    pub fn allowed_over(&self, total: usize) -> u64 {
+        ((100.0 - self.percentile) * total as f64 / 100.0 + 1e-9).floor().max(0.0) as u64
+    }
+
+    /// Human/key label, e.g. `p99<=10.0ms` or `p99.9<=10.0ms`. The
+    /// percentile uses shortest-form `Display` so fractional percentiles
+    /// survive (a `{:.0}` would round p99.9 up to a nonsensical p100 and
+    /// collide distinct SLOs onto one key).
+    pub fn label(&self) -> String {
+        format!("p{}<={:.1}ms", self.percentile, self.bound_ms)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("percentile", Json::num(self.percentile)),
+            ("bound_ms", Json::num(self.bound_ms)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<SloSpec> {
+        Some(SloSpec {
+            percentile: j.get("percentile")?.as_f64()?,
+            bound_ms: j.get("bound_ms")?.as_f64()?,
+        })
+    }
+}
+
+/// The judge's verdict after one observed latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloVerdict {
+    /// The probe can still meet the SLO.
+    Within,
+    /// Enough samples are over the bound that no completion can meet the
+    /// SLO — abort the probe.
+    Violated,
+}
+
+/// Streaming judge for one probe: histogram-backed running percentile for
+/// reporting, exact over-bound counting for sound early abort.
+pub struct SloJudge {
+    spec: SloSpec,
+    expected_total: usize,
+    hist: Histogram,
+    over: u64,
+    seen: u64,
+}
+
+impl SloJudge {
+    /// `expected_total` is the probe's full request count — the abort
+    /// threshold is computed against it, so a verdict of [`SloVerdict::Violated`]
+    /// is final no matter how the remaining requests would have behaved.
+    pub fn new(spec: SloSpec, expected_total: usize) -> SloJudge {
+        SloJudge {
+            spec,
+            expected_total,
+            hist: Histogram::latency_default(),
+            over: 0,
+            seen: 0,
+        }
+    }
+
+    pub fn observe(&mut self, secs: f64) -> SloVerdict {
+        self.hist.record(secs);
+        self.seen += 1;
+        if secs > self.spec.bound_secs() {
+            self.over += 1;
+        }
+        if self.over > self.spec.allowed_over(self.expected_total) {
+            SloVerdict::Violated
+        } else {
+            SloVerdict::Within
+        }
+    }
+
+    pub fn seen(&self) -> usize {
+        self.seen as usize
+    }
+
+    /// Compliance so far: over-bound count within the full-run allowance.
+    pub fn passed(&self) -> bool {
+        self.over <= self.spec.allowed_over(self.expected_total)
+    }
+
+    /// Streaming estimate of the spec percentile, in ms (`NaN` before any
+    /// sample, per the [`crate::metrics::Histogram::quantile`] contract).
+    pub fn achieved_ms(&self) -> f64 {
+        if self.seen == 0 {
+            f64::NAN
+        } else {
+            self.hist.quantile((self.spec.percentile / 100.0).clamp(0.0, 1.0)) * 1e3
+        }
+    }
+}
+
+struct ProbeState {
+    replay: QueueSim,
+    judge: SloJudge,
+}
+
+/// Dispatch watch for one SLO probe: replays each completed batch's service
+/// time through the virtual-time scheduler and feeds the resulting request
+/// latencies to the judge. Returns `false` (abort) on the first
+/// [`SloVerdict::Violated`].
+pub struct ProbeWatch {
+    state: Mutex<ProbeState>,
+}
+
+impl ProbeWatch {
+    pub fn new(
+        batches: &[Batch],
+        servers: usize,
+        cfg: &BatcherConfig,
+        spec: SloSpec,
+        expected_total: usize,
+    ) -> Arc<ProbeWatch> {
+        Arc::new(ProbeWatch {
+            state: Mutex::new(ProbeState {
+                replay: QueueSim::new(batches, servers, cfg.policy()),
+                judge: SloJudge::new(spec, expected_total),
+            }),
+        })
+    }
+
+    /// `(passed, achieved_ms, samples_seen)` at this instant.
+    pub fn snapshot(&self) -> (bool, f64, usize) {
+        let st = self.state.lock().unwrap();
+        (st.judge.passed(), st.judge.achieved_ms(), st.judge.seen())
+    }
+}
+
+impl DispatchWatch for ProbeWatch {
+    fn on_batch(&self, row: &BatchLogRow) -> bool {
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let completed = st.replay.offer(row.index, row.latency_s);
+        for c in completed {
+            if st.judge.observe(c.latency_s) == SloVerdict::Violated {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// One probe of the search: the offered rate and what the judge concluded.
+#[derive(Debug, Clone)]
+pub struct SloProbe {
+    pub qps: f64,
+    pub passed: bool,
+    /// The judge cut this probe short.
+    pub aborted: bool,
+    /// Streaming estimate of the spec percentile over the probe, ms.
+    pub achieved_ms: f64,
+    /// Requests the judge scored (may be < the probe count when aborted).
+    pub samples: usize,
+}
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct SloSearchConfig {
+    /// First probed rate; the ramp doubles from here.
+    pub start_qps: f64,
+    /// Requests per probe.
+    pub probe_count: usize,
+    /// Grid resolution: probed rates are `start_qps · 2^(e/steps)` for
+    /// integer `e`, so bisection terminates at a relative resolution of
+    /// `2^(1/steps) - 1` (~9% at the default 8). A shared grid also keeps
+    /// frontiers comparable across bounds: every search quotes a rate from
+    /// the same ladder.
+    pub steps_per_octave: u32,
+    /// Probe budget for ramp + bisection.
+    pub max_probes: usize,
+}
+
+impl Default for SloSearchConfig {
+    fn default() -> Self {
+        SloSearchConfig { start_qps: 50.0, probe_count: 256, steps_per_octave: 8, max_probes: 24 }
+    }
+}
+
+/// One point of the SLO frontier: the maximum sustainable rate for a
+/// `(model, batch config, SLO)` triple, plus the probe log behind it.
+#[derive(Debug, Clone)]
+pub struct SloFrontierPoint {
+    pub model: String,
+    pub batch_size: usize,
+    pub max_wait_ms: f64,
+    pub fair: bool,
+    pub spec: SloSpec,
+    /// Highest probed rate that met the SLO (0 when even the lowest probe
+    /// violated it).
+    pub max_qps: f64,
+    /// Achieved percentile at `max_qps`, ms (`NaN` when `max_qps` is 0).
+    pub achieved_ms: f64,
+    pub probes: Vec<SloProbe>,
+}
+
+impl SloFrontierPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("max_wait_ms", Json::num(self.max_wait_ms)),
+            ("fair", Json::Bool(self.fair)),
+            ("percentile", Json::num(self.spec.percentile)),
+            ("bound_ms", Json::num(self.spec.bound_ms)),
+            ("max_qps", Json::num(self.max_qps)),
+            ("achieved_ms", Json::num(self.achieved_ms)),
+            ("probes", Json::num(self.probes.len() as f64)),
+            (
+                "probe_log",
+                Json::arr(
+                    self.probes
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("qps", Json::num(p.qps)),
+                                ("passed", Json::Bool(p.passed)),
+                                ("aborted", Json::Bool(p.aborted)),
+                                ("achieved_ms", Json::num(p.achieved_ms)),
+                                ("samples", Json::num(p.samples as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run one probe: drive [`Server::evaluate_batched_watched`] at `qps` with
+/// the streaming judge attached. The probe workload is `FixedQps` — fully
+/// deterministic, so a probe is a pure function of `(job, cfg, qps)`.
+pub fn probe(
+    server: &Server,
+    job: &EvalJob,
+    cfg: &BatcherConfig,
+    spec: SloSpec,
+    qps: f64,
+    count: usize,
+) -> Result<SloProbe, ServerError> {
+    let mut probe_job = job.clone();
+    probe_job.scenario = Scenario::FixedQps { qps, count };
+    let watch_slot: Mutex<Option<Arc<ProbeWatch>>> = Mutex::new(None);
+    let factory = |batches: &[Batch], servers: usize| -> Arc<dyn DispatchWatch> {
+        let w = ProbeWatch::new(batches, servers, cfg, spec, count);
+        *watch_slot.lock().unwrap() = Some(w.clone());
+        w
+    };
+    let result = server.evaluate_batched_watched(&probe_job, cfg, Some(&factory))?;
+    let watch = watch_slot
+        .into_inner()
+        .unwrap()
+        .expect("watch factory invoked");
+    let (passed, achieved_ms, samples) = watch.snapshot();
+    Ok(SloProbe {
+        qps,
+        passed: passed && !result.aborted,
+        aborted: result.aborted,
+        achieved_ms,
+        samples,
+    })
+}
+
+/// Adaptive search for the maximum sustainable rate under `spec`:
+/// geometric ramp (full octaves) until a probe fails, then bisection on the
+/// dyadic grid between the last pass and the first fail. `job` supplies the
+/// model, requirements and seed; its scenario is ignored (probes are
+/// `FixedQps`).
+pub fn search_max_qps(
+    server: &Server,
+    job: &EvalJob,
+    cfg: &BatcherConfig,
+    spec: SloSpec,
+    sc: &SloSearchConfig,
+) -> Result<SloFrontierPoint, ServerError> {
+    let steps = sc.steps_per_octave.max(1) as i64;
+    let max_probes = sc.max_probes.max(4);
+    let qps_at = |e: i64| sc.start_qps * ((e as f64) / (steps as f64)).exp2();
+    let mut probes: Vec<SloProbe> = Vec::new();
+
+    let mut lo: Option<i64> = None; // highest exponent seen passing
+    let mut hi: Option<i64> = None; // lowest exponent seen failing
+    // 1. First probe at the start rate.
+    let first = probe(server, job, cfg, spec, qps_at(0), sc.probe_count)?;
+    let first_passed = first.passed;
+    probes.push(first);
+    if first_passed {
+        lo = Some(0);
+        // 2a. Ramp up by octaves until a probe fails.
+        let mut e = steps;
+        while probes.len() < max_probes {
+            let p = probe(server, job, cfg, spec, qps_at(e), sc.probe_count)?;
+            let passed = p.passed;
+            probes.push(p);
+            if passed {
+                lo = Some(e);
+                e += steps;
+            } else {
+                hi = Some(e);
+                break;
+            }
+        }
+    } else {
+        hi = Some(0);
+        // 2b. Ramp down looking for any passing rate (floor: start/64).
+        let mut e = -steps;
+        while probes.len() < max_probes && e >= -6 * steps {
+            let p = probe(server, job, cfg, spec, qps_at(e), sc.probe_count)?;
+            let passed = p.passed;
+            probes.push(p);
+            if passed {
+                lo = Some(e);
+                break;
+            } else {
+                hi = Some(e);
+                e -= steps;
+            }
+        }
+    }
+    // 3. Bisect the bracket down to grid resolution.
+    if let (Some(mut l), Some(mut h)) = (lo, hi) {
+        while h - l > 1 && probes.len() < max_probes {
+            let mid = l + (h - l) / 2;
+            let p = probe(server, job, cfg, spec, qps_at(mid), sc.probe_count)?;
+            let passed = p.passed;
+            probes.push(p);
+            if passed {
+                l = mid;
+            } else {
+                h = mid;
+            }
+        }
+        lo = Some(l);
+    }
+
+    let (max_qps, achieved_ms) = match lo {
+        Some(l) => {
+            let q = qps_at(l);
+            let at_max = probes
+                .iter()
+                .rev()
+                .find(|p| p.passed && (p.qps - q).abs() <= q * 1e-12);
+            (q, at_max.map(|p| p.achieved_ms).unwrap_or(f64::NAN))
+        }
+        None => (0.0, f64::NAN),
+    };
+    Ok(SloFrontierPoint {
+        model: job.model.clone(),
+        batch_size: cfg.max_batch_size.max(1),
+        max_wait_ms: cfg.max_wait_ms,
+        fair: cfg.fair,
+        spec,
+        max_qps,
+        achieved_ms,
+        probes,
+    })
+}
+
+/// Store a frontier point in the evaluation database so the analysis
+/// workflow ([`crate::analysis::slo_frontier_table`]) reports it. The SLO
+/// label *and* the batching config (wait window, fairness) are baked into
+/// the scenario key — `EvalDb::latest` dedupes by key, so two frontiers
+/// differing only in fairness or wait window must not collapse onto one
+/// row.
+pub fn store_frontier_point(server: &Server, point: &SloFrontierPoint) -> u64 {
+    let model_version = server
+        .registry
+        .manifest(&point.model, None)
+        .map(|m| m.version.to_string())
+        .unwrap_or_else(|| "0.0.0".to_string());
+    let key = EvalKey {
+        model: point.model.clone(),
+        model_version,
+        framework: "-".to_string(),
+        framework_version: "0.0.0".to_string(),
+        system: "multi".to_string(),
+        device: "-".to_string(),
+        scenario: format!(
+            "slo:{}:w{:.1}{}",
+            point.spec.label(),
+            point.max_wait_ms,
+            if point.fair { ":fair" } else { "" }
+        ),
+        batch_size: point.batch_size,
+    };
+    let mut record = EvalRecord::new(key, Vec::new(), point.max_qps);
+    record.meta = Json::obj(vec![("slo", point.to_json())]);
+    server.evaldb.put(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::sim_agent;
+    use crate::sysmodel::Device;
+    use crate::tracing::TraceLevel;
+
+    fn platform(agents: usize) -> Arc<Server> {
+        let server = Server::standalone();
+        server.register_zoo();
+        for _ in 0..agents {
+            let (agent, _sim, _tracer) = sim_agent(
+                "aws_p3",
+                Device::Gpu,
+                TraceLevel::None,
+                server.evaldb.clone(),
+                server.traces.clone(),
+            );
+            server.attach_local_agent(agent);
+        }
+        server
+    }
+
+    #[test]
+    fn spec_allowance_and_label() {
+        let spec = SloSpec::p99(10.0);
+        assert_eq!(spec.allowed_over(100), 1);
+        assert_eq!(spec.allowed_over(99), 0);
+        assert_eq!(spec.allowed_over(1000), 10);
+        assert_eq!(SloSpec::new(50.0, 5.0).allowed_over(10), 5);
+        assert_eq!(spec.label(), "p99<=10.0ms");
+        let back = SloSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn judge_aborts_exactly_when_no_completion_can_pass() {
+        // p99 over 100 expected samples → one over-bound sample allowed.
+        let mut judge = SloJudge::new(SloSpec::p99(10.0), 100);
+        for _ in 0..50 {
+            assert_eq!(judge.observe(0.002), SloVerdict::Within);
+        }
+        // First violation: still salvageable.
+        assert_eq!(judge.observe(0.050), SloVerdict::Within);
+        assert!(judge.passed());
+        // Second violation: 2 > allowed 1 — final, regardless of the rest.
+        assert_eq!(judge.observe(0.050), SloVerdict::Violated);
+        assert!(!judge.passed());
+        assert_eq!(judge.seen(), 52);
+        // The streaming percentile now sits in the violating tail: the p99
+        // of 52 samples is one of the two 50 ms outliers (within one
+        // histogram bucket factor).
+        let est = judge.achieved_ms();
+        assert!(est > 10.0 && est < 50.0 * 1.7, "p99 estimate {est}");
+        // Before any sample the estimate is NaN, per the histogram
+        // contract.
+        assert!(SloJudge::new(SloSpec::p99(1.0), 10).achieved_ms().is_nan());
+    }
+
+    #[test]
+    fn hopeless_probe_aborts_early() {
+        let server = platform(2);
+        let job = EvalJob::new("ResNet_v1_50", Scenario::Online { count: 1 });
+        let cfg = BatcherConfig::new(8, 5.0);
+        // A bound no real execution can meet: the probe must abort, not
+        // run all 64 requests.
+        let p = probe(&server, &job, &cfg, SloSpec::p99(1e-6), 500.0, 64).unwrap();
+        assert!(!p.passed);
+        assert!(p.aborted, "violating probe should cut short");
+        assert!(p.samples < 64, "scored {} of 64", p.samples);
+        // Aborted probes leave nothing in the evaluation database.
+        assert_eq!(server.evaldb.len(), 0);
+    }
+
+    #[test]
+    fn search_brackets_a_frontier_and_tightening_monotone() {
+        let server = platform(2);
+        let job = EvalJob::new("MobileNet_v1_1.0_224", Scenario::Online { count: 1 });
+        let cfg = BatcherConfig::new(8, 5.0);
+        let sc = SloSearchConfig {
+            start_qps: 20.0,
+            probe_count: 48,
+            steps_per_octave: 4,
+            max_probes: 18,
+        };
+        // Calibrate a reachable bound from a light probe, then search.
+        let cal = probe(&server, &job, &cfg, SloSpec::p99(1e9), 10.0, 32).unwrap();
+        assert!(cal.passed);
+        let base_ms = cal.achieved_ms;
+        assert!(base_ms.is_finite() && base_ms > 0.0);
+        let loose = search_max_qps(&server, &job, &cfg, SloSpec::p99(base_ms * 16.0), &sc).unwrap();
+        let tight = search_max_qps(&server, &job, &cfg, SloSpec::p99(base_ms * 2.0), &sc).unwrap();
+        assert!(loose.max_qps > 0.0, "loose bound must admit load");
+        assert!(!loose.probes.is_empty() && !tight.probes.is_empty());
+        assert!(
+            tight.max_qps <= loose.max_qps + 1e-9,
+            "tighter bound admitted more load: {} vs {}",
+            tight.max_qps,
+            loose.max_qps
+        );
+        // Stored frontier points land under distinct scenario keys.
+        store_frontier_point(&server, &loose);
+        store_frontier_point(&server, &tight);
+        let slo_records: Vec<_> = server
+            .evaldb
+            .latest(&crate::evaldb::EvalQuery::model("MobileNet_v1_1.0_224"))
+            .into_iter()
+            .filter(|r| r.key.scenario.starts_with("slo:"))
+            .collect();
+        assert_eq!(slo_records.len(), 2);
+        assert!(slo_records.iter().all(|r| r.meta.get("slo").is_some()));
+    }
+}

@@ -35,13 +35,19 @@ pub enum TraceLevel {
 }
 
 impl TraceLevel {
-    pub fn parse(s: &str) -> TraceLevel {
+    /// Parse a level name, case-insensitively. Returns `None` for unknown
+    /// strings — callers decide whether that is a usage error (CLI / REST)
+    /// or falls back to a default. (Unknown strings used to map silently to
+    /// `Full`, which turned typos like `--trace-level ful` into the most
+    /// expensive tracing mode.)
+    pub fn parse(s: &str) -> Option<TraceLevel> {
         match s.to_ascii_lowercase().as_str() {
-            "none" => TraceLevel::None,
-            "model" => TraceLevel::Model,
-            "framework" => TraceLevel::Framework,
-            "system" => TraceLevel::System,
-            _ => TraceLevel::Full,
+            "none" => Some(TraceLevel::None),
+            "model" => Some(TraceLevel::Model),
+            "framework" => Some(TraceLevel::Framework),
+            "system" => Some(TraceLevel::System),
+            "full" => Some(TraceLevel::Full),
+            _ => None,
         }
     }
 
@@ -115,7 +121,7 @@ impl Span {
             span_id: j.get("span_id")?.as_u64()?,
             parent_id: j.get("parent_id").and_then(|v| v.as_u64()),
             name: j.get("name")?.as_str()?.to_string(),
-            level: TraceLevel::parse(j.str_or("level", "full")),
+            level: TraceLevel::parse(j.str_or("level", "full")).unwrap_or(TraceLevel::Full),
             start_ns: j.get("start_ns")?.as_u64()?,
             end_ns: j.get("end_ns")?.as_u64()?,
             tags: j
@@ -369,7 +375,33 @@ mod tests {
         assert!(TraceLevel::Model < TraceLevel::Framework);
         assert!(TraceLevel::Framework < TraceLevel::System);
         assert!(TraceLevel::System < TraceLevel::Full);
-        assert_eq!(TraceLevel::parse("FRAMEWORK"), TraceLevel::Framework);
+    }
+
+    #[test]
+    fn parse_accepts_known_levels_case_insensitively() {
+        for (name, level) in [
+            ("none", TraceLevel::None),
+            ("model", TraceLevel::Model),
+            ("framework", TraceLevel::Framework),
+            ("system", TraceLevel::System),
+            ("full", TraceLevel::Full),
+        ] {
+            assert_eq!(TraceLevel::parse(name), Some(level));
+            assert_eq!(TraceLevel::parse(&name.to_ascii_uppercase()), Some(level));
+            // Mixed case too: "Model", "Framework", ...
+            let mut mixed = name.to_string();
+            mixed[..1].make_ascii_uppercase();
+            assert_eq!(TraceLevel::parse(&mixed), Some(level));
+            // as_str round-trips.
+            assert_eq!(TraceLevel::parse(level.as_str()), Some(level));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_levels() {
+        for bad in ["", "ful", "verbose", "FULL2", "model ", "all", "3"] {
+            assert_eq!(TraceLevel::parse(bad), None, "{bad:?} must be rejected");
+        }
     }
 
     #[test]

@@ -47,7 +47,7 @@ fn batched_results_identical_to_unbatched() {
     };
     let batched = run(
         &["aws_p3", "aws_g3", "ibm_p8"],
-        &BatcherConfig { max_batch_size: 12, max_wait_ms: 15.0 },
+        &BatcherConfig::new(12, 15.0),
     );
     let baseline = run(&["aws_p3"], &BatcherConfig::per_request());
 
@@ -134,7 +134,7 @@ impl BatchExecutor for FlakyExec {
 #[test]
 fn agent_death_mid_batch_requeues_exactly_once() {
     let w = Workload::generate(&Scenario::Online { count: 80 }, 5);
-    let cfg = BatcherConfig { max_batch_size: 8, max_wait_ms: 0.0 };
+    let cfg = BatcherConfig::new(8, 0.0);
     let batches = plan_batches(&w, &cfg, |r| Envelope {
         seq: r.id,
         trace_id: 0,
@@ -186,13 +186,132 @@ fn batching_metadata_reaches_the_report() {
     );
     job.seed = 3;
     let result = server
-        .evaluate_batched(&job, &BatcherConfig { max_batch_size: 8, max_wait_ms: 10.0 })
+        .evaluate_batched(&job, &BatcherConfig::new(8, 10.0))
         .unwrap();
     assert_eq!(result.outcome.outputs.len(), 120);
     assert_eq!(result.record.key.scenario, "diurnal");
     let report = server.report(&["MobileNet_v1_1.0_224".to_string()]);
     assert!(report.contains("Batching —"), "report missing batching section:\n{report}");
     assert!(report.contains("diurnal"), "{report}");
+}
+
+fn byte_envelope(r: &mlmodelscope::scenario::Request) -> Envelope {
+    Envelope {
+        seq: r.id,
+        trace_id: 0,
+        parent_span: None,
+        payload: Payload::Bytes(vec![r.id as u8]),
+    }
+}
+
+/// `max_batch_size = 1` must degenerate to per-request dispatch: one batch
+/// per request, no coalescing, no queue delay from batching.
+#[test]
+fn max_batch_size_one_degenerates_to_per_request_dispatch() {
+    let w = Workload::generate(&Scenario::Poisson { rate: 5000.0, count: 40 }, 8);
+    let cfg = BatcherConfig::new(1, 50.0);
+    let batches = plan_batches(&w, &cfg, byte_envelope);
+    assert_eq!(batches.len(), 40);
+    assert!(batches.iter().all(|b| b.len() == 1));
+    // Size-triggered flush at the request's own arrival: zero delay even
+    // with a huge wait window configured.
+    for b in &batches {
+        assert!(b.queue_delays_secs().iter().all(|d| *d == 0.0));
+    }
+    let pool: Vec<Arc<dyn BatchExecutor>> = vec![
+        Arc::new(HealthyExec { name: "a".into() }),
+        Arc::new(HealthyExec { name: "b".into() }),
+    ];
+    let outcome = Dispatcher::new(pool).dispatch(batches).unwrap();
+    assert_eq!(outcome.outputs.len(), 40);
+    for (i, env) in outcome.outputs.iter().enumerate() {
+        assert_eq!(env.seq, i as u64);
+    }
+    assert_eq!(outcome.batch_log.len(), 40, "one executed batch per request");
+}
+
+/// An empty workload plans zero batches and dispatches to an empty outcome
+/// — no hang, no error.
+#[test]
+fn empty_workload_produces_zero_batches() {
+    let w = Workload::generate(&Scenario::Online { count: 0 }, 1);
+    assert!(w.requests.is_empty());
+    let batches = plan_batches(&w, &BatcherConfig::default(), byte_envelope);
+    assert!(batches.is_empty());
+    let pool: Vec<Arc<dyn BatchExecutor>> = vec![Arc::new(HealthyExec { name: "a".into() })];
+    let outcome = Dispatcher::new(pool).dispatch(batches).unwrap();
+    assert!(outcome.outputs.is_empty());
+    assert!(outcome.batch_log.is_empty());
+    assert_eq!(outcome.requeued_batches, 0);
+    assert!(!outcome.aborted);
+}
+
+/// Every agent dead from the start: the dispatch must return a typed error
+/// (`DispatchError`) instead of hanging or panicking.
+#[test]
+fn all_agents_dead_is_a_typed_error_not_a_hang() {
+    struct AlwaysDead(&'static str);
+    impl BatchExecutor for AlwaysDead {
+        fn id(&self) -> String {
+            self.0.to_string()
+        }
+        fn execute(&self, _batch: &Batch) -> Result<BatchResult, String> {
+            Err("agent process died (injected)".into())
+        }
+    }
+    let w = Workload::generate(&Scenario::Online { count: 24 }, 2);
+    let batches = plan_batches(&w, &BatcherConfig::new(8, 0.0), byte_envelope);
+    let pool: Vec<Arc<dyn BatchExecutor>> =
+        vec![Arc::new(AlwaysDead("d1")), Arc::new(AlwaysDead("d2"))];
+    let err = Dispatcher::new(pool).dispatch(batches).unwrap_err();
+    assert!(
+        err.msg.contains("injected") || err.msg.contains("surviving"),
+        "unexpected error: {err}"
+    );
+    // And the same through the server path: a job whose only resolved
+    // agents are gone fails with NoAgent, not a hang.
+    let server = Server::standalone();
+    server.register_zoo();
+    let job = EvalJob::new("ResNet_v1_50", Scenario::Online { count: 4 });
+    assert!(matches!(
+        server.evaluate_batched(&job, &BatcherConfig::default()),
+        Err(mlmodelscope::server::ServerError::NoAgent { .. })
+    ));
+}
+
+/// A 2-tenant Mix through the batched server path: per-tenant identity
+/// survives into per-tenant latency samples, and the record carries the
+/// tenant summaries.
+#[test]
+fn mix_reports_per_tenant_latencies() {
+    let server = platform(&["aws_p3", "ibm_p8"]);
+    let mix = Scenario::Mix {
+        tenants: vec![
+            ("steady".into(), Scenario::FixedQps { qps: 400.0, count: 40 }),
+            ("bursty".into(), Scenario::Burst { burst_size: 40, period_s: 1.0, bursts: 1 }),
+        ],
+    };
+    let mut job = EvalJob::new("ResNet_v1_50", mix);
+    job.seed = 17;
+    let cfg = BatcherConfig::new(8, 5.0).with_fairness();
+    let result = server.evaluate_batched(&job, &cfg).unwrap();
+    assert!(!result.aborted);
+    assert_eq!(result.outcome.outputs.len(), 80);
+    for (i, env) in result.outcome.outputs.iter().enumerate() {
+        assert_eq!(env.seq, i as u64);
+    }
+    let steady = result.per_tenant.get("steady").expect("steady tenant tracked");
+    let bursty = result.per_tenant.get("bursty").expect("bursty tenant tracked");
+    assert_eq!(steady.len(), 40);
+    assert_eq!(bursty.len(), 40);
+    assert!(steady.p99() > 0.0 && bursty.p99() > 0.0);
+    assert_eq!(result.record.key.scenario, "mix");
+    assert_eq!(result.record.latencies.len(), 80);
+    // The stored metadata carries the per-tenant summaries + the policy.
+    let meta = &result.record.meta;
+    assert!(meta.get("tenants").is_some());
+    assert_eq!(meta.get_path("tenants.steady.count").unwrap().as_f64(), Some(40.0));
+    assert_eq!(meta.str_or("dispatch", ""), "fair_by_tenant");
 }
 
 /// TraceReplay feeds the batcher a recorded arrival log end to end.
@@ -204,7 +323,7 @@ fn trace_replay_through_batched_dispatch() {
     timestamps.extend((0..24).map(|i| 0.050 + 0.001 * i as f64));
     let mut job = EvalJob::new("BVLC_AlexNet", Scenario::TraceReplay { timestamps });
     job.seed = 9;
-    let cfg = BatcherConfig { max_batch_size: 16, max_wait_ms: 8.0 };
+    let cfg = BatcherConfig::new(16, 8.0);
     let result = server.evaluate_batched(&job, &cfg).unwrap();
     assert_eq!(result.outcome.outputs.len(), 48);
     // The clusters coalesce into near-full batches.

@@ -8,21 +8,19 @@ use mlmodelscope::scenario::{Scenario, Workload};
 use mlmodelscope::util::json::Json;
 use mlmodelscope::util::rng::{forall, Xorshift};
 
-fn rand_scenario(rng: &mut Xorshift) -> Scenario {
-    match rng.below(7) {
+/// A random single-item (batch-size-1) leaf scenario — the kind a `Mix`
+/// tenant is allowed to be.
+fn rand_leaf_scenario(rng: &mut Xorshift) -> Scenario {
+    match rng.below(6) {
         0 => Scenario::Online { count: 1 + rng.below(100) as usize },
         1 => Scenario::Poisson { rate: rng.range_f64(0.5, 500.0), count: 1 + rng.below(100) as usize },
-        2 => Scenario::Batched {
-            batch_size: 1 + rng.below(256) as usize,
-            batches: 1 + rng.below(16) as usize,
-        },
-        3 => Scenario::FixedQps { qps: rng.range_f64(0.5, 200.0), count: 1 + rng.below(100) as usize },
-        4 => Scenario::Burst {
+        2 => Scenario::FixedQps { qps: rng.range_f64(0.5, 200.0), count: 1 + rng.below(100) as usize },
+        3 => Scenario::Burst {
             burst_size: 1 + rng.below(32) as usize,
             period_s: rng.range_f64(0.01, 5.0),
             bursts: 1 + rng.below(8) as usize,
         },
-        5 => Scenario::TraceReplay {
+        4 => Scenario::TraceReplay {
             // Deliberately noisy capture: unsorted, may contain negatives.
             timestamps: (0..1 + rng.below(80))
                 .map(|_| rng.range_f64(-0.05, 3.0))
@@ -37,12 +35,44 @@ fn rand_scenario(rng: &mut Xorshift) -> Scenario {
     }
 }
 
+fn rand_scenario(rng: &mut Xorshift) -> Scenario {
+    match rng.below(8) {
+        0..=5 => rand_leaf_scenario(rng),
+        6 => Scenario::Batched {
+            batch_size: 1 + rng.below(256) as usize,
+            batches: 1 + rng.below(16) as usize,
+        },
+        _ => Scenario::Mix {
+            tenants: (0..1 + rng.below(3))
+                .map(|i| (format!("tenant{i}"), rand_leaf_scenario(rng)))
+                .collect(),
+        },
+    }
+}
+
+/// Requests a scenario is defined to generate (recursing into `Mix`).
+fn expected_requests(s: &Scenario) -> usize {
+    match s {
+        Scenario::Batched { batches, .. } => *batches,
+        Scenario::Burst { burst_size, bursts, .. } => burst_size * bursts,
+        Scenario::TraceReplay { timestamps } => timestamps.len(),
+        Scenario::Online { count }
+        | Scenario::Poisson { count, .. }
+        | Scenario::FixedQps { count, .. }
+        | Scenario::Diurnal { count, .. } => *count,
+        Scenario::Mix { tenants } => tenants.iter().map(|(_, t)| expected_requests(t)).sum(),
+    }
+}
+
 #[test]
 fn scenario_json_roundtrip_property() {
     forall(0xA11CE, 200, |rng| {
         let s = rand_scenario(rng);
         let back = Scenario::from_json(&s.to_json()).expect("roundtrip");
-        // Counts survive exactly; rates within float-repr tolerance.
+        // Full structural equality: every field of every variant (including
+        // `Mix` tenants, recursively) survives the JSON round trip exactly
+        // — the in-memory Json value keeps f64s bit-identical.
+        assert_eq!(back, s);
         assert_eq!(back.name(), s.name());
         assert_eq!(back.total_items(), s.total_items());
         assert_eq!(back.batch_size(), s.batch_size());
@@ -55,16 +85,7 @@ fn workload_invariants_property() {
         let s = rand_scenario(rng);
         let w = Workload::generate(&s, rng.next_u64());
         // Request count matches the scenario definition.
-        let expect = match &s {
-            Scenario::Batched { batches, .. } => *batches,
-            Scenario::Burst { burst_size, bursts, .. } => burst_size * bursts,
-            Scenario::TraceReplay { timestamps } => timestamps.len(),
-            Scenario::Online { count }
-            | Scenario::Poisson { count, .. }
-            | Scenario::FixedQps { count, .. }
-            | Scenario::Diurnal { count, .. } => *count,
-        };
-        assert_eq!(w.requests.len(), expect);
+        assert_eq!(w.requests.len(), expected_requests(&s));
         // Arrival times are non-decreasing and non-negative; ids unique.
         let mut last = 0.0f64;
         let mut seen = std::collections::HashSet::new();
@@ -78,6 +99,16 @@ fn workload_invariants_property() {
         // `total_items` is exactly the sum of per-request batch sizes.
         let items: usize = w.requests.iter().map(|r| r.batch_size).sum();
         assert_eq!(items, s.total_items());
+        // Tenant tagging: a Mix preserves each tenant's request count; a
+        // non-mix workload is entirely tenant 0.
+        if let Scenario::Mix { tenants } = &s {
+            for (ti, (_, sub)) in tenants.iter().enumerate() {
+                let n = w.requests.iter().filter(|r| r.tenant == ti as u32).count();
+                assert_eq!(n, expected_requests(sub), "tenant {ti} lost requests");
+            }
+        } else {
+            assert!(w.requests.iter().all(|r| r.tenant == 0));
+        }
     });
 }
 
@@ -125,6 +156,30 @@ fn tensor_stack_unstack_property() {
         for (orig, part) in tensors.iter().zip(&parts) {
             assert_eq!(&orig.data, &part.data);
         }
+    });
+}
+
+#[test]
+fn eval_key_json_roundtrip_property() {
+    forall(0xE7A1, 200, |rng| {
+        let scenario = match rng.below(4) {
+            0 => "online".to_string(),
+            1 => "mix".to_string(),
+            // Frontier keys bake the SLO into the scenario string.
+            2 => format!("slo:p99<={}.0ms", 1 + rng.below(100)),
+            _ => rng.ident(10),
+        };
+        let key = EvalKey {
+            model: rng.ident(8),
+            model_version: format!("{}.{}.{}", rng.below(3), rng.below(20), rng.below(10)),
+            framework: rng.ident(6),
+            framework_version: format!("{}.{}.{}", rng.below(3), rng.below(20), rng.below(10)),
+            system: rng.ident(5),
+            device: if rng.below(2) == 0 { "cpu" } else { "gpu" }.into(),
+            scenario,
+            batch_size: 1 + rng.below(512) as usize,
+        };
+        assert_eq!(EvalKey::from_json(&key.to_json()), key);
     });
 }
 
