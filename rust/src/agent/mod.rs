@@ -211,7 +211,10 @@ impl Agent {
             .data
             .synthetic_dataset(&req.manifest.name, 4.min(batch.max(1)), res)
             .map_err(|e| format!("dataset: {e}"))?;
-        let pre_span = self.tracer.start(trace_id, root_id, TraceLevel::Model, "preprocess");
+        let mut pre_span = self.tracer.start(trace_id, root_id, TraceLevel::Model, "preprocess");
+        if let Some(s) = pre_span.as_mut() {
+            s.tag("stage", "preprocessing");
+        }
         // Real (non-simulated) agents serve artifacts compiled for a fixed
         // input size; retarget the manifest's resize step to it so the
         // preprocessing path is still exercised end to end.
@@ -250,13 +253,26 @@ impl Agent {
         let run_start = clock.now_ns();
         for r in &workload.requests {
             let span = self.tracer.start(trace_id, root_id, TraceLevel::Model, "predict");
+            let span_id = span.as_ref().map(|s| s.id());
             let t0 = clock.now_ns();
             let out = self
                 .predictor
                 .predict(handle, &batched, &opts)
                 .map_err(|e| e.to_string())?;
-            // Post-process (top-K) — part of the measured request.
+            // Post-process (top-K) — part of the measured request, with its
+            // own span so pre/post-processing attributes separately from
+            // model compute.
+            let post_span = self.tracer.start(
+                trace_id,
+                span_id.or(root_id),
+                TraceLevel::Model,
+                "postprocess",
+            );
             let _preds = crate::postprocess::run_pipeline(&req.manifest.outputs[0].steps, &out);
+            if let Some(mut p) = post_span {
+                p.tag("stage", "postprocessing");
+                p.finish();
+            }
             let dt = (clock.now_ns() - t0) as f64 / 1e9;
             if let Some(mut s) = span {
                 s.tag("request", r.id.to_string());
@@ -486,6 +502,22 @@ impl crate::batcher::BatchExecutor for BatchSession {
             self.agent
                 .tracer
                 .start(self.trace_id, None, TraceLevel::Model, "batch_predict");
+        // At FRAMEWORK+ levels, nest the simulator's layer/kernel spans
+        // under this batch's span so batched serving traces carry the same
+        // model-execution depth as the classic path (attribution can then
+        // descend from queueing into the dominant layer). Below that level
+        // the attach is skipped — publish_layer does per-layer tag work
+        // whenever a tracer is attached, which the hot path shouldn't pay
+        // for spans that would be filtered anyway.
+        if self.agent.tracer.enabled(TraceLevel::Framework) {
+            if let Some(sim) = self.agent.as_sim() {
+                sim.attach_tracer(
+                    self.agent.tracer.clone(),
+                    self.trace_id,
+                    span.as_ref().map(|s| s.id()),
+                );
+            }
+        }
         let t0 = clock.now_ns();
         let out = self
             .agent
@@ -494,6 +526,8 @@ impl crate::batcher::BatchExecutor for BatchSession {
             .map_err(|e| e.to_string())?;
         let latency_s = (clock.now_ns() - t0) as f64 / 1e9;
         if let Some(mut s) = span {
+            s.tag("stage", "compute");
+            s.tag("tenant", batch.tenant.to_string());
             s.tag("batch_index", batch.index.to_string());
             s.tag("occupancy", batch.envelopes.len().to_string());
             s.tag("queue_delay_ms_max", {

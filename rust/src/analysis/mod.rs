@@ -350,6 +350,34 @@ pub fn slo_frontier_table(models: &[String], db: &EvalDb) -> Table {
     t
 }
 
+/// Bottleneck section: aggregate the traces behind the models' stored
+/// records ([`crate::traceanalysis::profile`] across every record carrying
+/// a non-empty trace) and render self-time attribution + the automated
+/// bottleneck verdict. `None` when no record has a usable trace.
+pub fn bottleneck_section(
+    models: &[String],
+    db: &EvalDb,
+    traces: &crate::traceserver::TraceServer,
+    top_k: usize,
+) -> Option<String> {
+    let mut timelines = Vec::new();
+    for m in models {
+        for r in db.latest(&EvalQuery::model(m)) {
+            if let Some(tid) = r.trace_id {
+                let tl = traces.timeline(tid);
+                if !tl.is_empty() {
+                    timelines.push(tl);
+                }
+            }
+        }
+    }
+    if timelines.is_empty() {
+        return None;
+    }
+    let profile = crate::traceanalysis::profile(&timelines, top_k);
+    Some(profile.render("stored evaluation traces"))
+}
+
 /// Full analysis report for a set of models — the analysis workflow's
 /// output artifact (step e).
 pub fn full_report(models: &[String], db: &EvalDb) -> String {
@@ -369,6 +397,20 @@ pub fn full_report(models: &[String], db: &EvalDb) -> String {
     let frontier = slo_frontier_table(models, db);
     if frontier.row_count() > 0 {
         out.push_str(&frontier.render());
+    }
+    out
+}
+
+/// [`full_report`] plus the bottleneck-attribution section, for callers
+/// that hold the trace server (the `mlms` server's report endpoint does).
+pub fn full_report_with_traces(
+    models: &[String],
+    db: &EvalDb,
+    traces: &crate::traceserver::TraceServer,
+) -> String {
+    let mut out = full_report(models, db);
+    if let Some(section) = bottleneck_section(models, db, traces, 5) {
+        out.push_str(&section);
     }
     out
 }
@@ -613,6 +655,55 @@ mod tests {
         assert!(with.contains("SLO frontier"), "{with}");
         let without = full_report(&["mobilenet".into()], &db);
         assert!(!without.contains("SLO frontier"));
+    }
+
+    #[test]
+    fn bottleneck_section_appears_when_records_carry_traces() {
+        use crate::tracing::{Span, SpanSink, TraceLevel as TL};
+        let db = seed_db();
+        let traces = crate::traceserver::TraceServer::new();
+        // Records without traces → no section.
+        assert!(bottleneck_section(&["resnet50".into()], &db, &traces, 5).is_none());
+        assert!(!full_report_with_traces(&["resnet50".into()], &db, &traces)
+            .contains("Bottleneck attribution"));
+        // A record pointing at a real trace → section + verdict.
+        let trace_id = 424242;
+        let ms = |v: f64| (v * 1e6) as u64;
+        for (id, parent, name, level, s, e) in [
+            (1, None, "evaluate", TL::Model, 0.0, 10.0),
+            (2, Some(1), "fc6", TL::Framework, 1.0, 9.0),
+            (3, Some(2), "sgemm", TL::System, 1.0, 8.0),
+        ] {
+            traces.publish(Span {
+                trace_id,
+                span_id: id,
+                parent_id: parent,
+                name: name.into(),
+                level,
+                start_ns: ms(s),
+                end_ns: ms(e),
+                tags: Vec::new(),
+            });
+        }
+        let key = EvalKey {
+            model: "resnet50".into(),
+            model_version: "1.0.0".into(),
+            framework: "TensorFlow".into(),
+            framework_version: "1.15.0".into(),
+            system: "aws_p3".into(),
+            device: "gpu".into(),
+            scenario: "traced".into(),
+            batch_size: 1,
+        };
+        let mut r = EvalRecord::new(key, vec![0.01; 5], 100.0);
+        r.trace_id = Some(trace_id);
+        db.put(r);
+        let section = bottleneck_section(&["resnet50".into()], &db, &traces, 5).unwrap();
+        assert!(section.contains("bottleneck verdict"), "{section}");
+        assert!(section.contains("sgemm"), "{section}");
+        let rep = full_report_with_traces(&["resnet50".into()], &db, &traces);
+        assert!(rep.contains("Bottleneck attribution"), "{rep}");
+        assert!(rep.contains("Table 2"), "classic sections still present");
     }
 
     #[test]

@@ -613,6 +613,24 @@ struct SimBatch {
     items: Vec<(u64, f64)>,
 }
 
+/// One batch as the virtual-time replay scheduled it — the queueing facts
+/// ([`crate::server::Server::evaluate_batched`] turns these into
+/// `queue_wait`/`batch_service` spans so bottleneck attribution covers the
+/// serving stack).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledBatch {
+    /// Plan index of the batch.
+    pub index: u64,
+    /// When the batch became available (its formed time), virtual seconds.
+    pub formed_at: f64,
+    /// When a server started it (`≥ formed_at`; the gap is queueing).
+    pub start: f64,
+    pub completion: f64,
+    /// Virtual server slot the replay ran it on (deterministic — not the
+    /// OS thread the real dispatcher happened to use).
+    pub server: usize,
+}
+
 /// Deterministic virtual-time queueing replay of a batch plan over `n`
 /// servers.
 ///
@@ -640,6 +658,8 @@ pub struct QueueSim {
     servers: Vec<f64>,
     policy: DispatchPolicy,
     tenant_started: BTreeMap<u32, usize>,
+    /// Start/completion facts, in schedule order.
+    schedule: Vec<ScheduledBatch>,
 }
 
 impl QueueSim {
@@ -666,6 +686,7 @@ impl QueueSim {
             servers: vec![0.0; servers.max(1)],
             policy,
             tenant_started: BTreeMap::new(),
+            schedule: Vec::with_capacity(meta.len()),
             meta,
         }
     }
@@ -673,6 +694,12 @@ impl QueueSim {
     /// All planned batches have been scheduled.
     pub fn is_complete(&self) -> bool {
         self.n_started == self.meta.len()
+    }
+
+    /// The batches scheduled so far (all of them once [`QueueSim::is_complete`]),
+    /// in the order the replay started them.
+    pub fn schedule_log(&self) -> &[ScheduledBatch] {
+        &self.schedule
     }
 
     /// Feed the observed service time for batch `index` and advance the
@@ -705,6 +732,13 @@ impl QueueSim {
             self.servers[si] = completion;
             self.started[next] = true;
             self.n_started += 1;
+            self.schedule.push(ScheduledBatch {
+                index: next as u64,
+                formed_at: self.meta[next].formed_at,
+                start,
+                completion,
+                server: si,
+            });
             *self.tenant_started.entry(self.meta[next].tenant).or_insert(0) +=
                 self.meta[next].items.len();
             for (seq, arrival) in &self.meta[next].items {
@@ -1041,6 +1075,17 @@ mod tests {
         assert!(sim.offer(1, 1.0).is_empty());
         let done = sim.offer(0, 1.0);
         assert!(sim.is_complete());
+        // The schedule log records the queueing facts: starts back-to-back
+        // on the single server, completion = start + service.
+        let sched = sim.schedule_log();
+        assert_eq!(sched.len(), 3);
+        for (i, s) in sched.iter().enumerate() {
+            assert_eq!(s.index, i as u64);
+            assert_eq!(s.server, 0);
+            assert!((s.start - i as f64).abs() < 1e-9, "{s:?}");
+            assert!((s.completion - s.start - 1.0).abs() < 1e-9);
+            assert!(s.start >= s.formed_at);
+        }
         let mut lat: Vec<(u64, f64)> = done.iter().map(|c| (c.seq, c.latency_s)).collect();
         lat.sort_by(|a, b| a.0.cmp(&b.0));
         assert_eq!(lat.len(), 3);

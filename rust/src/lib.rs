@@ -19,7 +19,10 @@
 //!   cross-request dynamic batching and load-balanced multi-agent dispatch
 //!   ([`batcher`]);
 //! - **inspection**: across-stack tracing ([`tracing`]) aggregated by a
-//!   trace server ([`traceserver`]), with model/framework/system levels;
+//!   trace server ([`traceserver`]), with model/framework/system levels,
+//!   and attributed by the bottleneck engine ([`traceanalysis`]) — span
+//!   trees with self time, critical-path extraction, multi-run signature
+//!   aggregation, and an automated bottleneck verdict;
 //! - **analysis**: the evaluation database ([`evaldb`]) and the automated
 //!   analysis + reporting workflow ([`analysis`]);
 //! - **models**: the 37-model zoo of the paper's Table 2 ([`zoo`]) — five
@@ -56,6 +59,7 @@ pub mod batcher;
 pub mod pipeline;
 pub mod scenario;
 
+pub mod traceanalysis;
 pub mod tracing;
 pub mod traceserver;
 

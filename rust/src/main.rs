@@ -31,6 +31,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "analyze", about: "analysis workflow over a stored eval DB" },
     Command { name: "zoo", about: "list built-in models / systems" },
     Command { name: "trace", about: "evaluate with tracing and render the timeline" },
+    Command {
+        name: "trace-analyze",
+        about: "batched evaluation + across-stack bottleneck attribution",
+    },
     Command { name: "slo-search", about: "max sustainable QPS under a latency SLO" },
     Command { name: "client", about: "talk to a running mlms server over REST" },
 ];
@@ -52,6 +56,7 @@ fn main() {
         "analyze" => cmd_analyze(&args),
         "zoo" => cmd_zoo(&args),
         "trace" => cmd_trace(&args),
+        "trace-analyze" => cmd_trace_analyze(&args),
         "slo-search" => cmd_slo_search(&args),
         "client" => cmd_client(&args),
         _ => {
@@ -353,6 +358,96 @@ fn cmd_trace(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Across-stack bottleneck attribution: run a model through batched
+/// dispatch N times, aggregate the serving-stack traces (batching /
+/// queueing / service) and — at `framework`+ levels — the model-execution
+/// traces, and print self-time attribution, the top contributors, and the
+/// automated bottleneck verdict.
+///
+/// ```sh
+/// mlms trace-analyze --model ResNet_v1_50 --runs 3 --rate 500 --count 128 \
+///     --batch 8 --wait-ms 5 --trace-level full --top 8
+/// ```
+fn cmd_trace_analyze(args: &Args) -> i32 {
+    use mlmodelscope::batcher::BatcherConfig;
+    let model = match args.require("model") {
+        Ok(m) => m.to_string(),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // Attribution wants the whole stack by default; `--trace-level` still
+    // narrows it.
+    let raw_level = args.opt_or("trace-level", "full");
+    let level = match TraceLevel::parse(raw_level) {
+        Some(TraceLevel::None) | None => {
+            eprintln!("invalid --trace-level {raw_level:?} (model|framework|system|full — attribution needs spans)");
+            return 2;
+        }
+        Some(l) => l,
+    };
+    let server = build_platform(args, level);
+    let runs = args.usize_or("runs", 3).max(1);
+    let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
+    cfg.fair = args.flag("fair");
+    // Default workload: a Poisson stream brisk enough that queueing and
+    // batching actually show up in the attribution.
+    let scenario = if args.opt("scenario").is_some() {
+        parse_scenario(args)
+    } else {
+        Scenario::Poisson {
+            rate: args.f64_or("rate", 500.0),
+            count: args.usize_or("count", 128),
+        }
+    };
+    let mut serving = Vec::new();
+    let mut sessions = Vec::new();
+    for run in 0..runs {
+        let mut job = EvalJob::new(&model, scenario.clone());
+        job.trace_level = level;
+        job.seed = args.u64_or("seed", 42).wrapping_add(run as u64);
+        if let Some(sys) = args.opt("system") {
+            job.requirements = SystemRequirements::on_system(sys);
+        }
+        match server.evaluate_batched(&job, &cfg) {
+            Ok(out) => {
+                if let Some(tid) = out.serving_trace_id {
+                    serving.push(server.traces.timeline(tid));
+                }
+                for tid in &out.session_trace_ids {
+                    let tl = server.traces.timeline(*tid);
+                    if !tl.is_empty() {
+                        sessions.push(tl);
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("trace-analyze failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let top = args.usize_or("top", 8);
+    if serving.is_empty() {
+        eprintln!("no serving trace captured");
+        return 1;
+    }
+    let profile = mlmodelscope::traceanalysis::profile(&serving, top);
+    println!(
+        "{}",
+        profile.render(&format!("{model} serving stack, {runs} run(s) (batching / queueing / compute)"))
+    );
+    if !sessions.is_empty() {
+        let deep = mlmodelscope::traceanalysis::profile(&sessions, top);
+        println!(
+            "{}",
+            deep.render(&format!("{model} model execution ({} agent session(s))", sessions.len()))
+        );
+    }
+    0
 }
 
 /// SLO-driven benchmarking: find the maximum sustainable QPS for a model

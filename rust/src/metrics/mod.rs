@@ -124,6 +124,32 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
     sorted[rank.min(sorted.len() - 1)]
 }
 
+/// Compact summary of a sample set — the fields every aggregate view
+/// (per-signature span profiles, per-tenant tails) reports. Built once from
+/// the raw samples so all consumers share [`percentile`]'s definitions (F2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SummaryStats {
+    pub count: usize,
+    /// Mean (`NaN` on empty input, like [`percentile`]).
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl SummaryStats {
+    pub fn of(samples: &[f64]) -> SummaryStats {
+        if samples.is_empty() {
+            return SummaryStats { count: 0, mean: f64::NAN, p50: f64::NAN, p99: f64::NAN };
+        }
+        SummaryStats {
+            count: samples.len(),
+            mean: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50: percentile(samples, 50.0),
+            p99: percentile(samples, 99.0),
+        }
+    }
+}
+
 /// A fixed-boundary histogram for cheap hot-path latency recording (used by
 /// the agent where keeping every raw sample would be a scaling hazard, F4).
 #[derive(Debug, Clone)]
@@ -455,6 +481,19 @@ mod tests {
         }
         assert_eq!(hc.count(), 100);
         assert!((hc.mean() - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_stats_match_percentile_definitions() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = SummaryStats::of(&xs);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert_eq!(s.p50, percentile(&xs, 50.0));
+        assert_eq!(s.p99, percentile(&xs, 99.0));
+        let empty = SummaryStats::of(&[]);
+        assert_eq!(empty.count, 0);
+        assert!(empty.mean.is_nan() && empty.p50.is_nan() && empty.p99.is_nan());
     }
 
     #[test]

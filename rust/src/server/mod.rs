@@ -18,6 +18,7 @@ use crate::batcher::{
     batching_series, plan_batches, Batch, BatchExecutor, BatcherConfig, Dispatcher,
     DispatchOutcome, DispatchWatch, QueueSim,
 };
+use crate::tracing::{SimClock, Span, Tracer};
 use crate::evaldb::{EvalDb, EvalKey, EvalRecord};
 use crate::manifest::SystemRequirements;
 use crate::metrics::{BatchingSeries, TenantLatencies};
@@ -77,6 +78,13 @@ pub struct BatchedEval {
     /// the record is then *not* stored in the evaluation database and
     /// covers only the completed prefix.
     pub aborted: bool,
+    /// Trace holding the serving-stack spans (batching_wait / queue_wait /
+    /// batch_service per batch, from the virtual-time schedule). `None`
+    /// when the job's trace level is `None` or nothing was scheduled.
+    pub serving_trace_id: Option<u64>,
+    /// Per-agent session traces (the `batch_predict` spans on each agent's
+    /// own clock) — the model-execution side of the attribution.
+    pub session_trace_ids: Vec<u64>,
 }
 
 /// Builds a [`DispatchWatch`] for a batched evaluation, given the batch
@@ -84,6 +92,15 @@ pub struct BatchedEval {
 /// probe runner uses this to wire its early-abort judge to the exact plan
 /// the server executes.
 pub type WatchFactory<'a> = &'a dyn Fn(&[Batch], usize) -> Arc<dyn DispatchWatch>;
+
+/// Planning facts for one batch, captured before the dispatcher consumes
+/// the plan; indexed by batch index for serving-span emission.
+struct BatchFacts {
+    opened_at: f64,
+    formed_at: f64,
+    occupancy: usize,
+    tenant: u32,
+}
 
 /// The server.
 pub struct Server {
@@ -312,6 +329,17 @@ impl Server {
         let mut replay = QueueSim::new(&batches, locals.len(), cfg.policy());
         let is_probe = watch.is_some();
         let watch = watch.map(|f| f(&batches, locals.len()));
+        // Per-batch planning facts, captured before the dispatcher consumes
+        // the plan — the serving-span emission needs them afterwards.
+        let batch_facts: Vec<BatchFacts> = batches
+            .iter()
+            .map(|b| BatchFacts {
+                opened_at: b.opened_at_secs,
+                formed_at: b.formed_at_secs,
+                occupancy: b.len(),
+                tenant: b.tenant,
+            })
+            .collect();
 
         let mut executors: Vec<Arc<dyn BatchExecutor>> = Vec::new();
         let mut trace_ids = Vec::new();
@@ -348,6 +376,16 @@ impl Server {
             by_seq.insert(c.seq, c.latency_s);
             per_tenant.record(&tenant_name(c.tenant), c.latency_s);
         }
+        // Serving-stack spans: the virtual-time schedule, republished as a
+        // trace (batching_wait → queue_wait → batch_service per batch) so
+        // bottleneck attribution covers queueing and dispatch, not just
+        // model internals. Probes emit too — an SLO search's failing probe
+        // is exactly the trace worth attributing.
+        let serving_trace_id = if job.trace_level >= TraceLevel::Model {
+            self.publish_serving_spans(job, &batch_facts, &replay, &tenant_name, is_probe)
+        } else {
+            None
+        };
         // One latency per completed output (aborted runs cover a prefix).
         let latencies: Vec<f64> = outcome
             .outputs
@@ -381,7 +419,10 @@ impl Server {
             batch_size: cfg.max_batch_size.max(1),
         };
         let mut record = EvalRecord::new(key, latencies, throughput);
-        record.trace_id = trace_ids.first().copied();
+        // The serving trace is the record's primary trace (it carries the
+        // queueing attribution); session traces remain reachable through
+        // the returned `session_trace_ids`.
+        record.trace_id = serving_trace_id.or_else(|| trace_ids.first().copied());
         let mut meta = vec![
             ("batching", series.to_json()),
             (
@@ -406,6 +447,9 @@ impl Server {
         if matches!(job.scenario, Scenario::Mix { .. }) {
             meta.push(("tenants", per_tenant.to_json()));
         }
+        if let Some(tid) = serving_trace_id {
+            meta.push(("serving_trace_id", Json::num(tid as f64)));
+        }
         record.meta = Json::obj(meta);
         let mut record_out = record.clone();
         // Probes (watched runs) and aborted runs are not benchmark
@@ -414,7 +458,105 @@ impl Server {
             record_out.seq = self.evaldb.put(record);
         }
         let aborted = outcome.aborted;
-        Ok(BatchedEval { record: record_out, series, outcome, per_tenant, aborted })
+        Ok(BatchedEval {
+            record: record_out,
+            series,
+            outcome,
+            per_tenant,
+            aborted,
+            serving_trace_id,
+            session_trace_ids: trace_ids,
+        })
+    }
+
+    /// Republish the virtual-time queueing schedule as spans in a fresh
+    /// trace: one `serve` root (self time = idle), one `batch` span per
+    /// scheduled batch with `batching_wait` (open → formed), `queue_wait`
+    /// (formed → start) and `batch_service` (start → completion) children,
+    /// each tagged with its serving stage and tenant so
+    /// [`crate::traceanalysis`] can attribute the serving stack.
+    fn publish_serving_spans(
+        &self,
+        job: &EvalJob,
+        batch_facts: &[BatchFacts],
+        replay: &QueueSim,
+        tenant_name: &dyn Fn(u32) -> String,
+        is_probe: bool,
+    ) -> Option<u64> {
+        let sched = replay.schedule_log();
+        if sched.is_empty() {
+            return None;
+        }
+        // The tracer is used purely as an id allocator + publisher; span
+        // intervals come pre-built from the schedule's virtual times
+        // (§4.4.4: trace timestamps need not be wall clock).
+        let tracer = Tracer::new(
+            TraceLevel::Full,
+            Arc::new(SimClock::new()),
+            self.traces.clone(),
+        );
+        let trace_id = tracer.new_trace();
+        let root_id = tracer.new_trace();
+        let ns = |s: f64| (s.max(0.0) * 1e9).round() as u64;
+        let mut t_start = f64::INFINITY;
+        let mut t_end = 0.0f64;
+        for s in sched {
+            let b = &batch_facts[s.index as usize];
+            let tenant = tenant_name(b.tenant);
+            t_start = t_start.min(b.opened_at);
+            t_end = t_end.max(s.completion);
+            let batch_id = tracer.new_trace();
+            tracer.publish(Span {
+                trace_id,
+                span_id: batch_id,
+                parent_id: Some(root_id),
+                name: "batch".into(),
+                level: TraceLevel::Model,
+                start_ns: ns(b.opened_at),
+                end_ns: ns(s.completion),
+                tags: vec![
+                    ("batch_index".into(), s.index.to_string()),
+                    ("occupancy".into(), b.occupancy.to_string()),
+                    ("tenant".into(), tenant.clone()),
+                    ("agent_slot".into(), s.server.to_string()),
+                ],
+            });
+            let child = |name: &str, stage: &str, s0: f64, s1: f64| {
+                if s1 > s0 {
+                    tracer.publish(Span {
+                        trace_id,
+                        span_id: tracer.new_trace(),
+                        parent_id: Some(batch_id),
+                        name: name.into(),
+                        level: TraceLevel::Model,
+                        start_ns: ns(s0),
+                        end_ns: ns(s1),
+                        tags: vec![
+                            ("stage".into(), stage.into()),
+                            ("tenant".into(), tenant.clone()),
+                        ],
+                    });
+                }
+            };
+            child("batching_wait", "batching", b.opened_at, b.formed_at);
+            child("queue_wait", "queueing", s.formed_at, s.start);
+            child("batch_service", "compute", s.start, s.completion);
+        }
+        tracer.publish(Span {
+            trace_id,
+            span_id: root_id,
+            parent_id: None,
+            name: "serve".into(),
+            level: TraceLevel::Model,
+            start_ns: ns(t_start),
+            end_ns: ns(t_end),
+            tags: vec![
+                ("stage".into(), "idle".into()),
+                ("scenario".into(), job.scenario.name().to_string()),
+                ("probe".into(), is_probe.to_string()),
+            ],
+        });
+        Some(trace_id)
     }
 
     /// Standard simulation platform: the four Table-1 systems, GPU + CPU
@@ -443,7 +585,7 @@ impl Server {
     }
 
     pub fn report(&self, models: &[String]) -> String {
-        crate::analysis::full_report(models, &self.evaldb)
+        crate::analysis::full_report_with_traces(models, &self.evaldb, &self.traces)
     }
 
     /// Build the REST API router (F10; consumed by web/CLI clients).
@@ -683,6 +825,47 @@ mod tests {
         // And the batched run actually coalesced.
         assert!(batched.series.mean_occupancy() > 1.5);
         assert_eq!(baseline.series.mean_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn batched_dispatch_emits_serving_stack_spans() {
+        let server = testbed();
+        let mut job = EvalJob::new(
+            "ResNet_v1_50",
+            Scenario::Poisson { rate: 2000.0, count: 64 },
+        );
+        job.seed = 7;
+        let cfg = BatcherConfig::new(8, 10.0);
+        let result = server.evaluate_batched(&job, &cfg).unwrap();
+        let tid = result.serving_trace_id.expect("serving trace emitted");
+        assert_eq!(result.record.trace_id, Some(tid));
+        assert_eq!(result.record.meta.f64_or("serving_trace_id", 0.0) as u64, tid);
+        assert_eq!(result.session_trace_ids.len(), 2, "one per agent session");
+        let tl = server.traces.timeline(tid);
+        assert!(!tl.is_empty());
+        let names: std::collections::HashSet<&str> =
+            tl.spans.iter().map(|s| s.name.as_str()).collect();
+        assert!(
+            names.contains("serve") && names.contains("batch") && names.contains("batch_service"),
+            "{names:?}"
+        );
+        // Every batch_service span is stage-tagged and parented to a batch.
+        for s in tl.spans.iter().filter(|s| s.name == "batch_service") {
+            assert_eq!(s.tag("stage"), Some("compute"));
+            assert!(s.parent_id.is_some());
+        }
+        // Attribution over the serving trace: verdict exists and the
+        // critical path never exceeds wall clock.
+        let p = crate::traceanalysis::profile(&[tl], 5);
+        assert!(p.critical_path_ms <= p.total_ms + 1e-9, "{} > {}", p.critical_path_ms, p.total_ms);
+        assert!(p.dominant_stage().is_some());
+        // A TraceLevel::None job emits no serving trace.
+        let mut quiet = job.clone();
+        quiet.trace_level = TraceLevel::None;
+        quiet.seed = 8;
+        let r2 = server.evaluate_batched(&quiet, &cfg).unwrap();
+        assert!(r2.serving_trace_id.is_none());
+        assert_eq!(r2.record.trace_id, r2.session_trace_ids.first().copied());
     }
 
     #[test]

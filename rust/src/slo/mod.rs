@@ -221,6 +221,11 @@ pub struct SloProbe {
     pub achieved_ms: f64,
     /// Requests the judge scored (may be < the probe count when aborted).
     pub samples: usize,
+    /// Serving-stack trace of the probe (batching/queueing/service spans)
+    /// — the input to bottleneck attribution when a probe fails and the
+    /// question becomes *where* the latency went. `None` when the job ran
+    /// with tracing off.
+    pub trace_id: Option<u64>,
 }
 
 /// Search configuration.
@@ -327,6 +332,7 @@ pub fn probe(
         aborted: result.aborted,
         achieved_ms,
         samples,
+        trace_id: result.serving_trace_id,
     })
 }
 
@@ -529,6 +535,15 @@ mod tests {
         assert!(p.samples < 64, "scored {} of 64", p.samples);
         // Aborted probes leave nothing in the evaluation database.
         assert_eq!(server.evaldb.len(), 0);
+        // But the probe's serving-stack trace survives for attribution:
+        // the question after a failed probe is *where* the latency went.
+        let tl = server.traces.timeline(p.trace_id.expect("probe trace"));
+        assert!(
+            tl.spans.iter().any(|s| s.name == "batch_service"),
+            "probe trace carries serving-stack spans"
+        );
+        let profile = crate::traceanalysis::profile(&[tl], 3);
+        assert!(profile.critical_path_ms <= profile.total_ms + 1e-9);
     }
 
     #[test]

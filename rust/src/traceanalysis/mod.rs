@@ -1,0 +1,880 @@
+//! Across-stack bottleneck attribution — the layer that turns captured
+//! spans into the paper's inspection workflow.
+//!
+//! The paper's signature claim is that leveled tracing "gives a holistic
+//! view of model execution and helps pinpoint bottlenecks" across HW/SW
+//! stack levels. Capturing spans ([`crate::tracing`]) and assembling
+//! timelines ([`crate::traceserver`]) is not attribution, though: to *name*
+//! the bottleneck you need, per span, the time it spent itself (not in its
+//! children), per level/stage totals, the critical path through concurrent
+//! execution, and aggregation across repeated runs so one noisy trace
+//! doesn't decide the verdict. This module computes all four:
+//!
+//! - [`SpanTree`]: a repaired tree from a flat span set — orphans (parent
+//!   id absent from the trace) become roots, children extending outside
+//!   their parent are clipped for accounting, inverted spans clamp to zero
+//!   duration; every repair is counted in [`RepairStats`] instead of
+//!   silently absorbed.
+//! - **Self time**: `duration − union(child intervals ∩ span)` — what the
+//!   span itself cost. Non-negative by construction, and for disjoint
+//!   in-parent children `self + Σ children == duration` (pinned by the
+//!   property tests).
+//! - [`SpanTree::critical_path`]: the backward walk from the latest end —
+//!   at every instant the deepest span that determines completion — giving
+//!   non-overlapping, time-monotone segments whose total is ≤ wall clock
+//!   (equal when one root covers the trace).
+//! - [`profile`]: aggregation across ≥ 1 timelines by *span signature*
+//!   (name + level + a stable tag subset) into count/mean/p50/p99 self-time
+//!   stats, per-level and per-stage attribution, and a
+//!   [`TraceProfile::verdict`] naming the dominant stage (queueing vs model
+//!   compute vs pre/post-processing) and its top contributor. Aggregation
+//!   is order-invariant under span shuffling.
+//!
+//! Stages come from the `stage` span tag when present (the serving-stack
+//! spans emitted by [`crate::server::Server::evaluate_batched`] tag
+//! themselves) and fall back to level/name heuristics for model-execution
+//! traces.
+
+use crate::benchkit::Table;
+use crate::metrics::SummaryStats;
+use crate::tracing::{Span, TraceLevel};
+use crate::traceserver::Timeline;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One node of the repaired span tree.
+#[derive(Debug, Clone)]
+pub struct SpanNode {
+    pub span: Span,
+    /// Indices into [`SpanTree::nodes`], sorted by (start, span id).
+    pub children: Vec<usize>,
+    /// Self time: duration minus the union of child intervals (clipped to
+    /// the span). Computed at build time.
+    pub self_ns: u64,
+}
+
+/// What had to be repaired while building the tree. Surfaced (not hidden)
+/// so a malformed producer shows up in reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RepairStats {
+    /// Spans whose `parent_id` named no span in the set — promoted to
+    /// roots.
+    pub orphans: usize,
+    /// Children whose interval extended outside their parent — clipped to
+    /// the parent for self-time accounting (the span itself is untouched).
+    pub clipped_children: usize,
+    /// Spans with `end < start` — duration clamps to zero.
+    pub inverted: usize,
+    /// Spans sharing a span id with an earlier span — dropped from the
+    /// tree (ids are the tree's identity).
+    pub duplicate_ids: usize,
+}
+
+impl RepairStats {
+    pub fn total(&self) -> usize {
+        self.orphans + self.clipped_children + self.inverted + self.duplicate_ids
+    }
+
+    fn absorb(&mut self, other: &RepairStats) {
+        self.orphans += other.orphans;
+        self.clipped_children += other.clipped_children;
+        self.inverted += other.inverted;
+        self.duplicate_ids += other.duplicate_ids;
+    }
+}
+
+/// A repaired span tree (a forest: multiple roots are normal — concurrent
+/// agents, orphans) with per-span self time.
+#[derive(Debug, Clone)]
+pub struct SpanTree {
+    pub nodes: Vec<SpanNode>,
+    /// Indices of root nodes, sorted by (start, span id).
+    pub roots: Vec<usize>,
+    pub repairs: RepairStats,
+}
+
+/// One hop of the critical path: during `[start_ns, end_ns)` this span was
+/// the deepest work determining completion time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalSegment {
+    pub span_id: u64,
+    pub name: String,
+    pub level: TraceLevel,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl CriticalSegment {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+impl SpanTree {
+    pub fn from_timeline(tl: &Timeline) -> SpanTree {
+        SpanTree::build(&tl.spans)
+    }
+
+    /// Build the tree from a flat span set, in any order.
+    pub fn build(spans: &[Span]) -> SpanTree {
+        let mut repairs = RepairStats::default();
+        // Deterministic node order regardless of input order.
+        let mut sorted: Vec<Span> = spans.to_vec();
+        sorted.sort_by_key(|s| (s.start_ns, s.span_id, s.end_ns));
+        let mut nodes: Vec<SpanNode> = Vec::with_capacity(sorted.len());
+        let mut index: BTreeMap<u64, usize> = BTreeMap::new();
+        for s in sorted {
+            if index.contains_key(&s.span_id) {
+                repairs.duplicate_ids += 1;
+                continue;
+            }
+            if s.end_ns < s.start_ns {
+                repairs.inverted += 1;
+            }
+            index.insert(s.span_id, nodes.len());
+            nodes.push(SpanNode { span: s, children: Vec::new(), self_ns: 0 });
+        }
+        let mut roots = Vec::new();
+        for i in 0..nodes.len() {
+            let parent = nodes[i].span.parent_id;
+            let own_id = nodes[i].span.span_id;
+            match parent {
+                // A self-parented span is an orphan, not a 1-cycle.
+                Some(p) if p != own_id && index.contains_key(&p) => {
+                    let pi = index[&p];
+                    nodes[pi].children.push(i);
+                }
+                Some(_) => {
+                    repairs.orphans += 1;
+                    roots.push(i);
+                }
+                None => roots.push(i),
+            }
+        }
+        // Parent-pointer cycles (a→b→…→a) leave whole components
+        // unreachable from any root; promote one member per component so no
+        // span silently vanishes from attribution.
+        let mut reachable = vec![false; nodes.len()];
+        let mark = |nodes: &[SpanNode], reachable: &mut [bool], from: &[usize]| {
+            let mut stack: Vec<usize> = from.to_vec();
+            while let Some(i) = stack.pop() {
+                if reachable[i] {
+                    continue;
+                }
+                reachable[i] = true;
+                stack.extend(nodes[i].children.iter().copied());
+            }
+        };
+        mark(&nodes, &mut reachable, &roots);
+        while let Some(i) = (0..nodes.len()).find(|&i| !reachable[i]) {
+            // Cut the cycle at its deterministically-first member.
+            if let Some(p) = nodes[i].span.parent_id {
+                if let Some(&pi) = index.get(&p) {
+                    nodes[pi].children.retain(|&c| c != i);
+                }
+            }
+            repairs.orphans += 1;
+            roots.push(i);
+            mark(&nodes, &mut reachable, &[i]);
+        }
+        roots.sort_by_key(|&i| (nodes[i].span.start_ns, nodes[i].span.span_id));
+        // Self time: duration minus the union of child intervals clipped to
+        // the span.
+        for i in 0..nodes.len() {
+            let (s, e) = (nodes[i].span.start_ns, nodes[i].span.end_ns.max(nodes[i].span.start_ns));
+            // Detach the child list so sorting it can read sibling spans
+            // without aliasing `nodes`.
+            let mut kids = std::mem::take(&mut nodes[i].children);
+            kids.sort_by_key(|&c| (nodes[c].span.start_ns, nodes[c].span.span_id));
+            let mut intervals: Vec<(u64, u64)> = Vec::with_capacity(kids.len());
+            for &c in &kids {
+                let (cs, ce) = (nodes[c].span.start_ns, nodes[c].span.end_ns);
+                if cs < s || ce > e {
+                    repairs.clipped_children += 1;
+                }
+                let (cs, ce) = (cs.max(s), ce.min(e));
+                if ce > cs {
+                    intervals.push((cs, ce));
+                }
+            }
+            intervals.sort_unstable();
+            let mut covered = 0u64;
+            let mut cursor = s;
+            for (cs, ce) in intervals {
+                let cs = cs.max(cursor);
+                if ce > cs {
+                    covered += ce - cs;
+                    cursor = ce;
+                }
+            }
+            nodes[i].self_ns = (e - s).saturating_sub(covered);
+            nodes[i].children = kids;
+        }
+        SpanTree { nodes, roots, repairs }
+    }
+
+    /// Wall-clock extent of the forest (first start → last end), ns.
+    pub fn total_ns(&self) -> u64 {
+        let start = self.nodes.iter().map(|n| n.span.start_ns).min().unwrap_or(0);
+        let end = self.nodes.iter().map(|n| n.span.end_ns).max().unwrap_or(0);
+        end.saturating_sub(start)
+    }
+
+    /// Self time summed per level.
+    pub fn level_self_ns(&self) -> BTreeMap<TraceLevel, u64> {
+        let mut out = BTreeMap::new();
+        for n in &self.nodes {
+            *out.entry(n.span.level).or_insert(0) += n.self_ns;
+        }
+        out
+    }
+
+    /// The critical path: walk backward from the latest end, at every
+    /// instant descending into the child that determines completion (latest
+    /// effective end). Returns chronological, non-overlapping segments;
+    /// their total is ≤ the wall-clock extent, with equality when one root
+    /// covers the whole trace.
+    pub fn critical_path(&self) -> Vec<CriticalSegment> {
+        let mut segs: Vec<CriticalSegment> = Vec::new();
+        let Some(mut t) = self.nodes.iter().map(|n| n.span.end_ns).max() else {
+            return segs;
+        };
+        loop {
+            // The root that determines completion at time t: maximal
+            // effective end, ties to the later start (the deeper/later
+            // work), then span id for determinism.
+            let best = self
+                .roots
+                .iter()
+                .copied()
+                .filter_map(|r| {
+                    let n = &self.nodes[r].span;
+                    let eff_end = n.end_ns.min(t);
+                    (eff_end > n.start_ns).then_some((eff_end, n.start_ns, n.span_id, r))
+                })
+                .max_by_key(|&(eff_end, start, id, _)| (eff_end, start, std::cmp::Reverse(id)));
+            let Some((eff_end, _, _, r)) = best else { break };
+            self.walk(r, 0, eff_end, &mut segs);
+            t = self.nodes[r].span.start_ns;
+        }
+        segs.reverse();
+        segs
+    }
+
+    /// Critical-path length, ns.
+    pub fn critical_path_ns(&self) -> u64 {
+        self.critical_path().iter().map(CriticalSegment::duration_ns).sum()
+    }
+
+    /// Cover `[max(node.start, floor), t_end]` with segments. `floor` is the
+    /// ancestor window's start: a clipped child (one starting before its
+    /// parent) must not walk below it, or its segments would overlap work
+    /// already attributed outside the parent and the path could exceed wall
+    /// clock.
+    fn walk(&self, i: usize, floor: u64, t_end: u64, out: &mut Vec<CriticalSegment>) {
+        let node = &self.nodes[i];
+        let start = node.span.start_ns.max(floor);
+        let mut t = t_end.max(start);
+        loop {
+            // Child with the latest effective end before the cursor.
+            let best = node
+                .children
+                .iter()
+                .copied()
+                .filter_map(|c| {
+                    let n = &self.nodes[c].span;
+                    let eff_end = n.end_ns.min(t);
+                    let eff_start = n.start_ns.max(start);
+                    (eff_end > eff_start).then_some((eff_end, n.start_ns, n.span_id, c))
+                })
+                .max_by_key(|&(eff_end, s, id, _)| (eff_end, s, std::cmp::Reverse(id)));
+            match best {
+                None => {
+                    if t > start {
+                        out.push(self.segment(i, start, t));
+                    }
+                    return;
+                }
+                Some((eff_end, _, _, c)) => {
+                    if t > eff_end {
+                        out.push(self.segment(i, eff_end, t));
+                    }
+                    self.walk(c, start, eff_end, out);
+                    t = self.nodes[c].span.start_ns.max(start);
+                    if t <= start {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    fn segment(&self, i: usize, start_ns: u64, end_ns: u64) -> CriticalSegment {
+        let s = &self.nodes[i].span;
+        CriticalSegment {
+            span_id: s.span_id,
+            name: s.name.clone(),
+            level: s.level,
+            start_ns,
+            end_ns,
+        }
+    }
+}
+
+/// Serving-stack stage a span belongs to. The explicit `stage` tag wins
+/// (the batched-dispatch path tags its spans); otherwise FRAMEWORK/SYSTEM
+/// spans are model compute and well-known MODEL-level names classify
+/// themselves. `idle` marks time with no work in flight (the serving root's
+/// self time) and is excluded from the bottleneck verdict — absence of load
+/// is not a bottleneck.
+pub const STAGES: &[&str] =
+    &["batching", "queueing", "compute", "preprocessing", "postprocessing", "idle", "other"];
+
+pub fn stage_of(span: &Span) -> &'static str {
+    if let Some(tag) = span.tag("stage") {
+        return STAGES.iter().find(|s| **s == tag).copied().unwrap_or("other");
+    }
+    match span.level {
+        TraceLevel::Framework | TraceLevel::System => "compute",
+        _ => match span.name.as_str() {
+            "preprocess" => "preprocessing",
+            "postprocess" => "postprocessing",
+            "predict" | "batch_predict" | "batch_service" => "compute",
+            "batching_wait" => "batching",
+            "queue_wait" => "queueing",
+            _ => "other",
+        },
+    }
+}
+
+/// Identity used to aggregate spans across repeated runs: name + level + a
+/// stable subset of tags. Two spans with the same signature are "the same
+/// stage observed again".
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpanSignature {
+    pub name: String,
+    pub level: TraceLevel,
+    /// The [`SIGNATURE_TAGS`] the span carries, in that fixed order.
+    pub tags: Vec<(String, String)>,
+}
+
+/// Tags that distinguish signatures (kind = layer type, tenant = traffic
+/// class, stage = serving stage). Everything else — per-request ids, batch
+/// indices, timings — is noise that would shatter the aggregation.
+pub const SIGNATURE_TAGS: &[&str] = &["stage", "kind", "tenant"];
+
+impl SpanSignature {
+    pub fn of(span: &Span) -> SpanSignature {
+        SpanSignature {
+            name: span.name.clone(),
+            level: span.level,
+            tags: SIGNATURE_TAGS
+                .iter()
+                .filter_map(|k| span.tag(k).map(|v| (k.to_string(), v.to_string())))
+                .collect(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        if self.tags.is_empty() {
+            format!("{} [{}]", self.name, self.level.as_str())
+        } else {
+            let tags: Vec<String> =
+                self.tags.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            format!("{} [{}] {}", self.name, self.level.as_str(), tags.join(","))
+        }
+    }
+}
+
+/// Aggregated stats for one signature across every analyzed run.
+#[derive(Debug, Clone)]
+pub struct SignatureStats {
+    pub sig: SpanSignature,
+    pub count: usize,
+    pub total_self_ms: f64,
+    /// Per-span self time, ms.
+    pub self_ms: SummaryStats,
+    /// Per-span duration, ms.
+    pub duration_ms: SummaryStats,
+}
+
+/// Multi-run attribution profile: per-level and per-stage self time, the
+/// top self-time signatures, and the wall-clock / critical-path totals
+/// (summed across runs so the `critical ≤ wall` invariant survives
+/// aggregation).
+#[derive(Debug, Clone)]
+pub struct TraceProfile {
+    pub runs: usize,
+    pub spans: usize,
+    pub total_ms: f64,
+    pub critical_path_ms: f64,
+    pub total_self_ms: f64,
+    /// Self time per level, descending.
+    pub levels: Vec<(TraceLevel, f64)>,
+    /// Self time per stage, descending.
+    pub stages: Vec<(String, f64)>,
+    /// Top signatures by total self time, descending.
+    pub top: Vec<SignatureStats>,
+    pub repairs: RepairStats,
+}
+
+/// Aggregate one or more timelines (repeated runs, or one run's serving +
+/// session traces analyzed separately) into a [`TraceProfile`]. The result
+/// is a pure function of the span *sets* — shuffling spans within a
+/// timeline changes nothing.
+pub fn profile(timelines: &[Timeline], top_k: usize) -> TraceProfile {
+    let mut by_sig: BTreeMap<SpanSignature, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    let mut levels: BTreeMap<TraceLevel, f64> = BTreeMap::new();
+    let mut stages: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut repairs = RepairStats::default();
+    let (mut total_ms, mut critical_ms, mut total_self_ms) = (0.0, 0.0, 0.0);
+    let mut spans = 0usize;
+    for tl in timelines {
+        let tree = SpanTree::from_timeline(tl);
+        total_ms += tree.total_ns() as f64 / 1e6;
+        critical_ms += tree.critical_path_ns() as f64 / 1e6;
+        repairs.absorb(&tree.repairs);
+        spans += tree.nodes.len();
+        for n in &tree.nodes {
+            let self_ms = n.self_ns as f64 / 1e6;
+            total_self_ms += self_ms;
+            *levels.entry(n.span.level).or_insert(0.0) += self_ms;
+            *stages.entry(stage_of(&n.span)).or_insert(0.0) += self_ms;
+            let entry = by_sig.entry(SpanSignature::of(&n.span)).or_default();
+            entry.0.push(self_ms);
+            entry.1.push(n.span.duration_ms());
+        }
+    }
+    let mut top: Vec<SignatureStats> = by_sig
+        .into_iter()
+        .map(|(sig, (self_ms, dur_ms))| SignatureStats {
+            sig,
+            count: self_ms.len(),
+            total_self_ms: self_ms.iter().sum(),
+            self_ms: SummaryStats::of(&self_ms),
+            duration_ms: SummaryStats::of(&dur_ms),
+        })
+        .collect();
+    // Descending by total self time; signature order breaks exact ties so
+    // the ranking stays deterministic.
+    top.sort_by(|a, b| {
+        b.total_self_ms
+            .partial_cmp(&a.total_self_ms)
+            .unwrap()
+            .then_with(|| a.sig.cmp(&b.sig))
+    });
+    top.truncate(top_k);
+    let mut levels: Vec<(TraceLevel, f64)> = levels.into_iter().collect();
+    levels.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut stages: Vec<(String, f64)> =
+        stages.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    stages.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    TraceProfile {
+        runs: timelines.len(),
+        spans,
+        total_ms,
+        critical_path_ms: critical_ms,
+        total_self_ms,
+        levels,
+        stages,
+        top,
+        repairs,
+    }
+}
+
+impl TraceProfile {
+    /// The stage the run is bottlenecked on: the largest self-time share,
+    /// `idle` excluded (an underloaded system's dominant "stage" is idle
+    /// time, which is not a bottleneck).
+    pub fn dominant_stage(&self) -> Option<&str> {
+        self.stages.iter().find(|(s, _)| s != "idle").map(|(s, _)| s.as_str())
+    }
+
+    /// The automated bottleneck verdict: dominant stage, its share of
+    /// non-idle self time, and the top contributing signature.
+    pub fn verdict(&self) -> String {
+        let Some(stage) = self.dominant_stage() else {
+            return "no spans to attribute".to_string();
+        };
+        let stage_ms =
+            self.stages.iter().find(|(s, _)| s == stage).map(|(_, ms)| *ms).unwrap_or(0.0);
+        let busy_ms: f64 =
+            self.stages.iter().filter(|(s, _)| s != "idle").map(|(_, ms)| ms).sum();
+        let share = if busy_ms > 0.0 { stage_ms / busy_ms * 100.0 } else { 0.0 };
+        match self.top.iter().find(|t| t.count > 0 && stage_for_sig(&t.sig) == stage) {
+            Some(t) => format!(
+                "{stage} dominates ({share:.0}% of busy self time); top contributor {} — {:.3} ms total self over {} span(s), p99 {:.3} ms",
+                t.sig.label(),
+                t.total_self_ms,
+                t.count,
+                t.self_ms.p99,
+            ),
+            None => format!("{stage} dominates ({share:.0}% of busy self time)"),
+        }
+    }
+
+    /// Render the profile as the report's bottleneck section.
+    pub fn render(&self, context: &str) -> String {
+        let mut out = format!(
+            "Bottleneck attribution — {context}\n  runs {} · spans {} · wall {:.3} ms · critical path {:.3} ms ({:.0}% of wall) · repairs {}\n",
+            self.runs,
+            self.spans,
+            self.total_ms,
+            self.critical_path_ms,
+            if self.total_ms > 0.0 { self.critical_path_ms / self.total_ms * 100.0 } else { 0.0 },
+            self.repairs.total(),
+        );
+        let mut stage_table = Table::new(
+            "self time by stage / level",
+            &["Stage", "Self (ms)", "Share %"],
+        );
+        for (stage, ms) in &self.stages {
+            stage_table.row(&[
+                stage.clone(),
+                format!("{ms:.3}"),
+                format!("{:.1}", pct(*ms, self.total_self_ms)),
+            ]);
+        }
+        for (level, ms) in &self.levels {
+            stage_table.row(&[
+                format!("level:{}", level.as_str()),
+                format!("{ms:.3}"),
+                format!("{:.1}", pct(*ms, self.total_self_ms)),
+            ]);
+        }
+        out.push_str(&stage_table.render());
+        let mut top_table = Table::new(
+            "top self-time contributors (aggregated by span signature)",
+            &["Span", "Count", "Self Σ (ms)", "Self p50", "Self p99", "Dur p99"],
+        );
+        for t in &self.top {
+            top_table.row(&[
+                t.sig.label(),
+                t.count.to_string(),
+                format!("{:.3}", t.total_self_ms),
+                format!("{:.3}", t.self_ms.p50),
+                format!("{:.3}", t.self_ms.p99),
+                format!("{:.3}", t.duration_ms.p99),
+            ]);
+        }
+        out.push_str(&top_table.render());
+        out.push_str(&format!("  bottleneck verdict: {}\n", self.verdict()));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("runs", Json::num(self.runs as f64)),
+            ("spans", Json::num(self.spans as f64)),
+            ("total_ms", Json::num(self.total_ms)),
+            ("critical_path_ms", Json::num(self.critical_path_ms)),
+            ("total_self_ms", Json::num(self.total_self_ms)),
+            (
+                "stages",
+                Json::Obj(
+                    self.stages
+                        .iter()
+                        .map(|(s, ms)| (s.clone(), Json::num(*ms)))
+                        .collect(),
+                ),
+            ),
+            (
+                "levels",
+                Json::Obj(
+                    self.levels
+                        .iter()
+                        .map(|(l, ms)| (l.as_str().to_string(), Json::num(*ms)))
+                        .collect(),
+                ),
+            ),
+            (
+                "top",
+                Json::arr(
+                    self.top
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("span", Json::str(t.sig.label())),
+                                ("count", Json::num(t.count as f64)),
+                                ("total_self_ms", Json::num(t.total_self_ms)),
+                                ("self_p99_ms", Json::num(t.self_ms.p99)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("verdict", Json::str(self.verdict())),
+        ])
+    }
+}
+
+fn pct(part: f64, whole: f64) -> f64 {
+    if whole > 0.0 {
+        part / whole * 100.0
+    } else {
+        0.0
+    }
+}
+
+/// Stage of an aggregated signature (from its `stage` tag or the same
+/// heuristics as [`stage_of`]).
+fn stage_for_sig(sig: &SpanSignature) -> &'static str {
+    stage_of(&Span {
+        trace_id: 0,
+        span_id: 0,
+        parent_id: None,
+        name: sig.name.clone(),
+        level: sig.level,
+        start_ns: 0,
+        end_ns: 0,
+        tags: sig.tags.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(
+        id: u64,
+        parent: Option<u64>,
+        name: &str,
+        level: TraceLevel,
+        start_ms: f64,
+        end_ms: f64,
+    ) -> Span {
+        Span {
+            trace_id: 1,
+            span_id: id,
+            parent_id: parent,
+            name: name.to_string(),
+            level,
+            start_ns: (start_ms * 1e6) as u64,
+            end_ns: (end_ms * 1e6) as u64,
+            tags: Vec::new(),
+        }
+    }
+
+    /// root [0,10] with children a [1,4] and b [6,9] → self 4ms.
+    fn small_tree() -> Vec<Span> {
+        vec![
+            span(1, None, "root", TraceLevel::Model, 0.0, 10.0),
+            span(2, Some(1), "a", TraceLevel::Framework, 1.0, 4.0),
+            span(3, Some(1), "b", TraceLevel::Framework, 6.0, 9.0),
+        ]
+    }
+
+    #[test]
+    fn self_time_subtracts_child_union() {
+        let tree = SpanTree::build(&small_tree());
+        assert_eq!(tree.roots.len(), 1);
+        assert_eq!(tree.repairs, RepairStats::default());
+        let root = &tree.nodes[tree.roots[0]];
+        assert_eq!(root.span.name, "root");
+        assert_eq!(root.self_ns, 4_000_000);
+        assert_eq!(root.children.len(), 2);
+    }
+
+    #[test]
+    fn overlapping_children_count_once() {
+        // Children [1,5] and [3,7] overlap: union is 6ms, self 4ms.
+        let spans = vec![
+            span(1, None, "root", TraceLevel::Model, 0.0, 10.0),
+            span(2, Some(1), "a", TraceLevel::Framework, 1.0, 5.0),
+            span(3, Some(1), "b", TraceLevel::Framework, 3.0, 7.0),
+        ];
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.nodes[tree.roots[0]].self_ns, 4_000_000);
+    }
+
+    #[test]
+    fn orphans_and_clips_and_inversions_are_counted_not_dropped() {
+        let spans = vec![
+            span(1, None, "root", TraceLevel::Model, 0.0, 10.0),
+            // Orphan: parent 99 absent.
+            span(2, Some(99), "lost", TraceLevel::System, 2.0, 3.0),
+            // Child sticking out past its parent's end: clipped.
+            span(3, Some(1), "long", TraceLevel::Framework, 8.0, 12.0),
+            // Inverted span.
+            span(4, Some(1), "backwards", TraceLevel::Framework, 6.0, 5.0),
+        ];
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.nodes.len(), 4, "every span survives");
+        assert_eq!(tree.roots.len(), 2, "orphan promoted to root");
+        assert_eq!(tree.repairs.orphans, 1);
+        assert_eq!(tree.repairs.clipped_children, 1);
+        assert_eq!(tree.repairs.inverted, 1);
+        // Root self: 10 − clipped child [8,10] = 8ms (inverted child adds 0).
+        let root = tree.roots.iter().find(|&&r| tree.nodes[r].span.name == "root").unwrap();
+        assert_eq!(tree.nodes[*root].self_ns, 8_000_000);
+    }
+
+    #[test]
+    fn duplicate_ids_keep_first_and_count() {
+        let mut spans = small_tree();
+        spans.push(span(2, Some(1), "dupe", TraceLevel::System, 0.5, 0.6));
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.nodes.len(), 3);
+        assert_eq!(tree.repairs.duplicate_ids, 1);
+    }
+
+    #[test]
+    fn parent_cycles_are_cut_not_lost() {
+        let spans = vec![
+            span(1, Some(2), "a", TraceLevel::Model, 0.0, 4.0),
+            span(2, Some(1), "b", TraceLevel::Model, 1.0, 3.0),
+        ];
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.nodes.len(), 2);
+        assert_eq!(tree.roots.len(), 1, "cycle cut at one member");
+        assert_eq!(tree.repairs.orphans, 1);
+        // Both spans reachable → both attributed.
+        let total: u64 = tree.nodes.iter().map(|n| n.self_ns).sum();
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn critical_path_descends_into_the_determining_child() {
+        let tl = Timeline { trace_id: 1, spans: small_tree() };
+        let tree = SpanTree::from_timeline(&tl);
+        let path = tree.critical_path();
+        let names: Vec<&str> = path.iter().map(|s| s.name.as_str()).collect();
+        // Backward from 10: root [9,10], b [6,9], root [4,6], a [1,4],
+        // root [0,1] — reversed to chronological.
+        assert_eq!(names, vec!["root", "a", "root", "b", "root"]);
+        assert_eq!(tree.critical_path_ns(), tree.total_ns());
+        // Chronological and non-overlapping.
+        for w in path.windows(2) {
+            assert!(w[0].end_ns <= w[1].start_ns);
+        }
+    }
+
+    #[test]
+    fn critical_path_of_concurrent_roots_never_exceeds_wall() {
+        // Two concurrent roots with a gap: [0,4] and [6,9]; path covers
+        // 7ms of the 9ms wall (the 2ms gap is nobody's work).
+        let spans = vec![
+            span(1, None, "agent0", TraceLevel::Model, 0.0, 4.0),
+            span(2, None, "agent1", TraceLevel::Model, 6.0, 9.0),
+        ];
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.critical_path_ns(), 7_000_000);
+        assert!(tree.critical_path_ns() <= tree.total_ns());
+    }
+
+    #[test]
+    fn clipped_child_cannot_push_critical_path_past_wall() {
+        // A child starting before its parent (clipped for accounting) must
+        // not walk below the parent window: without the floor, its segment
+        // would overlap the earlier root's and the path would sum to 15 ms
+        // against a 10 ms wall.
+        let spans = vec![
+            span(1, None, "early_root", TraceLevel::Model, 0.0, 5.0),
+            span(2, None, "late_root", TraceLevel::Model, 5.0, 10.0),
+            span(3, Some(2), "clipped", TraceLevel::System, 0.0, 10.0),
+        ];
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.repairs.clipped_children, 1);
+        let path = tree.critical_path();
+        for w in path.windows(2) {
+            assert!(w[0].end_ns <= w[1].start_ns, "overlapping segments: {path:?}");
+        }
+        assert_eq!(tree.critical_path_ns(), 10_000_000);
+        assert!(tree.critical_path_ns() <= tree.total_ns());
+        // The clipped child is credited only for its in-parent window.
+        let clipped: Vec<_> = path.iter().filter(|s| s.name == "clipped").collect();
+        assert_eq!(clipped.len(), 1);
+        assert_eq!(clipped[0].start_ns, 5_000_000);
+        assert_eq!(clipped[0].end_ns, 10_000_000);
+    }
+
+    #[test]
+    fn zero_duration_spans_terminate_the_walk() {
+        let spans = vec![
+            span(1, None, "root", TraceLevel::Model, 0.0, 5.0),
+            span(2, Some(1), "instant", TraceLevel::Model, 5.0, 5.0),
+            span(3, Some(1), "work", TraceLevel::Model, 0.0, 5.0),
+        ];
+        let tree = SpanTree::build(&spans);
+        let path = tree.critical_path();
+        assert!(!path.is_empty());
+        assert_eq!(tree.critical_path_ns(), 5_000_000);
+    }
+
+    #[test]
+    fn stage_classification() {
+        let mk = |name: &str, level, tags: Vec<(&str, &str)>| Span {
+            trace_id: 0,
+            span_id: 0,
+            parent_id: None,
+            name: name.into(),
+            level,
+            start_ns: 0,
+            end_ns: 0,
+            tags: tags.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        };
+        assert_eq!(stage_of(&mk("queue_wait", TraceLevel::Model, vec![])), "queueing");
+        assert_eq!(stage_of(&mk("preprocess", TraceLevel::Model, vec![])), "preprocessing");
+        assert_eq!(stage_of(&mk("conv1", TraceLevel::Framework, vec![])), "compute");
+        assert_eq!(stage_of(&mk("sgemm", TraceLevel::System, vec![])), "compute");
+        assert_eq!(stage_of(&mk("evaluate", TraceLevel::Model, vec![])), "other");
+        // Explicit tag wins over name heuristics.
+        assert_eq!(
+            stage_of(&mk("anything", TraceLevel::Model, vec![("stage", "queueing")])),
+            "queueing"
+        );
+        assert_eq!(
+            stage_of(&mk("anything", TraceLevel::Model, vec![("stage", "bogus")])),
+            "other"
+        );
+    }
+
+    #[test]
+    fn profile_aggregates_across_runs_and_names_the_bottleneck() {
+        let mut run = small_tree();
+        run.push(span(4, Some(1), "queue_wait", TraceLevel::Model, 4.0, 6.0));
+        let tl = Timeline { trace_id: 1, spans: run };
+        let p1 = profile(&[tl.clone()], 10);
+        let p2 = profile(&[tl.clone(), tl], 10);
+        assert_eq!(p1.runs, 1);
+        assert_eq!(p2.runs, 2);
+        assert_eq!(p2.spans, p1.spans * 2);
+        assert!((p2.total_self_ms - 2.0 * p1.total_self_ms).abs() < 1e-9);
+        // Signature counts double across runs.
+        let count = |p: &TraceProfile, name: &str| {
+            p.top.iter().find(|t| t.sig.name == name).map(|t| t.count).unwrap_or(0)
+        };
+        assert_eq!(count(&p2, "queue_wait"), 2 * count(&p1, "queue_wait"));
+        // compute (a 3ms + b 3ms = 6ms) > queueing 2ms > other (root self
+        // 2ms after the queue_wait child is added).
+        assert_eq!(p1.dominant_stage(), Some("compute"));
+        assert!(p1.verdict().contains("compute"), "{}", p1.verdict());
+        // Render + JSON carry the verdict.
+        assert!(p1.render("test").contains("bottleneck verdict"));
+        assert_eq!(
+            p1.to_json().get("verdict").unwrap().as_str().unwrap(),
+            p1.verdict()
+        );
+    }
+
+    #[test]
+    fn idle_excluded_from_verdict() {
+        // A serving root whose self time (idle) dwarfs the work.
+        let mut spans = vec![span(1, None, "serve", TraceLevel::Model, 0.0, 100.0)];
+        spans[0].tags.push(("stage".into(), "idle".into()));
+        spans.push(span(2, Some(1), "batch_service", TraceLevel::Model, 0.0, 5.0));
+        let tl = Timeline { trace_id: 1, spans };
+        let p = profile(&[tl], 5);
+        assert_eq!(p.stages[0].0, "idle", "idle is the largest stage");
+        assert_eq!(p.dominant_stage(), Some("compute"), "but not the verdict");
+    }
+
+    #[test]
+    fn empty_profile_is_sane() {
+        let p = profile(&[], 5);
+        assert_eq!(p.runs, 0);
+        assert_eq!(p.dominant_stage(), None);
+        assert_eq!(p.verdict(), "no spans to attribute");
+        assert!(p.render("empty").contains("no spans"));
+    }
+}

@@ -11,14 +11,34 @@ use std::sync::{Arc, Mutex};
 /// In-process trace aggregation service. Accepts spans from any number of
 /// publishers (it is a [`SpanSink`], so tracers can point straight at it or
 /// reach it through the wire protocol) and assembles per-trace timelines.
-#[derive(Default)]
+///
+/// Retention is bounded: beyond `max_traces` distinct traces, the oldest
+/// (lowest trace id — ids are allocated from a monotonic pool) are evicted.
+/// A long-running server under SLO-probe traffic publishes a serving trace
+/// per probe; without a cap that memory would grow without bound.
 pub struct TraceServer {
     by_trace: Mutex<BTreeMap<u64, Vec<Span>>>,
+    max_traces: usize,
+}
+
+/// Default retention: plenty for every analysis workflow (reports read
+/// recent traces), small enough that probe storms can't exhaust memory.
+pub const DEFAULT_MAX_TRACES: usize = 1024;
+
+impl Default for TraceServer {
+    fn default() -> Self {
+        TraceServer { by_trace: Mutex::new(BTreeMap::new()), max_traces: DEFAULT_MAX_TRACES }
+    }
 }
 
 impl TraceServer {
     pub fn new() -> Arc<TraceServer> {
         Arc::new(TraceServer::default())
+    }
+
+    /// A server retaining at most `max_traces` traces (0 means unbounded).
+    pub fn with_max_traces(max_traces: usize) -> Arc<TraceServer> {
+        Arc::new(TraceServer { by_trace: Mutex::new(BTreeMap::new()), max_traces })
     }
 
     pub fn trace_ids(&self) -> Vec<u64> {
@@ -50,7 +70,15 @@ impl TraceServer {
 
 impl SpanSink for TraceServer {
     fn publish(&self, span: Span) {
-        self.by_trace.lock().unwrap().entry(span.trace_id).or_default().push(span);
+        let mut map = self.by_trace.lock().unwrap();
+        map.entry(span.trace_id).or_default().push(span);
+        // Evict the oldest traces beyond the retention cap (new-trace
+        // insertions only ever grow the map by one, so one eviction per
+        // publish keeps it bounded).
+        while self.max_traces > 0 && map.len() > self.max_traces {
+            let oldest = *map.keys().next().unwrap();
+            map.remove(&oldest);
+        }
     }
 }
 
@@ -62,6 +90,13 @@ pub struct Timeline {
 }
 
 impl Timeline {
+    /// Assemble a timeline from a flat span set (fixtures, stored traces),
+    /// applying the same deterministic ordering as [`TraceServer::timeline`].
+    pub fn from_spans(trace_id: u64, mut spans: Vec<Span>) -> Timeline {
+        spans.sort_by_key(|s| (s.start_ns, s.span_id));
+        Timeline { trace_id, spans }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.spans.is_empty()
     }
@@ -256,6 +291,39 @@ mod tests {
         let spans = j.get("spans").unwrap().as_arr().unwrap();
         assert_eq!(spans.len(), 9);
         assert!(Span::from_json(&spans[0]).is_some());
+    }
+
+    #[test]
+    fn retention_cap_evicts_oldest_traces() {
+        let server = TraceServer::with_max_traces(3);
+        for trace_id in 1..=5u64 {
+            server.publish(Span {
+                trace_id,
+                span_id: trace_id * 10,
+                parent_id: None,
+                name: "probe".into(),
+                level: TraceLevel::Model,
+                start_ns: 0,
+                end_ns: 1,
+                tags: Vec::new(),
+            });
+        }
+        assert_eq!(server.trace_ids(), vec![3, 4, 5], "oldest evicted at the cap");
+        assert!(server.timeline(1).is_empty());
+        assert!(!server.timeline(5).is_empty());
+        // Appending to a retained trace does not evict anything.
+        server.publish(Span {
+            trace_id: 4,
+            span_id: 41,
+            parent_id: None,
+            name: "probe".into(),
+            level: TraceLevel::Model,
+            start_ns: 1,
+            end_ns: 2,
+            tags: Vec::new(),
+        });
+        assert_eq!(server.trace_ids(), vec![3, 4, 5]);
+        assert_eq!(server.timeline(4).spans.len(), 2);
     }
 
     #[test]

@@ -91,6 +91,11 @@ impl Span {
         self.tags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
+    /// Serialize. Tags are an **array of `[key, value]` pairs**, not an
+    /// object: tag order is meaningful (it mirrors emission order) and
+    /// duplicate keys are legal — a JSON object (backed by a sorted map)
+    /// silently reordered and deduplicated them, which is exactly the kind
+    /// of drift the golden-trace tests pin against.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("trace_id", Json::num(self.trace_id as f64)),
@@ -105,34 +110,56 @@ impl Span {
             ("end_ns", Json::num(self.end_ns as f64)),
             (
                 "tags",
-                Json::Obj(
+                Json::arr(
                     self.tags
                         .iter()
-                        .map(|(k, v)| (k.clone(), Json::str(v)))
+                        .map(|(k, v)| Json::arr(vec![Json::str(k), Json::str(v)]))
                         .collect(),
                 ),
             ),
         ])
     }
 
+    /// Parse a span. Malformed identity is a rejection, not a silent
+    /// default: a present-but-unparsable `parent_id` or an unknown `level`
+    /// string returns `None` (a span reparented to the root or promoted to
+    /// `Full` would corrupt attribution invisibly). An *absent* `level`
+    /// still defaults to `Full` for spans stored before levels existed, and
+    /// the legacy object form of `tags` is still accepted.
     pub fn from_json(j: &Json) -> Option<Span> {
+        let parent_id = match j.get("parent_id") {
+            None => None,
+            Some(Json::Null) => None,
+            Some(v) => Some(v.as_u64()?),
+        };
+        let level = match j.get("level") {
+            None => TraceLevel::Full,
+            Some(v) => TraceLevel::parse(v.as_str()?)?,
+        };
+        let tags = match j.get("tags") {
+            None => Vec::new(),
+            Some(Json::Arr(pairs)) => pairs
+                .iter()
+                .map(|p| {
+                    let pair = p.as_arr()?;
+                    Some((pair.first()?.as_str()?.to_string(), pair.get(1)?.as_str()?.to_string()))
+                })
+                .collect::<Option<Vec<_>>>()?,
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| Some((k.clone(), v.as_str()?.to_string())))
+                .collect::<Option<Vec<_>>>()?,
+            Some(_) => return None,
+        };
         Some(Span {
             trace_id: j.get("trace_id")?.as_u64()?,
             span_id: j.get("span_id")?.as_u64()?,
-            parent_id: j.get("parent_id").and_then(|v| v.as_u64()),
+            parent_id,
             name: j.get("name")?.as_str()?.to_string(),
-            level: TraceLevel::parse(j.str_or("level", "full")).unwrap_or(TraceLevel::Full),
+            level,
             start_ns: j.get("start_ns")?.as_u64()?,
             end_ns: j.get("end_ns")?.as_u64()?,
-            tags: j
-                .get("tags")
-                .and_then(|t| t.as_obj())
-                .map(|m| {
-                    m.iter()
-                        .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
-                        .collect()
-                })
-                .unwrap_or_default(),
+            tags,
         })
     }
 }
@@ -469,6 +496,89 @@ mod tests {
         assert_eq!(back.name, "fc6");
         assert_eq!(back.tag("kind"), Some("Dense"));
         assert_eq!(back.span_id, s.span_id);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        // Duplicate tag keys and emission order must survive — the old
+        // object serialization silently deduplicated and re-sorted them.
+        let span = Span {
+            trace_id: 77,
+            span_id: (1u64 << 53) - 1, // largest id exact in a JSON double
+            parent_id: Some(41),
+            name: "fc6".into(),
+            level: TraceLevel::Framework,
+            start_ns: 123_456_789,
+            end_ns: 987_654_321,
+            tags: vec![
+                ("zeta".into(), "first".into()),
+                ("alpha".into(), "second".into()),
+                ("zeta".into(), "third".into()),
+            ],
+        };
+        let back = Span::from_json(&span.to_json()).unwrap();
+        assert_eq!(back.trace_id, span.trace_id);
+        assert_eq!(back.span_id, span.span_id);
+        assert_eq!(back.parent_id, span.parent_id);
+        assert_eq!(back.name, span.name);
+        assert_eq!(back.level, span.level);
+        assert_eq!(back.start_ns, span.start_ns);
+        assert_eq!(back.end_ns, span.end_ns);
+        assert_eq!(back.tags, span.tags, "tag order and duplicates preserved");
+        // And through a full serialize→parse of the textual form.
+        let text = span.to_json().to_string();
+        let reparsed = Span::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed.tags, span.tags);
+        assert_eq!(reparsed.parent_id, span.parent_id);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_identity_instead_of_defaulting() {
+        let (tracer, sink) = Tracer::in_memory(TraceLevel::Full);
+        let t = tracer.new_trace();
+        tracer.start(t, None, TraceLevel::Model, "x").unwrap().finish();
+        let good = sink.drain()[0].to_json();
+        // Unknown level string: used to coerce silently to Full.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("level".into(), Json::str("ful"));
+        }
+        assert!(Span::from_json(&bad).is_none());
+        // parent_id present but not a number: used to become None silently.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("parent_id".into(), Json::str("41"));
+        }
+        assert!(Span::from_json(&bad).is_none());
+        // Absent level stays the legacy Full default; null parent is root.
+        let mut legacy = good.clone();
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("level");
+            m.insert("parent_id".into(), Json::Null);
+        }
+        let back = Span::from_json(&legacy).unwrap();
+        assert_eq!(back.level, TraceLevel::Full);
+        assert_eq!(back.parent_id, None);
+    }
+
+    #[test]
+    fn from_json_accepts_legacy_object_tags() {
+        let legacy = Json::obj(vec![
+            ("trace_id", Json::num(1.0)),
+            ("span_id", Json::num(2.0)),
+            ("parent_id", Json::Null),
+            ("name", Json::str("conv1")),
+            ("level", Json::str("framework")),
+            ("start_ns", Json::num(0.0)),
+            ("end_ns", Json::num(10.0)),
+            (
+                "tags",
+                Json::obj(vec![("kind", Json::str("Conv2D")), ("shape", Json::str("(1, 3)"))]),
+            ),
+        ]);
+        let span = Span::from_json(&legacy).unwrap();
+        assert_eq!(span.tag("kind"), Some("Conv2D"));
+        assert_eq!(span.tag("shape"), Some("(1, 3)"));
     }
 
     #[test]

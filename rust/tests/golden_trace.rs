@@ -1,0 +1,175 @@
+//! Golden-trace fixture tests: a committed canonical span set pins
+//! `Timeline::render`, level filtering, zoom, and the bottleneck-attribution
+//! output (self time, critical path, verdict) so trace semantics cannot
+//! drift silently. An intentional semantic change must regenerate the
+//! fixtures under `tests/fixtures/` in the same commit.
+
+use mlmodelscope::traceanalysis::{profile, SpanTree};
+use mlmodelscope::traceserver::Timeline;
+use mlmodelscope::tracing::{Span, TraceLevel};
+use mlmodelscope::util::json::Json;
+
+fn fixture_path(name: &str) -> String {
+    format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_fixture() -> (Json, Timeline) {
+    let text = std::fs::read_to_string(fixture_path("golden_trace.json")).expect("fixture");
+    let j = Json::parse(&text).expect("fixture parses");
+    let trace_id = j.get("trace_id").unwrap().as_u64().unwrap();
+    let spans: Vec<Span> = j
+        .get("spans")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| Span::from_json(s).expect("every fixture span parses"))
+        .collect();
+    (j, Timeline::from_spans(trace_id, spans))
+}
+
+#[test]
+fn golden_render_is_pinned() {
+    let (_, tl) = load_fixture();
+    let expected = std::fs::read_to_string(fixture_path("golden_render.txt")).expect("golden");
+    assert_eq!(
+        tl.render(),
+        expected,
+        "Timeline::render drifted from tests/fixtures/golden_render.txt — if intentional, regenerate the fixture in this commit"
+    );
+}
+
+#[test]
+fn golden_level_filtering_and_zoom() {
+    let (j, tl) = load_fixture();
+    let expect = j.get("expect").unwrap();
+    for (name, level) in [
+        ("model", TraceLevel::Model),
+        ("framework", TraceLevel::Framework),
+        ("system", TraceLevel::System),
+    ] {
+        let want = expect.get_path(&format!("level_counts.{name}")).unwrap().as_u64().unwrap();
+        assert_eq!(tl.at_level(level).len() as u64, want, "level {name}");
+    }
+    assert!((tl.total_ms() - expect.f64_or("total_ms", -1.0)).abs() < 1e-9);
+    // Zoom into the longest framework span (the paper's Fig-8 workflow).
+    let longest = tl.longest(TraceLevel::Framework).unwrap();
+    assert_eq!(longest.name, expect.str_or("longest_framework", ""));
+    let inside = tl.zoom(longest.span_id);
+    assert_eq!(inside.len() as u64, expect.get("zoom_fc6_spans").unwrap().as_u64().unwrap());
+    assert!(inside.iter().any(|s| s.name == "weight_copy_h2d"));
+}
+
+#[test]
+fn golden_spans_roundtrip_through_json() {
+    let (_, tl) = load_fixture();
+    for s in &tl.spans {
+        let back = Span::from_json(&s.to_json()).expect("round-trip parses");
+        assert_eq!(back.to_json(), s.to_json(), "span {} drifted", s.span_id);
+        assert_eq!(back.trace_id, s.trace_id);
+        assert_eq!(back.parent_id, s.parent_id, "parent id survives for span {}", s.span_id);
+        assert_eq!(back.tags, s.tags, "tags survive for span {}", s.span_id);
+    }
+}
+
+#[test]
+fn golden_attribution_self_times_and_repairs() {
+    let (j, tl) = load_fixture();
+    let expect = j.get("expect").unwrap();
+    let tree = SpanTree::from_timeline(&tl);
+    assert_eq!(tree.repairs.orphans as u64, expect.get("orphans").unwrap().as_u64().unwrap());
+    assert_eq!(tree.roots.len() as u64, expect.get("roots").unwrap().as_u64().unwrap());
+    let want_self = expect.get("self_ms").unwrap().as_obj().unwrap();
+    assert_eq!(want_self.len(), tree.nodes.len(), "every span has a pinned self time");
+    for n in &tree.nodes {
+        let want = want_self
+            .get(&n.span.span_id.to_string())
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("no pinned self time for span {}", n.span.span_id));
+        let got = n.self_ns as f64 / 1e6;
+        assert!((got - want).abs() < 1e-9, "span {} self {got} != {want}", n.span.span_id);
+    }
+    for (level, want) in [
+        (TraceLevel::Model, "model"),
+        (TraceLevel::Framework, "framework"),
+        (TraceLevel::System, "system"),
+    ] {
+        let want = expect.get_path(&format!("level_self_ms.{want}")).unwrap().as_f64().unwrap();
+        let got = *tree.level_self_ns().get(&level).unwrap_or(&0) as f64 / 1e6;
+        assert!((got - want).abs() < 1e-9, "level {level:?} self {got} != {want}");
+    }
+}
+
+#[test]
+fn golden_critical_path_and_verdict() {
+    let (j, tl) = load_fixture();
+    let expect = j.get("expect").unwrap();
+    let tree = SpanTree::from_timeline(&tl);
+    let path = tree.critical_path();
+    let names: Vec<&str> = path.iter().map(|s| s.name.as_str()).collect();
+    let want: Vec<String> = expect
+        .get("critical_path_names")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, want.iter().map(String::as_str).collect::<Vec<_>>());
+    let critical_ms = tree.critical_path_ns() as f64 / 1e6;
+    assert!((critical_ms - expect.f64_or("critical_path_ms", -1.0)).abs() < 1e-9);
+    // Chronological, non-overlapping, inside the trace extent.
+    for w in path.windows(2) {
+        assert!(w[0].end_ns <= w[1].start_ns);
+    }
+    assert!(critical_ms <= tl.total_ms() + 1e-9);
+
+    // The aggregated profile pins stage attribution and the verdict.
+    let p = profile(&[tl], 5);
+    let want_stages = expect.get("stage_self_ms").unwrap().as_obj().unwrap();
+    assert_eq!(p.stages.len(), want_stages.len(), "stage set drifted: {:?}", p.stages);
+    for (stage, ms) in &p.stages {
+        let want = want_stages
+            .get(stage)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("unexpected stage {stage:?}"));
+        assert!((ms - want).abs() < 1e-9, "stage {stage} {ms} != {want}");
+    }
+    assert_eq!(p.dominant_stage(), Some(expect.str_or("dominant_stage", "")));
+    let verdict = p.verdict();
+    assert!(
+        verdict.contains(expect.str_or("dominant_stage", "???"))
+            && verdict.contains(expect.str_or("top_contributor", "???")),
+        "verdict drifted: {verdict}"
+    );
+}
+
+#[test]
+fn golden_aggregation_is_order_invariant_and_scales_with_runs() {
+    let (_, tl) = load_fixture();
+    // Shuffled span order must not change the profile.
+    let mut shuffled = tl.spans.clone();
+    shuffled.rotate_left(5);
+    shuffled.swap(0, 7);
+    let tl2 = Timeline { trace_id: tl.trace_id, spans: shuffled };
+    let (a, b) = (profile(&[tl.clone()], 10), profile(&[tl2], 10));
+    assert_eq!(a.spans, b.spans);
+    assert!((a.total_self_ms - b.total_self_ms).abs() < 1e-9);
+    assert_eq!(a.verdict(), b.verdict());
+    assert_eq!(a.top.len(), b.top.len());
+    for (x, y) in a.top.iter().zip(&b.top) {
+        assert_eq!(x.sig, y.sig);
+        assert_eq!(x.count, y.count);
+        assert!((x.total_self_ms - y.total_self_ms).abs() < 1e-9);
+    }
+    // Two identical runs double every count, and the p50/p99 of a doubled
+    // sample set is unchanged.
+    let twice = profile(&[tl.clone(), tl], 10);
+    assert_eq!(twice.runs, 2);
+    assert_eq!(twice.spans, a.spans * 2);
+    for (x, y) in a.top.iter().zip(&twice.top) {
+        assert_eq!(y.count, x.count * 2);
+        assert!((y.self_ms.p50 - x.self_ms.p50).abs() < 1e-9);
+        assert!((y.self_ms.p99 - x.self_ms.p99).abs() < 1e-9);
+    }
+}

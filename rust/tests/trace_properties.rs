@@ -1,0 +1,232 @@
+//! Property tests for span-tree well-formedness: randomly generated
+//! (then shuffled) span forests must satisfy the attribution invariants —
+//! children nest within parents, self time is non-negative and sums with
+//! the children to the duration, the critical path is monotone in time and
+//! bounded by wall clock, and aggregation is order-invariant.
+
+use mlmodelscope::traceanalysis::{profile, SpanTree};
+use mlmodelscope::traceserver::Timeline;
+use mlmodelscope::tracing::{Span, TraceLevel};
+use mlmodelscope::util::rng::{forall, Xorshift};
+
+fn level_for_depth(depth: usize) -> TraceLevel {
+    match depth {
+        0 => TraceLevel::Model,
+        1 => TraceLevel::Framework,
+        _ => TraceLevel::System,
+    }
+}
+
+/// Generate a well-formed span tree: children occupy disjoint subintervals
+/// of their parent, so `self + Σ children == duration` exactly.
+fn gen_tree(
+    rng: &mut Xorshift,
+    spans: &mut Vec<Span>,
+    next_id: &mut u64,
+    parent: Option<u64>,
+    lo: u64,
+    hi: u64,
+    depth: usize,
+) {
+    let id = *next_id;
+    *next_id += 1;
+    spans.push(Span {
+        trace_id: 1,
+        span_id: id,
+        parent_id: parent,
+        name: format!("s{}", id % 5),
+        level: level_for_depth(depth),
+        start_ns: lo,
+        end_ns: hi,
+        tags: Vec::new(),
+    });
+    if depth >= 3 || hi - lo < 16 {
+        return;
+    }
+    let k = rng.below(4) as usize;
+    if k == 0 {
+        return;
+    }
+    // 2k sorted cut points partition [lo, hi] into k disjoint children.
+    let mut cuts: Vec<u64> = (0..2 * k).map(|_| lo + rng.below(hi - lo)).collect();
+    cuts.sort_unstable();
+    for i in 0..k {
+        let (a, b) = (cuts[2 * i], cuts[2 * i + 1]);
+        if b > a {
+            gen_tree(rng, spans, next_id, Some(id), a, b, depth + 1);
+        }
+    }
+}
+
+fn gen_forest(rng: &mut Xorshift) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let mut next_id = 1;
+    let roots = 1 + rng.below(3);
+    let mut cursor = 0u64;
+    for _ in 0..roots {
+        let len = 1_000 + rng.below(1_000_000);
+        gen_tree(rng, &mut spans, &mut next_id, None, cursor, cursor + len, 0);
+        // Roots may touch or leave a gap.
+        cursor += len + rng.below(1_000);
+    }
+    spans
+}
+
+#[test]
+fn property_children_nest_and_self_time_sums_to_duration() {
+    forall(31, 60, |rng| {
+        let mut spans = gen_forest(rng);
+        rng.shuffle(&mut spans);
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.nodes.len(), spans.len());
+        assert_eq!(tree.repairs.orphans, 0);
+        assert_eq!(tree.repairs.clipped_children, 0);
+        assert_eq!(tree.repairs.inverted, 0);
+        for n in &tree.nodes {
+            let dur = n.span.end_ns - n.span.start_ns;
+            // Non-negative and bounded by the span's own duration.
+            assert!(n.self_ns <= dur, "self {} > duration {dur}", n.self_ns);
+            // Children nest within the parent...
+            let mut child_total = 0u64;
+            for &c in &n.children {
+                let cs = &tree.nodes[c].span;
+                assert!(cs.start_ns >= n.span.start_ns && cs.end_ns <= n.span.end_ns);
+                assert_eq!(cs.parent_id, Some(n.span.span_id));
+                child_total += cs.end_ns - cs.start_ns;
+            }
+            // ...and, being disjoint by construction, account exactly for
+            // the non-self time.
+            assert_eq!(
+                n.self_ns + child_total,
+                dur,
+                "span {}: self {} + children {child_total} != {dur}",
+                n.span.span_id,
+                n.self_ns
+            );
+        }
+    });
+}
+
+#[test]
+fn property_critical_path_monotone_and_bounded() {
+    forall(47, 60, |rng| {
+        let mut spans = gen_forest(rng);
+        rng.shuffle(&mut spans);
+        let tree = SpanTree::build(&spans);
+        let path = tree.critical_path();
+        assert!(!path.is_empty());
+        for seg in &path {
+            assert!(seg.start_ns <= seg.end_ns);
+        }
+        // Monotone in time and non-overlapping.
+        for w in path.windows(2) {
+            assert!(
+                w[0].end_ns <= w[1].start_ns,
+                "segments overlap: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // Bounded by wall clock; with every root generated as a covering
+        // interval, the only uncovered time is the inter-root gaps.
+        let total: u64 = path.iter().map(|s| s.end_ns - s.start_ns).sum();
+        assert!(total <= tree.total_ns(), "critical {total} > wall {}", tree.total_ns());
+        let root_cover: u64 = tree
+            .roots
+            .iter()
+            .map(|&r| tree.nodes[r].span.end_ns - tree.nodes[r].span.start_ns)
+            .sum();
+        assert_eq!(total, root_cover, "path must cover exactly the rooted intervals");
+    });
+}
+
+#[test]
+fn property_aggregation_is_order_invariant() {
+    forall(59, 40, |rng| {
+        let spans = gen_forest(rng);
+        let mut shuffled = spans.clone();
+        rng.shuffle(&mut shuffled);
+        let a = profile(&[Timeline { trace_id: 1, spans }], 100);
+        let b = profile(&[Timeline { trace_id: 1, spans: shuffled }], 100);
+        assert_eq!(a.spans, b.spans);
+        assert!((a.total_ms - b.total_ms).abs() < 1e-9);
+        assert!((a.critical_path_ms - b.critical_path_ms).abs() < 1e-9);
+        assert!((a.total_self_ms - b.total_self_ms).abs() < 1e-9);
+        assert_eq!(a.top.len(), b.top.len());
+        for (x, y) in a.top.iter().zip(&b.top) {
+            assert_eq!(x.sig, y.sig);
+            assert_eq!(x.count, y.count);
+            assert!((x.total_self_ms - y.total_self_ms).abs() < 1e-9);
+            assert!((x.self_ms.p99 - y.self_ms.p99).abs() < 1e-9);
+        }
+        assert_eq!(a.verdict(), b.verdict());
+    });
+}
+
+#[test]
+fn property_orphan_repair_loses_no_span() {
+    forall(73, 40, |rng| {
+        let mut spans = gen_forest(rng);
+        // Point a random non-root span at a parent id that does not exist.
+        let candidates: Vec<usize> =
+            (0..spans.len()).filter(|&i| spans[i].parent_id.is_some()).collect();
+        if candidates.is_empty() {
+            return;
+        }
+        let victim = candidates[rng.below(candidates.len() as u64) as usize];
+        spans[victim].parent_id = Some(1_000_000_007);
+        rng.shuffle(&mut spans);
+        let tree = SpanTree::build(&spans);
+        assert_eq!(tree.nodes.len(), spans.len(), "no span dropped");
+        assert_eq!(tree.repairs.orphans, 1);
+        // The orphan is now a root and still attributed.
+        let ids: std::collections::BTreeSet<u64> =
+            tree.nodes.iter().map(|n| n.span.span_id).collect();
+        assert_eq!(ids.len(), spans.len());
+        // Self times remain within each span's duration.
+        for n in &tree.nodes {
+            assert!(n.self_ns <= n.span.end_ns - n.span.start_ns);
+        }
+    });
+}
+
+#[test]
+fn property_span_json_roundtrip_with_random_tags() {
+    forall(97, 60, |rng| {
+        let n_tags = rng.below(6) as usize;
+        let tags: Vec<(String, String)> = (0..n_tags)
+            .map(|_| (rng.ident(4), rng.ident(8)))
+            .collect();
+        let span = Span {
+            trace_id: rng.below(1 << 50),
+            span_id: rng.below(1 << 50),
+            parent_id: if rng.below(2) == 0 { None } else { Some(rng.below(1 << 50)) },
+            name: rng.ident(10),
+            level: [
+                TraceLevel::None,
+                TraceLevel::Model,
+                TraceLevel::Framework,
+                TraceLevel::System,
+                TraceLevel::Full,
+            ][rng.below(5) as usize],
+            start_ns: rng.below(1 << 50),
+            end_ns: rng.below(1 << 50),
+            tags: tags.clone(),
+        };
+        let back = Span::from_json(&span.to_json()).expect("round-trip");
+        assert_eq!(back.trace_id, span.trace_id);
+        assert_eq!(back.span_id, span.span_id);
+        assert_eq!(back.parent_id, span.parent_id);
+        assert_eq!(back.name, span.name);
+        assert_eq!(back.level, span.level);
+        assert_eq!(back.start_ns, span.start_ns);
+        assert_eq!(back.end_ns, span.end_ns);
+        assert_eq!(back.tags, tags, "tags (order + duplicates) survive");
+        // And through the textual form.
+        let text = span.to_json().to_string();
+        let reparsed =
+            Span::from_json(&mlmodelscope::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed.tags, tags);
+        assert_eq!(reparsed.span_id, span.span_id);
+    });
+}
