@@ -8,6 +8,11 @@
 //! repository / web / local file system). Checksums use SHA-256; a cached
 //! asset is re-validated before reuse, as in the paper.
 
+// Cache files publish via `write_atomic`: concurrent materializations of
+// the same asset (e.g. a sweep evaluating one model on several systems at
+// once) produce identical deterministic bytes, so last-rename-wins is safe
+// and no reader can ever observe a half-written file.
+use crate::util::fs::write_atomic;
 use std::path::{Path, PathBuf};
 
 #[derive(Debug)]
@@ -41,6 +46,7 @@ impl From<std::io::Error> for DataError {
 pub fn sha256_hex(bytes: &[u8]) -> String {
     crate::util::sha256::sha256_hex(bytes)
 }
+
 
 /// Asset cache rooted at a directory.
 pub struct DataManager {
@@ -79,7 +85,7 @@ impl DataManager {
             if let Some(dir) = local.parent() {
                 std::fs::create_dir_all(dir)?;
             }
-            std::fs::write(&local, bytes)?;
+            write_atomic(&local, &bytes)?;
         }
         if let Some(expected) = checksum {
             // Zoo checksums (`zoo-<id>`) are identity markers, not hashes;
@@ -129,7 +135,7 @@ impl DataManager {
                 blob.extend_from_slice(&(enc.len() as u32).to_be_bytes());
                 blob.extend_from_slice(&enc);
             }
-            std::fs::write(&path, blob)?;
+            write_atomic(&path, &blob)?;
         }
         // Read back as records.
         let blob = std::fs::read(&path)?;

@@ -295,6 +295,18 @@ impl Agent {
             .first()
             .cloned()
             .unwrap_or_else(|| "cpu".to_string());
+        // Content address of the resolved spec (F1): identical configs
+        // store identical digests, which is what sweep memoization keys on.
+        let spec = crate::evaldb::EvalSpec::for_request(
+            &req.manifest,
+            &self.config.system,
+            &device,
+            &req.scenario,
+            batch,
+            req.trace_level,
+            req.seed,
+            Json::Null,
+        );
         let key = EvalKey {
             model: req.manifest.name.clone(),
             model_version: req.manifest.version.to_string(),
@@ -306,6 +318,7 @@ impl Agent {
             batch_size: batch,
         };
         let mut record = EvalRecord::new(key, latencies, throughput);
+        record.spec_digest = Some(spec.digest());
         record.trace_id = Some(trace_id);
         record.meta = Json::obj(vec![
             (

@@ -252,6 +252,76 @@ pub fn layer_population(timeline: &Timeline) -> (usize, usize) {
     (layers.len(), fast)
 }
 
+/// Model × system matrix (the paper's §5.1 case-study artifact, fed by
+/// `mlms sweep`): one row per model, one column per system present in the
+/// store, each cell showing the latest online (batch-1) trimmed-mean
+/// latency in ms and the maximum throughput in items/s measured on that
+/// system (`-` marks unmeasured halves).
+pub fn model_system_matrix(models: &[String], db: &EvalDb) -> Table {
+    model_system_pivot(models, db).0
+}
+
+/// The matrix plus the number of distinct systems it covers — the report
+/// includes the section only when results span more than one system, and
+/// computing both in one pass avoids re-scanning the store.
+fn model_system_pivot(models: &[String], db: &EvalDb) -> (Table, usize) {
+    use std::collections::BTreeSet;
+    let mut systems: BTreeSet<String> = BTreeSet::new();
+    let mut per_model: Vec<(String, Option<f64>, Vec<EvalRecord>)> = Vec::new();
+    for m in models {
+        let recs = db.latest(&EvalQuery::model(m));
+        if recs.is_empty() {
+            continue;
+        }
+        for r in &recs {
+            systems.insert(r.key.system.clone());
+        }
+        let acc = recs
+            .iter()
+            .find_map(|r| r.meta.get("accuracy").and_then(|v| v.as_f64()));
+        per_model.push((m.clone(), acc, recs));
+    }
+    let systems: Vec<String> = systems.into_iter().collect();
+    let mut header: Vec<&str> = vec!["Model", "Top1 Acc"];
+    for s in &systems {
+        header.push(s.as_str());
+    }
+    let mut t = Table::new(
+        "Model × system matrix — online latency (ms) / max throughput (items/s)",
+        &header,
+    );
+    for (m, acc, recs) in &per_model {
+        let mut row = vec![
+            m.clone(),
+            acc.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+        ];
+        for s in &systems {
+            let lat = recs
+                .iter()
+                .filter(|r| {
+                    &r.key.system == s && r.key.scenario == "online" && r.key.batch_size == 1
+                })
+                .max_by_key(|r| r.seq)
+                .map(|r| format!("{:.2}", r.trimmed_mean_ms()))
+                .unwrap_or_else(|| "-".into());
+            let max_tput = recs
+                .iter()
+                .filter(|r| &r.key.system == s)
+                .map(|r| r.throughput)
+                .filter(|t| t.is_finite())
+                .fold(f64::NAN, f64::max);
+            let tput = if max_tput.is_finite() {
+                format!("{max_tput:.0}")
+            } else {
+                "-".into()
+            };
+            row.push(format!("{lat} / {tput}"));
+        }
+        t.row(&row);
+    }
+    (t, systems.len())
+}
+
 /// Batching/dispatch report: one row per stored record carrying the
 /// cross-request batcher's metadata ([`crate::batcher`]) — occupancy, fill
 /// ratio, queue-delay tail, and how the dispatcher sharded the job.
@@ -387,6 +457,12 @@ pub fn full_report(models: &[String], db: &EvalDb) -> String {
     out.push_str(&table2(models, db).render());
     out.push_str(&render_accuracy_figure(&summaries, false));
     out.push_str(&render_accuracy_figure(&summaries, true));
+    // The model×system matrix appears once results span multiple systems
+    // (a single-system store is already covered by Table 2 / Fig 7).
+    let (matrix, matrix_systems) = model_system_pivot(models, db);
+    if matrix_systems > 1 {
+        out.push_str(&matrix.render());
+    }
     // The batching section appears only when some record carries the
     // batcher's metadata (built once; rendered only if it gained rows).
     let batching = batching_table(models, db);
@@ -704,6 +780,28 @@ mod tests {
         let rep = full_report_with_traces(&["resnet50".into()], &db, &traces);
         assert!(rep.contains("Bottleneck attribution"), "{rep}");
         assert!(rep.contains("Table 2"), "classic sections still present");
+    }
+
+    #[test]
+    fn model_system_matrix_pivots_by_system() {
+        let db = seed_db();
+        // Single-system store: the matrix renders but the report omits it.
+        let rep = full_report(&["resnet50".into(), "mobilenet".into()], &db);
+        assert!(!rep.contains("Model × system matrix"), "{rep}");
+        // Add a second system: the pivot gains a column and the report the
+        // section.
+        put(&db, "resnet50", "ibm_p8", "online", 1, 8.10, 123.0, 76.46);
+        let t = model_system_matrix(&["resnet50".into(), "mobilenet".into()], &db);
+        assert_eq!(t.row_count(), 2);
+        let text = t.render();
+        assert!(text.contains("aws_p3") && text.contains("ibm_p8"), "{text}");
+        assert!(text.contains("6.33"), "aws_p3 online latency: {text}");
+        assert!(text.contains("8.10"), "ibm_p8 online latency: {text}");
+        assert!(text.contains("931"), "max aws_p3 throughput 930.7 rounds up: {text}");
+        // mobilenet has no ibm_p8 record → dashed cell.
+        assert!(text.contains("- / -"), "{text}");
+        let rep = full_report(&["resnet50".into(), "mobilenet".into()], &db);
+        assert!(rep.contains("Model × system matrix"), "{rep}");
     }
 
     #[test]

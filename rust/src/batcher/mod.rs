@@ -77,6 +77,18 @@ impl BatcherConfig {
             DispatchPolicy::Fifo
         }
     }
+
+    /// Canonical JSON fingerprint of the dispatch configuration. Folded
+    /// into the [`crate::evaldb::EvalSpec`] digest so evaluations under
+    /// different batching configs never memoize into each other.
+    pub fn fingerprint_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("fair", Json::Bool(self.fair)),
+            ("max_batch_size", Json::num(self.max_batch_size as f64)),
+            ("max_wait_ms", Json::num(self.max_wait_ms)),
+        ])
+    }
 }
 
 /// One planned batch: coalesced request envelopes plus the timing facts the

@@ -4,16 +4,47 @@
 //! pointer to its profiling trace) keyed by the full user input — model,
 //! framework, system, scenario — so the analysis workflow can query across
 //! historical runs ("MLModelScope allows one to track which model version
-//! produced the best result"). The store is an embedded append-only JSONL
-//! segment log with in-memory secondary indexes — the offline substitute
-//! for the paper's hosted document database.
+//! produced the best result"). The store is an embedded append-only store
+//! — the offline substitute for the paper's hosted document database —
+//! organized as **N independent JSONL segment logs** with per-shard locks:
+//!
+//! - **Spec digests.** Every record may carry a content-addressed
+//!   [`EvalSpec`] digest — SHA-256 over the canonical JSON of the resolved
+//!   model manifest + system/device + scenario + batch size + trace level +
+//!   seed (+ dispatch config). Identical evaluation configurations are
+//!   identical by construction, which is what `sweep` memoization and
+//!   crash-safe resume key on ([`EvalDb::get_by_digest`]).
+//! - **Sharding.** Records route to a segment by a hash of their identity
+//!   (spec digest when present, canonical key JSON otherwise). `put` takes
+//!   one atomic sequence fetch plus a single per-shard lock — there is no
+//!   global mutex on the hot path — so concurrent writers on different
+//!   shards never contend. Reads fan out across all shards and merge by
+//!   sequence number, so shard-count changes between runs are harmless
+//!   (a record loaded from an "off-route" segment is still found).
+//! - **Compaction.** [`EvalDb::compact`] applies *latest-record-wins* per
+//!   identity within each shard: for every spec digest (or, for digest-less
+//!   records, every canonical key) only the highest-sequence record
+//!   survives; each segment log is rewritten atomically (temp file +
+//!   rename) and the in-memory indexes are rebuilt. History is therefore
+//!   bounded by the number of *distinct* specs, not the number of runs.
+//!   Compaction holds one shard lock at a time — writers to other shards
+//!   proceed concurrently.
+//! - **Crash recovery.** Segment replay is line-oriented and lenient: a
+//!   torn tail (a record cut mid-line by a crash) or a corrupt line is
+//!   dropped and every complete record is recovered.
 
 use crate::metrics::LatencySamples;
 
 use crate::util::json::Json;
-use std::io::{BufRead, Write};
-use std::path::PathBuf;
+use crate::util::sha256::sha256_hex;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Default segment-log count for sharded databases.
+pub const DEFAULT_SHARDS: usize = 8;
 
 /// The key identifying one evaluation configuration (the "user input").
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -42,17 +73,117 @@ impl EvalKey {
         ])
     }
 
-    pub fn from_json(j: &Json) -> EvalKey {
-        EvalKey {
-            model: j.str_or("model", "").into(),
-            model_version: j.str_or("model_version", "1.0.0").into(),
-            framework: j.str_or("framework", "").into(),
-            framework_version: j.str_or("framework_version", "0.0.0").into(),
-            system: j.str_or("system", "local").into(),
-            device: j.str_or("device", "cpu").into(),
-            scenario: j.str_or("scenario", "online").into(),
-            batch_size: j.f64_or("batch_size", 1.0) as usize,
+    /// Canonical JSON string — the key's identity for latest-wins dedup and
+    /// for shard routing of digest-less records (object keys serialize in
+    /// sorted order, so equal keys always canonicalize identically).
+    pub fn canonical(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Strict parse: every field must be present with the right type.
+    /// Returns `None` for missing or malformed fields instead of silently
+    /// defaulting them — a half-parsed key would corrupt query results and
+    /// latest-wins dedup.
+    pub fn from_json(j: &Json) -> Option<EvalKey> {
+        let s = |field: &str| -> Option<String> {
+            j.get(field).and_then(|v| v.as_str()).map(str::to_string)
+        };
+        let batch = j.get("batch_size")?.as_f64()?;
+        // A real batch size is a positive integer; 8.9 or 0 would merge
+        // the record into a wrong or meaningless key, so reject outright.
+        if !(batch >= 1.0) || batch.fract() != 0.0 || batch > usize::MAX as f64 {
+            return None;
         }
+        Some(EvalKey {
+            model: s("model")?,
+            model_version: s("model_version")?,
+            framework: s("framework")?,
+            framework_version: s("framework_version")?,
+            system: s("system")?,
+            device: s("device")?,
+            scenario: s("scenario")?,
+            batch_size: batch as usize,
+        })
+    }
+}
+
+/// The fully-resolved evaluation specification: everything that determines
+/// a benchmark result. Two evaluations whose canonical spec JSON is equal
+/// are the same experiment *by construction* (the model-spec
+/// reproducibility argument), so the SHA-256 digest of that JSON is the
+/// memoization key for [`crate::sweep`] and the content address stored on
+/// [`EvalRecord::spec_digest`].
+#[derive(Debug, Clone)]
+pub struct EvalSpec {
+    /// The resolved model manifest, as JSON.
+    pub manifest: Json,
+    /// System profile name the evaluation targets (e.g. `aws_p3`).
+    pub system: String,
+    /// Device class (`gpu` / `cpu`).
+    pub device: String,
+    /// The benchmarking scenario, as JSON.
+    pub scenario: Json,
+    /// Per-request batch size (or dispatch batch capacity).
+    pub batch_size: usize,
+    /// Trace level string (`none` … `full`) — tracing perturbs timing, so
+    /// runs at different levels are different experiments.
+    pub trace_level: String,
+    /// Workload seed.
+    pub seed: u64,
+    /// Cross-request dispatch fingerprint
+    /// ([`crate::batcher::BatcherConfig::fingerprint_json`]) or `Null` for
+    /// the classic per-request path.
+    pub dispatch: Json,
+}
+
+impl EvalSpec {
+    /// The one constructor every execution path and the sweep planner use.
+    /// Memoization and crash-safe resume depend on plan-time digests being
+    /// byte-identical to stored digests; a single definition makes drift
+    /// between the sites impossible.
+    #[allow(clippy::too_many_arguments)]
+    pub fn for_request(
+        manifest: &crate::manifest::ModelManifest,
+        system: &str,
+        device: &str,
+        scenario: &crate::scenario::Scenario,
+        batch_size: usize,
+        trace_level: crate::tracing::TraceLevel,
+        seed: u64,
+        dispatch: Json,
+    ) -> EvalSpec {
+        EvalSpec {
+            manifest: manifest.to_json(),
+            system: system.to_string(),
+            device: device.to_string(),
+            scenario: scenario.to_json(),
+            batch_size,
+            trace_level: trace_level.as_str().to_string(),
+            seed,
+            dispatch,
+        }
+    }
+
+    /// Canonical JSON form. Objects serialize with sorted keys, so any
+    /// reordering of the input fields produces the identical string.
+    pub fn canonical(&self) -> Json {
+        Json::obj(vec![
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("device", Json::str(&self.device)),
+            ("dispatch", self.dispatch.clone()),
+            ("manifest", self.manifest.clone()),
+            ("scenario", self.scenario.clone()),
+            // The seed is a full u64; encode as a string so values beyond
+            // 2^53 stay exact.
+            ("seed", Json::str(self.seed.to_string())),
+            ("system", Json::str(&self.system)),
+            ("trace_level", Json::str(&self.trace_level)),
+        ])
+    }
+
+    /// Content-addressed digest: SHA-256 hex of the canonical JSON.
+    pub fn digest(&self) -> String {
+        sha256_hex(self.canonical().to_string().as_bytes())
     }
 }
 
@@ -68,13 +199,24 @@ pub struct EvalRecord {
     pub throughput: f64,
     /// Trace id in the tracing server, if profiling was enabled.
     pub trace_id: Option<u64>,
+    /// Content-addressed [`EvalSpec`] digest of the resolved configuration
+    /// that produced this record (`None` for legacy or hand-built records).
+    pub spec_digest: Option<String>,
     /// Free-form metadata (accuracy, graph size, agent id, ...).
     pub meta: Json,
 }
 
 impl EvalRecord {
     pub fn new(key: EvalKey, latencies: Vec<f64>, throughput: f64) -> EvalRecord {
-        EvalRecord { key, seq: 0, latencies, throughput, trace_id: None, meta: Json::Null }
+        EvalRecord {
+            key,
+            seq: 0,
+            latencies,
+            throughput,
+            trace_id: None,
+            spec_digest: None,
+            meta: Json::Null,
+        }
     }
 
     pub fn samples(&self) -> LatencySamples {
@@ -102,13 +244,17 @@ impl EvalRecord {
                 "trace_id",
                 self.trace_id.map(|t| Json::num(t as f64)).unwrap_or(Json::Null),
             ),
+            (
+                "spec_digest",
+                self.spec_digest.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
             ("meta", self.meta.clone()),
         ])
     }
 
     pub fn from_json(j: &Json) -> Option<EvalRecord> {
         Some(EvalRecord {
-            key: EvalKey::from_json(j.get("key")?),
+            key: EvalKey::from_json(j.get("key")?)?,
             seq: j.f64_or("seq", 0.0) as u64,
             latencies: j
                 .get("latencies")?
@@ -118,6 +264,10 @@ impl EvalRecord {
                 .collect(),
             throughput: j.f64_or("throughput", f64::NAN),
             trace_id: j.get("trace_id").and_then(|v| v.as_u64()),
+            spec_digest: j
+                .get("spec_digest")
+                .and_then(|v| v.as_str())
+                .map(str::to_string),
             meta: j.get("meta").cloned().unwrap_or(Json::Null),
         })
     }
@@ -149,91 +299,244 @@ impl EvalQuery {
     }
 }
 
-/// The embedded evaluation database.
-pub struct EvalDb {
-    inner: Mutex<Inner>,
+/// Outcome of a [`EvalDb::compact`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompactionStats {
+    /// Records examined across all shards.
+    pub scanned: usize,
+    /// Records surviving (the latest per identity).
+    pub retained: usize,
+    /// Superseded records removed.
+    pub dropped: usize,
 }
 
-struct Inner {
+/// A record's identity for routing and latest-wins compaction: the spec
+/// digest when present, the canonical key JSON otherwise.
+fn record_identity(r: &EvalRecord) -> String {
+    r.spec_digest.clone().unwrap_or_else(|| r.key.canonical())
+}
+
+/// Deterministic shard routing (FNV-1a over the identity string). Only
+/// write *distribution* depends on this — reads fan out over every shard.
+fn shard_index(identity: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in identity.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// Replay one segment log leniently: complete lines parse into records;
+/// torn tails and corrupt lines are dropped.
+fn read_segment(path: &Path) -> std::io::Result<Vec<EvalRecord>> {
+    let bytes = std::fs::read(path)?;
+    let text = String::from_utf8_lossy(&bytes);
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Ok(j) = Json::parse(line) {
+            if let Some(r) = EvalRecord::from_json(&j) {
+                out.push(r);
+            }
+        }
+    }
+    // A file not ending in a newline was torn mid-append by a crash. Left
+    // as-is, the next append would concatenate onto the corrupt partial
+    // line and that record would vanish on the following replay — so
+    // rewrite the segment down to its recovered prefix before the store
+    // goes live.
+    if !bytes.is_empty() && bytes.last() != Some(&b'\n') {
+        let mut log = String::new();
+        for r in &out {
+            log.push_str(&r.to_json().to_string());
+            log.push('\n');
+        }
+        crate::util::fs::write_atomic(path, log.as_bytes())?;
+    }
+    Ok(out)
+}
+
+/// The embedded evaluation database (sharded; see the module docs).
+pub struct EvalDb {
+    shards: Vec<Mutex<Shard>>,
+    next_seq: AtomicU64,
+}
+
+struct Shard {
     records: Vec<EvalRecord>,
-    next_seq: u64,
-    /// Append log path; `None` → memory-only (tests, benches).
+    /// Spec digest → position in `records` of the highest-seq record
+    /// carrying it (the memoization index).
+    by_digest: HashMap<String, usize>,
+    /// Segment log path; `None` → memory-only (tests, benches).
     log_path: Option<PathBuf>,
 }
 
 impl EvalDb {
-    /// Memory-only database.
+    /// Memory-only database with [`DEFAULT_SHARDS`] shards.
     pub fn in_memory() -> EvalDb {
-        EvalDb { inner: Mutex::new(Inner { records: Vec::new(), next_seq: 1, log_path: None }) }
+        EvalDb::in_memory_sharded(DEFAULT_SHARDS)
     }
 
-    /// Open (or create) a file-backed database, replaying the existing log.
+    /// Memory-only database with an explicit shard count.
+    pub fn in_memory_sharded(shards: usize) -> EvalDb {
+        EvalDb::assemble((0..shards.max(1)).map(|_| (None, Vec::new())).collect())
+    }
+
+    /// Open (or create) a file-backed database, replaying existing logs.
+    ///
+    /// A path ending in `.jsonl` (or naming an existing regular file) opens
+    /// in legacy single-segment mode backed by exactly that file; any other
+    /// path is treated as a directory of [`DEFAULT_SHARDS`] segment logs.
     pub fn open(path: impl Into<PathBuf>) -> std::io::Result<EvalDb> {
         let path = path.into();
-        let mut records = Vec::new();
-        let mut next_seq = 1;
-        if path.exists() {
-            let file = std::fs::File::open(&path)?;
-            for line in std::io::BufReader::new(file).lines() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
+        let legacy =
+            path.extension().and_then(|e| e.to_str()) == Some("jsonl") || path.is_file();
+        if !legacy {
+            return EvalDb::open_sharded(&path, DEFAULT_SHARDS);
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() && !dir.exists() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let records = if path.exists() { read_segment(&path)? } else { Vec::new() };
+        Ok(EvalDb::assemble(vec![(Some(path), records)]))
+    }
+
+    /// Open (or create) a sharded database under `dir` with at least
+    /// `shards` segment logs. Existing segments beyond the requested count
+    /// are still loaded — the shard count only controls write distribution.
+    pub fn open_sharded(dir: &Path, shards: usize) -> std::io::Result<EvalDb> {
+        std::fs::create_dir_all(dir)?;
+        let mut n = shards.max(1);
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if let Some(idx) = name
+                    .strip_prefix("segment-")
+                    .and_then(|s| s.strip_suffix(".jsonl"))
+                    .and_then(|s| s.parse::<usize>().ok())
+                {
+                    n = n.max(idx + 1);
                 }
-                if let Ok(j) = Json::parse(&line) {
-                    if let Some(r) = EvalRecord::from_json(&j) {
-                        next_seq = next_seq.max(r.seq + 1);
-                        records.push(r);
+            }
+        }
+        let mut segments = Vec::with_capacity(n);
+        for i in 0..n {
+            let p = dir.join(format!("segment-{i:02}.jsonl"));
+            let records = if p.exists() { read_segment(&p)? } else { Vec::new() };
+            segments.push((Some(p), records));
+        }
+        Ok(EvalDb::assemble(segments))
+    }
+
+    fn assemble(segments: Vec<(Option<PathBuf>, Vec<EvalRecord>)>) -> EvalDb {
+        let mut next_seq: u64 = 1;
+        let mut shards = Vec::with_capacity(segments.len());
+        for (log_path, records) in segments {
+            let mut by_digest: HashMap<String, usize> = HashMap::new();
+            for (pos, r) in records.iter().enumerate() {
+                next_seq = next_seq.max(r.seq + 1);
+                if let Some(d) = &r.spec_digest {
+                    let newer = match by_digest.get(d) {
+                        Some(&p) => records[p].seq <= r.seq,
+                        None => true,
+                    };
+                    if newer {
+                        by_digest.insert(d.clone(), pos);
                     }
                 }
             }
-        } else if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+            shards.push(Mutex::new(Shard { records, by_digest, log_path }));
         }
-        Ok(EvalDb { inner: Mutex::new(Inner { records, next_seq, log_path: Some(path) }) })
+        EvalDb { shards, next_seq: AtomicU64::new(next_seq) }
     }
 
-    /// Store a record; assigns and returns its sequence number.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard an identity (spec digest or canonical key) routes to.
+    pub fn shard_of(&self, identity: &str) -> usize {
+        shard_index(identity, self.shards.len())
+    }
+
+    /// Store a record; assigns and returns its sequence number. Takes one
+    /// atomic fetch plus the routed shard's lock — writers to different
+    /// shards never contend.
     pub fn put(&self, mut record: EvalRecord) -> u64 {
-        let mut inner = self.inner.lock().unwrap();
-        record.seq = inner.next_seq;
-        inner.next_seq += 1;
-        if let Some(path) = inner.log_path.clone() {
-            if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        record.seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let seq = record.seq;
+        let idx = shard_index(&record_identity(&record), self.shards.len());
+        let mut shard = self.shards[idx].lock().unwrap();
+        if let Some(path) = shard.log_path.clone() {
+            if let Ok(mut f) =
+                std::fs::OpenOptions::new().create(true).append(true).open(&path)
+            {
                 let _ = writeln!(f, "{}", record.to_json().to_string());
             }
         }
-        let seq = record.seq;
-        inner.records.push(record);
+        let pos = shard.records.len();
+        if let Some(d) = record.spec_digest.clone() {
+            // Latest-wins index: a slower thread holding an older sequence
+            // number must not displace a newer record.
+            let newer = match shard.by_digest.get(&d) {
+                Some(&p) => shard.records[p].seq <= seq,
+                None => true,
+            };
+            if newer {
+                shard.by_digest.insert(d, pos);
+            }
+        }
+        shard.records.push(record);
         seq
     }
 
+    /// The highest-sequence record carrying this spec digest, if any — the
+    /// memoization lookup: a hit means the exact configuration was already
+    /// measured.
+    pub fn get_by_digest(&self, digest: &str) -> Option<EvalRecord> {
+        let mut best: Option<EvalRecord> = None;
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            if let Some(&p) = shard.by_digest.get(digest) {
+                let r = &shard.records[p];
+                if best.as_ref().map_or(true, |b| b.seq < r.seq) {
+                    best = Some(r.clone());
+                }
+            }
+        }
+        best
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().records.len()
+        self.shards.iter().map(|s| s.lock().unwrap().records.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// All records matching the query, in insertion order.
+    /// All records matching the query, in sequence (insertion) order.
     pub fn query(&self, q: &EvalQuery) -> Vec<EvalRecord> {
-        self.inner
-            .lock()
-            .unwrap()
-            .records
-            .iter()
-            .filter(|r| q.matches(&r.key))
-            .cloned()
-            .collect()
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            out.extend(shard.records.iter().filter(|r| q.matches(&r.key)).cloned());
+        }
+        out.sort_by_key(|r| r.seq);
+        out
     }
 
     /// The latest record per distinct key matching the query (history keeps
     /// every run; comparisons usually want the newest).
     pub fn latest(&self, q: &EvalQuery) -> Vec<EvalRecord> {
-        let mut by_key: std::collections::HashMap<String, EvalRecord> =
-            std::collections::HashMap::new();
+        let mut by_key: HashMap<String, EvalRecord> = HashMap::new();
         for r in self.query(q) {
-            let k = r.key.to_json().to_string();
+            let k = r.key.canonical();
             match by_key.get(&k) {
                 Some(prev) if prev.seq >= r.seq => {}
                 _ => {
@@ -244,6 +547,63 @@ impl EvalDb {
         let mut out: Vec<EvalRecord> = by_key.into_values().collect();
         out.sort_by_key(|r| r.seq);
         out
+    }
+
+    /// Latest-record-wins compaction (see the module docs): within each
+    /// shard, keep only the highest-sequence record per identity, rewrite
+    /// the segment log atomically, and rebuild the digest index. One shard
+    /// is locked at a time, so writers to other shards proceed.
+    pub fn compact(&self) -> std::io::Result<CompactionStats> {
+        let mut stats = CompactionStats::default();
+        // Pass 1: the globally-highest sequence per identity. Duplicates of
+        // one identity can sit in *different* shards after a shard-count
+        // change (routing only governs writes), so per-shard dedup alone
+        // would let superseded records survive forever.
+        let mut winners: HashMap<String, u64> = HashMap::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            for r in &shard.records {
+                let entry = winners.entry(record_identity(r)).or_insert(r.seq);
+                if *entry < r.seq {
+                    *entry = r.seq;
+                }
+            }
+        }
+        // Pass 2: keep only each identity's winner. A record put between
+        // the passes has a sequence above its recorded winner and is kept.
+        for shard in &self.shards {
+            let mut shard = shard.lock().unwrap();
+            stats.scanned += shard.records.len();
+            let old = std::mem::take(&mut shard.records);
+            let mut records = Vec::new();
+            for r in old {
+                let keep = winners
+                    .get(&record_identity(&r))
+                    .map_or(true, |&w| r.seq >= w);
+                if keep {
+                    records.push(r);
+                }
+            }
+            stats.retained += records.len();
+            if let Some(path) = shard.log_path.clone() {
+                let mut log = String::new();
+                for r in &records {
+                    log.push_str(&r.to_json().to_string());
+                    log.push('\n');
+                }
+                crate::util::fs::write_atomic(&path, log.as_bytes())?;
+            }
+            let mut by_digest: HashMap<String, usize> = HashMap::new();
+            for (pos, r) in records.iter().enumerate() {
+                if let Some(d) = &r.spec_digest {
+                    by_digest.insert(d.clone(), pos);
+                }
+            }
+            shard.records = records;
+            shard.by_digest = by_digest;
+        }
+        stats.dropped = stats.scanned - stats.retained;
+        Ok(stats)
     }
 }
 
@@ -297,6 +657,7 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         {
             let db = EvalDb::open(&path).unwrap();
+            assert_eq!(db.shard_count(), 1, "legacy .jsonl path is single-segment");
             let mut r = EvalRecord::new(key("resnet50", "aws_p3", 256), vec![0.275], 930.7);
             r.trace_id = Some(42);
             r.meta = Json::obj(vec![("accuracy", Json::num(76.46))]);
@@ -339,5 +700,139 @@ mod tests {
         // Good line kept; garbage skipped; half-record (no key) skipped.
         assert_eq!(db.len(), 1);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn eval_key_from_json_rejects_each_malformed_shape() {
+        let valid = key("m", "s", 4).to_json();
+        assert!(EvalKey::from_json(&valid).is_some(), "control: valid key parses");
+        // Each field missing → reject (no silent defaulting).
+        for field in [
+            "model",
+            "model_version",
+            "framework",
+            "framework_version",
+            "system",
+            "device",
+            "scenario",
+            "batch_size",
+        ] {
+            if let Json::Obj(mut m) = valid.clone() {
+                m.remove(field);
+                assert!(
+                    EvalKey::from_json(&Json::Obj(m)).is_none(),
+                    "missing {field} must reject"
+                );
+            }
+        }
+        // Wrong types → reject.
+        if let Json::Obj(mut m) = valid.clone() {
+            m.insert("batch_size".into(), Json::str("eight"));
+            assert!(EvalKey::from_json(&Json::Obj(m)).is_none(), "string batch_size");
+        }
+        if let Json::Obj(mut m) = valid.clone() {
+            m.insert("model".into(), Json::num(7.0));
+            assert!(EvalKey::from_json(&Json::Obj(m)).is_none(), "numeric model");
+        }
+        if let Json::Obj(mut m) = valid.clone() {
+            m.insert("batch_size".into(), Json::num(-3.0));
+            assert!(EvalKey::from_json(&Json::Obj(m)).is_none(), "negative batch_size");
+        }
+        if let Json::Obj(mut m) = valid.clone() {
+            m.insert("batch_size".into(), Json::num(0.0));
+            assert!(EvalKey::from_json(&Json::Obj(m)).is_none(), "zero batch_size");
+        }
+        if let Json::Obj(mut m) = valid.clone() {
+            m.insert("batch_size".into(), Json::num(8.9));
+            assert!(EvalKey::from_json(&Json::Obj(m)).is_none(), "fractional batch_size");
+        }
+        // Non-object inputs → reject.
+        assert!(EvalKey::from_json(&Json::Null).is_none());
+        assert!(EvalKey::from_json(&Json::str("key")).is_none());
+        // And a record with a malformed key is rejected as a whole.
+        let mut rec = EvalRecord::new(key("m", "s", 1), vec![0.1], 1.0);
+        rec.seq = 3;
+        if let Json::Obj(mut m) = rec.to_json() {
+            if let Some(Json::Obj(k)) = m.get_mut("key") {
+                k.remove("device");
+            }
+            assert!(EvalRecord::from_json(&Json::Obj(m)).is_none());
+        }
+    }
+
+    #[test]
+    fn spec_digest_is_deterministic_and_field_sensitive() {
+        let spec = EvalSpec {
+            manifest: Json::obj(vec![("name", Json::str("m")), ("version", Json::str("1.0.0"))]),
+            system: "aws_p3".into(),
+            device: "gpu".into(),
+            scenario: Scenario::Online { count: 8 }.to_json(),
+            batch_size: 1,
+            trace_level: "none".into(),
+            seed: 42,
+            dispatch: Json::Null,
+        };
+        assert_eq!(spec.digest(), spec.clone().digest(), "deterministic");
+        let mut other = spec.clone();
+        other.seed = 43;
+        assert_ne!(spec.digest(), other.digest(), "seed is part of the spec");
+        let mut other = spec.clone();
+        other.trace_level = "full".into();
+        assert_ne!(spec.digest(), other.digest(), "trace level is part of the spec");
+    }
+
+    #[test]
+    fn digest_memoization_index_returns_latest() {
+        let db = EvalDb::in_memory_sharded(4);
+        let digest = "d".repeat(64);
+        let mut a = EvalRecord::new(key("m", "s", 1), vec![0.010], 100.0);
+        a.spec_digest = Some(digest.clone());
+        let mut b = a.clone();
+        b.throughput = 200.0;
+        db.put(a);
+        db.put(b);
+        let hit = db.get_by_digest(&digest).expect("digest hit");
+        assert_eq!(hit.throughput, 200.0, "latest record wins");
+        assert!(db.get_by_digest(&"e".repeat(64)).is_none());
+        // Routing is deterministic.
+        assert_eq!(db.shard_of(&digest), db.shard_of(&digest));
+        assert!(db.shard_of(&digest) < db.shard_count());
+    }
+
+    #[test]
+    fn compaction_keeps_latest_per_identity() {
+        let db = EvalDb::in_memory_sharded(2);
+        let digest = "a".repeat(64);
+        for tput in [1.0, 2.0, 3.0] {
+            let mut r = EvalRecord::new(key("m", "s", 1), vec![0.01], tput);
+            r.spec_digest = Some(digest.clone());
+            db.put(r);
+        }
+        // Digest-less records compact by canonical key.
+        db.put(EvalRecord::new(key("n", "s", 1), vec![0.02], 10.0));
+        db.put(EvalRecord::new(key("n", "s", 1), vec![0.02], 20.0));
+        let stats = db.compact().unwrap();
+        assert_eq!(stats, CompactionStats { scanned: 5, retained: 2, dropped: 3 });
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.get_by_digest(&digest).unwrap().throughput, 3.0);
+        assert_eq!(db.latest(&EvalQuery::model("n"))[0].throughput, 20.0);
+        // Compacting an already-compact db is a no-op.
+        let again = db.compact().unwrap();
+        assert_eq!(again, CompactionStats { scanned: 2, retained: 2, dropped: 0 });
+    }
+
+    #[test]
+    fn record_json_roundtrip_carries_spec_digest() {
+        let mut r = EvalRecord::new(key("m", "s", 2), vec![0.004, 0.005], 500.0);
+        r.spec_digest = Some("f".repeat(64));
+        r.seq = 9;
+        let back = EvalRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.spec_digest, r.spec_digest);
+        assert_eq!(back.seq, 9);
+        // Legacy records without the field parse with `None`.
+        let mut legacy = EvalRecord::new(key("m", "s", 2), vec![0.004], 1.0);
+        legacy.spec_digest = None;
+        let back = EvalRecord::from_json(&legacy.to_json()).unwrap();
+        assert_eq!(back.spec_digest, None);
     }
 }

@@ -23,8 +23,10 @@
 //!   and attributed by the bottleneck engine ([`traceanalysis`]) — span
 //!   trees with self time, critical-path extraction, multi-run signature
 //!   aggregation, and an automated bottleneck verdict;
-//! - **analysis**: the evaluation database ([`evaldb`]) and the automated
-//!   analysis + reporting workflow ([`analysis`]);
+//! - **analysis**: the evaluation database ([`evaldb`]) — sharded segment
+//!   logs with content-addressed spec digests — the reproducible
+//!   model×system sweep engine with digest memoization ([`sweep`]), and
+//!   the automated analysis + reporting workflow ([`analysis`]);
 //! - **models**: the 37-model zoo of the paper's Table 2 ([`zoo`]) — five
 //!   families also exist as *real* JAX/Pallas models AOT-compiled to HLO and
 //!   executed through the PJRT runtime ([`runtime`]);
@@ -37,6 +39,7 @@
 
 pub mod util {
     pub mod cli;
+    pub mod fs;
     pub mod json;
     pub mod rng;
     pub mod semver;
@@ -65,6 +68,7 @@ pub mod traceserver;
 
 pub mod analysis;
 pub mod evaldb;
+pub mod sweep;
 
 pub mod predictor;
 pub mod runtime;

@@ -9,6 +9,7 @@
 //! - `zoo`     — list built-in models / systems
 //! - `trace`   — render a trace timeline
 //! - `slo-search` — latency-bounded throughput search (the SLO frontier)
+//! - `sweep`   — memoized, resumable model×system sweep across the fleet
 //!
 //! `eval` is the "push-button" path: it assembles server + agents in one
 //! process, evaluates, and prints the analysis — the CLI equivalent of the
@@ -36,6 +37,7 @@ const COMMANDS: &[Command] = &[
         about: "batched evaluation + across-stack bottleneck attribution",
     },
     Command { name: "slo-search", about: "max sustainable QPS under a latency SLO" },
+    Command { name: "sweep", about: "memoized model×system sweep across the fleet" },
     Command { name: "client", about: "talk to a running mlms server over REST" },
 ];
 
@@ -58,6 +60,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "trace-analyze" => cmd_trace_analyze(&args),
         "slo-search" => cmd_slo_search(&args),
+        "sweep" => cmd_sweep(&args),
         "client" => cmd_client(&args),
         _ => {
             eprint!("{}", usage("mlms", "a scalable DL benchmarking platform", COMMANDS));
@@ -79,12 +82,30 @@ fn parse_trace_level(args: &Args) -> Result<TraceLevel, i32> {
 /// Build a standalone in-process platform: server + the four Table-1
 /// simulated GPU agents (+ CPU agents) + optionally a real XLA agent.
 fn build_platform(args: &Args, level: TraceLevel) -> Arc<Server> {
-    let server = Server::standalone();
+    build_platform_with_db(args, level, None)
+}
+
+/// As [`build_platform`], against an explicit (usually file-backed)
+/// evaluation database — the persistence that makes `mlms sweep` resumable
+/// across process restarts.
+fn build_platform_with_db(
+    args: &Args,
+    level: TraceLevel,
+    evaldb: Option<Arc<mlmodelscope::evaldb::EvalDb>>,
+) -> Arc<Server> {
+    let server = match evaldb {
+        Some(db) => Server::new(
+            mlmodelscope::registry::Registry::new(),
+            db,
+            mlmodelscope::traceserver::TraceServer::new(),
+        ),
+        None => Server::standalone(),
+    };
     server.register_zoo();
-    for sys in ["aws_p3", "aws_g3", "aws_p2", "ibm_p8"] {
+    for sys in mlmodelscope::sysmodel::table1_system_names() {
         for dev in [Device::Gpu, Device::Cpu] {
             let (agent, _sim, _t) =
-                sim_agent(sys, dev, level, server.evaldb.clone(), server.traces.clone());
+                sim_agent(&sys, dev, level, server.evaldb.clone(), server.traces.clone());
             server.attach_local_agent(agent);
         }
     }
@@ -262,7 +283,7 @@ fn cmd_eval(args: &Args) -> i32 {
 fn cmd_analyze(args: &Args) -> i32 {
     let db_path = args.opt_or("evaldb", "");
     if db_path.is_empty() {
-        eprintln!("--evaldb <path> required (a JSONL evaluation database)");
+        eprintln!("--evaldb <path> required (a .jsonl log or a sharded segment directory)");
         return 2;
     }
     let db = match mlmodelscope::evaldb::EvalDb::open(db_path) {
@@ -529,6 +550,113 @@ fn cmd_slo_search(args: &Args) -> i32 {
         mlmodelscope::analysis::slo_frontier_table(&[model], &server.evaldb).render()
     );
     0
+}
+
+/// Reproducible fleet-wide sweep: the cross-product of models × systems ×
+/// scenario × batch sizes, executed with spec-digest memoization against
+/// the evaluation database. Re-running the identical invocation skips
+/// every cell already measured — interrupted sweeps resume for free when
+/// `--evaldb` points at a persistent store.
+///
+/// ```sh
+/// mlms sweep --models ResNet_v1_50,VGG16 --systems aws_p3,ibm_p8 \
+///     --batches 1,8,32 --count 16 --evaldb sweep_db --seed 42
+/// ```
+///
+/// Defaults reproduce the paper's §5.1 case study: all 37 zoo models on
+/// the four Table-1 systems. `--dispatch` routes single-item cells through
+/// the cross-request batcher (`--batch`, `--wait-ms`, `--fair`);
+/// `--compact` runs latest-wins compaction on the store afterwards.
+fn cmd_sweep(args: &Args) -> i32 {
+    use mlmodelscope::batcher::BatcherConfig;
+    use mlmodelscope::sweep::{run, Plan};
+    let raw_level = args.opt_or("trace-level", "none");
+    let level = match TraceLevel::parse(raw_level) {
+        Some(l) => l,
+        None => {
+            eprintln!("invalid --trace-level {raw_level:?} (none|model|framework|system|full)");
+            return 2;
+        }
+    };
+    let evaldb = match args.opt("evaldb") {
+        Some(p) => match mlmodelscope::evaldb::EvalDb::open(p) {
+            Ok(db) => Some(Arc::new(db)),
+            Err(e) => {
+                eprintln!("open {p}: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+    let models: Vec<String> = if args.opt("models").is_some() {
+        args.list("models")
+    } else {
+        mlmodelscope::zoo::names()
+    };
+    let systems: Vec<String> = if args.opt("systems").is_some() {
+        args.list("systems")
+    } else {
+        mlmodelscope::sysmodel::table1_system_names()
+    };
+    let batch_sizes: Vec<usize> = if args.opt("batches").is_some() {
+        let mut parsed = Vec::new();
+        for raw in args.list("batches") {
+            match raw.parse::<usize>() {
+                Ok(b) if b >= 1 => parsed.push(b),
+                _ => {
+                    eprintln!("invalid --batches entry {raw:?} (positive integer expected)");
+                    return 2;
+                }
+            }
+        }
+        parsed
+    } else {
+        vec![1, 8]
+    };
+    if models.is_empty() || systems.is_empty() || batch_sizes.is_empty() {
+        eprintln!("--models, --systems and --batches must each be non-empty");
+        return 2;
+    }
+    let mut plan = Plan::new(models, systems);
+    plan.batch_sizes = batch_sizes;
+    plan.scenarios = vec![parse_scenario(args)];
+    plan.trace_level = level;
+    plan.seed = args.u64_or("seed", 42);
+    plan.parallelism = args.usize_or("jobs", 4);
+    plan.accelerator =
+        mlmodelscope::manifest::Accelerator::parse(args.opt_or("accelerator", "gpu"));
+    if args.flag("dispatch") {
+        let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
+        cfg.fair = args.flag("fair");
+        plan.dispatch = Some(cfg);
+    }
+    let server = build_platform_with_db(args, level, evaldb);
+    let outcome = run(&server, &plan);
+    println!("{}", outcome.summary());
+    for (cell, err) in &outcome.failed {
+        eprintln!("  failed {}: {err}", cell.label());
+    }
+    println!(
+        "{}",
+        mlmodelscope::analysis::model_system_matrix(&plan.models, &server.evaldb).render()
+    );
+    if args.flag("compact") {
+        match server.evaldb.compact() {
+            Ok(st) => println!(
+                "compaction: scanned {}, retained {}, dropped {}",
+                st.scanned, st.retained, st.dropped
+            ),
+            Err(e) => {
+                eprintln!("compact: {e}");
+                return 1;
+            }
+        }
+    }
+    if outcome.failed.is_empty() {
+        0
+    } else {
+        1
+    }
 }
 
 /// The REST client (§4.2): the command-line counterpart of the web UI,

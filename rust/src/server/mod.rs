@@ -418,7 +418,21 @@ impl Server {
             scenario: job.scenario.name().to_string(),
             batch_size: cfg.max_batch_size.max(1),
         };
+        // Content address of the resolved spec, with the dispatch config
+        // folded in: a batched run under a different batcher setup is a
+        // different experiment and must never memoize into this one.
+        let spec = crate::evaldb::EvalSpec::for_request(
+            &manifest,
+            &key.system,
+            &key.device,
+            &job.scenario,
+            key.batch_size,
+            job.trace_level,
+            job.seed,
+            cfg.fingerprint_json(),
+        );
         let mut record = EvalRecord::new(key, latencies, throughput);
+        record.spec_digest = Some(spec.digest());
         // The serving trace is the record's primary trace (it carries the
         // queueing attribution); session traces remain reachable through
         // the returned `session_trace_ids`.

@@ -1,0 +1,430 @@
+//! The reproducible sweep engine (§4.5.2, §5.1).
+//!
+//! The paper's headline result — an automated case study of 37 models
+//! across 4 systems — rests on a consistent, *resumable* evaluation
+//! workflow backed by a queryable result store. This module makes that
+//! cross-product a first-class plan instead of a shell loop:
+//!
+//! - a [`Plan`] is the cross-product of zoo models × system models ×
+//!   scenario templates × batch sizes, resolved into concrete [`Cell`]s;
+//! - every cell has a content-addressed spec digest
+//!   ([`crate::evaldb::EvalSpec`]) computed *before* execution, so a fresh
+//!   digest hit in the evaluation database **memoizes** the cell — the run
+//!   is skipped and the stored record is reused;
+//! - execution fans out across the registry fleet, one worker per system
+//!   (cells on the same simulated agent run sequentially, keeping the
+//!   simulated clocks — and therefore the stored latencies — deterministic);
+//! - because each executed cell's record is persisted under its digest as
+//!   soon as it completes, a crashed or interrupted sweep is **resumable**:
+//!   re-running the identical plan executes only the missing cells, and
+//!   `resume(resume(x)) == resume(x)`.
+//!
+//! Surfaced as `mlms sweep`, reported by
+//! [`crate::analysis::model_system_matrix`], and self-asserted by
+//! `benches/fig_sweep.rs`.
+
+use crate::batcher::BatcherConfig;
+use crate::evaldb::{EvalDb, EvalRecord, EvalSpec};
+use crate::manifest::{Accelerator, SystemRequirements};
+use crate::registry::Registry;
+use crate::scenario::Scenario;
+use crate::server::{EvalJob, Server};
+use crate::tracing::TraceLevel;
+use crate::util::json::Json;
+use crate::util::threadpool::parallel_map;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// A sweep plan: the declarative cross-product plus the execution knobs
+/// that are part of each cell's spec (accelerator, trace level, seed,
+/// dispatch config).
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Zoo model names.
+    pub models: Vec<String>,
+    /// System profile names (e.g. the Table-1 fleet).
+    pub systems: Vec<String>,
+    /// Scenario templates; each is resolved per batch size (see
+    /// [`resolve_scenario`]).
+    pub scenarios: Vec<Scenario>,
+    /// Batch sizes crossed with every scenario template.
+    pub batch_sizes: Vec<usize>,
+    /// Device class every cell targets. `Any` normalizes to `Gpu` — the
+    /// digest needs a concrete device for identical configs to be
+    /// identical by construction.
+    pub accelerator: Accelerator,
+    pub trace_level: TraceLevel,
+    /// Workload seed shared by every cell (part of each spec digest).
+    pub seed: u64,
+    /// When set, single-item cells run through cross-request batched
+    /// dispatch ([`Server::evaluate_batched`]) instead of the classic
+    /// per-request path; the config is folded into the spec digest.
+    pub dispatch: Option<BatcherConfig>,
+    /// Worker cap for the per-system fan-out.
+    pub parallelism: usize,
+}
+
+/// One resolved cross-product cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub model: String,
+    pub system: String,
+    /// The resolved scenario (template × batch size).
+    pub scenario: Scenario,
+    /// The batch-size coordinate this cell came from.
+    pub batch_size: usize,
+}
+
+impl Cell {
+    pub fn label(&self) -> String {
+        format!(
+            "{}@{}/{}/b{}",
+            self.model,
+            self.system,
+            self.scenario.name(),
+            self.batch_size
+        )
+    }
+}
+
+/// Resolve a scenario template at a batch size: `Batched` templates take
+/// the batch directly; single-item templates at batch 1 run as-is; at
+/// batch > 1 they degrade to a throughput run (`Batched`) covering the
+/// same number of items — the paper's Fig-6 batch-sweep semantics.
+pub fn resolve_scenario(template: &Scenario, batch: usize) -> Scenario {
+    match template {
+        Scenario::Batched { batches, .. } => {
+            Scenario::Batched { batch_size: batch.max(1), batches: *batches }
+        }
+        other if batch <= 1 => other.clone(),
+        other => {
+            let items = other.total_items().max(batch);
+            Scenario::Batched { batch_size: batch, batches: (items / batch).max(1) }
+        }
+    }
+}
+
+impl Plan {
+    /// A latency-oriented default plan: `Online` scenario, batch 1, GPU,
+    /// no tracing.
+    pub fn new(models: Vec<String>, systems: Vec<String>) -> Plan {
+        Plan {
+            models,
+            systems,
+            scenarios: vec![Scenario::Online { count: 16 }],
+            batch_sizes: vec![1],
+            accelerator: Accelerator::Gpu,
+            trace_level: TraceLevel::None,
+            seed: 42,
+            dispatch: None,
+            parallelism: 4,
+        }
+    }
+
+    fn effective_accelerator(&self) -> Accelerator {
+        match self.accelerator {
+            Accelerator::Any => Accelerator::Gpu,
+            a => a,
+        }
+    }
+
+    fn device(&self) -> &'static str {
+        self.effective_accelerator().as_str()
+    }
+
+    /// The full cross-product, in (model, system, scenario, batch) order.
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::with_capacity(
+            self.models.len()
+                * self.systems.len()
+                * self.scenarios.len()
+                * self.batch_sizes.len(),
+        );
+        for model in &self.models {
+            for system in &self.systems {
+                for template in &self.scenarios {
+                    for &batch in &self.batch_sizes {
+                        out.push(Cell {
+                            model: model.clone(),
+                            system: system.clone(),
+                            scenario: resolve_scenario(template, batch),
+                            batch_size: batch,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Whether a cell executes through cross-request batched dispatch.
+    pub fn uses_dispatch(&self, cell: &Cell) -> bool {
+        self.dispatch.is_some() && cell.scenario.batch_size() == 1
+    }
+
+    /// The cell's fully-resolved spec — `None` when the model is not in
+    /// the registry. Mirrors exactly what the execution path stores, so
+    /// plan-time digests and stored digests match by construction.
+    pub fn spec(&self, registry: &Registry, cell: &Cell) -> Option<EvalSpec> {
+        let manifest = registry.manifest(&cell.model, None)?;
+        let (batch_size, dispatch) = if self.uses_dispatch(cell) {
+            let cfg = self.dispatch.as_ref().unwrap();
+            (cfg.max_batch_size.max(1), cfg.fingerprint_json())
+        } else {
+            (cell.scenario.batch_size(), Json::Null)
+        };
+        Some(EvalSpec::for_request(
+            &manifest,
+            &cell.system,
+            self.device(),
+            &cell.scenario,
+            batch_size,
+            self.trace_level,
+            self.seed,
+            dispatch,
+        ))
+    }
+
+    /// The cell's memoization digest (`None` for unknown models).
+    pub fn digest(&self, registry: &Registry, cell: &Cell) -> Option<String> {
+        self.spec(registry, cell).map(|s| s.digest())
+    }
+
+    /// The evaluation job a cell runs.
+    pub fn job(&self, cell: &Cell) -> EvalJob {
+        let mut job = EvalJob::new(&cell.model, cell.scenario.clone());
+        job.trace_level = self.trace_level;
+        job.seed = self.seed;
+        job.requirements = SystemRequirements::on_system(&cell.system);
+        job.requirements.accelerator = self.effective_accelerator();
+        job
+    }
+
+    /// The cells a run would actually execute: the cross-product minus
+    /// fresh digest hits in `db`, deduped by digest (two cells resolving
+    /// to the identical spec execute once).
+    pub fn pending(&self, registry: &Registry, db: &EvalDb) -> Vec<Cell> {
+        self.partition(registry, db).pending.into_iter().map(|(c, _)| c).collect()
+    }
+
+    fn partition(&self, registry: &Registry, db: &EvalDb) -> Partition {
+        let mut p = Partition::default();
+        let mut seen: HashSet<String> = HashSet::new();
+        for cell in self.cells() {
+            let digest = match self.digest(registry, &cell) {
+                Some(d) => d,
+                None => {
+                    p.failed.push((cell, "model not in registry".to_string()));
+                    continue;
+                }
+            };
+            if let Some(r) = db.get_by_digest(&digest) {
+                p.memoized += 1;
+                p.records.push(r);
+                continue;
+            }
+            if !seen.insert(digest.clone()) {
+                p.memoized += 1;
+                continue;
+            }
+            p.pending.push((cell, digest));
+        }
+        p
+    }
+}
+
+#[derive(Default)]
+struct Partition {
+    pending: Vec<(Cell, String)>,
+    memoized: usize,
+    failed: Vec<(Cell, String)>,
+    records: Vec<EvalRecord>,
+}
+
+/// The result of one sweep pass.
+pub struct Outcome {
+    /// Cross-product size.
+    pub cells: usize,
+    /// Cells executed this pass.
+    pub executed: usize,
+    /// Cells skipped via digest memoization (including in-run duplicates).
+    pub memoized: usize,
+    /// Cells that could not run, with their errors.
+    pub failed: Vec<(Cell, String)>,
+    /// One record per covered cell — memoized records first, then fresh
+    /// ones in completion order.
+    pub records: Vec<EvalRecord>,
+    /// Wall-clock time of the pass, seconds.
+    pub wall_s: f64,
+}
+
+impl Outcome {
+    pub fn summary(&self) -> String {
+        format!(
+            "sweep: {} cells — {} executed, {} memoized, {} failed in {:.2}s",
+            self.cells,
+            self.executed,
+            self.memoized,
+            self.failed.len(),
+            self.wall_s
+        )
+    }
+}
+
+/// Execute a plan against a server's fleet with memoization and crash-safe
+/// resume (see the module docs). Cells are grouped by system: groups run
+/// in parallel (the fleet dimension), cells within a group sequentially
+/// (one simulated agent's clock must not be shared by concurrent runs).
+pub fn run(server: &Arc<Server>, plan: &Plan) -> Outcome {
+    let t0 = std::time::Instant::now();
+    let total = plan.cells().len();
+    let part = plan.partition(&server.registry, &server.evaldb);
+    let mut failed = part.failed;
+    let mut records = part.records;
+
+    let mut groups: Vec<(String, Vec<(Cell, String)>)> = Vec::new();
+    for (cell, digest) in part.pending {
+        match groups.iter().position(|(s, _)| *s == cell.system) {
+            Some(i) => groups[i].1.push((cell, digest)),
+            None => groups.push((cell.system.clone(), vec![(cell, digest)])),
+        }
+    }
+    let workers = plan.parallelism.max(1).min(groups.len().max(1));
+    let server2 = server.clone();
+    let plan2 = plan.clone();
+    let group_results = parallel_map(groups, workers, move |(_, cells)| {
+        let mut out = Vec::with_capacity(cells.len());
+        for (cell, _digest) in cells {
+            let job = plan2.job(&cell);
+            let result = if plan2.uses_dispatch(&cell) {
+                server2
+                    .evaluate_batched(&job, plan2.dispatch.as_ref().unwrap())
+                    .map(|b| vec![b.record])
+                    .map_err(|e| e.to_string())
+            } else {
+                server2.evaluate(&job).map_err(|e| e.to_string())
+            };
+            out.push((cell, result));
+        }
+        out
+    });
+
+    let mut executed = 0usize;
+    for (cell, result) in group_results.into_iter().flatten() {
+        match result {
+            Ok(mut rs) => {
+                executed += 1;
+                records.append(&mut rs);
+            }
+            Err(e) => failed.push((cell, e)),
+        }
+    }
+    Outcome {
+        cells: total,
+        executed,
+        memoized: part.memoized,
+        failed,
+        records,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evaldb::EvalQuery;
+
+    fn small_plan() -> Plan {
+        let mut plan = Plan::new(
+            vec!["BVLC_AlexNet".to_string(), "MobileNet_v1_0.25_128".to_string()],
+            vec!["aws_p3".to_string(), "ibm_p8".to_string()],
+        );
+        plan.scenarios = vec![Scenario::Online { count: 4 }];
+        plan.batch_sizes = vec![1, 8];
+        plan.parallelism = 2;
+        plan
+    }
+
+    #[test]
+    fn cells_are_the_full_cross_product() {
+        let plan = small_plan();
+        let cells = plan.cells();
+        assert_eq!(cells.len(), 2 * 2 * 1 * 2);
+        // Batch 1 keeps the template; batch 8 resolves to a throughput run
+        // over the same item count.
+        let b1 = cells.iter().find(|c| c.batch_size == 1).unwrap();
+        assert_eq!(b1.scenario, Scenario::Online { count: 4 });
+        let b8 = cells.iter().find(|c| c.batch_size == 8).unwrap();
+        assert_eq!(b8.scenario, Scenario::Batched { batch_size: 8, batches: 1 });
+    }
+
+    #[test]
+    fn cold_sweep_executes_then_memoizes() {
+        let server = Server::sim_platform(TraceLevel::None);
+        let plan = small_plan();
+        let cold = run(&server, &plan);
+        assert_eq!(cold.cells, 8);
+        assert_eq!(cold.executed, 8, "failures: {:?}", cold.failed);
+        assert_eq!(cold.memoized, 0);
+        assert_eq!(server.evaldb.len(), 8, "every cell stored exactly once");
+        // Each cell's digest is now a fresh hit.
+        for cell in plan.cells() {
+            let d = plan.digest(&server.registry, &cell).unwrap();
+            assert!(server.evaldb.get_by_digest(&d).is_some(), "{}", cell.label());
+        }
+        assert!(plan.pending(&server.registry, &server.evaldb).is_empty());
+        // Second pass: pure memoization, nothing re-runs or re-stores.
+        let warm = run(&server, &plan);
+        assert_eq!(warm.executed, 0);
+        assert_eq!(warm.memoized, 8);
+        assert_eq!(warm.records.len(), 8);
+        assert_eq!(server.evaldb.len(), 8);
+    }
+
+    #[test]
+    fn sweep_records_are_queryable_per_cell() {
+        let server = Server::sim_platform(TraceLevel::None);
+        let plan = small_plan();
+        run(&server, &plan);
+        for cell in plan.cells() {
+            let q = EvalQuery {
+                model: Some(cell.model.clone()),
+                system: Some(cell.system.clone()),
+                scenario: Some(cell.scenario.name().to_string()),
+                batch_size: Some(cell.scenario.batch_size()),
+                ..Default::default()
+            };
+            assert_eq!(server.evaldb.latest(&q).len(), 1, "{}", cell.label());
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_reported_not_fatal() {
+        let server = Server::sim_platform(TraceLevel::None);
+        let mut plan = small_plan();
+        plan.models.push("NotInZoo".to_string());
+        let out = run(&server, &plan);
+        assert_eq!(out.cells, 12);
+        assert_eq!(out.executed, 8);
+        assert_eq!(out.failed.len(), 4, "{:?}", out.failed);
+        assert!(out.failed.iter().all(|(c, _)| c.model == "NotInZoo"));
+    }
+
+    #[test]
+    fn dispatch_cells_memoize_under_their_config() {
+        let server = Server::sim_platform(TraceLevel::None);
+        let mut plan = small_plan();
+        plan.scenarios = vec![Scenario::Poisson { rate: 2000.0, count: 16 }];
+        plan.batch_sizes = vec![1];
+        plan.dispatch = Some(BatcherConfig::new(8, 10.0));
+        let cold = run(&server, &plan);
+        assert_eq!(cold.executed, 4, "failures: {:?}", cold.failed);
+        let warm = run(&server, &plan);
+        assert_eq!(warm.executed, 0);
+        assert_eq!(warm.memoized, 4);
+        // A different dispatch config is a different experiment.
+        let mut other = plan.clone();
+        other.dispatch = Some(BatcherConfig::new(4, 2.0));
+        assert_eq!(other.pending(&server.registry, &server.evaldb).len(), 4);
+    }
+}

@@ -25,7 +25,7 @@ mod kernels;
 mod profile;
 
 pub use kernels::{dominant_kernels, KernelSim};
-pub use profile::{systems, SystemProfile, INTERCONNECTS};
+pub use profile::{systems, table1_system_names, SystemProfile, INTERCONNECTS};
 pub use profile::systems as profile_map;
 
 use crate::util::json::Json;

@@ -53,6 +53,13 @@ impl SystemProfile {
 pub const INTERCONNECTS: &[(&str, f64, f64)] =
     &[("pcie3", 16.0, 12.0), ("nvlink", 40.0, 33.0)];
 
+/// The paper's four Table-1 systems, in table order — the simulated-agent
+/// fleet the standard platform attaches and the default sweep targets
+/// (`local` is excluded: it is the real host, not a simulated profile).
+pub fn table1_system_names() -> Vec<String> {
+    ["aws_p3", "aws_g3", "aws_p2", "ibm_p8"].iter().map(|s| s.to_string()).collect()
+}
+
 /// The paper's Table 1 systems (plus `local` — the actual host, used when
 /// agents run real PJRT executions rather than simulations).
 pub fn systems() -> BTreeMap<String, SystemProfile> {

@@ -1,0 +1,43 @@
+//! Small filesystem helpers shared by the caches and segment logs.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Publish a file atomically: write the bytes to a unique temp name in the
+/// same directory, then rename over the target. Readers can never observe
+/// a half-written file, and concurrent writers (threads or processes)
+/// cannot collide on the temp name — last rename wins, which is safe
+/// whenever writers produce equivalent or self-contained content (asset
+/// cache materialization, segment-log compaction).
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    static TMP_ID: AtomicU64 = AtomicU64::new(0);
+    let id = TMP_ID.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{id}", std::process::id()));
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_replaces_content() {
+        let path = std::env::temp_dir()
+            .join(format!("mlms_fsatomic_{}", std::process::id()))
+            .join("out.txt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        // No temp files left behind.
+        let leftovers = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp."))
+            .count();
+        assert_eq!(leftovers, 0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

@@ -179,6 +179,11 @@ pub fn all() -> Vec<ZooModel> {
     ]
 }
 
+/// All zoo model names in Table-2 order (sweep defaults, CLI listings).
+pub fn names() -> Vec<String> {
+    all().into_iter().map(|m| m.name).collect()
+}
+
 /// Look up a zoo model by name (case-sensitive, as registered).
 pub fn by_name(name: &str) -> Option<ZooModel> {
     all().into_iter().find(|m| m.name == name)

@@ -1,0 +1,244 @@
+//! Sharded evaluation-database tier: crash recovery, concurrent writers,
+//! on-disk compaction, and legacy single-file interop.
+
+use mlmodelscope::evaldb::{EvalDb, EvalKey, EvalQuery, EvalRecord};
+use mlmodelscope::util::sha256::sha256_hex;
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+fn key(model: &str, batch: usize) -> EvalKey {
+    EvalKey {
+        model: model.into(),
+        model_version: "1.0.0".into(),
+        framework: "TensorFlow".into(),
+        framework_version: "1.15.0".into(),
+        system: "aws_p3".into(),
+        device: "gpu".into(),
+        scenario: "online".into(),
+        batch_size: batch,
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlms_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn sharded_db_persists_across_reopen() {
+    let dir = temp_dir("evaldb_sharded");
+    {
+        let db = EvalDb::open_sharded(&dir, 8).unwrap();
+        assert_eq!(db.shard_count(), 8);
+        for i in 0..40u64 {
+            let mut r = EvalRecord::new(key(&format!("m{i}"), 1), vec![0.01], i as f64);
+            r.spec_digest = Some(sha256_hex(format!("spec-{i}").as_bytes()));
+            db.put(r);
+        }
+        assert_eq!(db.len(), 40);
+    }
+    // Records spread over more than one segment file.
+    let segments = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .filter(|e| e.metadata().map(|m| m.len() > 0).unwrap_or(false))
+        .count();
+    assert!(segments > 1, "expected several non-empty segments, got {segments}");
+    let db = EvalDb::open_sharded(&dir, 8).unwrap();
+    assert_eq!(db.len(), 40);
+    // Digest index rebuilt from disk; sequence numbering continues.
+    let d = sha256_hex(b"spec-7");
+    assert_eq!(db.get_by_digest(&d).unwrap().throughput, 7.0);
+    let seq = db.put(EvalRecord::new(key("fresh", 1), vec![0.01], 1.0));
+    assert_eq!(seq, 41);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: truncating the final line of a segment mid-record must not
+/// panic `EvalDb::open` — all complete records are recovered and the torn
+/// tail is dropped.
+#[test]
+fn torn_tail_is_dropped_on_recovery() {
+    let dir = temp_dir("evaldb_torn");
+    {
+        let db = EvalDb::open_sharded(&dir, 1).unwrap();
+        for i in 0..5u64 {
+            db.put(EvalRecord::new(key(&format!("m{i}"), 1), vec![0.01, 0.02], i as f64));
+        }
+    }
+    let seg = dir.join("segment-00.jsonl");
+    let text = std::fs::read_to_string(&seg).unwrap();
+    assert_eq!(text.lines().count(), 5);
+    // Simulate a crash mid-append: cut the last record's line in half.
+    let cut = text.trim_end().len() - 25;
+    std::fs::write(&seg, &text[..cut]).unwrap();
+
+    let db = EvalDb::open_sharded(&dir, 1).unwrap();
+    assert_eq!(db.len(), 4, "four complete records recovered, torn tail dropped");
+    for i in 0..4u64 {
+        assert_eq!(db.query(&EvalQuery::model(&format!("m{i}"))).len(), 1);
+    }
+    assert!(db.query(&EvalQuery::model("m4")).is_empty(), "torn record gone");
+    // Recovery repaired the file to its clean prefix — a later append must
+    // not concatenate onto the corrupt partial line.
+    let repaired = std::fs::read_to_string(&seg).unwrap();
+    assert_eq!(repaired.lines().count(), 4);
+    assert!(repaired.ends_with('\n'), "segment rewritten to a newline-terminated prefix");
+    // The store keeps working: appends land after the recovered prefix.
+    let seq = db.put(EvalRecord::new(key("after_crash", 1), vec![0.01], 1.0));
+    assert_eq!(seq, 5, "sequence resumes after the highest recovered seq");
+    let db = EvalDb::open_sharded(&dir, 1).unwrap();
+    assert_eq!(db.len(), 5);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: 8 threads putting and querying disjoint and overlapping keys
+/// against the sharded db — no lost records, and `latest` returns the
+/// max-sequence record per key.
+#[test]
+fn concurrent_writers_lose_nothing() {
+    const THREADS: usize = 8;
+    const DISJOINT_PUTS: usize = 40;
+    const SHARED_PUTS: usize = 10;
+    let db = Arc::new(EvalDb::in_memory_sharded(8));
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let shared_digest = sha256_hex(b"the-one-shared-spec");
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let db = db.clone();
+            let barrier = barrier.clone();
+            let shared_digest = shared_digest.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                let model = format!("model_{t}");
+                let mut shared_seqs = Vec::with_capacity(SHARED_PUTS);
+                for i in 0..DISJOINT_PUTS {
+                    db.put(EvalRecord::new(key(&model, 1), vec![0.01], i as f64));
+                    // Interleave reads with the writes of other threads.
+                    let seen = db.query(&EvalQuery::model(&model)).len();
+                    assert!(seen >= i + 1, "own writes must be visible");
+                }
+                for _ in 0..SHARED_PUTS {
+                    let mut r = EvalRecord::new(key("shared", 1), vec![0.02], t as f64);
+                    r.spec_digest = Some(shared_digest.clone());
+                    shared_seqs.push(db.put(r));
+                }
+                shared_seqs
+            })
+        })
+        .collect();
+    let mut all_shared_seqs = Vec::new();
+    for h in handles {
+        all_shared_seqs.extend(h.join().unwrap());
+    }
+    assert_eq!(db.len(), THREADS * (DISJOINT_PUTS + SHARED_PUTS), "no lost records");
+    // Disjoint keys: every put visible, latest is the max-seq record.
+    for t in 0..THREADS {
+        let model = format!("model_{t}");
+        let recs = db.query(&EvalQuery::model(&model));
+        assert_eq!(recs.len(), DISJOINT_PUTS);
+        let max_seq = recs.iter().map(|r| r.seq).max().unwrap();
+        let latest = db.latest(&EvalQuery::model(&model));
+        assert_eq!(latest.len(), 1, "one distinct key per thread");
+        assert_eq!(latest[0].seq, max_seq, "latest returns the max-sequence record");
+    }
+    // Overlapping key: all 80 retained, latest == global max seq, and the
+    // digest index agrees.
+    let shared = db.query(&EvalQuery::model("shared"));
+    assert_eq!(shared.len(), THREADS * SHARED_PUTS);
+    let max_shared = *all_shared_seqs.iter().max().unwrap();
+    let latest = db.latest(&EvalQuery::model("shared"));
+    assert_eq!(latest.len(), 1);
+    assert_eq!(latest[0].seq, max_shared);
+    assert_eq!(db.get_by_digest(&shared_digest).unwrap().seq, max_shared);
+}
+
+#[test]
+fn compaction_rewrites_segments_on_disk() {
+    let dir = temp_dir("evaldb_compact");
+    let db = EvalDb::open_sharded(&dir, 2).unwrap();
+    let digest = sha256_hex(b"repeated-spec");
+    for tput in 0..20 {
+        let mut r = EvalRecord::new(key("m", 1), vec![0.01], tput as f64);
+        r.spec_digest = Some(digest.clone());
+        db.put(r);
+    }
+    db.put(EvalRecord::new(key("other", 1), vec![0.02], 1.0));
+    let before: u64 = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.metadata().unwrap().len())
+        .sum();
+    let stats = db.compact().unwrap();
+    assert_eq!(stats.scanned, 21);
+    assert_eq!(stats.retained, 2);
+    assert_eq!(stats.dropped, 19);
+    let after: u64 = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.metadata().unwrap().len())
+        .sum();
+    assert!(after < before, "segment logs shrink on disk: {after} vs {before}");
+    // Latest-wins: the surviving record is the newest, in memory and after
+    // replay.
+    assert_eq!(db.get_by_digest(&digest).unwrap().throughput, 19.0);
+    let db = EvalDb::open_sharded(&dir, 2).unwrap();
+    assert_eq!(db.len(), 2);
+    assert_eq!(db.get_by_digest(&digest).unwrap().throughput, 19.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shard-count change moves an identity's route; compaction must still
+/// collapse duplicates of one spec that ended up in different shards.
+#[test]
+fn compaction_dedupes_across_shards_after_resharding() {
+    let dir = temp_dir("evaldb_reshard");
+    // Pick a digest that routes away from shard 0 under 4 shards, so the
+    // 1-shard-era record (in segment-00) and the 4-shard-era record land
+    // in different segments.
+    let probe = EvalDb::in_memory_sharded(4);
+    let digest = (0u32..)
+        .map(|i| sha256_hex(format!("reshard-{i}").as_bytes()))
+        .find(|d| probe.shard_of(d) != 0)
+        .unwrap();
+    {
+        let db = EvalDb::open_sharded(&dir, 1).unwrap();
+        let mut r = EvalRecord::new(key("m", 1), vec![0.01], 1.0);
+        r.spec_digest = Some(digest.clone());
+        db.put(r);
+    }
+    let db = EvalDb::open_sharded(&dir, 4).unwrap();
+    let mut r = EvalRecord::new(key("m", 1), vec![0.01], 2.0);
+    r.spec_digest = Some(digest.clone());
+    db.put(r);
+    assert_eq!(db.len(), 2);
+    assert_eq!(db.get_by_digest(&digest).unwrap().throughput, 2.0, "newest wins pre-compact");
+    let stats = db.compact().unwrap();
+    assert_eq!(stats.retained, 1, "cross-shard duplicate collapsed");
+    assert_eq!(db.len(), 1);
+    assert_eq!(db.get_by_digest(&digest).unwrap().throughput, 2.0);
+    // The dedup survives replay.
+    let db = EvalDb::open_sharded(&dir, 4).unwrap();
+    assert_eq!(db.len(), 1);
+    assert_eq!(db.get_by_digest(&digest).unwrap().throughput, 2.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_jsonl_file_opens_single_shard() {
+    let dir = temp_dir("evaldb_legacy");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("history.jsonl");
+    {
+        let db = EvalDb::open(&path).unwrap();
+        assert_eq!(db.shard_count(), 1);
+        db.put(EvalRecord::new(key("m", 1), vec![0.01], 5.0));
+    }
+    // The file is exactly where the caller said, one record per line.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 1);
+    let db = EvalDb::open(&path).unwrap();
+    assert_eq!(db.len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -179,7 +179,7 @@ fn eval_key_json_roundtrip_property() {
             scenario,
             batch_size: 1 + rng.below(512) as usize,
         };
-        assert_eq!(EvalKey::from_json(&key.to_json()), key);
+        assert_eq!(EvalKey::from_json(&key.to_json()), Some(key));
     });
 }
 

@@ -1,0 +1,242 @@
+//! Property tests for the reproducible sweep engine: digest canonicality,
+//! collision-free in-shard routing, cross-product/memoization accounting,
+//! and resume idempotence.
+
+use mlmodelscope::agent::sim_agent;
+use mlmodelscope::evaldb::{EvalDb, EvalRecord, EvalSpec};
+use mlmodelscope::registry::Registry;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::Server;
+use mlmodelscope::sweep::{run, Plan};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::traceserver::TraceServer;
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::util::json::Json;
+use mlmodelscope::util::sha256::sha256_hex;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn spec(model: &str, system: &str, batch: usize, seed: u64, level: &str) -> EvalSpec {
+    EvalSpec {
+        manifest: Json::obj(vec![
+            ("name", Json::str(model)),
+            ("version", Json::str("1.0.0")),
+            ("framework", Json::obj(vec![("name", Json::str("TensorFlow"))])),
+        ]),
+        system: system.into(),
+        device: "gpu".into(),
+        scenario: Scenario::Online { count: 8 }.to_json(),
+        batch_size: batch,
+        trace_level: level.into(),
+        seed,
+        dispatch: Json::Null,
+    }
+}
+
+/// Property: the digest is invariant under JSON key reordering — canonical
+/// serialization sorts object keys, so any textual ordering of the same
+/// fields hashes identically.
+#[test]
+fn digest_invariant_under_json_key_reordering() {
+    let s = spec("ResNet_v1_50", "aws_p3", 1, 42, "none");
+    let canon = s.canonical();
+    // Re-serialize the canonical object with its top-level keys reversed.
+    let obj = canon.as_obj().unwrap();
+    let mut reordered = String::from("{");
+    for (i, (k, v)) in obj.iter().rev().enumerate() {
+        if i > 0 {
+            reordered.push(',');
+        }
+        reordered.push('"');
+        reordered.push_str(k);
+        reordered.push_str("\":");
+        reordered.push_str(&v.to_string());
+    }
+    reordered.push('}');
+    let parsed = Json::parse(&reordered).unwrap();
+    assert_eq!(parsed.to_string(), canon.to_string(), "canonicalization sorts keys");
+    assert_eq!(sha256_hex(parsed.to_string().as_bytes()), s.digest());
+
+    // Nested objects too: a manifest built with a different field insertion
+    // order produces the identical digest.
+    let mut swapped = s.clone();
+    swapped.manifest = Json::obj(vec![
+        ("framework", Json::obj(vec![("name", Json::str("TensorFlow"))])),
+        ("version", Json::str("1.0.0")),
+        ("name", Json::str("ResNet_v1_50")),
+    ]);
+    assert_eq!(swapped.digest(), s.digest());
+}
+
+/// Property: distinct specs never collide — every field perturbation
+/// yields a distinct digest, and the sharded digest index never aliases
+/// two specs even when they share a shard.
+#[test]
+fn distinct_specs_never_collide_in_shard_routing() {
+    let mut specs = Vec::new();
+    for m in 0..5 {
+        for sys in ["aws_p3", "aws_g3", "ibm_p8"] {
+            for batch in [1usize, 8, 32] {
+                for seed in [1u64, 2] {
+                    for level in ["none", "full"] {
+                        specs.push(spec(&format!("model_{m}"), sys, batch, seed, level));
+                    }
+                }
+            }
+        }
+    }
+    let digests: Vec<String> = specs.iter().map(|s| s.digest()).collect();
+    let unique: std::collections::HashSet<&String> = digests.iter().collect();
+    assert_eq!(unique.len(), digests.len(), "all {} specs distinct", digests.len());
+
+    // Fewer shards than specs forces shard sharing; the per-shard index
+    // must still resolve each digest to exactly its own record.
+    let db = EvalDb::in_memory_sharded(4);
+    for (i, d) in digests.iter().enumerate() {
+        let mut r = EvalRecord::new(
+            mlmodelscope::evaldb::EvalKey {
+                model: format!("model_{i}"),
+                model_version: "1.0.0".into(),
+                framework: "TensorFlow".into(),
+                framework_version: "1.15.0".into(),
+                system: "aws_p3".into(),
+                device: "gpu".into(),
+                scenario: "online".into(),
+                batch_size: 1,
+            },
+            vec![0.01],
+            i as f64,
+        );
+        r.spec_digest = Some(d.clone());
+        db.put(r);
+    }
+    let mut shards_used = std::collections::HashSet::new();
+    for (i, d) in digests.iter().enumerate() {
+        // Routing is deterministic and bounded.
+        let shard = db.shard_of(d);
+        assert_eq!(shard, db.shard_of(d));
+        assert!(shard < db.shard_count());
+        shards_used.insert(shard);
+        let hit = db.get_by_digest(d).expect("every digest resolvable");
+        assert_eq!(hit.throughput, i as f64, "digest {d} aliased another record");
+        assert_eq!(hit.spec_digest.as_deref(), Some(d.as_str()));
+    }
+    assert!(shards_used.len() > 1, "digests spread over shards: {shards_used:?}");
+}
+
+fn platform_with_db(db: Arc<EvalDb>, systems: &[&str]) -> Arc<Server> {
+    let server = Server::new(Registry::new(), db, TraceServer::new());
+    server.register_zoo();
+    for sys in systems {
+        let (agent, _sim, _tracer) = sim_agent(
+            sys,
+            Device::Gpu,
+            TraceLevel::None,
+            server.evaldb.clone(),
+            server.traces.clone(),
+        );
+        server.attach_local_agent(agent);
+    }
+    server
+}
+
+fn test_plan(models: &[&str], systems: &[&str]) -> Plan {
+    let mut plan = Plan::new(
+        models.iter().map(|m| m.to_string()).collect(),
+        systems.iter().map(|s| s.to_string()).collect(),
+    );
+    plan.scenarios = vec![Scenario::Online { count: 4 }];
+    plan.batch_sizes = vec![1, 8];
+    plan.parallelism = 2;
+    plan
+}
+
+/// Property: the pending set equals the cross-product minus memoized hits.
+#[test]
+fn plan_cells_equal_cross_product_minus_memoized() {
+    let db = Arc::new(EvalDb::in_memory());
+    let server = platform_with_db(db, &["aws_p3", "ibm_p8"]);
+    let full = test_plan(&["BVLC_AlexNet", "MobileNet_v1_0.25_128"], &["aws_p3", "ibm_p8"]);
+    // Cold store: pending IS the cross-product.
+    let all_cells = full.cells();
+    assert_eq!(all_cells.len(), 8);
+    let pending = full.pending(&server.registry, &server.evaldb);
+    assert_eq!(pending, all_cells);
+
+    // Pre-measure a sub-plan, then the pending set is exactly the
+    // difference.
+    let sub = test_plan(&["BVLC_AlexNet"], &["aws_p3"]);
+    let sub_out = run(&server, &sub);
+    assert_eq!(sub_out.executed, 2);
+    let pending = full.pending(&server.registry, &server.evaldb);
+    assert_eq!(pending.len(), 6, "8 cells minus 2 memoized hits");
+    let memo_labels: Vec<String> = sub.cells().iter().map(|c| c.label()).collect();
+    for cell in &pending {
+        assert!(
+            !memo_labels.contains(&cell.label()),
+            "memoized cell {} must not be pending",
+            cell.label()
+        );
+    }
+    // Executing the remainder covers the full plan.
+    let out = run(&server, &full);
+    assert_eq!(out.executed, 6);
+    assert_eq!(out.memoized, 2);
+    assert_eq!(server.evaldb.len(), 8);
+}
+
+/// Property: resume(resume(x)) == resume(x) — a second resume of an
+/// interrupted sweep executes nothing and changes nothing, even across
+/// process "restarts" (fresh servers over the same persistent store).
+#[test]
+fn resume_of_resume_is_identity() {
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("mlms_sweep_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let models = ["BVLC_AlexNet", "MobileNet_v1_0.25_128"];
+    let systems = ["aws_p3", "ibm_p8"];
+    let full = test_plan(&models, &systems);
+
+    // "Crash" after a partial sweep: only one system's cells ran.
+    {
+        let db = Arc::new(EvalDb::open_sharded(&dir, 4).unwrap());
+        let server = platform_with_db(db, &systems);
+        let partial = test_plan(&models, &["aws_p3"]);
+        let out = run(&server, &partial);
+        assert_eq!(out.executed, 4);
+    }
+
+    // Resume on a fresh platform: only the missing cells execute.
+    let resume1 = {
+        let db = Arc::new(EvalDb::open_sharded(&dir, 4).unwrap());
+        let server = platform_with_db(db, &systems);
+        let out = run(&server, &full);
+        assert_eq!(out.executed, 4, "only the ibm_p8 half runs: {:?}", out.failed);
+        assert_eq!(out.memoized, 4);
+        assert_eq!(server.evaldb.len(), 8);
+        out
+    };
+
+    // Resuming the resumed sweep is a fixpoint.
+    let db = Arc::new(EvalDb::open_sharded(&dir, 4).unwrap());
+    let server = platform_with_db(db, &systems);
+    let resume2 = run(&server, &full);
+    let resume3 = run(&server, &full);
+    for out in [&resume2, &resume3] {
+        assert_eq!(out.executed, 0);
+        assert_eq!(out.memoized, 8);
+        assert!(out.failed.is_empty());
+        assert_eq!(out.records.len(), 8);
+    }
+    assert_eq!(server.evaldb.len(), 8, "no duplicate records accumulate");
+    // The memoized record sets are identical (same digests, same seqs).
+    let ids = |o: &mlmodelscope::sweep::Outcome| {
+        let mut v: Vec<(u64, Option<String>)> =
+            o.records.iter().map(|r| (r.seq, r.spec_digest.clone())).collect();
+        v.sort();
+        v
+    };
+    assert_eq!(ids(&resume1), ids(&resume2));
+    assert_eq!(ids(&resume2), ids(&resume3));
+    let _ = std::fs::remove_dir_all(&dir);
+}
