@@ -1,0 +1,225 @@
+//! `fig_fleet` — distributed fleet serving over the wire, with real agent
+//! *processes* (spawned `mlms agent serve` children, TTL heartbeats, chaos
+//! faults), against the MLModelScope scalability story (§4.3–4.5) and its
+//! companion distributed-platform paper.
+//!
+//! Self-asserted acceptance gates:
+//!
+//! 1. **Fleet throughput scales** — the same batched job dispatched across
+//!    a 3-process wire fleet achieves ≥1.5× the single-agent throughput
+//!    (items / makespan over the agents' own clocks — wall-clock noise on
+//!    the runner cannot fail this gate).
+//! 2. **Kill-one-mid-sweep is exactly-once** — a model×system sweep over
+//!    the fleet, with a chaos plan killing one member after two batches,
+//!    completes every cell exactly once: unique spec digests, one stored
+//!    record per cell, and at least one record carrying the requeue.
+
+use mlmodelscope::batcher::BatcherConfig;
+use mlmodelscope::benchkit::{bench_header, Table};
+use mlmodelscope::registry::registry_service;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sweep::Plan;
+use mlmodelscope::tracing::TraceLevel;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Kills the child on drop so a failed assertion never leaks processes.
+struct AgentProc(Child);
+
+impl Drop for AgentProc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn spawn_agent(registry_addr: &str, system: &str, chaos: Option<&str>) -> AgentProc {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_mlms"));
+    cmd.args([
+        "agent",
+        "serve",
+        "--system",
+        system,
+        "--device",
+        "gpu",
+        "--trace-level",
+        "none",
+        "--listen",
+        "127.0.0.1:0",
+        "--registry",
+        registry_addr,
+        "--ttl-secs",
+        "5",
+        "--heartbeat-ms",
+        "400",
+    ]);
+    if let Some(plan) = chaos {
+        cmd.args(["--chaos", plan, "--chaos-seed", "7"]);
+    }
+    AgentProc(
+        cmd.stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn mlms agent serve"),
+    )
+}
+
+fn wait_for_members(server: &Arc<Server>, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let joined = server.registry.agents().len();
+        if joined >= n {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "only {joined}/{n} agent process(es) joined the registry in 30s"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn main() {
+    bench_header(
+        "fig_fleet",
+        "distributed fleet serving — remote batch dispatch + heartbeat failover",
+    );
+
+    // The controller: registry + zoo + eval DB in this process, the
+    // registry served over the wire for `mlms agent serve --registry`.
+    let server = Server::standalone();
+    server.register_zoo();
+    let registry_rpc = mlmodelscope::wire::RpcServer::serve(
+        "127.0.0.1:0",
+        registry_service(server.registry.clone()),
+    )
+    .unwrap();
+    let registry_addr = registry_rpc.addr().to_string();
+    println!("fleet registry on {registry_addr}\n");
+
+    let job = || {
+        let mut j = EvalJob::new(
+            "ResNet_v1_50",
+            Scenario::FixedQps { qps: 3000.0, count: 96 },
+        );
+        j.trace_level = TraceLevel::None;
+        j.seed = 42;
+        j
+    };
+    let cfg = BatcherConfig::new(8, 10.0);
+
+    // ── part 1: throughput, one process vs a 3-process fleet ────────────
+    let _agent_a = spawn_agent(&registry_addr, "aws_p3", None);
+    wait_for_members(&server, 1);
+    let single = server.evaluate_batched(&job(), &cfg).unwrap();
+    assert_eq!(single.record.meta.f64_or("agents", 0.0), 1.0);
+    assert_eq!(single.record.meta.f64_or("remote_agents", 0.0), 1.0);
+    assert_eq!(single.outcome.outputs.len(), 96, "all requests served remotely");
+
+    let _agent_b = spawn_agent(&registry_addr, "aws_p3", None);
+    let _agent_c = spawn_agent(&registry_addr, "ibm_p8", None);
+    wait_for_members(&server, 3);
+    let fleet = server.evaluate_batched(&job(), &cfg).unwrap();
+    assert_eq!(fleet.record.meta.f64_or("agents", 0.0), 3.0);
+    assert_eq!(fleet.record.meta.f64_or("remote_agents", 0.0), 3.0);
+    assert_eq!(fleet.outcome.outputs.len(), 96);
+
+    let mut t = Table::new(
+        "fleet throughput — 96-request FixedQps job, batch 8 (agent-clock makespan)",
+        &["Fleet", "Agents", "Makespan (s)", "Throughput (items/s)"],
+    );
+    t.row(&[
+        "1 process".into(),
+        "1".into(),
+        format!("{:.4}", single.outcome.makespan_s()),
+        format!("{:.1}", single.record.throughput),
+    ]);
+    t.row(&[
+        "3 processes".into(),
+        "3".into(),
+        format!("{:.4}", fleet.outcome.makespan_s()),
+        format!("{:.1}", fleet.record.throughput),
+    ]);
+    println!("{}", t.render());
+    let _ = t.save_csv("target/bench-results/fig_fleet.csv");
+    let speedup = fleet.record.throughput / single.record.throughput.max(1e-12);
+    assert!(
+        fleet.record.throughput > single.record.throughput * 1.5,
+        "acceptance: 3-process fleet must beat one agent by ≥1.5x (got {speedup:.2}x)"
+    );
+    println!("acceptance: fleet throughput {speedup:.2}x the single agent\n");
+
+    // ── part 2: kill one member mid-sweep, exactly-once storage ─────────
+    // A fourth member that dies after serving two batches: the chaos kill
+    // exits the process for real — heartbeats stop, the lease lapses, and
+    // the in-flight batch fails over.
+    let mut doomed = spawn_agent(&registry_addr, "aws_p3", Some("kill:PredictBatch:2"));
+    wait_for_members(&server, 4);
+
+    let mut plan = Plan::new(
+        vec![
+            "BVLC_AlexNet".to_string(),
+            "MobileNet_v1_0.25_128".to_string(),
+            "ResNet_v1_50".to_string(),
+        ],
+        vec!["aws_p3".to_string(), "ibm_p8".to_string()],
+    );
+    plan.scenarios = vec![Scenario::FixedQps { qps: 4000.0, count: 24 }];
+    plan.batch_sizes = vec![1];
+    plan.seed = 23;
+    plan.parallelism = 1;
+    plan.dispatch = Some(BatcherConfig::new(4, 10.0));
+    let cells = plan.cells();
+    assert_eq!(cells.len(), 6);
+
+    let stored_before = server.evaldb.len();
+    let outcome = mlmodelscope::sweep::run(&server, &plan);
+    println!("{}", outcome.summary());
+    assert!(
+        outcome.failed.is_empty(),
+        "acceptance: sweep must survive the mid-run kill: {:?}",
+        outcome.failed
+    );
+    assert_eq!(outcome.executed, 6);
+
+    // The doomed process actually died (the chaos kill exited it).
+    let death_deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if doomed.0.try_wait().expect("try_wait").is_some() {
+            break;
+        }
+        assert!(
+            Instant::now() < death_deadline,
+            "chaos kill never terminated the doomed agent"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Exactly-once: one new record per cell, all spec digests distinct,
+    // and the failover shows up in at least one record's accounting.
+    assert_eq!(server.evaldb.len(), stored_before + 6, "one record per cell");
+    let mut digests = std::collections::HashSet::new();
+    let mut requeues = 0.0;
+    for cell in &cells {
+        let digest = plan.digest(&server.registry, cell).expect("zoo model resolves");
+        assert!(digests.insert(digest.clone()), "digest collision at {}", cell.label());
+        let record = server
+            .evaldb
+            .get_by_digest(&digest)
+            .unwrap_or_else(|| panic!("cell {} missing from the store", cell.label()));
+        requeues += record.meta.f64_or("requeued_batches", 0.0);
+    }
+    assert_eq!(digests.len(), 6, "acceptance: every cell stored under a unique digest");
+    assert!(
+        requeues >= 1.0,
+        "acceptance: the kill must have landed mid-batch (requeue recorded)"
+    );
+    println!(
+        "acceptance: kill-one-mid-sweep completed all {} cells exactly once ({} requeue(s))\n",
+        cells.len(),
+        requeues
+    );
+    registry_rpc.stop();
+}

@@ -146,17 +146,13 @@ impl Agent {
         self.register_with_ttl(registry, endpoint, Some(self.config.ttl))
     }
 
-    /// As [`Agent::register`] with an explicit TTL. In-process agents pass
-    /// `None`: they live exactly as long as the server and must not expire
-    /// mid-evaluation.
-    pub fn register_with_ttl(
-        &self,
-        registry: &Registry,
-        endpoint: &str,
-        ttl: Option<Duration>,
-    ) -> String {
+    /// The agent's registry advertisement (HW/SW stack + models) for a
+    /// given serving endpoint — what `register_agent` publishes, whether
+    /// in-process or over the wire (`mlms agent serve --registry`). The id
+    /// is left empty: the registry assigns one at registration.
+    pub fn info(&self, endpoint: &str) -> AgentInfo {
         let (fw, fw_ver) = self.predictor.framework();
-        let info = AgentInfo {
+        AgentInfo {
             id: String::new(),
             endpoint: endpoint.to_string(),
             framework: fw,
@@ -168,8 +164,26 @@ impl Agent {
             host_memory_gb: self.config.host_memory_gb,
             device_memory_gb: self.config.device_memory_gb,
             models: self.config.models.clone(),
-        };
-        let id = registry.register_agent(info, ttl);
+        }
+    }
+
+    /// Adopt a registry-assigned id (remote agents register over the wire,
+    /// where the id comes back in the response — and a re-registration
+    /// after lease expiry issues a fresh one).
+    pub fn adopt_id(&self, id: &str) {
+        *self.id.lock().unwrap() = id.to_string();
+    }
+
+    /// As [`Agent::register`] with an explicit TTL. In-process agents pass
+    /// `None`: they live exactly as long as the server and must not expire
+    /// mid-evaluation.
+    pub fn register_with_ttl(
+        &self,
+        registry: &Registry,
+        endpoint: &str,
+        ttl: Option<Duration>,
+    ) -> String {
+        let id = registry.register_agent(self.info(endpoint), ttl);
         *self.id.lock().unwrap() = id.clone();
         id
     }
@@ -587,14 +601,324 @@ impl Drop for BatchSession {
     }
 }
 
-/// Wire service wrapper with the binary-tensor fast path (§Perf).
+/// A batch session on a **remote** agent process — the same
+/// [`crate::batcher::BatchExecutor`] trait the dispatcher drives locally,
+/// but every batch rides the wire: `OpenBatch` loads the model once on the
+/// agent, `PredictBatch` ships each coalesced batch (deadline + tenant tags
+/// in the frame, stacked tensor as the binary attachment) and streams the
+/// result rows back, `CloseBatch` releases the handle.
+///
+/// Failure semantics are what make the fleet safe:
+/// - before each batch the agent's **registry lease** is re-checked — a
+///   lapsed heartbeat fails the batch immediately instead of burning a
+///   connect/read timeout on a process that is probably gone;
+/// - a dropped connection, a deadline, or a remote error all surface as
+///   `Err` from [`crate::batcher::BatchExecutor::execute`], which the
+///   dispatcher answers by marking this executor dead and requeueing the
+///   in-flight batch **exactly once** to a survivor.
+pub struct RemoteBatchSession {
+    agent_id: String,
+    endpoint: String,
+    client: crate::wire::RpcClient,
+    session: u64,
+    registry: Option<Arc<Registry>>,
+    deadline_ms: Option<f64>,
+}
+
+impl RemoteBatchSession {
+    /// Connect to a remote agent and open a batch session for `manifest` at
+    /// `max_batch` capacity. `registry` (when given) supplies the liveness
+    /// re-check per batch; `deadline_ms` bounds every RPC on this
+    /// connection.
+    pub fn open(
+        endpoint: &str,
+        agent_id: &str,
+        manifest: &ModelManifest,
+        max_batch: usize,
+        registry: Option<Arc<Registry>>,
+        deadline_ms: Option<f64>,
+    ) -> Result<RemoteBatchSession, String> {
+        let client = crate::wire::RpcClient::connect(endpoint)
+            .map_err(|e| format!("connect {endpoint}: {e}"))?;
+        if let Some(ms) = deadline_ms {
+            client.set_read_timeout(Some(std::time::Duration::from_secs_f64(
+                (ms / 1e3).max(1e-3),
+            )));
+        }
+        let resp = client
+            .call(
+                "OpenBatch",
+                Json::obj(vec![
+                    ("manifest", manifest.to_json()),
+                    ("max_batch", Json::num(max_batch as f64)),
+                ]),
+            )
+            .map_err(|e| format!("OpenBatch on {agent_id} ({endpoint}): {e}"))?;
+        let session = resp.f64_or("session", -1.0);
+        if session < 0.0 {
+            return Err(format!("OpenBatch on {agent_id}: no session id in reply"));
+        }
+        Ok(RemoteBatchSession {
+            agent_id: agent_id.to_string(),
+            endpoint: endpoint.to_string(),
+            client,
+            session: session as u64,
+            registry,
+            deadline_ms,
+        })
+    }
+
+    pub fn endpoint(&self) -> &str {
+        &self.endpoint
+    }
+}
+
+impl crate::batcher::BatchExecutor for RemoteBatchSession {
+    fn id(&self) -> String {
+        self.agent_id.clone()
+    }
+
+    fn execute(
+        &self,
+        batch: &crate::batcher::Batch,
+    ) -> Result<crate::batcher::BatchResult, String> {
+        use crate::pipeline::{Envelope, Payload};
+        // Membership gate: a TTL that lapsed since the last batch means the
+        // agent stopped heartbeating — treat it as dead now.
+        if let Some(reg) = &self.registry {
+            if !reg.is_live(&self.agent_id) {
+                return Err(format!(
+                    "agent {} lease lapsed (missed heartbeats)",
+                    self.agent_id
+                ));
+            }
+        }
+        let inputs: Vec<&Tensor> = batch
+            .envelopes
+            .iter()
+            .map(|e| match &e.payload {
+                Payload::Tensor(t) => Ok(t),
+                other => Err(format!("batch item {} is not a tensor: {other:?}", e.seq)),
+            })
+            .collect::<Result<_, String>>()?;
+        let stacked = Tensor::stack(&inputs).ok_or("batch items have mismatched shapes")?;
+        let params = Json::obj(vec![
+            ("session", Json::num(self.session as f64)),
+            (
+                "seqs",
+                Json::arr(batch.envelopes.iter().map(|e| Json::num(e.seq as f64)).collect()),
+            ),
+            (
+                "arrivals",
+                Json::arr(batch.arrivals.iter().map(|a| Json::num(*a)).collect()),
+            ),
+            ("tenant", Json::num(batch.tenant as f64)),
+            ("batch_index", Json::num(batch.index as f64)),
+            ("opened_at", Json::num(batch.opened_at_secs)),
+            ("formed_at", Json::num(batch.formed_at_secs)),
+            (
+                "deadline_ms",
+                self.deadline_ms.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ]);
+        let mut chunks: Vec<(usize, Vec<Tensor>)> = Vec::new();
+        let (result, _blob) = self
+            .client
+            .call_streamed("PredictBatch", params, Some(&stacked.to_bytes()), |chunk, blob| {
+                if let Some(t) = blob.and_then(Tensor::from_bytes) {
+                    chunks.push((chunk.f64_or("offset", 0.0) as usize, t.unstack()));
+                }
+            })
+            .map_err(|e| format!("PredictBatch on {}: {e}", self.agent_id))?;
+        chunks.sort_by_key(|(offset, _)| *offset);
+        let rows: Vec<Tensor> = chunks.into_iter().flat_map(|(_, ts)| ts).collect();
+        if rows.len() != batch.envelopes.len() {
+            return Err(format!(
+                "PredictBatch on {} returned {} rows for {} requests",
+                self.agent_id,
+                rows.len(),
+                batch.envelopes.len()
+            ));
+        }
+        let outputs = batch
+            .envelopes
+            .iter()
+            .zip(rows)
+            .map(|(e, t)| Envelope {
+                seq: e.seq,
+                trace_id: e.trace_id,
+                parent_span: e.parent_span,
+                payload: Payload::Tensor(t),
+            })
+            .collect();
+        Ok(crate::batcher::BatchResult {
+            outputs,
+            latency_s: result.f64_or("latency_s", 0.0),
+        })
+    }
+}
+
+impl Drop for RemoteBatchSession {
+    fn drop(&mut self) {
+        // Best-effort release; never block shutdown on a dead peer. When
+        // the main connection is poisoned (deadline, transport error) the
+        // agent may well still be alive — close over a fresh connection so
+        // a long-lived agent daemon doesn't accumulate orphaned sessions
+        // (loaded models) across controller failures.
+        let close = Json::obj(vec![("session", Json::num(self.session as f64))]);
+        if !self.client.is_broken() {
+            self.client
+                .set_read_timeout(Some(std::time::Duration::from_secs(1)));
+            let _ = self.client.call("CloseBatch", close);
+        } else if let Ok(fresh) = crate::wire::RpcClient::connect(self.endpoint.as_str()) {
+            fresh.set_read_timeout(Some(std::time::Duration::from_secs(1)));
+            let _ = fresh.call("CloseBatch", close);
+        }
+    }
+}
+
+/// Rows per streamed `PredictBatch` response frame: large batched results
+/// leave the agent as a sequence of bounded frames instead of one frame
+/// that could brush `MAX_FRAME`.
+const PREDICT_BATCH_CHUNK_ROWS: usize = 8;
+
+/// Wire service wrapper with the binary-tensor fast path (§Perf) and the
+/// remote batch-session state (`OpenBatch`/`PredictBatch`/`CloseBatch`).
 struct AgentService {
     agent: Arc<Agent>,
+    sessions: std::sync::Mutex<std::collections::HashMap<u64, Arc<BatchSession>>>,
+    next_session: std::sync::atomic::AtomicU64,
+}
+
+impl AgentService {
+    /// The streamed `PredictBatch` RPC: the frame carries the coalesced
+    /// batch (seqs + arrivals + tenant + deadline tags in the JSON
+    /// envelope, the stacked input tensor as the binary attachment); the
+    /// reply streams the result rows back in bounded chunks, then a final
+    /// frame with the batch's service time on the agent's clock. The
+    /// `deadline_ms` tag is advisory on this side — the *caller* enforces
+    /// it as a read timeout — but it is recorded on the batch span so a
+    /// trace shows what budget the batch ran under.
+    fn predict_batch(
+        &self,
+        params: &Json,
+        blob: Option<&[u8]>,
+        emit: &mut dyn FnMut(Json, Option<Vec<u8>>) -> Result<(), crate::wire::WireError>,
+    ) -> Result<(Json, Option<Vec<u8>>), String> {
+        use crate::pipeline::{Envelope, Payload};
+        let sid = params.f64_or("session", -1.0);
+        if sid < 0.0 {
+            return Err("PredictBatch requires a session id from OpenBatch".into());
+        }
+        let session = self
+            .sessions
+            .lock()
+            .unwrap()
+            .get(&(sid as u64))
+            .cloned()
+            .ok_or_else(|| format!("unknown batch session {sid}"))?;
+        let input = blob
+            .and_then(Tensor::from_bytes)
+            .ok_or("PredictBatch requires a binary tensor attachment")?;
+        let seqs: Vec<u64> = params
+            .get("seqs")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|s| s.as_u64()).collect())
+            .unwrap_or_default();
+        if seqs.is_empty() || seqs.len() != input.batch() {
+            return Err(format!(
+                "PredictBatch seqs/tensor mismatch: {} seqs for batch {}",
+                seqs.len(),
+                input.batch()
+            ));
+        }
+        let arrivals: Vec<f64> = params
+            .get("arrivals")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .filter(|a: &Vec<f64>| a.len() == seqs.len())
+            .unwrap_or_else(|| vec![0.0; seqs.len()]);
+        let batch = crate::batcher::Batch {
+            index: params.f64_or("batch_index", 0.0) as u64,
+            opened_at_secs: params.f64_or("opened_at", 0.0),
+            formed_at_secs: params.f64_or("formed_at", 0.0),
+            envelopes: input
+                .unstack()
+                .into_iter()
+                .zip(&seqs)
+                .map(|(t, s)| Envelope {
+                    seq: *s,
+                    trace_id: 0,
+                    parent_span: None,
+                    payload: Payload::Tensor(t),
+                })
+                .collect(),
+            arrivals,
+            tenant: params.f64_or("tenant", 0.0) as u32,
+        };
+        let result = crate::batcher::BatchExecutor::execute(&*session, &batch)?;
+        let rows: Vec<Tensor> = result
+            .outputs
+            .iter()
+            .map(|e| match &e.payload {
+                Payload::Tensor(t) => Ok(t.clone()),
+                other => Err(format!("non-tensor batch output: {other:?}")),
+            })
+            .collect::<Result<_, String>>()?;
+        for (ci, chunk) in rows.chunks(PREDICT_BATCH_CHUNK_ROWS).enumerate() {
+            let refs: Vec<&Tensor> = chunk.iter().collect();
+            let stacked = Tensor::stack(&refs).ok_or("result rows have mismatched shapes")?;
+            emit(
+                Json::obj(vec![
+                    ("offset", Json::num((ci * PREDICT_BATCH_CHUNK_ROWS) as f64)),
+                    ("rows", Json::num(chunk.len() as f64)),
+                ]),
+                Some(stacked.to_bytes()),
+            )
+            .map_err(|e| format!("streaming result chunk: {e}"))?;
+        }
+        Ok((
+            Json::obj(vec![
+                ("latency_s", Json::num(result.latency_s)),
+                ("rows", Json::num(rows.len() as f64)),
+                ("tenant", Json::num(batch.tenant as f64)),
+            ]),
+            None,
+        ))
+    }
 }
 
 impl crate::wire::Service for AgentService {
     fn call(&self, method: &str, params: &Json) -> Result<Json, String> {
-        agent_call(&self.agent, method, params)
+        match method {
+            // Open a cross-request batch session: load the model once at
+            // session batch capacity, keep the handle server-side, return a
+            // session id the remote dispatcher cites per batch.
+            "OpenBatch" => {
+                let manifest = crate::manifest::ModelManifest::from_json(
+                    params.get("manifest").ok_or("missing manifest")?,
+                )
+                .map_err(|e| e.to_string())?;
+                let max_batch = params.f64_or("max_batch", 1.0) as usize;
+                let session = self.agent.open_batch_session(&manifest, max_batch)?;
+                let id = self
+                    .next_session
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let trace_id = session.trace_id();
+                self.sessions.lock().unwrap().insert(id, Arc::new(session));
+                Ok(Json::obj(vec![
+                    ("session", Json::num(id as f64)),
+                    ("trace_id", Json::num(trace_id as f64)),
+                    ("agent", Json::str(self.agent.id())),
+                ]))
+            }
+            "CloseBatch" => {
+                let sid = params.f64_or("session", -1.0);
+                self.sessions.lock().unwrap().remove(&(sid as u64));
+                Ok(Json::Null)
+            }
+            _ => agent_call(&self.agent, method, params),
+        }
     }
 
     /// `PredictBin`: input tensor as a raw binary attachment instead of
@@ -624,14 +948,32 @@ impl crate::wire::Service for AgentService {
         }
         self.call(method, params).map(|j| (j, None))
     }
+
+    fn call_stream(
+        &self,
+        method: &str,
+        params: &Json,
+        blob: Option<&[u8]>,
+        emit: &mut dyn FnMut(Json, Option<Vec<u8>>) -> Result<(), crate::wire::WireError>,
+    ) -> Result<(Json, Option<Vec<u8>>), String> {
+        if method == "PredictBatch" {
+            return self.predict_batch(params, blob, emit);
+        }
+        self.call_binary(method, params, blob)
+    }
 }
 
 /// Expose an agent over the wire protocol — the paper's Listing-4 service:
 /// `Open`, `Predict` (runs a full scenario), `Close`, plus `Evaluate` which
-/// bundles the three for the server's dispatch path, and `PredictBin`
-/// (binary tensor attachment fast path).
+/// bundles the three for the server's dispatch path, `PredictBin` (binary
+/// tensor attachment fast path), and the batched-serving session RPCs
+/// `OpenBatch` / `PredictBatch` (streamed) / `CloseBatch`.
 pub fn agent_service(agent: Arc<Agent>) -> Arc<dyn crate::wire::Service> {
-    Arc::new(AgentService { agent })
+    Arc::new(AgentService {
+        agent,
+        sessions: std::sync::Mutex::new(std::collections::HashMap::new()),
+        next_session: std::sync::atomic::AtomicU64::new(1),
+    })
 }
 
 fn agent_call(agent: &Arc<Agent>, method: &str, params: &Json) -> Result<Json, String> {
@@ -909,6 +1251,114 @@ mod tests {
         assert_eq!(batch_spans.len(), 2);
         assert_eq!(batch_spans[0].tag("occupancy"), Some("4"));
         assert_eq!(batch_spans[1].tag("occupancy"), Some("1"));
+    }
+
+    #[test]
+    fn remote_batch_session_over_wire_matches_local() {
+        use crate::batcher::{Batch, BatchExecutor};
+        use crate::pipeline::{Envelope, Payload};
+        let (local_agent, _s, _t, _db, _sink) = sim_setup("aws_p3");
+        let (remote_agent, _s2, _t2, _db2, _sink2) = sim_setup("aws_p3");
+        let manifest = crate::zoo::by_name("ResNet_v1_50").unwrap().manifest();
+        let local = local_agent.open_batch_session(&manifest, 32).unwrap();
+        let rpc =
+            crate::wire::RpcServer::serve("127.0.0.1:0", agent_service(remote_agent)).unwrap();
+        let remote = RemoteBatchSession::open(
+            &rpc.addr().to_string(),
+            "remote-1",
+            &manifest,
+            32,
+            None,
+            Some(10_000.0),
+        )
+        .unwrap();
+        assert_eq!(remote.id(), "remote-1");
+        // 20 rows → the 8-row chunking streams the reply as 3 frames.
+        let seqs: Vec<u64> = (0..20).collect();
+        let mk = |index: u64| Batch {
+            index,
+            opened_at_secs: 0.0,
+            formed_at_secs: 0.001,
+            envelopes: seqs
+                .iter()
+                .map(|s| Envelope {
+                    seq: *s,
+                    trace_id: 0,
+                    parent_span: None,
+                    payload: Payload::Tensor(Tensor::random(vec![1, 4, 4, 3], *s)),
+                })
+                .collect(),
+            arrivals: vec![0.0; seqs.len()],
+            tenant: 1,
+        };
+        let rl = local.execute(&mk(0)).unwrap();
+        let rr = remote.execute(&mk(0)).unwrap();
+        assert_eq!(rr.outputs.len(), 20);
+        assert!(rr.latency_s > 0.0, "service time rides back in the final frame");
+        // Identity: the remote rows are exactly the local rows, per seq —
+        // where a batch executes must never change its results.
+        for (a, b) in rl.outputs.iter().zip(&rr.outputs) {
+            assert_eq!(a.seq, b.seq);
+            match (&a.payload, &b.payload) {
+                (Payload::Tensor(x), Payload::Tensor(y)) => {
+                    assert_eq!(x, y, "request {} diverged over the wire", a.seq)
+                }
+                other => panic!("unexpected payloads {other:?}"),
+            }
+        }
+        rpc.stop();
+    }
+
+    #[test]
+    fn predict_batch_rejects_malformed_requests_cleanly() {
+        let (agent, _s, _t, _db, _sink) = sim_setup("aws_g3");
+        let server =
+            crate::wire::RpcServer::serve("127.0.0.1:0", agent_service(agent)).unwrap();
+        let client = crate::wire::RpcClient::connect(server.addr()).unwrap();
+        // Unknown session.
+        let input = Tensor::random(vec![2, 4, 4, 3], 1);
+        let err = client
+            .call_streamed(
+                "PredictBatch",
+                Json::obj(vec![
+                    ("session", Json::num(99.0)),
+                    ("seqs", Json::arr(vec![Json::num(0.0), Json::num(1.0)])),
+                ]),
+                Some(&input.to_bytes()),
+                |_, _| {},
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown batch session"), "{err}");
+        // Open a real session, then ship a seq/tensor mismatch.
+        let manifest = crate::zoo::by_name("BVLC_AlexNet").unwrap().manifest();
+        let resp = client
+            .call(
+                "OpenBatch",
+                Json::obj(vec![
+                    ("manifest", manifest.to_json()),
+                    ("max_batch", Json::num(4.0)),
+                ]),
+            )
+            .unwrap();
+        let session = resp.f64_or("session", -1.0);
+        assert!(session >= 0.0);
+        let err = client
+            .call_streamed(
+                "PredictBatch",
+                Json::obj(vec![
+                    ("session", Json::num(session)),
+                    ("seqs", Json::arr(vec![Json::num(0.0)])),
+                ]),
+                Some(&input.to_bytes()),
+                |_, _| {},
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+        // The connection survives both errors; CloseBatch still works.
+        client
+            .call("CloseBatch", Json::obj(vec![("session", Json::num(session))]))
+            .unwrap();
+        server.stop();
     }
 
     /// Real PJRT agent end-to-end (skipped without artifacts or bindings).

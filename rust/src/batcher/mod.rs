@@ -45,27 +45,50 @@ pub struct BatcherConfig {
     /// the fewest items served so far instead of strict FIFO, so one
     /// tenant's burst cannot starve another tenant's latency SLO.
     pub fair: bool,
+    /// Per-batch RPC deadline for *remote* executors, milliseconds: a
+    /// remote agent that hasn't answered a `PredictBatch` within it is
+    /// treated as dead (connection broken, batch requeued to a survivor).
+    /// Carried in every `PredictBatch` frame. An execution-robustness knob,
+    /// not an experiment coordinate — deliberately **excluded** from
+    /// [`BatcherConfig::fingerprint_json`] so changing it never invalidates
+    /// memoized sweep cells.
+    pub remote_deadline_ms: Option<f64>,
 }
+
+/// Default remote per-batch deadline (generous: real batches finish in
+/// milliseconds; only a partitioned or wedged agent ever hits it).
+pub const DEFAULT_REMOTE_DEADLINE_MS: f64 = 30_000.0;
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch_size: 8, max_wait_ms: 5.0, fair: false }
+        BatcherConfig {
+            max_batch_size: 8,
+            max_wait_ms: 5.0,
+            fair: false,
+            remote_deadline_ms: Some(DEFAULT_REMOTE_DEADLINE_MS),
+        }
     }
 }
 
 impl BatcherConfig {
     pub fn new(max_batch_size: usize, max_wait_ms: f64) -> Self {
-        BatcherConfig { max_batch_size, max_wait_ms, fair: false }
+        BatcherConfig { max_batch_size, max_wait_ms, ..BatcherConfig::default() }
     }
 
     /// Degenerate config: every request is its own batch (the per-request
     /// dispatch baseline the `fig_batching` bench compares against).
     pub fn per_request() -> Self {
-        BatcherConfig { max_batch_size: 1, max_wait_ms: 0.0, fair: false }
+        BatcherConfig { max_batch_size: 1, max_wait_ms: 0.0, ..BatcherConfig::default() }
     }
 
     pub fn with_fairness(mut self) -> Self {
         self.fair = true;
+        self
+    }
+
+    /// Override the remote per-batch deadline (`None` waits forever).
+    pub fn with_remote_deadline_ms(mut self, ms: Option<f64>) -> Self {
+        self.remote_deadline_ms = ms;
         self
     }
 
@@ -314,6 +337,10 @@ pub struct DispatchOutcome {
     pub per_agent_busy_s: BTreeMap<String, f64>,
     /// Batches requeued after an executor death (each at most once).
     pub requeued_batches: usize,
+    /// The failover record behind `requeued_batches`: `(batch index, id of
+    /// the executor that failed it)` per requeue, in failure order. The
+    /// server republishes these as `failover` spans in the serving trace.
+    pub requeue_log: Vec<(u64, String)>,
     /// True when a [`DispatchWatch`] aborted the run early; `outputs` then
     /// covers only the batches that completed before the abort.
     pub aborted: bool,
@@ -356,6 +383,7 @@ struct DispatchState {
     /// [`DispatchPolicy::FairByTenant`].
     tenant_started: BTreeMap<u32, usize>,
     requeued: usize,
+    requeue_log: Vec<(u64, String)>,
     fatal: Option<DispatchError>,
     aborted: bool,
 }
@@ -454,6 +482,7 @@ impl Dispatcher {
                 per_agent_busy_s: BTreeMap::new(),
                 tenant_started: BTreeMap::new(),
                 requeued: 0,
+                requeue_log: Vec::new(),
                 fatal: None,
                 aborted: false,
             }),
@@ -572,6 +601,7 @@ impl Dispatcher {
                                 });
                             } else {
                                 st.requeued += 1;
+                                st.requeue_log.push((qb.batch.index, agent));
                                 st.queue.push_back(QueuedBatch { batch: qb.batch, retried: true });
                             }
                         }
@@ -603,6 +633,7 @@ impl Dispatcher {
             per_agent_items: std::mem::take(&mut st.per_agent_items),
             per_agent_busy_s: std::mem::take(&mut st.per_agent_busy_s),
             requeued_batches: st.requeued,
+            requeue_log: std::mem::take(&mut st.requeue_log),
             aborted: st.aborted,
         })
     }

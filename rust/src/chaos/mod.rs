@@ -1,0 +1,377 @@
+//! Seeded fault injection for the distributed serving stack.
+//!
+//! Deep500 (arXiv:1901.10183) argues that benchmarking infrastructure must
+//! itself be validated; for a *distributed* platform that means failure
+//! scenarios — an agent process dying mid-batch, a partitioned connection,
+//! a missed heartbeat — have to be reproducible and assertable, not
+//! stumbled into. This module is that harness:
+//!
+//! - a [`FaultPlan`] declares *what* goes wrong and *when*, keyed by RPC
+//!   method name and matching-call count (plus a seed for probabilistic
+//!   faults), so a failure scenario is a pure function of the request
+//!   sequence;
+//! - a [`ChaosEngine`] evaluates the plan one request at a time and is
+//!   consulted at the wire layer ([`crate::wire::RpcServer::serve_with_chaos`]
+//!   for incoming RPCs, the agent heartbeat loop for outgoing beats) — the
+//!   injection happens *below* the serving logic, exactly where real
+//!   network/process failures strike;
+//! - the CLI surfaces it as `mlms agent serve --chaos <plan>`, and
+//!   `benches/fig_fleet.rs` + `tests/fleet_failover.rs` assert the
+//!   failover semantics (exactly-once requeue, TTL-driven membership)
+//!   under injected faults.
+//!
+//! Plan grammar (comma-separated items, `*` matches any method):
+//!
+//! ```text
+//! kill:PredictBatch:3   serve 3 matching calls, then kill the target
+//! drop:heartbeat:2      serve 2 matching calls, drop the rest
+//! delay:*:25            delay every matching call by 25 ms
+//! prob:Predict:0.25     drop each matching call with p=0.25 (seeded)
+//! ```
+
+use crate::util::json::Json;
+use crate::util::rng::Xorshift;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One injected fault. `method` is an RPC method name or `*` for any.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Serve the first `calls` matching requests, then *kill* the target:
+    /// the triggering request is dropped, the engine's kill hook fires
+    /// (process exit for `mlms agent serve`, server shutdown in tests) and
+    /// every later request is dropped.
+    KillAfter { method: String, calls: u64 },
+    /// Serve the first `calls` matching requests, drop the rest (the
+    /// connection closes with no reply — a crash from the caller's view).
+    DropAfter { method: String, calls: u64 },
+    /// Delay every matching request by `ms` milliseconds before serving it.
+    /// A delay beyond the caller's deadline is a partition from its view.
+    Delay { method: String, ms: u64 },
+    /// Drop each matching request independently with probability `prob`,
+    /// decided by the plan's seeded RNG — deterministic given the sequence
+    /// of matching calls.
+    DropWithProb { method: String, prob: f64 },
+}
+
+impl Fault {
+    fn method(&self) -> &str {
+        match self {
+            Fault::KillAfter { method, .. }
+            | Fault::DropAfter { method, .. }
+            | Fault::Delay { method, .. }
+            | Fault::DropWithProb { method, .. } => method,
+        }
+    }
+
+    fn matches(&self, method: &str) -> bool {
+        let m = self.method();
+        m == "*" || m == method
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Fault::KillAfter { .. } => "kill",
+            Fault::DropAfter { .. } => "drop",
+            Fault::Delay { .. } => "delay",
+            Fault::DropWithProb { .. } => "prob",
+        }
+    }
+
+    fn value(&self) -> f64 {
+        match self {
+            Fault::KillAfter { calls, .. } | Fault::DropAfter { calls, .. } => *calls as f64,
+            Fault::Delay { ms, .. } => *ms as f64,
+            Fault::DropWithProb { prob, .. } => *prob,
+        }
+    }
+}
+
+/// A seeded, declarative failure scenario.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn kill_after(mut self, method: &str, calls: u64) -> FaultPlan {
+        self.faults.push(Fault::KillAfter { method: method.to_string(), calls });
+        self
+    }
+
+    pub fn drop_after(mut self, method: &str, calls: u64) -> FaultPlan {
+        self.faults.push(Fault::DropAfter { method: method.to_string(), calls });
+        self
+    }
+
+    pub fn delay(mut self, method: &str, ms: u64) -> FaultPlan {
+        self.faults.push(Fault::Delay { method: method.to_string(), ms });
+        self
+    }
+
+    pub fn drop_with_prob(mut self, method: &str, prob: f64) -> FaultPlan {
+        self.faults.push(Fault::DropWithProb {
+            method: method.to_string(),
+            prob: prob.clamp(0.0, 1.0),
+        });
+        self
+    }
+
+    /// Parse the CLI grammar (see module docs). Every item must be
+    /// `kind:method:value`; unknown kinds and unparsable values are errors,
+    /// not silent no-ops — a typo'd chaos plan that injects nothing would
+    /// make a failure test silently vacuous.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(seed);
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let mut parts = item.splitn(3, ':');
+            let (kind, method, value) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(k), Some(m), Some(v)) if !m.is_empty() => (k, m, v),
+                _ => return Err(format!("bad fault {item:?} (want kind:method:value)")),
+            };
+            let num = |v: &str| -> Result<u64, String> {
+                v.parse::<u64>().map_err(|_| format!("bad count/ms {v:?} in {item:?}"))
+            };
+            plan = match kind {
+                "kill" => plan.kill_after(method, num(value)?),
+                "drop" => plan.drop_after(method, num(value)?),
+                "delay" => plan.delay(method, num(value)?),
+                "prob" => {
+                    let p = value
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|p| (0.0..=1.0).contains(p))
+                        .ok_or_else(|| format!("bad probability {value:?} in {item:?}"))?;
+                    plan.drop_with_prob(method, p)
+                }
+                other => return Err(format!("unknown fault kind {other:?} in {item:?}")),
+            };
+        }
+        Ok(plan)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "faults",
+                Json::arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("kind", Json::str(f.kind())),
+                                ("method", Json::str(f.method())),
+                                ("value", Json::num(f.value())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<FaultPlan> {
+        let mut plan = FaultPlan::new(j.f64_or("seed", 0.0) as u64);
+        for f in j.get("faults")?.as_arr()? {
+            let method = f.get("method")?.as_str()?;
+            let value = f.get("value")?.as_f64()?;
+            plan = match f.get("kind")?.as_str()? {
+                "kill" => plan.kill_after(method, value as u64),
+                "drop" => plan.drop_after(method, value as u64),
+                "delay" => plan.delay(method, value as u64),
+                "prob" => plan.drop_with_prob(method, value),
+                _ => return None,
+            };
+        }
+        Some(plan)
+    }
+}
+
+/// What the engine decided for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Serve normally.
+    Pass,
+    /// Sleep this many milliseconds, then serve.
+    Delay(u64),
+    /// Close the connection with no reply (or skip the outgoing call).
+    Drop,
+    /// The target just died: drop this request and everything after it.
+    Kill,
+}
+
+/// Evaluates a [`FaultPlan`] one request at a time. Thread-safe; per-fault
+/// matching-call counters make count-based faults exact even under
+/// concurrent connections (the *total* order of matching calls decides).
+pub struct ChaosEngine {
+    plan: FaultPlan,
+    counters: Vec<AtomicU64>,
+    rng: Mutex<Xorshift>,
+    killed: AtomicBool,
+    kill_hook: Mutex<Option<Box<dyn FnOnce() + Send>>>,
+}
+
+impl ChaosEngine {
+    pub fn new(plan: FaultPlan) -> Arc<ChaosEngine> {
+        let counters = (0..plan.faults.len()).map(|_| AtomicU64::new(0)).collect();
+        let rng = Mutex::new(Xorshift::new(plan.seed));
+        Arc::new(ChaosEngine {
+            plan,
+            counters,
+            rng,
+            killed: AtomicBool::new(false),
+            kill_hook: Mutex::new(None),
+        })
+    }
+
+    /// Install the action taken when a [`Fault::KillAfter`] fires (at most
+    /// once). `mlms agent serve` exits the process; in-process tests stop
+    /// the RPC server instead.
+    pub fn on_kill(&self, hook: impl FnOnce() + Send + 'static) {
+        *self.kill_hook.lock().unwrap() = Some(Box::new(hook));
+    }
+
+    pub fn killed(&self) -> bool {
+        self.killed.load(Ordering::Relaxed)
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decide the fate of one request. Kill wins over drop wins over delay;
+    /// a killed target drops everything from then on.
+    pub fn decide(&self, method: &str) -> FaultAction {
+        if self.killed() {
+            return FaultAction::Drop;
+        }
+        let mut delay: Option<u64> = None;
+        let mut dropped = false;
+        let mut kill = false;
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if !f.matches(method) {
+                continue;
+            }
+            // 0-based index of this matching call for this fault.
+            let n = self.counters[i].fetch_add(1, Ordering::Relaxed);
+            match f {
+                Fault::KillAfter { calls, .. } => {
+                    if n >= *calls {
+                        kill = true;
+                    }
+                }
+                Fault::DropAfter { calls, .. } => {
+                    if n >= *calls {
+                        dropped = true;
+                    }
+                }
+                Fault::DropWithProb { prob, .. } => {
+                    if self.rng.lock().unwrap().f64() < *prob {
+                        dropped = true;
+                    }
+                }
+                Fault::Delay { ms, .. } => {
+                    delay = Some(delay.unwrap_or(0).max(*ms));
+                }
+            }
+        }
+        if kill {
+            self.killed.store(true, Ordering::Relaxed);
+            if let Some(hook) = self.kill_hook.lock().unwrap().take() {
+                hook();
+            }
+            return FaultAction::Kill;
+        }
+        if dropped {
+            return FaultAction::Drop;
+        }
+        match delay {
+            Some(ms) => FaultAction::Delay(ms),
+            None => FaultAction::Pass,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip_and_errors() {
+        let plan =
+            FaultPlan::parse("kill:PredictBatch:3, drop:heartbeat:2, delay:*:25, prob:Predict:0.25", 7)
+                .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.faults.len(), 4);
+        assert_eq!(
+            plan.faults[0],
+            Fault::KillAfter { method: "PredictBatch".into(), calls: 3 }
+        );
+        assert_eq!(plan.faults[2], Fault::Delay { method: "*".into(), ms: 25 });
+        // JSON round trip preserves the plan exactly.
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        // Typos are errors, not silent no-ops.
+        assert!(FaultPlan::parse("explode:*:1", 0).is_err());
+        assert!(FaultPlan::parse("kill:PredictBatch", 0).is_err());
+        assert!(FaultPlan::parse("prob:*:1.5", 0).is_err());
+        assert!(FaultPlan::parse("delay:*:soon", 0).is_err());
+        // Empty spec is an empty (no-fault) plan.
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn kill_after_serves_then_kills_then_drops_everything() {
+        let engine = ChaosEngine::new(FaultPlan::new(0).kill_after("PredictBatch", 2));
+        let fired = std::sync::Arc::new(AtomicU64::new(0));
+        let f = fired.clone();
+        engine.on_kill(move || {
+            f.fetch_add(1, Ordering::Relaxed);
+        });
+        // Non-matching methods never count.
+        assert_eq!(engine.decide("Open"), FaultAction::Pass);
+        assert_eq!(engine.decide("PredictBatch"), FaultAction::Pass);
+        assert_eq!(engine.decide("PredictBatch"), FaultAction::Pass);
+        assert_eq!(engine.decide("PredictBatch"), FaultAction::Kill);
+        assert!(engine.killed());
+        assert_eq!(fired.load(Ordering::Relaxed), 1, "kill hook fires exactly once");
+        // Everything after the kill is dropped, any method.
+        assert_eq!(engine.decide("PredictBatch"), FaultAction::Drop);
+        assert_eq!(engine.decide("Open"), FaultAction::Drop);
+        assert_eq!(fired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_after_and_delay_compose() {
+        let engine =
+            ChaosEngine::new(FaultPlan::new(0).drop_after("Predict", 1).delay("*", 10));
+        // First Predict: served, but delayed by the wildcard delay.
+        assert_eq!(engine.decide("Predict"), FaultAction::Delay(10));
+        // Second Predict: drop wins over delay.
+        assert_eq!(engine.decide("Predict"), FaultAction::Drop);
+        // Other methods only see the delay.
+        assert_eq!(engine.decide("Evaluate"), FaultAction::Delay(10));
+    }
+
+    #[test]
+    fn probabilistic_drops_are_seed_deterministic() {
+        let run = |seed: u64| -> Vec<FaultAction> {
+            let engine = ChaosEngine::new(FaultPlan::new(seed).drop_with_prob("echo", 0.5));
+            (0..64).map(|_| engine.decide("echo")).collect()
+        };
+        assert_eq!(run(42), run(42), "same seed → same fault sequence");
+        assert_ne!(run(42), run(43), "different seed → different sequence");
+        let drops = run(42).iter().filter(|a| **a == FaultAction::Drop).count();
+        assert!((10..=54).contains(&drops), "p=0.5 over 64 calls, got {drops}");
+    }
+}

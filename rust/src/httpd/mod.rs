@@ -123,6 +123,7 @@ impl HttpResponse {
             201 => "Created",
             400 => "Bad Request",
             404 => "Not Found",
+            413 => "Payload Too Large",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             _ => "Unknown",
@@ -175,7 +176,9 @@ impl Router {
             let mut params = BTreeMap::new();
             for (p, s) in pattern.iter().zip(&path_segs) {
                 if let Some(name) = p.strip_prefix(':') {
-                    params.insert(name.to_string(), s.to_string());
+                    // Percent-decode bound parameters: `/api/trace/%31%32`
+                    // must bind `id = "12"`, same as query values.
+                    params.insert(name.to_string(), url_decode(s));
                 } else if p != s {
                     continue 'routes;
                 }
@@ -259,8 +262,14 @@ fn handle_http(
     let mut stream = stream;
     while !shutdown.load(Ordering::Relaxed) {
         let mut req = match read_request(&mut reader)? {
-            Some(r) => r,
-            None => return Ok(()),
+            Parsed::Req(r) => r,
+            Parsed::Eof => return Ok(()),
+            // Protocol-level garbage gets a JSON 4xx and a clean close —
+            // never a silently dropped connection.
+            Parsed::Bad(resp) => {
+                resp.write_to(&mut stream)?;
+                return Ok(());
+            }
         };
         let keep_alive = req
             .headers
@@ -276,14 +285,32 @@ fn handle_http(
     Ok(())
 }
 
-fn read_request(reader: &mut impl BufRead) -> std::io::Result<Option<HttpRequest>> {
+/// What one attempt to read a request produced.
+enum Parsed {
+    Req(HttpRequest),
+    /// Connection closed cleanly between requests.
+    Eof,
+    /// Protocol garbage: answer with this 4xx response, then close.
+    Bad(HttpResponse),
+}
+
+fn read_request(reader: &mut impl BufRead) -> std::io::Result<Parsed> {
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
-        return Ok(None); // EOF
+        return Ok(Parsed::Eof);
     }
     let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_uppercase();
-    let target = parts.next().unwrap_or("/").to_string();
+    // A request line needs at least `METHOD TARGET`; anything shorter is a
+    // malformed request, answered rather than dropped.
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m.to_uppercase(), t.to_string()),
+        _ => {
+            return Ok(Parsed::Bad(HttpResponse::error(
+                400,
+                format!("malformed request line {:?}", line.trim_end()),
+            )))
+        }
+    };
     let (path, query) = target.split_once('?').unwrap_or((target.as_str(), ""));
     let (path, query) = (path.to_string(), query.to_string());
 
@@ -291,7 +318,7 @@ fn read_request(reader: &mut impl BufRead) -> std::io::Result<Option<HttpRequest
     loop {
         let mut h = String::new();
         if reader.read_line(&mut h)? == 0 {
-            return Ok(None);
+            return Ok(Parsed::Eof);
         }
         let h = h.trim_end();
         if h.is_empty() {
@@ -301,16 +328,30 @@ fn read_request(reader: &mut impl BufRead) -> std::io::Result<Option<HttpRequest
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
-    let len: usize = headers
-        .get("content-length")
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
+    // Missing Content-Length means an empty body (routes that need one
+    // answer 400 themselves); a *malformed* one is a protocol error, and an
+    // oversized one is refused before a single body byte is read.
+    let len: usize = match headers.get("content-length") {
+        None => 0,
+        Some(v) => match v.trim().parse() {
+            Ok(n) => n,
+            Err(_) => {
+                return Ok(Parsed::Bad(HttpResponse::error(
+                    400,
+                    format!("invalid Content-Length {v:?}"),
+                )))
+            }
+        },
+    };
     if len > MAX_BODY {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "body too large"));
+        return Ok(Parsed::Bad(HttpResponse::error(
+            413,
+            format!("body of {len} bytes exceeds the {MAX_BODY}-byte limit"),
+        )));
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
-    Ok(Some(HttpRequest { method, path, query, headers, body, params: BTreeMap::new() }))
+    Ok(Parsed::Req(HttpRequest { method, path, query, headers, body, params: BTreeMap::new() }))
 }
 
 /// Blocking HTTP client (one request per call; fresh connection).
@@ -434,6 +475,80 @@ mod tests {
         assert_eq!(q["model"], "ResNet_v1_50");
         assert_eq!(q["batch"], "8");
         assert_eq!(q["name"], "hello world x");
+    }
+
+    /// Write raw bytes to the server, read the whole reply as a string.
+    fn raw_roundtrip(addr: std::net::SocketAddr, request: &[u8]) -> String {
+        use std::io::Read as _;
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request).unwrap();
+        s.shutdown(std::net::Shutdown::Write).ok();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        resp
+    }
+
+    #[test]
+    fn malformed_request_line_is_400_json_not_a_dropped_connection() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let resp = raw_roundtrip(server.addr(), b"GARBAGE\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("malformed request line"), "{resp}");
+        assert!(resp.contains("error"), "error body is JSON: {resp}");
+        // Server still healthy.
+        let (status, _) = http_request(server.addr(), "GET", "/api/ping", None).unwrap();
+        assert_eq!(status, 200);
+        server.stop();
+    }
+
+    #[test]
+    fn invalid_content_length_is_400() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST /api/echo HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("Content-Length"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413_before_reading_it() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        // Declare a body far over MAX_BODY; send none of it — the refusal
+        // must come from the header alone.
+        let req = format!(
+            "POST /api/echo HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        let resp = raw_roundtrip(server.addr(), req.as_bytes());
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        assert!(resp.contains("error"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn missing_content_length_on_post_is_a_clean_route_level_400() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        // No Content-Length → empty body → the echo route rejects the
+        // non-JSON body; the connection is answered, not dropped.
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST /api/echo HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn path_params_are_percent_decoded() {
+        let server = HttpServer::serve("127.0.0.1:0", test_router()).unwrap();
+        let (status, body) =
+            http_request(server.addr(), "GET", "/api/model/a%20b%31", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.get("model").unwrap().as_str(), Some("a b1"));
+        server.stop();
     }
 
     #[test]

@@ -9,8 +9,11 @@
 //! - **specification**: model + framework manifests ([`manifest`]),
 //!   versioned with semantic-version constraints ([`util::semver`]);
 //! - **distribution**: a TTL'd registry ([`registry`]), a framed RPC wire
-//!   protocol ([`wire`]), an HTTP REST server ([`httpd`]), the MLModelScope
-//!   server ([`server`]) and agents ([`agent`]);
+//!   protocol with streamed batched prediction ([`wire`]), an HTTP REST
+//!   server ([`httpd`]), the MLModelScope server ([`server`]) and agents
+//!   ([`agent`]) — batched serving fans out across remote agent processes
+//!   with heartbeat-driven membership and exactly-once failover, validated
+//!   by a seeded fault-injection harness ([`chaos`]);
 //! - **evaluation**: the streaming pipeline executor ([`pipeline`]) running
 //!   pre-processing ([`preprocess`]), framework predictors ([`predictor`])
 //!   and post-processing ([`postprocess`]) under pluggable benchmarking
@@ -73,6 +76,7 @@ pub mod sweep;
 pub mod predictor;
 pub mod runtime;
 
+pub mod chaos;
 pub mod registry;
 pub mod wire;
 

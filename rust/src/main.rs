@@ -3,7 +3,9 @@
 //! Subcommands mirror the paper's deployment units:
 //!
 //! - `server`  — run the MLModelScope server (REST API + registry + eval DB)
-//! - `agent`   — run an agent (simulator or XLA/PJRT) serving the wire RPC
+//! - `agent serve` — run an agent process (wire RPC), optionally joining a
+//!   fleet registry with TTL heartbeats and a `--chaos` fault plan
+//! - `fleet`   — host a registry, wait for remote agents, run work on them
 //! - `eval`    — one-shot evaluation through an in-process platform
 //! - `analyze` — run the analysis workflow over a stored evaluation DB
 //! - `zoo`     — list built-in models / systems
@@ -27,7 +29,14 @@ use std::sync::Arc;
 
 const COMMANDS: &[Command] = &[
     Command { name: "server", about: "run the MLModelScope server (REST API)" },
-    Command { name: "agent", about: "run an agent process (wire RPC)" },
+    Command {
+        name: "agent",
+        about: "run an agent process (wire RPC; `serve --registry` joins a fleet)",
+    },
+    Command {
+        name: "fleet",
+        about: "host a registry, wait for remote agents, run sweeps/evals on them",
+    },
     Command { name: "eval", about: "one-shot evaluation (in-process platform)" },
     Command { name: "analyze", about: "analysis workflow over a stored eval DB" },
     Command { name: "zoo", about: "list built-in models / systems" },
@@ -54,6 +63,7 @@ fn main() {
     let code = match cmd {
         "server" => cmd_server(&args),
         "agent" => cmd_agent(&args),
+        "fleet" => cmd_fleet(&args),
         "eval" => cmd_eval(&args),
         "analyze" => cmd_analyze(&args),
         "zoo" => cmd_zoo(&args),
@@ -183,7 +193,24 @@ fn cmd_server(args: &Args) -> i32 {
     }
 }
 
+/// `mlms agent [serve]` — run one agent process serving the wire RPC.
+///
+/// Fleet mode: `--registry <host:port>` makes the agent self-register with
+/// a remote registry (served by `mlms fleet` or any
+/// [`mlmodelscope::registry::registry_service`]) and keep its lease alive
+/// with TTL heartbeats (`--ttl-secs`, `--heartbeat-ms`). A lease that
+/// lapses (or a registry restart) triggers re-registration under a fresh
+/// id. `--chaos <plan>` + `--chaos-seed` install a seeded fault plan at the
+/// wire layer (see [`mlmodelscope::chaos`]); a `kill` fault exits the
+/// process — a real agent crash, observable by the whole fleet.
 fn cmd_agent(args: &Args) -> i32 {
+    match args.positional.first().map(|s| s.as_str()) {
+        None | Some("serve") => {}
+        Some(other) => {
+            eprintln!("unknown agent action {other:?} (only `serve`)");
+            return 2;
+        }
+    }
     let system = args.opt_or("system", "aws_p3").to_string();
     let db_path = args.opt_or("evaldb", "").to_string();
     let evaldb = Arc::new(if db_path.is_empty() {
@@ -217,17 +244,133 @@ fn cmd_agent(args: &Args) -> i32 {
         };
         sim_agent(&system, device, level, evaldb, sink).0
     };
-    let addr = args.opt_or("listen", "127.0.0.1:0");
-    match mlmodelscope::wire::RpcServer::serve(addr, mlmodelscope::agent::agent_service(agent)) {
-        Ok(rpc) => {
-            println!("mlms agent ({system}) serving wire RPC on {}", rpc.addr());
-            loop {
-                std::thread::sleep(std::time::Duration::from_secs(3600));
+    let chaos = match args.opt("chaos") {
+        Some(spec) => {
+            match mlmodelscope::chaos::FaultPlan::parse(spec, args.u64_or("chaos-seed", 0)) {
+                Ok(plan) => {
+                    eprintln!("chaos plan armed: {spec} (seed {})", plan.seed);
+                    Some(mlmodelscope::chaos::ChaosEngine::new(plan))
+                }
+                Err(e) => {
+                    eprintln!("invalid --chaos: {e}");
+                    return 2;
+                }
             }
         }
+        None => None,
+    };
+    if let Some(engine) = &chaos {
+        // A kill fault is a process death, not a polite shutdown.
+        engine.on_kill(|| {
+            eprintln!("chaos: kill fault fired — agent process exiting");
+            std::process::exit(137);
+        });
+    }
+    let addr = args.opt_or("listen", "127.0.0.1:0");
+    let rpc = match mlmodelscope::wire::RpcServer::serve_with_chaos(
+        addr,
+        mlmodelscope::agent::agent_service(agent.clone()),
+        chaos.clone(),
+    ) {
+        Ok(rpc) => rpc,
         Err(e) => {
             eprintln!("bind {addr}: {e}");
-            1
+            return 1;
+        }
+    };
+    println!("mlms agent ({system}) serving wire RPC on {}", rpc.addr());
+    if let Some(registry_addr) = args.opt("registry") {
+        let ttl_secs = args.f64_or("ttl-secs", 10.0).max(0.1);
+        let interval = std::time::Duration::from_millis(
+            args.u64_or("heartbeat-ms", ((ttl_secs * 1e3) as u64 / 4).max(100)),
+        );
+        let registry_addr = registry_addr.to_string();
+        let endpoint = rpc.addr().to_string();
+        let agent = agent.clone();
+        let chaos = chaos.clone();
+        std::thread::spawn(move || {
+            heartbeat_loop(registry_addr, agent, endpoint, ttl_secs, interval, chaos)
+        });
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Keep one agent's registry lease alive: register (fresh id), then beat
+/// every `interval`. A failed or expired beat falls back to registration —
+/// re-registration after expiry always yields a fresh id. A chaos plan can
+/// drop or delay beats (`drop:heartbeat:N`, `delay:heartbeat:MS`) so
+/// membership-failure scenarios are injectable without touching the wire.
+fn heartbeat_loop(
+    registry_addr: String,
+    agent: Arc<mlmodelscope::agent::Agent>,
+    endpoint: String,
+    ttl_secs: f64,
+    interval: std::time::Duration,
+    chaos: Option<Arc<mlmodelscope::chaos::ChaosEngine>>,
+) {
+    use mlmodelscope::chaos::FaultAction;
+    use mlmodelscope::util::json::Json;
+    loop {
+        let client = match mlmodelscope::wire::RpcClient::connect(registry_addr.as_str()) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("registry {registry_addr}: connect failed ({e}); retrying");
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                continue;
+            }
+        };
+        client.set_read_timeout(Some(std::time::Duration::from_secs(5)));
+        let mut info = agent.info(&endpoint).to_json();
+        if let Json::Obj(map) = &mut info {
+            map.insert("ttl_secs".into(), Json::num(ttl_secs));
+        }
+        let id = match client.call("register_agent", info) {
+            Ok(resp) => resp.str_or("id", "").to_string(),
+            Err(e) => {
+                eprintln!("registry {registry_addr}: register failed ({e}); retrying");
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                continue;
+            }
+        };
+        if id.is_empty() {
+            eprintln!("registry {registry_addr}: no id assigned; retrying");
+            std::thread::sleep(std::time::Duration::from_millis(500));
+            continue;
+        }
+        agent.adopt_id(&id);
+        println!("registered with {registry_addr} as {id} (ttl {ttl_secs}s)");
+        loop {
+            std::thread::sleep(interval);
+            if let Some(engine) = &chaos {
+                match engine.decide("heartbeat") {
+                    FaultAction::Pass => {}
+                    FaultAction::Delay(ms) => {
+                        std::thread::sleep(std::time::Duration::from_millis(ms))
+                    }
+                    // Skip this beat; enough skips and the lease lapses.
+                    FaultAction::Drop | FaultAction::Kill => continue,
+                }
+            }
+            let beat = client.call(
+                "heartbeat",
+                Json::obj(vec![
+                    ("id", Json::str(&id)),
+                    ("ttl_secs", Json::num(ttl_secs)),
+                ]),
+            );
+            match beat {
+                Ok(Json::Bool(true)) => {}
+                Ok(_) => {
+                    eprintln!("lease {id} expired; re-registering");
+                    break;
+                }
+                Err(e) => {
+                    eprintln!("heartbeat for {id} failed ({e}); reconnecting");
+                    break;
+                }
+            }
         }
     }
 }
@@ -567,9 +710,58 @@ fn cmd_slo_search(args: &Args) -> i32 {
 /// the four Table-1 systems. `--dispatch` routes single-item cells through
 /// the cross-request batcher (`--batch`, `--wait-ms`, `--fair`);
 /// `--compact` runs latest-wins compaction on the store afterwards.
-fn cmd_sweep(args: &Args) -> i32 {
+/// Parse the sweep-plan options shared by `mlms sweep` and `mlms fleet
+/// sweep`. Returns a usage error message on invalid input.
+fn build_sweep_plan(args: &Args, level: TraceLevel) -> Result<mlmodelscope::sweep::Plan, String> {
     use mlmodelscope::batcher::BatcherConfig;
-    use mlmodelscope::sweep::{run, Plan};
+    use mlmodelscope::sweep::Plan;
+    let models: Vec<String> = if args.opt("models").is_some() {
+        args.list("models")
+    } else {
+        mlmodelscope::zoo::names()
+    };
+    let systems: Vec<String> = if args.opt("systems").is_some() {
+        args.list("systems")
+    } else {
+        mlmodelscope::sysmodel::table1_system_names()
+    };
+    let batch_sizes: Vec<usize> = if args.opt("batches").is_some() {
+        let mut parsed = Vec::new();
+        for raw in args.list("batches") {
+            match raw.parse::<usize>() {
+                Ok(b) if b >= 1 => parsed.push(b),
+                _ => {
+                    return Err(format!(
+                        "invalid --batches entry {raw:?} (positive integer expected)"
+                    ))
+                }
+            }
+        }
+        parsed
+    } else {
+        vec![1, 8]
+    };
+    if models.is_empty() || systems.is_empty() || batch_sizes.is_empty() {
+        return Err("--models, --systems and --batches must each be non-empty".to_string());
+    }
+    let mut plan = Plan::new(models, systems);
+    plan.batch_sizes = batch_sizes;
+    plan.scenarios = vec![parse_scenario(args)];
+    plan.trace_level = level;
+    plan.seed = args.u64_or("seed", 42);
+    plan.parallelism = args.usize_or("jobs", 4);
+    plan.accelerator =
+        mlmodelscope::manifest::Accelerator::parse(args.opt_or("accelerator", "gpu"));
+    if args.flag("dispatch") {
+        let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
+        cfg.fair = args.flag("fair");
+        plan.dispatch = Some(cfg);
+    }
+    Ok(plan)
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    use mlmodelscope::sweep::run;
     let raw_level = args.opt_or("trace-level", "none");
     let level = match TraceLevel::parse(raw_level) {
         Some(l) => l,
@@ -588,48 +780,13 @@ fn cmd_sweep(args: &Args) -> i32 {
         },
         None => None,
     };
-    let models: Vec<String> = if args.opt("models").is_some() {
-        args.list("models")
-    } else {
-        mlmodelscope::zoo::names()
-    };
-    let systems: Vec<String> = if args.opt("systems").is_some() {
-        args.list("systems")
-    } else {
-        mlmodelscope::sysmodel::table1_system_names()
-    };
-    let batch_sizes: Vec<usize> = if args.opt("batches").is_some() {
-        let mut parsed = Vec::new();
-        for raw in args.list("batches") {
-            match raw.parse::<usize>() {
-                Ok(b) if b >= 1 => parsed.push(b),
-                _ => {
-                    eprintln!("invalid --batches entry {raw:?} (positive integer expected)");
-                    return 2;
-                }
-            }
+    let plan = match build_sweep_plan(args, level) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
         }
-        parsed
-    } else {
-        vec![1, 8]
     };
-    if models.is_empty() || systems.is_empty() || batch_sizes.is_empty() {
-        eprintln!("--models, --systems and --batches must each be non-empty");
-        return 2;
-    }
-    let mut plan = Plan::new(models, systems);
-    plan.batch_sizes = batch_sizes;
-    plan.scenarios = vec![parse_scenario(args)];
-    plan.trace_level = level;
-    plan.seed = args.u64_or("seed", 42);
-    plan.parallelism = args.usize_or("jobs", 4);
-    plan.accelerator =
-        mlmodelscope::manifest::Accelerator::parse(args.opt_or("accelerator", "gpu"));
-    if args.flag("dispatch") {
-        let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
-        cfg.fair = args.flag("fair");
-        plan.dispatch = Some(cfg);
-    }
     let server = build_platform_with_db(args, level, evaldb);
     let outcome = run(&server, &plan);
     println!("{}", outcome.summary());
@@ -657,6 +814,196 @@ fn cmd_sweep(args: &Args) -> i32 {
     } else {
         1
     }
+}
+
+/// `mlms fleet [sweep|eval|agents]` — the distributed-serving controller:
+/// host the registry (+ eval DB + zoo) in this process, serve it over the
+/// wire so `mlms agent serve --registry` processes can join, wait for
+/// `--expect-agents` members, then run work across them.
+///
+/// ```sh
+/// # terminal 1 — the controller
+/// mlms fleet sweep --listen-registry 127.0.0.1:7700 --expect-agents 3 \
+///     --models ResNet_v1_50,VGG16 --systems aws_p3 --batches 1 \
+///     --scenario poisson --rate 2000 --count 64 --dispatch --batch 8
+/// # terminals 2..4 — the agents
+/// mlms agent serve --system aws_p3 --registry 127.0.0.1:7700 --ttl-secs 5
+/// ```
+///
+/// Dispatch fans each batched evaluation across every live member;
+/// heartbeat-driven membership plus the dispatcher's exactly-once requeue
+/// and the sweep's retry-once failover mean a member lost mid-run costs
+/// nothing but the failover (see `tests/fleet_failover.rs`).
+fn cmd_fleet(args: &Args) -> i32 {
+    use mlmodelscope::registry::registry_service;
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("sweep");
+    if !matches!(action, "sweep" | "eval" | "agents") {
+        eprintln!("unknown fleet action {action:?} (sweep|eval|agents)");
+        return 2;
+    }
+    let raw_level = args.opt_or("trace-level", "none");
+    let level = match TraceLevel::parse(raw_level) {
+        Some(l) => l,
+        None => {
+            eprintln!("invalid --trace-level {raw_level:?} (none|model|framework|system|full)");
+            return 2;
+        }
+    };
+    let evaldb = match args.opt("evaldb") {
+        Some(p) => match mlmodelscope::evaldb::EvalDb::open(p) {
+            Ok(db) => Arc::new(db),
+            Err(e) => {
+                eprintln!("open {p}: {e}");
+                return 1;
+            }
+        },
+        None => Arc::new(mlmodelscope::evaldb::EvalDb::in_memory()),
+    };
+    // The fleet server has no local agents unless asked: the point is the
+    // remote members.
+    let server = if args.flag("with-local") {
+        build_platform_with_db(args, level, Some(evaldb))
+    } else {
+        let s = Server::new(
+            mlmodelscope::registry::Registry::new(),
+            evaldb,
+            mlmodelscope::traceserver::TraceServer::new(),
+        );
+        s.register_zoo();
+        s
+    };
+    let listen = args.opt_or("listen-registry", "127.0.0.1:7700");
+    let registry_rpc = match mlmodelscope::wire::RpcServer::serve(
+        listen,
+        registry_service(server.registry.clone()),
+    ) {
+        Ok(rpc) => rpc,
+        Err(e) => {
+            eprintln!("bind registry {listen}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "fleet registry on {} — join with: mlms agent serve --registry {}",
+        registry_rpc.addr(),
+        registry_rpc.addr()
+    );
+    let expect = args.usize_or("expect-agents", 1);
+    let wait_deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs_f64(args.f64_or("wait-secs", 60.0));
+    loop {
+        let joined = server.registry.agents().len();
+        if joined >= expect {
+            break;
+        }
+        if std::time::Instant::now() > wait_deadline {
+            eprintln!("fleet: only {joined}/{expect} agent(s) joined within the wait window");
+            return 1;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let members = server.registry.agents();
+    println!(
+        "fleet: {} member(s): {}",
+        members.len(),
+        members
+            .iter()
+            .map(|a| format!("{}@{} [{}]", a.id, a.endpoint, a.system))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let code = match action {
+        "agents" => 0,
+        "eval" => {
+            let model = match args.require("model") {
+                Ok(m) => m.to_string(),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let mut job = EvalJob::new(&model, parse_scenario(args));
+            job.trace_level = level;
+            job.seed = args.u64_or("seed", 42);
+            job.all_agents = args.flag("all-agents");
+            if let Some(sys) = args.opt("system") {
+                job.requirements = SystemRequirements::on_system(sys);
+            }
+            if args.flag("dispatch") {
+                let mut cfg = mlmodelscope::batcher::BatcherConfig::new(
+                    args.usize_or("batch", 8),
+                    args.f64_or("wait-ms", 5.0),
+                );
+                cfg.fair = args.flag("fair");
+                match server.evaluate_batched(&job, &cfg) {
+                    Ok(result) => {
+                        let r = &result.record;
+                        println!(
+                            "{} on {} via {} agent(s): p90 {:.3} ms, throughput {:.1} items/s, {} requeue(s)",
+                            r.key.model,
+                            r.key.system,
+                            result.record.meta.f64_or("agents", 0.0),
+                            r.p90_ms(),
+                            r.throughput,
+                            result.outcome.requeued_batches,
+                        );
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("fleet eval failed: {e}");
+                        1
+                    }
+                }
+            } else {
+                match server.evaluate(&job) {
+                    Ok(records) => {
+                        for r in &records {
+                            println!(
+                                "{} on {} [{}]: trimmed-mean {:.3} ms, throughput {:.1} items/s",
+                                r.key.model,
+                                r.key.system,
+                                r.key.device,
+                                r.trimmed_mean_ms(),
+                                r.throughput,
+                            );
+                        }
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("fleet eval failed: {e}");
+                        1
+                    }
+                }
+            }
+        }
+        // Default: a memoized sweep executed by the remote members.
+        _ => {
+            let plan = match build_sweep_plan(args, level) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let outcome = mlmodelscope::sweep::run(&server, &plan);
+            println!("{}", outcome.summary());
+            for (cell, err) in &outcome.failed {
+                eprintln!("  failed {}: {err}", cell.label());
+            }
+            println!(
+                "{}",
+                mlmodelscope::analysis::model_system_matrix(&plan.models, &server.evaldb)
+                    .render()
+            );
+            if outcome.failed.is_empty() {
+                0
+            } else {
+                1
+            }
+        }
+    };
+    registry_rpc.stop();
+    code
 }
 
 /// The REST client (§4.2): the command-line counterpart of the web UI,

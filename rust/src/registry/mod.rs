@@ -124,11 +124,21 @@ impl Registry {
     }
 
     /// Heartbeat: extend an agent's TTL. Returns false if it had expired.
+    ///
+    /// Extension is **monotone**: a heartbeat can only push the lease out,
+    /// never pull it in. A beat carrying a shorter TTL than the time already
+    /// remaining leaves the lease untouched (and a TTL-less in-process
+    /// agent stays TTL-less) — otherwise a stale or misconfigured beat
+    /// could shrink a healthy agent's lease out from under in-flight work.
     pub fn heartbeat(&self, id: &str, ttl: Duration) -> bool {
         let mut agents = self.agents.lock().unwrap();
         match agents.get_mut(id) {
             Some(e) if e.expires.map_or(true, |t| t > Instant::now()) => {
-                e.expires = Some(Instant::now() + ttl);
+                let candidate = Instant::now() + ttl;
+                e.expires = match e.expires {
+                    None => None,
+                    Some(current) => Some(current.max(candidate)),
+                };
                 true
             }
             _ => {
@@ -136,6 +146,17 @@ impl Registry {
                 false
             }
         }
+    }
+
+    /// Time left on an agent's lease: `None` when the id is unknown,
+    /// `Duration::MAX` for TTL-less (in-process) agents, zero once the
+    /// lease has lapsed but the entry has not yet been swept.
+    pub fn lease_remaining(&self, id: &str) -> Option<Duration> {
+        let agents = self.agents.lock().unwrap();
+        agents.get(id).map(|e| match e.expires {
+            None => Duration::MAX,
+            Some(t) => t.saturating_duration_since(Instant::now()),
+        })
     }
 
     pub fn deregister_agent(&self, id: &str) {

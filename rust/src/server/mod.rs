@@ -226,6 +226,9 @@ impl Server {
             let remote_results = parallel_map(remote, 8, move |target| {
                 let client = crate::wire::RpcClient::connect(&target.endpoint)
                     .map_err(|e| (target.id.clone(), e.to_string()))?;
+                // A full remote scenario can run long, but not forever: a
+                // partitioned agent must fail the dispatch, not hang it.
+                client.set_read_timeout(Some(std::time::Duration::from_secs(300)));
                 let resp = client
                     .call("Evaluate", payload.clone())
                     .map_err(|e| (target.id.clone(), e.to_string()))?;
@@ -301,18 +304,15 @@ impl Server {
             .manifest(&job.model, job.model_version.as_deref())
             .ok_or_else(|| ServerError::UnknownModel(job.model.clone()))?;
         let candidates = self.registry.resolve(&manifest, &job.requirements);
-        // Shard only across agents that are both still live (TTL re-checked
-        // at dispatch time) and in-process; remote batched sessions ride on
-        // the same executor trait but are a later step.
-        let locals: Vec<(String, Arc<Agent>)> = {
-            let agents = self.local_agents.lock().unwrap();
-            candidates
-                .iter()
-                .filter(|c| self.registry.is_live(&c.id))
-                .filter_map(|c| agents.get(&c.id).map(|a| (c.id.clone(), a.clone())))
-                .collect()
-        };
-        if locals.is_empty() {
+        // Shard across every resolved agent that is still live (TTL
+        // re-checked at dispatch time): in-process agents get a local batch
+        // session, registry-discovered TCP agents a [`RemoteBatchSession`]
+        // over the wire — one fleet, one executor pool.
+        let live: Vec<AgentInfo> = candidates
+            .into_iter()
+            .filter(|c| self.registry.is_live(&c.id))
+            .collect();
+        if live.is_empty() {
             return Err(no_agent());
         }
 
@@ -326,9 +326,6 @@ impl Server {
             payload: Payload::Tensor(Tensor::random(vec![1, 4, 4, 3], job.seed ^ r.id)),
         });
         let series = batching_series(&batches, cfg);
-        let mut replay = QueueSim::new(&batches, locals.len(), cfg.policy());
-        let is_probe = watch.is_some();
-        let watch = watch.map(|f| f(&batches, locals.len()));
         // Per-batch planning facts, captured before the dispatcher consumes
         // the plan — the serving-span emission needs them afterwards.
         let batch_facts: Vec<BatchFacts> = batches
@@ -341,15 +338,54 @@ impl Server {
             })
             .collect();
 
+        // Open sessions leniently: a candidate whose session fails to open
+        // (agent died between resolution and open, model unsupported) is
+        // skipped — failover starts before the first batch. Only an empty
+        // pool is an error.
+        let locals = self.local_agents.lock().unwrap().clone();
         let mut executors: Vec<Arc<dyn BatchExecutor>> = Vec::new();
         let mut trace_ids = Vec::new();
-        for (id, agent) in &locals {
-            let session = agent
-                .open_batch_session(&manifest, cfg.max_batch_size)
-                .map_err(|e| ServerError::AgentFailed(id.clone(), e))?;
-            trace_ids.push(session.trace_id());
-            executors.push(Arc::new(session));
+        let mut used: Vec<AgentInfo> = Vec::new();
+        let mut remote_agents = 0usize;
+        let mut open_errors: Vec<String> = Vec::new();
+        for c in &live {
+            if let Some(agent) = locals.get(&c.id) {
+                match agent.open_batch_session(&manifest, cfg.max_batch_size) {
+                    Ok(session) => {
+                        trace_ids.push(session.trace_id());
+                        executors.push(Arc::new(session));
+                        used.push(c.clone());
+                    }
+                    Err(e) => open_errors.push(format!("{}: {e}", c.id)),
+                }
+            } else if !c.endpoint.is_empty() {
+                match crate::agent::RemoteBatchSession::open(
+                    &c.endpoint,
+                    &c.id,
+                    &manifest,
+                    cfg.max_batch_size,
+                    Some(self.registry.clone()),
+                    cfg.remote_deadline_ms,
+                ) {
+                    Ok(session) => {
+                        executors.push(Arc::new(session));
+                        used.push(c.clone());
+                        remote_agents += 1;
+                    }
+                    Err(e) => open_errors.push(format!("{}: {e}", c.id)),
+                }
+            }
         }
+        if executors.is_empty() {
+            return Err(if open_errors.is_empty() {
+                no_agent()
+            } else {
+                ServerError::AgentFailed("-".into(), open_errors.join("; "))
+            });
+        }
+        let mut replay = QueueSim::new(&batches, executors.len(), cfg.policy());
+        let is_probe = watch.is_some();
+        let watch = watch.map(|f| f(&batches, executors.len()));
         let outcome = Dispatcher::new(executors)
             .with_policy(cfg.policy())
             .dispatch_watched(batches, watch)
@@ -382,7 +418,14 @@ impl Server {
         // model internals. Probes emit too — an SLO search's failing probe
         // is exactly the trace worth attributing.
         let serving_trace_id = if job.trace_level >= TraceLevel::Model {
-            self.publish_serving_spans(job, &batch_facts, &replay, &tenant_name, is_probe)
+            self.publish_serving_spans(
+                job,
+                &batch_facts,
+                &replay,
+                &tenant_name,
+                is_probe,
+                &outcome.requeue_log,
+            )
         } else {
             None
         };
@@ -395,22 +438,22 @@ impl Server {
         let items = outcome.outputs.len() as f64;
         let throughput = items / outcome.makespan_s().max(1e-12);
 
-        let (fw, fw_ver) = locals[0].1.predictor().framework();
+        // Key facts come from the registry advertisements of the agents
+        // that actually served (identical to the predictor-reported values
+        // for local agents; the only source available for remote ones).
         let systems: std::collections::BTreeSet<String> =
-            locals.iter().map(|(_, a)| a.config.system.clone()).collect();
+            used.iter().map(|a| a.system.clone()).collect();
         let key = EvalKey {
             model: manifest.name.clone(),
             model_version: manifest.version.to_string(),
-            framework: fw,
-            framework_version: fw_ver,
+            framework: used[0].framework.clone(),
+            framework_version: used[0].framework_version.to_string(),
             system: if systems.len() == 1 {
                 systems.iter().next().unwrap().clone()
             } else {
                 "multi".to_string()
             },
-            device: locals[0]
-                .1
-                .config
+            device: used[0]
                 .devices
                 .first()
                 .cloned()
@@ -444,7 +487,8 @@ impl Server {
                 Json::str(if cfg.fair { "fair_by_tenant" } else { "least_outstanding" }),
             ),
             ("fair", Json::Bool(cfg.fair)),
-            ("agents", Json::num(locals.len() as f64)),
+            ("agents", Json::num(used.len() as f64)),
+            ("remote_agents", Json::num(remote_agents as f64)),
             (
                 "per_agent_items",
                 Json::Obj(
@@ -456,6 +500,21 @@ impl Server {
                 ),
             ),
             ("requeued_batches", Json::num(outcome.requeued_batches as f64)),
+            (
+                "failover",
+                Json::arr(
+                    outcome
+                        .requeue_log
+                        .iter()
+                        .map(|(idx, agent)| {
+                            Json::obj(vec![
+                                ("batch_index", Json::num(*idx as f64)),
+                                ("from_agent", Json::str(agent)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("makespan_s", Json::num(outcome.makespan_s())),
         ];
         if matches!(job.scenario, Scenario::Mix { .. }) {
@@ -488,7 +547,10 @@ impl Server {
     /// scheduled batch with `batching_wait` (open → formed), `queue_wait`
     /// (formed → start) and `batch_service` (start → completion) children,
     /// each tagged with its serving stage and tenant so
-    /// [`crate::traceanalysis`] can attribute the serving stack.
+    /// [`crate::traceanalysis`] can attribute the serving stack. A batch
+    /// that was requeued after an agent death additionally carries a
+    /// `failover` child naming the agent that failed it — the trace records
+    /// the failover, not just the recovery.
     fn publish_serving_spans(
         &self,
         job: &EvalJob,
@@ -496,6 +558,7 @@ impl Server {
         replay: &QueueSim,
         tenant_name: &dyn Fn(u32) -> String,
         is_probe: bool,
+        requeues: &[(u64, String)],
     ) -> Option<u64> {
         let sched = replay.schedule_log();
         if sched.is_empty() {
@@ -512,6 +575,12 @@ impl Server {
         let trace_id = tracer.new_trace();
         let root_id = tracer.new_trace();
         let ns = |s: f64| (s.max(0.0) * 1e9).round() as u64;
+        let requeued_from = |index: u64| -> Option<String> {
+            requeues
+                .iter()
+                .find(|(i, _)| *i == index)
+                .map(|(_, agent)| agent.clone())
+        };
         let mut t_start = f64::INFINITY;
         let mut t_end = 0.0f64;
         for s in sched {
@@ -555,6 +624,27 @@ impl Server {
             child("batching_wait", "batching", b.opened_at, b.formed_at);
             child("queue_wait", "queueing", s.formed_at, s.start);
             child("batch_service", "compute", s.start, s.completion);
+            // The requeue itself: the virtual-time replay schedules only
+            // the successful execution, so the failover is pinned to the
+            // batch's pre-service window (minimum 1 ns so it is never
+            // dropped as zero-width) and named after the dead agent.
+            if let Some(from_agent) = requeued_from(s.index) {
+                tracer.publish(Span {
+                    trace_id,
+                    span_id: tracer.new_trace(),
+                    parent_id: Some(batch_id),
+                    name: "failover".into(),
+                    level: TraceLevel::Model,
+                    start_ns: ns(s.formed_at),
+                    end_ns: ns(s.start).max(ns(s.formed_at) + 1),
+                    tags: vec![
+                        ("stage".into(), "failover".into()),
+                        ("tenant".into(), tenant.clone()),
+                        ("from_agent".into(), from_agent),
+                        ("batch_index".into(), s.index.to_string()),
+                    ],
+                });
+            }
         }
         tracer.publish(Span {
             trace_id,

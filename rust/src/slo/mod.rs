@@ -584,4 +584,44 @@ mod tests {
         assert_eq!(slo_records.len(), 2);
         assert!(slo_records.iter().all(|r| r.meta.get("slo").is_some()));
     }
+
+    /// SLO probes fan out across registry-discovered TCP agents just like
+    /// any batched evaluation: one local agent + one wire agent serve the
+    /// probe stream together.
+    #[test]
+    fn probes_fan_out_across_a_remote_wire_fleet() {
+        let server = platform(1);
+        let remote_db = Arc::new(crate::evaldb::EvalDb::in_memory());
+        let sink = crate::tracing::MemorySink::new();
+        let (remote, _sim, _tracer) =
+            sim_agent("aws_p3", Device::Gpu, TraceLevel::None, remote_db, sink);
+        let rpc = crate::wire::RpcServer::serve(
+            "127.0.0.1:0",
+            crate::agent::agent_service(remote.clone()),
+        )
+        .unwrap();
+        server.registry.register_agent(
+            remote.info(&rpc.addr().to_string()),
+            Some(std::time::Duration::from_secs(60)),
+        );
+        let job = EvalJob::new("MobileNet_v1_1.0_224", Scenario::Online { count: 1 });
+        let cfg = BatcherConfig::new(8, 5.0);
+        // A single loose probe: every request is scored and both agents
+        // participated (the registry now resolves two).
+        let p = probe(&server, &job, &cfg, SloSpec::p99(1e9), 50.0, 48).unwrap();
+        assert!(p.passed);
+        assert_eq!(p.samples, 48, "every request's latency was judged");
+        // The adaptive search runs over the same mixed fleet.
+        let sc = SloSearchConfig {
+            start_qps: 20.0,
+            probe_count: 32,
+            steps_per_octave: 2,
+            max_probes: 6,
+        };
+        let point = search_max_qps(&server, &job, &cfg, SloSpec::p99(1e9), &sc).unwrap();
+        assert!(point.max_qps > 0.0, "an unbounded SLO must admit load");
+        // Probes never persist — the store holds no accidental records.
+        assert_eq!(server.evaldb.len(), 0);
+        rpc.stop();
+    }
 }

@@ -249,6 +249,9 @@ pub struct Outcome {
     pub executed: usize,
     /// Cells skipped via digest memoization (including in-run duplicates).
     pub memoized: usize,
+    /// Cells whose first execution failed and were retried once against a
+    /// fresh agent resolution (fleet failover; see [`run`]).
+    pub retried: usize,
     /// Cells that could not run, with their errors.
     pub failed: Vec<(Cell, String)>,
     /// One record per covered cell — memoized records first, then fresh
@@ -261,9 +264,10 @@ pub struct Outcome {
 impl Outcome {
     pub fn summary(&self) -> String {
         format!(
-            "sweep: {} cells — {} executed, {} memoized, {} failed in {:.2}s",
+            "sweep: {} cells — {} executed, {} retried, {} memoized, {} failed in {:.2}s",
             self.cells,
             self.executed,
+            self.retried,
             self.memoized,
             self.failed.len(),
             self.wall_s
@@ -271,10 +275,30 @@ impl Outcome {
     }
 }
 
+/// Run one cell's job through the path its plan prescribes.
+fn execute_cell(server: &Server, plan: &Plan, cell: &Cell) -> Result<Vec<EvalRecord>, String> {
+    let job = plan.job(cell);
+    if plan.uses_dispatch(cell) {
+        server
+            .evaluate_batched(&job, plan.dispatch.as_ref().unwrap())
+            .map(|b| vec![b.record])
+            .map_err(|e| e.to_string())
+    } else {
+        server.evaluate(&job).map_err(|e| e.to_string())
+    }
+}
+
 /// Execute a plan against a server's fleet with memoization and crash-safe
 /// resume (see the module docs). Cells are grouped by system: groups run
 /// in parallel (the fleet dimension), cells within a group sequentially
 /// (one simulated agent's clock must not be shared by concurrent runs).
+///
+/// **Failover:** a cell whose execution fails (an agent process died
+/// mid-batch, a connection dropped) is retried **exactly once** against a
+/// fresh agent resolution — by then the dead agent's lease has lapsed or
+/// its connection refuses, so the retry lands on a survivor. Nothing was
+/// stored for the failed attempt (both execution paths store only on
+/// success), so the retry keeps every cell exactly-once in the store.
 pub fn run(server: &Arc<Server>, plan: &Plan) -> Outcome {
     let t0 = std::time::Instant::now();
     let total = plan.cells().len();
@@ -295,34 +319,40 @@ pub fn run(server: &Arc<Server>, plan: &Plan) -> Outcome {
     let group_results = parallel_map(groups, workers, move |(_, cells)| {
         let mut out = Vec::with_capacity(cells.len());
         for (cell, _digest) in cells {
-            let job = plan2.job(&cell);
-            let result = if plan2.uses_dispatch(&cell) {
-                server2
-                    .evaluate_batched(&job, plan2.dispatch.as_ref().unwrap())
-                    .map(|b| vec![b.record])
-                    .map_err(|e| e.to_string())
-            } else {
-                server2.evaluate(&job).map_err(|e| e.to_string())
-            };
+            let result = execute_cell(&server2, &plan2, &cell);
             out.push((cell, result));
         }
         out
     });
 
     let mut executed = 0usize;
+    let mut exec_failed: Vec<(Cell, String)> = Vec::new();
     for (cell, result) in group_results.into_iter().flatten() {
         match result {
             Ok(mut rs) => {
                 executed += 1;
                 records.append(&mut rs);
             }
-            Err(e) => failed.push((cell, e)),
+            Err(e) => exec_failed.push((cell, e)),
+        }
+    }
+    // Failover pass: retry each failed cell once on whatever agents still
+    // resolve. Sequential — by now the fleet may be down to few survivors.
+    let retried = exec_failed.len();
+    for (cell, first_err) in exec_failed {
+        match execute_cell(server, plan, &cell) {
+            Ok(mut rs) => {
+                executed += 1;
+                records.append(&mut rs);
+            }
+            Err(e) => failed.push((cell, format!("{first_err}; retry: {e}"))),
         }
     }
     Outcome {
         cells: total,
         executed,
         memoized: part.memoized,
+        retried,
         failed,
         records,
         wall_s: t0.elapsed().as_secs_f64(),

@@ -20,15 +20,25 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Max accepted frame: 256 MB (a batch-256 224² f32 tensor is ~154 MB).
 const MAX_FRAME: u32 = 256 << 20;
+
+/// Once a frame's length prefix has arrived, the body must follow within
+/// this window — a peer that stalls mid-frame (a partition, a half-dead
+/// process) must not pin the connection thread forever. Idle connections
+/// *between* frames are legal and never time out.
+const MIDFRAME_TIMEOUT: Duration = Duration::from_secs(5);
 
 #[derive(Debug)]
 pub enum WireError {
     Io(std::io::Error),
     Protocol(String),
     Remote(String),
+    /// A deadline elapsed: a client read timeout, or a peer stalling
+    /// mid-frame. The connection is unusable afterwards.
+    Deadline(String),
 }
 
 impl std::fmt::Display for WireError {
@@ -37,6 +47,7 @@ impl std::fmt::Display for WireError {
             WireError::Io(e) => write!(f, "io: {e}"),
             WireError::Protocol(m) => write!(f, "protocol: {m}"),
             WireError::Remote(m) => write!(f, "remote error: {m}"),
+            WireError::Deadline(m) => write!(f, "deadline: {m}"),
         }
     }
 }
@@ -77,6 +88,60 @@ pub fn read_frame(stream: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> 
     Ok(Some(buf))
 }
 
+/// As [`read_frame`], for TCP streams: the length-prefix read blocks
+/// indefinitely (idle persistent connections are legal), but once a prefix
+/// arrives the body must land within `body_timeout` or the read fails with
+/// [`WireError::Deadline`] — a peer stalling mid-frame can never hang a
+/// connection thread. Used by the server side of every connection.
+pub fn read_frame_guarded(
+    stream: &mut TcpStream,
+    body_timeout: Duration,
+) -> Result<Option<Vec<u8>>, WireError> {
+    // First prefix byte: may block forever (an idle connection is at a
+    // frame boundary). Everything after it — the rest of the prefix AND
+    // the body — is mid-frame and runs under the timeout.
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf[..1]) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    stream.set_read_timeout(Some(body_timeout)).ok();
+    let guarded = (|| -> Result<Vec<u8>, std::io::Error> {
+        stream.read_exact(&mut len_buf[1..])?;
+        let len = u32::from_be_bytes(len_buf);
+        if len > MAX_FRAME {
+            // Sentinel mapped back to Protocol below (keeps the closure's
+            // error type uniform without reading `len` twice).
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame too large: {len}"),
+            ));
+        }
+        let mut buf = vec![0u8; len as usize];
+        stream.read_exact(&mut buf)?;
+        Ok(buf)
+    })();
+    stream.set_read_timeout(None).ok();
+    match guarded {
+        Ok(buf) => Ok(Some(buf)),
+        Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+            Err(WireError::Protocol(e.to_string()))
+        }
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            Err(WireError::Deadline(format!(
+                "frame stalled mid-read (no data within {body_timeout:?})"
+            )))
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
 /// A request handler: `method` + `params` → `Ok(result)` or `Err(message)`.
 pub trait Service: Send + Sync + 'static {
     fn call(&self, method: &str, params: &Json) -> Result<Json, String>;
@@ -92,6 +157,22 @@ pub trait Service: Send + Sync + 'static {
         _blob: Option<&[u8]>,
     ) -> Result<(Json, Option<Vec<u8>>), String> {
         self.call(method, params).map(|j| (j, None))
+    }
+
+    /// Streaming call: may push any number of interim frames through
+    /// `emit(chunk_json, chunk_blob)` — delivered in order on the same
+    /// connection, each wrapped in a `{"stream": true, "chunk": ...}`
+    /// envelope carrying the request id — before returning the final
+    /// (normal) response. The `PredictBatch` RPC streams large batched
+    /// tensor results in bounded chunks this way. Default: unary.
+    fn call_stream(
+        &self,
+        method: &str,
+        params: &Json,
+        blob: Option<&[u8]>,
+        _emit: &mut dyn FnMut(Json, Option<Vec<u8>>) -> Result<(), WireError>,
+    ) -> Result<(Json, Option<Vec<u8>>), String> {
+        self.call_binary(method, params, blob)
     }
 }
 
@@ -114,6 +195,19 @@ pub struct RpcServer {
 impl RpcServer {
     /// Bind and serve `service` on `addr` (use port 0 for ephemeral).
     pub fn serve(addr: &str, service: Arc<dyn Service>) -> Result<RpcServer, WireError> {
+        RpcServer::serve_with_chaos(addr, service, None)
+    }
+
+    /// As [`RpcServer::serve`], with an optional [`crate::chaos::ChaosEngine`]
+    /// consulted before every request is dispatched — the injection point
+    /// for deterministic distributed-failure scenarios. A `Kill` verdict
+    /// flips the server's shutdown flag (and fires the engine's kill hook),
+    /// so every connection dies no later than its next request.
+    pub fn serve_with_chaos(
+        addr: &str,
+        service: Arc<dyn Service>,
+        chaos: Option<Arc<crate::chaos::ChaosEngine>>,
+    ) -> Result<RpcServer, WireError> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -129,8 +223,9 @@ impl RpcServer {
                         Ok(stream) => {
                             let service = service.clone();
                             let sd = sd.clone();
+                            let chaos = chaos.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_connection(stream, service, sd);
+                                let _ = handle_connection(stream, service, sd, chaos);
                             });
                         }
                         Err(_) => break,
@@ -213,10 +308,11 @@ fn handle_connection(
     mut stream: TcpStream,
     service: Arc<dyn Service>,
     shutdown: Arc<AtomicBool>,
+    chaos: Option<Arc<crate::chaos::ChaosEngine>>,
 ) -> Result<(), WireError> {
     stream.set_nodelay(true).ok();
     while !shutdown.load(Ordering::Relaxed) {
-        let frame = match read_frame(&mut stream)? {
+        let frame = match read_frame_guarded(&mut stream, MIDFRAME_TIMEOUT)? {
             Some(f) => f,
             None => return Ok(()), // clean disconnect
         };
@@ -224,7 +320,33 @@ fn handle_connection(
         let id = req.f64_or("id", 0.0);
         let method = req.str_or("method", "");
         let params = req.get("params").cloned().unwrap_or(Json::Null);
-        let (response, out_blob) = match service.call_binary(method, &params, blob.as_deref()) {
+        if let Some(engine) = &chaos {
+            match engine.decide(method) {
+                crate::chaos::FaultAction::Pass => {}
+                crate::chaos::FaultAction::Delay(ms) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                // Close with no reply: from the caller's view this is
+                // exactly a crashed peer mid-call.
+                crate::chaos::FaultAction::Drop => return Ok(()),
+                crate::chaos::FaultAction::Kill => {
+                    shutdown.store(true, Ordering::Relaxed);
+                    return Ok(());
+                }
+            }
+        }
+        let result = {
+            let mut emit = |chunk: Json, chunk_blob: Option<Vec<u8>>| -> Result<(), WireError> {
+                let envelope = Json::obj(vec![
+                    ("id", Json::num(id)),
+                    ("stream", Json::Bool(true)),
+                    ("chunk", chunk),
+                ]);
+                write_frame(&mut stream, &encode_envelope(&envelope, chunk_blob.as_deref()))
+            };
+            service.call_stream(method, &params, blob.as_deref(), &mut emit)
+        };
+        let (response, out_blob) = match result {
             Ok((result, out_blob)) => (
                 Json::obj(vec![
                     ("id", Json::num(id)),
@@ -247,17 +369,40 @@ fn handle_connection(
     Ok(())
 }
 
-/// Client side: a persistent connection issuing unary calls.
+/// Client side: a persistent connection issuing unary or streamed calls.
+///
+/// Any transport-level failure (I/O error, deadline, protocol violation —
+/// anything except a clean [`WireError::Remote`]) marks the connection
+/// *broken*: request/response pairing can no longer be trusted (a late
+/// reply to a timed-out call would be mis-matched to the next request), so
+/// every later call fails fast with a typed error instead.
 pub struct RpcClient {
     stream: std::sync::Mutex<TcpStream>,
     next_id: AtomicU64,
+    broken: AtomicBool,
 }
 
 impl RpcClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<RpcClient, WireError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(RpcClient { stream: std::sync::Mutex::new(stream), next_id: AtomicU64::new(1) })
+        Ok(RpcClient {
+            stream: std::sync::Mutex::new(stream),
+            next_id: AtomicU64::new(1),
+            broken: AtomicBool::new(false),
+        })
+    }
+
+    /// Per-call deadline: reads past it fail with [`WireError::Deadline`]
+    /// (and break the connection). `None` waits forever.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) {
+        let stream = self.stream.lock().unwrap();
+        stream.set_read_timeout(timeout).ok();
+    }
+
+    /// A transport failure poisoned this connection.
+    pub fn is_broken(&self) -> bool {
+        self.broken.load(Ordering::Relaxed)
     }
 
     /// Unary call: send request, await the matching response.
@@ -272,6 +417,38 @@ impl RpcClient {
         params: Json,
         blob: Option<&[u8]>,
     ) -> Result<(Json, Option<Vec<u8>>), WireError> {
+        self.call_streamed(method, params, blob, |_, _| {})
+    }
+
+    /// Streamed call: interim `{"stream": true}` frames are handed to
+    /// `on_chunk(chunk_json, chunk_blob)` in arrival order; the final frame
+    /// resolves the call like a unary response.
+    pub fn call_streamed(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+        mut on_chunk: impl FnMut(&Json, Option<&[u8]>),
+    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
+        if self.is_broken() {
+            return Err(WireError::Protocol(
+                "connection marked broken by an earlier transport failure".into(),
+            ));
+        }
+        let result = self.call_streamed_inner(method, params, blob, &mut on_chunk);
+        if !matches!(result, Ok(_) | Err(WireError::Remote(_))) {
+            self.broken.store(true, Ordering::Relaxed);
+        }
+        result
+    }
+
+    fn call_streamed_inner(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+        on_chunk: &mut dyn FnMut(&Json, Option<&[u8]>),
+    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Json::obj(vec![
             ("id", Json::num(id as f64)),
@@ -280,18 +457,41 @@ impl RpcClient {
         ]);
         let mut stream = self.stream.lock().unwrap();
         write_frame(&mut *stream, &encode_envelope(&req, blob))?;
-        let frame = read_frame(&mut *stream)?
-            .ok_or_else(|| WireError::Protocol("connection closed mid-call".into()))?;
-        drop(stream);
-        let (resp, out_blob) = decode_envelope(&frame)?;
-        if resp.f64_or("id", -1.0) != id as f64 {
-            return Err(WireError::Protocol("response id mismatch".into()));
+        loop {
+            let frame = read_frame(&mut *stream)
+                .map_err(map_client_timeout)?
+                .ok_or_else(|| WireError::Protocol("connection closed mid-call".into()))?;
+            let (resp, out_blob) = decode_envelope(&frame)?;
+            if resp.f64_or("id", -1.0) != id as f64 {
+                return Err(WireError::Protocol("response id mismatch".into()));
+            }
+            if resp.get("stream").and_then(|v| v.as_bool()) == Some(true) {
+                on_chunk(resp.get("chunk").unwrap_or(&Json::Null), out_blob.as_deref());
+                continue;
+            }
+            drop(stream);
+            return if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob))
+            } else {
+                Err(WireError::Remote(resp.str_or("error", "unknown error").to_string()))
+            };
         }
-        if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
-            Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob))
-        } else {
-            Err(WireError::Remote(resp.str_or("error", "unknown error").to_string()))
+    }
+}
+
+/// A read timeout on the client socket surfaces as an I/O error; retype it
+/// as the deadline it is.
+fn map_client_timeout(e: WireError) -> WireError {
+    match e {
+        WireError::Io(io)
+            if matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            WireError::Deadline("no response within the read timeout".into())
         }
+        other => other,
     }
 }
 
@@ -393,5 +593,111 @@ mod tests {
         let data: &[u8] = &[];
         let mut cursor = std::io::Cursor::new(data);
         assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn non_json_frame_is_typed_protocol_error() {
+        assert!(matches!(
+            decode_envelope(b"not json at all"),
+            Err(WireError::Protocol(_))
+        ));
+        // Invalid UTF-8 is protocol too, not a panic.
+        assert!(matches!(decode_envelope(&[0xFF, 0xFE, 0x80]), Err(WireError::Protocol(_))));
+        // Truncated binary envelopes reject cleanly.
+        assert!(matches!(decode_envelope(&[0x01, 0, 0]), Err(WireError::Protocol(_))));
+        assert!(matches!(
+            decode_envelope(&[0x01, 0, 0, 0, 99, b'{', b'}']),
+            Err(WireError::Protocol(_))
+        ));
+    }
+
+    /// A service that streams three chunks before its final response.
+    struct StreamingEcho;
+
+    impl Service for StreamingEcho {
+        fn call(&self, _method: &str, params: &Json) -> Result<Json, String> {
+            Ok(params.clone())
+        }
+
+        fn call_stream(
+            &self,
+            method: &str,
+            params: &Json,
+            blob: Option<&[u8]>,
+            emit: &mut dyn FnMut(Json, Option<Vec<u8>>) -> Result<(), WireError>,
+        ) -> Result<(Json, Option<Vec<u8>>), String> {
+            if method != "stream" {
+                return self.call_binary(method, params, blob);
+            }
+            for i in 0..3u8 {
+                emit(
+                    Json::obj(vec![("i", Json::num(i as f64))]),
+                    Some(vec![i, i, i]),
+                )
+                .map_err(|e| e.to_string())?;
+            }
+            Ok((Json::obj(vec![("chunks", Json::num(3.0))]), None))
+        }
+    }
+
+    #[test]
+    fn streamed_call_delivers_chunks_in_order_then_final() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(StreamingEcho)).unwrap();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        let mut chunks: Vec<(f64, Vec<u8>)> = Vec::new();
+        let (result, _) = client
+            .call_streamed("stream", Json::Null, None, |chunk, blob| {
+                chunks.push((chunk.f64_or("i", -1.0), blob.unwrap_or_default().to_vec()));
+            })
+            .unwrap();
+        assert_eq!(result.f64_or("chunks", 0.0), 3.0);
+        assert_eq!(
+            chunks,
+            vec![(0.0, vec![0, 0, 0]), (1.0, vec![1, 1, 1]), (2.0, vec![2, 2, 2])]
+        );
+        // A unary call on the same connection still works, and silently
+        // tolerates services that never stream.
+        let out = client.call("echo", Json::str("plain")).unwrap();
+        assert_eq!(out.as_str(), Some("plain"));
+        server.stop();
+    }
+
+    #[test]
+    fn midframe_stall_is_a_deadline_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // Announce a 10-byte frame, deliver 3 bytes, stall (conn open).
+            s.write_all(&10u32.to_be_bytes()).unwrap();
+            s.write_all(&[1, 2, 3]).unwrap();
+            std::thread::sleep(Duration::from_millis(600));
+            s
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let t0 = std::time::Instant::now();
+        let err = read_frame_guarded(&mut conn, Duration::from_millis(100)).unwrap_err();
+        assert!(matches!(err, WireError::Deadline(_)), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "returned promptly");
+        drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn client_read_timeout_is_typed_and_breaks_the_connection() {
+        // A service that never answers within the client's deadline.
+        let slow: Arc<dyn Service> = Arc::new(|_m: &str, p: &Json| -> Result<Json, String> {
+            std::thread::sleep(Duration::from_millis(500));
+            Ok(p.clone())
+        });
+        let server = RpcServer::serve("127.0.0.1:0", slow).unwrap();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_millis(50)));
+        let err = client.call("echo", Json::num(1.0)).unwrap_err();
+        assert!(matches!(err, WireError::Deadline(_)), "{err}");
+        assert!(client.is_broken());
+        // Pairing can't be trusted any more: later calls fail fast.
+        let err = client.call("echo", Json::num(2.0)).unwrap_err();
+        assert!(matches!(err, WireError::Protocol(ref m) if m.contains("broken")), "{err}");
+        server.stop();
     }
 }

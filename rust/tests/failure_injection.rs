@@ -180,6 +180,167 @@ fn http_malformed_body_is_400_not_crash() {
     http.stop();
 }
 
+/// The tentpole failure case: a *remote* agent process dies mid-batch
+/// during batched dispatch. The dispatcher must requeue the in-flight
+/// batch exactly once to a survivor — no lost and no duplicated
+/// [`mlmodelscope::pipeline::Envelope`] seq — and the serving trace must
+/// record the failover as a span.
+#[test]
+fn remote_agent_killed_mid_batch_requeues_exactly_once() {
+    use mlmodelscope::agent::{agent_service, sim_agent};
+    use mlmodelscope::batcher::BatcherConfig;
+    use mlmodelscope::chaos::{ChaosEngine, FaultPlan};
+    use mlmodelscope::scenario::Scenario;
+    use mlmodelscope::sysmodel::Device;
+    use std::sync::Arc;
+
+    let server = Server::standalone();
+    server.register_zoo();
+    // Two remote wire agents on the same system; one dies after serving
+    // two batches (the third PredictBatch never answers — its connection
+    // drops, exactly like a crashed process). The healthy agent is slowed
+    // by a 30 ms injected delay per batch so the doomed one is guaranteed
+    // to reach its third batch before the queue drains — the kill lands
+    // mid-dispatch deterministically, not by thread-scheduling luck.
+    let mut rpcs = Vec::new();
+    for (name, chaos) in [
+        (
+            "healthy",
+            Some(ChaosEngine::new(
+                FaultPlan::parse("delay:PredictBatch:30", 1).unwrap(),
+            )),
+        ),
+        (
+            "doomed",
+            Some(ChaosEngine::new(
+                FaultPlan::parse("kill:PredictBatch:2", 1).unwrap(),
+            )),
+        ),
+    ] {
+        let db = Arc::new(mlmodelscope::evaldb::EvalDb::in_memory());
+        let sink = mlmodelscope::tracing::MemorySink::new();
+        let (agent, _sim, _tracer) =
+            sim_agent("aws_p3", Device::Gpu, TraceLevel::None, db, sink);
+        let rpc = mlmodelscope::wire::RpcServer::serve_with_chaos(
+            "127.0.0.1:0",
+            agent_service(agent.clone()),
+            chaos,
+        )
+        .unwrap();
+        let mut info = agent.info(&rpc.addr().to_string());
+        info.id = name.to_string();
+        server.registry.register_agent(info, None);
+        rpcs.push(rpc);
+    }
+
+    let mut job = EvalJob::new(
+        "ResNet_v1_50",
+        Scenario::FixedQps { qps: 5000.0, count: 64 },
+    );
+    job.seed = 13;
+    let cfg = BatcherConfig::new(8, 10.0).with_remote_deadline_ms(Some(10_000.0));
+    let result = server.evaluate_batched(&job, &cfg).unwrap();
+
+    // Exactly-once: all 64 envelopes, unique seqs, restored order.
+    assert_eq!(result.outcome.outputs.len(), 64);
+    let seqs: std::collections::HashSet<u64> =
+        result.outcome.outputs.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs.len(), 64, "no lost or duplicated envelope seq");
+    for (i, env) in result.outcome.outputs.iter().enumerate() {
+        assert_eq!(env.seq, i as u64);
+    }
+    // The in-flight batch was requeued exactly once, away from the dead
+    // agent, and the accounting names it.
+    assert_eq!(result.outcome.requeued_batches, 1, "exactly one requeue");
+    assert_eq!(result.outcome.requeue_log.len(), 1);
+    assert_eq!(result.outcome.requeue_log[0].1, "doomed");
+    // After its death the doomed agent served exactly its two batches.
+    assert_eq!(result.outcome.per_agent_items.get("doomed").copied(), Some(16));
+    // The serving trace records the failover as a span.
+    let tid = result.serving_trace_id.expect("serving trace emitted");
+    let tl = server.traces.timeline(tid);
+    let failover: Vec<_> = tl.spans.iter().filter(|s| s.name == "failover").collect();
+    assert_eq!(failover.len(), 1, "one failover span for one requeue");
+    assert_eq!(failover[0].tag("from_agent"), Some("doomed"));
+    assert_eq!(failover[0].tag("stage"), Some("failover"));
+    assert!(failover[0].parent_id.is_some(), "failover nests under its batch");
+    // Record metadata agrees.
+    assert_eq!(result.record.meta.f64_or("requeued_batches", 0.0), 1.0);
+    for rpc in rpcs {
+        rpc.stop();
+    }
+}
+
+/// A remote agent whose lease lapses mid-dispatch (heartbeats stopped) is
+/// cut out by the session's liveness gate *before* wasting a network
+/// round-trip on a process that is probably gone — and a lapsed agent is
+/// already invisible to fresh resolutions.
+#[test]
+fn lapsed_lease_fails_the_session_before_any_network_round_trip() {
+    use mlmodelscope::agent::{agent_service, sim_agent, RemoteBatchSession};
+    use mlmodelscope::batcher::{Batch, BatchExecutor};
+    use mlmodelscope::pipeline::{Envelope, Payload};
+    use mlmodelscope::registry::Registry;
+    use mlmodelscope::sysmodel::Device;
+    use std::sync::Arc;
+
+    let db = Arc::new(mlmodelscope::evaldb::EvalDb::in_memory());
+    let sink = mlmodelscope::tracing::MemorySink::new();
+    let (agent, _sim, _tracer) = sim_agent("aws_p3", Device::Gpu, TraceLevel::None, db, sink);
+    let rpc =
+        mlmodelscope::wire::RpcServer::serve("127.0.0.1:0", agent_service(agent.clone())).unwrap();
+
+    let registry = Registry::new();
+    let id = registry.register_agent(
+        agent.info(&rpc.addr().to_string()),
+        Some(std::time::Duration::from_millis(60)),
+    );
+    let manifest = mlmodelscope::zoo::by_name("BVLC_AlexNet").unwrap().manifest();
+    let session = RemoteBatchSession::open(
+        &rpc.addr().to_string(),
+        &id,
+        &manifest,
+        4,
+        Some(registry.clone()),
+        Some(5_000.0),
+    )
+    .unwrap();
+    let batch = Batch {
+        index: 0,
+        opened_at_secs: 0.0,
+        formed_at_secs: 0.0,
+        envelopes: (0..4u64)
+            .map(|s| Envelope {
+                seq: s,
+                trace_id: 0,
+                parent_span: None,
+                payload: Payload::Tensor(mlmodelscope::preprocess::Tensor::random(
+                    vec![1, 4, 4, 3],
+                    s,
+                )),
+            })
+            .collect(),
+        arrivals: vec![0.0; 4],
+        tenant: 0,
+    };
+    // While the lease is live, batches execute normally.
+    assert_eq!(session.execute(&batch).unwrap().outputs.len(), 4);
+    // Stop heartbeating: the lease lapses, and the next batch fails at the
+    // membership gate — a typed error, immediately, with the agent process
+    // still up.
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    let t0 = std::time::Instant::now();
+    let err = session.execute(&batch).unwrap_err();
+    assert!(err.contains("lease lapsed"), "{err}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_millis(500),
+        "gate fails fast, no network timeout burned"
+    );
+    // A lapsed agent is invisible to fresh resolutions too.
+    assert!(!registry.is_live(&id));
+    rpc.stop();
+}
+
 #[test]
 fn checksum_corruption_detected_before_evaluation() {
     // An on-disk asset corrupted after caching must be caught by the

@@ -1,0 +1,162 @@
+//! End-to-end fleet failover: batched serving and whole sweeps running
+//! over wire-connected agents, with chaos killing a member mid-run. The
+//! invariants under test are the tentpole's: exactly-once results, digest-
+//! unique storage, and bit-identical outputs regardless of where a batch
+//! executed.
+
+use mlmodelscope::agent::{agent_service, sim_agent};
+use mlmodelscope::batcher::BatcherConfig;
+use mlmodelscope::chaos::{ChaosEngine, FaultPlan};
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::{EvalJob, Server};
+use mlmodelscope::sweep::Plan;
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::wire::RpcServer;
+use std::sync::Arc;
+
+/// Spawn a simulated agent served over TCP and register it (by the given
+/// id) in `server`'s registry. Returns the RPC server handle (dropping it
+/// kills the "process").
+fn spawn_wire_agent(
+    server: &Arc<Server>,
+    system: &str,
+    id: &str,
+    chaos: Option<Arc<ChaosEngine>>,
+) -> RpcServer {
+    let db = Arc::new(mlmodelscope::evaldb::EvalDb::in_memory());
+    let sink = mlmodelscope::tracing::MemorySink::new();
+    let (agent, _sim, _tracer) = sim_agent(system, Device::Gpu, TraceLevel::None, db, sink);
+    let rpc =
+        RpcServer::serve_with_chaos("127.0.0.1:0", agent_service(agent.clone()), chaos).unwrap();
+    let mut info = agent.info(&rpc.addr().to_string());
+    info.id = id.to_string();
+    server.registry.register_agent(info, None);
+    rpc
+}
+
+/// Batched dispatch over a mixed local + remote fleet must produce outputs
+/// element-wise identical to a local-only run: where a batch executes can
+/// change latency, never results.
+#[test]
+fn remote_fan_out_preserves_output_identity() {
+    let run = |with_remote: bool| {
+        let server = Server::standalone();
+        server.register_zoo();
+        let (agent, _sim, _tracer) = sim_agent(
+            "aws_p3",
+            Device::Gpu,
+            TraceLevel::None,
+            server.evaldb.clone(),
+            server.traces.clone(),
+        );
+        server.attach_local_agent(agent);
+        let rpc = if with_remote {
+            Some(spawn_wire_agent(&server, "aws_p3", "wire-1", None))
+        } else {
+            None
+        };
+        let mut job = EvalJob::new(
+            "MobileNet_v1_1.0_224",
+            Scenario::FixedQps { qps: 4000.0, count: 40 },
+        );
+        job.seed = 11;
+        let result = server
+            .evaluate_batched(&job, &BatcherConfig::new(8, 10.0))
+            .unwrap();
+        if let Some(rpc) = rpc {
+            rpc.stop();
+        }
+        result
+    };
+    let local_only = run(false);
+    let fleet = run(true);
+    assert_eq!(fleet.record.meta.f64_or("agents", 0.0), 2.0);
+    assert_eq!(fleet.record.meta.f64_or("remote_agents", 0.0), 1.0);
+    assert_eq!(local_only.outcome.outputs.len(), fleet.outcome.outputs.len());
+    for (a, b) in local_only.outcome.outputs.iter().zip(&fleet.outcome.outputs) {
+        assert_eq!(a.seq, b.seq);
+        match (&a.payload, &b.payload) {
+            (
+                mlmodelscope::pipeline::Payload::Tensor(x),
+                mlmodelscope::pipeline::Payload::Tensor(y),
+            ) => assert_eq!(x, y, "request {} diverged on the fleet", a.seq),
+            other => panic!("unexpected payloads {other:?}"),
+        }
+    }
+}
+
+/// The acceptance scenario: a wire fleet runs a model×system sweep while a
+/// chaos plan kills one member mid-run. The sweep must complete with every
+/// cell stored exactly once (spec digests unique), surviving the death via
+/// the dispatcher's requeue + the sweep's retry-once failover.
+#[test]
+fn sweep_completes_exactly_once_despite_agent_killed_mid_run() {
+    let server = Server::standalone();
+    server.register_zoo();
+    // Three wire members: two healthy (one per system) and one that dies
+    // after serving two batches — inside the first dispatch it touches.
+    let rpc_a = spawn_wire_agent(&server, "aws_p3", "p3-healthy", None);
+    let rpc_b = spawn_wire_agent(&server, "ibm_p8", "p8-healthy", None);
+    let doomed_chaos = ChaosEngine::new(FaultPlan::parse("kill:PredictBatch:2", 9).unwrap());
+    let rpc_c = spawn_wire_agent(&server, "aws_p3", "p3-doomed", Some(doomed_chaos.clone()));
+
+    let mut plan = Plan::new(
+        vec![
+            "BVLC_AlexNet".to_string(),
+            "MobileNet_v1_0.25_128".to_string(),
+            "ResNet_v1_50".to_string(),
+        ],
+        vec!["aws_p3".to_string(), "ibm_p8".to_string()],
+    );
+    plan.scenarios = vec![Scenario::FixedQps { qps: 4000.0, count: 24 }];
+    plan.batch_sizes = vec![1];
+    plan.seed = 17;
+    plan.parallelism = 1; // sequential: the kill lands deterministically early
+    plan.dispatch = Some(BatcherConfig::new(4, 10.0).with_remote_deadline_ms(Some(10_000.0)));
+
+    let cells = plan.cells();
+    assert_eq!(cells.len(), 6);
+    let outcome = mlmodelscope::sweep::run(&server, &plan);
+    assert!(
+        outcome.failed.is_empty(),
+        "sweep must survive the mid-run death: {:?}",
+        outcome.failed
+    );
+    assert_eq!(outcome.executed, 6, "every cell executed");
+    assert!(doomed_chaos.killed(), "the chaos kill actually fired mid-run");
+
+    // Exactly-once storage: one record per cell, all digests distinct and
+    // each cell's plan-time digest resolves to a stored record.
+    assert_eq!(server.evaldb.len(), 6, "one record per cell, no extras");
+    let mut digests = std::collections::HashSet::new();
+    for cell in &cells {
+        let digest = plan.digest(&server.registry, cell).expect("zoo model");
+        assert!(digests.insert(digest.clone()), "digest collision for {}", cell.label());
+        assert!(
+            server.evaldb.get_by_digest(&digest).is_some(),
+            "cell {} not stored",
+            cell.label()
+        );
+    }
+    assert_eq!(digests.len(), 6);
+    // At least one record shows the failover (a requeued batch) — the
+    // death happened *during* a dispatch, not between cells.
+    let requeues: f64 = cells
+        .iter()
+        .filter_map(|c| plan.digest(&server.registry, c))
+        .filter_map(|d| server.evaldb.get_by_digest(&d))
+        .map(|r| r.meta.f64_or("requeued_batches", 0.0))
+        .sum();
+    assert!(requeues >= 1.0, "no record carries the mid-batch failover");
+
+    // A memoized re-run executes nothing — the interrupted-and-recovered
+    // sweep left a complete, resumable store.
+    let warm = mlmodelscope::sweep::run(&server, &plan);
+    assert_eq!(warm.executed, 0);
+    assert_eq!(warm.memoized, 6);
+
+    rpc_a.stop();
+    rpc_b.stop();
+    rpc_c.stop();
+}

@@ -1,0 +1,142 @@
+//! Registry membership properties: the TTL'd lease semantics the fleet's
+//! failover rests on. Heartbeats only ever extend a lease, expiry is
+//! visible on the very next read, re-registration after expiry never
+//! recycles an id, and none of it races.
+
+use mlmodelscope::registry::{AgentInfo, Registry};
+use mlmodelscope::util::rng::forall;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn info(system: &str) -> AgentInfo {
+    AgentInfo {
+        id: String::new(),
+        endpoint: "127.0.0.1:1".into(),
+        framework: "TensorFlow".into(),
+        framework_version: "1.15.0".parse().unwrap(),
+        system: system.into(),
+        architecture: "x86_64".into(),
+        devices: vec!["gpu".into()],
+        interconnect: "pcie3".into(),
+        host_memory_gb: 61.0,
+        device_memory_gb: 16.0,
+        models: vec![],
+    }
+}
+
+#[test]
+fn heartbeat_extends_the_lease_monotonically() {
+    // Property: after heartbeat(ttl), the remaining lease is at least
+    // max(previous remaining, ttl) minus measurement slack — a beat can
+    // push a lease out but never pull it in.
+    let slack = Duration::from_millis(25);
+    forall(11, 20, |rng| {
+        let reg = Registry::new();
+        let base_ms = 100 + rng.below(400);
+        let id = reg.register_agent(info("aws_p3"), Some(Duration::from_millis(base_ms)));
+        for _ in 0..4 {
+            let before = reg.lease_remaining(&id).expect("registered");
+            let ttl = Duration::from_millis(1 + rng.below(500));
+            assert!(reg.heartbeat(&id, ttl), "live agent heartbeats succeed");
+            let after = reg.lease_remaining(&id).expect("still registered");
+            assert!(
+                after + slack >= before,
+                "lease shrank: {before:?} -> {after:?} (ttl {ttl:?})"
+            );
+            assert!(
+                after + slack >= ttl,
+                "lease below the new ttl: {after:?} < {ttl:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn short_heartbeat_never_shortens_a_long_lease() {
+    let reg = Registry::new();
+    let id = reg.register_agent(info("aws_p3"), Some(Duration::from_millis(400)));
+    // A 1 ms beat against a ~400 ms lease must leave the lease intact.
+    assert!(reg.heartbeat(&id, Duration::from_millis(1)));
+    std::thread::sleep(Duration::from_millis(40));
+    assert_eq!(reg.agents().len(), 1, "agent still live long after the 1 ms beat");
+    // TTL-less agents stay TTL-less through heartbeats.
+    let forever = reg.register_agent(info("ibm_p8"), None);
+    assert!(reg.heartbeat(&forever, Duration::from_millis(1)));
+    assert_eq!(reg.lease_remaining(&forever), Some(Duration::MAX));
+}
+
+#[test]
+fn expiry_removes_an_agent_from_pick_on_the_very_next_read() {
+    let reg = Registry::new();
+    let stable = reg.register_agent(info("aws_p3"), None);
+    reg.register_agent(info("aws_p3"), Some(Duration::from_millis(30)));
+    let candidates = reg.agents();
+    assert_eq!(candidates.len(), 2);
+    std::thread::sleep(Duration::from_millis(45));
+    // The stale candidate list still holds both; pick must filter the
+    // lapsed one on this very read — no sweep interval, no grace period.
+    for _ in 0..8 {
+        let picked = reg.pick(&candidates).expect("one survivor");
+        assert_eq!(picked.id, stable, "expired agent picked");
+    }
+    assert_eq!(reg.agents().len(), 1, "expiry visible on read");
+}
+
+#[test]
+fn re_registration_after_expiry_issues_a_fresh_id() {
+    let reg = Registry::new();
+    let first = reg.register_agent(info("aws_p3"), Some(Duration::from_millis(20)));
+    std::thread::sleep(Duration::from_millis(35));
+    assert!(!reg.heartbeat(&first, Duration::from_millis(100)), "lease lapsed");
+    // The heartbeat loop's fallback: register anew with an empty id.
+    let second = reg.register_agent(info("aws_p3"), Some(Duration::from_millis(100)));
+    assert_ne!(first, second, "expired ids are never recycled");
+    assert!(reg.is_live(&second));
+    assert!(!reg.is_live(&first));
+}
+
+#[test]
+fn concurrent_heartbeat_and_expiry_is_race_free() {
+    // Hammer one short-lease agent with heartbeats, liveness checks and
+    // sweeps from several threads. Invariants: no panic/deadlock, and once
+    // any thread has seen the lease lapse (heartbeat -> false), no later
+    // heartbeat ever resurrects the id.
+    let reg = Registry::new();
+    let id = reg.register_agent(info("aws_p3"), Some(Duration::from_millis(15)));
+    let lapsed = Arc::new(AtomicBool::new(false));
+    let violated = Arc::new(AtomicBool::new(false));
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let reg = reg.clone();
+            let id = id.clone();
+            let lapsed = lapsed.clone();
+            let violated = violated.clone();
+            std::thread::spawn(move || {
+                for i in 0..150 {
+                    let seen_lapsed = lapsed.load(Ordering::SeqCst);
+                    let beat = reg.heartbeat(&id, Duration::from_millis(3));
+                    if beat && seen_lapsed {
+                        violated.store(true, Ordering::SeqCst);
+                    }
+                    if !beat {
+                        lapsed.store(true, Ordering::SeqCst);
+                    }
+                    // Interleave the other read paths.
+                    let _ = reg.is_live(&id);
+                    let _ = reg.agents();
+                    if (i + t) % 7 == 0 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().expect("no panics under contention");
+    }
+    assert!(!violated.load(Ordering::SeqCst), "a lapsed lease was resurrected");
+    // Let the final short lease run out: the registry converges to empty.
+    std::thread::sleep(Duration::from_millis(20));
+    assert!(reg.agents().is_empty());
+}

@@ -1,0 +1,158 @@
+//! Wire-protocol robustness: every malformed or hostile input must come
+//! back as a typed [`WireError`] — never a panic, never a hung connection
+//! thread — and the server must keep serving well-formed clients
+//! afterwards. Plus the chaos faults injected at this layer.
+
+use mlmodelscope::chaos::FaultPlan;
+use mlmodelscope::util::json::Json;
+use mlmodelscope::wire::{read_frame, RpcClient, RpcServer, Service, WireError};
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn echo_service() -> Arc<dyn Service> {
+    Arc::new(|method: &str, params: &Json| -> Result<Json, String> {
+        match method {
+            "echo" => Ok(params.clone()),
+            other => Err(format!("unknown method {other:?}")),
+        }
+    })
+}
+
+#[test]
+fn truncated_frame_is_a_typed_io_error() {
+    // Header promises 10 bytes; the stream ends after 3.
+    let data: &[u8] = &[0, 0, 0, 10, 1, 2, 3];
+    let mut cursor = std::io::Cursor::new(data);
+    let err = read_frame(&mut cursor).unwrap_err();
+    assert!(matches!(err, WireError::Io(_)), "{err}");
+}
+
+#[test]
+fn oversize_frame_header_is_a_typed_protocol_error() {
+    // 0xFFFFFFFF bytes claimed — far over MAX_FRAME. The reader must
+    // reject from the header alone, never attempt the allocation.
+    let data: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF];
+    let mut cursor = std::io::Cursor::new(data);
+    let err = read_frame(&mut cursor).unwrap_err();
+    assert!(
+        matches!(err, WireError::Protocol(ref m) if m.contains("frame too large")),
+        "{err}"
+    );
+}
+
+#[test]
+fn oversize_frame_from_a_client_does_not_poison_the_server() {
+    let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+    {
+        let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+        s.write_all(&[0xFF, 0xFF, 0xFF, 0xFF]).unwrap();
+        // Server closes this connection without a reply.
+        let mut buf = [0u8; 1];
+        assert_eq!(s.read(&mut buf).unwrap(), 0, "connection closed");
+    }
+    let client = RpcClient::connect(server.addr()).unwrap();
+    assert_eq!(client.call("echo", Json::num(7.0)).unwrap().as_f64(), Some(7.0));
+    server.stop();
+}
+
+#[test]
+fn non_json_payload_closes_the_connection_not_the_server() {
+    let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+    {
+        let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+        let garbage = b"this is not json";
+        s.write_all(&(garbage.len() as u32).to_be_bytes()).unwrap();
+        s.write_all(garbage).unwrap();
+        let mut buf = [0u8; 1];
+        assert_eq!(s.read(&mut buf).unwrap(), 0, "connection closed, no reply");
+    }
+    let client = RpcClient::connect(server.addr()).unwrap();
+    assert_eq!(client.call("echo", Json::str("ok")).unwrap().as_str(), Some("ok"));
+    server.stop();
+}
+
+#[test]
+fn unknown_method_is_a_typed_remote_error_and_the_connection_survives() {
+    let server = RpcServer::serve("127.0.0.1:0", echo_service()).unwrap();
+    let client = RpcClient::connect(server.addr()).unwrap();
+    let err = client.call("definitely_not_a_method", Json::Null).unwrap_err();
+    assert!(
+        matches!(err, WireError::Remote(ref m) if m.contains("unknown method")),
+        "{err}"
+    );
+    // Remote errors are clean: the same connection keeps working.
+    assert!(!client.is_broken());
+    assert_eq!(client.call("echo", Json::num(1.0)).unwrap().as_f64(), Some(1.0));
+    server.stop();
+}
+
+#[test]
+fn response_id_mismatch_is_a_typed_protocol_error() {
+    // A hand-rolled server that answers every request with the wrong id.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut len_buf = [0u8; 4];
+        conn.read_exact(&mut len_buf).unwrap();
+        let mut body = vec![0u8; u32::from_be_bytes(len_buf) as usize];
+        conn.read_exact(&mut body).unwrap();
+        let reply = br#"{"id": 999999, "ok": true, "result": null}"#;
+        conn.write_all(&(reply.len() as u32).to_be_bytes()).unwrap();
+        conn.write_all(reply).unwrap();
+    });
+    let client = RpcClient::connect(addr).unwrap();
+    let err = client.call("echo", Json::num(3.0)).unwrap_err();
+    assert!(
+        matches!(err, WireError::Protocol(ref m) if m.contains("id mismatch")),
+        "{err}"
+    );
+    // Pairing is broken; the client refuses to reuse the connection.
+    assert!(client.is_broken());
+    let err = client.call("echo", Json::num(4.0)).unwrap_err();
+    assert!(matches!(err, WireError::Protocol(ref m) if m.contains("broken")), "{err}");
+    server.join().unwrap();
+}
+
+#[test]
+fn chaos_delay_past_the_deadline_is_a_typed_deadline_error() {
+    let plan = FaultPlan::parse("delay:echo:400", 0).unwrap();
+    let server = RpcServer::serve_with_chaos(
+        "127.0.0.1:0",
+        echo_service(),
+        Some(mlmodelscope::chaos::ChaosEngine::new(plan)),
+    )
+    .unwrap();
+    let client = RpcClient::connect(server.addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_millis(50)));
+    let t0 = std::time::Instant::now();
+    let err = client.call("echo", Json::num(1.0)).unwrap_err();
+    assert!(matches!(err, WireError::Deadline(_)), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(5), "failed fast, not after the delay");
+    server.stop();
+}
+
+#[test]
+fn chaos_kill_after_n_served_requests_drops_everything_after() {
+    let plan = FaultPlan::parse("kill:echo:2", 0).unwrap();
+    let engine = mlmodelscope::chaos::ChaosEngine::new(plan);
+    let server =
+        RpcServer::serve_with_chaos("127.0.0.1:0", echo_service(), Some(engine.clone())).unwrap();
+    let client = RpcClient::connect(server.addr()).unwrap();
+    assert_eq!(client.call("echo", Json::num(0.0)).unwrap().as_f64(), Some(0.0));
+    assert_eq!(client.call("echo", Json::num(1.0)).unwrap().as_f64(), Some(1.0));
+    // Third request: the kill fires — connection closes with no reply.
+    let err = client.call("echo", Json::num(2.0)).unwrap_err();
+    assert!(
+        matches!(err, WireError::Protocol(ref m) if m.contains("closed mid-call")),
+        "{err}"
+    );
+    assert!(engine.killed());
+    // A fresh connection gets no service either: the process is "dead".
+    if let Ok(fresh) = RpcClient::connect(server.addr()) {
+        fresh.set_read_timeout(Some(Duration::from_millis(200)));
+        assert!(fresh.call("echo", Json::num(3.0)).is_err());
+    }
+    server.stop();
+}
