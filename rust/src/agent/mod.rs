@@ -638,7 +638,10 @@ impl RemoteBatchSession {
         registry: Option<Arc<Registry>>,
         deadline_ms: Option<f64>,
     ) -> Result<RemoteBatchSession, String> {
-        let client = crate::wire::RpcClient::connect(endpoint)
+        // Two pooled connections: batches multiplex over both, so one
+        // slow batch (or one broken member) never serializes the rest of
+        // the data plane behind it.
+        let client = crate::wire::RpcClient::connect_pooled(endpoint, 2)
             .map_err(|e| format!("connect {endpoint}: {e}"))?;
         if let Some(ms) = deadline_ms {
             client.set_read_timeout(Some(std::time::Duration::from_secs_f64(
@@ -791,6 +794,21 @@ struct AgentService {
 }
 
 impl AgentService {
+    /// Lock the session table, mapping a poisoned lock (a request worker
+    /// panicked while holding it) to a typed RPC error instead of
+    /// propagating the panic — on the multiplexed server one poisoned
+    /// request must not take down every later session RPC.
+    fn sessions_lock(
+        &self,
+    ) -> Result<
+        std::sync::MutexGuard<'_, std::collections::HashMap<u64, Arc<BatchSession>>>,
+        String,
+    > {
+        self.sessions
+            .lock()
+            .map_err(|_| "agent session table poisoned by a panicked request".to_string())
+    }
+
     /// The streamed `PredictBatch` RPC: the frame carries the coalesced
     /// batch (seqs + arrivals + tenant + deadline tags in the JSON
     /// envelope, the stacked input tensor as the binary attachment); the
@@ -811,9 +829,7 @@ impl AgentService {
             return Err("PredictBatch requires a session id from OpenBatch".into());
         }
         let session = self
-            .sessions
-            .lock()
-            .unwrap()
+            .sessions_lock()?
             .get(&(sid as u64))
             .cloned()
             .ok_or_else(|| format!("unknown batch session {sid}"))?;
@@ -905,7 +921,7 @@ impl crate::wire::Service for AgentService {
                     .next_session
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let trace_id = session.trace_id();
-                self.sessions.lock().unwrap().insert(id, Arc::new(session));
+                self.sessions_lock()?.insert(id, Arc::new(session));
                 Ok(Json::obj(vec![
                     ("session", Json::num(id as f64)),
                     ("trace_id", Json::num(trace_id as f64)),
@@ -914,7 +930,7 @@ impl crate::wire::Service for AgentService {
             }
             "CloseBatch" => {
                 let sid = params.f64_or("session", -1.0);
-                self.sessions.lock().unwrap().remove(&(sid as u64));
+                self.sessions_lock()?.remove(&(sid as u64));
                 Ok(Json::Null)
             }
             _ => agent_call(&self.agent, method, params),

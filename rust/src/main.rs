@@ -267,10 +267,18 @@ fn cmd_agent(args: &Args) -> i32 {
         });
     }
     let addr = args.opt_or("listen", "127.0.0.1:0");
-    let rpc = match mlmodelscope::wire::RpcServer::serve_with_chaos(
+    // Wire-layer tuning: `--wire-workers N` sizes the request-execution
+    // pool behind the readiness loop, `--wire-queue N` its dispatch queue
+    // (the back-pressure bound on queued-but-unexecuted requests).
+    let mut wire_opts = mlmodelscope::wire::WireOpts::default();
+    wire_opts.workers = args.u64_or("wire-workers", wire_opts.workers as u64).max(1) as usize;
+    wire_opts.queue_capacity =
+        args.u64_or("wire-queue", wire_opts.queue_capacity as u64).max(64) as usize;
+    let rpc = match mlmodelscope::wire::RpcServer::serve_with_opts(
         addr,
         mlmodelscope::agent::agent_service(agent.clone()),
         chaos.clone(),
+        wire_opts,
     ) {
         Ok(rpc) => rpc,
         Err(e) => {
@@ -873,9 +881,18 @@ fn cmd_fleet(args: &Args) -> i32 {
         s
     };
     let listen = args.opt_or("listen-registry", "127.0.0.1:7700");
-    let registry_rpc = match mlmodelscope::wire::RpcServer::serve(
+    // The registry serves every member's register/heartbeat traffic on the
+    // multiplexed loop; `--wire-workers`/`--wire-queue` tune it the same
+    // way they tune `mlms agent serve`.
+    let mut wire_opts = mlmodelscope::wire::WireOpts::default();
+    wire_opts.workers = args.u64_or("wire-workers", wire_opts.workers as u64).max(1) as usize;
+    wire_opts.queue_capacity =
+        args.u64_or("wire-queue", wire_opts.queue_capacity as u64).max(64) as usize;
+    let registry_rpc = match mlmodelscope::wire::RpcServer::serve_with_opts(
         listen,
         registry_service(server.registry.clone()),
+        None,
+        wire_opts,
     ) {
         Ok(rpc) => rpc,
         Err(e) => {

@@ -343,37 +343,64 @@ impl Server {
         // skipped — failover starts before the first batch. Only an empty
         // pool is an error.
         let locals = self.local_agents.lock().unwrap().clone();
-        let mut executors: Vec<Arc<dyn BatchExecutor>> = Vec::new();
-        let mut trace_ids = Vec::new();
-        let mut used: Vec<AgentInfo> = Vec::new();
-        let mut remote_agents = 0usize;
-        let mut open_errors: Vec<String> = Vec::new();
-        for c in &live {
+        // Sessions open in parallel, order-preserving: a remote open is a
+        // TCP connect plus a model load on the agent, so opening a fleet of
+        // N candidates serially costs N round-trips before the first batch
+        // moves — in parallel it costs roughly one.
+        let registry = self.registry.clone();
+        let manifest_for_open = manifest.clone();
+        let max_batch = cfg.max_batch_size;
+        let remote_deadline_ms = cfg.remote_deadline_ms;
+        type OpenedExec = Result<(Arc<dyn BatchExecutor>, Option<u64>, bool), Option<String>>;
+        let opened: Vec<OpenedExec> = parallel_map(live.clone(), 8, move |c| {
             if let Some(agent) = locals.get(&c.id) {
-                match agent.open_batch_session(&manifest, cfg.max_batch_size) {
+                match agent.open_batch_session(&manifest_for_open, max_batch) {
                     Ok(session) => {
-                        trace_ids.push(session.trace_id());
-                        executors.push(Arc::new(session));
-                        used.push(c.clone());
+                        let trace_id = session.trace_id();
+                        let exec: Arc<dyn BatchExecutor> = Arc::new(session);
+                        Ok((exec, Some(trace_id), false))
                     }
-                    Err(e) => open_errors.push(format!("{}: {e}", c.id)),
+                    Err(e) => Err(Some(format!("{}: {e}", c.id))),
                 }
             } else if !c.endpoint.is_empty() {
                 match crate::agent::RemoteBatchSession::open(
                     &c.endpoint,
                     &c.id,
-                    &manifest,
-                    cfg.max_batch_size,
-                    Some(self.registry.clone()),
-                    cfg.remote_deadline_ms,
+                    &manifest_for_open,
+                    max_batch,
+                    Some(registry.clone()),
+                    remote_deadline_ms,
                 ) {
                     Ok(session) => {
-                        executors.push(Arc::new(session));
-                        used.push(c.clone());
+                        let exec: Arc<dyn BatchExecutor> = Arc::new(session);
+                        Ok((exec, None, true))
+                    }
+                    Err(e) => Err(Some(format!("{}: {e}", c.id))),
+                }
+            } else {
+                // Neither local nor addressable: not an error, just skipped.
+                Err(None)
+            }
+        });
+        let mut executors: Vec<Arc<dyn BatchExecutor>> = Vec::new();
+        let mut trace_ids = Vec::new();
+        let mut used: Vec<AgentInfo> = Vec::new();
+        let mut remote_agents = 0usize;
+        let mut open_errors: Vec<String> = Vec::new();
+        for (c, result) in live.iter().zip(opened) {
+            match result {
+                Ok((exec, trace_id, is_remote)) => {
+                    if let Some(t) = trace_id {
+                        trace_ids.push(t);
+                    }
+                    if is_remote {
                         remote_agents += 1;
                     }
-                    Err(e) => open_errors.push(format!("{}: {e}", c.id)),
+                    executors.push(exec);
+                    used.push(c.clone());
                 }
+                Err(Some(msg)) => open_errors.push(msg),
+                Err(None) => {}
             }
         }
         if executors.is_empty() {

@@ -1,0 +1,535 @@
+//! Multiplexed, pooled RPC client.
+//!
+//! The pre-multiplex client held one stream mutex across the entire
+//! request/response round-trip, so concurrent callers on a connection fully
+//! serialized — and a panic while holding the lock poisoned it, turning
+//! every later call into a `lock().unwrap()` process kill. This client
+//! fixes both:
+//!
+//! - **per-frame writer lock**: a call holds the stream only long enough to
+//!   write its request frame; the response is routed back by id, so any
+//!   number of calls share one TCP connection concurrently;
+//! - **reader task**: one thread per connection reads frames and routes
+//!   them to per-id waiters (stream chunks and the final response alike);
+//!   out-of-order completion is the normal case, not a protocol error;
+//! - **typed poisoning**: a poisoned lock (a caller panicked mid-frame) is
+//!   mapped to the broken-connection [`WireError`] path — later calls fail
+//!   fast with a typed error instead of panicking;
+//! - **connection pool**: [`RpcClient::connect_pooled`] opens N parallel
+//!   connections and spreads calls round-robin; a broken member is skipped
+//!   until all are broken.
+//!
+//! Deadlines are enforced by the response router (`recv_timeout` on the
+//! waiter's queue), not `SO_RCVTIMEO` — there is no socket option left to
+//! fail silently on the read path. A deadline still marks the connection
+//! broken: a late reply to a timed-out call must never be mistaken for the
+//! answer to a later one.
+
+use super::frame::{decode_msg, encode_msg, WireMsg};
+use super::{read_frame, write_frame, WireError};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// What the reader routes to a waiting call.
+enum Route {
+    Chunk(Json, Option<Vec<u8>>),
+    Final(bool, Json, Option<Vec<u8>>),
+    Failed(FailKind, String),
+}
+
+/// Reader-side failure classification ([`WireError`] is not `Clone`, and
+/// one failure must fan out to every in-flight waiter).
+#[derive(Clone, Copy)]
+enum FailKind {
+    Protocol,
+    Io,
+    Deadline,
+}
+
+impl FailKind {
+    fn to_error(self, msg: &str) -> WireError {
+        match self {
+            FailKind::Protocol => WireError::Protocol(msg.to_string()),
+            FailKind::Deadline => WireError::Deadline(msg.to_string()),
+            FailKind::Io => {
+                WireError::Io(std::io::Error::new(std::io::ErrorKind::Other, msg.to_string()))
+            }
+        }
+    }
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<Route>>>>;
+
+/// One pooled connection: writer handle + reader thread + waiter table.
+struct ClientConn {
+    writer: Mutex<TcpStream>,
+    /// Clone used to `shutdown()` the socket so the reader unblocks.
+    shutdown_handle: TcpStream,
+    pending: PendingMap,
+    broken: Arc<AtomicBool>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ClientConn {
+    fn open(stream: TcpStream) -> Result<Arc<ClientConn>, WireError> {
+        // Socket-option failures surface as typed errors, not silent
+        // `.ok()`: a connection whose options can't be set is refused.
+        stream.set_nodelay(true)?;
+        let reader_stream = stream.try_clone()?;
+        let shutdown_handle = stream.try_clone()?;
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let broken = Arc::new(AtomicBool::new(false));
+        let (p, b) = (pending.clone(), broken.clone());
+        let reader = std::thread::Builder::new()
+            .name("rpc-client-reader".into())
+            .spawn(move || reader_loop(reader_stream, p, b))?;
+        Ok(Arc::new(ClientConn {
+            writer: Mutex::new(stream),
+            shutdown_handle,
+            pending,
+            broken,
+            reader: Mutex::new(Some(reader)),
+        }))
+    }
+
+    fn is_broken(&self) -> bool {
+        self.broken.load(Ordering::Relaxed)
+    }
+
+    /// Mark broken and wake the reader so it fails remaining waiters.
+    fn break_now(&self) {
+        self.broken.store(true, Ordering::Relaxed);
+        let _ = self.shutdown_handle.shutdown(std::net::Shutdown::Both);
+    }
+
+    fn register(&self, id: u64, tx: mpsc::Sender<Route>) -> Result<(), WireError> {
+        match self.pending.lock() {
+            Ok(mut map) => {
+                // Checked under the map lock: `fail_all` flips `broken`
+                // before draining the map, so either we see the flag here
+                // or our waiter lands in the map before the drain and gets
+                // failed with everyone else. Without this check, a call
+                // racing the reader's death could register into an
+                // already-drained map and wait forever.
+                if self.is_broken() {
+                    return Err(WireError::Protocol(
+                        "connection marked broken by an earlier transport failure".into(),
+                    ));
+                }
+                map.insert(id, tx);
+                Ok(())
+            }
+            Err(_) => {
+                // A waiter panicked while holding the table: routing state
+                // is unknowable — broken connection, typed error.
+                self.break_now();
+                Err(WireError::Protocol(
+                    "connection state poisoned by a panicked caller; connection marked broken"
+                        .into(),
+                ))
+            }
+        }
+    }
+
+    fn unregister(&self, id: u64) {
+        if let Ok(mut map) = self.pending.lock() {
+            map.remove(&id);
+        }
+    }
+}
+
+impl Drop for ClientConn {
+    fn drop(&mut self) {
+        self.break_now();
+        if let Ok(mut slot) = self.reader.lock() {
+            if let Some(handle) = slot.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+/// Deliver `kind/msg` to every in-flight waiter and mark the connection
+/// broken. Request/response pairing can no longer be trusted after any
+/// transport-level failure.
+fn fail_all(pending: &PendingMap, broken: &AtomicBool, kind: FailKind, msg: &str) {
+    broken.store(true, Ordering::Relaxed);
+    let waiters: Vec<mpsc::Sender<Route>> = match pending.lock() {
+        Ok(mut map) => map.drain().map(|(_, tx)| tx).collect(),
+        Err(poisoned) => poisoned.into_inner().drain().map(|(_, tx)| tx).collect(),
+    };
+    for tx in waiters {
+        let _ = tx.send(Route::Failed(kind, msg.to_string()));
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, pending: PendingMap, broken: Arc<AtomicBool>) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            // EOF: clean from the peer's view, but every in-flight call
+            // just lost its response.
+            Ok(None) => {
+                fail_all(&pending, &broken, FailKind::Protocol, "connection closed mid-call");
+                return;
+            }
+            Err(WireError::Protocol(m)) => {
+                // Includes an oversized declared frame length: rejected
+                // from the header alone, before any allocation.
+                fail_all(&pending, &broken, FailKind::Protocol, &m);
+                return;
+            }
+            Err(WireError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                fail_all(&pending, &broken, FailKind::Deadline, "no response within the read timeout");
+                return;
+            }
+            Err(e) => {
+                if broken.load(Ordering::Relaxed) {
+                    // Our own shutdown (deadline or drop) raced the read.
+                    fail_all(&pending, &broken, FailKind::Protocol, "connection closed mid-call");
+                } else {
+                    fail_all(&pending, &broken, FailKind::Io, &e.to_string());
+                }
+                return;
+            }
+            Ok(Some(f)) => f,
+        };
+        let msg = match decode_msg(&frame) {
+            Ok(m) => m,
+            Err(e) => {
+                fail_all(&pending, &broken, FailKind::Protocol, &e.to_string());
+                return;
+            }
+        };
+        let id = msg.id();
+        let (route, is_final) = match msg {
+            WireMsg::Chunk { chunk, blob, .. } => (Route::Chunk(chunk, blob), false),
+            WireMsg::Response { ok, body, blob, .. } => (Route::Final(ok, body, blob), true),
+            WireMsg::Request { .. } => {
+                fail_all(&pending, &broken, FailKind::Protocol, "peer sent a request frame");
+                return;
+            }
+        };
+        let tx = match pending.lock() {
+            Ok(mut map) => {
+                if is_final {
+                    map.remove(&id)
+                } else {
+                    map.get(&id).cloned()
+                }
+            }
+            Err(_) => {
+                fail_all(
+                    &pending,
+                    &broken,
+                    FailKind::Protocol,
+                    "connection state poisoned by a panicked caller",
+                );
+                return;
+            }
+        };
+        match tx {
+            Some(tx) => {
+                let _ = tx.send(route);
+            }
+            None => {
+                // A frame for an id nobody is waiting on: either the peer
+                // is confused (protocol violation) or a reply raced a
+                // deadline we already declared. Pairing is untrustworthy
+                // either way.
+                fail_all(&pending, &broken, FailKind::Protocol, "response id mismatch");
+                return;
+            }
+        }
+    }
+}
+
+/// An issued call whose response has not been awaited yet. Obtained from
+/// [`RpcClient::start_streamed`]; lets one thread keep thousands of calls
+/// in flight on a pooled connection (the 10k-stream bench drives this).
+pub struct PendingCall {
+    conn: Arc<ClientConn>,
+    id: u64,
+    rx: mpsc::Receiver<Route>,
+    timeout: Option<Duration>,
+}
+
+impl PendingCall {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Await the final response, handing interim stream chunks to
+    /// `on_chunk` in arrival order. The deadline (if any) applies per
+    /// frame, exactly as the old socket read timeout did.
+    pub fn wait(
+        self,
+        mut on_chunk: impl FnMut(&Json, Option<&[u8]>),
+    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
+        loop {
+            let route = match self.timeout {
+                Some(d) => match self.rx.recv_timeout(d) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // A late reply must never be matched to a later
+                        // call: the whole connection is done.
+                        self.conn.unregister(self.id);
+                        self.conn.break_now();
+                        return Err(WireError::Deadline(
+                            "no response within the read timeout".into(),
+                        ));
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(WireError::Protocol("connection closed mid-call".into()))
+                    }
+                },
+                None => match self.rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => {
+                        return Err(WireError::Protocol("connection closed mid-call".into()))
+                    }
+                },
+            };
+            match route {
+                Route::Chunk(chunk, blob) => on_chunk(&chunk, blob.as_deref()),
+                Route::Final(true, body, blob) => return Ok((body, blob)),
+                Route::Final(false, body, _) => {
+                    return Err(WireError::Remote(
+                        body.as_str().unwrap_or("unknown error").to_string(),
+                    ))
+                }
+                Route::Failed(kind, msg) => return Err(kind.to_error(&msg)),
+            }
+        }
+    }
+}
+
+/// Client side: a small pool of persistent connections issuing multiplexed
+/// unary or streamed calls.
+///
+/// Any transport-level failure (I/O error, deadline, protocol violation —
+/// anything except a clean [`WireError::Remote`]) marks the affected
+/// connection *broken*: request/response pairing can no longer be trusted,
+/// so in-flight calls on it fail with typed errors and later calls skip it.
+/// Once every pooled connection is broken the client fails fast.
+pub struct RpcClient {
+    conns: Vec<Arc<ClientConn>>,
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    /// Per-frame response deadline in nanoseconds; 0 = wait forever.
+    timeout_ns: AtomicU64,
+}
+
+impl RpcClient {
+    /// Connect a single-connection client (the default for control-plane
+    /// callers: registry, heartbeats, one-shot dispatch).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<RpcClient, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(RpcClient {
+            conns: vec![ClientConn::open(stream)?],
+            next_id: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            timeout_ns: AtomicU64::new(0),
+        })
+    }
+
+    /// Connect a pool of `pool` parallel connections to the same endpoint;
+    /// calls are spread round-robin and multiplexed per connection. Data-
+    /// plane callers ([`crate::agent::RemoteBatchSession`]) use this so one
+    /// slow batch never serializes the others behind it.
+    pub fn connect_pooled(
+        addr: impl ToSocketAddrs + Clone,
+        pool: usize,
+    ) -> Result<RpcClient, WireError> {
+        let mut conns = Vec::with_capacity(pool.max(1));
+        for _ in 0..pool.max(1) {
+            let stream = TcpStream::connect(addr.clone())?;
+            conns.push(ClientConn::open(stream)?);
+        }
+        Ok(RpcClient {
+            conns,
+            next_id: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            timeout_ns: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of pooled connections (broken or not).
+    pub fn pool_size(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Per-frame response deadline: a call whose next frame does not arrive
+    /// within `timeout` fails with [`WireError::Deadline`] (and breaks its
+    /// connection). `None` waits forever. Enforced by the response router —
+    /// no socket option involved, so nothing can silently fail to arm.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) {
+        let ns = timeout.map(|d| d.as_nanos().min(u64::MAX as u128) as u64).unwrap_or(0);
+        self.timeout_ns.store(ns.max(u64::from(timeout.is_some())), Ordering::Relaxed);
+    }
+
+    fn timeout(&self) -> Option<Duration> {
+        match self.timeout_ns.load(Ordering::Relaxed) {
+            0 => None,
+            ns => Some(Duration::from_nanos(ns)),
+        }
+    }
+
+    /// Every pooled connection has suffered a transport failure.
+    pub fn is_broken(&self) -> bool {
+        self.conns.iter().all(|c| c.is_broken())
+    }
+
+    fn pick(&self) -> Result<Arc<ClientConn>, WireError> {
+        let n = self.conns.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        for i in 0..n {
+            let conn = &self.conns[(start + i) % n];
+            if !conn.is_broken() {
+                return Ok(conn.clone());
+            }
+        }
+        Err(WireError::Protocol(
+            "connection marked broken by an earlier transport failure".into(),
+        ))
+    }
+
+    /// Unary call: send request, await the matching response.
+    pub fn call(&self, method: &str, params: Json) -> Result<Json, WireError> {
+        self.call_binary(method, params, None).map(|(j, _)| j)
+    }
+
+    /// Unary call with an opaque binary attachment (the tensor fast path).
+    pub fn call_binary(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
+        self.call_streamed(method, params, blob, |_, _| {})
+    }
+
+    /// Streamed call: interim chunk frames are handed to
+    /// `on_chunk(chunk_json, chunk_blob)` in arrival order; the final frame
+    /// resolves the call like a unary response.
+    pub fn call_streamed(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+        on_chunk: impl FnMut(&Json, Option<&[u8]>),
+    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
+        self.start_streamed(method, params, blob)?.wait(on_chunk)
+    }
+
+    /// Issue a call without waiting for its response: the request frame is
+    /// written (writer lock held only for the frame) and a [`PendingCall`]
+    /// handle is returned. This is the multiplexing primitive — N pending
+    /// calls on one connection are N in-flight ids, not N blocked threads.
+    pub fn start_streamed(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+    ) -> Result<PendingCall, WireError> {
+        let conn = self.pick()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        conn.register(id, tx)?;
+        let frame = encode_msg(&WireMsg::Request {
+            id,
+            method: method.to_string(),
+            params,
+            blob: blob.map(|b| b.to_vec()),
+        });
+        let write_result = match conn.writer.lock() {
+            Ok(mut stream) => write_frame(&mut *stream, &frame),
+            Err(_) => Err(WireError::Protocol(
+                "connection state poisoned by a panicked caller; connection marked broken".into(),
+            )),
+        };
+        if let Err(e) = write_result {
+            conn.unregister(id);
+            conn.break_now();
+            return Err(e);
+        }
+        Ok(PendingCall { conn, id, rx, timeout: self.timeout() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A poisoned writer lock maps to the typed broken-connection path —
+    /// the regression for the old `lock().unwrap()` process kill.
+    #[test]
+    fn poisoned_writer_lock_is_a_typed_error_not_a_panic() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = RpcClient::connect(listener.local_addr().unwrap()).unwrap();
+        let (_server_side, _) = listener.accept().unwrap();
+        // Poison the writer mutex the way a real caller would: panic while
+        // holding it.
+        let conn = client.conns[0].clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = conn.writer.lock().unwrap();
+            panic!("deliberate panic while holding the stream lock");
+        })
+        .join();
+        let err = client.call("echo", Json::Null).unwrap_err();
+        assert!(
+            matches!(err, WireError::Protocol(ref m) if m.contains("poisoned")),
+            "{err}"
+        );
+        assert!(client.is_broken(), "poisoning breaks the connection");
+        let err = client.call("echo", Json::Null).unwrap_err();
+        assert!(matches!(err, WireError::Protocol(ref m) if m.contains("broken")), "{err}");
+    }
+
+    #[test]
+    fn pool_skips_broken_members_until_all_are_gone() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Echo server good enough for two connections.
+        std::thread::spawn(move || {
+            for conn in listener.incoming().flatten().take(2) {
+                std::thread::spawn(move || {
+                    let mut stream = conn;
+                    while let Ok(Some(frame)) = read_frame(&mut stream) {
+                        if let Ok(WireMsg::Request { id, params, .. }) = decode_msg(&frame) {
+                            let resp = encode_msg(&WireMsg::Response {
+                                id,
+                                ok: true,
+                                body: params,
+                                blob: None,
+                            });
+                            if write_frame(&mut stream, &resp).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let client = RpcClient::connect_pooled(addr, 2).unwrap();
+        assert_eq!(client.pool_size(), 2);
+        client.conns[0].break_now();
+        for i in 0..8 {
+            let out = client.call("echo", Json::num(i as f64)).unwrap();
+            assert_eq!(out.as_f64(), Some(i as f64), "healthy member serves");
+        }
+        assert!(!client.is_broken(), "one live member keeps the client usable");
+        client.conns[1].break_now();
+        assert!(client.is_broken());
+        let err = client.call("echo", Json::Null).unwrap_err();
+        assert!(matches!(err, WireError::Protocol(ref m) if m.contains("broken")), "{err}");
+    }
+}

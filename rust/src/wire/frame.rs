@@ -1,0 +1,356 @@
+//! Binary frame codec for the hot RPC frames.
+//!
+//! JSON stays on the wire for control messages (`OpenBatch`, registry
+//! registration, heartbeats) where readability and back-compat matter and
+//! the payloads are tiny. The hot frames — stacked tensor attachments on
+//! `PredictBatch` requests and the streamed result-row chunks coming back —
+//! skip JSON envelope formatting/parsing entirely and ride a fixed binary
+//! header instead:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic   0xB1FA (BE) — distinguishes binary from JSON ('{')
+//!                        and from the legacy 0x01 attachment envelope
+//! 2       1     version 0x01
+//! 3       1     flags   bit0 RESPONSE, bit1 CHUNK, bit2 HAS_BLOB, bit3 OK
+//! 4       8     id      request id (BE) — multiplexing key
+//! 12      4     length  json section length (BE)
+//! 16      len   json    method/params (request), chunk metadata (chunk),
+//!                        result or error string (response)
+//! 16+len  rest  payload opaque binary blob (tensor bytes) when HAS_BLOB
+//! ```
+//!
+//! The whole frame still travels inside the transport's `u32 BE length`
+//! prefix, so readers enforce [`super::MAX_FRAME`] before any allocation.
+//! [`decode_msg`] accepts all three encodings (binary, legacy envelope,
+//! pure JSON) so old peers and hand-rolled test sockets keep working.
+
+use super::WireError;
+use crate::util::json::Json;
+
+/// First two bytes of every binary frame.
+pub const MAGIC: [u8; 2] = [0xB1, 0xFA];
+/// Binary frame format version.
+pub const VERSION: u8 = 1;
+/// Fixed header size: magic + version + flags + id + json length.
+pub const HEADER_LEN: usize = 16;
+
+pub const FLAG_RESPONSE: u8 = 1 << 0;
+pub const FLAG_CHUNK: u8 = 1 << 1;
+pub const FLAG_BLOB: u8 = 1 << 2;
+pub const FLAG_OK: u8 = 1 << 3;
+
+/// One decoded RPC frame, independent of its wire encoding.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    /// `method(params)` call, optionally with a binary attachment.
+    Request { id: u64, method: String, params: Json, blob: Option<Vec<u8>> },
+    /// Interim stream frame for an in-flight request.
+    Chunk { id: u64, chunk: Json, blob: Option<Vec<u8>> },
+    /// Final frame resolving a request. `body` is the result when `ok`,
+    /// the error message (as a JSON string) otherwise.
+    Response { id: u64, ok: bool, body: Json, blob: Option<Vec<u8>> },
+}
+
+impl WireMsg {
+    pub fn id(&self) -> u64 {
+        match self {
+            WireMsg::Request { id, .. }
+            | WireMsg::Chunk { id, .. }
+            | WireMsg::Response { id, .. } => *id,
+        }
+    }
+}
+
+fn encode_binary(id: u64, flags: u8, json: &Json, blob: Option<&[u8]>) -> Vec<u8> {
+    let j = json.to_string().into_bytes();
+    let b = blob.unwrap_or(&[]);
+    let mut out = Vec::with_capacity(HEADER_LEN + j.len() + b.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(flags | if blob.is_some() { FLAG_BLOB } else { 0 });
+    out.extend_from_slice(&id.to_be_bytes());
+    out.extend_from_slice(&(j.len() as u32).to_be_bytes());
+    out.extend_from_slice(&j);
+    out.extend_from_slice(b);
+    out
+}
+
+/// Encode one message. Hot frames (anything carrying a blob, and every
+/// stream chunk) use the binary header; blob-less unary requests and
+/// responses — the control plane — stay pure JSON for back-compat and
+/// debuggability.
+pub fn encode_msg(msg: &WireMsg) -> Vec<u8> {
+    match msg {
+        WireMsg::Request { id, method, params, blob } => match blob {
+            Some(b) => encode_binary(
+                *id,
+                0,
+                &Json::obj(vec![
+                    ("method", Json::str(method.as_str())),
+                    ("params", params.clone()),
+                ]),
+                Some(b),
+            ),
+            None => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("method", Json::str(method.as_str())),
+                ("params", params.clone()),
+            ])
+            .to_string()
+            .into_bytes(),
+        },
+        WireMsg::Chunk { id, chunk, blob } => {
+            encode_binary(*id, FLAG_CHUNK, chunk, blob.as_deref())
+        }
+        WireMsg::Response { id, ok, body, blob } => match blob {
+            Some(b) => encode_binary(
+                *id,
+                FLAG_RESPONSE | if *ok { FLAG_OK } else { 0 },
+                body,
+                Some(b),
+            ),
+            None => {
+                let field = if *ok { "result" } else { "error" };
+                Json::obj(vec![
+                    ("id", Json::num(*id as f64)),
+                    ("ok", Json::Bool(*ok)),
+                    (field, body.clone()),
+                ])
+                .to_string()
+                .into_bytes()
+            }
+        },
+    }
+}
+
+fn decode_binary(frame: &[u8]) -> Result<WireMsg, WireError> {
+    if frame.len() < HEADER_LEN {
+        return Err(WireError::Protocol("truncated binary frame header".into()));
+    }
+    if frame[2] != VERSION {
+        return Err(WireError::Protocol(format!(
+            "unsupported binary frame version {}",
+            frame[2]
+        )));
+    }
+    let flags = frame[3];
+    let id = u64::from_be_bytes(frame[4..12].try_into().unwrap());
+    let jlen = u32::from_be_bytes(frame[12..16].try_into().unwrap()) as usize;
+    // The declared json length is attacker-controlled: bound it by what
+    // actually arrived (itself capped at MAX_FRAME by the reader) before
+    // slicing — never trust it into an allocation or an index.
+    if jlen > frame.len().saturating_sub(HEADER_LEN) {
+        return Err(WireError::Protocol(format!(
+            "binary frame json length {jlen} exceeds frame body {}",
+            frame.len() - HEADER_LEN
+        )));
+    }
+    let json = Json::parse(
+        std::str::from_utf8(&frame[HEADER_LEN..HEADER_LEN + jlen])
+            .map_err(|_| WireError::Protocol("binary frame json not utf-8".into()))?,
+    )
+    .map_err(|e| WireError::Protocol(e.to_string()))?;
+    let blob = if flags & FLAG_BLOB != 0 {
+        Some(frame[HEADER_LEN + jlen..].to_vec())
+    } else if frame.len() > HEADER_LEN + jlen {
+        return Err(WireError::Protocol(
+            "binary frame carries trailing bytes without HAS_BLOB".into(),
+        ));
+    } else {
+        None
+    };
+    if flags & FLAG_CHUNK != 0 {
+        Ok(WireMsg::Chunk { id, chunk: json, blob })
+    } else if flags & FLAG_RESPONSE != 0 {
+        Ok(WireMsg::Response { id, ok: flags & FLAG_OK != 0, body: json, blob })
+    } else {
+        let method = json.str_or("method", "").to_string();
+        let params = json.get("params").cloned().unwrap_or(Json::Null);
+        Ok(WireMsg::Request { id, method, params, blob })
+    }
+}
+
+/// Legacy attachment envelope (`0x01 | u32 BE json_len | json | blob`) and
+/// pure-JSON bodies, kept so pre-binary peers and raw-socket tests decode.
+fn decode_legacy(frame: &[u8]) -> Result<(Json, Option<Vec<u8>>), WireError> {
+    if frame.first() == Some(&0x01) {
+        if frame.len() < 5 {
+            return Err(WireError::Protocol("truncated binary envelope".into()));
+        }
+        let jlen = u32::from_be_bytes(frame[1..5].try_into().unwrap()) as usize;
+        if jlen > frame.len().saturating_sub(5) {
+            return Err(WireError::Protocol("truncated binary envelope json".into()));
+        }
+        let json = Json::parse(
+            std::str::from_utf8(&frame[5..5 + jlen])
+                .map_err(|_| WireError::Protocol("envelope json not utf-8".into()))?,
+        )
+        .map_err(|e| WireError::Protocol(e.to_string()))?;
+        Ok((json, Some(frame[5 + jlen..].to_vec())))
+    } else {
+        let json = Json::parse(
+            std::str::from_utf8(frame)
+                .map_err(|_| WireError::Protocol("request not utf-8".into()))?,
+        )
+        .map_err(|e| WireError::Protocol(e.to_string()))?;
+        Ok((json, None))
+    }
+}
+
+/// Decode one frame body in any of the three wire encodings into a
+/// [`WireMsg`].
+pub fn decode_msg(frame: &[u8]) -> Result<WireMsg, WireError> {
+    if frame.len() >= 2 && frame[0..2] == MAGIC {
+        return decode_binary(frame);
+    }
+    let (json, blob) = decode_legacy(frame)?;
+    let id = json.f64_or("id", 0.0) as u64;
+    if json.get("stream").and_then(|v| v.as_bool()) == Some(true) {
+        let chunk = json.get("chunk").cloned().unwrap_or(Json::Null);
+        return Ok(WireMsg::Chunk { id, chunk, blob });
+    }
+    if json.get("method").is_some() {
+        return Ok(WireMsg::Request {
+            id,
+            method: json.str_or("method", "").to_string(),
+            params: json.get("params").cloned().unwrap_or(Json::Null),
+            blob,
+        });
+    }
+    if let Some(ok) = json.get("ok").and_then(|v| v.as_bool()) {
+        let body = if ok {
+            json.get("result").cloned().unwrap_or(Json::Null)
+        } else {
+            Json::str(json.str_or("error", "unknown error"))
+        };
+        return Ok(WireMsg::Response { id, ok, body, blob });
+    }
+    Err(WireError::Protocol(
+        "frame is neither a request, a stream chunk, nor a response".into(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_request_round_trip() {
+        let msg = WireMsg::Request {
+            id: 42,
+            method: "PredictBatch".into(),
+            params: Json::obj(vec![("session", Json::num(7.0))]),
+            blob: Some(vec![1, 2, 3, 4]),
+        };
+        let bytes = encode_msg(&msg);
+        assert_eq!(bytes[0..2], MAGIC, "blob-carrying requests are binary");
+        match decode_msg(&bytes).unwrap() {
+            WireMsg::Request { id, method, params, blob } => {
+                assert_eq!(id, 42);
+                assert_eq!(method, "PredictBatch");
+                assert_eq!(params.f64_or("session", 0.0), 7.0);
+                assert_eq!(blob, Some(vec![1, 2, 3, 4]));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_request_stays_json() {
+        let msg = WireMsg::Request {
+            id: 3,
+            method: "heartbeat".into(),
+            params: Json::obj(vec![("id", Json::str("a1"))]),
+            blob: None,
+        };
+        let bytes = encode_msg(&msg);
+        assert_eq!(bytes[0], b'{', "control messages remain readable JSON");
+        match decode_msg(&bytes).unwrap() {
+            WireMsg::Request { id, method, .. } => {
+                assert_eq!((id, method.as_str()), (3, "heartbeat"));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_and_response_round_trip() {
+        let chunk = WireMsg::Chunk {
+            id: 9,
+            chunk: Json::obj(vec![("offset", Json::num(16.0))]),
+            blob: Some(vec![0xAB; 32]),
+        };
+        match decode_msg(&encode_msg(&chunk)).unwrap() {
+            WireMsg::Chunk { id, chunk, blob } => {
+                assert_eq!(id, 9);
+                assert_eq!(chunk.f64_or("offset", 0.0), 16.0);
+                assert_eq!(blob.unwrap().len(), 32);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        let err = WireMsg::Response { id: 11, ok: false, body: Json::str("boom"), blob: None };
+        match decode_msg(&encode_msg(&err)).unwrap() {
+            WireMsg::Response { id, ok, body, .. } => {
+                assert_eq!((id, ok), (11, false));
+                assert_eq!(body.as_str(), Some("boom"));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn declared_json_length_is_bounds_checked_before_use() {
+        // Valid header but a json length far past the delivered bytes.
+        let mut f = Vec::new();
+        f.extend_from_slice(&MAGIC);
+        f.push(VERSION);
+        f.push(FLAG_CHUNK);
+        f.extend_from_slice(&1u64.to_be_bytes());
+        f.extend_from_slice(&0xFFFF_FF00u32.to_be_bytes());
+        f.extend_from_slice(b"{}");
+        let err = decode_msg(&f).unwrap_err();
+        assert!(
+            matches!(err, WireError::Protocol(ref m) if m.contains("json length")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn unknown_version_and_truncated_header_reject() {
+        let mut f = Vec::new();
+        f.extend_from_slice(&MAGIC);
+        f.push(99);
+        f.extend_from_slice(&[0; 13]);
+        assert!(matches!(decode_msg(&f), Err(WireError::Protocol(_))));
+        assert!(matches!(decode_msg(&MAGIC), Err(WireError::Protocol(_))));
+    }
+
+    #[test]
+    fn legacy_json_shapes_still_decode() {
+        let req = br#"{"id": 5, "method": "echo", "params": 1}"#;
+        assert!(matches!(
+            decode_msg(req).unwrap(),
+            WireMsg::Request { id: 5, .. }
+        ));
+        let resp = br#"{"id": 5, "ok": true, "result": 1}"#;
+        assert!(matches!(
+            decode_msg(resp).unwrap(),
+            WireMsg::Response { id: 5, ok: true, .. }
+        ));
+        let chunk = br#"{"id": 5, "stream": true, "chunk": {"i": 0}}"#;
+        assert!(matches!(decode_msg(chunk).unwrap(), WireMsg::Chunk { id: 5, .. }));
+        // Legacy 0x01 attachment envelope.
+        let inner = br#"{"id": 6, "ok": true, "result": null}"#;
+        let mut env = vec![0x01];
+        env.extend_from_slice(&(inner.len() as u32).to_be_bytes());
+        env.extend_from_slice(inner);
+        env.extend_from_slice(&[7, 7]);
+        match decode_msg(&env).unwrap() {
+            WireMsg::Response { id: 6, ok: true, blob, .. } => {
+                assert_eq!(blob, Some(vec![7, 7]));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+}

@@ -1,8 +1,8 @@
 //! The server↔agent RPC protocol (paper §4.3/§4.4 gRPC, Listing 4).
 //!
 //! gRPC is unavailable offline, so this is a length-prefixed framed RPC
-//! over TCP carrying JSON payloads, with the same service shape as the
-//! paper's protobuf definition:
+//! over TCP with the same service shape as the paper's protobuf
+//! definition:
 //!
 //! ```text
 //! Open(OpenRequest)        -> PredictorHandle
@@ -10,26 +10,44 @@
 //! Close(handle)            -> CloseResponse
 //! ```
 //!
-//! Frame format: `u32 BE length | JSON bytes`. A request carries
-//! `{"id": n, "method": "...", "params": {...}}`; a response
-//! `{"id": n, "ok": bool, "result"| "error": ...}`. The server side
-//! dispatches to a [`Service`] implementation; one thread per connection.
+//! Transport framing is `u32 BE length | body`. Bodies come in two
+//! encodings: JSON (`{"id": n, "method": ..., "params": ...}` requests and
+//! `{"id": n, "ok": bool, ...}` responses) for the control plane, and the
+//! binary format of [`frame`] (magic, id, flags, length, payload) for the
+//! hot frames — tensor attachments and streamed result-row chunks.
+//!
+//! The transport is **multiplexed and non-blocking** end to end:
+//!
+//! - [`RpcServer`] (see [`server`]) runs a hand-rolled readiness loop —
+//!   non-blocking streams polled as a registered set — and executes
+//!   requests on a worker pool, so many requests per connection are in
+//!   flight at once and responses interleave by id;
+//! - [`RpcClient`] (see [`client`]) holds a small connection pool; each
+//!   connection has a reader task routing response frames to per-id
+//!   waiters, and the stream write lock is held only per frame — never
+//!   across a round-trip.
 
 use crate::util::json::Json;
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::io::Read;
+use std::net::TcpStream;
 use std::time::Duration;
 
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{PendingCall, RpcClient};
+pub use frame::{decode_msg, encode_msg, WireMsg};
+pub use server::{RpcServer, WireOpts};
+
 /// Max accepted frame: 256 MB (a batch-256 224² f32 tensor is ~154 MB).
-const MAX_FRAME: u32 = 256 << 20;
+pub const MAX_FRAME: u32 = 256 << 20;
 
 /// Once a frame's length prefix has arrived, the body must follow within
 /// this window — a peer that stalls mid-frame (a partition, a half-dead
-/// process) must not pin the connection thread forever. Idle connections
+/// process) must not pin the connection forever. Idle connections
 /// *between* frames are legal and never time out.
-const MIDFRAME_TIMEOUT: Duration = Duration::from_secs(5);
+pub const MIDFRAME_TIMEOUT: Duration = Duration::from_secs(5);
 
 #[derive(Debug)]
 pub enum WireError {
@@ -61,7 +79,7 @@ impl From<std::io::Error> for WireError {
 }
 
 /// Write one frame.
-pub fn write_frame(stream: &mut impl Write, payload: &[u8]) -> Result<(), WireError> {
+pub fn write_frame(stream: &mut impl std::io::Write, payload: &[u8]) -> Result<(), WireError> {
     if payload.len() as u64 > MAX_FRAME as u64 {
         return Err(WireError::Protocol(format!("frame too large: {}", payload.len())));
     }
@@ -71,7 +89,9 @@ pub fn write_frame(stream: &mut impl Write, payload: &[u8]) -> Result<(), WireEr
     Ok(())
 }
 
-/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary. The
+/// declared length is checked against [`MAX_FRAME`] *before* the body
+/// allocation — on the client read path exactly as on the server's.
 pub fn read_frame(stream: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
     let mut len_buf = [0u8; 4];
     match stream.read_exact(&mut len_buf) {
@@ -88,11 +108,15 @@ pub fn read_frame(stream: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> 
     Ok(Some(buf))
 }
 
-/// As [`read_frame`], for TCP streams: the length-prefix read blocks
-/// indefinitely (idle persistent connections are legal), but once a prefix
-/// arrives the body must land within `body_timeout` or the read fails with
-/// [`WireError::Deadline`] — a peer stalling mid-frame can never hang a
-/// connection thread. Used by the server side of every connection.
+/// As [`read_frame`], for blocking TCP streams: the length-prefix read
+/// blocks indefinitely (idle persistent connections are legal), but once a
+/// prefix arrives the body must land within `body_timeout` or the read
+/// fails with [`WireError::Deadline`]. The multiplexed server enforces the
+/// same policy inside its event loop; this function remains for blocking
+/// callers and as the reference semantics.
+///
+/// Socket-option failures are surfaced as [`WireError::Io`] — a timeout
+/// that silently failed to arm would make the deadline vacuous.
 pub fn read_frame_guarded(
     stream: &mut TcpStream,
     body_timeout: Duration,
@@ -106,7 +130,7 @@ pub fn read_frame_guarded(
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
         Err(e) => return Err(e.into()),
     }
-    stream.set_read_timeout(Some(body_timeout)).ok();
+    stream.set_read_timeout(Some(body_timeout))?;
     let guarded = (|| -> Result<Vec<u8>, std::io::Error> {
         stream.read_exact(&mut len_buf[1..])?;
         let len = u32::from_be_bytes(len_buf);
@@ -122,7 +146,7 @@ pub fn read_frame_guarded(
         stream.read_exact(&mut buf)?;
         Ok(buf)
     })();
-    stream.set_read_timeout(None).ok();
+    stream.set_read_timeout(None)?;
     match guarded {
         Ok(buf) => Ok(Some(buf)),
         Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
@@ -161,10 +185,9 @@ pub trait Service: Send + Sync + 'static {
 
     /// Streaming call: may push any number of interim frames through
     /// `emit(chunk_json, chunk_blob)` — delivered in order on the same
-    /// connection, each wrapped in a `{"stream": true, "chunk": ...}`
-    /// envelope carrying the request id — before returning the final
-    /// (normal) response. The `PredictBatch` RPC streams large batched
-    /// tensor results in bounded chunks this way. Default: unary.
+    /// connection, each carrying the request id — before returning the
+    /// final (normal) response. The `PredictBatch` RPC streams large
+    /// batched tensor results in bounded chunks this way. Default: unary.
     fn call_stream(
         &self,
         method: &str,
@@ -185,319 +208,12 @@ where
     }
 }
 
-/// A running RPC server (one accept thread + one thread per connection).
-pub struct RpcServer {
-    addr: std::net::SocketAddr,
-    shutdown: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-}
-
-impl RpcServer {
-    /// Bind and serve `service` on `addr` (use port 0 for ephemeral).
-    pub fn serve(addr: &str, service: Arc<dyn Service>) -> Result<RpcServer, WireError> {
-        RpcServer::serve_with_chaos(addr, service, None)
-    }
-
-    /// As [`RpcServer::serve`], with an optional [`crate::chaos::ChaosEngine`]
-    /// consulted before every request is dispatched — the injection point
-    /// for deterministic distributed-failure scenarios. A `Kill` verdict
-    /// flips the server's shutdown flag (and fires the engine's kill hook),
-    /// so every connection dies no later than its next request.
-    pub fn serve_with_chaos(
-        addr: &str,
-        service: Arc<dyn Service>,
-        chaos: Option<Arc<crate::chaos::ChaosEngine>>,
-    ) -> Result<RpcServer, WireError> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let sd = shutdown.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("rpc-accept-{local}"))
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if sd.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    match conn {
-                        Ok(stream) => {
-                            let service = service.clone();
-                            let sd = sd.clone();
-                            let chaos = chaos.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_connection(stream, service, sd, chaos);
-                            });
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn rpc accept thread");
-        Ok(RpcServer { addr: local, shutdown, accept_thread: Some(accept_thread) })
-    }
-
-    pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
-    }
-
-    /// Stop accepting and join the accept thread. Existing connections
-    /// finish their in-flight request.
-    pub fn stop(mut self) {
-        self.stop_inner();
-    }
-
-    fn stop_inner(&mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        // Nudge the blocking accept with a dummy connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-impl Drop for RpcServer {
-    fn drop(&mut self) {
-        self.stop_inner();
-    }
-}
-
-/// Frame content: pure JSON (starts with `{`, back-compat) or a binary
-/// envelope `0x01 | u32 BE json_len | json | blob`.
-fn encode_envelope(json: &Json, blob: Option<&[u8]>) -> Vec<u8> {
-    match blob {
-        None => json.to_string().into_bytes(),
-        Some(blob) => {
-            let j = json.to_string().into_bytes();
-            let mut out = Vec::with_capacity(5 + j.len() + blob.len());
-            out.push(0x01);
-            out.extend_from_slice(&(j.len() as u32).to_be_bytes());
-            out.extend_from_slice(&j);
-            out.extend_from_slice(blob);
-            out
-        }
-    }
-}
-
-fn decode_envelope(frame: &[u8]) -> Result<(Json, Option<Vec<u8>>), WireError> {
-    if frame.first() == Some(&0x01) {
-        if frame.len() < 5 {
-            return Err(WireError::Protocol("truncated binary envelope".into()));
-        }
-        let jlen = u32::from_be_bytes(frame[1..5].try_into().unwrap()) as usize;
-        if frame.len() < 5 + jlen {
-            return Err(WireError::Protocol("truncated binary envelope json".into()));
-        }
-        let json = Json::parse(
-            std::str::from_utf8(&frame[5..5 + jlen])
-                .map_err(|_| WireError::Protocol("envelope json not utf-8".into()))?,
-        )
-        .map_err(|e| WireError::Protocol(e.to_string()))?;
-        Ok((json, Some(frame[5 + jlen..].to_vec())))
-    } else {
-        let json = Json::parse(
-            std::str::from_utf8(frame)
-                .map_err(|_| WireError::Protocol("request not utf-8".into()))?,
-        )
-        .map_err(|e| WireError::Protocol(e.to_string()))?;
-        Ok((json, None))
-    }
-}
-
-fn handle_connection(
-    mut stream: TcpStream,
-    service: Arc<dyn Service>,
-    shutdown: Arc<AtomicBool>,
-    chaos: Option<Arc<crate::chaos::ChaosEngine>>,
-) -> Result<(), WireError> {
-    stream.set_nodelay(true).ok();
-    while !shutdown.load(Ordering::Relaxed) {
-        let frame = match read_frame_guarded(&mut stream, MIDFRAME_TIMEOUT)? {
-            Some(f) => f,
-            None => return Ok(()), // clean disconnect
-        };
-        let (req, blob) = decode_envelope(&frame)?;
-        let id = req.f64_or("id", 0.0);
-        let method = req.str_or("method", "");
-        let params = req.get("params").cloned().unwrap_or(Json::Null);
-        if let Some(engine) = &chaos {
-            match engine.decide(method) {
-                crate::chaos::FaultAction::Pass => {}
-                crate::chaos::FaultAction::Delay(ms) => {
-                    std::thread::sleep(Duration::from_millis(ms));
-                }
-                // Close with no reply: from the caller's view this is
-                // exactly a crashed peer mid-call.
-                crate::chaos::FaultAction::Drop => return Ok(()),
-                crate::chaos::FaultAction::Kill => {
-                    shutdown.store(true, Ordering::Relaxed);
-                    return Ok(());
-                }
-            }
-        }
-        let result = {
-            let mut emit = |chunk: Json, chunk_blob: Option<Vec<u8>>| -> Result<(), WireError> {
-                let envelope = Json::obj(vec![
-                    ("id", Json::num(id)),
-                    ("stream", Json::Bool(true)),
-                    ("chunk", chunk),
-                ]);
-                write_frame(&mut stream, &encode_envelope(&envelope, chunk_blob.as_deref()))
-            };
-            service.call_stream(method, &params, blob.as_deref(), &mut emit)
-        };
-        let (response, out_blob) = match result {
-            Ok((result, out_blob)) => (
-                Json::obj(vec![
-                    ("id", Json::num(id)),
-                    ("ok", Json::Bool(true)),
-                    ("result", result),
-                ]),
-                out_blob,
-            ),
-            Err(msg) => (
-                Json::obj(vec![
-                    ("id", Json::num(id)),
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::str(msg)),
-                ]),
-                None,
-            ),
-        };
-        write_frame(&mut stream, &encode_envelope(&response, out_blob.as_deref()))?;
-    }
-    Ok(())
-}
-
-/// Client side: a persistent connection issuing unary or streamed calls.
-///
-/// Any transport-level failure (I/O error, deadline, protocol violation —
-/// anything except a clean [`WireError::Remote`]) marks the connection
-/// *broken*: request/response pairing can no longer be trusted (a late
-/// reply to a timed-out call would be mis-matched to the next request), so
-/// every later call fails fast with a typed error instead.
-pub struct RpcClient {
-    stream: std::sync::Mutex<TcpStream>,
-    next_id: AtomicU64,
-    broken: AtomicBool,
-}
-
-impl RpcClient {
-    pub fn connect(addr: impl ToSocketAddrs) -> Result<RpcClient, WireError> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        Ok(RpcClient {
-            stream: std::sync::Mutex::new(stream),
-            next_id: AtomicU64::new(1),
-            broken: AtomicBool::new(false),
-        })
-    }
-
-    /// Per-call deadline: reads past it fail with [`WireError::Deadline`]
-    /// (and break the connection). `None` waits forever.
-    pub fn set_read_timeout(&self, timeout: Option<Duration>) {
-        let stream = self.stream.lock().unwrap();
-        stream.set_read_timeout(timeout).ok();
-    }
-
-    /// A transport failure poisoned this connection.
-    pub fn is_broken(&self) -> bool {
-        self.broken.load(Ordering::Relaxed)
-    }
-
-    /// Unary call: send request, await the matching response.
-    pub fn call(&self, method: &str, params: Json) -> Result<Json, WireError> {
-        self.call_binary(method, params, None).map(|(j, _)| j)
-    }
-
-    /// Unary call with an opaque binary attachment (the tensor fast path).
-    pub fn call_binary(
-        &self,
-        method: &str,
-        params: Json,
-        blob: Option<&[u8]>,
-    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
-        self.call_streamed(method, params, blob, |_, _| {})
-    }
-
-    /// Streamed call: interim `{"stream": true}` frames are handed to
-    /// `on_chunk(chunk_json, chunk_blob)` in arrival order; the final frame
-    /// resolves the call like a unary response.
-    pub fn call_streamed(
-        &self,
-        method: &str,
-        params: Json,
-        blob: Option<&[u8]>,
-        mut on_chunk: impl FnMut(&Json, Option<&[u8]>),
-    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
-        if self.is_broken() {
-            return Err(WireError::Protocol(
-                "connection marked broken by an earlier transport failure".into(),
-            ));
-        }
-        let result = self.call_streamed_inner(method, params, blob, &mut on_chunk);
-        if !matches!(result, Ok(_) | Err(WireError::Remote(_))) {
-            self.broken.store(true, Ordering::Relaxed);
-        }
-        result
-    }
-
-    fn call_streamed_inner(
-        &self,
-        method: &str,
-        params: Json,
-        blob: Option<&[u8]>,
-        on_chunk: &mut dyn FnMut(&Json, Option<&[u8]>),
-    ) -> Result<(Json, Option<Vec<u8>>), WireError> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Json::obj(vec![
-            ("id", Json::num(id as f64)),
-            ("method", Json::str(method)),
-            ("params", params),
-        ]);
-        let mut stream = self.stream.lock().unwrap();
-        write_frame(&mut *stream, &encode_envelope(&req, blob))?;
-        loop {
-            let frame = read_frame(&mut *stream)
-                .map_err(map_client_timeout)?
-                .ok_or_else(|| WireError::Protocol("connection closed mid-call".into()))?;
-            let (resp, out_blob) = decode_envelope(&frame)?;
-            if resp.f64_or("id", -1.0) != id as f64 {
-                return Err(WireError::Protocol("response id mismatch".into()));
-            }
-            if resp.get("stream").and_then(|v| v.as_bool()) == Some(true) {
-                on_chunk(resp.get("chunk").unwrap_or(&Json::Null), out_blob.as_deref());
-                continue;
-            }
-            drop(stream);
-            return if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
-                Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob))
-            } else {
-                Err(WireError::Remote(resp.str_or("error", "unknown error").to_string()))
-            };
-        }
-    }
-}
-
-/// A read timeout on the client socket surfaces as an I/O error; retype it
-/// as the deadline it is.
-fn map_client_timeout(e: WireError) -> WireError {
-    match e {
-        WireError::Io(io)
-            if matches!(
-                io.kind(),
-                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-            ) =>
-        {
-            WireError::Deadline("no response within the read timeout".into())
-        }
-        other => other,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+    use std::sync::Arc;
 
     fn echo_service() -> Arc<dyn Service> {
         Arc::new(|method: &str, params: &Json| -> Result<Json, String> {
@@ -597,16 +313,13 @@ mod tests {
 
     #[test]
     fn non_json_frame_is_typed_protocol_error() {
-        assert!(matches!(
-            decode_envelope(b"not json at all"),
-            Err(WireError::Protocol(_))
-        ));
+        assert!(matches!(decode_msg(b"not json at all"), Err(WireError::Protocol(_))));
         // Invalid UTF-8 is protocol too, not a panic.
-        assert!(matches!(decode_envelope(&[0xFF, 0xFE, 0x80]), Err(WireError::Protocol(_))));
-        // Truncated binary envelopes reject cleanly.
-        assert!(matches!(decode_envelope(&[0x01, 0, 0]), Err(WireError::Protocol(_))));
+        assert!(matches!(decode_msg(&[0xFF, 0xFE, 0x80]), Err(WireError::Protocol(_))));
+        // Truncated legacy binary envelopes reject cleanly.
+        assert!(matches!(decode_msg(&[0x01, 0, 0]), Err(WireError::Protocol(_))));
         assert!(matches!(
-            decode_envelope(&[0x01, 0, 0, 0, 99, b'{', b'}']),
+            decode_msg(&[0x01, 0, 0, 0, 99, b'{', b'}']),
             Err(WireError::Protocol(_))
         ));
     }
@@ -680,6 +393,34 @@ mod tests {
         assert!(matches!(err, WireError::Deadline(_)), "{err}");
         assert!(t0.elapsed() < Duration::from_secs(5), "returned promptly");
         drop(writer.join().unwrap());
+    }
+
+    /// Mid-frame stalls are enforced by the event loop too: a connection
+    /// that goes quiet halfway through a frame is closed within the
+    /// window, and the server keeps serving everyone else.
+    #[test]
+    fn event_loop_closes_midframe_stalls() {
+        let mut opts = WireOpts::default();
+        opts.midframe_timeout = Duration::from_millis(100);
+        let server =
+            RpcServer::serve_with_opts("127.0.0.1:0", echo_service(), None, opts).unwrap();
+        let mut staller = TcpStream::connect(server.addr()).unwrap();
+        staller.write_all(&10u32.to_be_bytes()).unwrap();
+        staller.write_all(&[1, 2, 3]).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut buf = [0u8; 1];
+        // The server closes us: read returns 0 well before MIDFRAME_TIMEOUT.
+        loop {
+            match staller.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e) => panic!("expected clean close, got {e}"),
+            }
+        }
+        assert!(t0.elapsed() < Duration::from_secs(3), "closed promptly");
+        let client = RpcClient::connect(server.addr()).unwrap();
+        assert_eq!(client.call("echo", Json::num(5.0)).unwrap().as_f64(), Some(5.0));
+        server.stop();
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Non-blocking, multiplexed RPC server.
+//!
+//! The pre-multiplex server ran one blocking thread per connection and one
+//! request at a time per thread — fine for 3 agents, a wall at 3,000. This
+//! implementation is a hand-rolled readiness loop (no external deps, per
+//! the offline build):
+//!
+//! - the **accept thread** hands new connections to the event loop;
+//! - the **event loop** sets every stream non-blocking and polls the
+//!   registered set, accumulating bytes into per-connection buffers and
+//!   slicing complete `u32 BE length`-prefixed frames out of them; a
+//!   connection that stalls mid-frame past [`super::MIDFRAME_TIMEOUT`] is
+//!   closed, and an oversized declared length closes the connection before
+//!   any allocation;
+//! - complete request frames are dispatched to a **worker pool**, so many
+//!   requests from one connection execute concurrently and a slow call
+//!   never blocks fast ones behind it;
+//! - workers write chunk and response frames back under a per-connection
+//!   writer lock held only per frame — responses from different requests
+//!   interleave freely and the client routes them by id.
+//!
+//! In-flight accounting (frames parsed, final response not yet written) is
+//! exposed via [`RpcServer::inflight`] / [`RpcServer::inflight_peak`]; the
+//! `fig_fleet` bench gates on ≥10k concurrent in-flight streams.
+
+use super::frame::{decode_msg, encode_msg, WireMsg};
+use super::{Service, WireError, MAX_FRAME, MIDFRAME_TIMEOUT};
+use crate::util::json::Json;
+use crate::util::threadpool::{Channel, Receiver, Sender, ThreadPool};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for [`RpcServer::serve_with_opts`].
+#[derive(Debug, Clone)]
+pub struct WireOpts {
+    /// Worker threads executing requests (per server). Concurrency per
+    /// *connection* is no longer 1 — any worker can run any request.
+    pub workers: usize,
+    /// Dispatch queue capacity; the event loop back-pressures (stops
+    /// reading) when this many requests are queued unexecuted.
+    pub queue_capacity: usize,
+    /// Close a connection whose current frame has been partially received
+    /// for longer than this.
+    pub midframe_timeout: Duration,
+    /// Give up on a peer that stops draining its socket for this long
+    /// while a worker is writing a frame to it.
+    pub write_stall_timeout: Duration,
+}
+
+impl Default for WireOpts {
+    fn default() -> WireOpts {
+        WireOpts {
+            workers: 16,
+            queue_capacity: 32_768,
+            midframe_timeout: MIDFRAME_TIMEOUT,
+            write_stall_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Counters shared between the event loop, the workers, and the handle.
+#[derive(Default)]
+struct ServerStats {
+    inflight: AtomicU64,
+    inflight_peak: AtomicU64,
+    socket_option_failures: AtomicU64,
+}
+
+impl ServerStats {
+    fn enter(&self) {
+        let now = self.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inflight_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn exit(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Writer half of a connection, shared with the workers serving its
+/// requests. `dead` doubles as the close-request flag: the event loop
+/// drops the connection on its next pass.
+struct ConnWriter {
+    stream: Mutex<TcpStream>,
+    dead: AtomicBool,
+    write_stall: Duration,
+}
+
+impl ConnWriter {
+    /// Write one frame under the per-frame lock. The stream is
+    /// non-blocking (it shares the socket with the reader side), so
+    /// `WouldBlock` is retried with a short sleep up to the stall timeout.
+    fn write_frame(&self, payload: &[u8]) -> Result<(), WireError> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(WireError::Protocol("connection closed".into()));
+        }
+        if payload.len() as u64 > MAX_FRAME as u64 {
+            return Err(WireError::Protocol(format!("frame too large: {}", payload.len())));
+        }
+        let mut guard = match self.stream.lock() {
+            Ok(g) => g,
+            Err(_) => {
+                // A worker panicked mid-write: frame boundaries on this
+                // socket are unknowable.
+                self.dead.store(true, Ordering::Relaxed);
+                return Err(WireError::Protocol(
+                    "connection writer poisoned by a panicked worker".into(),
+                ));
+            }
+        };
+        let result = self
+            .write_all_nb(&mut guard, &(payload.len() as u32).to_be_bytes())
+            .and_then(|()| self.write_all_nb(&mut guard, payload));
+        if result.is_err() {
+            self.dead.store(true, Ordering::Relaxed);
+        }
+        result
+    }
+
+    fn write_all_nb(&self, stream: &mut TcpStream, mut buf: &[u8]) -> Result<(), WireError> {
+        let mut stalled_since: Option<Instant> = None;
+        while !buf.is_empty() {
+            match stream.write(buf) {
+                Ok(0) => return Err(WireError::Protocol("connection closed mid-write".into())),
+                Ok(n) => {
+                    buf = &buf[n..];
+                    stalled_since = None;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    let since = *stalled_since.get_or_insert_with(Instant::now);
+                    if since.elapsed() > self.write_stall {
+                        return Err(WireError::Deadline(format!(
+                            "peer stopped draining its socket for {:?}",
+                            self.write_stall
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Event-loop-side connection state.
+struct Conn {
+    stream: TcpStream,
+    writer: Arc<ConnWriter>,
+    /// Bytes received but not yet sliced into frames.
+    rbuf: Vec<u8>,
+    /// Set while a frame is partially received (mid-frame stall clock).
+    partial_since: Option<Instant>,
+}
+
+/// A running RPC server: accept thread + readiness event loop + worker
+/// pool.
+pub struct RpcServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    loop_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind and serve `service` on `addr` (use port 0 for ephemeral).
+    pub fn serve(addr: &str, service: Arc<dyn Service>) -> Result<RpcServer, WireError> {
+        RpcServer::serve_with_opts(addr, service, None, WireOpts::default())
+    }
+
+    /// As [`RpcServer::serve`], with an optional [`crate::chaos::ChaosEngine`]
+    /// consulted before every request is dispatched — the injection point
+    /// for deterministic distributed-failure scenarios. A `Kill` verdict
+    /// flips the server's shutdown flag (and fires the engine's kill hook),
+    /// so every connection dies no later than its next request.
+    pub fn serve_with_chaos(
+        addr: &str,
+        service: Arc<dyn Service>,
+        chaos: Option<Arc<crate::chaos::ChaosEngine>>,
+    ) -> Result<RpcServer, WireError> {
+        RpcServer::serve_with_opts(addr, service, chaos, WireOpts::default())
+    }
+
+    /// Full-control entry point: chaos engine plus [`WireOpts`] tuning.
+    pub fn serve_with_opts(
+        addr: &str,
+        service: Arc<dyn Service>,
+        chaos: Option<Arc<crate::chaos::ChaosEngine>>,
+        opts: WireOpts,
+    ) -> Result<RpcServer, WireError> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let (conn_tx, conn_rx) = Channel::<TcpStream>::bounded(1024);
+
+        let accept_thread = {
+            let sd = shutdown.clone();
+            std::thread::Builder::new()
+                .name(format!("rpc-accept-{local}"))
+                .spawn(move || accept_loop(listener, conn_tx, sd))
+                .map_err(WireError::Io)?
+        };
+        let loop_thread = {
+            let sd = shutdown.clone();
+            let stats = stats.clone();
+            let pool_handle = PoolHandle { service, chaos, shutdown: sd.clone(), stats: stats.clone() };
+            std::thread::Builder::new()
+                .name(format!("rpc-loop-{local}"))
+                .spawn(move || event_loop(conn_rx, pool_handle, sd, stats, opts))
+                .map_err(WireError::Io)?
+        };
+        Ok(RpcServer {
+            addr: local,
+            shutdown,
+            stats,
+            accept_thread: Some(accept_thread),
+            loop_thread: Some(loop_thread),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Requests received (frame fully parsed) whose final response has not
+    /// been written yet.
+    pub fn inflight(&self) -> u64 {
+        self.stats.inflight.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`RpcServer::inflight`] over the server's life.
+    pub fn inflight_peak(&self) -> u64 {
+        self.stats.inflight_peak.load(Ordering::Relaxed)
+    }
+
+    /// Connections refused because a socket option (non-blocking mode,
+    /// `TCP_NODELAY`) could not be set — surfaced instead of `.ok()`-ing
+    /// away a socket whose deadline enforcement would be vacuous.
+    pub fn socket_option_failures(&self) -> u64 {
+        self.stats.socket_option_failures.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, close every connection, and join the loop threads.
+    /// In-flight requests on the worker pool finish (their writes fail).
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Nudge the blocking accept with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.loop_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, shutdown: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                if conn_tx.send(stream).is_err() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Everything a dispatched request needs, bundled for the worker closure.
+#[derive(Clone)]
+struct PoolHandle {
+    service: Arc<dyn Service>,
+    chaos: Option<Arc<crate::chaos::ChaosEngine>>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+}
+
+fn event_loop(
+    conn_rx: Receiver<TcpStream>,
+    handle: PoolHandle,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    opts: WireOpts,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let pool = ThreadPool::new("rpc-exec", opts.workers.max(2), opts.queue_capacity.max(64));
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        // Register newly accepted connections.
+        while let Some(stream) = conn_rx.try_recv() {
+            match register_conn(stream, &opts) {
+                Ok(conn) => conns.push(conn),
+                Err(_) => {
+                    stats.socket_option_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        let mut progress = false;
+        conns.retain_mut(|conn| {
+            if conn.writer.dead.load(Ordering::Relaxed) {
+                let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+                return false;
+            }
+            // Drain what the socket has, with a per-tick fairness bound so
+            // one firehose connection cannot starve the set.
+            for _ in 0..16 {
+                match conn.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        conn.writer.dead.store(true, Ordering::Relaxed);
+                        return false;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        conn.rbuf.extend_from_slice(&scratch[..n]);
+                        if !slice_frames(conn, &handle, &pool) {
+                            // Oversized declared length: close with no
+                            // reply, before any allocation.
+                            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+                            return false;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        conn.writer.dead.store(true, Ordering::Relaxed);
+                        return false;
+                    }
+                }
+            }
+            // Mid-frame stall guard: once part of a frame has arrived, the
+            // rest must land within the window (idle *between* frames is
+            // legal and never times out).
+            if let Some(since) = conn.partial_since {
+                if since.elapsed() > opts.midframe_timeout {
+                    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+                    return false;
+                }
+            }
+            true
+        });
+        if !progress {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    for conn in &conns {
+        let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+    }
+    // pool drops here: queued jobs run to completion against closed
+    // sockets (their writes fail fast), then the workers join.
+}
+
+fn register_conn(stream: TcpStream, opts: &WireOpts) -> Result<Conn, WireError> {
+    // Failures are surfaced (counted + connection refused), not `.ok()`'d:
+    // a blocking stream in a readiness loop would hang the whole set, and
+    // without nodelay the per-frame latency story is fiction.
+    stream.set_nonblocking(true)?;
+    stream.set_nodelay(true)?;
+    let writer_stream = stream.try_clone()?;
+    Ok(Conn {
+        stream,
+        writer: Arc::new(ConnWriter {
+            stream: Mutex::new(writer_stream),
+            dead: AtomicBool::new(false),
+            write_stall: opts.write_stall_timeout,
+        }),
+        rbuf: Vec::new(),
+        partial_since: None,
+    })
+}
+
+/// Slice every complete frame out of `conn.rbuf` and dispatch it. Returns
+/// `false` when the connection must be closed without a reply (oversized
+/// declared length).
+fn slice_frames(conn: &mut Conn, handle: &PoolHandle, pool: &ThreadPool) -> bool {
+    let mut off = 0usize;
+    loop {
+        let avail = conn.rbuf.len() - off;
+        if avail < 4 {
+            break;
+        }
+        let len = u32::from_be_bytes(conn.rbuf[off..off + 4].try_into().unwrap());
+        if len > MAX_FRAME {
+            return false;
+        }
+        let len = len as usize;
+        if avail < 4 + len {
+            break;
+        }
+        let frame = conn.rbuf[off + 4..off + 4 + len].to_vec();
+        off += 4 + len;
+        dispatch(frame, conn.writer.clone(), handle, pool);
+    }
+    if off > 0 {
+        conn.rbuf.drain(..off);
+    }
+    if conn.rbuf.is_empty() {
+        conn.partial_since = None;
+    } else if conn.partial_since.is_none() {
+        conn.partial_since = Some(Instant::now());
+    }
+    true
+}
+
+fn dispatch(frame: Vec<u8>, writer: Arc<ConnWriter>, handle: &PoolHandle, pool: &ThreadPool) {
+    let handle = handle.clone();
+    handle.stats.enter();
+    pool.execute(move || {
+        run_request(frame, writer, &handle);
+        handle.stats.exit();
+    });
+}
+
+fn run_request(frame: Vec<u8>, writer: Arc<ConnWriter>, handle: &PoolHandle) {
+    let (id, method, params, blob) = match decode_msg(&frame) {
+        Ok(WireMsg::Request { id, method, params, blob }) => (id, method, params, blob),
+        // Malformed or non-request frame: close the connection, keep the
+        // server serving everyone else.
+        _ => {
+            writer.dead.store(true, Ordering::Relaxed);
+            return;
+        }
+    };
+    if let Some(engine) = &handle.chaos {
+        match engine.decide(&method) {
+            crate::chaos::FaultAction::Pass => {}
+            crate::chaos::FaultAction::Delay(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            // Close with no reply: from the caller's view this is exactly
+            // a crashed peer mid-call.
+            crate::chaos::FaultAction::Drop => {
+                writer.dead.store(true, Ordering::Relaxed);
+                return;
+            }
+            crate::chaos::FaultAction::Kill => {
+                handle.shutdown.store(true, Ordering::Relaxed);
+                writer.dead.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+    let result = {
+        let writer = writer.clone();
+        let mut emit = move |chunk: Json, chunk_blob: Option<Vec<u8>>| -> Result<(), WireError> {
+            writer.write_frame(&encode_msg(&WireMsg::Chunk { id, chunk, blob: chunk_blob }))
+        };
+        handle.service.call_stream(&method, &params, blob.as_deref(), &mut emit)
+    };
+    let response = match result {
+        Ok((body, out_blob)) => WireMsg::Response { id, ok: true, body, blob: out_blob },
+        Err(msg) => WireMsg::Response { id, ok: false, body: Json::str(msg), blob: None },
+    };
+    let _ = writer.write_frame(&encode_msg(&response));
+}

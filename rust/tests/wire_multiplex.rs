@@ -1,0 +1,220 @@
+//! Multiplexing correctness: many in-flight calls share one pooled
+//! connection, responses are routed back by request id — out-of-order
+//! completion is the normal case — and failures mid-multiplex (chaos
+//! delay, chaos kill, deadlines) surface as typed [`WireError`]s on every
+//! affected call, never as a hang or a crossed response.
+
+use mlmodelscope::chaos::{ChaosEngine, FaultPlan};
+use mlmodelscope::util::json::Json;
+use mlmodelscope::wire::{RpcClient, RpcServer, Service, WireError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// `echo` returns its params; `sleep` naps for `params.ms` first. Both
+/// echo a `tag` so a crossed response is detectable, not just slow.
+struct SleepyEcho;
+
+impl Service for SleepyEcho {
+    fn call(&self, method: &str, params: &Json) -> Result<Json, String> {
+        match method {
+            "echo" => Ok(params.clone()),
+            "sleep" => {
+                std::thread::sleep(Duration::from_millis(params.f64_or("ms", 100.0) as u64));
+                Ok(params.clone())
+            }
+            other => Err(format!("unknown method {other:?}")),
+        }
+    }
+}
+
+fn sleepy() -> Arc<dyn Service> {
+    Arc::new(SleepyEcho)
+}
+
+#[test]
+fn interleaved_threads_on_a_pooled_connection_get_their_own_responses() {
+    let server = RpcServer::serve("127.0.0.1:0", sleepy()).unwrap();
+    let client = Arc::new(RpcClient::connect_pooled(server.addr(), 2).unwrap());
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let client = client.clone();
+            std::thread::spawn(move || {
+                for i in 0..50 {
+                    let tag = (t * 1000 + i) as f64;
+                    let out = client
+                        .call("echo", Json::obj(vec![("tag", Json::num(tag))]))
+                        .unwrap();
+                    assert_eq!(out.f64_or("tag", -1.0), tag, "response routed to wrong caller");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+}
+
+#[test]
+fn a_slow_call_does_not_block_fast_calls_behind_it() {
+    let server = RpcServer::serve("127.0.0.1:0", sleepy()).unwrap();
+    let client = RpcClient::connect(server.addr()).unwrap();
+    // Occupy the connection with a slow call, unawaited.
+    let slow = client
+        .start_streamed(
+            "sleep",
+            Json::obj(vec![("ms", Json::num(800.0)), ("tag", Json::num(1.0))]),
+            None,
+        )
+        .unwrap();
+    // Fast calls issued after it, on the same connection, must complete
+    // while it is still in flight.
+    let t0 = std::time::Instant::now();
+    for i in 0..10 {
+        let out = client
+            .call("echo", Json::obj(vec![("tag", Json::num(i as f64))]))
+            .unwrap();
+        assert_eq!(out.f64_or("tag", -1.0), i as f64);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(800),
+        "fast calls serialized behind the slow one: {:?}",
+        t0.elapsed()
+    );
+    let (out, _) = slow.wait(|_, _| {}).unwrap();
+    assert_eq!(out.f64_or("tag", -1.0), 1.0);
+    server.stop();
+}
+
+#[test]
+fn out_of_order_completion_routes_by_id() {
+    let server = RpcServer::serve("127.0.0.1:0", sleepy()).unwrap();
+    let client = RpcClient::connect(server.addr()).unwrap();
+    // Issue slowest-first so completion order inverts issue order.
+    let pending: Vec<_> = (0..4)
+        .map(|i| {
+            let ms = 400.0 - 100.0 * i as f64;
+            client
+                .start_streamed(
+                    "sleep",
+                    Json::obj(vec![("ms", Json::num(ms)), ("tag", Json::num(i as f64))]),
+                    None,
+                )
+                .unwrap()
+        })
+        .collect();
+    // Await in issue order: every call still gets its own response.
+    for (i, p) in pending.into_iter().enumerate() {
+        let (out, _) = p.wait(|_, _| {}).unwrap();
+        assert_eq!(out.f64_or("tag", -1.0), i as f64, "id routing broke under reordering");
+    }
+    server.stop();
+}
+
+#[test]
+fn chaos_delay_mid_multiplex_deadlines_only_the_delayed_calls() {
+    // Delay every `sleep` request by 500 ms; `echo` is untouched.
+    let plan = FaultPlan::parse("delay:sleep:500", 0).unwrap();
+    let server =
+        RpcServer::serve_with_chaos("127.0.0.1:0", sleepy(), Some(ChaosEngine::new(plan)))
+            .unwrap();
+    let client = RpcClient::connect_pooled(server.addr(), 2).unwrap();
+    client.set_read_timeout(Some(Duration::from_millis(100)));
+    let delayed = client.start_streamed(
+        "sleep",
+        Json::obj(vec![("ms", Json::num(0.0)), ("tag", Json::num(9.0))]),
+        None,
+    );
+    // Interleaved fast traffic keeps working while the delayed call ages.
+    let mut echoes = 0;
+    for i in 0..6 {
+        if let Ok(out) = client.call("echo", Json::obj(vec![("tag", Json::num(i as f64))])) {
+            assert_eq!(out.f64_or("tag", -1.0), i as f64);
+            echoes += 1;
+        }
+    }
+    assert!(echoes > 0, "undelayed calls starved");
+    let err = delayed.unwrap().wait(|_, _| {}).unwrap_err();
+    assert!(matches!(err, WireError::Deadline(_)), "{err}");
+    server.stop();
+}
+
+#[test]
+fn chaos_kill_mid_multiplex_fails_every_in_flight_call_with_typed_errors() {
+    // Five echoes pass, the sixth kills the server process (here: flips
+    // its shutdown flag and closes every connection).
+    let plan = FaultPlan::parse("kill:echo:5", 0).unwrap();
+    let engine = ChaosEngine::new(plan);
+    let server =
+        RpcServer::serve_with_chaos("127.0.0.1:0", sleepy(), Some(engine.clone())).unwrap();
+    let client = RpcClient::connect(server.addr()).unwrap();
+    // Backstop so a routing bug cannot hang the test; the kill path itself
+    // must resolve every call long before this fires.
+    client.set_read_timeout(Some(Duration::from_secs(10)));
+    let pending: Vec<_> = (0..20)
+        .map(|i| {
+            client.start_streamed("echo", Json::obj(vec![("tag", Json::num(i as f64))]), None)
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for p in pending {
+        match p {
+            // Issued after the connection broke: typed error at issue time.
+            Err(e) => {
+                assert!(matches!(e, WireError::Protocol(_) | WireError::Io(_)), "{e}");
+                failed += 1;
+            }
+            Ok(p) => match p.wait(|_, _| {}) {
+                Ok((out, _)) => {
+                    assert!(out.get("tag").is_some());
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(
+                            e,
+                            WireError::Protocol(_) | WireError::Io(_) | WireError::Deadline(_)
+                        ),
+                        "{e}"
+                    );
+                    failed += 1;
+                }
+            },
+        }
+    }
+    assert!(engine.killed(), "the kill fault fired");
+    assert!(failed > 0, "the kill must strand at least one in-flight call");
+    assert_eq!(ok + failed, 20, "every call resolved — none hung");
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "calls resolved promptly, not via the backstop timeout"
+    );
+    server.stop();
+}
+
+#[test]
+fn client_deadline_fires_even_when_other_calls_are_in_flight() {
+    let server = RpcServer::serve("127.0.0.1:0", sleepy()).unwrap();
+    let client = RpcClient::connect(server.addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_millis(80)));
+    // Another call already multiplexed on the connection must not stop the
+    // deadline from firing (the old implementation armed SO_RCVTIMEO with
+    // `.ok()`, so a failed socket option made the deadline vacuous — the
+    // router-enforced deadline has no socket option to fail).
+    let bystander = client
+        .start_streamed("sleep", Json::obj(vec![("ms", Json::num(1000.0))]), None)
+        .unwrap();
+    let t0 = std::time::Instant::now();
+    let err = client
+        .call("sleep", Json::obj(vec![("ms", Json::num(2000.0))]))
+        .unwrap_err();
+    assert!(matches!(err, WireError::Deadline(_)), "{err}");
+    assert!(t0.elapsed() < Duration::from_millis(1500), "fired at the deadline, not at reply");
+    // A deadline poisons request/response pairing for the whole connection:
+    // the client is broken and the bystander call fails typed, not hung.
+    assert!(client.is_broken());
+    assert!(bystander.wait(|_, _| {}).is_err());
+    server.stop();
+}

@@ -116,6 +116,38 @@ fn response_id_mismatch_is_a_typed_protocol_error() {
 }
 
 #[test]
+fn oversize_frame_from_a_server_is_rejected_by_the_client_before_allocating() {
+    // The server-side cap has a twin on the client read path: a hostile or
+    // corrupted peer declaring a 4 GB response must be rejected from the
+    // length prefix alone — no allocation, no hang — and the connection is
+    // done (pairing can't be trusted mid-garbage).
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut len_buf = [0u8; 4];
+        conn.read_exact(&mut len_buf).unwrap();
+        let mut body = vec![0u8; u32::from_be_bytes(len_buf) as usize];
+        conn.read_exact(&mut body).unwrap();
+        // Declare an absurd frame length and keep the socket open.
+        conn.write_all(&[0xFF, 0xFF, 0xFF, 0xFF]).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+    });
+    let client = RpcClient::connect(addr).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = client.call("echo", Json::num(1.0)).unwrap_err();
+    assert!(
+        matches!(err, WireError::Protocol(ref m) if m.contains("frame too large")),
+        "{err}"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(5), "rejected from the header, promptly");
+    assert!(client.is_broken());
+    let err = client.call("echo", Json::num(2.0)).unwrap_err();
+    assert!(matches!(err, WireError::Protocol(ref m) if m.contains("broken")), "{err}");
+    server.join().unwrap();
+}
+
+#[test]
 fn chaos_delay_past_the_deadline_is_a_typed_deadline_error() {
     let plan = FaultPlan::parse("delay:echo:400", 0).unwrap();
     let server = RpcServer::serve_with_chaos(
