@@ -1,0 +1,130 @@
+//! `fig_regress` — the commit-over-commit regression gate, end to end.
+//!
+//! Self-asserted acceptance gates:
+//!
+//! 1. **A/A is quiet** — sweeping the same matrix under two labels through
+//!    real (simulated-agent) execution produces zero flagged cells: every
+//!    pairing is all-ties Mann-Whitney (p = 1), so an unchanged platform
+//!    can never fail its own CI.
+//! 2. **An injected 1.5× slowdown in exactly one cell is flagged** — and
+//!    only that cell: the gate's verdict set is {1 regression, rest ok}.
+//! 3. **Exact reproducibility** — both comparisons render byte-identical
+//!    reports when recomputed (fixed bootstrap seed, deterministic
+//!    pairing), and the trajectory change-point scan flags the injected
+//!    step while staying silent on the flat A/A history.
+
+use mlmodelscope::analysis::regression_section;
+use mlmodelscope::evaldb::{EvalQuery, RunMeta};
+use mlmodelscope::regress::{compare_labels, GateConfig, Trajectory, Verdict};
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::Server;
+use mlmodelscope::sweep::{run, Plan};
+use mlmodelscope::tracing::TraceLevel;
+
+fn plan_for(label: &str) -> Plan {
+    let mut plan = Plan::new(
+        vec!["BVLC_AlexNet".into(), "ResNet_v1_50".into()],
+        vec!["aws_p3".into()],
+    );
+    plan.scenarios = vec![Scenario::Online { count: 16 }];
+    plan.batch_sizes = vec![1, 8];
+    plan.parallelism = 2;
+    plan.seed = 42;
+    plan.run_meta = RunMeta::labeled(label);
+    plan
+}
+
+fn main() {
+    mlmodelscope::benchkit::bench_header(
+        "fig_regress",
+        "commit-over-commit regression gate — Mann-Whitney + bootstrap + change-points",
+    );
+    let server = Server::sim_platform(TraceLevel::None);
+    let cfg = GateConfig::default();
+
+    // ── part 1: A/A through real execution ──────────────────────────────
+    let base = run(&server, &plan_for("base"));
+    let aa = run(&server, &plan_for("aa"));
+    assert_eq!(base.executed, 4, "cold base sweep runs every cell: {:?}", base.failed);
+    assert_eq!(aa.executed, 4, "a new label is its own memoization line: {:?}", aa.failed);
+    let cmp_aa = compare_labels(&server.evaldb, "base", "aa", &cfg);
+    assert_eq!(cmp_aa.cells.len(), 4, "every cell pairs up");
+    assert!(cmp_aa.missing.is_empty(), "{:?}", cmp_aa.missing);
+    for cell in &cmp_aa.cells {
+        assert_eq!(
+            cell.verdict,
+            Verdict::NoChange,
+            "A/A flagged {}: p={} delta={}%",
+            cell.cell,
+            cell.p_value,
+            cell.delta_pct
+        );
+        assert_eq!(cell.p_value, 1.0, "identical runs are all ties: {}", cell.cell);
+        assert_eq!(cell.delta_pct, 0.0, "{}", cell.cell);
+    }
+    println!("{}", regression_section(&cmp_aa).expect("paired cells render"));
+    println!("acceptance: A/A run over {} cells flagged nothing\n", cmp_aa.cells.len());
+
+    // ── part 2: a 1.5× slowdown injected into exactly one cell ──────────
+    let injected = "BVLC_AlexNet@aws_p3/online/b1";
+    for r in server.evaldb.latest(&EvalQuery::label("base")) {
+        let mut slow = r.clone();
+        slow.run_meta = RunMeta::labeled("slow");
+        let name = format!(
+            "{}@{}/{}/b{}",
+            r.key.model, r.key.system, r.key.scenario, r.key.batch_size
+        );
+        if name == injected {
+            for l in &mut slow.latencies {
+                *l *= 1.5;
+            }
+        }
+        server.evaldb.put(slow);
+    }
+    let cmp_slow = compare_labels(&server.evaldb, "base", "slow", &cfg);
+    assert_eq!(cmp_slow.cells.len(), 4);
+    assert_eq!(cmp_slow.regressions(), 1, "exactly the injected cell regresses");
+    assert_eq!(cmp_slow.improvements(), 0);
+    let flagged = cmp_slow
+        .cells
+        .iter()
+        .find(|c| c.verdict == Verdict::Regression)
+        .expect("one regression");
+    assert_eq!(flagged.cell, injected);
+    assert!(flagged.p_value < cfg.alpha, "p = {}", flagged.p_value);
+    assert!(
+        (flagged.delta_pct - 50.0).abs() < 1.0,
+        "scale shift sizes at +50%: {}",
+        flagged.delta_pct
+    );
+    assert!(flagged.ci_lo_pct > 0.0, "CI excludes zero: {}", flagged.ci_lo_pct);
+    println!("{}", regression_section(&cmp_slow).expect("paired cells render"));
+    println!("acceptance: injected 1.5x slowdown flagged in {injected} and nowhere else\n");
+
+    // ── part 3: exact reproducibility + trajectory step detection ───────
+    let again_aa = regression_section(&compare_labels(&server.evaldb, "base", "aa", &cfg));
+    let again_slow = regression_section(&compare_labels(&server.evaldb, "base", "slow", &cfg));
+    assert_eq!(again_aa.as_deref(), regression_section(&cmp_aa).as_deref());
+    assert_eq!(again_slow.as_deref(), regression_section(&cmp_slow).as_deref());
+
+    let mut quiet = Trajectory::default();
+    let mut stepped = Trajectory::default();
+    let base_median = cmp_slow.cells.iter().find(|c| c.cell == injected).unwrap();
+    for i in 0..10 {
+        quiet.record(injected, &format!("c{i}"), base_median.control_median_ms);
+        stepped.record(injected, &format!("c{i}"), base_median.control_median_ms);
+    }
+    quiet.record(injected, "c10", base_median.control_median_ms);
+    stepped.record(injected, "c10", base_median.treatment_median_ms);
+    stepped.record(injected, "c11", base_median.treatment_median_ms);
+    assert!(quiet.recent_changepoints(3, &cfg).is_empty(), "flat history stays quiet");
+    let steps = stepped.recent_changepoints(3, &cfg);
+    assert_eq!(steps.len(), 1, "the landed step is caught: {steps:?}");
+    assert_eq!(steps[0].1, 10, "step located at the slow commit");
+    assert_eq!(steps[0].2, "c10");
+    println!(
+        "acceptance: change-point scan found the step at index {} and stayed quiet on A/A\n",
+        steps[0].1
+    );
+    println!("acceptance: reports reproduce byte-identically under the fixed seed");
+}

@@ -73,6 +73,9 @@ pub struct EvalRequest {
     pub input_mode: InputMode,
     /// Workload seed (reproducible evaluation, F1).
     pub seed: u64,
+    /// Run metadata stamped on the stored record; the label folds into the
+    /// spec digest so labeled runs form their own memoization line.
+    pub run_meta: crate::evaldb::RunMeta,
 }
 
 /// The result returned to the server (⑧).
@@ -311,7 +314,7 @@ impl Agent {
             .unwrap_or_else(|| "cpu".to_string());
         // Content address of the resolved spec (F1): identical configs
         // store identical digests, which is what sweep memoization keys on.
-        let spec = crate::evaldb::EvalSpec::for_request(
+        let mut spec = crate::evaldb::EvalSpec::for_request(
             &req.manifest,
             &self.config.system,
             &device,
@@ -321,6 +324,7 @@ impl Agent {
             req.seed,
             Json::Null,
         );
+        spec.run_label = req.run_meta.label.clone();
         let key = EvalKey {
             model: req.manifest.name.clone(),
             model_version: req.manifest.version.to_string(),
@@ -333,6 +337,7 @@ impl Agent {
         };
         let mut record = EvalRecord::new(key, latencies, throughput);
         record.spec_digest = Some(spec.digest());
+        record.run_meta = req.run_meta.clone();
         record.trace_id = Some(trace_id);
         record.meta = Json::obj(vec![
             (
@@ -1011,12 +1016,17 @@ fn agent_call(agent: &Arc<Agent>, method: &str, params: &Json) -> Result<Json, S
                             params.str_or("trace_level", "")
                         )
                     })?;
+                // Absent run_meta is a legacy/unlabeled dispatch; a present
+                // but malformed one is a protocol error, not "no label".
+                let run_meta = crate::evaldb::RunMeta::from_json(params.get("run_meta"))
+                    .ok_or("malformed run_meta")?;
                 let req = EvalRequest {
                     manifest,
                     scenario,
                     trace_level,
                     input_mode: InputMode::parse(params.str_or("input_mode", "c")),
                     seed: params.f64_or("seed", 42.0) as u64,
+                    run_meta,
                 };
                 let result = agent.evaluate(&req)?;
                 Ok(Json::obj(vec![
@@ -1077,6 +1087,7 @@ mod tests {
             trace_level: TraceLevel::Model,
             input_mode: InputMode::Direct,
             seed: 1,
+            run_meta: Default::default(),
         };
         let result = agent.evaluate(&req).unwrap();
         assert_eq!(result.record.latencies.len(), 12);
@@ -1097,6 +1108,7 @@ mod tests {
                 trace_level: TraceLevel::None,
                 input_mode: InputMode::Direct,
                 seed: 2,
+                run_meta: Default::default(),
             };
             agent.evaluate(&req).unwrap();
         }
@@ -1395,6 +1407,7 @@ mod tests {
             trace_level: TraceLevel::Model,
             input_mode: InputMode::Direct,
             seed: 3,
+            run_meta: Default::default(),
         };
         match agent.evaluate(&req) {
             Ok(result) => {

@@ -420,6 +420,41 @@ pub fn slo_frontier_table(models: &[String], db: &EvalDb) -> Table {
     t
 }
 
+/// Regression section: the per-cell delta report of a control-vs-treatment
+/// comparison ([`crate::regress::compare_labels`]) — median latencies, the
+/// relative shift with its bootstrap CI, the Mann-Whitney p-value, and the
+/// gate verdict — plus a one-line tally. `None` when no cell was measured
+/// under both labels (nothing to gate is not "no regressions").
+pub fn regression_section(cmp: &crate::regress::Comparison) -> Option<String> {
+    if cmp.cells.is_empty() {
+        return None;
+    }
+    let mut t = Table::new(
+        &format!("Regression gate — {} vs {}", cmp.treatment, cmp.control),
+        &["Cell", "Control (ms)", "Treatment (ms)", "Delta %", "95% CI", "p (MWU)", "Verdict"],
+    );
+    for c in &cmp.cells {
+        t.row(&[
+            c.cell.clone(),
+            format!("{:.3}", c.control_median_ms),
+            format!("{:.3}", c.treatment_median_ms),
+            format!("{:+.1}", c.delta_pct),
+            format!("[{:+.1}%, {:+.1}%]", c.ci_lo_pct, c.ci_hi_pct),
+            format!("{:.4}", c.p_value),
+            c.verdict.as_str().to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "{} cell(s) gated: {} regression(s), {} improvement(s), {} unchanged\n",
+        cmp.cells.len(),
+        cmp.regressions(),
+        cmp.improvements(),
+        cmp.cells.len() - cmp.regressions() - cmp.improvements(),
+    ));
+    Some(out)
+}
+
 /// Bottleneck section: aggregate the traces behind the models' stored
 /// records ([`crate::traceanalysis::profile`] across every record carrying
 /// a non-empty trace) and render self-time attribution + the automated
@@ -802,6 +837,39 @@ mod tests {
         assert!(text.contains("- / -"), "{text}");
         let rep = full_report(&["resnet50".into(), "mobilenet".into()], &db);
         assert!(rep.contains("Model × system matrix"), "{rep}");
+    }
+
+    #[test]
+    fn regression_section_renders_verdicts() {
+        use crate::regress::{compare_labels, GateConfig};
+        let db = seed_db();
+        let cfg = GateConfig::default();
+        // No labeled runs → nothing to gate → no section.
+        assert!(regression_section(&compare_labels(&db, "base", "cand", &cfg)).is_none());
+        let put_labeled = |label: &str, ms: f64| {
+            let key = EvalKey {
+                model: "resnet50".into(),
+                model_version: "1.0.0".into(),
+                framework: "TensorFlow".into(),
+                framework_version: "1.15.0".into(),
+                system: "aws_p3".into(),
+                device: "gpu".into(),
+                scenario: "online".into(),
+                batch_size: 1,
+            };
+            let mut r = EvalRecord::new(key, vec![ms / 1e3; 8], 100.0);
+            r.run_meta = crate::evaldb::RunMeta::labeled(label);
+            db.put(r);
+        };
+        put_labeled("base", 10.0);
+        put_labeled("cand", 15.0);
+        let section =
+            regression_section(&compare_labels(&db, "base", "cand", &cfg)).unwrap();
+        assert!(section.contains("Regression gate — cand vs base"), "{section}");
+        assert!(section.contains("resnet50@aws_p3/online/b1"), "{section}");
+        assert!(section.contains("+50.0"), "{section}");
+        assert!(section.contains("REGRESSION"), "{section}");
+        assert!(section.contains("1 regression(s), 0 improvement(s), 0 unchanged"), "{section}");
     }
 
     #[test]

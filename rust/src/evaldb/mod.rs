@@ -107,6 +107,63 @@ impl EvalKey {
     }
 }
 
+/// Run metadata: the longitudinal axis for commit-over-commit regression
+/// tracking. `label` names the run line being measured (a branch, a commit
+/// ref, or just "control"/"treatment"); `commit` and `timestamp` are
+/// free-form provenance carried alongside. Only the label participates in
+/// spec identity (see [`EvalSpec::run_label`]) — provenance fields never
+/// change what experiment a record belongs to.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RunMeta {
+    pub label: String,
+    pub commit: String,
+    pub timestamp: String,
+}
+
+impl RunMeta {
+    pub fn labeled(label: &str) -> RunMeta {
+        RunMeta { label: label.to_string(), ..Default::default() }
+    }
+
+    /// True when every field is empty — the legacy "no run metadata" state.
+    pub fn is_empty(&self) -> bool {
+        self.label.is_empty() && self.commit.is_empty() && self.timestamp.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("commit", Json::str(&self.commit)),
+            ("timestamp", Json::str(&self.timestamp)),
+        ])
+    }
+
+    /// Strict parse mirroring [`EvalKey::from_json`]: absent or `null`
+    /// means "no metadata" (legacy records), but a present `run_meta` must
+    /// be an object whose present fields are strings. A number where the
+    /// label should be, or a bare string, rejects the record rather than
+    /// silently erasing its run line — a record quietly dropped into the
+    /// unlabeled pool would corrupt every A/B comparison that touches it.
+    pub fn from_json(j: Option<&Json>) -> Option<RunMeta> {
+        let j = match j {
+            None | Some(Json::Null) => return Some(RunMeta::default()),
+            Some(j) => j,
+        };
+        let obj = j.as_obj()?;
+        let field = |name: &str| -> Option<String> {
+            match obj.get(name) {
+                None => Some(String::new()),
+                Some(v) => v.as_str().map(str::to_string),
+            }
+        };
+        Some(RunMeta {
+            label: field("label")?,
+            commit: field("commit")?,
+            timestamp: field("timestamp")?,
+        })
+    }
+}
+
 /// The fully-resolved evaluation specification: everything that determines
 /// a benchmark result. Two evaluations whose canonical spec JSON is equal
 /// are the same experiment *by construction* (the model-spec
@@ -134,6 +191,13 @@ pub struct EvalSpec {
     /// ([`crate::batcher::BatcherConfig::fingerprint_json`]) or `Null` for
     /// the classic per-request path.
     pub dispatch: Json,
+    /// Run label ([`RunMeta::label`]) — the longitudinal identity axis.
+    /// Folded into the canonical form *only when non-empty*, so every
+    /// pre-existing digest (and with it sweep memoization and crash-safe
+    /// resume over stores written before labels existed) is unchanged.
+    /// Two sweeps under different labels are different experiments; a
+    /// re-run under the same label memoizes.
+    pub run_label: String,
 }
 
 impl EvalSpec {
@@ -161,13 +225,14 @@ impl EvalSpec {
             trace_level: trace_level.as_str().to_string(),
             seed,
             dispatch,
+            run_label: String::new(),
         }
     }
 
     /// Canonical JSON form. Objects serialize with sorted keys, so any
     /// reordering of the input fields produces the identical string.
     pub fn canonical(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("batch_size", Json::num(self.batch_size as f64)),
             ("device", Json::str(&self.device)),
             ("dispatch", self.dispatch.clone()),
@@ -178,7 +243,14 @@ impl EvalSpec {
             ("seed", Json::str(self.seed.to_string())),
             ("system", Json::str(&self.system)),
             ("trace_level", Json::str(&self.trace_level)),
-        ])
+        ];
+        // Only labeled runs carry the field: unlabeled specs canonicalize
+        // exactly as they did before run metadata existed, so historical
+        // digests stay valid.
+        if !self.run_label.is_empty() {
+            fields.push(("run_label", Json::str(&self.run_label)));
+        }
+        Json::obj(fields)
     }
 
     /// Content-addressed digest: SHA-256 hex of the canonical JSON.
@@ -202,6 +274,9 @@ pub struct EvalRecord {
     /// Content-addressed [`EvalSpec`] digest of the resolved configuration
     /// that produced this record (`None` for legacy or hand-built records).
     pub spec_digest: Option<String>,
+    /// Run metadata (label/commit/timestamp) — empty for legacy records
+    /// and unlabeled runs. See [`RunMeta`].
+    pub run_meta: RunMeta,
     /// Free-form metadata (accuracy, graph size, agent id, ...).
     pub meta: Json,
 }
@@ -215,6 +290,7 @@ impl EvalRecord {
             throughput,
             trace_id: None,
             spec_digest: None,
+            run_meta: RunMeta::default(),
             meta: Json::Null,
         }
     }
@@ -232,7 +308,7 @@ impl EvalRecord {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("key", self.key.to_json()),
             ("seq", Json::num(self.seq as f64)),
             (
@@ -249,25 +325,60 @@ impl EvalRecord {
                 self.spec_digest.clone().map(Json::Str).unwrap_or(Json::Null),
             ),
             ("meta", self.meta.clone()),
-        ])
+        ];
+        // Empty run metadata is omitted entirely, so pre-label stores and
+        // fixtures serialize byte-identically to before.
+        if !self.run_meta.is_empty() {
+            fields.push(("run_meta", self.run_meta.to_json()));
+        }
+        Json::obj(fields)
     }
 
+    /// Strict parse: a present field with the wrong type rejects the whole
+    /// record instead of being silently defaulted. Missing `seq` /
+    /// `throughput` / `trace_id` / `spec_digest` / `run_meta` keep their
+    /// legacy defaults (old stores must replay), but a malformed latency
+    /// entry, a string `seq`, or a numeric `run_meta.label` means the line
+    /// is corrupt — and a half-parsed record would silently skew every
+    /// statistical gate computed over its samples.
     pub fn from_json(j: &Json) -> Option<EvalRecord> {
+        let seq = match j.get("seq") {
+            None => 0,
+            Some(v) => {
+                let f = v.as_f64()?;
+                if !(f >= 0.0) || f.fract() != 0.0 {
+                    return None;
+                }
+                f as u64
+            }
+        };
+        let mut latencies = Vec::new();
+        for v in j.get("latencies")?.as_arr()? {
+            // Every sample must be numeric: dropping bad entries (the old
+            // behavior) changes sample counts and with them gate verdicts.
+            latencies.push(v.as_f64()?);
+        }
+        let throughput = match j.get("throughput") {
+            // NaN serializes as JSON null, so null round-trips back to NaN.
+            None | Some(Json::Null) => f64::NAN,
+            Some(v) => v.as_f64()?,
+        };
+        let trace_id = match j.get("trace_id") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_u64()?),
+        };
+        let spec_digest = match j.get("spec_digest") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_str()?.to_string()),
+        };
         Some(EvalRecord {
             key: EvalKey::from_json(j.get("key")?)?,
-            seq: j.f64_or("seq", 0.0) as u64,
-            latencies: j
-                .get("latencies")?
-                .as_arr()?
-                .iter()
-                .filter_map(|v| v.as_f64())
-                .collect(),
-            throughput: j.f64_or("throughput", f64::NAN),
-            trace_id: j.get("trace_id").and_then(|v| v.as_u64()),
-            spec_digest: j
-                .get("spec_digest")
-                .and_then(|v| v.as_str())
-                .map(str::to_string),
+            seq,
+            latencies,
+            throughput,
+            trace_id,
+            spec_digest,
+            run_meta: RunMeta::from_json(j.get("run_meta"))?,
             meta: j.get("meta").cloned().unwrap_or(Json::Null),
         })
     }
@@ -282,6 +393,9 @@ pub struct EvalQuery {
     pub device: Option<String>,
     pub scenario: Option<String>,
     pub batch_size: Option<usize>,
+    /// Match records whose [`RunMeta::label`] equals this (an empty string
+    /// selects unlabeled/legacy records).
+    pub label: Option<String>,
 }
 
 impl EvalQuery {
@@ -289,13 +403,20 @@ impl EvalQuery {
         EvalQuery { model: Some(name.to_string()), ..Default::default() }
     }
 
-    fn matches(&self, k: &EvalKey) -> bool {
+    /// All records from one labeled run line.
+    pub fn label(label: &str) -> EvalQuery {
+        EvalQuery { label: Some(label.to_string()), ..Default::default() }
+    }
+
+    fn matches(&self, r: &EvalRecord) -> bool {
+        let k = &r.key;
         self.model.as_deref().map_or(true, |m| m == k.model)
             && self.framework.as_deref().map_or(true, |f| f == k.framework)
             && self.system.as_deref().map_or(true, |s| s == k.system)
             && self.device.as_deref().map_or(true, |d| d == k.device)
             && self.scenario.as_deref().map_or(true, |s| s == k.scenario)
             && self.batch_size.map_or(true, |b| b == k.batch_size)
+            && self.label.as_deref().map_or(true, |l| l == r.run_meta.label)
     }
 }
 
@@ -525,7 +646,7 @@ impl EvalDb {
         let mut out = Vec::new();
         for shard in &self.shards {
             let shard = shard.lock().unwrap();
-            out.extend(shard.records.iter().filter(|r| q.matches(&r.key)).cloned());
+            out.extend(shard.records.iter().filter(|r| q.matches(r)).cloned());
         }
         out.sort_by_key(|r| r.seq);
         out
@@ -771,6 +892,7 @@ mod tests {
             trace_level: "none".into(),
             seed: 42,
             dispatch: Json::Null,
+            run_label: String::new(),
         };
         assert_eq!(spec.digest(), spec.clone().digest(), "deterministic");
         let mut other = spec.clone();
@@ -779,6 +901,16 @@ mod tests {
         let mut other = spec.clone();
         other.trace_level = "full".into();
         assert_ne!(spec.digest(), other.digest(), "trace level is part of the spec");
+        // An empty run label is *not* part of the canonical form — digests
+        // computed before run metadata existed stay valid — but a non-empty
+        // label is a different experiment.
+        assert!(!spec.canonical().to_string().contains("run_label"));
+        let mut labeled = spec.clone();
+        labeled.run_label = "v2".into();
+        assert_ne!(spec.digest(), labeled.digest(), "label is part of the spec");
+        let mut other_label = spec.clone();
+        other_label.run_label = "v3".into();
+        assert_ne!(labeled.digest(), other_label.digest());
     }
 
     #[test]
@@ -819,6 +951,141 @@ mod tests {
         // Compacting an already-compact db is a no-op.
         let again = db.compact().unwrap();
         assert_eq!(again, CompactionStats { scanned: 2, retained: 2, dropped: 0 });
+    }
+
+    #[test]
+    fn run_meta_roundtrips_exactly_and_legacy_parses_empty() {
+        let mut r = EvalRecord::new(key("m", "s", 1), vec![0.004, 0.005], 500.0);
+        r.run_meta = RunMeta {
+            label: "treatment".into(),
+            commit: "abc123".into(),
+            timestamp: "2026-08-08T00:00:00Z".into(),
+        };
+        let j = r.to_json();
+        let back = EvalRecord::from_json(&j).unwrap();
+        assert_eq!(back.run_meta, r.run_meta, "metadata-bearing record round-trips");
+        // And the serialized forms are byte-identical (exact round-trip).
+        assert_eq!(back.to_json().to_string(), j.to_string());
+
+        // Legacy records (no run_meta field at all) parse with empty
+        // metadata, and empty metadata is omitted on write — so a legacy
+        // line replays byte-identically too.
+        let legacy = EvalRecord::new(key("m", "s", 1), vec![0.004], 1.0);
+        assert!(!legacy.to_json().to_string().contains("run_meta"));
+        let back = EvalRecord::from_json(&legacy.to_json()).unwrap();
+        assert!(back.run_meta.is_empty());
+
+        // Explicit null is treated as absent.
+        if let Json::Obj(mut m) = legacy.to_json() {
+            m.insert("run_meta".into(), Json::Null);
+            let back = EvalRecord::from_json(&Json::Obj(m)).unwrap();
+            assert!(back.run_meta.is_empty());
+        }
+    }
+
+    #[test]
+    fn malformed_run_meta_shapes_reject_the_record() {
+        let base = EvalRecord::new(key("m", "s", 1), vec![0.01], 100.0);
+        let with_run_meta = |v: Json| -> Option<EvalRecord> {
+            if let Json::Obj(mut m) = base.to_json() {
+                m.insert("run_meta".into(), v);
+                EvalRecord::from_json(&Json::Obj(m))
+            } else {
+                unreachable!()
+            }
+        };
+        // Control: a proper object parses.
+        let ok = with_run_meta(Json::obj(vec![("label", Json::str("v1"))])).unwrap();
+        assert_eq!(ok.run_meta.label, "v1");
+        assert_eq!(ok.run_meta.commit, "");
+        // A bare string, number, or array is not a RunMeta.
+        assert!(with_run_meta(Json::str("v1")).is_none(), "string run_meta");
+        assert!(with_run_meta(Json::num(7.0)).is_none(), "numeric run_meta");
+        assert!(with_run_meta(Json::arr(vec![])).is_none(), "array run_meta");
+        // Present fields with wrong types reject.
+        assert!(
+            with_run_meta(Json::obj(vec![("label", Json::num(3.0))])).is_none(),
+            "numeric label"
+        );
+        assert!(
+            with_run_meta(Json::obj(vec![
+                ("label", Json::str("v1")),
+                ("commit", Json::Bool(true)),
+            ]))
+            .is_none(),
+            "bool commit"
+        );
+        assert!(
+            with_run_meta(Json::obj(vec![
+                ("label", Json::str("v1")),
+                ("timestamp", Json::Null),
+            ]))
+            .is_none(),
+            "null timestamp"
+        );
+    }
+
+    #[test]
+    fn strict_record_parse_rejects_malformed_fields() {
+        let base = EvalRecord::new(key("m", "s", 1), vec![0.01, 0.02], 100.0);
+        let mutate = |f: &str, v: Json| -> Option<EvalRecord> {
+            if let Json::Obj(mut m) = base.to_json() {
+                m.insert(f.into(), v);
+                EvalRecord::from_json(&Json::Obj(m))
+            } else {
+                unreachable!()
+            }
+        };
+        assert!(EvalRecord::from_json(&base.to_json()).is_some(), "control parses");
+        // A non-numeric latency entry used to be silently dropped, which
+        // changed the sample count; now it rejects the record.
+        assert!(
+            mutate("latencies", Json::arr(vec![Json::num(0.01), Json::str("x")])).is_none(),
+            "string latency entry"
+        );
+        assert!(mutate("latencies", Json::str("fast")).is_none(), "non-array latencies");
+        assert!(mutate("seq", Json::str("9")).is_none(), "string seq");
+        assert!(mutate("seq", Json::num(-1.0)).is_none(), "negative seq");
+        assert!(mutate("seq", Json::num(1.5)).is_none(), "fractional seq");
+        assert!(mutate("throughput", Json::str("slow")).is_none(), "string throughput");
+        assert!(mutate("trace_id", Json::str("7")).is_none(), "string trace_id");
+        assert!(mutate("trace_id", Json::num(-7.0)).is_none(), "negative trace_id");
+        assert!(mutate("spec_digest", Json::num(1.0)).is_none(), "numeric spec_digest");
+        // Missing optionals keep their legacy defaults.
+        if let Json::Obj(mut m) = base.to_json() {
+            m.remove("seq");
+            m.remove("throughput");
+            m.remove("trace_id");
+            m.remove("spec_digest");
+            let r = EvalRecord::from_json(&Json::Obj(m)).unwrap();
+            assert_eq!(r.seq, 0);
+            assert!(r.throughput.is_nan());
+            assert_eq!(r.trace_id, None);
+            assert_eq!(r.spec_digest, None);
+        }
+    }
+
+    #[test]
+    fn label_query_filters_run_lines() {
+        let db = EvalDb::in_memory();
+        let mut a = EvalRecord::new(key("m", "s", 1), vec![0.010], 100.0);
+        a.run_meta = RunMeta::labeled("control");
+        let mut b = EvalRecord::new(key("m", "s", 1), vec![0.015], 66.0);
+        b.run_meta = RunMeta::labeled("treatment");
+        let c = EvalRecord::new(key("m", "s", 1), vec![0.012], 83.0);
+        db.put(a);
+        db.put(b);
+        db.put(c);
+        assert_eq!(db.query(&EvalQuery::label("control")).len(), 1);
+        assert_eq!(db.query(&EvalQuery::label("treatment")).len(), 1);
+        // Empty label selects exactly the unlabeled record.
+        assert_eq!(db.query(&EvalQuery::label("")).len(), 1);
+        // No label filter sees everything.
+        assert_eq!(db.query(&EvalQuery::model("m")).len(), 3);
+        // Compound: label + model.
+        let q = EvalQuery { label: Some("control".into()), ..EvalQuery::model("m") };
+        assert_eq!(db.query(&q).len(), 1);
+        assert_eq!(db.query(&q)[0].throughput, 100.0);
     }
 
     #[test]

@@ -28,8 +28,11 @@
 //!   aggregation, and an automated bottleneck verdict;
 //! - **analysis**: the evaluation database ([`evaldb`]) — sharded segment
 //!   logs with content-addressed spec digests — the reproducible
-//!   model×system sweep engine with digest memoization ([`sweep`]), and
-//!   the automated analysis + reporting workflow ([`analysis`]);
+//!   model×system sweep engine with digest memoization ([`sweep`]), the
+//!   commit-over-commit regression gate — Mann-Whitney + bootstrap deltas
+//!   over labeled run lines, with trajectory change-point detection
+//!   ([`regress`]) — and the automated analysis + reporting workflow
+//!   ([`analysis`]);
 //! - **models**: the 37-model zoo of the paper's Table 2 ([`zoo`]) — five
 //!   families also exist as *real* JAX/Pallas models AOT-compiled to HLO and
 //!   executed through the PJRT runtime ([`runtime`]);
@@ -71,6 +74,7 @@ pub mod traceserver;
 
 pub mod analysis;
 pub mod evaldb;
+pub mod regress;
 pub mod sweep;
 
 pub mod predictor;

@@ -12,6 +12,8 @@
 //! - `trace`   — render a trace timeline
 //! - `slo-search` — latency-bounded throughput search (the SLO frontier)
 //! - `sweep`   — memoized, resumable model×system sweep across the fleet
+//! - `regress` — commit-over-commit regression gate: labeled sweeps +
+//!   Mann-Whitney/bootstrap deltas + trajectory change-point detection
 //!
 //! `eval` is the "push-button" path: it assembles server + agents in one
 //! process, evaluates, and prints the analysis — the CLI equivalent of the
@@ -47,6 +49,10 @@ const COMMANDS: &[Command] = &[
     },
     Command { name: "slo-search", about: "max sustainable QPS under a latency SLO" },
     Command { name: "sweep", about: "memoized model×system sweep across the fleet" },
+    Command {
+        name: "regress",
+        about: "commit-over-commit regression gate (Mann-Whitney + bootstrap CI)",
+    },
     Command { name: "client", about: "talk to a running mlms server over REST" },
 ];
 
@@ -71,6 +77,7 @@ fn main() {
         "trace-analyze" => cmd_trace_analyze(&args),
         "slo-search" => cmd_slo_search(&args),
         "sweep" => cmd_sweep(&args),
+        "regress" => cmd_regress(&args),
         "client" => cmd_client(&args),
         _ => {
             eprint!("{}", usage("mlms", "a scalable DL benchmarking platform", COMMANDS));
@@ -821,6 +828,127 @@ fn cmd_sweep(args: &Args) -> i32 {
         0
     } else {
         1
+    }
+}
+
+/// `mlms regress --control <label> --treatment <label>` — the
+/// commit-over-commit regression gate: sweep the model×system matrix under
+/// both run labels (each label is its own memoization line, so re-gating a
+/// commit that was already measured re-executes nothing), then judge every
+/// paired cell with the Mann-Whitney + bootstrap gate and exit non-zero if
+/// any cell regresses.
+///
+/// ```sh
+/// mlms regress --control v1.4.0 --treatment HEAD \
+///     --models ResNet_v1_50,VGG16 --systems aws_p3 --batches 1,8 \
+///     --evaldb regress_db --alpha 0.01 --min-effect 0.05 \
+///     --trajectory bench_history.json
+/// ```
+///
+/// `--trajectory <file>` additionally appends each cell's treatment median
+/// to a stored `BENCH_*.json`-style history and fails on a step change
+/// landing within the last `--cp-window` points — the slow-regression
+/// backstop the pairwise gate cannot see.
+fn cmd_regress(args: &Args) -> i32 {
+    use mlmodelscope::evaldb::RunMeta;
+    use mlmodelscope::regress::{compare_labels, GateConfig, Trajectory, Verdict};
+    use mlmodelscope::sweep::run;
+    let (control, treatment) = match (args.require("control"), args.require("treatment")) {
+        (Ok(c), Ok(t)) => (c.to_string(), t.to_string()),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if control == treatment {
+        eprintln!("--control and --treatment must name different run lines");
+        return 2;
+    }
+    let raw_level = args.opt_or("trace-level", "none");
+    let level = match TraceLevel::parse(raw_level) {
+        Some(l) => l,
+        None => {
+            eprintln!("invalid --trace-level {raw_level:?} (none|model|framework|system|full)");
+            return 2;
+        }
+    };
+    let evaldb = match args.opt("evaldb") {
+        Some(p) => match mlmodelscope::evaldb::EvalDb::open(p) {
+            Ok(db) => Some(Arc::new(db)),
+            Err(e) => {
+                eprintln!("open {p}: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+    let mut plan = match build_sweep_plan(args, level) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let server = build_platform_with_db(args, level, evaldb);
+    // Measure both run lines. A label already in the store memoizes whole.
+    for label in [&control, &treatment] {
+        plan.run_meta = RunMeta::labeled(label);
+        let outcome = run(&server, &plan);
+        println!("{label}: {}", outcome.summary());
+        for (cell, err) in &outcome.failed {
+            eprintln!("  failed {}: {err}", cell.label());
+        }
+        if !outcome.failed.is_empty() {
+            return 1;
+        }
+    }
+    let cfg = GateConfig {
+        alpha: args.f64_or("alpha", 0.01),
+        min_effect: args.f64_or("min-effect", 0.05),
+        bootstrap_resamples: args.usize_or("resamples", 400).max(1),
+        bootstrap_seed: args.u64_or("bootstrap-seed", 42),
+        cp_penalty: args.f64_or("cp-penalty", 8.0),
+        ..GateConfig::default()
+    };
+    let cmp = compare_labels(&server.evaldb, &control, &treatment, &cfg);
+    match mlmodelscope::analysis::regression_section(&cmp) {
+        Some(section) => println!("{section}"),
+        None => println!("no cell measured under both {control:?} and {treatment:?}"),
+    }
+    for m in &cmp.missing {
+        eprintln!("  unpaired: {m}");
+    }
+    // Extend the stored trajectory and gate on recently-landed steps.
+    let mut step_changes = 0;
+    if let Some(path) = args.opt("trajectory") {
+        let mut traj = match Trajectory::load(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("load {path}: {e}");
+                return 1;
+            }
+        };
+        for cell in &cmp.cells {
+            traj.record(&cell.cell, &treatment, cell.treatment_median_ms);
+        }
+        if let Err(e) = traj.save(path) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        for (cell, idx, label) in
+            traj.recent_changepoints(args.usize_or("cp-window", 3), &cfg)
+        {
+            eprintln!("step change in {cell} at {label} (trajectory index {idx})");
+            step_changes += 1;
+        }
+    }
+    let regressions = cmp.cells.iter().filter(|c| c.verdict == Verdict::Regression).count();
+    if regressions > 0 || step_changes > 0 {
+        eprintln!("regression gate FAILED: {regressions} regression(s), {step_changes} step change(s)");
+        1
+    } else {
+        println!("regression gate passed: {} cell(s) clean", cmp.cells.len());
+        0
     }
 }
 

@@ -107,6 +107,26 @@ pub fn trimmed_mean(samples: &[f64], frac: f64) -> f64 {
     kept.iter().sum::<f64>() / kept.len() as f64
 }
 
+/// True sample median: midpoint of the two central order statistics for
+/// even counts (unlike the nearest-rank [`percentile`]`(50)`, which snaps
+/// to one of them). The regression gate ([`crate::regress`]) compares and
+/// tracks *medians* — robust to tail outliers, sensitive to the typical
+/// request — so the exact definition lives here beside the other shared
+/// metric primitives. Empty input returns `NaN`, matching [`percentile`].
+pub fn median(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+    }
+}
+
 /// Nearest-rank percentile over unsorted samples; `q` in `[0, 100]`.
 ///
 /// Edge cases (pinned by tests): an **empty** input returns `NaN` — there
@@ -423,6 +443,18 @@ mod tests {
         assert_eq!(trimmed_mean(&[5.0], 0.2), 5.0);
         assert_eq!(trimmed_mean(&[1.0, 3.0], 0.2), 2.0);
         assert!(trimmed_mean(&[], 0.2).is_nan());
+    }
+
+    #[test]
+    fn median_interpolates_even_counts() {
+        assert!(median(&[]).is_nan());
+        assert_eq!(median(&[7.0]), 7.0);
+        assert_eq!(median(&[3.0, 1.0]), 2.0);
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+        // Even count: midpoint of the two central values, unordered input.
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        // Robust to a tail outlier where the mean is not.
+        assert_eq!(median(&[1.0, 2.0, 3.0, 4.0, 1000.0]), 3.0);
     }
 
     #[test]

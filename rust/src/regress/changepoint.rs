@@ -1,0 +1,168 @@
+//! Offline change-point detection over a benchmark trajectory — the
+//! "did this metric *step* at some commit?" half of the regression gate.
+//!
+//! The detector is penalized optimal partitioning (the exact objective
+//! PELT optimizes): choose segment boundaries minimizing
+//! `Σ SSE(segment) + β·(#segments)`, solved by an O(n²) dynamic program —
+//! trajectories are one point per commit, so n stays tiny and exactness
+//! beats the pruned variant's bookkeeping. The penalty is BIC-style,
+//! `β = factor · σ̂² · ln n`, with the noise level σ̂ estimated robustly
+//! from first differences (`median|Δ| / 0.9539`, the Gaussian consistency
+//! constant for consecutive-difference MADs) so a noisy-but-flat history
+//! stays quiet while a genuine step — which dwarfs σ̂² — always pays for
+//! its boundary.
+
+use crate::metrics::median;
+
+/// Robust noise scale of a series, from the median absolute first
+/// difference. For iid Gaussian noise `median|xᵢ₊₁−xᵢ| ≈ 0.9539σ`, so
+/// dividing by that constant recovers σ. Noiseless series would estimate
+/// exactly zero — and a zero penalty would split everywhere — so the
+/// estimate is floored at a small fraction of the signal scale.
+pub fn noise_sigma(series: &[f64]) -> f64 {
+    if series.len() < 2 {
+        return 0.0;
+    }
+    let diffs: Vec<f64> = series.windows(2).map(|w| (w[1] - w[0]).abs()).collect();
+    let sigma = median(&diffs) / 0.9539;
+    let scale = series.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-12);
+    sigma.max(1e-3 * scale)
+}
+
+/// Detect change-points in `series`: returns the start indices (ascending,
+/// all ≥ `min_segment`) of every segment after the first.
+///
+/// `penalty_factor` scales the BIC penalty `factor·σ̂²·ln n` — the gate's
+/// default (8.0, see [`super::GateConfig`]) is deliberately conservative:
+/// a CI gate pays more for a false alarm than for a one-commit detection
+/// delay, and real step changes exceed the penalty by orders of magnitude.
+/// Series shorter than `2·min_segment` cannot contain a boundary and
+/// return no change-points.
+pub fn detect(series: &[f64], penalty_factor: f64, min_segment: usize) -> Vec<usize> {
+    let n = series.len();
+    let min_seg = min_segment.max(1);
+    if n < 2 * min_seg {
+        return Vec::new();
+    }
+    // Prefix sums give O(1) segment SSE.
+    let mut s = vec![0.0; n + 1];
+    let mut s2 = vec![0.0; n + 1];
+    for (i, &v) in series.iter().enumerate() {
+        s[i + 1] = s[i] + v;
+        s2[i + 1] = s2[i] + v * v;
+    }
+    let cost = |i: usize, j: usize| -> f64 {
+        let len = (j - i) as f64;
+        let sum = s[j] - s[i];
+        (s2[j] - s2[i] - sum * sum / len).max(0.0)
+    };
+    let sigma = noise_sigma(series);
+    let penalty = penalty_factor * sigma * sigma * (n as f64).ln();
+    // f[j] = minimal penalized cost of series[0..j]; back[j] = the last
+    // boundary. f[0] = −β so the first segment's +β cancels.
+    let mut f = vec![f64::INFINITY; n + 1];
+    let mut back = vec![0usize; n + 1];
+    f[0] = -penalty;
+    for j in min_seg..=n {
+        for t in 0..=(j - min_seg) {
+            if t != 0 && t < min_seg {
+                continue; // first segment would be too short
+            }
+            if !f[t].is_finite() {
+                continue;
+            }
+            let c = f[t] + cost(t, j) + penalty;
+            if c < f[j] {
+                f[j] = c;
+                back[j] = t;
+            }
+        }
+    }
+    let mut cps = Vec::new();
+    let mut j = n;
+    while j > 0 {
+        let t = back[j];
+        if t > 0 {
+            cps.push(t);
+        }
+        j = t;
+    }
+    cps.reverse();
+    cps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_tiny_series_have_no_changepoints() {
+        assert!(detect(&[], 8.0, 2).is_empty());
+        assert!(detect(&[10.0], 8.0, 2).is_empty());
+        assert!(detect(&[10.0, 20.0], 8.0, 2).is_empty(), "n < 2·min_segment");
+        assert!(detect(&[10.0, 20.0, 30.0], 8.0, 2).is_empty());
+    }
+
+    #[test]
+    fn flat_series_is_quiet() {
+        assert!(detect(&[10.0; 24], 8.0, 2).is_empty());
+    }
+
+    #[test]
+    fn noiseless_step_found_exactly() {
+        let mut series = vec![10.0; 6];
+        series.extend(vec![15.0; 6]);
+        assert_eq!(detect(&series, 8.0, 2), vec![6]);
+    }
+
+    #[test]
+    fn noisy_step_found_exactly() {
+        // ±0.1 alternating jitter around each level; the 50% step at index
+        // 12 towers over σ̂ ≈ 0.21.
+        let series: Vec<f64> = (0..24)
+            .map(|i| {
+                let level = if i < 12 { 10.0 } else { 15.0 };
+                level + if i % 2 == 0 { 0.1 } else { -0.1 }
+            })
+            .collect();
+        assert_eq!(detect(&series, 8.0, 2), vec![12]);
+    }
+
+    #[test]
+    fn noisy_flat_series_is_quiet() {
+        // Deterministic worst case: the total SSE of a ±0.1 alternating
+        // series (24·0.01 = 0.24) is below one penalty
+        // (8·(0.2/0.9539)²·ln 24 ≈ 1.1), so no split can ever pay.
+        let series: Vec<f64> =
+            (0..24).map(|i| 10.0 + if i % 2 == 0 { 0.1 } else { -0.1 }).collect();
+        assert!(detect(&series, 8.0, 2).is_empty());
+        // And a seeded-jitter variant, well inside the penalty margin.
+        let mut rng = crate::util::rng::Xorshift::new(11);
+        let jittered: Vec<f64> = (0..40).map(|_| 10.0 + (rng.f64() - 0.5) * 0.1).collect();
+        assert!(detect(&jittered, 8.0, 2).is_empty());
+    }
+
+    #[test]
+    fn ramp_splits_into_few_segments() {
+        // A strong linear drift is a real change: the piecewise-constant
+        // fit pays for a handful of boundaries, not one per point.
+        let series: Vec<f64> = (0..24).map(|i| 10.0 + 0.5 * i as f64).collect();
+        let cps = detect(&series, 8.0, 2);
+        assert!(!cps.is_empty(), "a 120% drift must register");
+        assert!(cps.len() <= 6, "penalty bounds fragmentation: {cps:?}");
+        for w in cps.windows(2) {
+            assert!(w[1] > w[0], "ascending: {cps:?}");
+        }
+        assert!(cps.iter().all(|&c| c >= 2 && c <= 22), "min-segment respected: {cps:?}");
+    }
+
+    #[test]
+    fn detection_is_deterministic() {
+        let series: Vec<f64> = (0..30)
+            .map(|i| if i < 17 { 4.0 } else { 9.0 } + (i % 3) as f64 * 0.01)
+            .collect();
+        let a = detect(&series, 8.0, 2);
+        assert_eq!(a, detect(&series, 8.0, 2));
+        assert_eq!(a, vec![17]);
+    }
+}

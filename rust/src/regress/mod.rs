@@ -1,0 +1,482 @@
+//! Commit-over-commit regression detection — the platform's CI gate.
+//!
+//! The paper's platform exists to make benchmark results *comparable*
+//! across time: the same model×system matrix is measured at every commit
+//! and the question "did this change make anything slower?" must be
+//! answered mechanically. This module is that answer, built on the
+//! labeled-run substrate in [`crate::evaldb`] and [`crate::sweep`]:
+//!
+//! 1. `mlms regress --control <label> --treatment <label>` sweeps the
+//!    matrix under both labels (each label is its own memoization line —
+//!    re-gating a commit re-executes nothing);
+//! 2. every cell measured under both labels is judged by a statistical
+//!    gate ([`judge`]) — a tie-corrected Mann-Whitney U test on the raw
+//!    latency samples plus a seeded bootstrap confidence interval on the
+//!    relative median shift ([`stats`]) — **not** a bare comparison of
+//!    means, which one garbage-collection pause would flip;
+//! 3. a stored trajectory of per-cell medians ([`Trajectory`]) is
+//!    extended and scanned for step changes by penalized optimal
+//!    partitioning ([`changepoint`]), so a slow regression that no single
+//!    commit-pair flags still fails CI at the commit where it lands.
+//!
+//! A cell is a [`Verdict::Regression`] only when all three hold: the
+//! Mann-Whitney p-value clears `alpha`, the median shift exceeds
+//! `min_effect`, and the bootstrap CI excludes zero. Improvements are the
+//! symmetric case. Everything is seeded and deterministic: the same two
+//! run lines produce byte-identical reports forever.
+
+pub mod changepoint;
+pub mod stats;
+
+use crate::evaldb::{EvalDb, EvalKey, EvalQuery, EvalRecord};
+use crate::metrics::median;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Thresholds and seeds for the statistical gate.
+#[derive(Debug, Clone)]
+pub struct GateConfig {
+    /// Two-sided significance level for the Mann-Whitney test.
+    pub alpha: f64,
+    /// Minimum relative median shift (fraction, 0.05 = 5%) worth flagging.
+    pub min_effect: f64,
+    /// Bootstrap resamples behind the confidence interval.
+    pub bootstrap_resamples: usize,
+    /// PRNG seed for the bootstrap — fixed seed ⇒ reproducible interval.
+    pub bootstrap_seed: u64,
+    /// Penalty factor for trajectory change-point detection.
+    pub cp_penalty: f64,
+    /// Minimum trajectory segment length between change-points.
+    pub cp_min_segment: usize,
+}
+
+impl Default for GateConfig {
+    fn default() -> GateConfig {
+        GateConfig {
+            alpha: 0.01,
+            min_effect: 0.05,
+            bootstrap_resamples: 400,
+            bootstrap_seed: 42,
+            cp_penalty: 8.0,
+            cp_min_segment: 2,
+        }
+    }
+}
+
+/// Gate outcome for one cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Regression,
+    Improvement,
+    NoChange,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Regression => "REGRESSION",
+            Verdict::Improvement => "IMPROVEMENT",
+            Verdict::NoChange => "ok",
+        }
+    }
+}
+
+/// The full statistical judgement of one treatment/control sample pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Judgement {
+    /// Mann-Whitney U of the treatment sample.
+    pub u: f64,
+    /// Two-sided Mann-Whitney p-value.
+    pub p: f64,
+    /// Relative median shift (fraction; +0.5 = 50% slower).
+    pub delta: f64,
+    /// 95% bootstrap CI on the shift.
+    pub ci: (f64, f64),
+    pub verdict: Verdict,
+}
+
+/// Judge a treatment sample against a control sample (latencies, any
+/// consistent unit). The verdict is reorder-invariant and, for a fixed
+/// `cfg`, deterministic.
+pub fn judge(control: &[f64], treatment: &[f64], cfg: &GateConfig) -> Judgement {
+    let mw = stats::mann_whitney(control, treatment);
+    let delta = stats::relative_median_shift(control, treatment);
+    let (lo, hi) =
+        stats::bootstrap_ci(control, treatment, cfg.bootstrap_resamples, cfg.bootstrap_seed);
+    // Significant AND large enough AND the CI agrees on the sign — NaNs
+    // from degenerate inputs fail every comparison and land on NoChange.
+    let verdict = if mw.p < cfg.alpha && delta >= cfg.min_effect && lo > 0.0 {
+        Verdict::Regression
+    } else if mw.p < cfg.alpha && delta <= -cfg.min_effect && hi < 0.0 {
+        Verdict::Improvement
+    } else {
+        Verdict::NoChange
+    };
+    Judgement { u: mw.u, p: mw.p, delta, ci: (lo, hi), verdict }
+}
+
+/// One cell's delta report.
+#[derive(Debug, Clone)]
+pub struct CellDelta {
+    /// `model@system/scenario/bN`.
+    pub cell: String,
+    pub control_n: usize,
+    pub treatment_n: usize,
+    pub control_median_ms: f64,
+    pub treatment_median_ms: f64,
+    /// Relative median shift in percent.
+    pub delta_pct: f64,
+    pub ci_lo_pct: f64,
+    pub ci_hi_pct: f64,
+    pub u: f64,
+    pub p_value: f64,
+    pub verdict: Verdict,
+}
+
+/// A full control-vs-treatment comparison over the stored matrix.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub control: String,
+    pub treatment: String,
+    /// Paired cells in deterministic (canonical-key) order.
+    pub cells: Vec<CellDelta>,
+    /// Cells measured under only one of the two labels.
+    pub missing: Vec<String>,
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> usize {
+        self.cells.iter().filter(|c| c.verdict == Verdict::Regression).count()
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.cells.iter().filter(|c| c.verdict == Verdict::Improvement).count()
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        self.regressions() > 0
+    }
+}
+
+fn cell_name(k: &EvalKey) -> String {
+    format!("{}@{}/{}/b{}", k.model, k.system, k.scenario, k.batch_size)
+}
+
+/// Compare the latest records of two labeled run lines, cell by cell.
+///
+/// Pairing is by the record's canonical evaluation key, so any two run
+/// lines over the same matrix pair up regardless of how (sweep, direct
+/// eval, replayed store) each was measured.
+pub fn compare_labels(
+    db: &EvalDb,
+    control: &str,
+    treatment: &str,
+    cfg: &GateConfig,
+) -> Comparison {
+    let index = |label: &str| -> BTreeMap<String, EvalRecord> {
+        db.latest(&EvalQuery::label(label))
+            .into_iter()
+            .map(|r| (r.key.canonical(), r))
+            .collect()
+    };
+    let ctrl = index(control);
+    let trt = index(treatment);
+    let ms = |r: &EvalRecord| -> Vec<f64> { r.latencies.iter().map(|s| s * 1e3).collect() };
+    let mut cells = Vec::new();
+    let mut missing = Vec::new();
+    for (k, c) in &ctrl {
+        let Some(t) = trt.get(k) else {
+            missing.push(format!("{} (no treatment run)", cell_name(&c.key)));
+            continue;
+        };
+        let cms = ms(c);
+        let tms = ms(t);
+        let j = judge(&cms, &tms, cfg);
+        cells.push(CellDelta {
+            cell: cell_name(&c.key),
+            control_n: cms.len(),
+            treatment_n: tms.len(),
+            control_median_ms: median(&cms),
+            treatment_median_ms: median(&tms),
+            delta_pct: j.delta * 100.0,
+            ci_lo_pct: j.ci.0 * 100.0,
+            ci_hi_pct: j.ci.1 * 100.0,
+            u: j.u,
+            p_value: j.p,
+            verdict: j.verdict,
+        });
+    }
+    for (k, t) in &trt {
+        if !ctrl.contains_key(k) {
+            missing.push(format!("{} (no control run)", cell_name(&t.key)));
+        }
+    }
+    Comparison {
+        control: control.to_string(),
+        treatment: treatment.to_string(),
+        cells,
+        missing,
+    }
+}
+
+/// One point of a per-cell benchmark trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrajectoryPoint {
+    /// Run label (commit, tag, date — whatever names the run line).
+    pub label: String,
+    pub median_ms: f64,
+}
+
+/// A stored history of per-cell medians across run labels — the
+/// `BENCH_*.json`-style artifact `mlms regress --trajectory` maintains so
+/// CI can fail on *step changes* over many commits, not just on the
+/// current pair.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trajectory {
+    pub cells: BTreeMap<String, Vec<TrajectoryPoint>>,
+}
+
+impl Trajectory {
+    /// Append (or, for a re-run of the same label, overwrite) a point.
+    pub fn record(&mut self, cell: &str, label: &str, median_ms: f64) {
+        let points = self.cells.entry(cell.to_string()).or_default();
+        match points.iter_mut().find(|p| p.label == label) {
+            Some(p) => p.median_ms = median_ms,
+            None => points.push(TrajectoryPoint { label: label.to_string(), median_ms }),
+        }
+    }
+
+    /// Change-point indices of one cell's series.
+    pub fn changepoints(&self, cell: &str, cfg: &GateConfig) -> Vec<usize> {
+        let Some(points) = self.cells.get(cell) else { return Vec::new() };
+        let series: Vec<f64> = points.iter().map(|p| p.median_ms).collect();
+        changepoint::detect(&series, cfg.cp_penalty, cfg.cp_min_segment)
+    }
+
+    /// Every `(cell, index, label)` whose change-point falls within the
+    /// last `window` points — the CI failure condition: an *old* step is
+    /// history, a recent one is this change's fault.
+    pub fn recent_changepoints(
+        &self,
+        window: usize,
+        cfg: &GateConfig,
+    ) -> Vec<(String, usize, String)> {
+        let mut out = Vec::new();
+        for (cell, points) in &self.cells {
+            for idx in self.changepoints(cell, cfg) {
+                if idx + window >= points.len() {
+                    out.push((cell.clone(), idx, points[idx].label.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<(&str, Json)> = self
+            .cells
+            .iter()
+            .map(|(cell, points)| {
+                (
+                    cell.as_str(),
+                    Json::arr(
+                        points
+                            .iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("label", Json::str(&p.label)),
+                                    ("median_ms", Json::num(p.median_ms)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )
+            })
+            .collect();
+        Json::obj(vec![("cells", Json::obj(cells))])
+    }
+
+    /// Strict parse — a malformed trajectory must not silently drop
+    /// history (a shortened series can hide the very step being gated).
+    pub fn from_json(j: &Json) -> Option<Trajectory> {
+        let mut out = Trajectory::default();
+        for (cell, points) in j.get("cells")?.as_obj()? {
+            let mut series = Vec::new();
+            for p in points.as_arr()? {
+                series.push(TrajectoryPoint {
+                    label: p.get("label")?.as_str()?.to_string(),
+                    median_ms: p.get("median_ms")?.as_f64()?,
+                });
+            }
+            out.cells.insert(cell.clone(), series);
+        }
+        Some(out)
+    }
+
+    /// Load from a JSON file; a missing file is an empty trajectory.
+    pub fn load(path: &str) -> std::io::Result<Trajectory> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Trajectory::default())
+            }
+            Err(e) => return Err(e),
+        };
+        Json::parse(&text)
+            .ok()
+            .and_then(|j| Trajectory::from_json(&j))
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{path}: not a trajectory file"),
+                )
+            })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evaldb::RunMeta;
+
+    fn key(model: &str) -> EvalKey {
+        EvalKey {
+            model: model.into(),
+            model_version: "1.0.0".into(),
+            framework: "TensorFlow".into(),
+            framework_version: "1.15.0".into(),
+            system: "aws_p3".into(),
+            device: "gpu".into(),
+            scenario: "online".into(),
+            batch_size: 1,
+        }
+    }
+
+    fn put(db: &EvalDb, model: &str, label: &str, ms: &[f64]) {
+        let secs: Vec<f64> = ms.iter().map(|m| m / 1e3).collect();
+        let mut r = EvalRecord::new(key(model), secs, 100.0);
+        r.run_meta = RunMeta::labeled(label);
+        db.put(r);
+    }
+
+    #[test]
+    fn judge_flags_only_confirmed_shifts() {
+        let cfg = GateConfig::default();
+        // +50% with clean separation: regression.
+        let j = judge(&[10.0; 8], &[15.0; 8], &cfg);
+        assert_eq!(j.verdict, Verdict::Regression);
+        assert_eq!(j.u, 64.0);
+        assert!((j.delta - 0.5).abs() < 1e-12);
+        assert_eq!(j.ci, (0.5, 0.5));
+        // Identical samples: all ties, p = 1, no change.
+        let j = judge(&[10.0; 8], &[10.0; 8], &cfg);
+        assert_eq!(j.verdict, Verdict::NoChange);
+        assert_eq!(j.p, 1.0);
+        // −33%: improvement.
+        let j = judge(&[15.0; 8], &[10.0; 8], &cfg);
+        assert_eq!(j.verdict, Verdict::Improvement);
+        // Significant but tiny (+1% < min_effect): not flagged.
+        let c: Vec<f64> = (0..20).map(|i| 10.0 + (i % 5) as f64 * 1e-3).collect();
+        let t: Vec<f64> = c.iter().map(|v| v * 1.01).collect();
+        let j = judge(&c, &t, &cfg);
+        assert_eq!(j.verdict, Verdict::NoChange, "p={} delta={}", j.p, j.delta);
+        // Empty sides are never evidence.
+        assert_eq!(judge(&[], &[10.0], &cfg).verdict, Verdict::NoChange);
+    }
+
+    #[test]
+    fn compare_labels_pairs_cells_and_reports_unpaired() {
+        let db = EvalDb::in_memory();
+        put(&db, "alex", "base", &[10.0; 8]);
+        put(&db, "alex", "cand", &[15.0; 8]);
+        put(&db, "mobile", "base", &[5.0; 8]);
+        put(&db, "mobile", "cand", &[5.0; 8]);
+        put(&db, "resnet", "base", &[20.0; 8]); // no candidate run
+        put(&db, "vgg", "cand", &[9.0; 8]); // no base run
+        let cmp = compare_labels(&db, "base", "cand", &GateConfig::default());
+        assert_eq!(cmp.cells.len(), 2);
+        assert_eq!(cmp.regressions(), 1);
+        assert_eq!(cmp.improvements(), 0);
+        assert!(cmp.has_regressions());
+        let alex = cmp.cells.iter().find(|c| c.cell.starts_with("alex@")).unwrap();
+        assert_eq!(alex.verdict, Verdict::Regression);
+        assert!((alex.delta_pct - 50.0).abs() < 1e-9);
+        assert_eq!((alex.control_n, alex.treatment_n), (8, 8));
+        assert_eq!(cmp.missing.len(), 2);
+        assert!(cmp.missing.iter().any(|m| m.contains("resnet") && m.contains("no treatment")));
+        assert!(cmp.missing.iter().any(|m| m.contains("vgg") && m.contains("no control")));
+    }
+
+    #[test]
+    fn compare_uses_latest_record_per_line() {
+        let db = EvalDb::in_memory();
+        put(&db, "alex", "base", &[10.0; 8]);
+        put(&db, "alex", "cand", &[15.0; 8]);
+        // A newer, fixed candidate run supersedes the slow one.
+        put(&db, "alex", "cand", &[10.0; 8]);
+        let cmp = compare_labels(&db, "base", "cand", &GateConfig::default());
+        assert_eq!(cmp.cells.len(), 1);
+        assert_eq!(cmp.cells[0].verdict, Verdict::NoChange);
+    }
+
+    #[test]
+    fn trajectory_roundtrip_and_step_gating() {
+        let mut traj = Trajectory::default();
+        for (i, label) in ["c1", "c2", "c3", "c4", "c5", "c6"].iter().enumerate() {
+            let level = if i < 4 { 10.0 } else { 15.0 };
+            traj.record("alex@aws_p3/online/b1", label, level);
+        }
+        let cfg = GateConfig::default();
+        assert_eq!(traj.changepoints("alex@aws_p3/online/b1", &cfg), vec![4]);
+        // The step is 2 points old: inside a window of 3, outside 1.
+        let recent = traj.recent_changepoints(3, &cfg);
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].1, 4);
+        assert_eq!(recent[0].2, "c5");
+        assert!(traj.recent_changepoints(1, &cfg).is_empty());
+        // Re-recording a label overwrites instead of appending.
+        traj.record("alex@aws_p3/online/b1", "c6", 15.2);
+        assert_eq!(traj.cells["alex@aws_p3/online/b1"].len(), 6);
+        // JSON round-trip is exact.
+        let back = Trajectory::from_json(&traj.to_json()).unwrap();
+        assert_eq!(back, traj);
+        // Malformed shapes reject instead of truncating history.
+        assert!(Trajectory::from_json(&Json::parse("{}").unwrap()).is_none());
+        assert!(Trajectory::from_json(
+            &Json::parse(r#"{"cells":{"c":[{"label":"x"}]}}"#).unwrap()
+        )
+        .is_none());
+        assert!(Trajectory::from_json(
+            &Json::parse(r#"{"cells":{"c":[{"label":7,"median_ms":1.0}]}}"#).unwrap()
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn trajectory_file_io() {
+        let path = std::env::temp_dir()
+            .join(format!("mlms_traj_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let _ = std::fs::remove_file(&path);
+        // Missing file loads empty.
+        let mut traj = Trajectory::load(&path).unwrap();
+        assert!(traj.cells.is_empty());
+        traj.record("cell", "c1", 10.0);
+        traj.save(&path).unwrap();
+        assert_eq!(Trajectory::load(&path).unwrap(), traj);
+        // Corrupt file is an error, not an empty history.
+        std::fs::write(&path, "[1,2,3]").unwrap();
+        assert!(Trajectory::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,228 @@
+//! Two-sample statistics behind the regression gate: a hand-rolled,
+//! tie-corrected Mann-Whitney U test and a seeded bootstrap confidence
+//! interval on the relative median shift.
+//!
+//! Why these two and not a t-test on means: latency samples are skewed and
+//! heavy-tailed (queueing, cold caches, allocator stalls), so a mean-based
+//! test is dominated by exactly the outliers a benchmark should be robust
+//! to. Mann-Whitney is rank-based — distribution-free, outlier-tolerant,
+//! and exact about the question we ask ("does the treatment tend to be
+//! slower?"). The bootstrap CI then sizes the shift in units people act on
+//! (percent of the median), and requiring the CI to exclude zero keeps
+//! statistically-significant-but-microscopic shifts from failing CI.
+//!
+//! Everything here is deterministic: the bootstrap PRNG is an explicit
+//! [`Xorshift`] seed, and both inputs are sorted before resampling so the
+//! result depends only on the sample *sets*, never their arrival order.
+
+use crate::metrics::median;
+use crate::util::rng::Xorshift;
+
+/// Result of a two-sided Mann-Whitney U test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MwTest {
+    /// U statistic of the *treatment* sample (larger ⇒ treatment ranks
+    /// higher ⇒ slower, for latency inputs).
+    pub u: f64,
+    /// Normal-approximation score with tie correction.
+    pub z: f64,
+    /// Two-sided p-value. All-tied inputs give `p = 1` (no evidence).
+    pub p: f64,
+}
+
+/// Two-sided Mann-Whitney U test of `treatment` against `control`.
+///
+/// Mid-ranks are assigned to ties and the normal approximation uses the
+/// tie-corrected variance
+/// `σ² = (n₁n₂/12)·[(N+1) − Σ(t³−t)/(N(N−1))]`; a zero variance (every
+/// pooled value identical) is reported as `z = 0, p = 1` rather than a
+/// division by zero — identical runs are evidence of *no* change.
+pub fn mann_whitney(control: &[f64], treatment: &[f64]) -> MwTest {
+    if control.is_empty() || treatment.is_empty() {
+        return MwTest { u: f64::NAN, z: 0.0, p: 1.0 };
+    }
+    let n1 = control.len() as f64;
+    let n2 = treatment.len() as f64;
+    let mut pooled: Vec<(f64, bool)> = control
+        .iter()
+        .map(|&v| (v, false))
+        .chain(treatment.iter().map(|&v| (v, true)))
+        .collect();
+    pooled.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let n = pooled.len();
+    let mut treatment_rank_sum = 0.0;
+    let mut tie_term = 0.0; // Σ (t³ − t) over tie groups
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && pooled[j].0 == pooled[i].0 {
+            j += 1;
+        }
+        let t = (j - i) as f64;
+        // 1-based mid-rank shared by the whole tie group.
+        let mid_rank = ((i + 1) + j) as f64 / 2.0;
+        for e in &pooled[i..j] {
+            if e.1 {
+                treatment_rank_sum += mid_rank;
+            }
+        }
+        tie_term += t * t * t - t;
+        i = j;
+    }
+    let u = treatment_rank_sum - n2 * (n2 + 1.0) / 2.0;
+    let mean = n1 * n2 / 2.0;
+    let nf = n as f64;
+    let var = n1 * n2 / 12.0 * ((nf + 1.0) - tie_term / (nf * (nf - 1.0)));
+    if var <= 0.0 {
+        return MwTest { u, z: 0.0, p: 1.0 };
+    }
+    let z = (u - mean) / var.sqrt();
+    MwTest { u, z, p: two_sided_p(z) }
+}
+
+/// Two-sided normal-tail p-value for a z score.
+pub fn two_sided_p(z: f64) -> f64 {
+    erfc(z.abs() / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function, `1 − erf(x)`.
+pub fn erfc(x: f64) -> f64 {
+    1.0 - erf(x)
+}
+
+/// Error function via the Abramowitz & Stegun 7.1.26 rational
+/// approximation (max absolute error ≈ 1.5e-7 — far below the display
+/// precision of any gate output).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Relative median shift of `treatment` over `control`:
+/// `(median(t) − median(c)) / median(c)`. `NaN` when either side is empty
+/// or the control median is zero.
+pub fn relative_median_shift(control: &[f64], treatment: &[f64]) -> f64 {
+    let mc = median(control);
+    let mt = median(treatment);
+    if mc == 0.0 || !mc.is_finite() || !mt.is_finite() {
+        return f64::NAN;
+    }
+    (mt - mc) / mc
+}
+
+/// Seeded percentile-bootstrap 95% confidence interval on the relative
+/// median shift. Returns `(lo, hi)`.
+///
+/// Both inputs are sorted before any resampling, so the interval is a
+/// function of the sample sets and the seed alone — reordering either
+/// input cannot move the gate. A fixed seed makes the interval (and with
+/// it every verdict) bit-for-bit reproducible.
+pub fn bootstrap_ci(
+    control: &[f64],
+    treatment: &[f64],
+    resamples: usize,
+    seed: u64,
+) -> (f64, f64) {
+    if control.is_empty() || treatment.is_empty() || resamples == 0 {
+        return (f64::NAN, f64::NAN);
+    }
+    let sorted = |xs: &[f64]| {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        v
+    };
+    let c = sorted(control);
+    let t = sorted(treatment);
+    let mut rng = Xorshift::new(seed);
+    let mut cb = vec![0.0; c.len()];
+    let mut tb = vec![0.0; t.len()];
+    let mut deltas = Vec::with_capacity(resamples);
+    for _ in 0..resamples {
+        for slot in cb.iter_mut() {
+            *slot = c[rng.below(c.len() as u64) as usize];
+        }
+        for slot in tb.iter_mut() {
+            *slot = t[rng.below(t.len() as u64) as usize];
+        }
+        let d = relative_median_shift(&cb, &tb);
+        if d.is_finite() {
+            deltas.push(d);
+        }
+    }
+    if deltas.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    deltas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| deltas[((deltas.len() - 1) as f64 * p).round() as usize];
+    (q(0.025), q(0.975))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_matches_reference_points() {
+        // erf(0) = 0, erf(∞) → 1, and a couple of table values.
+        assert!(erf(0.0).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427008).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953223).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427008).abs() < 1e-6);
+        assert!(erf(6.0) > 0.999999);
+    }
+
+    #[test]
+    fn mann_whitney_hand_computed_separated_groups() {
+        // 8×10 vs 8×15: treatment wins every comparison → U = 64; the
+        // tie-corrected σ is 8.26236 and z = 32/σ = 3.87298.
+        let c = vec![10.0; 8];
+        let t = vec![15.0; 8];
+        let r = mann_whitney(&c, &t);
+        assert_eq!(r.u, 64.0);
+        assert!((r.z - 3.87298).abs() < 1e-4, "z = {}", r.z);
+        assert!(r.p > 0.5e-4 && r.p < 1.5e-4, "p = {}", r.p);
+    }
+
+    #[test]
+    fn mann_whitney_all_ties_is_no_evidence() {
+        let r = mann_whitney(&[7.0; 10], &[7.0; 10]);
+        assert_eq!(r.z, 0.0);
+        assert_eq!(r.p, 1.0);
+    }
+
+    #[test]
+    fn mann_whitney_symmetric_two_sided() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = vec![3.5, 4.5, 5.5, 6.5, 7.5];
+        let fwd = mann_whitney(&a, &b);
+        let rev = mann_whitney(&b, &a);
+        assert!((fwd.p - rev.p).abs() < 1e-12);
+        assert!((fwd.z + rev.z).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_ci_constant_inputs_is_degenerate() {
+        let (lo, hi) = bootstrap_ci(&[10.0; 8], &[15.0; 8], 200, 7);
+        assert_eq!((lo, hi), (0.5, 0.5));
+    }
+
+    #[test]
+    fn bootstrap_ci_deterministic_and_order_free() {
+        let c = vec![9.0, 11.0, 10.0, 10.5, 9.5, 10.2, 9.8, 10.1];
+        let t = vec![12.0, 13.0, 12.5, 12.2, 12.8, 12.4, 12.6, 12.1];
+        let a = bootstrap_ci(&c, &t, 300, 42);
+        let b = bootstrap_ci(&c, &t, 300, 42);
+        assert_eq!(a, b, "same seed ⇒ identical interval");
+        let mut c2 = c.clone();
+        let mut t2 = t.clone();
+        c2.reverse();
+        t2.rotate_left(3);
+        assert_eq!(bootstrap_ci(&c2, &t2, 300, 42), a, "order-free");
+        assert!(a.0 > 0.0, "clear +20% shift: lo = {}", a.0);
+    }
+}

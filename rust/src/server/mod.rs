@@ -19,7 +19,7 @@ use crate::batcher::{
     DispatchOutcome, DispatchWatch, QueueSim,
 };
 use crate::tracing::{SimClock, Span, Tracer};
-use crate::evaldb::{EvalDb, EvalKey, EvalRecord};
+use crate::evaldb::{EvalDb, EvalKey, EvalRecord, RunMeta};
 use crate::manifest::SystemRequirements;
 use crate::metrics::{BatchingSeries, TenantLatencies};
 use crate::pipeline::{Envelope, Payload};
@@ -48,6 +48,10 @@ pub struct EvalJob {
     /// Evaluate on every resolved agent (the paper's "or, at the user
     /// request, all of" the resolved agents) instead of one.
     pub all_agents: bool,
+    /// Run metadata stamped onto the stored record; the label folds into
+    /// the spec digest (see [`crate::evaldb::EvalSpec::run_label`]) so
+    /// labeled runs memoize per run line.
+    pub run_meta: RunMeta,
 }
 
 impl EvalJob {
@@ -61,6 +65,7 @@ impl EvalJob {
             input_mode: InputMode::Direct,
             seed: 42,
             all_agents: false,
+            run_meta: RunMeta::default(),
         }
     }
 }
@@ -202,6 +207,7 @@ impl Server {
             trace_level: job.trace_level,
             input_mode: job.input_mode,
             seed: job.seed,
+            run_meta: job.run_meta.clone(),
         };
         let mut results = Vec::new();
         let mut remote = Vec::new();
@@ -216,13 +222,17 @@ impl Server {
             }
         }
         if !remote.is_empty() {
-            let payload = Json::obj(vec![
+            let mut payload_fields = vec![
                 ("manifest", req.manifest.to_json()),
                 ("scenario", req.scenario.to_json()),
                 ("trace_level", Json::str(req.trace_level.as_str())),
                 ("input_mode", Json::str(req.input_mode.as_str())),
                 ("seed", Json::num(req.seed as f64)),
-            ]);
+            ];
+            if !req.run_meta.is_empty() {
+                payload_fields.push(("run_meta", req.run_meta.to_json()));
+            }
+            let payload = Json::obj(payload_fields);
             let remote_results = parallel_map(remote, 8, move |target| {
                 let client = crate::wire::RpcClient::connect(&target.endpoint)
                     .map_err(|e| (target.id.clone(), e.to_string()))?;
@@ -491,7 +501,7 @@ impl Server {
         // Content address of the resolved spec, with the dispatch config
         // folded in: a batched run under a different batcher setup is a
         // different experiment and must never memoize into this one.
-        let spec = crate::evaldb::EvalSpec::for_request(
+        let mut spec = crate::evaldb::EvalSpec::for_request(
             &manifest,
             &key.system,
             &key.device,
@@ -501,8 +511,10 @@ impl Server {
             job.seed,
             cfg.fingerprint_json(),
         );
+        spec.run_label = job.run_meta.label.clone();
         let mut record = EvalRecord::new(key, latencies, throughput);
         record.spec_digest = Some(spec.digest());
+        record.run_meta = job.run_meta.clone();
         // The serving trace is the record's primary trace (it carries the
         // queueing attribution); session traces remain reachable through
         // the returned `session_trace_ids`.

@@ -24,7 +24,7 @@
 //! `benches/fig_sweep.rs`.
 
 use crate::batcher::BatcherConfig;
-use crate::evaldb::{EvalDb, EvalRecord, EvalSpec};
+use crate::evaldb::{EvalDb, EvalRecord, EvalSpec, RunMeta};
 use crate::manifest::{Accelerator, SystemRequirements};
 use crate::registry::Registry;
 use crate::scenario::Scenario;
@@ -62,6 +62,11 @@ pub struct Plan {
     pub dispatch: Option<BatcherConfig>,
     /// Worker cap for the per-system fan-out.
     pub parallelism: usize,
+    /// Run metadata stamped on every record the sweep stores. The label
+    /// folds into each cell's spec digest, so sweeping the same matrix
+    /// under two labels measures both run lines while re-running one label
+    /// memoizes — the substrate `mlms regress` is built on.
+    pub run_meta: RunMeta,
 }
 
 /// One resolved cross-product cell.
@@ -118,6 +123,7 @@ impl Plan {
             seed: 42,
             dispatch: None,
             parallelism: 4,
+            run_meta: RunMeta::default(),
         }
     }
 
@@ -173,7 +179,7 @@ impl Plan {
         } else {
             (cell.scenario.batch_size(), Json::Null)
         };
-        Some(EvalSpec::for_request(
+        let mut spec = EvalSpec::for_request(
             &manifest,
             &cell.system,
             self.device(),
@@ -182,7 +188,9 @@ impl Plan {
             self.trace_level,
             self.seed,
             dispatch,
-        ))
+        );
+        spec.run_label = self.run_meta.label.clone();
+        Some(spec)
     }
 
     /// The cell's memoization digest (`None` for unknown models).
@@ -197,6 +205,7 @@ impl Plan {
         job.seed = self.seed;
         job.requirements = SystemRequirements::on_system(&cell.system);
         job.requirements.accelerator = self.effective_accelerator();
+        job.run_meta = self.run_meta.clone();
         job
     }
 
@@ -438,6 +447,29 @@ mod tests {
         assert_eq!(out.executed, 8);
         assert_eq!(out.failed.len(), 4, "{:?}", out.failed);
         assert!(out.failed.iter().all(|(c, _)| c.model == "NotInZoo"));
+    }
+
+    #[test]
+    fn labeled_sweeps_form_independent_memoization_lines() {
+        let server = Server::sim_platform(TraceLevel::None);
+        let mut plan = small_plan();
+        plan.run_meta = RunMeta::labeled("control");
+        let cold = run(&server, &plan);
+        assert_eq!(cold.executed, 8, "failures: {:?}", cold.failed);
+        // Same label re-run: pure memoization.
+        let warm = run(&server, &plan);
+        assert_eq!(warm.executed, 0);
+        assert_eq!(warm.memoized, 8);
+        // A different label is a different experiment: all cells pending.
+        let mut treatment = plan.clone();
+        treatment.run_meta = RunMeta::labeled("treatment");
+        assert_eq!(treatment.pending(&server.registry, &server.evaldb).len(), 8);
+        let t = run(&server, &treatment);
+        assert_eq!(t.executed, 8, "failures: {:?}", t.failed);
+        assert_eq!(server.evaldb.len(), 16, "8 cells per label line");
+        // Every stored record carries its line's label.
+        assert_eq!(server.evaldb.query(&EvalQuery::label("control")).len(), 8);
+        assert_eq!(server.evaldb.query(&EvalQuery::label("treatment")).len(), 8);
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! Golden-fixture tests for the regression gate: a committed set of
+//! labeled evaluation records with hand-computable statistics pins the
+//! full report rendering (`analysis::regression_section`) byte for byte,
+//! plus every number behind it — U, p, delta, CI, verdicts, and the
+//! unpaired-cell listing. An intentional change to the gate's math or the
+//! report format must regenerate `tests/fixtures/golden_regress*` in the
+//! same commit.
+
+use mlmodelscope::analysis::regression_section;
+use mlmodelscope::evaldb::{EvalDb, EvalRecord};
+use mlmodelscope::regress::{compare_labels, Comparison, GateConfig};
+use mlmodelscope::util::json::Json;
+
+fn fixture_path(name: &str) -> String {
+    format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_fixture() -> (Json, EvalDb) {
+    let text = std::fs::read_to_string(fixture_path("golden_regress.json")).expect("fixture");
+    let j = Json::parse(&text).expect("fixture parses");
+    let db = EvalDb::in_memory();
+    for r in j.get("records").unwrap().as_arr().unwrap() {
+        db.put(EvalRecord::from_json(r).expect("every fixture record parses strictly"));
+    }
+    (j, db)
+}
+
+fn compare(db: &EvalDb) -> Comparison {
+    compare_labels(db, "base", "cand", &GateConfig::default())
+}
+
+#[test]
+fn golden_report_render_is_pinned() {
+    let (_, db) = load_fixture();
+    let expected =
+        std::fs::read_to_string(fixture_path("golden_regress_render.txt")).expect("golden");
+    let got = regression_section(&compare(&db)).expect("paired cells render");
+    assert_eq!(
+        got, expected,
+        "regression_section drifted from tests/fixtures/golden_regress_render.txt — if intentional, regenerate the fixture in this commit"
+    );
+}
+
+#[test]
+fn golden_statistics_are_pinned() {
+    let (j, db) = load_fixture();
+    let cmp = compare(&db);
+    let expect = j.get("expect").unwrap();
+    assert_eq!(cmp.control, expect.str_or("control", "?"));
+    assert_eq!(cmp.treatment, expect.str_or("treatment", "?"));
+    let want_cells = expect.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cmp.cells.len(), want_cells.len(), "cell set drifted");
+    for (got, want) in cmp.cells.iter().zip(want_cells) {
+        let cell = want.str_or("cell", "?");
+        assert_eq!(got.cell, cell, "pairing order drifted (canonical-key order)");
+        assert_eq!(got.verdict.as_str(), want.str_or("verdict", "?"), "{cell}");
+        assert_eq!(got.u, want.f64_or("u", f64::NAN), "{cell} U statistic");
+        assert!(
+            (got.delta_pct - want.f64_or("delta_pct", f64::NAN)).abs() < 1e-9,
+            "{cell} delta {} drifted",
+            got.delta_pct
+        );
+        if let Some(p) = want.get("p_exact").and_then(|v| v.as_f64()) {
+            assert_eq!(got.p_value, p, "{cell} p-value");
+        }
+        if let Some(cap) = want.get("p_below").and_then(|v| v.as_f64()) {
+            assert!(got.p_value < cap, "{cell} p {} ≥ {cap}", got.p_value);
+        }
+        // Constant samples collapse the bootstrap onto the true shift.
+        assert!((got.ci_lo_pct - got.delta_pct).abs() < 1e-9, "{cell} CI lo");
+        assert!((got.ci_hi_pct - got.delta_pct).abs() < 1e-9, "{cell} CI hi");
+        assert_eq!((got.control_n, got.treatment_n), (8, 8), "{cell}");
+    }
+    assert_eq!(cmp.regressions() as f64, expect.f64_or("regressions", -1.0));
+    assert_eq!(cmp.improvements() as f64, expect.f64_or("improvements", -1.0));
+    let want_missing: Vec<String> = expect
+        .get("missing")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(cmp.missing, want_missing);
+}
+
+#[test]
+fn golden_comparison_is_deterministic() {
+    let (_, db) = load_fixture();
+    let a = regression_section(&compare(&db)).unwrap();
+    let b = regression_section(&compare(&db)).unwrap();
+    assert_eq!(a, b, "re-deriving the report must be byte-identical");
+    // Re-inserting the same records (fresh seqs, same samples) changes
+    // nothing: latest-per-line still yields the same report.
+    let (j2, _) = load_fixture();
+    for r in j2.get("records").unwrap().as_arr().unwrap() {
+        db.put(EvalRecord::from_json(r).unwrap());
+    }
+    assert_eq!(regression_section(&compare(&db)).unwrap(), a);
+}

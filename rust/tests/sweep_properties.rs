@@ -30,6 +30,7 @@ fn spec(model: &str, system: &str, batch: usize, seed: u64, level: &str) -> Eval
         trace_level: level.into(),
         seed,
         dispatch: Json::Null,
+        run_label: String::new(),
     }
 }
 
