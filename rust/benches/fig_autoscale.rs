@@ -1,0 +1,196 @@
+//! `fig_autoscale` — SLO-driven autoscaling with priority admission
+//! control, on the deterministic virtual-time queueing replay.
+//!
+//! Self-asserted acceptance gates:
+//!
+//! 1. **Spike absorption** — under a 10× diurnal spike the autoscaled
+//!    fleet holds the full-run p99 within the SLO while shedding only
+//!    low-priority traffic: high-priority shed is exactly 0.
+//! 2. **The static baseline fails** — the same workload on a fixed fleet
+//!    either violates the SLO or sheds high-priority traffic.
+//! 3. **Verdicts come from the judge** — both PASS/FAIL lines are printed
+//!    from the same `SloJudge` numbers (`passed` / `achieved_ms`) that the
+//!    control loop consumed; the bench does not recompute its own p99.
+//! 4. **Scale** — an MLPerf `Server`-mode burst at 2,000,000 simulated
+//!    queries/second runs through admission + planning + the replay with
+//!    every request accounted for (completed + shed == admitted + shed),
+//!    in virtual time: nobody waits a wall-clock second per second.
+//!
+//! Time is simulated throughout; every number is a deterministic function
+//! of `(scenario, seed, configs)`.
+
+use mlmodelscope::autoscale::{run_autoscaled_sim, AutoscaleConfig, FleetReport, ServiceModel};
+use mlmodelscope::batcher::admission::{AdmissionConfig, TenantPolicy};
+use mlmodelscope::batcher::{BatcherConfig, Priority};
+use mlmodelscope::benchkit::{bench_header, Table};
+use mlmodelscope::scenario::{Scenario, Workload};
+use mlmodelscope::slo::SloSpec;
+
+fn verdict(name: &str, r: &FleetReport, spec: SloSpec) -> String {
+    format!(
+        "{name}: p{:.0} {:.2} ms vs bound {:.1} ms — {} (fleet peak {}, shed {} low / {} high)",
+        spec.percentile,
+        r.achieved_ms,
+        spec.bound_ms,
+        if r.passed { "SLO MET" } else { "SLO VIOLATED" },
+        r.peak_agents,
+        r.shed.shed_for_priority("low"),
+        r.shed.shed_for_priority("high"),
+    )
+}
+
+fn main() {
+    bench_header(
+        "fig_autoscale",
+        "SLO-driven autoscaling — 10x spike absorbed, low-priority shed, static baseline fails",
+    );
+
+    // ── the workload: a 10x interactive spike over a best-effort floor ──
+    // Tenant 0 "interactive": diurnal 500 → 5000 qps, high priority,
+    // never shed. Tenant 1 "batchlab": 800 qps offered, rate-capped at
+    // 400/s with a 25 ms queueing deadline — the traffic that *should*
+    // yield under overload.
+    let scenario = Scenario::Mix {
+        tenants: vec![
+            (
+                "interactive".into(),
+                Scenario::Diurnal {
+                    peak_qps: 5000.0,
+                    trough_qps: 500.0,
+                    period_s: 16.0,
+                    count: 40_000,
+                },
+            ),
+            ("batchlab".into(), Scenario::FixedQps { qps: 800.0, count: 10_000 }),
+        ],
+    };
+    let workload = Workload::generate(&scenario, 42);
+    let admission = AdmissionConfig::default().with_tenant(
+        1,
+        TenantPolicy {
+            priority: Priority::Low,
+            rate_per_s: Some(400.0),
+            burst: 64.0,
+            queue_deadline_ms: Some(25.0),
+        },
+    );
+    // Service model ≈ 1 ms launch + 0.4 ms/item: one agent sustains
+    // ~1900 items/s at batch 8, so the 5400 qps peak needs a 3+ agent
+    // fleet while the 900 qps trough fits comfortably on one.
+    let svc = ServiceModel { base_s: 0.001, per_item_s: 0.0004 };
+    let bcfg = BatcherConfig::new(8, 2.0);
+    let spec = SloSpec::new(99.0, 100.0);
+    // React early (25% of the bound) with a short cooldown: the verdict
+    // bound is generous, the control trigger is not.
+    let acfg = AutoscaleConfig {
+        min_agents: 1,
+        max_agents: 8,
+        interval_s: 0.1,
+        scale_up_at: 0.25,
+        scale_down_at: 0.02,
+        cooldown_s: 0.25,
+        window: 512,
+        spawn_delay_s: 0.05,
+    };
+
+    // ── part 1: autoscaled fleet vs static baseline ─────────────────────
+    let scaled = run_autoscaled_sim(&workload, &bcfg, &admission, spec, &acfg, &svc, 1, true);
+    let fixed = run_autoscaled_sim(&workload, &bcfg, &admission, spec, &acfg, &svc, 1, false);
+
+    let mut table = Table::new(
+        "10x diurnal spike — autoscaled vs static fleet (virtual time)",
+        &["Fleet", "Agents (peak)", "p99 (ms)", "SLO", "Completed", "Shed low", "Shed high"],
+    );
+    for (name, r) in [("autoscaled", &scaled), ("static x1", &fixed)] {
+        table.row(&[
+            name.to_string(),
+            format!("{}", r.peak_agents),
+            format!("{:.2}", r.achieved_ms),
+            if r.passed { "MET".into() } else { "VIOLATED".into() },
+            r.completed.to_string(),
+            r.shed.shed_for_priority("low").to_string(),
+            r.shed.shed_for_priority("high").to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    for e in &scaled.events {
+        println!("  t={:6.2}s  {} -> {} agents  ({})", e.at_s, e.from, e.to, e.reason);
+    }
+    println!("{}", verdict("autoscaled", &scaled, spec));
+    println!("{}", verdict("static x1", &fixed, spec));
+    let _ = table.save_csv("target/bench-results/fig_autoscale.csv");
+
+    // Gate 1: the autoscaled fleet held the SLO and shed only low.
+    assert!(scaled.peak_agents > 1, "acceptance: the controller must have grown the fleet");
+    assert!(!scaled.events.is_empty(), "acceptance: scale events must be recorded");
+    assert!(
+        scaled.passed,
+        "acceptance: autoscaled fleet must hold p99 within the SLO (got {:.2} ms > {:.1} ms)",
+        scaled.achieved_ms, spec.bound_ms
+    );
+    assert_eq!(
+        scaled.shed.shed_for_priority("high"),
+        0,
+        "acceptance: high-priority traffic must never be shed"
+    );
+    // Gate 2: the static baseline fails — SLO violated or high shed.
+    assert_eq!(fixed.peak_agents, 1, "static fleet must stay fixed");
+    assert!(
+        !fixed.passed || fixed.shed.shed_for_priority("high") > 0,
+        "acceptance: the static fleet must violate the SLO or shed high-priority traffic \
+         (p99 {:.2} ms, high shed {})",
+        fixed.achieved_ms,
+        fixed.shed.shed_for_priority("high")
+    );
+    assert!(
+        scaled.achieved_ms < fixed.achieved_ms,
+        "acceptance: autoscaling must beat the static tail ({:.2} vs {:.2} ms)",
+        scaled.achieved_ms,
+        fixed.achieved_ms
+    );
+    // Accounting: every admitted request either completed or was shed by
+    // deadline; nothing silently vanished.
+    let rate_shed: usize = scaled.shed.rows.values().map(|r| r.shed_rate_limited).sum();
+    let deadline_shed: usize = scaled.shed.rows.values().map(|r| r.shed_deadline).sum();
+    assert_eq!(
+        scaled.completed + rate_shed + deadline_shed,
+        workload.requests.len(),
+        "acceptance: offered = completed + rate-shed + deadline-shed"
+    );
+    println!("acceptance: spike held in-SLO, high-priority shed = 0, static baseline failed\n");
+
+    // ── part 2: two million simulated queries per second ────────────────
+    // MLPerf Server mode at 2,000,000 qps: the arrival schedule, admission
+    // decisions, batch plan, and queueing replay are all virtual-time, so
+    // this runs in test time, not in 2M-users time. A 50 ms deadline sheds
+    // what the 8-agent ceiling cannot serve — and the books still balance.
+    let mega = Scenario::Server { qps: 2_000_000.0, count: 200_000 };
+    let mega_w = Workload::generate(&mega, 7);
+    assert_eq!(mega_w.requests.len(), 200_000);
+    let span = mega_w.requests.last().unwrap().at_secs - mega_w.requests[0].at_secs;
+    assert!(span < 1.0, "2M qps must pack 200k arrivals into well under a second: {span:.3}s");
+    let mega_adm = AdmissionConfig::default().with_tenant(
+        0,
+        TenantPolicy {
+            priority: Priority::Low,
+            rate_per_s: None,
+            burst: 1.0,
+            queue_deadline_ms: Some(50.0),
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let mega_r = run_autoscaled_sim(&mega_w, &bcfg, &mega_adm, spec, &acfg, &svc, 8, true);
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        mega_r.completed + mega_r.shed.total_shed(),
+        200_000,
+        "acceptance: at 2M qps every request is still accounted for"
+    );
+    assert!(mega_r.shed.total_shed() > 0, "an 8-agent ceiling cannot serve 2M qps unshed");
+    println!(
+        "2M qps server mode: 200000 requests replayed in {wall:.2}s wall ({} completed, {} shed)",
+        mega_r.completed,
+        mega_r.shed.total_shed()
+    );
+    println!("acceptance: millions-of-users rates run in virtual time with full accounting");
+}

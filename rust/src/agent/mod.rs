@@ -389,6 +389,9 @@ impl Agent {
 
 /// Construct a simulator-backed agent for a Table-1 system. Returns the
 /// agent plus the concrete simulator handle (for tracer attachment).
+///
+/// Panics on an unknown system name; callers acting on runtime input (the
+/// autoscaling supervisor, CLI flags) should use [`try_sim_agent`].
 pub fn sim_agent(
     system: &str,
     device: crate::sysmodel::Device,
@@ -396,7 +399,21 @@ pub fn sim_agent(
     evaldb: Arc<EvalDb>,
     sink: Arc<dyn crate::tracing::SpanSink>,
 ) -> (Arc<Agent>, Arc<crate::predictor::SimPredictor>, Arc<Tracer>) {
-    let profile = crate::sysmodel::systems()[system].clone();
+    try_sim_agent(system, device, trace_level, evaldb, sink)
+        .unwrap_or_else(|| panic!("unknown system profile {system:?}"))
+}
+
+/// As [`sim_agent`], but an unknown system name is a `None` instead of a
+/// panic — a typo'd profile in a scaling decision must surface as a failed
+/// spawn, not a crashed control loop.
+pub fn try_sim_agent(
+    system: &str,
+    device: crate::sysmodel::Device,
+    trace_level: TraceLevel,
+    evaldb: Arc<EvalDb>,
+    sink: Arc<dyn crate::tracing::SpanSink>,
+) -> Option<(Arc<Agent>, Arc<crate::predictor::SimPredictor>, Arc<Tracer>)> {
+    let profile = crate::sysmodel::systems().get(system)?.clone();
     let sim = Arc::new(crate::predictor::SimPredictor::new(crate::sysmodel::Simulator::new(
         profile.clone(),
         device,
@@ -418,7 +435,7 @@ pub fn sim_agent(
         simulated_time: true,
     };
     let agent = Agent::new_sim(config, sim.clone(), tracer.clone(), evaldb);
-    (agent, sim, tracer)
+    Some((agent, sim, tracer))
 }
 
 /// Construct a real XLA/PJRT agent serving the AOT artifact families.

@@ -365,6 +365,59 @@ pub fn batching_table(models: &[String], db: &EvalDb) -> Table {
     t
 }
 
+/// Admission-control report: one row per tenant of each stored record
+/// carrying shed accounting ([`crate::batcher::admission`], stored under
+/// `meta["admission"]`) — what was offered, what was admitted, and what
+/// was shed by which mechanism. This is where "the platform held its SLO"
+/// meets "…by dropping whose traffic": load shedding is only acceptable
+/// when it is visible.
+pub fn admission_table(models: &[String], db: &EvalDb) -> Table {
+    let mut t = Table::new(
+        "Admission control — per-tenant offered/admitted/shed",
+        &[
+            "Model",
+            "Scenario",
+            "Tenant",
+            "Priority",
+            "Offered",
+            "Admitted",
+            "Shed (rate)",
+            "Shed (deadline)",
+            "Shed %",
+        ],
+    );
+    for m in models {
+        for r in db.latest(&EvalQuery::model(m)) {
+            let series = match r.meta.get("admission") {
+                Some(aj) => match crate::metrics::ShedSeries::from_json(aj) {
+                    Some(s) => s,
+                    None => continue,
+                },
+                None => continue,
+            };
+            for (tenant, row) in &series.rows {
+                let shed_pct = if row.offered > 0 {
+                    row.shed_total() as f64 / row.offered as f64 * 100.0
+                } else {
+                    0.0
+                };
+                t.row(&[
+                    m.clone(),
+                    r.key.scenario.clone(),
+                    tenant.clone(),
+                    row.priority.clone(),
+                    row.offered.to_string(),
+                    row.admitted.to_string(),
+                    row.shed_rate_limited.to_string(),
+                    row.shed_deadline.to_string(),
+                    format!("{shed_pct:.1}"),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// SLO frontier report: one row per stored frontier point
 /// ([`crate::slo::store_frontier_point`]) — the maximum sustainable rate
 /// each (model, batch config) reached under each latency bound.
@@ -388,12 +441,14 @@ pub fn slo_frontier_table(models: &[String], db: &EvalDb) -> Table {
             .into_iter()
             .filter(|r| r.meta.get("slo").is_some())
             .collect();
-        // Loosest bound first, so each column reads as a frontier.
+        // Loosest bound first, so each column reads as a frontier. total_cmp
+        // because the bound comes from stored metadata: a NaN in one record
+        // must sort deterministically, not panic the whole report.
         rows.sort_by(|a, b| {
             let bound = |r: &EvalRecord| {
                 r.meta.get("slo").map(|s| s.f64_or("bound_ms", 0.0)).unwrap_or(0.0)
             };
-            bound(b).partial_cmp(&bound(a)).unwrap()
+            bound(b).total_cmp(&bound(a))
         });
         for r in rows {
             let s = r.meta.get("slo").unwrap();
@@ -504,7 +559,12 @@ pub fn full_report(models: &[String], db: &EvalDb) -> String {
     if batching.row_count() > 0 {
         out.push_str(&batching.render());
     }
-    // Likewise the SLO frontier section.
+    // Likewise the admission-control section…
+    let admission = admission_table(models, db);
+    if admission.row_count() > 0 {
+        out.push_str(&admission.render());
+    }
+    // …and the SLO frontier section.
     let frontier = slo_frontier_table(models, db);
     if frontier.row_count() > 0 {
         out.push_str(&frontier.render());

@@ -1,0 +1,672 @@
+//! SLO-driven autoscaling: spawn/retire agents from SLO headroom.
+//!
+//! The fleet was static: overload just queued, and the only defense was
+//! over-provisioning for the daily peak. This module closes the loop the
+//! ROADMAP calls for — a target-tracking controller that measures SLO
+//! headroom with the same judges the benchmarking path uses
+//! ([`crate::slo::SloJudge`] / [`crate::slo::RollingSloJudge`]) and sizes
+//! the fleet to the *current* offered load:
+//!
+//! - **Measure**: completed-request latencies feed a rolling-window judge;
+//!   its percentile estimate is the controller input. The verdict the
+//!   bench prints comes from the very same numbers the loop consumed.
+//! - **Decide** ([`target_agents`]): a hysteresis band around the SLO bound
+//!   — scale up proportionally when the rolling percentile crosses
+//!   `scale_up_at · bound` (the further over, the more agents at once),
+//!   scale down one step when it sinks below `scale_down_at · bound`.
+//!   The dead band between the thresholds plus a cooldown keeps the
+//!   controller from flapping on noise.
+//! - **Act**: in the virtual-time replay ([`run_autoscaled_sim`]) capacity
+//!   changes are [`crate::batcher::QueueSim::add_server`] /
+//!   [`QueueSim::retire_server`] with a spawn delay (new capacity is never
+//!   free); on a real fleet ([`Supervisor`]) scale-up first wakes
+//!   registry-discovered standby agents, then spawns local simulator
+//!   replicas, and scale-down reverses the same moves.
+//!
+//! Admission control ([`crate::batcher::admission`]) runs in front of the
+//! controller: token buckets cap each tenant's sustained rate and
+//! deadline-aware shedding drops batches whose predicted queueing delay
+//! already blows their tenant's deadline — so overload degrades best-effort
+//! traffic first, visibly, instead of everyone's p99 silently.
+
+use crate::batcher::admission::{filter_workload, AdmissionConfig, Rejection, ShedCause};
+use crate::batcher::{plan_batches, BatcherConfig, QueueSim};
+use crate::metrics::{ShedSeries, TenantLatencies};
+use crate::pipeline::{Envelope, Payload};
+use crate::scenario::Workload;
+use crate::slo::{RollingSloJudge, SloJudge, SloSpec};
+
+/// Control-loop knobs. Defaults favor stability over reaction speed: a
+/// 10%-under-bound scale-up trigger, a wide dead band, and a cooldown long
+/// enough for freshly spawned capacity to show up in the rolling window
+/// before the next decision.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    pub min_agents: usize,
+    pub max_agents: usize,
+    /// Seconds between control decisions (virtual time in the replay).
+    pub interval_s: f64,
+    /// Scale up when the rolling percentile exceeds `scale_up_at · bound`.
+    pub scale_up_at: f64,
+    /// Scale down when it sinks below `scale_down_at · bound`.
+    pub scale_down_at: f64,
+    /// Minimum seconds between capacity changes (anti-flap).
+    pub cooldown_s: f64,
+    /// Rolling judge window, in completed requests.
+    pub window: usize,
+    /// Seconds before a newly spawned agent takes its first batch (model
+    /// load + warmup — new capacity is never free).
+    pub spawn_delay_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_agents: 1,
+            max_agents: 8,
+            interval_s: 0.5,
+            scale_up_at: 0.9,
+            scale_down_at: 0.3,
+            cooldown_s: 1.0,
+            window: 512,
+            spawn_delay_s: 0.25,
+        }
+    }
+}
+
+/// The target-tracking decision: given the rolling percentile (ms), pick
+/// the fleet size. Pure — the testable core of the controller.
+///
+/// Above the scale-up threshold the step is proportional to the overshoot
+/// (capped at 4× per decision) because a 10× traffic spike needs more than
+/// +1 agent per cooldown; below the scale-down threshold the step is always
+/// −1, because shrinking too fast re-triggers the spike it just absorbed.
+pub fn target_agents(p_ms: f64, spec: &SloSpec, current: usize, cfg: &AutoscaleConfig) -> usize {
+    let lo = cfg.min_agents.max(1);
+    let hi = cfg.max_agents.max(lo);
+    let current = current.clamp(lo, hi);
+    if !p_ms.is_finite() {
+        // No signal (empty window / NaN): hold.
+        return current;
+    }
+    let up_at = spec.bound_ms * cfg.scale_up_at.max(0.0);
+    let down_at = spec.bound_ms * cfg.scale_down_at.max(0.0);
+    if up_at > 0.0 && p_ms > up_at {
+        let factor = (p_ms / up_at).min(4.0);
+        let target = (current as f64 * factor).ceil() as usize;
+        // max-then-min, not clamp: at `current == hi` the lower edge
+        // (current + 1) exceeds hi and clamp would panic.
+        target.max(current + 1).min(hi)
+    } else if p_ms < down_at {
+        current.saturating_sub(1).max(lo)
+    } else {
+        current
+    }
+}
+
+/// One capacity change, as the controller took it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEvent {
+    /// Virtual (replay) or wall (supervisor) seconds.
+    pub at_s: f64,
+    pub from: usize,
+    pub to: usize,
+    /// The rolling percentile that triggered the decision, ms.
+    pub p_ms: f64,
+    pub reason: String,
+}
+
+/// The stateful controller: rolling judge + hysteresis + cooldown.
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    judge: RollingSloJudge,
+    last_change_at: f64,
+    events: Vec<ScaleEvent>,
+}
+
+impl Autoscaler {
+    pub fn new(spec: SloSpec, cfg: AutoscaleConfig) -> Autoscaler {
+        let window = cfg.window;
+        Autoscaler {
+            cfg,
+            judge: RollingSloJudge::new(spec, window),
+            last_change_at: f64::NEG_INFINITY,
+            events: Vec::new(),
+        }
+    }
+
+    /// Feed one completed request's latency.
+    pub fn observe(&mut self, latency_s: f64) {
+        self.judge.observe(latency_s);
+    }
+
+    /// Rolling percentile, ms (`NaN` before any sample).
+    pub fn rolling_p_ms(&self) -> f64 {
+        self.judge.achieved_ms()
+    }
+
+    pub fn events(&self) -> &[ScaleEvent] {
+        &self.events
+    }
+
+    /// Take a control decision at `now_s` with `current` agents. Returns
+    /// the new target only when a change is due (hysteresis passed and
+    /// cooldown expired); records it as a [`ScaleEvent`].
+    pub fn decide(&mut self, now_s: f64, current: usize) -> Option<usize> {
+        if now_s - self.last_change_at < self.cfg.cooldown_s {
+            return None;
+        }
+        let p_ms = self.judge.achieved_ms();
+        let target = target_agents(p_ms, self.judge.spec(), current, &self.cfg);
+        if target == current {
+            return None;
+        }
+        self.last_change_at = now_s;
+        self.events.push(ScaleEvent {
+            at_s: now_s,
+            from: current,
+            to: target,
+            p_ms,
+            reason: {
+                let (dir, frac) = if target > current {
+                    ("over", self.cfg.scale_up_at)
+                } else {
+                    ("under", self.cfg.scale_down_at)
+                };
+                let pct = self.judge.spec().percentile;
+                format!("p{pct} {p_ms:.2}ms {dir} {:.0}% of bound", frac * 100.0)
+            },
+        });
+        Some(target)
+    }
+}
+
+/// Linear batch service-time model for the virtual-time replay:
+/// `base + per_item · occupancy` seconds per batch — the same shape the
+/// roofline simulator produces (fixed launch overhead + per-item compute).
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceModel {
+    pub base_s: f64,
+    pub per_item_s: f64,
+}
+
+impl ServiceModel {
+    pub fn service_s(&self, occupancy: usize) -> f64 {
+        self.base_s + self.per_item_s * occupancy as f64
+    }
+}
+
+/// What one autoscaled (or static — `autoscale: false`) replay produced.
+#[derive(Debug)]
+pub struct FleetReport {
+    /// Final verdict from the full-run [`SloJudge`] over every completed
+    /// request — the same numbers the control loop consumed.
+    pub passed: bool,
+    /// Full-run percentile estimate, ms.
+    pub achieved_ms: f64,
+    /// Requests that completed service.
+    pub completed: usize,
+    /// Per-tenant admission/shed accounting (rate-limit + deadline drops).
+    pub shed: ShedSeries,
+    /// Every typed rejection, in decision order.
+    pub rejections: Vec<Rejection>,
+    /// Capacity changes the controller took.
+    pub events: Vec<ScaleEvent>,
+    pub peak_agents: usize,
+    pub final_agents: usize,
+    /// Per-tenant latency tails over completed requests.
+    pub per_tenant: TenantLatencies,
+}
+
+/// Run a workload through admission control + batching + the virtual-time
+/// queueing replay with the autoscale control loop in the loop. Fully
+/// deterministic in its inputs; millions of simulated users cost only the
+/// planning and replay time, never wall-clock waiting.
+///
+/// `initial` is the starting fleet; with `autoscale = false` the fleet
+/// stays fixed (the static baseline the bench compares against) while
+/// admission control still applies.
+#[allow(clippy::too_many_arguments)]
+pub fn run_autoscaled_sim(
+    workload: &Workload,
+    bcfg: &BatcherConfig,
+    admission: &AdmissionConfig,
+    spec: SloSpec,
+    acfg: &AutoscaleConfig,
+    svc: &ServiceModel,
+    initial: usize,
+    autoscale: bool,
+) -> FleetReport {
+    let tenant_names = workload.scenario.tenant_names();
+    let tenant_name = |t: u32| -> String {
+        tenant_names
+            .get(t as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("tenant-{t}"))
+    };
+
+    // 1. Admission: token buckets shed over-rate traffic up front.
+    let (admitted, mut rejections) = filter_workload(admission, workload);
+    let mut shed = ShedSeries::default();
+    for r in &workload.requests {
+        let row = shed.row_mut(&tenant_name(r.tenant));
+        row.priority = admission.policy_for(r.tenant).priority.as_str().to_string();
+        row.offered += 1;
+    }
+    for r in &admitted.requests {
+        shed.row_mut(&tenant_name(r.tenant)).admitted += 1;
+    }
+    for rej in &rejections {
+        shed.row_mut(&tenant_name(rej.tenant)).shed_rate_limited += 1;
+    }
+
+    // 2. Plan + replay with the controller taking capacity decisions on a
+    //    virtual-time tick grid.
+    let batches = plan_batches(&admitted, bcfg, |r| Envelope {
+        seq: r.id,
+        trace_id: 0,
+        parent_span: None,
+        payload: Payload::Bytes(Vec::new()),
+    });
+    let initial = initial.clamp(1, acfg.max_agents.max(1));
+    let mut sim = QueueSim::new(&batches, initial, bcfg.policy());
+    let mut judge = SloJudge::new(spec, admitted.requests.len());
+    let mut scaler = Autoscaler::new(spec, acfg.clone());
+    let mut per_tenant = TenantLatencies::new();
+    let mut completed = 0usize;
+    let mut peak = initial;
+    let mut next_tick = acfg.interval_s.max(1e-3);
+
+    let mut settle = |done: Vec<crate::batcher::CompletedRequest>,
+                      judge: &mut SloJudge,
+                      scaler: &mut Autoscaler,
+                      per_tenant: &mut TenantLatencies,
+                      completed: &mut usize| {
+        for c in done {
+            judge.observe(c.latency_s);
+            scaler.observe(c.latency_s);
+            per_tenant.record(&tenant_name(c.tenant), c.latency_s);
+            *completed += 1;
+        }
+    };
+
+    for (i, b) in batches.iter().enumerate() {
+        // Control ticks due before this batch forms.
+        while autoscale && next_tick <= b.formed_at_secs {
+            let current = sim.active_servers();
+            if let Some(target) = scaler.decide(next_tick, current) {
+                if target > current {
+                    for _ in current..target {
+                        sim.add_server(next_tick + acfg.spawn_delay_s.max(0.0));
+                    }
+                } else {
+                    for _ in target..current {
+                        if !sim.retire_server() {
+                            break;
+                        }
+                    }
+                }
+                peak = peak.max(sim.active_servers());
+            }
+            next_tick += acfg.interval_s.max(1e-3);
+        }
+
+        // Deadline shedding: if this batch's predicted queueing delay
+        // already exceeds its tenant's deadline, reject it now — typed,
+        // never a silent queue-forever.
+        let policy = admission.policy_for(b.tenant);
+        if let (Some(deadline_ms), Some(start)) =
+            (policy.queue_deadline_ms, sim.predicted_start(i as u64))
+        {
+            let wait_s = start - b.formed_at_secs;
+            if wait_s * 1e3 > deadline_ms {
+                let row = shed.row_mut(&tenant_name(b.tenant));
+                row.shed_deadline += b.len();
+                row.admitted = row.admitted.saturating_sub(b.len());
+                for (e, a) in b.envelopes.iter().zip(&b.arrivals) {
+                    rejections.push(Rejection {
+                        request_id: e.seq,
+                        tenant: b.tenant,
+                        priority: policy.priority,
+                        cause: ShedCause::DeadlineExceeded,
+                        at_secs: *a,
+                    });
+                }
+                let done = sim.shed(i as u64);
+                settle(done, &mut judge, &mut scaler, &mut per_tenant, &mut completed);
+                continue;
+            }
+        }
+
+        let done = sim.offer(i as u64, svc.service_s(b.len()));
+        settle(done, &mut judge, &mut scaler, &mut per_tenant, &mut completed);
+    }
+
+    FleetReport {
+        passed: judge.passed(),
+        achieved_ms: judge.achieved_ms(),
+        completed,
+        shed,
+        rejections,
+        events: scaler.events().to_vec(),
+        peak_agents: peak,
+        final_agents: sim.active_servers(),
+        per_tenant,
+    }
+}
+
+/// What one [`Supervisor::tick`] did to the real fleet.
+#[derive(Debug, Clone)]
+pub struct SupervisorTick {
+    /// Probe percentile that drove the decision, ms.
+    pub p_ms: f64,
+    pub before: usize,
+    pub after: usize,
+    /// Standby registry agents woken this tick.
+    pub woken: Vec<String>,
+    /// Fresh local replicas spawned this tick.
+    pub spawned: Vec<String>,
+    /// Agents retired (spawned replicas detached or remotes re-parked).
+    pub retired: Vec<String>,
+}
+
+/// The real-fleet half of the control loop: measures SLO headroom with an
+/// [`crate::slo::probe`] against the live fleet, then acts on the
+/// [`crate::server::Server`] — waking registry-discovered standby agents
+/// first (warm capacity), spawning local simulator replicas when standby
+/// runs out, and retiring its own spawn/wake moves on scale-down. It only
+/// ever retires capacity it added itself, so a fleet operator's manually
+/// attached agents are never touched.
+pub struct Supervisor {
+    server: std::sync::Arc<crate::server::Server>,
+    model: String,
+    system: String,
+    spec: SloSpec,
+    cfg: AutoscaleConfig,
+    bcfg: BatcherConfig,
+    last_change_at: f64,
+    /// Local replica ids this supervisor spawned (retire order: LIFO).
+    spawned: Vec<String>,
+    /// Remote agents this supervisor woke from standby (re-park on down).
+    woken: Vec<String>,
+}
+
+impl Supervisor {
+    pub fn new(
+        server: std::sync::Arc<crate::server::Server>,
+        model: &str,
+        system: &str,
+        spec: SloSpec,
+        cfg: AutoscaleConfig,
+        bcfg: BatcherConfig,
+    ) -> Supervisor {
+        Supervisor {
+            server,
+            model: model.to_string(),
+            system: system.to_string(),
+            spec,
+            cfg,
+            bcfg,
+            last_change_at: f64::NEG_INFINITY,
+            spawned: Vec::new(),
+            woken: Vec::new(),
+        }
+    }
+
+    /// Agents currently resolving for the supervised model.
+    pub fn fleet_size(&self) -> usize {
+        let Some(manifest) = self.server.registry.manifest(&self.model, None) else {
+            return 0;
+        };
+        self.server
+            .registry
+            .resolve(&manifest, &crate::manifest::SystemRequirements::any())
+            .len()
+    }
+
+    /// One control tick at `now_s` wall seconds: probe the live fleet at
+    /// `qps` over `count` requests, then scale toward the target.
+    pub fn tick(
+        &mut self,
+        now_s: f64,
+        qps: f64,
+        count: usize,
+    ) -> Result<SupervisorTick, crate::server::ServerError> {
+        let job = crate::server::EvalJob::new(
+            &self.model,
+            crate::scenario::Scenario::FixedQps { qps, count },
+        );
+        let probe = crate::slo::probe(&self.server, &job, &self.bcfg, self.spec, qps, count)?;
+        let before = self.fleet_size();
+        let mut tick = SupervisorTick {
+            p_ms: probe.achieved_ms,
+            before,
+            after: before,
+            woken: Vec::new(),
+            spawned: Vec::new(),
+            retired: Vec::new(),
+        };
+        if now_s - self.last_change_at < self.cfg.cooldown_s {
+            return Ok(tick);
+        }
+        let target = target_agents(probe.achieved_ms, &self.spec, before, &self.cfg);
+        if target > before {
+            self.scale_up(target - before, &mut tick);
+        } else if target < before {
+            self.scale_down(before - target, &mut tick);
+        }
+        if tick.after != tick.before {
+            self.last_change_at = now_s;
+        }
+        Ok(tick)
+    }
+
+    fn scale_up(&mut self, mut need: usize, tick: &mut SupervisorTick) {
+        // Warm standby capacity first: registry-discovered agents parked by
+        // the operator (or a previous scale-down) wake instantly.
+        for id in self.server.registry.standby_agents() {
+            if need == 0 {
+                break;
+            }
+            if self.server.registry.set_standby(&id, false) {
+                self.woken.push(id.clone());
+                tick.woken.push(id);
+                need -= 1;
+            }
+        }
+        // Then spawn fresh local simulator replicas.
+        while need > 0 {
+            let Some((agent, _, _)) = crate::agent::try_sim_agent(
+                &self.system,
+                crate::sysmodel::Device::Gpu,
+                crate::tracing::TraceLevel::None,
+                self.server.evaldb.clone(),
+                self.server.traces.clone(),
+            ) else {
+                break;
+            };
+            let id = self.server.attach_local_agent(agent);
+            self.spawned.push(id.clone());
+            tick.spawned.push(id);
+            need -= 1;
+        }
+        tick.after = self.fleet_size();
+    }
+
+    fn scale_down(&mut self, mut excess: usize, tick: &mut SupervisorTick) {
+        // Undo our own moves, newest first: detach spawned replicas, then
+        // re-park woken standbys. Never touch operator-attached agents.
+        while excess > 0 {
+            if let Some(id) = self.spawned.pop() {
+                self.server.detach_local_agent(&id);
+                tick.retired.push(id);
+                excess -= 1;
+            } else if let Some(id) = self.woken.pop() {
+                if self.server.registry.set_standby(&id, true) {
+                    tick.retired.push(id);
+                }
+                excess -= 1;
+            } else {
+                break;
+            }
+        }
+        tick.after = self.fleet_size();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcher::admission::TenantPolicy;
+    use crate::scenario::Scenario;
+
+    fn spec10() -> SloSpec {
+        SloSpec { percentile: 99.0, bound_ms: 10.0 }
+    }
+
+    #[test]
+    fn target_tracking_has_a_dead_band() {
+        let cfg = AutoscaleConfig { min_agents: 1, max_agents: 8, ..Default::default() };
+        let spec = spec10();
+        // Inside the band (between 3ms and 9ms): hold.
+        assert_eq!(target_agents(5.0, &spec, 2, &cfg), 2);
+        assert_eq!(target_agents(8.9, &spec, 2, &cfg), 2);
+        // Over the scale-up threshold: grow, proportionally to overshoot.
+        assert_eq!(target_agents(9.5, &spec, 2, &cfg), 3);
+        assert!(target_agents(40.0, &spec, 2, &cfg) > 3, "big overshoot scales faster");
+        // Never past max.
+        assert_eq!(target_agents(1000.0, &spec, 8, &cfg), 8);
+        // Under the scale-down threshold: shrink by one, never below min.
+        assert_eq!(target_agents(1.0, &spec, 3, &cfg), 2);
+        assert_eq!(target_agents(1.0, &spec, 1, &cfg), 1);
+        // NaN (empty window) holds instead of scaling on garbage.
+        assert_eq!(target_agents(f64::NAN, &spec, 4, &cfg), 4);
+    }
+
+    #[test]
+    fn cooldown_prevents_flapping() {
+        let cfg = AutoscaleConfig { cooldown_s: 5.0, window: 8, ..Default::default() };
+        let mut scaler = Autoscaler::new(spec10(), cfg);
+        for _ in 0..8 {
+            scaler.observe(0.050); // 50ms ≫ 10ms bound
+        }
+        assert!(scaler.decide(0.0, 1).is_some(), "first decision fires");
+        assert!(scaler.decide(1.0, 2).is_none(), "cooldown holds");
+        assert!(scaler.decide(6.0, 2).is_some(), "cooldown expired");
+        assert_eq!(scaler.events().len(), 2);
+        assert!(scaler.events()[0].to > scaler.events()[0].from);
+    }
+
+    #[test]
+    fn autoscaled_replay_absorbs_a_spike_the_static_fleet_cannot() {
+        // A 10× diurnal spike over a 1-agent baseline.
+        let scenario = Scenario::Diurnal {
+            peak_qps: 2000.0,
+            trough_qps: 200.0,
+            period_s: 8.0,
+            count: 12_000,
+        };
+        let w = Workload::generate(&scenario, 7);
+        let bcfg = BatcherConfig::new(8, 2.0);
+        let svc = ServiceModel { base_s: 0.001, per_item_s: 0.0004 };
+        let spec = spec10();
+        let acfg = AutoscaleConfig { min_agents: 1, max_agents: 8, ..Default::default() };
+        let adm = AdmissionConfig::default();
+        let scaled = run_autoscaled_sim(&w, &bcfg, &adm, spec, &acfg, &svc, 1, true);
+        let fixed = run_autoscaled_sim(&w, &bcfg, &adm, spec, &acfg, &svc, 1, false);
+        assert!(scaled.peak_agents > 1, "controller grew the fleet");
+        assert!(!scaled.events.is_empty());
+        assert_eq!(fixed.peak_agents, 1, "static fleet never grew");
+        assert_eq!(fixed.events.len(), 0);
+        assert!(
+            scaled.achieved_ms < fixed.achieved_ms,
+            "autoscaled p99 {:.2}ms vs static {:.2}ms",
+            scaled.achieved_ms,
+            fixed.achieved_ms
+        );
+        assert_eq!(scaled.completed, 12_000, "nothing lost without deadlines");
+    }
+
+    #[test]
+    fn deadline_shedding_produces_typed_rejections() {
+        // One overloaded best-effort tenant with a tight queue deadline on
+        // a single static server: most batches blow the deadline.
+        let scenario = Scenario::FixedQps { qps: 2000.0, count: 2000 };
+        let w = Workload::generate(&scenario, 3);
+        let bcfg = BatcherConfig::new(8, 1.0);
+        let svc = ServiceModel { base_s: 0.004, per_item_s: 0.001 };
+        let adm = AdmissionConfig::default().with_tenant(
+            0,
+            TenantPolicy {
+                priority: crate::batcher::Priority::Low,
+                rate_per_s: None,
+                burst: 1.0,
+                queue_deadline_ms: Some(20.0),
+            },
+        );
+        let acfg = AutoscaleConfig { max_agents: 1, ..Default::default() };
+        let report = run_autoscaled_sim(&w, &bcfg, &adm, spec10(), &acfg, &svc, 1, false);
+        assert!(report.shed.total_shed() > 0, "overload must shed");
+        let row = &report.shed.rows["all"];
+        assert!(row.shed_deadline > 0);
+        assert_eq!(row.offered, 2000);
+        assert_eq!(row.admitted + row.shed_deadline, 2000);
+        assert_eq!(report.completed + report.shed.total_shed(), 2000, "every request accounted");
+        let low = crate::batcher::Priority::Low;
+        assert!(report
+            .rejections
+            .iter()
+            .all(|r| r.cause == ShedCause::DeadlineExceeded && r.priority == low));
+        // Determinism: the whole report reproduces.
+        let again = run_autoscaled_sim(&w, &bcfg, &adm, spec10(), &acfg, &svc, 1, false);
+        assert_eq!(report.shed, again.shed);
+        assert_eq!(report.completed, again.completed);
+    }
+
+    #[test]
+    fn supervisor_scales_the_live_fleet_and_only_retires_its_own() {
+        use crate::tracing::TraceLevel;
+        let server = crate::server::Server::sim_platform(TraceLevel::None);
+        let base = {
+            let m = server.registry.manifest("BVLC_AlexNet", None).unwrap();
+            server
+                .registry
+                .resolve(&m, &crate::manifest::SystemRequirements::any())
+                .len()
+        };
+        let spec = SloSpec { percentile: 99.0, bound_ms: 0.5 };
+        let cfg = AutoscaleConfig {
+            min_agents: 1,
+            max_agents: base + 3,
+            cooldown_s: 0.0,
+            ..Default::default()
+        };
+        let mut sup = Supervisor::new(
+            server.clone(),
+            "BVLC_AlexNet",
+            "aws_p3",
+            spec,
+            cfg,
+            BatcherConfig::new(8, 2.0),
+        );
+        // Saturating load against a tight 0.5ms bound: the probe must blow
+        // the SLO and the supervisor must add capacity.
+        let tick = sup.tick(0.0, 4000.0, 256).expect("probe runs");
+        assert!(tick.p_ms > 0.5, "probe saw the overload: {:.3}ms", tick.p_ms);
+        assert!(tick.after > tick.before, "{tick:?}");
+        assert!(!tick.spawned.is_empty() || !tick.woken.is_empty());
+        // Forced scale-down retires only supervisor-spawned agents.
+        let spawned = tick.spawned.clone();
+        let mut down = SupervisorTick {
+            p_ms: 0.0,
+            before: sup.fleet_size(),
+            after: 0,
+            woken: vec![],
+            spawned: vec![],
+            retired: vec![],
+        };
+        sup.scale_down(spawned.len(), &mut down);
+        assert_eq!(down.retired, spawned.iter().rev().cloned().collect::<Vec<_>>());
+        assert_eq!(sup.fleet_size(), base, "operator fleet untouched");
+    }
+}

@@ -1,0 +1,375 @@
+//! Priority-aware admission control and load shedding for the batch path.
+//!
+//! Under million-user offered load the queue is the failure mode: an
+//! overloaded fleet that admits everything converts overload into unbounded
+//! queueing delay, which violates *every* tenant's SLO instead of just the
+//! traffic that caused it. This module makes overload an explicit, typed
+//! decision taken **before** a request ever joins a batch:
+//!
+//! 1. **Per-tenant token buckets** ([`TenantPolicy::rate_per_s`]): each
+//!    tenant's sustained rate is capped, with a configurable burst
+//!    allowance. Refill happens in *virtual* time (the workload's arrival
+//!    clock), so admission is a pure deterministic function of
+//!    `(config, workload)` — replayable, testable, and identical on every
+//!    node that plans the same workload.
+//! 2. **Deadline-aware shedding** ([`TenantPolicy::queue_deadline_ms`]):
+//!    the autoscale replay ([`crate::autoscale`]) drops a queued batch
+//!    whose predicted start already exceeds its tenant's queueing deadline
+//!    — a request that would blow its deadline anyway is cheaper to reject
+//!    now than to serve late.
+//!
+//! Every drop is a typed [`Rejection`] naming the tenant, its
+//! [`Priority`], the [`ShedCause`], and the request identity — never a
+//! silent queue-forever. Aggregate accounting rides in
+//! [`crate::metrics::ShedSeries`] next to the latency metrics so the
+//! analysis layer reports *who* was shed alongside *who* was slow.
+
+use crate::scenario::{Request, Workload};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Traffic class. `High` is the paying/interactive tier the SLO protects;
+/// `Low` is best-effort traffic the platform sheds first under overload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    #[default]
+    High,
+    Low,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+}
+
+/// Admission policy for one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantPolicy {
+    pub priority: Priority,
+    /// Sustained admitted rate, requests/second. `None` = unlimited.
+    pub rate_per_s: Option<f64>,
+    /// Burst allowance in requests (token-bucket depth). Only meaningful
+    /// with a rate; clamped to ≥ 1 so a rated tenant can always send one.
+    pub burst: f64,
+    /// Maximum tolerable queueing delay before service starts,
+    /// milliseconds. `None` = wait forever (no deadline shedding).
+    pub queue_deadline_ms: Option<f64>,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy {
+            priority: Priority::High,
+            rate_per_s: None,
+            burst: 1.0,
+            queue_deadline_ms: None,
+        }
+    }
+}
+
+impl TenantPolicy {
+    pub fn best_effort(rate_per_s: f64, burst: f64, queue_deadline_ms: f64) -> TenantPolicy {
+        TenantPolicy {
+            priority: Priority::Low,
+            rate_per_s: Some(rate_per_s),
+            burst,
+            queue_deadline_ms: Some(queue_deadline_ms),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("priority", Json::str(self.priority.as_str())),
+            ("rate_per_s", self.rate_per_s.map(Json::num).unwrap_or(Json::Null)),
+            ("burst", Json::num(self.burst)),
+            (
+                "queue_deadline_ms",
+                self.queue_deadline_ms.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Per-tenant policies plus the default applied to tenants not listed.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionConfig {
+    pub tenants: BTreeMap<u32, TenantPolicy>,
+    pub default: TenantPolicy,
+}
+
+impl AdmissionConfig {
+    pub fn with_tenant(mut self, tenant: u32, policy: TenantPolicy) -> AdmissionConfig {
+        self.tenants.insert(tenant, policy);
+        self
+    }
+
+    pub fn policy_for(&self, tenant: u32) -> &TenantPolicy {
+        self.tenants.get(&tenant).unwrap_or(&self.default)
+    }
+
+    /// Canonical JSON fingerprint — folded into the
+    /// [`crate::evaldb::EvalSpec`] digest when a job runs with admission
+    /// control, so rated and unrated runs never memoize into each other.
+    pub fn fingerprint_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "tenants",
+                Json::Obj(
+                    self.tenants
+                        .iter()
+                        .map(|(t, p)| (t.to_string(), p.to_json()))
+                        .collect(),
+                ),
+            ),
+            ("default", self.default.to_json()),
+        ])
+    }
+}
+
+/// Why a request (or a whole queued batch) was dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// The tenant's token bucket was empty at arrival.
+    RateLimited,
+    /// Predicted queueing delay exceeded the tenant's deadline.
+    DeadlineExceeded,
+}
+
+impl ShedCause {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedCause::RateLimited => "rate_limited",
+            ShedCause::DeadlineExceeded => "deadline_exceeded",
+        }
+    }
+}
+
+/// A typed admission rejection — the caller always learns *that* and *why*
+/// a request was dropped; nothing is silently queued forever.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rejection {
+    pub request_id: u64,
+    pub tenant: u32,
+    pub priority: Priority,
+    pub cause: ShedCause,
+    /// Virtual arrival time the decision was taken at, seconds.
+    pub at_secs: f64,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request {} (tenant {}, {}) shed at {:.6}s: {}",
+            self.request_id,
+            self.tenant,
+            self.priority.as_str(),
+            self.at_secs,
+            self.cause.as_str()
+        )
+    }
+}
+
+/// Classic token bucket on the virtual arrival clock.
+#[derive(Debug, Clone)]
+struct TokenBucket {
+    tokens: f64,
+    last_secs: f64,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, burst: f64) -> TokenBucket {
+        let burst = burst.max(1.0);
+        // Starts full: a tenant's first burst is its allowance, not a
+        // cold-start penalty.
+        TokenBucket { tokens: burst, last_secs: 0.0, rate: rate.max(0.0), burst }
+    }
+
+    fn admit(&mut self, at_secs: f64) -> bool {
+        let dt = (at_secs - self.last_secs).max(0.0);
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last_secs = self.last_secs.max(at_secs);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Stateful admission decision point. Arrivals must be offered in
+/// non-decreasing virtual time *per tenant* (which is how workloads are
+/// generated); out-of-order offers are clamped, never panic.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    buckets: BTreeMap<u32, TokenBucket>,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController { cfg, buckets: BTreeMap::new() }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Admit or reject one arrival.
+    pub fn admit(&mut self, r: &Request) -> Result<(), Rejection> {
+        let policy = self.cfg.policy_for(r.tenant);
+        let Some(rate) = policy.rate_per_s else { return Ok(()) };
+        let bucket = self
+            .buckets
+            .entry(r.tenant)
+            .or_insert_with(|| TokenBucket::new(rate, policy.burst));
+        if bucket.admit(r.at_secs) {
+            Ok(())
+        } else {
+            Err(Rejection {
+                request_id: r.id,
+                tenant: r.tenant,
+                priority: policy.priority,
+                cause: ShedCause::RateLimited,
+                at_secs: r.at_secs,
+            })
+        }
+    }
+}
+
+/// Run a whole workload through admission control: the admitted sub-workload
+/// (request identities preserved) plus every typed rejection, in arrival
+/// order. Pure in `(cfg, workload)` — server and agent reach identical
+/// admission decisions the same way they agree on batch boundaries.
+pub fn filter_workload(cfg: &AdmissionConfig, w: &Workload) -> (Workload, Vec<Rejection>) {
+    let mut ctl = AdmissionController::new(cfg.clone());
+    let mut admitted = Vec::with_capacity(w.requests.len());
+    let mut rejections = Vec::new();
+    for r in &w.requests {
+        match ctl.admit(r) {
+            Ok(()) => admitted.push(r.clone()),
+            Err(rej) => rejections.push(rej),
+        }
+    }
+    (Workload { scenario: w.scenario.clone(), requests: admitted }, rejections)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    fn req(id: u64, at: f64, tenant: u32) -> Request {
+        Request { id, at_secs: at, batch_size: 1, tenant }
+    }
+
+    #[test]
+    fn unlimited_default_admits_everything() {
+        let mut ctl = AdmissionController::new(AdmissionConfig::default());
+        for i in 0..1000 {
+            assert!(ctl.admit(&req(i, 0.0, 0)).is_ok());
+        }
+    }
+
+    #[test]
+    fn token_bucket_caps_sustained_rate_but_allows_burst() {
+        let cfg = AdmissionConfig::default().with_tenant(
+            0,
+            TenantPolicy {
+                priority: Priority::Low,
+                rate_per_s: Some(10.0),
+                burst: 5.0,
+                queue_deadline_ms: None,
+            },
+        );
+        let mut ctl = AdmissionController::new(cfg);
+        // Burst of 5 at t=0 admits in full; the 6th is shed.
+        for i in 0..5 {
+            assert!(ctl.admit(&req(i, 0.0, 0)).is_ok(), "burst item {i}");
+        }
+        let rej = ctl.admit(&req(5, 0.0, 0)).unwrap_err();
+        assert_eq!(rej.cause, ShedCause::RateLimited);
+        assert_eq!(rej.priority, Priority::Low);
+        assert_eq!(rej.request_id, 5);
+        // 0.1s later exactly one token has refilled.
+        assert!(ctl.admit(&req(6, 0.1, 0)).is_ok());
+        assert!(ctl.admit(&req(7, 0.1, 0)).is_err());
+    }
+
+    #[test]
+    fn admission_is_per_tenant() {
+        let cfg = AdmissionConfig::default()
+            .with_tenant(1, TenantPolicy::best_effort(1.0, 1.0, 50.0));
+        let mut ctl = AdmissionController::new(cfg);
+        assert!(ctl.admit(&req(0, 0.0, 1)).is_ok());
+        assert!(ctl.admit(&req(1, 0.0, 1)).is_err(), "tenant 1 is rated");
+        // Tenant 0 rides the unlimited default, unaffected by tenant 1.
+        for i in 2..20 {
+            assert!(ctl.admit(&req(i, 0.0, 0)).is_ok());
+        }
+    }
+
+    #[test]
+    fn filter_workload_is_deterministic_and_partition_complete() {
+        let w = Workload::generate(&Scenario::Poisson { rate: 2000.0, count: 500 }, 11);
+        let cfg = AdmissionConfig::default().with_tenant(
+            0,
+            TenantPolicy {
+                priority: Priority::Low,
+                rate_per_s: Some(500.0),
+                burst: 10.0,
+                queue_deadline_ms: None,
+            },
+        );
+        let (kept, shed) = filter_workload(&cfg, &w);
+        assert_eq!(kept.requests.len() + shed.len(), 500, "no request vanishes");
+        assert!(!shed.is_empty(), "4x over-rate traffic must shed");
+        assert!(!kept.requests.is_empty(), "rated tenants still get their rate");
+        // Determinism: same inputs, same partition.
+        let (kept2, shed2) = filter_workload(&cfg, &w);
+        assert_eq!(kept.requests.len(), kept2.requests.len());
+        assert_eq!(shed, shed2);
+        // Admitted identities are a subset of the original ids, in order.
+        let ids: Vec<u64> = kept.requests.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "arrival order preserved");
+    }
+
+    #[test]
+    fn rejection_displays_cause_and_identity() {
+        let rej = Rejection {
+            request_id: 7,
+            tenant: 2,
+            priority: Priority::Low,
+            cause: ShedCause::DeadlineExceeded,
+            at_secs: 1.5,
+        };
+        let s = rej.to_string();
+        assert!(s.contains("request 7"), "{s}");
+        assert!(s.contains("deadline_exceeded"), "{s}");
+        assert!(s.contains("low"), "{s}");
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_configs() {
+        let a = AdmissionConfig::default();
+        let b =
+            AdmissionConfig::default().with_tenant(0, TenantPolicy::best_effort(10.0, 2.0, 5.0));
+        assert_ne!(a.fingerprint_json().to_string(), b.fingerprint_json().to_string());
+    }
+}

@@ -34,6 +34,11 @@ use crate::scenario::{Request, Workload};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 
+pub mod admission;
+pub use admission::{
+    AdmissionConfig, AdmissionController, Priority, Rejection, ShedCause, TenantPolicy,
+};
+
 /// Batching policy: flush on size or deadline, whichever first.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -209,8 +214,11 @@ pub fn plan_batches(
             cur.push(make(r));
             arrivals.push(r.at_secs);
             // Size flush: the batch is full the moment the last slot fills.
+            // Guarded like the end-of-stream flush below: a degenerate plan
+            // shape (empty arrivals) falls back to the open time instead of
+            // panicking.
             if cur.len() >= max_batch {
-                let formed = *arrivals.last().unwrap();
+                let formed = arrivals.last().copied().unwrap_or(opened_at);
                 close(&mut batches, &mut cur, &mut arrivals, opened_at, formed, tenant);
             }
         }
@@ -223,7 +231,10 @@ pub fn plan_batches(
     // Merge tenant streams into one formed-time-ordered plan. The sort is
     // stable, so equal formed times keep tenant order and within-tenant
     // order — the plan stays a pure deterministic function of its inputs.
-    batches.sort_by(|a, b| a.formed_at_secs.partial_cmp(&b.formed_at_secs).unwrap());
+    // `total_cmp` (not `partial_cmp().unwrap()`): a NaN formed time — e.g.
+    // from a corrupt trace replay — sorts last instead of panicking the
+    // whole plan.
+    batches.sort_by(|a, b| a.formed_at_secs.total_cmp(&b.formed_at_secs));
     for (i, b) in batches.iter_mut().enumerate() {
         b.index = i as u64;
     }
@@ -297,12 +308,44 @@ pub fn least_outstanding(
         .min_by_key(|&i| (outstanding_items[i], i))
 }
 
+/// What broke: an agent, or the dispatch machinery itself. The distinction
+/// matters to callers — agent failures are retried/failed-over by design,
+/// while `Poisoned`/`QueueInvariant` mean the dispatcher's own state was
+/// compromised and the run's accounting cannot be trusted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchError {
+    /// An executor failed, returned malformed output, or none survived.
+    #[default]
+    Agent,
+    /// A dispatch lock was poisoned (a thread panicked while holding it) or
+    /// a worker thread died. State was recovered via `into_inner` so the
+    /// remaining workers shut down cleanly instead of deadlocking on the
+    /// condvar, but the outcome is discarded.
+    Poisoned,
+    /// The shared queue violated an internal invariant (the policy picked a
+    /// position that wasn't there). Surfaced as a typed error instead of an
+    /// `expect` panic inside the worker loop.
+    QueueInvariant,
+}
+
 /// Typed dispatch failure.
 #[derive(Debug)]
 pub struct DispatchError {
     /// Agent the failure is attributed to (`-` when no agent applies).
     pub agent: String,
     pub msg: String,
+    /// Failure class — see [`BatchError`].
+    pub kind: BatchError,
+}
+
+impl DispatchError {
+    fn agent_failure(agent: impl Into<String>, msg: impl Into<String>) -> DispatchError {
+        DispatchError { agent: agent.into(), msg: msg.into(), kind: BatchError::Agent }
+    }
+
+    fn internal(kind: BatchError, msg: impl Into<String>) -> DispatchError {
+        DispatchError { agent: "-".into(), msg: msg.into(), kind }
+    }
 }
 
 impl std::fmt::Display for DispatchError {
@@ -414,6 +457,28 @@ struct SharedDispatch {
     cv: Condvar,
 }
 
+/// Poison-safe lock: a poisoned mutex (some thread panicked while holding
+/// it) still yields its guard via `into_inner`. The dispatch state is then
+/// crash evidence rather than trusted accounting, so the second element
+/// tells the caller to record a [`BatchError::Poisoned`] fatal — but every
+/// worker can still wake up, observe it, and exit instead of propagating
+/// the panic into its own `lock().unwrap()`.
+fn lock_state(shared: &SharedDispatch) -> (std::sync::MutexGuard<'_, DispatchState>, bool) {
+    match shared.state.lock() {
+        Ok(g) => (g, false),
+        Err(p) => (p.into_inner(), true),
+    }
+}
+
+/// Record a machinery failure (first one wins) and wake everyone so the
+/// remaining workers see it and drain out.
+fn fail_dispatch(shared: &SharedDispatch, st: &mut DispatchState, kind: BatchError, msg: String) {
+    if st.fatal.is_none() {
+        st.fatal = Some(DispatchError::internal(kind, msg));
+    }
+    shared.cv.notify_all();
+}
+
 /// The load-balancing dispatcher: one worker per executor pulls batches off
 /// a shared queue under the [`least_outstanding`] policy, choosing which
 /// queued batch to serve with a [`DispatchPolicy`].
@@ -459,10 +524,7 @@ impl Dispatcher {
         watch: Option<Arc<dyn DispatchWatch>>,
     ) -> Result<DispatchOutcome, DispatchError> {
         if self.executors.is_empty() {
-            return Err(DispatchError {
-                agent: "-".into(),
-                msg: "no executors in the dispatch pool".into(),
-            });
+            return Err(DispatchError::agent_failure("-", "no executors in the dispatch pool"));
         }
         let expected: usize = batches.iter().map(Batch::len).sum();
         if expected == 0 {
@@ -498,7 +560,16 @@ impl Dispatcher {
                 let watch = watch.clone();
                 std::thread::spawn(move || loop {
                     let (qb, idx) = {
-                        let mut st = shared.state.lock().unwrap();
+                        let (mut st, poisoned) = lock_state(&shared);
+                        if poisoned {
+                            fail_dispatch(
+                                &shared,
+                                &mut st,
+                                BatchError::Poisoned,
+                                "dispatch state lock poisoned".into(),
+                            );
+                            return;
+                        }
                         loop {
                             if st.fatal.is_some() || st.aborted {
                                 shared.cv.notify_all();
@@ -509,14 +580,26 @@ impl Dispatcher {
                                     shared.cv.notify_all();
                                     return;
                                 }
-                                st = shared.cv.wait(st).unwrap();
+                                st = match shared.cv.wait(st) {
+                                    Ok(g) => g,
+                                    Err(p) => {
+                                        let mut st = p.into_inner();
+                                        fail_dispatch(
+                                            &shared,
+                                            &mut st,
+                                            BatchError::Poisoned,
+                                            "dispatch condvar wait found a poisoned lock".into(),
+                                        );
+                                        return;
+                                    }
+                                };
                                 continue;
                             }
                             if !st.alive.iter().any(|a| *a) {
-                                st.fatal = Some(DispatchError {
-                                    agent: "-".into(),
-                                    msg: "no surviving agents for queued batches".into(),
-                                });
+                                st.fatal = Some(DispatchError::agent_failure(
+                                    "-",
+                                    "no surviving agents for queued batches",
+                                ));
                                 shared.cv.notify_all();
                                 return;
                             }
@@ -526,9 +609,25 @@ impl Dispatcher {
                                 &st.in_flight_batches,
                                 max_in_flight,
                             ) {
-                                let pos = pick_queued(&st.queue, &st.tenant_started, policy)
-                                    .expect("non-empty queue");
-                                let qb = st.queue.remove(pos).unwrap();
+                                // The queue was non-empty above, so the
+                                // policy must name a position; if it ever
+                                // doesn't, surface a typed invariant error
+                                // instead of `expect`-panicking while the
+                                // other workers sleep on the condvar.
+                                let picked = pick_queued(&st.queue, &st.tenant_started, policy)
+                                    .and_then(|pos| st.queue.remove(pos));
+                                let Some(qb) = picked else {
+                                    fail_dispatch(
+                                        &shared,
+                                        &mut st,
+                                        BatchError::QueueInvariant,
+                                        format!(
+                                            "policy {policy:?} picked no batch from a queue of {}",
+                                            st.queue.len()
+                                        ),
+                                    );
+                                    return;
+                                };
                                 st.outstanding_items[i] += qb.batch.len();
                                 st.in_flight_batches[i] += 1;
                                 st.busy += 1;
@@ -543,7 +642,19 @@ impl Dispatcher {
                                 break (qb, i);
                             }
                             // Every live executor is at capacity.
-                            st = shared.cv.wait(st).unwrap();
+                            st = match shared.cv.wait(st) {
+                                Ok(g) => g,
+                                Err(p) => {
+                                    let mut st = p.into_inner();
+                                    fail_dispatch(
+                                        &shared,
+                                        &mut st,
+                                        BatchError::Poisoned,
+                                        "dispatch condvar wait found a poisoned lock".into(),
+                                    );
+                                    return;
+                                }
+                            };
                         }
                     };
                     // A panic inside an executor must behave like an agent
@@ -554,7 +665,16 @@ impl Dispatcher {
                     }))
                     .unwrap_or_else(|p| Err(format!("executor panicked: {}", panic_text(&p))));
                     let agent = executors[idx].id();
-                    let mut st = shared.state.lock().unwrap();
+                    let (mut st, poisoned) = lock_state(&shared);
+                    if poisoned {
+                        fail_dispatch(
+                            &shared,
+                            &mut st,
+                            BatchError::Poisoned,
+                            "dispatch state lock poisoned".into(),
+                        );
+                        return;
+                    }
                     st.outstanding_items[idx] -= qb.batch.len();
                     st.in_flight_batches[idx] -= 1;
                     st.busy -= 1;
@@ -570,35 +690,55 @@ impl Dispatcher {
                                 latency_s: r.latency_s,
                                 agent,
                             };
+                            // The watch runs under the state lock, so a
+                            // watch that panics would poison it and strand
+                            // every worker sleeping on the condvar. Catch
+                            // the panic, convert it to a typed fatal, and
+                            // let the notify below wake the pool.
                             if let Some(w) = &watch {
-                                if !w.on_batch(&row) {
-                                    st.aborted = true;
+                                let verdict = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| w.on_batch(&row)),
+                                );
+                                match verdict {
+                                    Ok(true) => {}
+                                    Ok(false) => st.aborted = true,
+                                    Err(p) => {
+                                        if st.fatal.is_none() {
+                                            st.fatal = Some(DispatchError::internal(
+                                                BatchError::Poisoned,
+                                                format!(
+                                                    "dispatch watch panicked: {}",
+                                                    panic_text(&p)
+                                                ),
+                                            ));
+                                        }
+                                    }
                                 }
                             }
                             st.log.push(row);
                             st.outputs.extend(r.outputs);
                         }
                         Ok(r) => {
-                            st.fatal = Some(DispatchError {
+                            st.fatal = Some(DispatchError::agent_failure(
                                 agent,
-                                msg: format!(
+                                format!(
                                     "batch {} returned {} outputs for {} requests",
                                     qb.batch.index,
                                     r.outputs.len(),
                                     qb.batch.len()
                                 ),
-                            });
+                            ));
                         }
                         Err(msg) => {
                             st.alive[idx] = false;
                             if qb.retried {
-                                st.fatal = Some(DispatchError {
+                                st.fatal = Some(DispatchError::agent_failure(
                                     agent,
-                                    msg: format!(
+                                    format!(
                                         "batch {} failed after one requeue: {msg}",
                                         qb.batch.index
                                     ),
-                                });
+                                ));
                             } else {
                                 st.requeued += 1;
                                 st.requeue_log.push((qb.batch.index, agent));
@@ -611,21 +751,35 @@ impl Dispatcher {
                 })
             })
             .collect();
+        // A worker that died from an uncaught panic (outside the executor
+        // `catch_unwind`) is machinery failure, not agent failure: note it
+        // and keep joining the rest instead of re-panicking here.
+        let mut dead_workers = 0usize;
         for w in workers {
-            w.join().expect("dispatch worker");
+            if w.join().is_err() {
+                dead_workers += 1;
+            }
         }
 
-        let mut st = shared.state.lock().unwrap();
+        let (mut st, poisoned) = lock_state(&shared);
         if let Some(e) = st.fatal.take() {
             return Err(e);
+        }
+        if poisoned || dead_workers > 0 {
+            return Err(DispatchError::internal(
+                BatchError::Poisoned,
+                format!(
+                    "dispatch machinery compromised: {dead_workers} dead workers, lock poisoned: {poisoned}"
+                ),
+            ));
         }
         let mut outputs = std::mem::take(&mut st.outputs);
         outputs.sort_by_key(|e| e.seq);
         if !st.aborted && outputs.len() != expected {
-            return Err(DispatchError {
-                agent: "-".into(),
-                msg: format!("lost requests: {} of {expected} completed", outputs.len()),
-            });
+            return Err(DispatchError::internal(
+                BatchError::QueueInvariant,
+                format!("lost requests: {} of {expected} completed", outputs.len()),
+            ));
         }
         Ok(DispatchOutcome {
             outputs,
@@ -699,10 +853,17 @@ pub struct QueueSim {
     n_started: usize,
     /// Free-at virtual times, one per server.
     servers: Vec<f64>,
+    /// Parallel to `servers`: retired servers keep their slot (and their
+    /// in-progress work's free-at time) but take no new batches. This is
+    /// what lets the autoscaler ([`crate::autoscale`]) grow and shrink the
+    /// virtual fleet mid-replay without renumbering the schedule log.
+    active: Vec<bool>,
     policy: DispatchPolicy,
     tenant_started: BTreeMap<u32, usize>,
     /// Start/completion facts, in schedule order.
     schedule: Vec<ScheduledBatch>,
+    /// Batches dropped by admission control before they ever started.
+    shed_count: usize,
 }
 
 impl QueueSim {
@@ -727,11 +888,95 @@ impl QueueSim {
             started: vec![false; meta.len()],
             n_started: 0,
             servers: vec![0.0; servers.max(1)],
+            active: vec![true; servers.max(1)],
             policy,
             tenant_started: BTreeMap::new(),
             schedule: Vec::with_capacity(meta.len()),
             meta,
+            shed_count: 0,
         }
+    }
+
+    /// Servers currently accepting new batches.
+    pub fn active_servers(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Batches dropped via [`QueueSim::shed`] so far.
+    pub fn shed_batches(&self) -> usize {
+        self.shed_count
+    }
+
+    /// Earliest virtual time an active server frees up — the queueing
+    /// component of a new batch's predicted start.
+    pub fn min_active_free_at(&self) -> f64 {
+        self.servers
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, a)| **a)
+            .map(|(t, _)| *t)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Predicted start time for an unstarted batch offered next: it can't
+    /// start before it formed nor before an active server frees up. `None`
+    /// for unknown or already-started indices.
+    pub fn predicted_start(&self, index: u64) -> Option<f64> {
+        let i = index as usize;
+        if i >= self.meta.len() || self.started[i] {
+            return None;
+        }
+        Some(self.meta[i].formed_at.max(self.min_active_free_at()))
+    }
+
+    /// Grow the virtual fleet by one server that becomes usable at
+    /// `free_at` (spawn/model-load delay modeled as initial busy time).
+    pub fn add_server(&mut self, free_at: f64) {
+        self.servers.push(free_at.max(0.0));
+        self.active.push(true);
+    }
+
+    /// Retire one server: the active server with the latest free-at time
+    /// stops taking new batches (its in-progress batch still completes).
+    /// Refuses to retire the last active server — a fleet of zero would
+    /// stall the replay forever.
+    pub fn retire_server(&mut self) -> bool {
+        if self.active_servers() <= 1 {
+            return false;
+        }
+        let victim = self
+            .servers
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.active[*i])
+            .max_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)))
+            .map(|(i, _)| i);
+        match victim {
+            Some(i) => {
+                self.active[i] = false;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop batch `index` before it starts (admission control / deadline
+    /// shedding): it is marked handled without ever occupying a server, its
+    /// requests never complete, and the replay advances past it. Returns
+    /// requests that became schedulable as a result. No-op for unknown or
+    /// already-started indices.
+    pub fn shed(&mut self, index: u64) -> Vec<CompletedRequest> {
+        let i = index as usize;
+        if i >= self.meta.len() || self.started[i] {
+            return Vec::new();
+        }
+        self.started[i] = true;
+        self.n_started += 1;
+        self.shed_count += 1;
+        // A shed batch reports no service time; clear any stale offer so
+        // `drain` never schedules it.
+        self.service[i] = None;
+        self.drain()
     }
 
     /// All planned batches have been scheduled.
@@ -763,13 +1008,19 @@ impl QueueSim {
             // never depends on which services are known, so stalling keeps
             // the replay deterministic.
             let Some(service) = self.service[next] else { break };
-            let (si, free_at) = self
+            // `total_cmp` keeps the earliest-free pick panic-free when an
+            // executor reported a NaN service time (the NaN server orders
+            // last, so it is simply never picked again).
+            let Some((si, free_at)) = self
                 .servers
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+                .filter(|(i, _)| self.active[*i])
+                .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)))
                 .map(|(i, t)| (i, *t))
-                .unwrap();
+            else {
+                break;
+            };
             let start = free_at.max(self.meta[next].formed_at);
             let completion = start + service;
             self.servers[si] = completion;
@@ -799,7 +1050,7 @@ impl QueueSim {
     /// batches already formed by the earliest server-free time; if none has
     /// formed yet the server idles until the earliest-formed one.
     fn pick_next(&self) -> Option<usize> {
-        let free_at = self.servers.iter().copied().fold(f64::INFINITY, f64::min);
+        let free_at = self.min_active_free_at();
         let mut first_unstarted = None;
         let mut best: Option<usize> = None;
         for i in 0..self.meta.len() {

@@ -90,3 +90,5 @@ pub mod httpd;
 pub mod server;
 
 pub mod slo;
+
+pub mod autoscale;

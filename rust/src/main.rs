@@ -48,6 +48,10 @@ const COMMANDS: &[Command] = &[
         about: "batched evaluation + across-stack bottleneck attribution",
     },
     Command { name: "slo-search", about: "max sustainable QPS under a latency SLO" },
+    Command {
+        name: "autoscale",
+        about: "SLO-driven autoscaling replay: admission control + fleet sizing",
+    },
     Command { name: "sweep", about: "memoized model×system sweep across the fleet" },
     Command {
         name: "regress",
@@ -76,6 +80,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "trace-analyze" => cmd_trace_analyze(&args),
         "slo-search" => cmd_slo_search(&args),
+        "autoscale" => cmd_autoscale(&args),
         "sweep" => cmd_sweep(&args),
         "regress" => cmd_regress(&args),
         "client" => cmd_client(&args),
@@ -172,6 +177,18 @@ fn parse_scenario(args: &Args) -> Scenario {
                 .filter_map(|t| t.parse::<f64>().ok())
                 .collect(),
         },
+        // MLPerf inference modes (MLHarness grammar).
+        "single_stream" => Scenario::SingleStream { count: args.usize_or("count", 32) },
+        "multi_stream" => Scenario::MultiStream {
+            streams: args.usize_or("streams", 8),
+            period_s: args.f64_or("period", 0.05),
+            intervals: args.usize_or("intervals", 8),
+        },
+        "server" => Scenario::Server {
+            qps: args.f64_or("qps", 100.0),
+            count: args.usize_or("count", 256),
+        },
+        "offline" => Scenario::Offline { count: args.usize_or("count", 256) },
         _ => Scenario::Online { count: args.usize_or("count", 16) },
     }
 }
@@ -708,6 +725,102 @@ fn cmd_slo_search(args: &Args) -> i32 {
         mlmodelscope::analysis::slo_frontier_table(&[model], &server.evaldb).render()
     );
     0
+}
+
+/// `mlms autoscale` — run a workload through admission control + batching
+/// + the virtual-time queueing replay with the SLO-driven autoscale
+/// control loop in the loop, and print what the controller did. The replay
+/// is deterministic and runs at simulation speed, so `--scenario server
+/// --qps 1000000` is cheap to explore.
+///
+/// ```sh
+/// mlms autoscale --scenario diurnal --peak-qps 2000 --trough-qps 200 \
+///     --count 20000 --bound-ms 10 --max-agents 8
+/// mlms autoscale --static --agents 2 ...   # fixed-fleet baseline
+/// ```
+///
+/// `--low-rate`/`--low-burst`/`--low-deadline-ms` attach a rate-limited
+/// best-effort policy to tenant 1 (the second `Mix` tenant), showing
+/// priority admission: overload sheds the low tenant, never the high one.
+fn cmd_autoscale(args: &Args) -> i32 {
+    use mlmodelscope::autoscale::{run_autoscaled_sim, AutoscaleConfig, ServiceModel};
+    use mlmodelscope::batcher::admission::{AdmissionConfig, TenantPolicy};
+    use mlmodelscope::batcher::{BatcherConfig, Priority};
+    use mlmodelscope::scenario::Workload;
+    use mlmodelscope::slo::SloSpec;
+
+    let scenario = parse_scenario(args);
+    let workload = Workload::generate(&scenario, args.u64_or("seed", 42));
+    let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 2.0));
+    cfg.fair = args.flag("fair");
+    let spec = SloSpec::new(args.f64_or("percentile", 99.0), args.f64_or("bound-ms", 10.0));
+    let acfg = AutoscaleConfig {
+        min_agents: args.usize_or("min-agents", 1),
+        max_agents: args.usize_or("max-agents", 8),
+        interval_s: args.f64_or("interval", 0.5),
+        cooldown_s: args.f64_or("cooldown", 1.0),
+        spawn_delay_s: args.f64_or("spawn-delay", 0.25),
+        ..AutoscaleConfig::default()
+    };
+    let svc = ServiceModel {
+        base_s: args.f64_or("service-base-ms", 1.0) * 1e-3,
+        per_item_s: args.f64_or("service-item-ms", 0.4) * 1e-3,
+    };
+    let mut adm = AdmissionConfig::default();
+    if args.opt("low-rate").is_some() || args.opt("low-deadline-ms").is_some() {
+        adm = adm.with_tenant(
+            1,
+            TenantPolicy {
+                priority: Priority::Low,
+                rate_per_s: args.opt("low-rate").map(|_| args.f64_or("low-rate", 500.0)),
+                burst: args.f64_or("low-burst", 64.0),
+                queue_deadline_ms: args
+                    .opt("low-deadline-ms")
+                    .map(|_| args.f64_or("low-deadline-ms", 50.0)),
+            },
+        );
+    }
+    let initial = args.usize_or("agents", acfg.min_agents);
+    let autoscale = !args.flag("static");
+    let report =
+        run_autoscaled_sim(&workload, &cfg, &adm, spec, &acfg, &svc, initial, autoscale);
+
+    println!(
+        "{} requests offered, {} completed, {} shed — fleet {} -> {} (peak {})",
+        workload.requests.len(),
+        report.completed,
+        report.shed.total_shed(),
+        initial,
+        report.final_agents,
+        report.peak_agents,
+    );
+    for e in &report.events {
+        println!("  t={:7.2}s  {} -> {} agents  ({})", e.at_s, e.from, e.to, e.reason);
+    }
+    for (tenant, row) in &report.shed.rows {
+        println!(
+            "  tenant {tenant} ({}): offered {} admitted {} shed {} (rate {}, deadline {})",
+            row.priority,
+            row.offered,
+            row.admitted,
+            row.shed_total(),
+            row.shed_rate_limited,
+            row.shed_deadline,
+        );
+    }
+    println!(
+        "{}: achieved p{:.0} {:.2} ms vs bound {:.1} ms [{}]",
+        if autoscale { "autoscaled" } else { "static" },
+        spec.percentile,
+        report.achieved_ms,
+        spec.bound_ms,
+        if report.passed { "SLO MET" } else { "SLO VIOLATED" },
+    );
+    if report.passed {
+        0
+    } else {
+        1
+    }
 }
 
 /// Reproducible fleet-wide sweep: the cross-product of models × systems ×

@@ -100,8 +100,12 @@ pub fn trimmed_mean(samples: &[f64], frac: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
+    // `total_cmp` everywhere a latency vector is sorted: a NaN sample (a
+    // corrupt trace, a failed probe) sorts last instead of panicking the
+    // metrics path — and then poisons the aggregate, which is the honest
+    // outcome for NaN input.
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let cut = ((frac * sorted.len() as f64).floor() as usize).min((sorted.len() - 1) / 2);
     let kept = &sorted[cut..sorted.len() - cut];
     kept.iter().sum::<f64>() / kept.len() as f64
@@ -118,7 +122,7 @@ pub fn median(samples: &[f64]) -> f64 {
         return f64::NAN;
     }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let n = sorted.len();
     if n % 2 == 1 {
         sorted[n / 2]
@@ -139,7 +143,7 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
         return f64::NAN;
     }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let rank = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
 }
@@ -204,6 +208,20 @@ impl Histogram {
         self.counts[idx] += 1;
         self.total += 1;
         self.sum += secs;
+    }
+
+    /// Remove one previously-[`Histogram::record`]ed sample — the eviction
+    /// half of a rolling window (see [`crate::slo::RollingSloJudge`]). The
+    /// sample must have been recorded; forgetting a value that wasn't is a
+    /// saturating no-op on the bucket rather than an underflow panic.
+    pub fn forget(&mut self, secs: f64) {
+        let idx = self.bounds.partition_point(|b| *b < secs);
+        if self.counts[idx] == 0 {
+            return;
+        }
+        self.counts[idx] -= 1;
+        self.total -= 1;
+        self.sum -= secs;
     }
 
     pub fn count(&self) -> u64 {
@@ -337,6 +355,97 @@ impl BatchingSeries {
                 .filter_map(|v| v.as_f64().map(|d| d / 1e3))
                 .collect(),
         })
+    }
+}
+
+/// Per-tenant shed accounting for one admission-controlled run — the
+/// load-shedding sibling of [`BatchingSeries`]. One row per tenant:
+/// how much was offered, how much was admitted, and how much was shed by
+/// which mechanism (token bucket vs. queueing deadline). Stored in the
+/// evaluation record's metadata (`meta["admission"]`) and rendered by
+/// [`crate::analysis`] next to the latency tables.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShedSeries {
+    pub rows: std::collections::BTreeMap<String, ShedRow>,
+}
+
+/// One tenant's admission outcome.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShedRow {
+    /// `"high"` / `"low"` — the tenant's [`crate::batcher::Priority`].
+    pub priority: String,
+    pub offered: usize,
+    pub admitted: usize,
+    pub shed_rate_limited: usize,
+    pub shed_deadline: usize,
+}
+
+impl ShedRow {
+    pub fn shed_total(&self) -> usize {
+        self.shed_rate_limited + self.shed_deadline
+    }
+}
+
+impl ShedSeries {
+    pub fn row_mut(&mut self, tenant: &str) -> &mut ShedRow {
+        self.rows.entry(tenant.to_string()).or_default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total requests shed for tenants of the given priority label.
+    pub fn shed_for_priority(&self, priority: &str) -> usize {
+        self.rows
+            .values()
+            .filter(|r| r.priority == priority)
+            .map(ShedRow::shed_total)
+            .sum()
+    }
+
+    pub fn total_shed(&self) -> usize {
+        self.rows.values().map(ShedRow::shed_total).sum()
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(
+            self.rows
+                .iter()
+                .map(|(tenant, r)| {
+                    (
+                        tenant.clone(),
+                        Json::obj(vec![
+                            ("priority", Json::str(r.priority.clone())),
+                            ("offered", Json::num(r.offered as f64)),
+                            ("admitted", Json::num(r.admitted as f64)),
+                            ("shed_rate_limited", Json::num(r.shed_rate_limited as f64)),
+                            ("shed_deadline", Json::num(r.shed_deadline as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Rebuild from the JSON stored in an evaluation record's metadata.
+    pub fn from_json(j: &crate::util::json::Json) -> Option<ShedSeries> {
+        let obj = j.as_obj()?;
+        let mut series = ShedSeries::default();
+        for (tenant, row) in obj {
+            series.rows.insert(
+                tenant.clone(),
+                ShedRow {
+                    priority: row.str_or("priority", "high").to_string(),
+                    offered: row.f64_or("offered", 0.0) as usize,
+                    admitted: row.f64_or("admitted", 0.0) as usize,
+                    shed_rate_limited: row.f64_or("shed_rate_limited", 0.0) as usize,
+                    shed_deadline: row.f64_or("shed_deadline", 0.0) as usize,
+                },
+            );
+        }
+        Some(series)
     }
 }
 

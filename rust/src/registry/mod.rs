@@ -97,6 +97,11 @@ pub struct Registry {
     next_agent: AtomicU64,
     /// Round-robin cursor for load balancing.
     rr: AtomicU64,
+    /// Agents parked in standby: registered and heartbeating, but excluded
+    /// from [`Registry::resolve`] until the autoscaler
+    /// ([`crate::autoscale`]) wakes them. Warm capacity without serving
+    /// traffic.
+    standby: Mutex<std::collections::BTreeSet<String>>,
 }
 
 impl Registry {
@@ -106,6 +111,7 @@ impl Registry {
             manifests: Mutex::new(BTreeMap::new()),
             next_agent: AtomicU64::new(1),
             rr: AtomicU64::new(0),
+            standby: Mutex::new(std::collections::BTreeSet::new()),
         })
     }
 
@@ -161,6 +167,42 @@ impl Registry {
 
     pub fn deregister_agent(&self, id: &str) {
         self.agents.lock().unwrap().remove(id);
+        self.standby.lock().unwrap().remove(id);
+    }
+
+    /// Park or wake an agent. A standby agent keeps its registration and
+    /// lease but is skipped by [`Registry::resolve`], so the fleet can hold
+    /// warm spare capacity the autoscaler brings in under load. Returns
+    /// false when the id is unknown or its lease lapsed.
+    pub fn set_standby(&self, id: &str, standby: bool) -> bool {
+        if !self.is_live(id) {
+            self.standby.lock().unwrap().remove(id);
+            return false;
+        }
+        let mut set = self.standby.lock().unwrap();
+        if standby {
+            set.insert(id.to_string());
+        } else {
+            set.remove(id);
+        }
+        true
+    }
+
+    pub fn is_standby(&self, id: &str) -> bool {
+        self.standby.lock().unwrap().contains(id)
+    }
+
+    /// Live agents currently parked in standby.
+    pub fn standby_agents(&self) -> Vec<String> {
+        let live: std::collections::BTreeSet<String> =
+            self.agents().into_iter().map(|a| a.id).collect();
+        self.standby
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|id| live.contains(*id))
+            .cloned()
+            .collect()
     }
 
     /// Live agents (expired entries are swept on read).
@@ -207,9 +249,15 @@ impl Registry {
         manifest: &ModelManifest,
         req: &SystemRequirements,
     ) -> Vec<AgentInfo> {
+        let standby = self.standby.lock().unwrap().clone();
         self.agents()
             .into_iter()
             .filter(|a| {
+                // Standby agents hold warm capacity but take no traffic
+                // until the autoscaler wakes them.
+                if standby.contains(&a.id) {
+                    return false;
+                }
                 // Framework name + version constraint.
                 let fw_ok = manifest.framework_constraint.is_any()
                     && (manifest.framework_name.is_empty() || manifest.framework_name == a.framework)
@@ -324,6 +372,11 @@ pub fn registry_service(registry: Arc<Registry>) -> Arc<dyn crate::wire::Service
             "manifest_names" => {
                 Ok(Json::arr(registry.manifest_names().iter().map(Json::str).collect()))
             }
+            "set_standby" => {
+                let id = params.str_or("id", "");
+                let standby = params.get("standby").and_then(Json::as_bool).unwrap_or(true);
+                Ok(Json::Bool(registry.set_standby(id, standby)))
+            }
             other => Err(format!("unknown registry method {other:?}")),
         }
     })
@@ -433,6 +486,32 @@ mod tests {
         // By exact system pin.
         let req = SystemRequirements::on_system("aws_p3");
         assert_eq!(reg.resolve(&m, &req)[0].system, "aws_p3");
+    }
+
+    #[test]
+    fn standby_agents_are_held_out_of_resolution() {
+        let reg = Registry::new();
+        let a = reg.register_agent(agent("aws_p3", &["gpu"], "x86_64", &[]), None);
+        let b = reg.register_agent(agent("aws_p3", &["gpu"], "x86_64", &[]), None);
+        let m = r50();
+        assert_eq!(reg.resolve(&m, &SystemRequirements::any()).len(), 2);
+        // Parked: still registered + live, but invisible to resolution.
+        assert!(reg.set_standby(&b, true));
+        assert!(reg.is_standby(&b));
+        assert_eq!(reg.agents().len(), 2, "standby keeps the registration");
+        let resolved = reg.resolve(&m, &SystemRequirements::any());
+        assert_eq!(resolved.len(), 1);
+        assert_eq!(resolved[0].id, a);
+        assert_eq!(reg.standby_agents(), vec![b.clone()]);
+        // Woken: takes traffic again.
+        assert!(reg.set_standby(&b, false));
+        assert_eq!(reg.resolve(&m, &SystemRequirements::any()).len(), 2);
+        // Unknown ids are refused; deregistration clears standby state.
+        assert!(!reg.set_standby("agent-999", true));
+        reg.set_standby(&b, true);
+        reg.deregister_agent(&b);
+        assert!(!reg.is_standby(&b));
+        assert!(reg.standby_agents().is_empty());
     }
 
     #[test]

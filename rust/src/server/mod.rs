@@ -14,10 +14,12 @@
 pub mod webui;
 
 use crate::agent::{Agent, EvalRequest};
+use crate::batcher::admission::{filter_workload, AdmissionConfig};
 use crate::batcher::{
     batching_series, plan_batches, Batch, BatchExecutor, BatcherConfig, Dispatcher,
     DispatchOutcome, DispatchWatch, QueueSim,
 };
+use crate::metrics::ShedSeries;
 use crate::tracing::{SimClock, Span, Tracer};
 use crate::evaldb::{EvalDb, EvalKey, EvalRecord, RunMeta};
 use crate::manifest::SystemRequirements;
@@ -52,6 +54,12 @@ pub struct EvalJob {
     /// the spec digest (see [`crate::evaldb::EvalSpec::run_label`]) so
     /// labeled runs memoize per run line.
     pub run_meta: RunMeta,
+    /// Priority-aware admission control applied to the generated workload
+    /// before batching: per-tenant token buckets shed over-rate traffic
+    /// with typed rejections, and the shed accounting lands in the stored
+    /// record's `meta["admission"]`. `None` (the default) admits
+    /// everything, preserving the classic workload contract bit-for-bit.
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl EvalJob {
@@ -66,6 +74,7 @@ impl EvalJob {
             seed: 42,
             all_agents: false,
             run_meta: RunMeta::default(),
+            admission: None,
         }
     }
 }
@@ -160,6 +169,18 @@ impl Server {
         let id = agent.register_with_ttl(&self.registry, "", None);
         self.local_agents.lock().unwrap().insert(id.clone(), agent);
         id
+    }
+
+    /// Detach an in-process agent previously attached with
+    /// [`Server::attach_local_agent`]: drops the handle and deregisters it
+    /// so it stops resolving. Returns whether the id was attached here.
+    /// The autoscaling supervisor uses this to retire replicas it spawned.
+    pub fn detach_local_agent(&self, id: &str) -> bool {
+        let had = self.local_agents.lock().unwrap().remove(id).is_some();
+        if had {
+            self.registry.deregister_agent(id);
+        }
+        had
     }
 
     /// Register all 37 zoo manifests (bootstrap, §4.7).
@@ -329,6 +350,32 @@ impl Server {
         // The server defines the workload (same `(scenario, seed)` contract
         // as the classic path) and the batch plan is a pure function of it.
         let workload = Workload::generate(&job.scenario, job.seed);
+        // Admission control (when configured) runs between workload
+        // generation and batching: shed requests never reach the planner,
+        // and the per-tenant accounting rides along in the record's meta.
+        let names = job.scenario.tenant_names();
+        let label = |t: u32| -> String {
+            names.get(t as usize).cloned().unwrap_or_else(|| format!("t{t}"))
+        };
+        let (workload, admission_series) = match &job.admission {
+            Some(adm) => {
+                let (admitted, rejections) = filter_workload(adm, &workload);
+                let mut shed = ShedSeries::default();
+                for r in &workload.requests {
+                    let row = shed.row_mut(&label(r.tenant));
+                    row.priority = adm.policy_for(r.tenant).priority.as_str().to_string();
+                    row.offered += 1;
+                }
+                for r in &admitted.requests {
+                    shed.row_mut(&label(r.tenant)).admitted += 1;
+                }
+                for rej in &rejections {
+                    shed.row_mut(&label(rej.tenant)).shed_rate_limited += 1;
+                }
+                (admitted, Some(shed))
+            }
+            None => (workload, None),
+        };
         let batches = plan_batches(&workload, cfg, |r| Envelope {
             seq: r.id,
             trace_id: 0,
@@ -500,7 +547,17 @@ impl Server {
         };
         // Content address of the resolved spec, with the dispatch config
         // folded in: a batched run under a different batcher setup is a
-        // different experiment and must never memoize into this one.
+        // different experiment and must never memoize into this one. An
+        // admission policy changes the admitted workload, so it folds into
+        // the digest too — but only when configured, preserving the digests
+        // of every pre-admission record.
+        let dispatch_fp = match &job.admission {
+            Some(adm) => Json::obj(vec![
+                ("batcher", cfg.fingerprint_json()),
+                ("admission", adm.fingerprint_json()),
+            ]),
+            None => cfg.fingerprint_json(),
+        };
         let mut spec = crate::evaldb::EvalSpec::for_request(
             &manifest,
             &key.system,
@@ -509,7 +566,7 @@ impl Server {
             key.batch_size,
             job.trace_level,
             job.seed,
-            cfg.fingerprint_json(),
+            dispatch_fp,
         );
         spec.run_label = job.run_meta.label.clone();
         let mut record = EvalRecord::new(key, latencies, throughput);
@@ -558,6 +615,9 @@ impl Server {
         ];
         if matches!(job.scenario, Scenario::Mix { .. }) {
             meta.push(("tenants", per_tenant.to_json()));
+        }
+        if let Some(shed) = &admission_series {
+            meta.push(("admission", shed.to_json()));
         }
         if let Some(tid) = serving_trace_id {
             meta.push(("serving_trace_id", Json::num(tid as f64)));

@@ -160,6 +160,74 @@ impl SloJudge {
     }
 }
 
+/// Rolling-window SLO judge — the measurement half of the autoscale control
+/// loop ([`crate::autoscale`]). Where [`SloJudge`] accumulates a whole
+/// probe, this one keeps only the last `window` samples (histogram record +
+/// forget on eviction), so its percentile tracks *current* load and the
+/// controller reacts to the spike, not the average of the whole day.
+pub struct RollingSloJudge {
+    spec: SloSpec,
+    window: usize,
+    samples: std::collections::VecDeque<f64>,
+    hist: Histogram,
+    /// Over-bound count within the current window.
+    over: usize,
+}
+
+impl RollingSloJudge {
+    pub fn new(spec: SloSpec, window: usize) -> RollingSloJudge {
+        RollingSloJudge {
+            spec,
+            window: window.max(1),
+            samples: std::collections::VecDeque::new(),
+            hist: Histogram::latency_default(),
+            over: 0,
+        }
+    }
+
+    pub fn observe(&mut self, secs: f64) {
+        if self.samples.len() == self.window {
+            if let Some(old) = self.samples.pop_front() {
+                self.hist.forget(old);
+                if old > self.spec.bound_secs() {
+                    self.over -= 1;
+                }
+            }
+        }
+        self.samples.push_back(secs);
+        self.hist.record(secs);
+        if secs > self.spec.bound_secs() {
+            self.over += 1;
+        }
+    }
+
+    pub fn seen(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Window percentile in ms (`NaN` while empty).
+    pub fn achieved_ms(&self) -> f64 {
+        if self.samples.is_empty() {
+            f64::NAN
+        } else {
+            self.hist.quantile((self.spec.percentile / 100.0).clamp(0.0, 1.0)) * 1e3
+        }
+    }
+
+    /// Over-bound fraction within the window, in `[0, 1]`.
+    pub fn over_fraction(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.over as f64 / self.samples.len() as f64
+        }
+    }
+
+    pub fn spec(&self) -> &SloSpec {
+        &self.spec
+    }
+}
+
 struct ProbeState {
     replay: QueueSim,
     judge: SloJudge,

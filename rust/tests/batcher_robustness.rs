@@ -1,0 +1,231 @@
+//! Robustness of the dispatch hot path: NaN-poisoned inputs and panicking
+//! components must surface as typed errors (or deterministic orderings),
+//! never as a panic, a deadlock, or silently lost requests.
+//!
+//! These are the regression tests for the `f64::total_cmp` and
+//! poison-recovery fixes: before them, a NaN `formed_at`/latency panicked
+//! `sort_by(partial_cmp().unwrap())`, an empty-queue pick `expect`-panicked
+//! a worker while the others slept on the condvar, and a panicking
+//! `DispatchWatch` poisoned the state lock under every worker's feet.
+
+use mlmodelscope::batcher::admission::{filter_workload, AdmissionConfig, TenantPolicy};
+use mlmodelscope::batcher::{
+    plan_batches, Batch, BatchError, BatchExecutor, BatchLogRow, BatchResult, BatcherConfig,
+    DispatchPolicy, DispatchWatch, Dispatcher, Priority, QueueSim,
+};
+use mlmodelscope::pipeline::{Envelope, Payload};
+use mlmodelscope::scenario::{Request, Scenario, Workload};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn envelope(r: &Request) -> Envelope {
+    Envelope { seq: r.id, trace_id: 0, parent_span: None, payload: Payload::Bytes(Vec::new()) }
+}
+
+fn workload(at_secs: &[f64]) -> Workload {
+    Workload {
+        scenario: Scenario::Online { count: at_secs.len() },
+        requests: at_secs
+            .iter()
+            .enumerate()
+            .map(|(i, at)| Request { id: i as u64, at_secs: *at, batch_size: 1, tenant: 0 })
+            .collect(),
+    }
+}
+
+/// Echoes every envelope back; optionally reports a NaN service latency.
+struct Echo {
+    id: String,
+    latency_s: f64,
+}
+
+impl BatchExecutor for Echo {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn execute(&self, batch: &Batch) -> Result<BatchResult, String> {
+        Ok(BatchResult { outputs: batch.envelopes.clone(), latency_s: self.latency_s })
+    }
+}
+
+/// Panics after `healthy` successful batches.
+struct PanicsAfter {
+    id: String,
+    healthy: usize,
+    served: AtomicUsize,
+}
+
+impl BatchExecutor for PanicsAfter {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn execute(&self, batch: &Batch) -> Result<BatchResult, String> {
+        if self.served.fetch_add(1, Ordering::SeqCst) >= self.healthy {
+            panic!("executor blew up mid-batch");
+        }
+        Ok(BatchResult { outputs: batch.envelopes.clone(), latency_s: 0.001 })
+    }
+}
+
+struct PanickingWatch;
+
+impl DispatchWatch for PanickingWatch {
+    fn on_batch(&self, _row: &BatchLogRow) -> bool {
+        panic!("watch exploded under the state lock");
+    }
+}
+
+#[test]
+fn nan_arrival_in_the_plan_never_panics_and_sorts_last() {
+    // A corrupt trace replay hands the planner a NaN arrival. Before the
+    // total_cmp fix this panicked the merge sort; now the NaN batch sorts
+    // last and every finite request still plans normally.
+    let w = workload(&[0.0, 0.002, f64::NAN, 0.004]);
+    let batches = plan_batches(&w, &BatcherConfig::new(2, 1.0), envelope);
+    let total: usize = batches.iter().map(Batch::len).sum();
+    assert_eq!(total, 4, "the NaN request still rides in some batch");
+    for (i, b) in batches.iter().enumerate() {
+        assert_eq!(b.index, i as u64, "indices stay sequential after the NaN sort");
+    }
+    let last = batches.last().unwrap();
+    assert!(
+        last.formed_at_secs.is_nan(),
+        "NaN-formed batch must order last, got {:?}",
+        batches.iter().map(|b| b.formed_at_secs).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn nan_service_latency_never_panics_the_replay_or_the_dispatch() {
+    let w = workload(&[0.0, 0.001, 0.002, 0.003]);
+    let cfg = BatcherConfig::new(2, 1.0);
+    let batches = plan_batches(&w, &cfg, envelope);
+    assert_eq!(batches.len(), 2);
+
+    // The virtual-time replay: a NaN service time is clamped at offer time
+    // (`max(0.0)` returns the non-NaN side), so the batch completes with a
+    // zero-service schedule instead of panicking a sort downstream.
+    let mut sim = QueueSim::new(&batches, 2, DispatchPolicy::Fifo);
+    let first = sim.offer(0, f64::NAN);
+    assert_eq!(first.len(), 2, "the NaN-serviced batch still completes");
+    let second = sim.offer(1, 0.001);
+    assert_eq!(second.len(), 2, "the healthy server still serves the rest");
+    assert!(second.iter().all(|c| c.latency_s.is_finite()));
+
+    // The real dispatcher: an executor reporting NaN latency completes the
+    // run; the poisoned number lands in the log, not in a panic.
+    let pool: Vec<Arc<dyn BatchExecutor>> = vec![
+        Arc::new(Echo { id: "nan".into(), latency_s: f64::NAN }),
+        Arc::new(Echo { id: "ok".into(), latency_s: 0.001 }),
+    ];
+    let outcome = Dispatcher::new(pool)
+        .dispatch(plan_batches(&w, &cfg, envelope))
+        .expect("NaN latency is data, not a crash");
+    assert_eq!(outcome.outputs.len(), 4);
+}
+
+#[test]
+fn panicking_watch_is_a_typed_poisoned_error_not_a_deadlock() {
+    let w = workload(&[0.0, 0.001, 0.002, 0.003, 0.004, 0.005]);
+    let cfg = BatcherConfig::new(2, 1.0);
+    let batches = plan_batches(&w, &cfg, envelope);
+    let pool: Vec<Arc<dyn BatchExecutor>> = vec![
+        Arc::new(Echo { id: "a".into(), latency_s: 0.001 }),
+        Arc::new(Echo { id: "b".into(), latency_s: 0.001 }),
+    ];
+    let started = Instant::now();
+    let err = Dispatcher::new(pool)
+        .dispatch_watched(batches, Some(Arc::new(PanickingWatch)))
+        .expect_err("a panicking watch must fail the dispatch");
+    assert_eq!(err.kind, BatchError::Poisoned, "wrong kind: {err:?}");
+    assert!(err.msg.contains("watch"), "error should name the watch: {}", err.msg);
+    // The regression this pins: the watch panic used to poison the state
+    // lock and strand the other worker in cv.wait() forever.
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "dispatch must fail fast, not hang on the condvar"
+    );
+}
+
+#[test]
+fn panicking_executor_fails_over_and_never_hangs() {
+    let w = workload(&[0.0, 0.001, 0.002, 0.003, 0.004, 0.005, 0.006, 0.007]);
+    let cfg = BatcherConfig::new(2, 1.0);
+    let batches = plan_batches(&w, &cfg, envelope);
+    let pool: Vec<Arc<dyn BatchExecutor>> = vec![
+        Arc::new(PanicsAfter { id: "flaky".into(), healthy: 0, served: AtomicUsize::new(0) }),
+        Arc::new(Echo { id: "steady".into(), latency_s: 0.001 }),
+    ];
+    let outcome = Dispatcher::new(pool).dispatch(batches).expect("survivor finishes the job");
+    assert_eq!(outcome.outputs.len(), 8, "every request completes despite the panic");
+    assert_eq!(outcome.requeued_batches, 1, "the panicked batch was requeued exactly once");
+
+    // With no survivors, the same panic is a typed agent failure.
+    let lone: Vec<Arc<dyn BatchExecutor>> = vec![Arc::new(PanicsAfter {
+        id: "doomed".into(),
+        healthy: 0,
+        served: AtomicUsize::new(0),
+    })];
+    let w2 = workload(&[0.0, 0.001]);
+    let err = Dispatcher::new(lone)
+        .dispatch(plan_batches(&w2, &cfg, envelope))
+        .expect_err("no survivors");
+    assert_eq!(err.kind, BatchError::Agent, "executor death is agent failure: {err:?}");
+}
+
+#[test]
+fn degenerate_plans_are_fine() {
+    let cfg = BatcherConfig::new(8, 5.0);
+    // Empty workload → empty plan → empty outcome, no unwrap on a missing
+    // last arrival anywhere.
+    let empty = workload(&[]);
+    let batches = plan_batches(&empty, &cfg, envelope);
+    assert!(batches.is_empty());
+    let pool: Vec<Arc<dyn BatchExecutor>> =
+        vec![Arc::new(Echo { id: "idle".into(), latency_s: 0.001 })];
+    let outcome = Dispatcher::new(pool).dispatch(batches).expect("empty dispatch is a no-op");
+    assert_eq!(outcome.outputs.len(), 0);
+    // Single request, all-NaN arrivals, zero-capacity coercion: plan, don't
+    // panic.
+    for probe in [vec![f64::NAN], vec![0.0], vec![f64::NAN, f64::NAN]] {
+        let w = workload(&probe);
+        let b = plan_batches(&w, &BatcherConfig::new(0, 0.0), envelope);
+        let total: usize = b.iter().map(Batch::len).sum();
+        assert_eq!(total, probe.len());
+    }
+}
+
+#[test]
+fn admission_filter_partitions_a_mix_deterministically() {
+    let scenario = Scenario::Mix {
+        tenants: vec![
+            ("paying".into(), Scenario::FixedQps { qps: 100.0, count: 200 }),
+            ("freeloader".into(), Scenario::FixedQps { qps: 400.0, count: 400 }),
+        ],
+    };
+    let w = Workload::generate(&scenario, 11);
+    let cfg = AdmissionConfig::default().with_tenant(
+        1,
+        TenantPolicy {
+            priority: Priority::Low,
+            rate_per_s: Some(50.0),
+            burst: 10.0,
+            queue_deadline_ms: None,
+        },
+    );
+    let (admitted, rejected) = filter_workload(&cfg, &w);
+    assert_eq!(admitted.requests.len() + rejected.len(), w.requests.len(), "full partition");
+    assert!(rejected.iter().all(|r| r.tenant == 1), "only the rate-limited tenant sheds");
+    assert!(!rejected.is_empty(), "8x over its cap, the freeloader must shed");
+    assert!(
+        admitted.requests.iter().filter(|r| r.tenant == 0).count() == 200,
+        "the unlimited tenant is untouched"
+    );
+    // Deterministic: same inputs, same partition.
+    let (again, rejected_again) = filter_workload(&cfg, &w);
+    assert_eq!(again.requests.len(), admitted.requests.len());
+    assert_eq!(rejected_again, rejected);
+}

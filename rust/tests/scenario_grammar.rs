@@ -1,0 +1,220 @@
+//! The MLPerf scenario grammar (MLHarness, arXiv:2111.05231) is gated
+//! here: the four modes — `SingleStream`, `MultiStream`, `Server`,
+//! `Offline` — must round-trip through JSON exactly, reject malformed
+//! specs with `None` (never silently default into a different experiment
+//! than the spec digest claims), compose into a `Scenario::Mix`, generate
+//! the schedule shapes MLPerf defines, and replay at millions of
+//! simulated queries per second in virtual time.
+
+use mlmodelscope::batcher::{plan_batches, Batch, BatcherConfig, DispatchPolicy, QueueSim};
+use mlmodelscope::pipeline::{Envelope, Payload};
+use mlmodelscope::scenario::{Request, Scenario, Workload};
+use mlmodelscope::util::json::Json;
+
+fn envelope(r: &Request) -> Envelope {
+    Envelope { seq: r.id, trace_id: 0, parent_span: None, payload: Payload::Bytes(Vec::new()) }
+}
+
+fn mlperf_variants() -> Vec<Scenario> {
+    vec![
+        Scenario::SingleStream { count: 32 },
+        Scenario::MultiStream { streams: 8, period_s: 0.05, intervals: 12 },
+        Scenario::Server { qps: 2048.0, count: 4096 },
+        Scenario::Offline { count: 24_576 },
+    ]
+}
+
+#[test]
+fn mlperf_variants_round_trip_through_json() {
+    for s in mlperf_variants() {
+        let j = s.to_json();
+        let back = Scenario::from_json(&j).expect("a spec we serialized must parse");
+        assert_eq!(back, s, "round-trip identity for {}", s.name());
+    }
+    // And from hand-written wire text, not just our own serializer.
+    let j = Json::parse(r#"{"kind":"server","qps":250.5,"count":64}"#).unwrap();
+    assert_eq!(
+        Scenario::from_json(&j),
+        Some(Scenario::Server { qps: 250.5, count: 64 })
+    );
+    let j = Json::parse(r#"{"kind":"multi_stream","streams":4,"period_s":0.1,"intervals":3}"#)
+        .unwrap();
+    assert_eq!(
+        Scenario::from_json(&j),
+        Some(Scenario::MultiStream { streams: 4, period_s: 0.1, intervals: 3 })
+    );
+}
+
+#[test]
+fn malformed_mlperf_specs_are_rejected_never_defaulted() {
+    // Missing fields: the strict grammar refuses to invent a value.
+    let cases = [
+        Json::obj(vec![("kind", Json::str("single_stream"))]),
+        Json::obj(vec![("kind", Json::str("offline"))]),
+        Json::obj(vec![("kind", Json::str("server")), ("qps", Json::num(100.0))]),
+        Json::obj(vec![("kind", Json::str("server")), ("count", Json::num(64.0))]),
+        Json::obj(vec![
+            ("kind", Json::str("multi_stream")),
+            ("streams", Json::num(4.0)),
+            ("intervals", Json::num(3.0)),
+        ]),
+        // Non-positive and non-finite values.
+        Json::obj(vec![("kind", Json::str("single_stream")), ("count", Json::num(0.0))]),
+        Json::obj(vec![("kind", Json::str("offline")), ("count", Json::num(-5.0))]),
+        Json::obj(vec![("kind", Json::str("offline")), ("count", Json::num(f64::NAN))]),
+        Json::obj(vec![
+            ("kind", Json::str("server")),
+            ("qps", Json::num(0.0)),
+            ("count", Json::num(64.0)),
+        ]),
+        Json::obj(vec![
+            ("kind", Json::str("server")),
+            ("qps", Json::num(f64::INFINITY)),
+            ("count", Json::num(64.0)),
+        ]),
+        Json::obj(vec![
+            ("kind", Json::str("multi_stream")),
+            ("streams", Json::num(4.0)),
+            ("period_s", Json::num(-0.1)),
+            ("intervals", Json::num(3.0)),
+        ]),
+        Json::obj(vec![
+            ("kind", Json::str("multi_stream")),
+            ("streams", Json::num(f64::NAN)),
+            ("period_s", Json::num(0.1)),
+            ("intervals", Json::num(3.0)),
+        ]),
+        // Wrong type for a field.
+        Json::obj(vec![("kind", Json::str("single_stream")), ("count", Json::str("lots"))]),
+        // Unknown kinds never fall back to a default scenario.
+        Json::obj(vec![("kind", Json::str("mlperf_edge")), ("count", Json::num(8.0))]),
+    ];
+    for (i, j) in cases.iter().enumerate() {
+        assert_eq!(Scenario::from_json(j), None, "case {i} must be rejected: {j:?}");
+    }
+    // A Mix containing one malformed MLPerf tenant is rejected whole —
+    // partial parses would change the experiment's tenant composition.
+    let bad_mix = Json::obj(vec![
+        ("kind", Json::str("mix")),
+        (
+            "tenants",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("good")),
+                    (
+                        "scenario",
+                        Json::obj(vec![
+                            ("kind", Json::str("offline")),
+                            ("count", Json::num(8.0)),
+                        ]),
+                    ),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("bad")),
+                    ("scenario", Json::obj(vec![("kind", Json::str("server"))])),
+                ]),
+            ]),
+        ),
+    ]);
+    assert_eq!(Scenario::from_json(&bad_mix), None, "a bad tenant poisons the whole mix");
+    // Contrast: the legacy grammar keeps its lenient defaults, so old
+    // stored specs still parse. Strictness is scoped to the MLPerf modes.
+    let legacy = Json::obj(vec![("kind", Json::str("online"))]);
+    assert_eq!(Scenario::from_json(&legacy), Some(Scenario::Online { count: 32 }));
+}
+
+#[test]
+fn mix_of_mlperf_tenants_round_trips_with_identity() {
+    let mix = Scenario::Mix {
+        tenants: vec![
+            ("edge".into(), Scenario::SingleStream { count: 16 }),
+            ("cameras".into(), Scenario::MultiStream { streams: 8, period_s: 0.05, intervals: 4 }),
+            ("datacenter".into(), Scenario::Server { qps: 500.0, count: 100 }),
+            ("nightly".into(), Scenario::Offline { count: 64 }),
+        ],
+    };
+    let back = Scenario::from_json(&mix.to_json()).expect("MLPerf tenants compose into a Mix");
+    assert_eq!(back, mix);
+    assert_eq!(
+        back.tenant_names(),
+        vec!["edge".to_string(), "cameras".into(), "datacenter".into(), "nightly".into()]
+    );
+    assert_eq!(back.total_items(), 16 + 32 + 100 + 64);
+    // Generation tags every request with its tenant and merges by arrival.
+    let w = Workload::generate(&mix, 13);
+    assert_eq!(w.requests.len(), 212);
+    let count_of = |t: u32| w.requests.iter().filter(|r| r.tenant == t).count();
+    assert_eq!((count_of(0), count_of(1), count_of(2), count_of(3)), (16, 32, 100, 64));
+    for pair in w.requests.windows(2) {
+        assert!(pair[1].at_secs >= pair[0].at_secs, "merged schedule is time-ordered");
+    }
+}
+
+#[test]
+fn generation_shapes_match_the_mlperf_modes() {
+    // SingleStream: closed loop — every arrival offset is zero.
+    let ss = Workload::generate(&Scenario::SingleStream { count: 16 }, 3);
+    assert_eq!(ss.requests.len(), 16);
+    assert!(ss.requests.iter().all(|r| r.at_secs == 0.0 && r.batch_size == 1));
+
+    // MultiStream: `streams` queries share each interval's arrival instant.
+    let ms = Scenario::MultiStream { streams: 8, period_s: 0.05, intervals: 12 };
+    let w = Workload::generate(&ms, 3);
+    assert_eq!(w.requests.len(), 96);
+    for (i, r) in w.requests.iter().enumerate() {
+        let interval = i / 8;
+        assert!(
+            (r.at_secs - interval as f64 * 0.05).abs() < 1e-12,
+            "query {i} must arrive at its interval boundary"
+        );
+    }
+    // The schedule is deterministic and seed-independent (no randomness).
+    assert_eq!(w.requests, Workload::generate(&ms, 99).requests);
+
+    // Server: open-loop Poisson — strictly increasing, mean rate ≈ qps.
+    let srv = Scenario::Server { qps: 1000.0, count: 20_000 };
+    let w = Workload::generate(&srv, 5);
+    for pair in w.requests.windows(2) {
+        assert!(pair[1].at_secs > pair[0].at_secs, "Poisson arrivals strictly increase");
+    }
+    let rate = w.offered_rate();
+    assert!((rate - 1000.0).abs() / 1000.0 < 0.05, "measured rate {rate}");
+    assert_eq!(w.requests, Workload::generate(&srv, 5).requests, "deterministic per seed");
+    assert_ne!(w.requests, Workload::generate(&srv, 6).requests, "seed moves the schedule");
+
+    // Offline: the whole query set is available at t = 0.
+    let off = Workload::generate(&Scenario::Offline { count: 64 }, 3);
+    assert_eq!(off.requests.len(), 64);
+    assert!(off.requests.iter().all(|r| r.at_secs == 0.0));
+    assert!(off.offered_rate().is_infinite(), "batch-at-zero has no finite offered rate");
+}
+
+#[test]
+fn million_qps_server_mode_replays_in_virtual_time_with_full_accounting() {
+    // One million simulated queries per second: the arrival schedule, the
+    // batch plan, and the queueing replay are all virtual-time, so this
+    // runs in test time. 100k arrivals pack into a tenth of a second.
+    let scenario = Scenario::Server { qps: 1_000_000.0, count: 100_000 };
+    let w = Workload::generate(&scenario, 17);
+    assert_eq!(w.requests.len(), 100_000);
+    let span = w.requests.last().unwrap().at_secs - w.requests[0].at_secs;
+    assert!(span < 1.0, "1M qps must pack 100k arrivals into under a second: {span:.4}s");
+
+    let batches = plan_batches(&w, &BatcherConfig::new(32, 2.0), envelope);
+    let planned: usize = batches.iter().map(Batch::len).sum();
+    assert_eq!(planned, 100_000, "the plan carries every request");
+
+    let mut sim = QueueSim::new(&batches, 8, DispatchPolicy::Fifo);
+    let mut completed = 0usize;
+    for (i, b) in batches.iter().enumerate() {
+        completed += sim.offer(i as u64, 0.001 + 0.0004 * b.len() as f64).len();
+    }
+    assert!(sim.is_complete(), "every batch was scheduled");
+    assert_eq!(completed, 100_000, "every request completes — none silently vanish");
+    // The schedule log is a total, time-ordered record of the replay.
+    let log = sim.schedule_log();
+    assert_eq!(log.len(), batches.len());
+    for s in log {
+        assert!(s.completion >= s.start && s.start >= s.formed_at);
+    }
+}
