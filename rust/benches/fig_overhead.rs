@@ -1,0 +1,112 @@
+//! Fig. overhead — benchmark the benchmarker: the platform self-profiles
+//! and ratchets its own hot-path cost.
+//!
+//! Runs [`mlmodelscope::overhead::measure`] at a moderate configuration and
+//! pins three families of invariants:
+//!
+//! 1. **Ablation gates** (shared with `mlms overhead` via
+//!    [`OverheadReport::check`]): span volume and wall-clock overhead are
+//!    monotone in trace level, `NONE` publishes nothing, and a span attempt
+//!    through a disabled tracer is within noise of a no-op loop.
+//! 2. **Throughput floors** — the ratchet. The optimized hot paths (evaldb
+//!    kept-open appender, sharded span sink, cached-sorted percentiles)
+//!    must stay above conservative post-optimization floors. The floors are
+//!    set well below measured dev-machine throughput so they survive CI
+//!    jitter, but far above the pre-optimization numbers they replace
+//!    (per-put open/close, single global sink lock, per-call re-sort).
+//! 3. **Relative speedups** that are hardware-independent: batched
+//!    `put_all` must not regress below sequential `put`, and the cached
+//!    percentile path must beat the re-sort path outright.
+
+use mlmodelscope::benchkit::{bench_header, Table};
+use mlmodelscope::overhead::{measure, OverheadConfig};
+
+fn main() {
+    bench_header(
+        "fig_overhead",
+        "self-profiling the harness: per-request overhead by trace level + hot-path ratchet",
+    );
+
+    let cfg = OverheadConfig { requests: 48, trials: 3, iters: 4000, ..Default::default() };
+    let report = measure(&cfg);
+    print!("{}", report.render());
+
+    // Gate family 1: the shared ablation invariants.
+    report.check().expect("self-profiling invariants");
+
+    let c = &report.components;
+
+    // Gate family 2: absolute throughput floors (the ratchet). Conservative
+    // on purpose — an order of magnitude below a dev machine — but any
+    // return to the pre-optimization code paths lands *under* them:
+    //   put:        per-record open/append/close ran at ~5k rec/s on the
+    //               same segments; the kept-open appender must hold 20k.
+    //   span:       500k spans/s needs the sharded sink; a contended global
+    //               Vec lock with per-span formatting sat near it or below.
+    //   percentile: 100k queries/s is trivially held by an indexed read on
+    //               a cached sort and impossible for clone+sort-per-call on
+    //               10k samples.
+    const PUT_FLOOR: f64 = 20_000.0;
+    const SPAN_FLOOR: f64 = 500_000.0;
+    const PCTL_FLOOR: f64 = 100_000.0;
+    assert!(
+        c.put_per_sec >= PUT_FLOOR,
+        "evaldb put throughput {:.0}/s under floor {PUT_FLOOR:.0}/s — kept-open appender regressed",
+        c.put_per_sec
+    );
+    assert!(
+        c.span_per_sec >= SPAN_FLOOR,
+        "span publish throughput {:.0}/s under floor {SPAN_FLOOR:.0}/s — sharded sink regressed",
+        c.span_per_sec
+    );
+    assert!(
+        c.percentile_cached_per_sec >= PCTL_FLOOR,
+        "cached percentile throughput {:.0}/s under floor {PCTL_FLOOR:.0}/s — sorted-once path regressed",
+        c.percentile_cached_per_sec
+    );
+
+    // Gate family 3: relative speedups, independent of the machine.
+    assert!(
+        c.put_all_per_sec >= c.put_per_sec * 0.8,
+        "batched put_all ({:.0}/s) regressed below sequential put ({:.0}/s): batching must not cost throughput",
+        c.put_all_per_sec,
+        c.put_per_sec
+    );
+    assert!(
+        c.percentile_cached_per_sec > c.percentile_naive_per_sec,
+        "cached percentile path ({:.0}/s) must beat clone+sort-per-call ({:.0}/s)",
+        c.percentile_cached_per_sec,
+        c.percentile_naive_per_sec
+    );
+
+    let mut csv = Table::new(
+        "fig_overhead ratchet",
+        &["component", "items_per_sec", "floor"],
+    );
+    csv.row(&["evaldb_put".into(), format!("{:.0}", c.put_per_sec), format!("{PUT_FLOOR:.0}")]);
+    csv.row(&[
+        "evaldb_put_all".into(),
+        format!("{:.0}", c.put_all_per_sec),
+        format!("{:.0}", c.put_per_sec * 0.8),
+    ]);
+    csv.row(&["span_publish".into(), format!("{:.0}", c.span_per_sec), format!("{SPAN_FLOOR:.0}")]);
+    csv.row(&[
+        "percentile_cached".into(),
+        format!("{:.0}", c.percentile_cached_per_sec),
+        format!("{PCTL_FLOOR:.0}"),
+    ]);
+    csv.save_csv("target/bench_results/fig_overhead.csv").ok();
+
+    let none = &report.levels[0];
+    let full = &report.levels[3];
+    println!(
+        "acceptance: NONE publishes 0 spans at {:.1} µs/request; FULL publishes {} spans at {:.1} µs/request; \
+         put {:.0}/s ≥ {PUT_FLOOR:.0}, span {:.0}/s ≥ {SPAN_FLOOR:.0}, percentile {:.0}/s ≥ {PCTL_FLOOR:.0}.",
+        none.per_request_us,
+        full.spans,
+        full.per_request_us,
+        c.put_per_sec,
+        c.span_per_sec,
+        c.percentile_cached_per_sec
+    );
+}

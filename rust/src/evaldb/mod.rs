@@ -484,6 +484,11 @@ fn read_segment(path: &Path) -> std::io::Result<Vec<EvalRecord>> {
 pub struct EvalDb {
     shards: Vec<Mutex<Shard>>,
     next_seq: AtomicU64,
+    /// Records whose segment-log append failed (full disk, vanished
+    /// directory, revoked permissions). The records stay queryable in
+    /// memory; this counter is the queryable evidence that durability was
+    /// lost — [`EvalDb::put`] must not silently swallow I/O errors.
+    dropped_writes: AtomicU64,
 }
 
 struct Shard {
@@ -493,6 +498,63 @@ struct Shard {
     by_digest: HashMap<String, usize>,
     /// Segment log path; `None` → memory-only (tests, benches).
     log_path: Option<PathBuf>,
+    /// Kept-open appender for `log_path`, opened lazily on the first write.
+    /// Replaces a per-record `OpenOptions::open` (a full open/close syscall
+    /// pair per put). Invalidated whenever the segment file is replaced on
+    /// disk ([`EvalDb::compact`]'s atomic rename would otherwise leave this
+    /// fd appending to the unlinked old inode) and on any write error (so
+    /// the next put retries with a fresh descriptor).
+    writer: Option<std::fs::File>,
+    /// Reused serialization buffer: records append via one `write_all` of
+    /// this buffer instead of allocating a fresh `String` per record.
+    buf: String,
+}
+
+impl Shard {
+    /// Serialize `records` as JSONL into the reused buffer and append it
+    /// with a single `write_all` through the kept-open writer. Memory-only
+    /// shards (`log_path == None`) succeed trivially.
+    fn append_records(&mut self, records: &[EvalRecord]) -> std::io::Result<()> {
+        if self.log_path.is_none() || records.is_empty() {
+            return Ok(());
+        }
+        if self.writer.is_none() {
+            let path = self.log_path.as_ref().unwrap();
+            let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+            self.writer = Some(f);
+        }
+        self.buf.clear();
+        for r in records {
+            r.to_json().write_into(&mut self.buf);
+            self.buf.push('\n');
+        }
+        let res = self.writer.as_mut().unwrap().write_all(self.buf.as_bytes());
+        if res.is_err() {
+            // A failed descriptor is not retried: drop it so the next
+            // append reopens the segment from scratch.
+            self.writer = None;
+        }
+        res
+    }
+
+    /// Insert one sequence-stamped record into the in-memory state
+    /// (latest-wins digest index + record list). The caller has already
+    /// assigned `record.seq`.
+    fn insert(&mut self, record: EvalRecord) {
+        let pos = self.records.len();
+        if let Some(d) = record.spec_digest.clone() {
+            // Latest-wins index: a slower thread holding an older sequence
+            // number must not displace a newer record.
+            let newer = match self.by_digest.get(&d) {
+                Some(&p) => self.records[p].seq <= record.seq,
+                None => true,
+            };
+            if newer {
+                self.by_digest.insert(d, pos);
+            }
+        }
+        self.records.push(record);
+    }
 }
 
 impl EvalDb {
@@ -571,9 +633,15 @@ impl EvalDb {
                     }
                 }
             }
-            shards.push(Mutex::new(Shard { records, by_digest, log_path }));
+            shards.push(Mutex::new(Shard {
+                records,
+                by_digest,
+                log_path,
+                writer: None,
+                buf: String::new(),
+            }));
         }
-        EvalDb { shards, next_seq: AtomicU64::new(next_seq) }
+        EvalDb { shards, next_seq: AtomicU64::new(next_seq), dropped_writes: AtomicU64::new(0) }
     }
 
     pub fn shard_count(&self) -> usize {
@@ -587,33 +655,94 @@ impl EvalDb {
 
     /// Store a record; assigns and returns its sequence number. Takes one
     /// atomic fetch plus the routed shard's lock — writers to different
-    /// shards never contend.
-    pub fn put(&self, mut record: EvalRecord) -> u64 {
+    /// shards never contend. The segment append goes through the shard's
+    /// kept-open writer with a reused serialization buffer (no per-record
+    /// file open, no per-record `String` allocation).
+    ///
+    /// A failed append no longer vanishes silently: the record stays
+    /// queryable in memory and [`EvalDb::dropped_writes`] increments — use
+    /// [`EvalDb::try_put`] to get the typed I/O error instead.
+    pub fn put(&self, record: EvalRecord) -> u64 {
+        let (seq, res) = self.put_inner(record);
+        if res.is_err() {
+            self.dropped_writes.fetch_add(1, Ordering::Relaxed);
+        }
+        seq
+    }
+
+    /// As [`EvalDb::put`], but surfaces the segment-append error. Even on
+    /// `Err` the record was inserted in memory with its assigned sequence
+    /// number (and counted in [`EvalDb::dropped_writes`]) — the error
+    /// reports lost *durability*, not a lost record.
+    pub fn try_put(&self, record: EvalRecord) -> std::io::Result<u64> {
+        let (seq, res) = self.put_inner(record);
+        match res {
+            Ok(()) => Ok(seq),
+            Err(e) => {
+                self.dropped_writes.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    fn put_inner(&self, mut record: EvalRecord) -> (u64, std::io::Result<()>) {
         record.seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let seq = record.seq;
         let idx = shard_index(&record_identity(&record), self.shards.len());
         let mut shard = self.shards[idx].lock().unwrap();
-        if let Some(path) = shard.log_path.clone() {
-            if let Ok(mut f) =
-                std::fs::OpenOptions::new().create(true).append(true).open(&path)
-            {
-                let _ = writeln!(f, "{}", record.to_json().to_string());
+        let res = shard.append_records(std::slice::from_ref(&record));
+        shard.insert(record);
+        (seq, res)
+    }
+
+    /// Store a batch of records: sequence numbers are assigned in input
+    /// order and returned in input order, records are grouped by shard, and
+    /// each touched shard takes its lock **once** and appends the whole
+    /// group with a single buffered write. Observationally identical to
+    /// calling [`EvalDb::put`] sequentially (pinned by property test) —
+    /// just one lock + one syscall per shard instead of one per record.
+    ///
+    /// On `Err`, every record was still inserted in memory; each record in
+    /// a failed group counts toward [`EvalDb::dropped_writes`] and the
+    /// first error is returned.
+    pub fn put_all(&self, records: Vec<EvalRecord>) -> std::io::Result<Vec<u64>> {
+        let mut seqs = Vec::with_capacity(records.len());
+        let mut by_shard: Vec<Vec<EvalRecord>> =
+            (0..self.shards.len()).map(|_| Vec::new()).collect();
+        for mut record in records {
+            record.seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+            seqs.push(record.seq);
+            let idx = shard_index(&record_identity(&record), self.shards.len());
+            by_shard[idx].push(record);
+        }
+        let mut first_err: Option<std::io::Error> = None;
+        for (idx, group) in by_shard.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[idx].lock().unwrap();
+            if let Err(e) = shard.append_records(&group) {
+                self.dropped_writes.fetch_add(group.len() as u64, Ordering::Relaxed);
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            for record in group {
+                shard.insert(record);
             }
         }
-        let pos = shard.records.len();
-        if let Some(d) = record.spec_digest.clone() {
-            // Latest-wins index: a slower thread holding an older sequence
-            // number must not displace a newer record.
-            let newer = match shard.by_digest.get(&d) {
-                Some(&p) => shard.records[p].seq <= seq,
-                None => true,
-            };
-            if newer {
-                shard.by_digest.insert(d, pos);
-            }
+        match first_err {
+            None => Ok(seqs),
+            Some(e) => Err(e),
         }
-        shard.records.push(record);
-        seq
+    }
+
+    /// Records whose segment-log append failed since open. Non-zero means
+    /// the on-disk log is missing records that are still queryable in
+    /// memory — an operator signal to check the disk before trusting a
+    /// replay.
+    pub fn dropped_writes(&self) -> u64 {
+        self.dropped_writes.load(Ordering::Relaxed)
     }
 
     /// The highest-sequence record carrying this spec digest, if any — the
@@ -709,10 +838,15 @@ impl EvalDb {
             if let Some(path) = shard.log_path.clone() {
                 let mut log = String::new();
                 for r in &records {
-                    log.push_str(&r.to_json().to_string());
+                    r.to_json().write_into(&mut log);
                     log.push('\n');
                 }
                 crate::util::fs::write_atomic(&path, log.as_bytes())?;
+                // The atomic rewrite renamed a fresh file over the segment:
+                // a kept-open appender would now write to the unlinked old
+                // inode and those appends would vanish. Force the next put
+                // to reopen the new file.
+                shard.writer = None;
             }
             let mut by_digest: HashMap<String, usize> = HashMap::new();
             for (pos, r) in records.iter().enumerate() {

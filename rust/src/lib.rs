@@ -25,7 +25,9 @@
 //!   trace server ([`traceserver`]), with model/framework/system levels,
 //!   and attributed by the bottleneck engine ([`traceanalysis`]) — span
 //!   trees with self time, critical-path extraction, multi-run signature
-//!   aggregation, and an automated bottleneck verdict;
+//!   aggregation, and an automated bottleneck verdict — turned on the
+//!   platform itself by the self-profiling mode ([`overhead`]), which
+//!   quantifies per-request harness cost at every trace level;
 //! - **analysis**: the evaluation database ([`evaldb`]) — sharded segment
 //!   logs with content-addressed spec digests — the reproducible
 //!   model×system sweep engine with digest memoization ([`sweep`]), the
@@ -50,6 +52,7 @@ pub mod util {
     pub mod rng;
     pub mod semver;
     pub mod sha256;
+    pub mod sync;
     pub mod threadpool;
     pub mod yamlmini;
 }
@@ -92,3 +95,5 @@ pub mod server;
 pub mod slo;
 
 pub mod autoscale;
+
+pub mod overhead;

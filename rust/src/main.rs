@@ -14,6 +14,9 @@
 //! - `sweep`   — memoized, resumable model×system sweep across the fleet
 //! - `regress` — commit-over-commit regression gate: labeled sweeps +
 //!   Mann-Whitney/bootstrap deltas + trajectory change-point detection
+//! - `overhead` — self-profile the harness: per-request overhead by trace
+//!   level, hot-path component throughput, and the platform's own
+//!   bottleneck attribution turned on itself
 //!
 //! `eval` is the "push-button" path: it assembles server + agents in one
 //! process, evaluates, and prints the analysis — the CLI equivalent of the
@@ -57,6 +60,10 @@ const COMMANDS: &[Command] = &[
         name: "regress",
         about: "commit-over-commit regression gate (Mann-Whitney + bootstrap CI)",
     },
+    Command {
+        name: "overhead",
+        about: "self-profile the harness: per-request overhead by trace level",
+    },
     Command { name: "client", about: "talk to a running mlms server over REST" },
 ];
 
@@ -83,6 +90,7 @@ fn main() {
         "autoscale" => cmd_autoscale(&args),
         "sweep" => cmd_sweep(&args),
         "regress" => cmd_regress(&args),
+        "overhead" => cmd_overhead(&args),
         "client" => cmd_client(&args),
         _ => {
             eprint!("{}", usage("mlms", "a scalable DL benchmarking platform", COMMANDS));
@@ -962,6 +970,44 @@ fn cmd_sweep(args: &Args) -> i32 {
 /// to a stored `BENCH_*.json`-style history and fails on a step change
 /// landing within the last `--cp-window` points — the slow-regression
 /// backstop the pairwise gate cannot see.
+/// `mlms overhead` — benchmark the benchmarker: measure per-request harness
+/// overhead vs. simulated model compute at every trace level, run the
+/// hot-path component microbenches, and attribute the run with the
+/// platform's own bottleneck engine. Exits non-zero if any self-profiling
+/// invariant fails (span volume monotone in level, NONE publishes nothing,
+/// tracing-off within noise of a no-op harness).
+fn cmd_overhead(args: &Args) -> i32 {
+    use mlmodelscope::overhead::{measure, OverheadConfig};
+    let mut cfg = if args.flag("quick") {
+        OverheadConfig::quick()
+    } else {
+        OverheadConfig::default()
+    };
+    cfg.model = args.opt_or("model", &cfg.model).to_string();
+    cfg.system = args.opt_or("system", &cfg.system).to_string();
+    cfg.requests = args.usize_or("requests", cfg.requests);
+    cfg.trials = args.usize_or("trials", cfg.trials);
+    cfg.iters = args.usize_or("iters", cfg.iters);
+    if cfg.requests == 0 || cfg.trials == 0 {
+        eprintln!("--requests and --trials must be positive");
+        return 2;
+    }
+    let report = measure(&cfg);
+    print!("{}", report.render());
+    match report.check() {
+        Ok(()) => {
+            println!(
+                "overhead gates passed: NONE publishes 0 spans, span volume monotone in level, tracing-off within noise of no-op."
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("overhead gate FAILED: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_regress(args: &Args) -> i32 {
     use mlmodelscope::evaldb::RunMeta;
     use mlmodelscope::regress::{compare_labels, GateConfig, Trajectory, Verdict};

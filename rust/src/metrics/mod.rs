@@ -66,9 +66,15 @@ impl LatencySamples {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Percentile by nearest-rank on the sorted samples; `q` in `[0, 100]`.
+    /// Percentile by nearest-rank on the sorted samples; `q` in `[0, 100]`,
+    /// clamped (`NaN` `q` → `NaN`) — see [`percentile`].
     pub fn percentile(&self, q: f64) -> f64 {
         percentile(&self.samples, q)
+    }
+
+    /// Sort once for repeated quantile queries — see [`SortedSamples`].
+    pub fn sorted(&self) -> SortedSamples {
+        SortedSamples::of(&self.samples)
     }
 
     pub fn p50(&self) -> f64 {
@@ -137,15 +143,129 @@ pub fn median(samples: &[f64]) -> f64 {
 /// is no meaningful percentile of nothing, and `NaN` poisons downstream
 /// arithmetic instead of silently reading as "0 ms latency". A single
 /// sample is every percentile of itself; constant samples return that
-/// constant for every `q`.
+/// constant for every `q`. An out-of-range `q` is clamped to `[0, 100]`
+/// (a negative rank or a rank past the slice is never computed) and a
+/// `NaN` `q` returns `NaN` — asking for the NaN-th percentile has no
+/// answer, and silently reading it as p0 would hide the caller's bug.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
     let mut sorted = samples.to_vec();
     sorted.sort_by(f64::total_cmp);
+    percentile_sorted(&sorted, q)
+}
+
+/// Nearest-rank percentile over **already-sorted** samples (ascending by
+/// `f64::total_cmp`); `q` in `[0, 100]`, clamped, `NaN` `q` → `NaN`.
+///
+/// This is the allocation-free core of [`percentile`]: report paths that
+/// ask for many quantiles of the same vector ([`SummaryStats::of`],
+/// [`TenantLatencies::to_json`], [`SortedSamples`]) sort once and query
+/// through here instead of paying a clone + `O(n log n)` sort per call.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() || q.is_nan() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 100.0);
     let rank = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
+}
+
+/// A latency vector sorted **once**, answering any number of quantile /
+/// trimmed-mean / extrema queries without re-cloning or re-sorting.
+///
+/// [`percentile`] is O(n log n) *per call* because it must defensively
+/// clone and sort; a report that asks for p50/p90/p99 across dozens of
+/// tenants pays that dozens of times over identical data. `SortedSamples`
+/// is the cached-sorted path: build it from the raw samples, then every
+/// query is O(1) (quantiles, min/max) or O(n) (means) over the one sorted
+/// buffer. All definitions delegate to the same primitives as the ad-hoc
+/// helpers, so the two paths are observationally identical (pinned by
+/// property test).
+#[derive(Debug, Clone, Default)]
+pub struct SortedSamples {
+    sorted: Vec<f64>,
+}
+
+impl SortedSamples {
+    /// Sort once (ascending `total_cmp`: NaN samples sort last and poison
+    /// aggregates, same contract as [`trimmed_mean`]).
+    pub fn of(samples: &[f64]) -> SortedSamples {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        SortedSamples { sorted }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// The sorted samples, ascending.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    /// Nearest-rank percentile; same clamp/`NaN` contract as [`percentile`].
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.sorted, q)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// True median (midpoint of central pair for even counts), matching
+    /// [`median`].
+    pub fn median(&self) -> f64 {
+        let n = self.sorted.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            self.sorted[n / 2]
+        } else {
+            (self.sorted[n / 2 - 1] + self.sorted[n / 2]) / 2.0
+        }
+    }
+
+    /// Trimmed mean over the pre-sorted buffer, matching [`trimmed_mean`].
+    pub fn trimmed_mean(&self, frac: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let len = self.sorted.len();
+        let cut = ((frac * len as f64).floor() as usize).min((len - 1) / 2);
+        let kept = &self.sorted[cut..len - cut];
+        kept.iter().sum::<f64>() / kept.len() as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(f64::INFINITY)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(f64::NEG_INFINITY)
+    }
 }
 
 /// Compact summary of a sample set — the fields every aggregate view
@@ -165,11 +285,13 @@ impl SummaryStats {
         if samples.is_empty() {
             return SummaryStats { count: 0, mean: f64::NAN, p50: f64::NAN, p99: f64::NAN };
         }
+        // One sort serves both quantiles (the old path sorted twice).
+        let sorted = SortedSamples::of(samples);
         SummaryStats {
-            count: samples.len(),
-            mean: samples.iter().sum::<f64>() / samples.len() as f64,
-            p50: percentile(samples, 50.0),
-            p99: percentile(samples, 99.0),
+            count: sorted.len(),
+            mean: sorted.mean(),
+            p50: sorted.p50(),
+            p99: sorted.p99(),
         }
     }
 }
@@ -491,13 +613,15 @@ impl TenantLatencies {
             self.map
                 .iter()
                 .map(|(name, l)| {
+                    // One sort per tenant answers both tails.
+                    let sorted = SortedSamples::of(l.samples());
                     (
                         name.clone(),
                         Json::obj(vec![
-                            ("count", Json::num(l.len() as f64)),
-                            ("mean_ms", Json::num(l.mean() * 1e3)),
-                            ("p50_ms", Json::num(l.p50() * 1e3)),
-                            ("p99_ms", Json::num(l.p99() * 1e3)),
+                            ("count", Json::num(sorted.len() as f64)),
+                            ("mean_ms", Json::num(sorted.mean() * 1e3)),
+                            ("p50_ms", Json::num(sorted.p50() * 1e3)),
+                            ("p99_ms", Json::num(sorted.p99() * 1e3)),
                         ]),
                     )
                 })
@@ -592,6 +716,48 @@ mod tests {
         for q in [0.0, 10.0, 50.0, 99.0, 100.0] {
             assert_eq!(percentile(&xs, q), 3.5);
         }
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_q() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        // Below-range q clamps to p0, above-range to p100 — never an
+        // out-of-bounds rank.
+        assert_eq!(percentile(&xs, -5.0), 1.0);
+        assert_eq!(percentile(&xs, -1e9), 1.0);
+        assert_eq!(percentile(&xs, 150.0), 10.0);
+        assert_eq!(percentile(&xs, 1e9), 10.0);
+        assert_eq!(percentile(&xs, f64::INFINITY), 10.0);
+        assert_eq!(percentile(&xs, f64::NEG_INFINITY), 1.0);
+        // NaN q: there is no NaN-th percentile.
+        assert!(percentile(&xs, f64::NAN).is_nan());
+        let l = LatencySamples::from_secs(xs.clone());
+        assert_eq!(l.percentile(101.0), 10.0);
+        assert_eq!(l.percentile(-0.1), 1.0);
+        // Sorted path shares the exact same contract.
+        let s = SortedSamples::of(&xs);
+        assert_eq!(s.percentile(-5.0), 1.0);
+        assert_eq!(s.percentile(150.0), 10.0);
+        assert!(s.percentile(f64::NAN).is_nan());
+        assert!(SortedSamples::of(&[]).percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn sorted_samples_match_adhoc_helpers() {
+        crate::util::rng::forall(33, 40, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 5.0)).collect();
+            let s = SortedSamples::of(&xs);
+            for q in [0.0, 12.5, 50.0, 90.0, 99.0, 100.0] {
+                assert_eq!(s.percentile(q), percentile(&xs, q), "q{q} n{n}");
+            }
+            assert_eq!(s.median(), median(&xs));
+            assert!((s.trimmed_mean(0.2) - trimmed_mean(&xs, 0.2)).abs() < 1e-12);
+            let l = LatencySamples::from_secs(xs.clone());
+            assert_eq!(s.min(), l.min());
+            assert_eq!(s.max(), l.max());
+            assert!((s.mean() - l.mean()).abs() < 1e-12);
+        });
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Self-profiling: benchmark the benchmarker (Deep500's "measure the
+//! harness" principle, ROADMAP item 3).
+//!
+//! The platform's tracing case studies are only credible if the platform's
+//! *own* per-request cost is quantified and controlled. This module runs
+//! the platform against itself:
+//!
+//! - **Per-level ablation.** One simulated evaluation per [`TraceLevel`]
+//!   (NONE/MODEL/FRAMEWORK/FULL) on [`Server::sim_platform`]. Simulated
+//!   compute time is *logical* (a [`crate::tracing::SimClock`] advances it
+//!   analytically), so the evaluation's wall-clock time is almost pure
+//!   harness cost — serde, span machinery, dispatch bookkeeping — and the
+//!   per-request overhead at each level falls straight out of the wall
+//!   time. Model compute is reported alongside from the record's simulated
+//!   latencies, giving the "harness overhead vs. model compute" ratio.
+//! - **No-op comparison.** The cost of a span *attempt* through a disabled
+//!   tracer is measured against the same loop with no tracing call at all.
+//!   Tracing-off must be within noise of the no-op harness — that is the
+//!   contract that lets `--trace-level none` claim zero perturbation.
+//! - **Component microbenches.** The three hot paths this PR attacks —
+//!   evaldb puts (kept-open appender, batched [`EvalDb::put_all`]), span
+//!   publication (sharded sink, batched publish), and percentile queries
+//!   (cached-sorted [`SortedSamples`] vs. per-call re-sort) — each get a
+//!   throughput measurement so `benches/fig_overhead.rs` can pin floors.
+//! - **Self-attribution.** Every measurement phase runs under a wall-clock
+//!   meta-span, and the resulting timeline goes through the platform's own
+//!   [`crate::traceanalysis::profile`] — the bottleneck engine attributing
+//!   the harness itself.
+//!
+//! [`measure`] produces an [`OverheadReport`]; [`OverheadReport::check`]
+//! asserts the invariants (span volume monotone in level, tracing-off
+//! within noise of no-op, NONE publishes nothing) so both the `mlms
+//! overhead` command and the ratchet bench share one set of gates.
+
+use crate::evaldb::{EvalDb, EvalKey, EvalRecord};
+use crate::manifest::{Accelerator, SystemRequirements};
+use crate::metrics::{percentile, SortedSamples};
+use crate::scenario::Scenario;
+use crate::server::{EvalJob, Server};
+use crate::traceanalysis::{profile, TraceProfile};
+use crate::tracing::{MemorySink, TraceLevel, Tracer, WallClock};
+use crate::traceserver::Timeline;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration for one self-profiling run.
+#[derive(Debug, Clone)]
+pub struct OverheadConfig {
+    /// Model evaluated on the simulated platform.
+    pub model: String,
+    /// System the job is pinned to.
+    pub system: String,
+    /// Requests per evaluation.
+    pub requests: usize,
+    /// Best-of trials per trace level (best-of damps scheduler noise; we
+    /// compare cost floors).
+    pub trials: usize,
+    /// Iterations for each component microbench.
+    pub iters: usize,
+}
+
+impl Default for OverheadConfig {
+    fn default() -> Self {
+        OverheadConfig {
+            model: "ResNet_v1_50".into(),
+            system: "aws_p3".into(),
+            requests: 64,
+            trials: 3,
+            iters: 2000,
+        }
+    }
+}
+
+impl OverheadConfig {
+    /// Small configuration for unit tests and smoke runs.
+    pub fn quick() -> Self {
+        OverheadConfig { requests: 8, trials: 1, iters: 200, ..Default::default() }
+    }
+}
+
+/// One trace level's measured harness cost.
+#[derive(Debug, Clone)]
+pub struct LevelOverhead {
+    pub level: TraceLevel,
+    /// Best-of wall time of the whole evaluation, ms.
+    pub wall_ms: f64,
+    /// Wall time divided by request count, µs — the per-request harness
+    /// tax at this level (compute is simulated, so wall ≈ harness).
+    pub per_request_us: f64,
+    /// Spans published into the trace server for the evaluation.
+    pub spans: usize,
+    /// Simulated model compute per request, ms (trimmed mean of the
+    /// record's logical latencies) — the denominator of the overhead
+    /// ratio.
+    pub sim_compute_ms: f64,
+}
+
+/// Throughputs of the optimized hot paths, items/sec.
+#[derive(Debug, Clone)]
+pub struct ComponentCosts {
+    /// File-backed sequential [`EvalDb::put`] records/sec.
+    pub put_per_sec: f64,
+    /// File-backed batched [`EvalDb::put_all`] records/sec.
+    pub put_all_per_sec: f64,
+    /// Enabled span start/finish through the sharded [`MemorySink`],
+    /// spans/sec.
+    pub span_per_sec: f64,
+    /// Span *attempts* through a disabled tracer, attempts/sec.
+    pub disabled_span_per_sec: f64,
+    /// Baseline loop iterations (no tracing call at all), iters/sec — the
+    /// no-op harness the disabled tracer is compared against.
+    pub noop_per_sec: f64,
+    /// p50/p90/p99 query sets against a cached [`SortedSamples`],
+    /// queries/sec.
+    pub percentile_cached_per_sec: f64,
+    /// The same query set through per-call [`percentile`] (clone + sort
+    /// each time), queries/sec — reported for the speedup ratio.
+    pub percentile_naive_per_sec: f64,
+}
+
+/// Everything one self-profiling run learned.
+#[derive(Debug, Clone)]
+pub struct OverheadReport {
+    pub config_requests: usize,
+    pub levels: Vec<LevelOverhead>,
+    pub components: ComponentCosts,
+    /// The platform's bottleneck engine turned on the harness itself:
+    /// every measurement phase ran under a wall-clock meta-span and this
+    /// is [`profile`] over that timeline.
+    pub self_profile: TraceProfile,
+}
+
+fn timed(f: impl FnOnce()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Best-of-`trials` wall seconds of `f`.
+fn best_of(trials: usize, mut f: impl FnMut() -> f64) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..trials.max(1) {
+        best = best.min(f());
+    }
+    best
+}
+
+fn eval_key(model: &str, system: &str, i: usize) -> EvalKey {
+    EvalKey {
+        model: format!("{model}_{i}"),
+        model_version: "1.0.0".into(),
+        framework: "TensorFlow".into(),
+        framework_version: "1.15.0".into(),
+        system: system.into(),
+        device: "gpu".into(),
+        scenario: "overhead".into(),
+        batch_size: 1,
+    }
+}
+
+/// A scratch record with a couple of latency samples — small on purpose:
+/// the put microbench measures the appender, not JSON volume.
+fn scratch_record(i: usize) -> EvalRecord {
+    EvalRecord::new(eval_key("overhead_probe", "aws_p3", i), vec![0.010, 0.012], 90.0)
+}
+
+/// Fresh scratch directory for the file-backed put microbench. Process-id
+/// qualified so concurrent test runs never collide.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlms-overhead-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn measure_level(cfg: &OverheadConfig, level: TraceLevel) -> LevelOverhead {
+    let mut wall_s = f64::INFINITY;
+    let mut spans = 0usize;
+    let mut sim_compute_ms = 0.0;
+    for _ in 0..cfg.trials.max(1) {
+        let server = Server::sim_platform(level);
+        let mut job = EvalJob::new(&cfg.model, Scenario::Online { count: cfg.requests });
+        job.trace_level = level;
+        job.requirements = SystemRequirements::on_system(&cfg.system);
+        job.requirements.accelerator = Accelerator::Gpu;
+        let t0 = Instant::now();
+        let records = server.evaluate(&job).expect("overhead evaluation");
+        let wall = t0.elapsed().as_secs_f64();
+        if wall < wall_s {
+            wall_s = wall;
+            spans = records[0]
+                .trace_id
+                .map(|t| server.traces.timeline(t).spans.len())
+                .unwrap_or(0);
+            sim_compute_ms = records[0].trimmed_mean_ms();
+        }
+    }
+    LevelOverhead {
+        level,
+        wall_ms: wall_s * 1e3,
+        per_request_us: wall_s * 1e6 / cfg.requests.max(1) as f64,
+        spans,
+        sim_compute_ms,
+    }
+}
+
+fn measure_components(cfg: &OverheadConfig) -> ComponentCosts {
+    let iters = cfg.iters.max(10);
+
+    // evaldb: sequential puts through the kept-open appender.
+    let put_dir = scratch_dir("put");
+    let put_s = {
+        let db = EvalDb::open(&put_dir).expect("open scratch evaldb");
+        let t = timed(|| {
+            for i in 0..iters {
+                db.put(scratch_record(i));
+            }
+        });
+        assert_eq!(db.dropped_writes(), 0, "scratch puts must not drop writes");
+        t
+    };
+    let _ = std::fs::remove_dir_all(&put_dir);
+
+    // evaldb: the same records through batched put_all (groups of 64).
+    let put_all_dir = scratch_dir("put-all");
+    let put_all_s = {
+        let db = EvalDb::open(&put_all_dir).expect("open scratch evaldb");
+        let batches: Vec<Vec<EvalRecord>> = (0..iters)
+            .map(scratch_record)
+            .collect::<Vec<_>>()
+            .chunks(64)
+            .map(|c| c.to_vec())
+            .collect();
+        timed(|| {
+            for batch in batches {
+                db.put_all(batch).expect("scratch put_all");
+            }
+        })
+    };
+    let _ = std::fs::remove_dir_all(&put_all_dir);
+
+    // tracing: enabled start/finish through the sharded memory sink.
+    let (tracer_on, sink) = Tracer::in_memory(TraceLevel::Full);
+    let span_s = timed(|| {
+        let t = tracer_on.new_trace();
+        for _ in 0..iters {
+            let s = tracer_on.start(t, None, TraceLevel::Model, "overhead_probe").unwrap();
+            std::hint::black_box(s).finish();
+        }
+    });
+    assert_eq!(sink.len(), iters, "every enabled span must publish");
+
+    // tracing off: span attempts through a disabled tracer, versus the
+    // same loop with no tracing call at all (the no-op harness). These are
+    // single-digit-nanosecond operations, so the iteration count is fixed
+    // high regardless of `cfg.iters` — a short loop would be timer
+    // resolution, not the cost under test. Best-of-3 damps a scheduler
+    // preemption landing inside one of the loops.
+    const NS_ITERS: usize = 200_000;
+    let disabled = Tracer::disabled();
+    let disabled_s = best_of(3, || {
+        timed(|| {
+            for i in 0..NS_ITERS {
+                std::hint::black_box(disabled.start(
+                    std::hint::black_box(i as u64),
+                    None,
+                    TraceLevel::Model,
+                    "x",
+                ));
+            }
+        })
+    });
+    let noop_s = best_of(3, || {
+        timed(|| {
+            for i in 0..NS_ITERS {
+                std::hint::black_box(i as u64);
+            }
+        })
+    });
+
+    // metrics: one sorted pass answering many quantiles, versus the
+    // clone-and-sort-per-call path.
+    let samples: Vec<f64> = (0..10_000).map(|i| ((i * 7919) % 10_000) as f64 / 1e3).collect();
+    let queries = iters.min(500);
+    let cached = SortedSamples::of(&samples);
+    let cached_s = timed(|| {
+        for _ in 0..queries {
+            std::hint::black_box(cached.p50());
+            std::hint::black_box(cached.p90());
+            std::hint::black_box(cached.p99());
+        }
+    });
+    let naive_queries = queries.min(100);
+    let naive_s = timed(|| {
+        for _ in 0..naive_queries {
+            std::hint::black_box(percentile(&samples, 50.0));
+            std::hint::black_box(percentile(&samples, 90.0));
+            std::hint::black_box(percentile(&samples, 99.0));
+        }
+    });
+
+    let rate = |n: usize, s: f64| if s > 0.0 { n as f64 / s } else { f64::INFINITY };
+    ComponentCosts {
+        put_per_sec: rate(iters, put_s),
+        put_all_per_sec: rate(iters, put_all_s),
+        span_per_sec: rate(iters, span_s),
+        disabled_span_per_sec: rate(NS_ITERS, disabled_s),
+        noop_per_sec: rate(NS_ITERS, noop_s),
+        percentile_cached_per_sec: rate(queries * 3, cached_s),
+        percentile_naive_per_sec: rate(naive_queries * 3, naive_s),
+    }
+}
+
+/// Run the full self-profiling suite. Each phase executes under a
+/// wall-clock meta-span so the returned report carries the platform's own
+/// attribution of where *measurement* time went.
+pub fn measure(cfg: &OverheadConfig) -> OverheadReport {
+    let meta_sink = MemorySink::new();
+    let meta = Tracer::new(TraceLevel::Full, Arc::new(WallClock::new()), meta_sink.clone());
+    let trace = meta.new_trace();
+    let root = meta.start(trace, None, TraceLevel::Model, "overhead_run").unwrap();
+    let root_id = root.id();
+
+    let order = [TraceLevel::None, TraceLevel::Model, TraceLevel::Framework, TraceLevel::Full];
+    let mut levels = Vec::with_capacity(order.len());
+    for level in order {
+        let mut span = meta
+            .start(trace, Some(root_id), TraceLevel::Model, format!("eval@{}", level.as_str()))
+            .unwrap();
+        let lo = measure_level(cfg, level);
+        span.tag("stage", "compute");
+        span.tag("spans_published", lo.spans.to_string());
+        span.finish();
+        levels.push(lo);
+    }
+
+    let comp_span = meta.start(trace, Some(root_id), TraceLevel::Model, "component_benches");
+    let components = measure_components(cfg);
+    drop(comp_span);
+    root.finish();
+
+    let timeline = Timeline::from_spans(trace, meta_sink.drain());
+    let self_profile = profile(&[timeline], 8);
+
+    OverheadReport { config_requests: cfg.requests, levels, components, self_profile }
+}
+
+impl OverheadReport {
+    /// Per-level overhead table + component throughputs + self-attribution.
+    pub fn render(&self) -> String {
+        use crate::benchkit::Table;
+        let mut out = String::new();
+        let mut table = Table::new(
+            &format!(
+                "harness overhead by trace level ({} simulated requests; wall ≈ harness)",
+                self.config_requests
+            ),
+            &["level", "wall (ms)", "per-request (µs)", "spans", "sim compute (ms/req)"],
+        );
+        for l in &self.levels {
+            table.row(&[
+                l.level.as_str().to_string(),
+                format!("{:.2}", l.wall_ms),
+                format!("{:.1}", l.per_request_us),
+                l.spans.to_string(),
+                format!("{:.3}", l.sim_compute_ms),
+            ]);
+        }
+        out.push_str(&table.render());
+        out.push('\n');
+
+        let c = &self.components;
+        let mut comp = Table::new(
+            "hot-path component throughput",
+            &["component", "items/sec"],
+        );
+        let fmt = |v: f64| format!("{:.0}", v);
+        comp.row(&["evaldb put (file-backed)".into(), fmt(c.put_per_sec)]);
+        comp.row(&["evaldb put_all (batch 64)".into(), fmt(c.put_all_per_sec)]);
+        comp.row(&["span start/finish (sharded sink)".into(), fmt(c.span_per_sec)]);
+        comp.row(&["span attempt (tracing off)".into(), fmt(c.disabled_span_per_sec)]);
+        comp.row(&["no-op harness loop".into(), fmt(c.noop_per_sec)]);
+        comp.row(&["percentile query (cached sort)".into(), fmt(c.percentile_cached_per_sec)]);
+        comp.row(&["percentile query (re-sort)".into(), fmt(c.percentile_naive_per_sec)]);
+        out.push_str(&comp.render());
+        out.push('\n');
+        out.push_str(&self.self_profile.render("the harness profiling itself"));
+        out
+    }
+
+    /// The invariants every self-profiling run must satisfy. Returns the
+    /// first violation as a message (the CLI exits non-zero on it; the
+    /// ratchet bench panics on it).
+    ///
+    /// Wall-time comparisons use generous slack — these are correctness
+    /// gates ("reducing the trace level must not make evaluation
+    /// meaningfully slower"), not microbenchmark pins; the throughput
+    /// floors live in `benches/fig_overhead.rs` where hardware is known.
+    pub fn check(&self) -> Result<(), String> {
+        let at = |level: TraceLevel| -> &LevelOverhead {
+            self.levels.iter().find(|l| l.level == level).expect("level measured")
+        };
+        // NONE is tracing-off: nothing may be published.
+        let none = at(TraceLevel::None);
+        if none.spans != 0 {
+            return Err(format!("NONE published {} spans; must be 0", none.spans));
+        }
+        // Span volume is exact and must be monotone in level.
+        let (m, f, full) =
+            (at(TraceLevel::Model), at(TraceLevel::Framework), at(TraceLevel::Full));
+        if m.spans == 0 {
+            return Err("MODEL level published no spans".into());
+        }
+        if !(m.spans <= f.spans && f.spans <= full.spans) {
+            return Err(format!(
+                "span volume not monotone in level: model {} framework {} full {}",
+                m.spans, f.spans, full.spans
+            ));
+        }
+        // Wall-clock overhead monotone-with-slack: each lower level bounded
+        // by FULL (1.5x + 30 ms absorbs scheduler noise; a real inversion
+        // blows far past it).
+        for l in [none, m, f] {
+            if l.wall_ms > full.wall_ms * 1.5 + 30.0 {
+                return Err(format!(
+                    "{} wall {:.1} ms exceeds full {:.1} ms + slack — overhead must be monotone in trace level",
+                    l.level.as_str(),
+                    l.wall_ms,
+                    full.wall_ms
+                ));
+            }
+        }
+        // Tracing-off within noise of the no-op harness: a span attempt
+        // through a disabled tracer is one branch, so its per-item cost may
+        // exceed the empty loop's by at most 75 ns.
+        let c = &self.components;
+        let disabled_ns = 1e9 / c.disabled_span_per_sec;
+        let noop_ns = 1e9 / c.noop_per_sec;
+        if disabled_ns > noop_ns + 75.0 {
+            return Err(format!(
+                "tracing-off span attempt ({disabled_ns:.1} ns) not within noise of no-op harness ({noop_ns:.1} ns)"
+            ));
+        }
+        // The self-profile must actually attribute the run.
+        if self.self_profile.spans < self.levels.len() {
+            return Err("self-profile missing meta-spans".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_self_profile_passes_its_own_gates() {
+        let report = measure(&OverheadConfig::quick());
+        report.check().expect("self-profiling invariants");
+        assert_eq!(report.levels.len(), 4);
+        let text = report.render();
+        assert!(text.contains("harness overhead by trace level"));
+        assert!(text.contains("evaldb put_all"));
+        assert!(text.contains("the harness profiling itself"));
+    }
+
+    #[test]
+    fn check_rejects_nonzero_spans_at_none() {
+        let mut report = measure(&OverheadConfig::quick());
+        report.levels[0].spans = 5;
+        let err = report.check().unwrap_err();
+        assert!(err.contains("NONE"), "{err}");
+    }
+
+    #[test]
+    fn check_rejects_non_monotone_span_volume() {
+        let mut report = measure(&OverheadConfig::quick());
+        // Claim MODEL published more spans than FULL.
+        report.levels[1].spans = report.levels[3].spans + 100;
+        let err = report.check().unwrap_err();
+        assert!(err.contains("monotone"), "{err}");
+    }
+}

@@ -682,13 +682,17 @@ impl Server {
         };
         let mut t_start = f64::INFINITY;
         let mut t_end = 0.0f64;
+        // The whole trace is built up front and published in one batch:
+        // one collector lock for the trace instead of one per span (a
+        // high-rate scenario emits four spans per scheduled batch).
+        let mut spans: Vec<Span> = Vec::with_capacity(sched.len() * 4 + 1);
         for s in sched {
             let b = &batch_facts[s.index as usize];
             let tenant = tenant_name(b.tenant);
             t_start = t_start.min(b.opened_at);
             t_end = t_end.max(s.completion);
             let batch_id = tracer.new_trace();
-            tracer.publish(Span {
+            spans.push(Span {
                 trace_id,
                 span_id: batch_id,
                 parent_id: Some(root_id),
@@ -703,9 +707,9 @@ impl Server {
                     ("agent_slot".into(), s.server.to_string()),
                 ],
             });
-            let child = |name: &str, stage: &str, s0: f64, s1: f64| {
+            let mut child = |name: &str, stage: &str, s0: f64, s1: f64| {
                 if s1 > s0 {
-                    tracer.publish(Span {
+                    spans.push(Span {
                         trace_id,
                         span_id: tracer.new_trace(),
                         parent_id: Some(batch_id),
@@ -728,7 +732,7 @@ impl Server {
             // batch's pre-service window (minimum 1 ns so it is never
             // dropped as zero-width) and named after the dead agent.
             if let Some(from_agent) = requeued_from(s.index) {
-                tracer.publish(Span {
+                spans.push(Span {
                     trace_id,
                     span_id: tracer.new_trace(),
                     parent_id: Some(batch_id),
@@ -745,7 +749,7 @@ impl Server {
                 });
             }
         }
-        tracer.publish(Span {
+        spans.push(Span {
             trace_id,
             span_id: root_id,
             parent_id: None,
@@ -759,6 +763,7 @@ impl Server {
                 ("probe".into(), is_probe.to_string()),
             ],
         });
+        tracer.publish_all(spans);
         Some(trace_id)
     }
 

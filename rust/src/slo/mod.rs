@@ -36,6 +36,7 @@ use crate::metrics::Histogram;
 use crate::scenario::Scenario;
 use crate::server::{EvalJob, Server, ServerError};
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
 use std::sync::{Arc, Mutex};
 
 /// A latency service-level objective: `percentile` (in `[0, 100]`) of
@@ -257,16 +258,18 @@ impl ProbeWatch {
         })
     }
 
-    /// `(passed, achieved_ms, samples_seen)` at this instant.
+    /// `(passed, achieved_ms, samples_seen)` at this instant. The state
+    /// lock is poison-tolerant: a panicking dispatch worker must not wedge
+    /// the probe's observers (judge state is updated whole-row at a time).
     pub fn snapshot(&self) -> (bool, f64, usize) {
-        let st = self.state.lock().unwrap();
+        let st = lock_recover(&self.state);
         (st.judge.passed(), st.judge.achieved_ms(), st.judge.seen())
     }
 }
 
 impl DispatchWatch for ProbeWatch {
     fn on_batch(&self, row: &BatchLogRow) -> bool {
-        let mut guard = self.state.lock().unwrap();
+        let mut guard = lock_recover(&self.state);
         let st = &mut *guard;
         let completed = st.replay.offer(row.index, row.latency_s);
         for c in completed {
@@ -385,13 +388,13 @@ pub fn probe(
     let watch_slot: Mutex<Option<Arc<ProbeWatch>>> = Mutex::new(None);
     let factory = |batches: &[Batch], servers: usize| -> Arc<dyn DispatchWatch> {
         let w = ProbeWatch::new(batches, servers, cfg, spec, count);
-        *watch_slot.lock().unwrap() = Some(w.clone());
+        *lock_recover(&watch_slot) = Some(w.clone());
         w
     };
     let result = server.evaluate_batched_watched(&probe_job, cfg, Some(&factory))?;
     let watch = watch_slot
         .into_inner()
-        .unwrap()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
         .expect("watch factory invoked");
     let (passed, achieved_ms, samples) = watch.snapshot();
     Ok(SloProbe {

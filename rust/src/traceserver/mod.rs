@@ -5,6 +5,7 @@
 
 use crate::tracing::{Span, SpanSink, TraceLevel};
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
@@ -42,20 +43,17 @@ impl TraceServer {
     }
 
     pub fn trace_ids(&self) -> Vec<u64> {
-        self.by_trace.lock().unwrap().keys().copied().collect()
+        lock_recover(&self.by_trace).keys().copied().collect()
     }
 
     pub fn span_count(&self) -> usize {
-        self.by_trace.lock().unwrap().values().map(|v| v.len()).sum()
+        lock_recover(&self.by_trace).values().map(|v| v.len()).sum()
     }
 
     /// The assembled timeline for one trace, sorted by start time (ties
     /// broken by span id so ordering is deterministic).
     pub fn timeline(&self, trace_id: u64) -> Timeline {
-        let mut spans = self
-            .by_trace
-            .lock()
-            .unwrap()
+        let mut spans = lock_recover(&self.by_trace)
             .get(&trace_id)
             .cloned()
             .unwrap_or_default();
@@ -64,21 +62,38 @@ impl TraceServer {
     }
 
     pub fn clear(&self) {
-        self.by_trace.lock().unwrap().clear();
+        lock_recover(&self.by_trace).clear();
+    }
+
+    /// Evict the oldest traces beyond the retention cap. Called with the
+    /// map lock held, after any insertion batch.
+    fn evict_over_cap(&self, map: &mut BTreeMap<u64, Vec<Span>>) {
+        while self.max_traces > 0 && map.len() > self.max_traces {
+            let oldest = *map.keys().next().unwrap();
+            map.remove(&oldest);
+        }
     }
 }
 
 impl SpanSink for TraceServer {
     fn publish(&self, span: Span) {
-        let mut map = self.by_trace.lock().unwrap();
+        let mut map = lock_recover(&self.by_trace);
         map.entry(span.trace_id).or_default().push(span);
-        // Evict the oldest traces beyond the retention cap (new-trace
-        // insertions only ever grow the map by one, so one eviction per
-        // publish keeps it bounded).
-        while self.max_traces > 0 && map.len() > self.max_traces {
-            let oldest = *map.keys().next().unwrap();
-            map.remove(&oldest);
+        self.evict_over_cap(&mut map);
+    }
+
+    /// Batch insertion: one lock and one eviction sweep for the whole set,
+    /// instead of a lock per span — the serving path publishes each trace's
+    /// complete span set through here.
+    fn publish_all(&self, spans: Vec<Span>) {
+        if spans.is_empty() {
+            return;
         }
+        let mut map = lock_recover(&self.by_trace);
+        for span in spans {
+            map.entry(span.trace_id).or_default().push(span);
+        }
+        self.evict_over_cap(&mut map);
     }
 }
 

@@ -17,7 +17,8 @@
 //! time").
 
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::lock_recover;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Trace verbosity — mirrors the paper's protobuf enum.
@@ -227,12 +228,62 @@ impl Clock for SimClock {
 /// trace-server client both implement this.
 pub trait SpanSink: Send + Sync {
     fn publish(&self, span: Span);
+
+    /// Publish a batch of completed spans. The default forwards one at a
+    /// time; collectors with internal locking override this to take their
+    /// lock once per batch instead of once per span — the serving path
+    /// republishes whole per-trace span sets through here.
+    fn publish_all(&self, spans: Vec<Span>) {
+        for s in spans {
+            self.publish(s);
+        }
+    }
+}
+
+/// Number of independently-locked shards in a [`MemorySink`]. Small and
+/// fixed: the goal is to stop N pipeline workers serializing on one mutex,
+/// not to scale with core count.
+const SINK_SHARDS: usize = 8;
+
+/// The shard a publishing thread writes to: assigned round-robin on first
+/// publish and cached in a thread-local, so the per-span cost is one TLS
+/// read — no hashing, no contention on the assignment counter after the
+/// first span.
+fn publisher_shard(n: usize) -> usize {
+    static NEXT_PUBLISHER: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: std::cell::Cell<usize> = std::cell::Cell::new(usize::MAX);
+    }
+    SLOT.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT_PUBLISHER.fetch_add(1, Ordering::Relaxed);
+            s.set(v);
+        }
+        v % n
+    })
 }
 
 /// Collects spans in memory — the default sink, also used by benches/tests.
-#[derive(Default)]
+///
+/// Sharded: each publishing thread appends to its own mutex-guarded shard
+/// (round-robin thread→shard assignment), so concurrent pipeline workers no
+/// longer serialize every span behind a single `Mutex<Vec<Span>>`. Spans
+/// are visible to [`MemorySink::drain`]/[`MemorySink::snapshot`] the moment
+/// `publish` returns — there is no deferred thread-local buffer to flush.
+/// Drain order is per-shard FIFO (intra-thread publication order is
+/// preserved); consumers that need a global order sort by timestamp, as
+/// [`crate::traceserver::Timeline`] already does. Locks are poison-tolerant:
+/// a panicking instrumented thread loses at most its own in-flight span,
+/// never the sink.
 pub struct MemorySink {
-    spans: Mutex<Vec<Span>>,
+    shards: Vec<Mutex<Vec<Span>>>,
+}
+
+impl Default for MemorySink {
+    fn default() -> Self {
+        MemorySink { shards: (0..SINK_SHARDS).map(|_| Mutex::new(Vec::new())).collect() }
+    }
 }
 
 impl MemorySink {
@@ -241,15 +292,23 @@ impl MemorySink {
     }
 
     pub fn drain(&self) -> Vec<Span> {
-        std::mem::take(&mut *self.spans.lock().unwrap())
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.append(&mut lock_recover(shard));
+        }
+        out
     }
 
     pub fn snapshot(&self) -> Vec<Span> {
-        self.spans.lock().unwrap().clone()
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend_from_slice(&lock_recover(shard));
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
-        self.spans.lock().unwrap().len()
+        self.shards.iter().map(|s| lock_recover(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -259,7 +318,15 @@ impl MemorySink {
 
 impl SpanSink for MemorySink {
     fn publish(&self, span: Span) {
-        self.spans.lock().unwrap().push(span);
+        lock_recover(&self.shards[publisher_shard(self.shards.len())]).push(span);
+    }
+
+    fn publish_all(&self, mut spans: Vec<Span>) {
+        if spans.is_empty() {
+            return;
+        }
+        // One lock for the whole batch, on this thread's own shard.
+        lock_recover(&self.shards[publisher_shard(self.shards.len())]).append(&mut spans);
     }
 }
 
@@ -320,13 +387,16 @@ impl Tracer {
 
     /// Start a span; returns a guard that publishes on [`ActiveSpan::finish`]
     /// (or drop). Returns `None` when the level is filtered out — callers
-    /// pay only the enabled-check.
+    /// pay only the enabled-check. `name` is taken by `Into<String>` so a
+    /// caller that already owns its name moves it in instead of paying a
+    /// fresh allocation per span (the filtered-out path allocates nothing
+    /// either way — the conversion happens after the level check).
     pub fn start(
         self: &Arc<Self>,
         trace_id: u64,
         parent_id: Option<u64>,
         level: TraceLevel,
-        name: &str,
+        name: impl Into<String>,
     ) -> Option<ActiveSpan> {
         if !self.enabled(level) {
             return None;
@@ -338,7 +408,7 @@ impl Tracer {
                 trace_id,
                 span_id,
                 parent_id,
-                name: name.to_string(),
+                name: name.into(),
                 level,
                 start_ns: self.clock.now_ns(),
                 end_ns: 0,
@@ -352,6 +422,17 @@ impl Tracer {
     pub fn publish(&self, span: Span) {
         if self.enabled(span.level) {
             self.sink.publish(span);
+        }
+    }
+
+    /// Publish a batch of pre-built spans in one sink call: level-filtered
+    /// in place, then handed to [`SpanSink::publish_all`] so the collector
+    /// takes its lock once per batch instead of once per span. The serving
+    /// path republishes each trace's whole span set through here.
+    pub fn publish_all(&self, mut spans: Vec<Span>) {
+        spans.retain(|s| self.enabled(s.level));
+        if !spans.is_empty() {
+            self.sink.publish_all(spans);
         }
     }
 }

@@ -117,6 +117,15 @@ impl Json {
         out
     }
 
+    /// Serialize compactly into a caller-owned buffer.
+    ///
+    /// Hot paths (the evaldb appender) serialize many records in a loop;
+    /// reusing one `String` across records avoids an allocation per record
+    /// where [`Json::to_string`] would pay one every call.
+    pub fn write_into(&self, out: &mut String) {
+        self.write(out);
+    }
+
     /// Serialize with 2-space indentation (reports, stored manifests).
     pub fn to_pretty(&self) -> String {
         let mut out = String::with_capacity(256);

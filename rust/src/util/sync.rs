@@ -1,0 +1,48 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! A panicking instrumented thread must not take down unrelated observers:
+//! the tracing sink, the trace server, and the SLO probe watch are all
+//! *telemetry* — losing one publisher's spans is acceptable, wedging every
+//! other publisher behind a poisoned `Mutex` is not. `lock_recover` is the
+//! crate-wide idiom for locks that guard telemetry state: on poison it
+//! recovers the inner guard and carries on, exactly as PR 8 did for the
+//! dispatch condvars.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// The data behind a telemetry lock is always in a consistent state between
+/// whole-record pushes (a `Vec<Span>` push either happened or it didn't), so
+/// recovery is safe: the worst case is one lost record from the panicking
+/// thread, never a torn one.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_after_poison() {
+        let m = Arc::new(Mutex::new(vec![1u32, 2]));
+        let m2 = m.clone();
+        // Poison the mutex: panic while holding the guard.
+        let _ = std::panic::catch_unwind(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        });
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        let mut g = lock_recover(&m);
+        g.push(3);
+        assert_eq!(*g, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn plain_lock_passthrough() {
+        let m = Mutex::new(7u64);
+        assert_eq!(*lock_recover(&m), 7);
+    }
+}

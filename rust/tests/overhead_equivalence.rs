@@ -1,0 +1,270 @@
+//! Observational-equivalence and failure-surfacing tests for the hot paths
+//! optimized by the self-profiling work (`mlms overhead`):
+//!
+//! - batched `EvalDb::put_all` must be indistinguishable from sequential
+//!   `put` — byte-identical segment logs, before and after compaction;
+//! - a failed segment append must surface (typed error from `try_put`, the
+//!   `dropped_writes` counter otherwise) while the record stays queryable;
+//! - the `Histogram` sketch's quantiles must track the exact nearest-rank
+//!   percentile within one bucket growth factor on seeded random inputs;
+//! - `percentile` and friends must clamp out-of-range `q` and return the
+//!   documented `NaN` on empty input / `NaN` q;
+//! - batched span publication (`publish_all`) must match sequential
+//!   `publish` through both the memory sink and the trace server, and a
+//!   panicking instrumented thread must not take the sink down.
+
+use mlmodelscope::evaldb::{EvalDb, EvalKey, EvalQuery, EvalRecord};
+use mlmodelscope::metrics::{percentile, Histogram, LatencySamples, SortedSamples};
+use mlmodelscope::tracing::{Span, TraceLevel, Tracer};
+use mlmodelscope::traceserver::TraceServer;
+use mlmodelscope::util::rng::forall;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn key(model: &str, batch: usize) -> EvalKey {
+    EvalKey {
+        model: model.into(),
+        model_version: "1.0.0".into(),
+        framework: "TensorFlow".into(),
+        framework_version: "1.15.0".into(),
+        system: "aws_p3".into(),
+        device: "gpu".into(),
+        scenario: "equivalence".into(),
+        batch_size: batch,
+    }
+}
+
+/// Deterministic record mix: rotating keys, some digest-bearing (with
+/// deliberate duplicate digests so latest-wins compaction has work to do),
+/// some digest-less.
+fn record_for(i: usize) -> EvalRecord {
+    let mut r = EvalRecord::new(
+        key(&format!("model_{}", i % 7), 1 + i % 4),
+        vec![0.010 + i as f64 / 1e4, 0.012],
+        50.0 + i as f64,
+    );
+    if i % 3 == 0 {
+        r.spec_digest = Some(format!("{:064x}", i % 5));
+    }
+    r
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlms-equiv-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every segment file under `dir`, name → raw bytes.
+fn segment_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for e in std::fs::read_dir(dir).expect("segment dir").flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        out.insert(name, std::fs::read(e.path()).expect("segment read"));
+    }
+    out
+}
+
+#[test]
+fn put_all_and_sequential_put_produce_byte_identical_segments() {
+    let (dir_a, dir_b) = (scratch("seq"), scratch("batch"));
+    let n = 48;
+
+    let db_a = EvalDb::open(&dir_a).expect("open sequential db");
+    for i in 0..n {
+        db_a.put(record_for(i));
+    }
+    let db_b = EvalDb::open(&dir_b).expect("open batch db");
+    let seqs = db_b.put_all((0..n).map(record_for).collect()).expect("put_all");
+
+    // Sequence numbers are assigned in input order, exactly as put would.
+    assert_eq!(seqs, (1..=n as u64).collect::<Vec<_>>());
+    assert_eq!(db_a.dropped_writes(), 0);
+    assert_eq!(db_b.dropped_writes(), 0);
+
+    // Byte-identical segment logs straight after the writes...
+    assert_eq!(segment_bytes(&dir_a), segment_bytes(&dir_b), "pre-compaction segments differ");
+
+    // ...and still byte-identical after latest-wins compaction rewrites
+    // every segment (same winners, same order, same serialization).
+    let stats_a = db_a.compact().expect("compact sequential");
+    let stats_b = db_b.compact().expect("compact batch");
+    assert_eq!(stats_a, stats_b, "compaction saw different record sets");
+    assert!(stats_a.dropped > 0, "fixture must exercise latest-wins dedup");
+    assert_eq!(segment_bytes(&dir_a), segment_bytes(&dir_b), "post-compaction segments differ");
+
+    // And the query views agree.
+    let q = EvalQuery::default();
+    let (ra, rb) = (db_a.query(&q), db_b.query(&q));
+    assert_eq!(ra.len(), rb.len());
+    for (a, b) in ra.iter().zip(&rb) {
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn segment_append_failure_is_surfaced_and_counted() {
+    let dir = scratch("vanish");
+    let db = EvalDb::open(&dir).expect("open db");
+    // Pull the directory out from under the database before any append has
+    // opened a segment: the lazy open inside the next put must fail.
+    std::fs::remove_dir_all(&dir).expect("remove segment dir");
+
+    // try_put surfaces the typed I/O error...
+    let err = db.try_put(record_for(0)).expect_err("append into a deleted dir must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::NotFound);
+    assert_eq!(db.dropped_writes(), 1);
+    // ...but the record was still inserted in memory with its sequence.
+    let rs = db.query(&EvalQuery::default());
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].seq, 1);
+
+    // put keeps its legacy infallible signature and counts the drop.
+    let seq = db.put(record_for(1));
+    assert_eq!(seq, 2);
+    assert_eq!(db.dropped_writes(), 2);
+
+    // put_all returns the first error and counts every record in the
+    // failed groups; all records remain queryable.
+    db.put_all(vec![record_for(2), record_for(3)]).expect_err("batch append must fail too");
+    assert_eq!(db.dropped_writes(), 4);
+    assert_eq!(db.query(&EvalQuery::default()).len(), 4);
+}
+
+#[test]
+fn histogram_quantile_tracks_exact_nearest_rank_within_bucket_factor() {
+    // The ×1.6 exponential sketch guarantees its estimate lands in the same
+    // bucket as the exact nearest-rank sample, so estimate/exact is bounded
+    // by the growth factor. Samples stay ≥ 20 µs so the open-bottom first
+    // bucket (where the ratio bound would not hold) is never used.
+    forall(7, 60, |rng| {
+        let n = 30 + rng.below(170) as usize;
+        let samples: Vec<f64> = (0..n).map(|_| rng.range_f64(20e-6, 2.0)).collect();
+        let mut h = Histogram::latency_default();
+        for &s in &samples {
+            h.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.9, 0.99, rng.f64()] {
+            let est = h.quantile(q);
+            // The same nearest-rank definition the histogram targets.
+            let rank = ((q * n as f64).ceil().max(1.0) as usize).min(n);
+            let exact = sorted[rank - 1];
+            let ratio = est / exact;
+            assert!(
+                (1.0 / 1.6 - 1e-9..=1.6 + 1e-9).contains(&ratio),
+                "q={q}: sketch {est:.6e} vs exact {exact:.6e} (ratio {ratio:.3}) outside ×1.6 bucket bound"
+            );
+        }
+    });
+}
+
+#[test]
+fn percentile_contract_clamps_q_and_handles_empty() {
+    let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+    // Out-of-range q clamps to the extremes through every public entry.
+    assert_eq!(percentile(&xs, -50.0), 1.0);
+    assert_eq!(percentile(&xs, 1e9), 10.0);
+    let lat = LatencySamples::from_secs(xs.clone());
+    assert_eq!(lat.percentile(-1.0), 1.0);
+    assert_eq!(lat.percentile(250.0), 10.0);
+    let sorted = SortedSamples::of(&xs);
+    assert_eq!(sorted.percentile(f64::NEG_INFINITY), 1.0);
+    assert_eq!(sorted.percentile(f64::INFINITY), 10.0);
+    // Empty input and NaN q return the documented NaN, never a panic.
+    assert!(percentile(&[], 50.0).is_nan());
+    assert!(percentile(&xs, f64::NAN).is_nan());
+    assert!(SortedSamples::of(&[]).p99().is_nan());
+}
+
+fn flat_span(trace_id: u64, span_id: u64, name: &str, level: TraceLevel) -> Span {
+    Span {
+        trace_id,
+        span_id,
+        parent_id: None,
+        name: name.into(),
+        level,
+        start_ns: span_id * 10,
+        end_ns: span_id * 10 + 5,
+        tags: Vec::new(),
+    }
+}
+
+#[test]
+fn tracer_publish_all_filters_like_publish() {
+    let (tracer, sink) = Tracer::in_memory(TraceLevel::Model);
+    tracer.publish_all(vec![
+        flat_span(9, 1, "keep", TraceLevel::Model),
+        flat_span(9, 2, "drop-framework", TraceLevel::Framework),
+        flat_span(9, 3, "drop-none", TraceLevel::None),
+    ]);
+    let spans = sink.drain();
+    assert_eq!(spans.len(), 1, "only MODEL-level span passes a MODEL tracer");
+    assert_eq!(spans[0].name, "keep");
+}
+
+#[test]
+fn traceserver_publish_all_matches_sequential_publish() {
+    use mlmodelscope::tracing::SpanSink;
+    let mut spans = Vec::new();
+    for t in 1..=3u64 {
+        for i in 0..5u64 {
+            spans.push(flat_span(t, t * 100 + i, &format!("s{t}_{i}"), TraceLevel::Model));
+        }
+    }
+
+    let a = TraceServer::new();
+    for s in spans.clone() {
+        a.publish(s);
+    }
+    let b = TraceServer::new();
+    b.publish_all(spans.clone());
+
+    assert_eq!(a.span_count(), b.span_count());
+    assert_eq!(a.trace_ids(), b.trace_ids());
+    for t in a.trace_ids() {
+        let (ta, tb) = (a.timeline(t), b.timeline(t));
+        assert_eq!(ta.spans.len(), tb.spans.len());
+        for (x, y) in ta.spans.iter().zip(&tb.spans) {
+            assert_eq!(x.to_json().to_string(), y.to_json().to_string());
+        }
+    }
+
+    // Retention eviction agrees too: cap 2, three traces → trace 1 evicted
+    // whether spans arrive one at a time or as one batch.
+    let a = TraceServer::with_max_traces(2);
+    for s in spans.clone() {
+        a.publish(s);
+    }
+    let b = TraceServer::with_max_traces(2);
+    b.publish_all(spans);
+    assert_eq!(a.trace_ids(), vec![2, 3]);
+    assert_eq!(b.trace_ids(), vec![2, 3]);
+}
+
+#[test]
+fn memory_sink_survives_a_panicking_instrumented_thread() {
+    let (tracer, sink) = Tracer::in_memory(TraceLevel::Full);
+    let t = tracer.new_trace();
+    tracer.start(t, None, TraceLevel::Model, "before").unwrap().finish();
+
+    let tr = tracer.clone();
+    let handle = std::thread::spawn(move || {
+        tr.start(t, None, TraceLevel::Model, "doomed").unwrap().finish();
+        panic!("instrumented thread dies after publishing");
+    });
+    assert!(handle.join().is_err(), "worker must have panicked");
+
+    // The sink keeps accepting and serving spans, including the one the
+    // dead thread published before it went down.
+    tracer.start(t, None, TraceLevel::Model, "after").unwrap().finish();
+    let names: Vec<String> = sink.drain().into_iter().map(|s| s.name).collect();
+    for expected in ["before", "doomed", "after"] {
+        assert!(names.contains(&expected.to_string()), "missing span {expected:?}: {names:?}");
+    }
+    assert!(sink.is_empty(), "drain empties the sink");
+}
