@@ -486,11 +486,19 @@ pub struct Dispatcher {
     executors: Vec<Arc<dyn BatchExecutor>>,
     max_in_flight: usize,
     policy: DispatchPolicy,
+    gauges: Option<Arc<crate::dash::FleetGauges>>,
 }
 
 impl Dispatcher {
     pub fn new(executors: Vec<Arc<dyn BatchExecutor>>) -> Dispatcher {
-        Dispatcher { executors, max_in_flight: 1, policy: DispatchPolicy::Fifo }
+        Dispatcher { executors, max_in_flight: 1, policy: DispatchPolicy::Fifo, gauges: None }
+    }
+
+    /// Mirror per-agent outstanding/in-flight counts into shared dashboard
+    /// gauges ([`crate::dash::FleetGauges`]) as batches start and finish.
+    pub fn with_gauges(mut self, gauges: Arc<crate::dash::FleetGauges>) -> Dispatcher {
+        self.gauges = Some(gauges);
+        self
     }
 
     /// Allow up to `n` concurrent batches per executor (default 1, which
@@ -558,6 +566,7 @@ impl Dispatcher {
                 let max_in_flight = self.max_in_flight;
                 let policy = self.policy;
                 let watch = watch.clone();
+                let gauges = self.gauges.clone();
                 std::thread::spawn(move || loop {
                     let (qb, idx) = {
                         let (mut st, poisoned) = lock_state(&shared);
@@ -657,6 +666,9 @@ impl Dispatcher {
                             };
                         }
                     };
+                    if let Some(g) = &gauges {
+                        g.batch_started(&executors[idx].id(), qb.batch.len());
+                    }
                     // A panic inside an executor must behave like an agent
                     // death (mark dead + requeue), not leave the busy
                     // counters stuck and hang every other worker in wait().
@@ -665,6 +677,12 @@ impl Dispatcher {
                     }))
                     .unwrap_or_else(|p| Err(format!("executor panicked: {}", panic_text(&p))));
                     let agent = executors[idx].id();
+                    if let Some(g) = &gauges {
+                        g.batch_finished(&agent, qb.batch.len());
+                        if matches!(&result, Ok(r) if r.outputs.len() == qb.batch.len()) {
+                            g.batch_completed(qb.batch.len());
+                        }
+                    }
                     let (mut st, poisoned) = lock_state(&shared);
                     if poisoned {
                         fail_dispatch(

@@ -1,0 +1,395 @@
+//! Live fleet dashboard (`mlms fleet --dash`).
+//!
+//! The distributed MLModelScope deployment (arXiv:2002.08295) argues a
+//! fleet you cannot *watch* is a fleet you cannot operate. This module is
+//! the operable view: a [`FleetGauges`] sink the dispatcher, the sweep
+//! engine, and the server feed while work runs, plus a plain-ANSI renderer
+//! that redraws one frame in place — per-agent lease remaining / standby
+//! state from the registry, outstanding and in-flight counts from the
+//! dispatcher, sweep cell progress, and rolling p50/p99 latency tails from
+//! [`crate::metrics::TenantLatencies`]. No terminal library: just `\x1b[H`
+//! / `\x1b[2J` escapes, so the same frame renders headlessly in CI
+//! (`mlms fleet --dash --once`).
+
+use crate::metrics::{percentile, TenantLatencies};
+use crate::registry::Registry;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Rolling latency window: enough for stable tails, bounded so a week-long
+/// fleet run cannot grow the dashboard's memory.
+const LATENCY_RING: usize = 4096;
+
+/// Per-agent dispatch counters, keyed by executor id.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AgentGauge {
+    /// Items currently handed to this executor (queued batches it owns).
+    pub outstanding_items: usize,
+    /// Batches currently executing on this executor.
+    pub in_flight_batches: usize,
+}
+
+/// Shared, lock-light progress counters the execution paths update while
+/// the dashboard samples them. All methods take `&self`; cloning the
+/// `Arc<FleetGauges>` into the dispatcher / sweep / server is the wiring.
+#[derive(Default)]
+pub struct FleetGauges {
+    outstanding_items: AtomicUsize,
+    in_flight_batches: AtomicUsize,
+    completed_batches: AtomicU64,
+    completed_items: AtomicU64,
+    cells_total: AtomicUsize,
+    cells_done: AtomicUsize,
+    cells_memoized: AtomicUsize,
+    cells_failed: AtomicUsize,
+    per_agent: Mutex<BTreeMap<String, AgentGauge>>,
+    latencies: Mutex<VecDeque<(String, f64)>>,
+}
+
+impl FleetGauges {
+    pub fn new() -> Arc<FleetGauges> {
+        Arc::new(FleetGauges::default())
+    }
+
+    /// A batch was handed to `agent` for execution.
+    pub fn batch_started(&self, agent: &str, items: usize) {
+        self.outstanding_items.fetch_add(items, Ordering::Relaxed);
+        self.in_flight_batches.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.per_agent.lock().unwrap();
+        let g = map.entry(agent.to_string()).or_default();
+        g.outstanding_items += items;
+        g.in_flight_batches += 1;
+    }
+
+    /// The batch came back (success or failure): undo the in-flight counts.
+    pub fn batch_finished(&self, agent: &str, items: usize) {
+        self.outstanding_items.fetch_sub(items, Ordering::Relaxed);
+        self.in_flight_batches.fetch_sub(1, Ordering::Relaxed);
+        let mut map = self.per_agent.lock().unwrap();
+        let g = map.entry(agent.to_string()).or_default();
+        g.outstanding_items = g.outstanding_items.saturating_sub(items);
+        g.in_flight_batches = g.in_flight_batches.saturating_sub(1);
+    }
+
+    /// The batch executed successfully.
+    pub fn batch_completed(&self, items: usize) {
+        self.completed_batches.fetch_add(1, Ordering::Relaxed);
+        self.completed_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    /// A sweep pass begins: `total` cells in the cross-product. Counters
+    /// accumulate across passes, so a controller running several sweeps
+    /// shows fleet-lifetime progress.
+    pub fn sweep_started(&self, total: usize) {
+        self.cells_total.fetch_add(total, Ordering::Relaxed);
+    }
+
+    pub fn cells_memoized(&self, n: usize) {
+        self.cells_memoized.fetch_add(n, Ordering::Relaxed);
+        self.cells_done.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn cell_executed(&self) {
+        self.cells_done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cells_failed(&self, n: usize) {
+        self.cells_failed.fetch_add(n, Ordering::Relaxed);
+        self.cells_done.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one served request's latency into the rolling window.
+    pub fn record_latency(&self, tenant: &str, secs: f64) {
+        let mut ring = self.latencies.lock().unwrap();
+        if ring.len() == LATENCY_RING {
+            ring.pop_front();
+        }
+        ring.push_back((tenant.to_string(), secs));
+    }
+
+    /// Fold a completed evaluation's per-tenant tails into the window.
+    pub fn fold_tenants(&self, tails: &TenantLatencies) {
+        let mut ring = self.latencies.lock().unwrap();
+        for (tenant, samples) in tails.iter() {
+            for s in samples.samples() {
+                if ring.len() == LATENCY_RING {
+                    ring.pop_front();
+                }
+                ring.push_back((tenant.clone(), *s));
+            }
+        }
+    }
+
+    /// A consistent point-in-time copy for rendering or assertions.
+    pub fn snapshot(&self) -> GaugesSnapshot {
+        let per_agent = self.per_agent.lock().unwrap().clone();
+        let ring = self.latencies.lock().unwrap();
+        let mut by_tenant: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for (tenant, secs) in ring.iter() {
+            by_tenant.entry(tenant.clone()).or_default().push(*secs);
+        }
+        let tenant_tails = by_tenant
+            .into_iter()
+            .map(|(tenant, samples)| TenantTail {
+                tenant,
+                count: samples.len(),
+                p50_ms: percentile(&samples, 50.0) * 1e3,
+                p99_ms: percentile(&samples, 99.0) * 1e3,
+            })
+            .collect();
+        GaugesSnapshot {
+            outstanding_items: self.outstanding_items.load(Ordering::Relaxed),
+            in_flight_batches: self.in_flight_batches.load(Ordering::Relaxed),
+            completed_batches: self.completed_batches.load(Ordering::Relaxed),
+            completed_items: self.completed_items.load(Ordering::Relaxed),
+            cells_total: self.cells_total.load(Ordering::Relaxed),
+            cells_done: self.cells_done.load(Ordering::Relaxed),
+            cells_memoized: self.cells_memoized.load(Ordering::Relaxed),
+            cells_failed: self.cells_failed.load(Ordering::Relaxed),
+            per_agent,
+            tenant_tails,
+        }
+    }
+}
+
+/// Point-in-time dashboard state.
+#[derive(Debug, Clone)]
+pub struct GaugesSnapshot {
+    pub outstanding_items: usize,
+    pub in_flight_batches: usize,
+    pub completed_batches: u64,
+    pub completed_items: u64,
+    pub cells_total: usize,
+    pub cells_done: usize,
+    pub cells_memoized: usize,
+    pub cells_failed: usize,
+    pub per_agent: BTreeMap<String, AgentGauge>,
+    pub tenant_tails: Vec<TenantTail>,
+}
+
+/// Rolling latency tail for one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantTail {
+    pub tenant: String,
+    pub count: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+fn lease_cell(remaining: Option<Duration>) -> String {
+    match remaining {
+        None => "gone".to_string(),
+        Some(d) if d == Duration::MAX => "static".to_string(),
+        Some(d) => format!("{:.1}s", d.as_secs_f64()),
+    }
+}
+
+fn progress_bar(done: usize, total: usize, width: usize) -> String {
+    if total == 0 {
+        return format!("[{}]", " ".repeat(width));
+    }
+    let filled = (done * width / total).min(width);
+    format!("[{}{}]", "#".repeat(filled), ".".repeat(width - filled))
+}
+
+/// Render one dashboard frame as plain text (no cursor movement — the
+/// caller decides whether to wrap it in an in-place redraw).
+pub fn render(registry: &Registry, gauges: &FleetGauges) -> String {
+    let snap = gauges.snapshot();
+    let mut out = String::new();
+    out.push_str("mlms fleet dashboard\n");
+    out.push_str("====================\n\n");
+
+    // --- agents: identity, lease, standby, dispatch load ---------------
+    let members = registry.lease_table();
+    let standby_count = members.iter().filter(|(_, _, s)| *s).count();
+    out.push_str(&format!(
+        "agents ({} live, {} standby)\n",
+        members.len() - standby_count,
+        standby_count
+    ));
+    out.push_str("  id                        system        lease    state    outst  in-flight\n");
+    for (a, lease, standby) in &members {
+        let g = snap.per_agent.get(&a.id).copied().unwrap_or_default();
+        out.push_str(&format!(
+            "  {:<25} {:<13} {:<8} {:<8} {:>5}  {:>9}\n",
+            truncate(&a.id, 25),
+            truncate(&a.system, 13),
+            lease_cell(Some(*lease)),
+            if *standby { "standby" } else { "active" },
+            g.outstanding_items,
+            g.in_flight_batches,
+        ));
+    }
+    if members.is_empty() {
+        out.push_str("  (none joined)\n");
+    }
+
+    // --- dispatcher ----------------------------------------------------
+    out.push_str(&format!(
+        "\ndispatch   outstanding {} item(s), {} batch(es) in flight — {} batch(es) / {} item(s) completed\n",
+        snap.outstanding_items,
+        snap.in_flight_batches,
+        snap.completed_batches,
+        snap.completed_items,
+    ));
+
+    // --- sweep progress ------------------------------------------------
+    if snap.cells_total > 0 {
+        out.push_str(&format!(
+            "sweep      {} {}/{} cell(s) — {} memoized, {} failed\n",
+            progress_bar(snap.cells_done, snap.cells_total, 24),
+            snap.cells_done,
+            snap.cells_total,
+            snap.cells_memoized,
+            snap.cells_failed,
+        ));
+    } else {
+        out.push_str("sweep      (no sweep running)\n");
+    }
+
+    // --- rolling latency tails ------------------------------------------
+    if snap.tenant_tails.is_empty() {
+        out.push_str("latency    (no samples yet)\n");
+    } else {
+        out.push_str(&format!(
+            "latency    rolling window, last {} sample(s) max\n",
+            LATENCY_RING
+        ));
+        out.push_str("  tenant            n      p50 ms     p99 ms\n");
+        for t in &snap.tenant_tails {
+            out.push_str(&format!(
+                "  {:<15} {:>5}  {:>9.3}  {:>9.3}\n",
+                truncate(&t.tenant, 15),
+                t.count,
+                t.p50_ms,
+                t.p99_ms,
+            ));
+        }
+    }
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        return s.to_string();
+    }
+    let end = s.char_indices().take(n - 1).last().map_or(0, |(i, c)| i + c.len_utf8());
+    format!("{}…", &s[..end])
+}
+
+/// Background renderer: redraws [`render`] output in place every
+/// `interval` until stopped. Plain escape codes only — clear screen, home
+/// the cursor, hide it while live.
+pub struct LiveDash {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LiveDash {
+    pub fn spawn(
+        registry: Arc<Registry>,
+        gauges: Arc<FleetGauges>,
+        interval: Duration,
+    ) -> LiveDash {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::spawn(move || {
+            use std::io::Write;
+            print!("\x1b[?25l");
+            while !stop2.load(Ordering::Relaxed) {
+                // Home + clear-to-end redraws in place without the flash a
+                // full-screen clear causes.
+                print!("\x1b[H\x1b[2J{}", render(&registry, &gauges));
+                let _ = std::io::stdout().flush();
+                std::thread::sleep(interval);
+            }
+            print!("\x1b[?25h");
+            let _ = std::io::stdout().flush();
+        });
+        LiveDash { stop, thread: Some(thread) }
+    }
+
+    /// Stop redrawing and restore the cursor.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for LiveDash {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauges_account_batches_and_cells() {
+        let g = FleetGauges::new();
+        g.batch_started("a1", 8);
+        g.batch_started("a2", 4);
+        let s = g.snapshot();
+        assert_eq!(s.outstanding_items, 12);
+        assert_eq!(s.in_flight_batches, 2);
+        assert_eq!(s.per_agent["a1"].outstanding_items, 8);
+        g.batch_finished("a1", 8);
+        g.batch_completed(8);
+        let s = g.snapshot();
+        assert_eq!(s.outstanding_items, 4);
+        assert_eq!(s.in_flight_batches, 1);
+        assert_eq!(s.completed_batches, 1);
+        assert_eq!(s.completed_items, 8);
+        assert_eq!(s.per_agent["a1"].in_flight_batches, 0);
+
+        g.sweep_started(10);
+        g.cells_memoized(3);
+        g.cell_executed();
+        g.cells_failed(1);
+        let s = g.snapshot();
+        assert_eq!((s.cells_total, s.cells_done), (10, 5));
+        assert_eq!((s.cells_memoized, s.cells_failed), (3, 1));
+    }
+
+    #[test]
+    fn rolling_window_is_bounded_and_computes_tails() {
+        let g = FleetGauges::new();
+        for i in 0..(LATENCY_RING + 100) {
+            g.record_latency("all", 0.001 * (i % 100) as f64);
+        }
+        let s = g.snapshot();
+        assert_eq!(s.tenant_tails.len(), 1);
+        assert_eq!(s.tenant_tails[0].count, LATENCY_RING);
+        assert!(s.tenant_tails[0].p99_ms >= s.tenant_tails[0].p50_ms);
+    }
+
+    #[test]
+    fn render_smokes_without_agents_or_samples() {
+        let registry = Registry::new();
+        let g = FleetGauges::new();
+        let frame = render(&registry, &g);
+        assert!(frame.contains("mlms fleet dashboard"));
+        assert!(frame.contains("(none joined)"));
+        assert!(frame.contains("(no samples yet)"));
+        // Plain text — the frame itself carries no escape codes; the live
+        // loop adds cursor control, the `--once` path prints it verbatim.
+        assert!(!frame.contains('\x1b'));
+    }
+
+    #[test]
+    fn progress_bar_shapes() {
+        assert_eq!(progress_bar(0, 0, 4), "[    ]");
+        assert_eq!(progress_bar(2, 4, 4), "[##..]");
+        assert_eq!(progress_bar(4, 4, 4), "[####]");
+    }
+}

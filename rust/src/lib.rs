@@ -78,7 +78,10 @@ pub mod traceserver;
 pub mod analysis;
 pub mod evaldb;
 pub mod regress;
+pub mod spec;
 pub mod sweep;
+
+pub mod dash;
 
 pub mod predictor;
 pub mod runtime;

@@ -6,7 +6,10 @@
 //! - `agent serve` — run an agent process (wire RPC), optionally joining a
 //!   fleet registry with TTL heartbeats and a `--chaos` fault plan
 //! - `fleet`   — host a registry, wait for remote agents, run work on them
+//!   (`--dash` renders a live ANSI dashboard while work runs)
 //! - `eval`    — one-shot evaluation through an in-process platform
+//! - `run`     — execute a declarative YAML evaluation spec (`mlms run
+//!   spec.yaml`): same engines, same digests, file-shaped
 //! - `analyze` — run the analysis workflow over a stored evaluation DB
 //! - `zoo`     — list built-in models / systems
 //! - `trace`   — render a trace timeline
@@ -43,6 +46,7 @@ const COMMANDS: &[Command] = &[
         about: "host a registry, wait for remote agents, run sweeps/evals on them",
     },
     Command { name: "eval", about: "one-shot evaluation (in-process platform)" },
+    Command { name: "run", about: "execute a declarative YAML evaluation spec" },
     Command { name: "analyze", about: "analysis workflow over a stored eval DB" },
     Command { name: "zoo", about: "list built-in models / systems" },
     Command { name: "trace", about: "evaluate with tracing and render the timeline" },
@@ -82,6 +86,7 @@ fn main() {
         "agent" => cmd_agent(&args),
         "fleet" => cmd_fleet(&args),
         "eval" => cmd_eval(&args),
+        "run" => cmd_run(&args),
         "analyze" => cmd_analyze(&args),
         "zoo" => cmd_zoo(&args),
         "trace" => cmd_trace(&args),
@@ -98,6 +103,22 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Unwrap a strict-parse result (`Args::try_u64`/`try_f64`/...,
+/// [`parse_scenario`]) or print the usage error and exit the command with
+/// code 2. Malformed numeric flags must fail loudly, never silently run
+/// the default experiment.
+macro_rules! cli_try {
+    ($e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
 }
 
 /// Parse `--trace-level`, reporting invalid values as a usage error.
@@ -152,53 +173,62 @@ fn build_platform_with_db(
     server
 }
 
-fn parse_scenario(args: &Args) -> Scenario {
-    match args.opt_or("scenario", "online") {
+/// Parse `--scenario` + its per-kind numeric flags strictly: a malformed
+/// value (`--count 1O`, `--timestamps 0,abc`) or an unknown scenario name
+/// is a usage error naming the offending token, never a silent default.
+fn parse_scenario(args: &Args) -> Result<Scenario, String> {
+    Ok(match args.opt_or("scenario", "online") {
+        "online" => Scenario::Online { count: args.try_usize("count", 16)? },
         "batched" => Scenario::Batched {
-            batch_size: args.usize_or("batch", 8),
-            batches: args.usize_or("batches", 4),
+            batch_size: args.try_usize("batch", 8)?,
+            batches: args.try_usize("batches", 4)?,
         },
         "poisson" => Scenario::Poisson {
-            rate: args.f64_or("rate", 20.0),
-            count: args.usize_or("count", 32),
+            rate: args.try_f64("rate", 20.0)?,
+            count: args.try_usize("count", 32)?,
         },
         "fixed_qps" => Scenario::FixedQps {
-            qps: args.f64_or("qps", 10.0),
-            count: args.usize_or("count", 32),
+            qps: args.try_f64("qps", 10.0)?,
+            count: args.try_usize("count", 32)?,
         },
         "burst" => Scenario::Burst {
-            burst_size: args.usize_or("burst-size", 8),
-            period_s: args.f64_or("period", 1.0),
-            bursts: args.usize_or("bursts", 4),
+            burst_size: args.try_usize("burst-size", 8)?,
+            period_s: args.try_f64("period", 1.0)?,
+            bursts: args.try_usize("bursts", 4)?,
         },
         "diurnal" => Scenario::Diurnal {
-            peak_qps: args.f64_or("peak-qps", 100.0),
-            trough_qps: args.f64_or("trough-qps", 10.0),
-            period_s: args.f64_or("period", 60.0),
-            count: args.usize_or("count", 32),
+            peak_qps: args.try_f64("peak-qps", 100.0)?,
+            trough_qps: args.try_f64("trough-qps", 10.0)?,
+            period_s: args.try_f64("period", 60.0)?,
+            count: args.try_usize("count", 32)?,
         },
         // `--timestamps 0.0,0.01,0.5,...` — replay a recorded arrival log.
-        "trace_replay" => Scenario::TraceReplay {
-            timestamps: args
-                .list("timestamps")
-                .iter()
-                .filter_map(|t| t.parse::<f64>().ok())
-                .collect(),
-        },
+        "trace_replay" => {
+            let timestamps = args.try_list_f64("timestamps")?;
+            if timestamps.is_empty() {
+                return Err("--timestamps must list at least one arrival time".to_string());
+            }
+            Scenario::TraceReplay { timestamps }
+        }
         // MLPerf inference modes (MLHarness grammar).
-        "single_stream" => Scenario::SingleStream { count: args.usize_or("count", 32) },
+        "single_stream" => Scenario::SingleStream { count: args.try_usize("count", 32)? },
         "multi_stream" => Scenario::MultiStream {
-            streams: args.usize_or("streams", 8),
-            period_s: args.f64_or("period", 0.05),
-            intervals: args.usize_or("intervals", 8),
+            streams: args.try_usize("streams", 8)?,
+            period_s: args.try_f64("period", 0.05)?,
+            intervals: args.try_usize("intervals", 8)?,
         },
         "server" => Scenario::Server {
-            qps: args.f64_or("qps", 100.0),
-            count: args.usize_or("count", 256),
+            qps: args.try_f64("qps", 100.0)?,
+            count: args.try_usize("count", 256)?,
         },
-        "offline" => Scenario::Offline { count: args.usize_or("count", 256) },
-        _ => Scenario::Online { count: args.usize_or("count", 16) },
-    }
+        "offline" => Scenario::Offline { count: args.try_usize("count", 256)? },
+        other => {
+            return Err(format!(
+                "unknown --scenario {other:?} (online|batched|poisson|fixed_qps|burst|diurnal|\
+                 trace_replay|single_stream|multi_stream|server|offline)"
+            ))
+        }
+    })
 }
 
 fn cmd_server(args: &Args) -> i32 {
@@ -278,7 +308,8 @@ fn cmd_agent(args: &Args) -> i32 {
     };
     let chaos = match args.opt("chaos") {
         Some(spec) => {
-            match mlmodelscope::chaos::FaultPlan::parse(spec, args.u64_or("chaos-seed", 0)) {
+            let chaos_seed = cli_try!(args.try_u64("chaos-seed", 0));
+            match mlmodelscope::chaos::FaultPlan::parse(spec, chaos_seed) {
                 Ok(plan) => {
                     eprintln!("chaos plan armed: {spec} (seed {})", plan.seed);
                     Some(mlmodelscope::chaos::ChaosEngine::new(plan))
@@ -303,9 +334,10 @@ fn cmd_agent(args: &Args) -> i32 {
     // pool behind the readiness loop, `--wire-queue N` its dispatch queue
     // (the back-pressure bound on queued-but-unexecuted requests).
     let mut wire_opts = mlmodelscope::wire::WireOpts::default();
-    wire_opts.workers = args.u64_or("wire-workers", wire_opts.workers as u64).max(1) as usize;
+    wire_opts.workers =
+        cli_try!(args.try_u64("wire-workers", wire_opts.workers as u64)).max(1) as usize;
     wire_opts.queue_capacity =
-        args.u64_or("wire-queue", wire_opts.queue_capacity as u64).max(64) as usize;
+        cli_try!(args.try_u64("wire-queue", wire_opts.queue_capacity as u64)).max(64) as usize;
     let rpc = match mlmodelscope::wire::RpcServer::serve_with_opts(
         addr,
         mlmodelscope::agent::agent_service(agent.clone()),
@@ -320,10 +352,10 @@ fn cmd_agent(args: &Args) -> i32 {
     };
     println!("mlms agent ({system}) serving wire RPC on {}", rpc.addr());
     if let Some(registry_addr) = args.opt("registry") {
-        let ttl_secs = args.f64_or("ttl-secs", 10.0).max(0.1);
-        let interval = std::time::Duration::from_millis(
-            args.u64_or("heartbeat-ms", ((ttl_secs * 1e3) as u64 / 4).max(100)),
-        );
+        let ttl_secs = cli_try!(args.try_f64("ttl-secs", 10.0)).max(0.1);
+        let beat_default = ((ttl_secs * 1e3) as u64 / 4).max(100);
+        let beat_ms = cli_try!(args.try_u64("heartbeat-ms", beat_default));
+        let interval = std::time::Duration::from_millis(beat_ms);
         let registry_addr = registry_addr.to_string();
         let endpoint = rpc.addr().to_string();
         let agent = agent.clone();
@@ -427,11 +459,12 @@ fn cmd_eval(args: &Args) -> i32 {
         Ok(l) => l,
         Err(code) => return code,
     };
+    let scenario = cli_try!(parse_scenario(args));
     let server = build_platform(args, level);
-    let mut job = EvalJob::new(&model, parse_scenario(args));
+    let mut job = EvalJob::new(&model, scenario);
     job.trace_level = level;
     job.input_mode = InputMode::parse(args.opt_or("input-mode", "c"));
-    job.seed = args.u64_or("seed", 42);
+    job.seed = cli_try!(args.try_u64("seed", 42));
     job.all_agents = args.flag("all-agents");
     if let Some(sys) = args.opt("system") {
         job.requirements = SystemRequirements::on_system(sys);
@@ -459,6 +492,232 @@ fn cmd_eval(args: &Args) -> i32 {
         Err(e) => {
             eprintln!("evaluation failed: {e}");
             1
+        }
+    }
+}
+
+/// `mlms run <spec.yaml>` — execute a declarative evaluation spec through
+/// the same engines the flag-driven subcommands use. The spec resolves to
+/// the exact [`sweep::Plan`](mlmodelscope::sweep::Plan) the flags would
+/// build, so every cell's content-addressed `EvalSpec` digest — and its
+/// memoization line in the eval DB — is identical between the two
+/// front-ends: `mlms run nightly.yaml` against a store already populated
+/// by `mlms sweep` re-executes nothing.
+///
+/// ```sh
+/// mlms run examples/specs/quickstart.yaml --evaldb sweep_db
+/// ```
+fn cmd_run(args: &Args) -> i32 {
+    use mlmodelscope::spec::{EvalSpecFile, RunKind};
+    let path = match args.positional.first() {
+        Some(p) => p.to_string(),
+        None => {
+            eprintln!("usage: mlms run <spec.yaml> [--evaldb <path>]");
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 1;
+        }
+    };
+    let spec = match EvalSpecFile::parse(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 2;
+        }
+    };
+    println!("spec {path} [{}] digest {}", spec.kind.as_str(), spec.digest());
+    let evaldb = match args.opt("evaldb") {
+        Some(p) => match mlmodelscope::evaldb::EvalDb::open(p) {
+            Ok(db) => Some(Arc::new(db)),
+            Err(e) => {
+                eprintln!("open {p}: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+    match spec.kind {
+        RunKind::Eval | RunKind::Sweep => {
+            let plan = spec.to_plan();
+            let server = build_platform_with_db(args, spec.trace_level, evaldb);
+            let outcome = mlmodelscope::sweep::run(&server, &plan);
+            println!("{}", outcome.summary());
+            for (cell, err) in &outcome.failed {
+                eprintln!("  failed {}: {err}", cell.label());
+            }
+            println!(
+                "{}",
+                mlmodelscope::analysis::model_system_matrix(&plan.models, &server.evaldb)
+                    .render()
+            );
+            if outcome.failed.is_empty() {
+                0
+            } else {
+                1
+            }
+        }
+        RunKind::Regress => {
+            use mlmodelscope::evaldb::RunMeta;
+            use mlmodelscope::regress::{compare_labels, GateConfig, Verdict};
+            let block = spec.regress.clone().expect("schema guarantees a regress block");
+            let mut plan = spec.to_plan();
+            let server = build_platform_with_db(args, spec.trace_level, evaldb);
+            for label in [&block.control, &block.treatment] {
+                plan.run_meta = RunMeta::labeled(label);
+                let outcome = mlmodelscope::sweep::run(&server, &plan);
+                println!("{label}: {}", outcome.summary());
+                for (cell, err) in &outcome.failed {
+                    eprintln!("  failed {}: {err}", cell.label());
+                }
+                if !outcome.failed.is_empty() {
+                    return 1;
+                }
+            }
+            let cfg = GateConfig {
+                alpha: block.alpha,
+                min_effect: block.min_effect,
+                ..GateConfig::default()
+            };
+            let cmp = compare_labels(&server.evaldb, &block.control, &block.treatment, &cfg);
+            match mlmodelscope::analysis::regression_section(&cmp) {
+                Some(section) => println!("{section}"),
+                None => println!(
+                    "no cell measured under both {:?} and {:?}",
+                    block.control, block.treatment
+                ),
+            }
+            for m in &cmp.missing {
+                eprintln!("  unpaired: {m}");
+            }
+            let flagged = cmp.cells.iter().filter(|c| c.verdict == Verdict::Regression).count();
+            if flagged > 0 {
+                eprintln!("regression gate FAILED: {flagged} regression(s)");
+                1
+            } else {
+                println!("regression gate passed: {} cell(s) clean", cmp.cells.len());
+                0
+            }
+        }
+        RunKind::SloSearch => {
+            use mlmodelscope::slo::{
+                search_max_qps, store_frontier_point, SloSearchConfig, SloSpec,
+            };
+            let block = spec.slo.clone().unwrap_or_default();
+            let cfg = spec
+                .dispatch
+                .clone()
+                .unwrap_or_else(|| mlmodelscope::batcher::BatcherConfig::new(8, 5.0));
+            let sc = SloSearchConfig {
+                start_qps: block.start_qps,
+                probe_count: block.probe_count,
+                max_probes: block.max_probes,
+                ..SloSearchConfig::default()
+            };
+            let server = build_platform_with_db(args, TraceLevel::None, evaldb);
+            for model in &spec.models {
+                let mut job = EvalJob::new(model, Scenario::Online { count: 1 });
+                job.seed = spec.seed;
+                // The frontier is searched on the spec's first system.
+                if let Some(sys) = spec.systems.first() {
+                    job.requirements = SystemRequirements::on_system(sys);
+                }
+                job.requirements.accelerator = spec.accelerator;
+                for bound in &block.bounds_ms {
+                    let slo = SloSpec::new(block.percentile, *bound);
+                    match search_max_qps(&server, &job, &cfg, slo, &sc) {
+                        Ok(point) => {
+                            println!(
+                                "{} {}: max {:.1} qps (achieved {:.2} ms, {} probes)",
+                                model,
+                                slo.label(),
+                                point.max_qps,
+                                point.achieved_ms,
+                                point.probes.len()
+                            );
+                            store_frontier_point(&server, &point);
+                        }
+                        Err(e) => {
+                            eprintln!("slo-search failed: {e}");
+                            return 1;
+                        }
+                    }
+                }
+            }
+            println!(
+                "{}",
+                mlmodelscope::analysis::slo_frontier_table(&spec.models, &server.evaldb).render()
+            );
+            0
+        }
+        RunKind::Autoscale => {
+            use mlmodelscope::autoscale::{run_autoscaled_sim, AutoscaleConfig, ServiceModel};
+            use mlmodelscope::scenario::Workload;
+            use mlmodelscope::slo::SloSpec;
+            let block = spec.autoscale.clone().unwrap_or_default();
+            let workload = Workload::generate(&spec.scenario, spec.seed);
+            let cfg = spec
+                .dispatch
+                .clone()
+                .unwrap_or_else(|| mlmodelscope::batcher::BatcherConfig::new(8, 2.0));
+            let slo = SloSpec::new(block.percentile, block.bound_ms);
+            let acfg = AutoscaleConfig {
+                min_agents: block.min_agents,
+                max_agents: block.max_agents,
+                interval_s: block.interval_s,
+                cooldown_s: block.cooldown_s,
+                spawn_delay_s: block.spawn_delay_s,
+                ..AutoscaleConfig::default()
+            };
+            let svc = ServiceModel {
+                base_s: block.service_base_ms * 1e-3,
+                per_item_s: block.service_item_ms * 1e-3,
+            };
+            let adm = spec.admission.clone().unwrap_or_default();
+            let initial = block.agents.unwrap_or(block.min_agents);
+            let autoscale = !block.fixed;
+            let report =
+                run_autoscaled_sim(&workload, &cfg, &adm, slo, &acfg, &svc, initial, autoscale);
+            println!(
+                "{} requests offered, {} completed, {} shed — fleet {} -> {} (peak {})",
+                workload.requests.len(),
+                report.completed,
+                report.shed.total_shed(),
+                initial,
+                report.final_agents,
+                report.peak_agents,
+            );
+            for e in &report.events {
+                println!("  t={:7.2}s  {} -> {} agents  ({})", e.at_s, e.from, e.to, e.reason);
+            }
+            for (tenant, row) in &report.shed.rows {
+                println!(
+                    "  tenant {tenant} ({}): offered {} admitted {} shed {} (rate {}, deadline {})",
+                    row.priority,
+                    row.offered,
+                    row.admitted,
+                    row.shed_total(),
+                    row.shed_rate_limited,
+                    row.shed_deadline,
+                );
+            }
+            println!(
+                "{}: achieved p{:.0} {:.2} ms vs bound {:.1} ms [{}]",
+                if autoscale { "autoscaled" } else { "static" },
+                slo.percentile,
+                report.achieved_ms,
+                slo.bound_ms,
+                if report.passed { "SLO MET" } else { "SLO VIOLATED" },
+            );
+            if report.passed {
+                0
+            } else {
+                1
+            }
         }
     }
 }
@@ -551,7 +810,8 @@ fn cmd_trace(args: &Args) -> i32 {
             println!("{}", tl.render());
             println!(
                 "{}",
-                mlmodelscope::analysis::layer_kernel_table(&tl, args.usize_or("top", 5)).render()
+                mlmodelscope::analysis::layer_kernel_table(&tl, cli_try!(args.try_usize("top", 5)))
+                    .render()
             );
             let (total, fast) = mlmodelscope::analysis::layer_population(&tl);
             println!("{total} layers, {fast} under 1 ms");
@@ -594,25 +854,30 @@ fn cmd_trace_analyze(args: &Args) -> i32 {
         Some(l) => l,
     };
     let server = build_platform(args, level);
-    let runs = args.usize_or("runs", 3).max(1);
-    let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
+    let runs = cli_try!(args.try_usize("runs", 3)).max(1);
+    let mut cfg = BatcherConfig::new(
+        cli_try!(args.try_usize("batch", 8)),
+        cli_try!(args.try_f64("wait-ms", 5.0)),
+    );
     cfg.fair = args.flag("fair");
     // Default workload: a Poisson stream brisk enough that queueing and
     // batching actually show up in the attribution.
     let scenario = if args.opt("scenario").is_some() {
-        parse_scenario(args)
+        cli_try!(parse_scenario(args))
     } else {
         Scenario::Poisson {
-            rate: args.f64_or("rate", 500.0),
-            count: args.usize_or("count", 128),
+            rate: cli_try!(args.try_f64("rate", 500.0)),
+            count: cli_try!(args.try_usize("count", 128)),
         }
     };
+    let base_seed = cli_try!(args.try_u64("seed", 42));
+    let top = cli_try!(args.try_usize("top", 8));
     let mut serving = Vec::new();
     let mut sessions = Vec::new();
     for run in 0..runs {
         let mut job = EvalJob::new(&model, scenario.clone());
         job.trace_level = level;
-        job.seed = args.u64_or("seed", 42).wrapping_add(run as u64);
+        job.seed = base_seed.wrapping_add(run as u64);
         if let Some(sys) = args.opt("system") {
             job.requirements = SystemRequirements::on_system(sys);
         }
@@ -634,7 +899,6 @@ fn cmd_trace_analyze(args: &Args) -> i32 {
             }
         }
     }
-    let top = args.usize_or("top", 8);
     if serving.is_empty() {
         eprintln!("no serving trace captured");
         return 1;
@@ -673,22 +937,25 @@ fn cmd_slo_search(args: &Args) -> i32 {
     };
     let server = build_platform(args, TraceLevel::None);
     let mut job = EvalJob::new(&model, Scenario::Online { count: 1 });
-    job.seed = args.u64_or("seed", 42);
+    job.seed = cli_try!(args.try_u64("seed", 42));
     if let Some(sys) = args.opt("system") {
         job.requirements = SystemRequirements::on_system(sys);
     }
     if let Some(acc) = args.opt("accelerator") {
         job.requirements.accelerator = mlmodelscope::manifest::Accelerator::parse(acc);
     }
-    let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
+    let mut cfg = BatcherConfig::new(
+        cli_try!(args.try_usize("batch", 8)),
+        cli_try!(args.try_f64("wait-ms", 5.0)),
+    );
     cfg.fair = args.flag("fair");
     let sc = SloSearchConfig {
-        start_qps: args.f64_or("start-qps", 50.0),
-        probe_count: args.usize_or("count", 256),
-        max_probes: args.usize_or("max-probes", 24),
+        start_qps: cli_try!(args.try_f64("start-qps", 50.0)),
+        probe_count: cli_try!(args.try_usize("count", 256)),
+        max_probes: cli_try!(args.try_usize("max-probes", 24)),
         ..SloSearchConfig::default()
     };
-    let percentile = args.f64_or("percentile", 99.0);
+    let percentile = cli_try!(args.try_f64("percentile", 99.0));
     let bounds: Vec<f64> = if args.opt("bounds-ms").is_some() {
         let mut parsed = Vec::new();
         for raw in args.list("bounds-ms") {
@@ -757,38 +1024,50 @@ fn cmd_autoscale(args: &Args) -> i32 {
     use mlmodelscope::scenario::Workload;
     use mlmodelscope::slo::SloSpec;
 
-    let scenario = parse_scenario(args);
-    let workload = Workload::generate(&scenario, args.u64_or("seed", 42));
-    let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 2.0));
+    let scenario = cli_try!(parse_scenario(args));
+    let workload = Workload::generate(&scenario, cli_try!(args.try_u64("seed", 42)));
+    let mut cfg = BatcherConfig::new(
+        cli_try!(args.try_usize("batch", 8)),
+        cli_try!(args.try_f64("wait-ms", 2.0)),
+    );
     cfg.fair = args.flag("fair");
-    let spec = SloSpec::new(args.f64_or("percentile", 99.0), args.f64_or("bound-ms", 10.0));
+    let spec = SloSpec::new(
+        cli_try!(args.try_f64("percentile", 99.0)),
+        cli_try!(args.try_f64("bound-ms", 10.0)),
+    );
     let acfg = AutoscaleConfig {
-        min_agents: args.usize_or("min-agents", 1),
-        max_agents: args.usize_or("max-agents", 8),
-        interval_s: args.f64_or("interval", 0.5),
-        cooldown_s: args.f64_or("cooldown", 1.0),
-        spawn_delay_s: args.f64_or("spawn-delay", 0.25),
+        min_agents: cli_try!(args.try_usize("min-agents", 1)),
+        max_agents: cli_try!(args.try_usize("max-agents", 8)),
+        interval_s: cli_try!(args.try_f64("interval", 0.5)),
+        cooldown_s: cli_try!(args.try_f64("cooldown", 1.0)),
+        spawn_delay_s: cli_try!(args.try_f64("spawn-delay", 0.25)),
         ..AutoscaleConfig::default()
     };
     let svc = ServiceModel {
-        base_s: args.f64_or("service-base-ms", 1.0) * 1e-3,
-        per_item_s: args.f64_or("service-item-ms", 0.4) * 1e-3,
+        base_s: cli_try!(args.try_f64("service-base-ms", 1.0)) * 1e-3,
+        per_item_s: cli_try!(args.try_f64("service-item-ms", 0.4)) * 1e-3,
     };
     let mut adm = AdmissionConfig::default();
     if args.opt("low-rate").is_some() || args.opt("low-deadline-ms").is_some() {
+        let rate_per_s = match args.opt("low-rate") {
+            Some(_) => Some(cli_try!(args.try_f64("low-rate", 500.0))),
+            None => None,
+        };
+        let queue_deadline_ms = match args.opt("low-deadline-ms") {
+            Some(_) => Some(cli_try!(args.try_f64("low-deadline-ms", 50.0))),
+            None => None,
+        };
         adm = adm.with_tenant(
             1,
             TenantPolicy {
                 priority: Priority::Low,
-                rate_per_s: args.opt("low-rate").map(|_| args.f64_or("low-rate", 500.0)),
-                burst: args.f64_or("low-burst", 64.0),
-                queue_deadline_ms: args
-                    .opt("low-deadline-ms")
-                    .map(|_| args.f64_or("low-deadline-ms", 50.0)),
+                rate_per_s,
+                burst: cli_try!(args.try_f64("low-burst", 64.0)),
+                queue_deadline_ms,
             },
         );
     }
-    let initial = args.usize_or("agents", acfg.min_agents);
+    let initial = cli_try!(args.try_usize("agents", acfg.min_agents));
     let autoscale = !args.flag("static");
     let report =
         run_autoscaled_sim(&workload, &cfg, &adm, spec, &acfg, &svc, initial, autoscale);
@@ -882,14 +1161,20 @@ fn build_sweep_plan(args: &Args, level: TraceLevel) -> Result<mlmodelscope::swee
     }
     let mut plan = Plan::new(models, systems);
     plan.batch_sizes = batch_sizes;
-    plan.scenarios = vec![parse_scenario(args)];
+    plan.scenarios = vec![parse_scenario(args)?];
     plan.trace_level = level;
-    plan.seed = args.u64_or("seed", 42);
-    plan.parallelism = args.usize_or("jobs", 4);
-    plan.accelerator =
-        mlmodelscope::manifest::Accelerator::parse(args.opt_or("accelerator", "gpu"));
+    plan.seed = args.try_u64("seed", 42)?;
+    plan.parallelism = args.try_usize("jobs", 4)?;
+    let acc = args.opt_or("accelerator", "gpu");
+    if !["cpu", "gpu", "fpga", "any"].iter().any(|k| acc.eq_ignore_ascii_case(k)) {
+        return Err(format!("invalid --accelerator {acc:?} (cpu|gpu|fpga|any)"));
+    }
+    plan.accelerator = mlmodelscope::manifest::Accelerator::parse(acc);
     if args.flag("dispatch") {
-        let mut cfg = BatcherConfig::new(args.usize_or("batch", 8), args.f64_or("wait-ms", 5.0));
+        let mut cfg = BatcherConfig::new(
+            args.try_usize("batch", 8)?,
+            args.try_f64("wait-ms", 5.0)?,
+        );
         cfg.fair = args.flag("fair");
         plan.dispatch = Some(cfg);
     }
@@ -985,9 +1270,9 @@ fn cmd_overhead(args: &Args) -> i32 {
     };
     cfg.model = args.opt_or("model", &cfg.model).to_string();
     cfg.system = args.opt_or("system", &cfg.system).to_string();
-    cfg.requests = args.usize_or("requests", cfg.requests);
-    cfg.trials = args.usize_or("trials", cfg.trials);
-    cfg.iters = args.usize_or("iters", cfg.iters);
+    cfg.requests = cli_try!(args.try_usize("requests", cfg.requests));
+    cfg.trials = cli_try!(args.try_usize("trials", cfg.trials));
+    cfg.iters = cli_try!(args.try_usize("iters", cfg.iters));
     if cfg.requests == 0 || cfg.trials == 0 {
         eprintln!("--requests and --trials must be positive");
         return 2;
@@ -1062,11 +1347,11 @@ fn cmd_regress(args: &Args) -> i32 {
         }
     }
     let cfg = GateConfig {
-        alpha: args.f64_or("alpha", 0.01),
-        min_effect: args.f64_or("min-effect", 0.05),
-        bootstrap_resamples: args.usize_or("resamples", 400).max(1),
-        bootstrap_seed: args.u64_or("bootstrap-seed", 42),
-        cp_penalty: args.f64_or("cp-penalty", 8.0),
+        alpha: cli_try!(args.try_f64("alpha", 0.01)),
+        min_effect: cli_try!(args.try_f64("min-effect", 0.05)),
+        bootstrap_resamples: cli_try!(args.try_usize("resamples", 400)).max(1),
+        bootstrap_seed: cli_try!(args.try_u64("bootstrap-seed", 42)),
+        cp_penalty: cli_try!(args.try_f64("cp-penalty", 8.0)),
         ..GateConfig::default()
     };
     let cmp = compare_labels(&server.evaldb, &control, &treatment, &cfg);
@@ -1095,7 +1380,7 @@ fn cmd_regress(args: &Args) -> i32 {
             return 1;
         }
         for (cell, idx, label) in
-            traj.recent_changepoints(args.usize_or("cp-window", 3), &cfg)
+            traj.recent_changepoints(cli_try!(args.try_usize("cp-window", 3)), &cfg)
         {
             eprintln!("step change in {cell} at {label} (trajectory index {idx})");
             step_changes += 1;
@@ -1172,9 +1457,10 @@ fn cmd_fleet(args: &Args) -> i32 {
     // multiplexed loop; `--wire-workers`/`--wire-queue` tune it the same
     // way they tune `mlms agent serve`.
     let mut wire_opts = mlmodelscope::wire::WireOpts::default();
-    wire_opts.workers = args.u64_or("wire-workers", wire_opts.workers as u64).max(1) as usize;
+    wire_opts.workers =
+        cli_try!(args.try_u64("wire-workers", wire_opts.workers as u64)).max(1) as usize;
     wire_opts.queue_capacity =
-        args.u64_or("wire-queue", wire_opts.queue_capacity as u64).max(64) as usize;
+        cli_try!(args.try_u64("wire-queue", wire_opts.queue_capacity as u64)).max(64) as usize;
     let registry_rpc = match mlmodelscope::wire::RpcServer::serve_with_opts(
         listen,
         registry_service(server.registry.clone()),
@@ -1192,9 +1478,9 @@ fn cmd_fleet(args: &Args) -> i32 {
         registry_rpc.addr(),
         registry_rpc.addr()
     );
-    let expect = args.usize_or("expect-agents", 1);
+    let expect = cli_try!(args.try_usize("expect-agents", 1));
     let wait_deadline = std::time::Instant::now()
-        + std::time::Duration::from_secs_f64(args.f64_or("wait-secs", 60.0));
+        + std::time::Duration::from_secs_f64(cli_try!(args.try_f64("wait-secs", 60.0)));
     loop {
         let joined = server.registry.agents().len();
         if joined >= expect {
@@ -1216,6 +1502,24 @@ fn cmd_fleet(args: &Args) -> i32 {
             .collect::<Vec<_>>()
             .join(", ")
     );
+    // `--dash` renders the fleet dashboard while the action runs: lease
+    // state per member, dispatcher queue depth, sweep progress, tenant tail
+    // latencies. `--once` prints a single plain frame and skips the redraw
+    // thread — the headless/CI form.
+    let dash = if args.flag("dash") {
+        if args.flag("once") {
+            print!("{}", mlmodelscope::dash::render(&server.registry, &server.gauges));
+            None
+        } else {
+            Some(mlmodelscope::dash::LiveDash::spawn(
+                server.registry.clone(),
+                server.gauges.clone(),
+                std::time::Duration::from_millis(250),
+            ))
+        }
+    } else {
+        None
+    };
     let code = match action {
         "agents" => 0,
         "eval" => {
@@ -1226,17 +1530,17 @@ fn cmd_fleet(args: &Args) -> i32 {
                     return 2;
                 }
             };
-            let mut job = EvalJob::new(&model, parse_scenario(args));
+            let mut job = EvalJob::new(&model, cli_try!(parse_scenario(args)));
             job.trace_level = level;
-            job.seed = args.u64_or("seed", 42);
+            job.seed = cli_try!(args.try_u64("seed", 42));
             job.all_agents = args.flag("all-agents");
             if let Some(sys) = args.opt("system") {
                 job.requirements = SystemRequirements::on_system(sys);
             }
             if args.flag("dispatch") {
                 let mut cfg = mlmodelscope::batcher::BatcherConfig::new(
-                    args.usize_or("batch", 8),
-                    args.f64_or("wait-ms", 5.0),
+                    cli_try!(args.try_usize("batch", 8)),
+                    cli_try!(args.try_f64("wait-ms", 5.0)),
                 );
                 cfg.fair = args.flag("fair");
                 match server.evaluate_batched(&job, &cfg) {
@@ -1306,6 +1610,9 @@ fn cmd_fleet(args: &Args) -> i32 {
             }
         }
     };
+    if let Some(d) = dash {
+        d.stop();
+    }
     registry_rpc.stop();
     code
 }
@@ -1356,7 +1663,7 @@ fn cmd_client(args: &Args) -> i32 {
             };
             let payload = Json::obj(vec![
                 ("model", Json::str(model)),
-                ("scenario", parse_scenario(args).to_json()),
+                ("scenario", cli_try!(parse_scenario(args)).to_json()),
                 ("trace_level", Json::str(args.opt_or("trace-level", "model"))),
                 ("all_agents", Json::Bool(args.flag("all-agents"))),
             ]);

@@ -213,6 +213,27 @@ impl Registry {
         agents.values().map(|e| e.value.clone()).collect()
     }
 
+    /// One consistent membership snapshot for the fleet dashboard: every
+    /// live agent with its remaining lease (`Duration::MAX` for TTL-less
+    /// in-process agents) and standby state, under a single sweep instead
+    /// of one lock round-trip per row.
+    pub fn lease_table(&self) -> Vec<(AgentInfo, Duration, bool)> {
+        let now = Instant::now();
+        let mut agents = self.agents.lock().unwrap();
+        agents.retain(|_, e| e.expires.map_or(true, |t| t > now));
+        let standby = self.standby.lock().unwrap();
+        agents
+            .values()
+            .map(|e| {
+                let lease = match e.expires {
+                    None => Duration::MAX,
+                    Some(t) => t.saturating_duration_since(now),
+                };
+                (e.value.clone(), lease, standby.contains(&e.value.id))
+            })
+            .collect()
+    }
+
     /// Register a model manifest (F5: keyed `name:version`).
     pub fn register_manifest(&self, m: ModelManifest) {
         self.manifests

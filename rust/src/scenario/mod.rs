@@ -203,39 +203,48 @@ impl Scenario {
         }
     }
 
+    /// Strict grammar: every variant requires its `kind` and every field to
+    /// be present, well-typed, finite, and in range. A malformed shape
+    /// returns `None` — it never silently defaults into a different
+    /// experiment than the one the spec digest claims. `to_json` emits
+    /// every field, so round-trips are unaffected.
     pub fn from_json(j: &Json) -> Option<Scenario> {
-        let count = j.f64_or("count", 32.0) as usize;
-        match j.str_or("kind", "online") {
-            "online" => Some(Scenario::Online { count }),
-            "poisson" => Some(Scenario::Poisson { rate: j.f64_or("rate", 10.0), count }),
-            "batched" => Some(Scenario::Batched {
-                batch_size: j.f64_or("batch_size", 1.0) as usize,
-                batches: j.f64_or("batches", 8.0) as usize,
+        match j.get("kind")?.as_str()? {
+            "online" => Some(Scenario::Online { count: strict_count(j, "count")? }),
+            "poisson" => Some(Scenario::Poisson {
+                rate: strict_positive(j, "rate")?,
+                count: strict_count(j, "count")?,
             }),
-            "fixed_qps" => Some(Scenario::FixedQps { qps: j.f64_or("qps", 10.0), count }),
+            "batched" => Some(Scenario::Batched {
+                batch_size: strict_count(j, "batch_size")?,
+                batches: strict_count(j, "batches")?,
+            }),
+            "fixed_qps" => Some(Scenario::FixedQps {
+                qps: strict_positive(j, "qps")?,
+                count: strict_count(j, "count")?,
+            }),
             "burst" => Some(Scenario::Burst {
-                burst_size: j.f64_or("burst_size", 8.0) as usize,
-                period_s: j.f64_or("period_s", 1.0),
-                bursts: j.f64_or("bursts", 4.0) as usize,
+                burst_size: strict_count(j, "burst_size")?,
+                period_s: strict_positive(j, "period_s")?,
+                bursts: strict_count(j, "bursts")?,
             }),
             "trace_replay" => Some(Scenario::TraceReplay {
+                // Every entry must be a finite number — a mistyped or
+                // non-finite timestamp rejects the whole log rather than
+                // silently shrinking it.
                 timestamps: j
                     .get("timestamps")?
                     .as_arr()?
                     .iter()
-                    .filter_map(|v| v.as_f64())
-                    .collect(),
+                    .map(|v| v.as_f64().filter(|t| t.is_finite()))
+                    .collect::<Option<Vec<_>>>()?,
             }),
             "diurnal" => Some(Scenario::Diurnal {
-                peak_qps: j.f64_or("peak_qps", 100.0),
-                trough_qps: j.f64_or("trough_qps", 10.0),
-                period_s: j.f64_or("period_s", 60.0),
-                count,
+                peak_qps: strict_positive(j, "peak_qps")?,
+                trough_qps: strict_nonneg(j, "trough_qps")?,
+                period_s: strict_positive(j, "period_s")?,
+                count: strict_count(j, "count")?,
             }),
-            // The MLPerf modes parse strictly: every field must be present,
-            // finite, and positive. A malformed shape returns `None` — it
-            // never silently defaults into a different experiment than the
-            // one the spec digest claims.
             "single_stream" => Some(Scenario::SingleStream { count: strict_count(j, "count")? }),
             "multi_stream" => Some(Scenario::MultiStream {
                 streams: strict_count(j, "streams")?,
@@ -254,7 +263,7 @@ impl Scenario {
                     .iter()
                     .map(|t| {
                         Some((
-                            t.str_or("name", "").to_string(),
+                            t.get("name")?.as_str()?.to_string(),
                             Scenario::from_json(t.get("scenario")?)?,
                         ))
                     })
@@ -265,20 +274,37 @@ impl Scenario {
     }
 }
 
-/// Strict field parse for the MLPerf modes: present, finite, ≥ 1.
+/// Largest count accepted from the wire: 2^53, the last integer `f64`
+/// represents exactly. Anything above has already lost precision in JSON,
+/// so the cast to `usize` could not be faithful.
+const MAX_EXACT_COUNT: f64 = 9_007_199_254_740_992.0;
+
+/// Strict count parse: present, finite, integral, in `1..=2^53`. Guarding
+/// integrality and range *before* the cast means `v as usize` can never
+/// truncate, saturate, or smuggle a NaN/negative through as 0.
 fn strict_count(j: &Json, key: &str) -> Option<usize> {
     let v = j.get(key)?.as_f64()?;
-    if v.is_finite() && v >= 1.0 {
+    if v.is_finite() && v >= 1.0 && v <= MAX_EXACT_COUNT && v.fract() == 0.0 {
         Some(v as usize)
     } else {
         None
     }
 }
 
-/// Strict field parse for the MLPerf modes: present, finite, > 0.
+/// Strict rate/period parse: present, finite, > 0.
 fn strict_positive(j: &Json, key: &str) -> Option<f64> {
     let v = j.get(key)?.as_f64()?;
     if v.is_finite() && v > 0.0 {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+/// Strict non-negative parse (diurnal troughs may rest at zero QPS).
+fn strict_nonneg(j: &Json, key: &str) -> Option<f64> {
+    let v = j.get(key)?.as_f64()?;
+    if v.is_finite() && v >= 0.0 {
         Some(v)
     } else {
         None
@@ -600,6 +626,73 @@ mod tests {
             let back = Scenario::from_json(&j).unwrap();
             assert_eq!(back, s);
         }
+    }
+
+    #[test]
+    fn legacy_variants_parse_strictly_field_by_field() {
+        // The legacy grammar follows the same no-default contract as the
+        // MLPerf modes: a missing, mistyped, non-finite, negative, or
+        // fractional field rejects the spec — it never silently becomes a
+        // different experiment. One malformed case per field.
+        let cases = [
+            // kind itself must be present and a string.
+            r#"{"count":8}"#,
+            r#"{"kind":7,"count":8}"#,
+            // online.count: missing, wrong type, zero, negative, fractional.
+            r#"{"kind":"online"}"#,
+            r#"{"kind":"online","count":"many"}"#,
+            r#"{"kind":"online","count":0}"#,
+            r#"{"kind":"online","count":-3}"#,
+            r#"{"kind":"online","count":2.5}"#,
+            // poisson.rate / poisson.count.
+            r#"{"kind":"poisson","count":8}"#,
+            r#"{"kind":"poisson","rate":0,"count":8}"#,
+            r#"{"kind":"poisson","rate":-1.5,"count":8}"#,
+            r#"{"kind":"poisson","rate":10}"#,
+            // batched.batch_size / batched.batches.
+            r#"{"kind":"batched","batches":4}"#,
+            r#"{"kind":"batched","batch_size":0,"batches":4}"#,
+            r#"{"kind":"batched","batch_size":8}"#,
+            r#"{"kind":"batched","batch_size":8,"batches":1.5}"#,
+            // fixed_qps.qps / fixed_qps.count.
+            r#"{"kind":"fixed_qps","count":8}"#,
+            r#"{"kind":"fixed_qps","qps":0,"count":8}"#,
+            r#"{"kind":"fixed_qps","qps":5}"#,
+            // burst: all three fields required and in range.
+            r#"{"kind":"burst","period_s":1,"bursts":2}"#,
+            r#"{"kind":"burst","burst_size":4,"bursts":2}"#,
+            r#"{"kind":"burst","burst_size":4,"period_s":0,"bursts":2}"#,
+            r#"{"kind":"burst","burst_size":4,"period_s":1}"#,
+            // trace_replay: list required, every entry a number.
+            r#"{"kind":"trace_replay"}"#,
+            r#"{"kind":"trace_replay","timestamps":0.5}"#,
+            r#"{"kind":"trace_replay","timestamps":[0.1,"oops",0.3]}"#,
+            // diurnal: every field required; peak/period positive; trough ≥ 0.
+            r#"{"kind":"diurnal","trough_qps":1,"period_s":60,"count":8}"#,
+            r#"{"kind":"diurnal","peak_qps":0,"trough_qps":1,"period_s":60,"count":8}"#,
+            r#"{"kind":"diurnal","peak_qps":100,"trough_qps":-1,"period_s":60,"count":8}"#,
+            r#"{"kind":"diurnal","peak_qps":100,"trough_qps":1,"count":8}"#,
+            r#"{"kind":"diurnal","peak_qps":100,"trough_qps":1,"period_s":60}"#,
+            // mix: tenant name must be present and a string.
+            r#"{"kind":"mix","tenants":[{"scenario":{"kind":"online","count":4}}]}"#,
+        ];
+        for (i, text) in cases.iter().enumerate() {
+            let j = Json::parse(text).unwrap();
+            assert_eq!(Scenario::from_json(&j), None, "case {i} must be rejected: {text}");
+        }
+        // Non-finite numbers cannot be written in JSON text; build in-memory.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::obj(vec![("kind", Json::str("online")), ("count", Json::num(bad))]);
+            assert_eq!(Scenario::from_json(&j), None, "non-finite count {bad} must be rejected");
+            let j = Json::obj(vec![
+                ("kind", Json::str("trace_replay")),
+                ("timestamps", Json::arr(vec![Json::num(0.1), Json::num(bad)])),
+            ]);
+            assert_eq!(Scenario::from_json(&j), None, "non-finite timestamp must be rejected");
+        }
+        // Counts above 2^53 lost integer precision in transit — rejected.
+        let j = Json::obj(vec![("kind", Json::str("online")), ("count", Json::num(1e16))]);
+        assert_eq!(Scenario::from_json(&j), None, "count beyond exact-f64 range must be rejected");
     }
 
     #[test]

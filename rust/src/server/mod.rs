@@ -121,6 +121,10 @@ pub struct Server {
     pub registry: Arc<Registry>,
     pub evaldb: Arc<EvalDb>,
     pub traces: Arc<TraceServer>,
+    /// Live progress gauges for the fleet dashboard (`mlms fleet --dash`):
+    /// the dispatcher mirrors per-agent in-flight counts here and every
+    /// batched evaluation folds its per-tenant latency tails in.
+    pub gauges: Arc<crate::dash::FleetGauges>,
     /// In-process agents by id (agents may instead be remote, reached via
     /// their registered endpoint).
     local_agents: Mutex<HashMap<String, Arc<Agent>>>,
@@ -155,7 +159,13 @@ impl Server {
         evaldb: Arc<EvalDb>,
         traces: Arc<TraceServer>,
     ) -> Arc<Server> {
-        Arc::new(Server { registry, evaldb, traces, local_agents: Mutex::new(HashMap::new()) })
+        Arc::new(Server {
+            registry,
+            evaldb,
+            traces,
+            gauges: crate::dash::FleetGauges::new(),
+            local_agents: Mutex::new(HashMap::new()),
+        })
     }
 
     /// Fresh server with its own registry/db/trace services (common setup).
@@ -472,6 +482,7 @@ impl Server {
         let watch = watch.map(|f| f(&batches, executors.len()));
         let outcome = Dispatcher::new(executors)
             .with_policy(cfg.policy())
+            .with_gauges(self.gauges.clone())
             .dispatch_watched(batches, watch)
             .map_err(|e| ServerError::AgentFailed(e.agent.clone(), e.msg))?;
 
@@ -496,6 +507,9 @@ impl Server {
             by_seq.insert(c.seq, c.latency_s);
             per_tenant.record(&tenant_name(c.tenant), c.latency_s);
         }
+        // Feed the dashboard's rolling p50/p99 window — probes included;
+        // a live operator wants to see probe traffic too.
+        self.gauges.fold_tenants(&per_tenant);
         // Serving-stack spans: the virtual-time schedule, republished as a
         // trace (batching_wait → queue_wait → batch_service per batch) so
         // bottleneck attribution covers queueing and dispatch, not just

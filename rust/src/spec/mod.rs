@@ -1,0 +1,1035 @@
+//! Declarative evaluation specs: `mlms run spec.yaml`.
+//!
+//! The paper's platform is driven by *specifications* (§4.1): manifests
+//! declare models and frameworks, and evaluations are meant to be
+//! reproducible artifacts rather than one-off flag soups. This module adds
+//! the missing piece — a YAML evaluation spec that names a whole run
+//! (eval, sweep, slo-search, regress, or autoscale) declaratively:
+//!
+//! ```yaml
+//! run: sweep
+//! models: [ResNet_v1_50, VGG16]
+//! systems: [aws_p3]
+//! scenario:
+//!   kind: online
+//!   count: 16
+//! batch_sizes: [1, 8]
+//! seed: 42
+//! label: nightly
+//! ```
+//!
+//! Design rules:
+//!
+//! - **Strict schema.** Unknown keys reject with an error naming the key;
+//!   typed fields reject wrong types, non-finite numbers, fractional
+//!   counts. A spec never half-applies: nothing in an accepted spec is
+//!   silently ignored, and nothing absent is silently invented beyond the
+//!   documented defaults (which mirror the CLI's).
+//! - **Strict front-end.** On top of [`yamlmini`]'s grammar the spec
+//!   front-end rejects tab indentation, odd indentation widths, empty
+//!   documents, and non-mapping documents — each with a 1-based line
+//!   number ([`SpecError`]).
+//! - **Digest parity.** [`EvalSpecFile::to_plan`] lowers a spec onto the
+//!   exact same [`sweep::Plan`](crate::sweep::Plan) the flag-driven CLI
+//!   builds, so a spec-driven cell and its flag-equivalent invocation
+//!   produce the *same* content-addressed
+//!   [`EvalSpec`](crate::evaldb::EvalSpec) digest and hit the same
+//!   memoization line in the evaluation database.
+//! - **Reorder invariance.** [`EvalSpecFile::digest`] hashes the resolved
+//!   spec's canonical JSON; two specs differing only in key order (or
+//!   comments, or formatting) digest identically.
+
+use crate::batcher::admission::{AdmissionConfig, Priority, TenantPolicy};
+use crate::batcher::BatcherConfig;
+use crate::evaldb::RunMeta;
+use crate::manifest::Accelerator;
+use crate::scenario::Scenario;
+use crate::sweep::Plan;
+use crate::tracing::TraceLevel;
+use crate::util::json::Json;
+use crate::util::sha256::sha256_hex;
+use crate::util::yamlmini;
+
+/// A spec parse/validation error with a 1-based source line when the
+/// front-end knows one (`line == 0` for schema errors, which concern the
+/// resolved document rather than a single line).
+#[derive(Debug)]
+pub struct SpecError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl SpecError {
+    fn at(line: usize, msg: impl Into<String>) -> SpecError {
+        SpecError { line, msg: msg.into() }
+    }
+
+    fn schema(msg: impl Into<String>) -> SpecError {
+        SpecError { line: 0, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "spec error: {}", self.msg)
+        } else {
+            write!(f, "spec error at line {}: {}", self.line, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Parse spec YAML with the strict front-end: tabs in indentation and odd
+/// indentation widths reject with their line number *before* the grammar
+/// runs (yamlmini tolerates both; a spec that silently means something
+/// other than what its indentation suggests is worse than a parse error),
+/// then empty and non-mapping documents reject.
+pub fn parse_spec_yaml(input: &str) -> Result<Json, SpecError> {
+    for (i, raw) in input.lines().enumerate() {
+        let n = i + 1;
+        let trimmed = raw.trim_end();
+        let content = trimmed.trim_start();
+        if content.is_empty() || content.starts_with('#') || content == "---" {
+            continue;
+        }
+        let indent = &trimmed[..trimmed.len() - content.len()];
+        if indent.contains('\t') {
+            return Err(SpecError::at(n, "tab indentation is not allowed (use 2-space indents)"));
+        }
+        if indent.len() % 2 != 0 {
+            return Err(SpecError::at(
+                n,
+                format!("odd indentation of {} space(s) (use 2-space indents)", indent.len()),
+            ));
+        }
+    }
+    let v = yamlmini::parse(input).map_err(|e| SpecError::at(e.line, e.msg))?;
+    if matches!(v, Json::Null) {
+        return Err(SpecError::at(1, "empty spec document"));
+    }
+    if v.as_obj().is_none() {
+        return Err(SpecError::at(1, "top-level of a spec must be a mapping"));
+    }
+    Ok(v)
+}
+
+/// What a spec runs. Mirrors the CLI subcommands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunKind {
+    Eval,
+    Sweep,
+    SloSearch,
+    Regress,
+    Autoscale,
+}
+
+impl RunKind {
+    pub fn parse(s: &str) -> Option<RunKind> {
+        match s {
+            "eval" => Some(RunKind::Eval),
+            "sweep" => Some(RunKind::Sweep),
+            "slo-search" => Some(RunKind::SloSearch),
+            "regress" => Some(RunKind::Regress),
+            "autoscale" => Some(RunKind::Autoscale),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunKind::Eval => "eval",
+            RunKind::Sweep => "sweep",
+            RunKind::SloSearch => "slo-search",
+            RunKind::Regress => "regress",
+            RunKind::Autoscale => "autoscale",
+        }
+    }
+}
+
+/// `slo:` block — SLO-frontier search parameters (defaults mirror
+/// `mlms slo-search`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloBlock {
+    pub percentile: f64,
+    pub bounds_ms: Vec<f64>,
+    pub start_qps: f64,
+    pub probe_count: usize,
+    pub max_probes: usize,
+}
+
+impl Default for SloBlock {
+    fn default() -> Self {
+        SloBlock {
+            percentile: 99.0,
+            bounds_ms: vec![50.0, 20.0, 10.0, 5.0],
+            start_qps: 50.0,
+            probe_count: 256,
+            max_probes: 24,
+        }
+    }
+}
+
+impl SloBlock {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("percentile", Json::num(self.percentile)),
+            ("bounds_ms", Json::arr(self.bounds_ms.iter().map(|b| Json::num(*b)).collect())),
+            ("start_qps", Json::num(self.start_qps)),
+            ("probe_count", Json::num(self.probe_count as f64)),
+            ("max_probes", Json::num(self.max_probes as f64)),
+        ])
+    }
+}
+
+/// `regress:` block — the commit-over-commit gate's two run lines and
+/// thresholds (defaults mirror `mlms regress`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegressBlock {
+    pub control: String,
+    pub treatment: String,
+    pub alpha: f64,
+    pub min_effect: f64,
+}
+
+impl RegressBlock {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("control", Json::str(&self.control)),
+            ("treatment", Json::str(&self.treatment)),
+            ("alpha", Json::num(self.alpha)),
+            ("min_effect", Json::num(self.min_effect)),
+        ])
+    }
+}
+
+/// `autoscale:` block — controller and service-model parameters (defaults
+/// mirror `mlms autoscale`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleBlock {
+    pub min_agents: usize,
+    pub max_agents: usize,
+    pub interval_s: f64,
+    pub cooldown_s: f64,
+    pub spawn_delay_s: f64,
+    pub bound_ms: f64,
+    pub percentile: f64,
+    pub service_base_ms: f64,
+    pub service_item_ms: f64,
+    /// Initial fleet size; `None` starts at `min_agents`.
+    pub agents: Option<usize>,
+    /// `static: true` — fixed-fleet baseline, controller off.
+    pub fixed: bool,
+}
+
+impl Default for AutoscaleBlock {
+    fn default() -> Self {
+        AutoscaleBlock {
+            min_agents: 1,
+            max_agents: 8,
+            interval_s: 0.5,
+            cooldown_s: 1.0,
+            spawn_delay_s: 0.25,
+            bound_ms: 10.0,
+            percentile: 99.0,
+            service_base_ms: 1.0,
+            service_item_ms: 0.4,
+            agents: None,
+            fixed: false,
+        }
+    }
+}
+
+impl AutoscaleBlock {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("min_agents", Json::num(self.min_agents as f64)),
+            ("max_agents", Json::num(self.max_agents as f64)),
+            ("interval_s", Json::num(self.interval_s)),
+            ("cooldown_s", Json::num(self.cooldown_s)),
+            ("spawn_delay_s", Json::num(self.spawn_delay_s)),
+            ("bound_ms", Json::num(self.bound_ms)),
+            ("percentile", Json::num(self.percentile)),
+            ("service_base_ms", Json::num(self.service_base_ms)),
+            ("service_item_ms", Json::num(self.service_item_ms)),
+            (
+                "agents",
+                self.agents.map(|a| Json::num(a as f64)).unwrap_or(Json::Null),
+            ),
+            ("static", Json::Bool(self.fixed)),
+        ])
+    }
+}
+
+/// A fully resolved evaluation spec file.
+#[derive(Debug, Clone)]
+pub struct EvalSpecFile {
+    pub kind: RunKind,
+    pub models: Vec<String>,
+    pub systems: Vec<String>,
+    pub scenario: Scenario,
+    pub batch_sizes: Vec<usize>,
+    pub trace_level: TraceLevel,
+    pub seed: u64,
+    pub run_label: String,
+    pub accelerator: Accelerator,
+    pub parallelism: usize,
+    pub dispatch: Option<BatcherConfig>,
+    pub admission: Option<AdmissionConfig>,
+    pub slo: Option<SloBlock>,
+    pub regress: Option<RegressBlock>,
+    pub autoscale: Option<AutoscaleBlock>,
+}
+
+const TOP_KEYS: &[&str] = &[
+    "run",
+    "label",
+    "model",
+    "models",
+    "system",
+    "systems",
+    "scenario",
+    "batch_sizes",
+    "trace_level",
+    "seed",
+    "accelerator",
+    "parallelism",
+    "dispatch",
+    "admission",
+    "slo",
+    "regress",
+    "autoscale",
+];
+
+impl EvalSpecFile {
+    /// Parse spec YAML text into a resolved spec (strict front-end +
+    /// strict schema).
+    pub fn parse(input: &str) -> Result<EvalSpecFile, SpecError> {
+        let j = parse_spec_yaml(input)?;
+        EvalSpecFile::from_json(&j)
+    }
+
+    /// Validate a parsed document against the spec schema.
+    pub fn from_json(j: &Json) -> Result<EvalSpecFile, SpecError> {
+        reject_unknown(j, "spec", TOP_KEYS)?;
+
+        let kind_raw = want_str(req(j, "spec", "run")?, "`run`")?;
+        let kind = RunKind::parse(&kind_raw).ok_or_else(|| {
+            SpecError::schema(format!(
+                "unknown run kind {kind_raw:?} (eval|sweep|slo-search|regress|autoscale)"
+            ))
+        })?;
+
+        let models = name_list(j, "model", "models")?
+            .ok_or_else(|| SpecError::schema("a spec must name `model:` or `models:`"))?;
+        let systems = name_list(j, "system", "systems")?
+            .unwrap_or_else(crate::sysmodel::table1_system_names);
+
+        let scenario = match get(j, "scenario") {
+            None => Scenario::Online { count: 16 },
+            Some(v) => {
+                if v.as_obj().is_none() {
+                    return Err(SpecError::schema("`scenario` must be a mapping with a `kind`"));
+                }
+                Scenario::from_json(v).ok_or_else(|| {
+                    SpecError::schema(
+                        "invalid `scenario` block (the strict grammar requires `kind` and \
+                         every field of that kind, with finite positive values)",
+                    )
+                })?
+            }
+        };
+
+        let batch_sizes = match get(j, "batch_sizes") {
+            None => vec![1],
+            Some(v) => want_count_list(v, "`batch_sizes`")?,
+        };
+
+        let trace_level = match get(j, "trace_level") {
+            None => TraceLevel::None,
+            Some(v) => {
+                let s = want_str(v, "`trace_level`")?;
+                TraceLevel::parse(&s).ok_or_else(|| {
+                    SpecError::schema(format!(
+                        "invalid `trace_level` {s:?} (none|model|framework|system|full)"
+                    ))
+                })?
+            }
+        };
+
+        let seed = match get(j, "seed") {
+            None => 42,
+            Some(v) => want_u64(v, "`seed`")?,
+        };
+
+        let run_label = match get(j, "label") {
+            None => String::new(),
+            Some(v) => want_str(v, "`label`")?,
+        };
+
+        let accelerator = match get(j, "accelerator") {
+            None => Accelerator::Gpu,
+            Some(v) => {
+                let s = want_str(v, "`accelerator`")?;
+                match s.to_ascii_lowercase().as_str() {
+                    // Accelerator::parse maps unknown strings to Any; a
+                    // declarative spec must not accept typos that way.
+                    "cpu" | "gpu" | "fpga" | "any" => Accelerator::parse(&s),
+                    _ => {
+                        return Err(SpecError::schema(format!(
+                            "invalid `accelerator` {s:?} (cpu|gpu|fpga|any)"
+                        )))
+                    }
+                }
+            }
+        };
+
+        let parallelism = match get(j, "parallelism") {
+            None => 4,
+            Some(v) => want_count(v, "`parallelism`")?,
+        };
+
+        let dispatch = match get(j, "dispatch") {
+            None => None,
+            Some(v) => Some(parse_dispatch(v)?),
+        };
+
+        let admission = match get(j, "admission") {
+            None => None,
+            Some(v) => Some(parse_admission(v)?),
+        };
+
+        let slo = match get(j, "slo") {
+            None => None,
+            Some(v) => Some(parse_slo(v)?),
+        };
+
+        let regress = match get(j, "regress") {
+            None => None,
+            Some(v) => Some(parse_regress(v)?),
+        };
+
+        let autoscale = match get(j, "autoscale") {
+            None => None,
+            Some(v) => Some(parse_autoscale(v)?),
+        };
+
+        // Kind ↔ block consistency: a block that the declared run kind
+        // would never read is an error, not dead weight.
+        if kind == RunKind::Regress && regress.is_none() {
+            return Err(SpecError::schema("run: regress requires a `regress:` block"));
+        }
+        if regress.is_some() && kind != RunKind::Regress {
+            return Err(SpecError::schema("a `regress:` block requires run: regress"));
+        }
+        if slo.is_some() && kind != RunKind::SloSearch {
+            return Err(SpecError::schema("an `slo:` block requires run: slo-search"));
+        }
+        if autoscale.is_some() && kind != RunKind::Autoscale {
+            return Err(SpecError::schema("an `autoscale:` block requires run: autoscale"));
+        }
+        if admission.is_some() && kind != RunKind::Autoscale {
+            return Err(SpecError::schema(
+                "an `admission:` block is only used by run: autoscale",
+            ));
+        }
+
+        Ok(EvalSpecFile {
+            kind,
+            models,
+            systems,
+            scenario,
+            batch_sizes,
+            trace_level,
+            seed,
+            run_label,
+            accelerator,
+            parallelism,
+            dispatch,
+            admission,
+            slo,
+            regress,
+            autoscale,
+        })
+    }
+
+    /// Lower the spec onto the sweep engine's plan. This is the digest
+    /// parity point: the returned plan is field-for-field what the
+    /// flag-driven CLI builds, so every cell's content-addressed
+    /// [`EvalSpec`](crate::evaldb::EvalSpec) digest — and therefore its
+    /// memoization line — is identical between the two front-ends.
+    pub fn to_plan(&self) -> Plan {
+        let mut plan = Plan::new(self.models.clone(), self.systems.clone());
+        plan.scenarios = vec![self.scenario.clone()];
+        plan.batch_sizes = self.batch_sizes.clone();
+        plan.accelerator = self.accelerator;
+        plan.trace_level = self.trace_level;
+        plan.seed = self.seed;
+        plan.dispatch = self.dispatch.clone();
+        plan.parallelism = self.parallelism;
+        plan.run_meta = if self.run_label.is_empty() {
+            RunMeta::default()
+        } else {
+            RunMeta::labeled(&self.run_label)
+        };
+        plan
+    }
+
+    /// The resolved spec as canonical JSON. Two spec files that differ
+    /// only in key order, comments, or formatting resolve to the same
+    /// value (and hence the same [`digest`](EvalSpecFile::digest)).
+    pub fn canonical_json(&self) -> Json {
+        Json::obj(vec![
+            ("run", Json::str(self.kind.as_str())),
+            ("models", Json::arr(self.models.iter().map(Json::str).collect())),
+            ("systems", Json::arr(self.systems.iter().map(Json::str).collect())),
+            ("scenario", self.scenario.to_json()),
+            (
+                "batch_sizes",
+                Json::arr(self.batch_sizes.iter().map(|b| Json::num(*b as f64)).collect()),
+            ),
+            ("trace_level", Json::str(self.trace_level.as_str())),
+            // Seed as a string: u64 survives exactly (same trick as
+            // EvalSpec::canonical).
+            ("seed", Json::str(self.seed.to_string())),
+            ("label", Json::str(&self.run_label)),
+            ("accelerator", Json::str(self.accelerator.as_str())),
+            ("parallelism", Json::num(self.parallelism as f64)),
+            (
+                "dispatch",
+                self.dispatch.as_ref().map(|d| d.fingerprint_json()).unwrap_or(Json::Null),
+            ),
+            (
+                "admission",
+                self.admission.as_ref().map(|a| a.fingerprint_json()).unwrap_or(Json::Null),
+            ),
+            ("slo", self.slo.as_ref().map(|s| s.to_json()).unwrap_or(Json::Null)),
+            ("regress", self.regress.as_ref().map(|r| r.to_json()).unwrap_or(Json::Null)),
+            (
+                "autoscale",
+                self.autoscale.as_ref().map(|a| a.to_json()).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Content digest of the resolved spec.
+    pub fn digest(&self) -> String {
+        sha256_hex(self.canonical_json().to_string().as_bytes())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block parsers.
+
+fn parse_dispatch(v: &Json) -> Result<BatcherConfig, SpecError> {
+    reject_unknown(v, "dispatch", &["batch", "wait_ms", "fair"])?;
+    let mut cfg = BatcherConfig::new(8, 5.0);
+    if let Some(b) = get(v, "batch") {
+        cfg.max_batch_size = want_count(b, "`dispatch.batch`")?;
+    }
+    if let Some(w) = get(v, "wait_ms") {
+        cfg.max_wait_ms = want_pos(w, "`dispatch.wait_ms`")?;
+    }
+    if let Some(f) = get(v, "fair") {
+        cfg.fair = want_bool(f, "`dispatch.fair`")?;
+    }
+    Ok(cfg)
+}
+
+fn parse_policy(v: &Json, ctx: &str, allow_tenant: bool) -> Result<TenantPolicy, SpecError> {
+    let allowed: &[&str] = if allow_tenant {
+        &["tenant", "priority", "rate_per_s", "burst", "deadline_ms"]
+    } else {
+        &["priority", "rate_per_s", "burst", "deadline_ms"]
+    };
+    reject_unknown(v, ctx, allowed)?;
+    let mut p = TenantPolicy::default();
+    if let Some(pr) = get(v, "priority") {
+        let s = want_str(pr, &format!("`{ctx}.priority`"))?;
+        p.priority = Priority::from_str(&s).ok_or_else(|| {
+            SpecError::schema(format!("invalid `{ctx}.priority` {s:?} (high|low)"))
+        })?;
+    }
+    if let Some(r) = get(v, "rate_per_s") {
+        p.rate_per_s = Some(want_pos(r, &format!("`{ctx}.rate_per_s`"))?);
+    }
+    if let Some(b) = get(v, "burst") {
+        p.burst = want_pos(b, &format!("`{ctx}.burst`"))?;
+    }
+    if let Some(d) = get(v, "deadline_ms") {
+        p.queue_deadline_ms = Some(want_pos(d, &format!("`{ctx}.deadline_ms`"))?);
+    }
+    Ok(p)
+}
+
+fn parse_admission(v: &Json) -> Result<AdmissionConfig, SpecError> {
+    reject_unknown(v, "admission", &["default", "tenants"])?;
+    let mut cfg = AdmissionConfig::default();
+    if let Some(d) = get(v, "default") {
+        cfg.default = parse_policy(d, "admission.default", false)?;
+    }
+    if let Some(ts) = get(v, "tenants") {
+        let arr = ts
+            .as_arr()
+            .ok_or_else(|| SpecError::schema("`admission.tenants` must be a list"))?;
+        for (i, t) in arr.iter().enumerate() {
+            let ctx = format!("admission.tenants[{i}]");
+            let id = want_u64(
+                req(t, &ctx, "tenant")?,
+                &format!("`{ctx}.tenant`"),
+            )?;
+            if id > u32::MAX as u64 {
+                return Err(SpecError::schema(format!(
+                    "`{ctx}.tenant` {id} exceeds the 32-bit tenant id space"
+                )));
+            }
+            let policy = parse_policy(t, &ctx, true)?;
+            cfg = cfg.with_tenant(id as u32, policy);
+        }
+    }
+    Ok(cfg)
+}
+
+fn parse_slo(v: &Json) -> Result<SloBlock, SpecError> {
+    reject_unknown(
+        v,
+        "slo",
+        &["percentile", "bounds_ms", "start_qps", "probe_count", "max_probes"],
+    )?;
+    let mut b = SloBlock::default();
+    if let Some(p) = get(v, "percentile") {
+        b.percentile = want_pos(p, "`slo.percentile`")?;
+        if b.percentile >= 100.0 {
+            return Err(SpecError::schema("`slo.percentile` must be in (0, 100)"));
+        }
+    }
+    if let Some(bs) = get(v, "bounds_ms") {
+        b.bounds_ms = want_pos_list(bs, "`slo.bounds_ms`")?;
+    }
+    if let Some(q) = get(v, "start_qps") {
+        b.start_qps = want_pos(q, "`slo.start_qps`")?;
+    }
+    if let Some(c) = get(v, "probe_count") {
+        b.probe_count = want_count(c, "`slo.probe_count`")?;
+    }
+    if let Some(m) = get(v, "max_probes") {
+        b.max_probes = want_count(m, "`slo.max_probes`")?;
+    }
+    Ok(b)
+}
+
+fn parse_regress(v: &Json) -> Result<RegressBlock, SpecError> {
+    reject_unknown(v, "regress", &["control", "treatment", "alpha", "min_effect"])?;
+    let control = want_str(req(v, "regress", "control")?, "`regress.control`")?;
+    let treatment = want_str(req(v, "regress", "treatment")?, "`regress.treatment`")?;
+    if control == treatment {
+        return Err(SpecError::schema(
+            "`regress.control` and `regress.treatment` must name different run lines",
+        ));
+    }
+    let mut b = RegressBlock { control, treatment, alpha: 0.01, min_effect: 0.05 };
+    if let Some(a) = get(v, "alpha") {
+        b.alpha = want_pos(a, "`regress.alpha`")?;
+        if b.alpha >= 1.0 {
+            return Err(SpecError::schema("`regress.alpha` must be in (0, 1)"));
+        }
+    }
+    if let Some(m) = get(v, "min_effect") {
+        b.min_effect = want_pos(m, "`regress.min_effect`")?;
+    }
+    Ok(b)
+}
+
+fn parse_autoscale(v: &Json) -> Result<AutoscaleBlock, SpecError> {
+    reject_unknown(
+        v,
+        "autoscale",
+        &[
+            "min_agents",
+            "max_agents",
+            "interval_s",
+            "cooldown_s",
+            "spawn_delay_s",
+            "bound_ms",
+            "percentile",
+            "service_base_ms",
+            "service_item_ms",
+            "agents",
+            "static",
+        ],
+    )?;
+    let mut b = AutoscaleBlock::default();
+    if let Some(x) = get(v, "min_agents") {
+        b.min_agents = want_count(x, "`autoscale.min_agents`")?;
+    }
+    if let Some(x) = get(v, "max_agents") {
+        b.max_agents = want_count(x, "`autoscale.max_agents`")?;
+    }
+    if b.max_agents < b.min_agents {
+        return Err(SpecError::schema("`autoscale.max_agents` must be >= `min_agents`"));
+    }
+    if let Some(x) = get(v, "interval_s") {
+        b.interval_s = want_pos(x, "`autoscale.interval_s`")?;
+    }
+    if let Some(x) = get(v, "cooldown_s") {
+        b.cooldown_s = want_pos(x, "`autoscale.cooldown_s`")?;
+    }
+    if let Some(x) = get(v, "spawn_delay_s") {
+        b.spawn_delay_s = want_pos(x, "`autoscale.spawn_delay_s`")?;
+    }
+    if let Some(x) = get(v, "bound_ms") {
+        b.bound_ms = want_pos(x, "`autoscale.bound_ms`")?;
+    }
+    if let Some(x) = get(v, "percentile") {
+        b.percentile = want_pos(x, "`autoscale.percentile`")?;
+        if b.percentile >= 100.0 {
+            return Err(SpecError::schema("`autoscale.percentile` must be in (0, 100)"));
+        }
+    }
+    if let Some(x) = get(v, "service_base_ms") {
+        b.service_base_ms = want_pos(x, "`autoscale.service_base_ms`")?;
+    }
+    if let Some(x) = get(v, "service_item_ms") {
+        b.service_item_ms = want_pos(x, "`autoscale.service_item_ms`")?;
+    }
+    if let Some(x) = get(v, "agents") {
+        b.agents = Some(want_count(x, "`autoscale.agents`")?);
+    }
+    if let Some(x) = get(v, "static") {
+        b.fixed = want_bool(x, "`autoscale.static`")?;
+    }
+    Ok(b)
+}
+
+// ---------------------------------------------------------------------------
+// Strict typed field helpers. Counts reject non-finite, non-integral, and
+// beyond-2^53 values (the same contract as the scenario grammar).
+
+/// Largest f64 that still represents every integer exactly (2^53).
+const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
+
+/// A present key; explicit `null` (bare `key:`) counts as absent.
+fn get<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    j.get(key).filter(|v| !matches!(v, Json::Null))
+}
+
+fn req<'a>(j: &'a Json, ctx: &str, key: &str) -> Result<&'a Json, SpecError> {
+    get(j, key).ok_or_else(|| SpecError::schema(format!("`{ctx}` requires `{key}:`")))
+}
+
+fn reject_unknown(j: &Json, ctx: &str, allowed: &[&str]) -> Result<(), SpecError> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| SpecError::schema(format!("`{ctx}` must be a mapping")))?;
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(SpecError::schema(format!(
+                "unknown key `{k}` in `{ctx}` (allowed: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn want_str(v: &Json, what: &str) -> Result<String, SpecError> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| SpecError::schema(format!("{what} must be a string")))
+}
+
+fn want_bool(v: &Json, what: &str) -> Result<bool, SpecError> {
+    v.as_bool().ok_or_else(|| SpecError::schema(format!("{what} must be true or false")))
+}
+
+fn want_finite(v: &Json, what: &str) -> Result<f64, SpecError> {
+    v.as_f64()
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| SpecError::schema(format!("{what} must be a finite number")))
+}
+
+fn want_pos(v: &Json, what: &str) -> Result<f64, SpecError> {
+    let x = want_finite(v, what)?;
+    if x > 0.0 {
+        Ok(x)
+    } else {
+        Err(SpecError::schema(format!("{what} must be positive")))
+    }
+}
+
+fn want_count(v: &Json, what: &str) -> Result<usize, SpecError> {
+    let x = want_finite(v, what)?;
+    if x >= 1.0 && x <= MAX_EXACT && x.fract() == 0.0 {
+        Ok(x as usize)
+    } else {
+        Err(SpecError::schema(format!("{what} must be a positive integer")))
+    }
+}
+
+fn want_u64(v: &Json, what: &str) -> Result<u64, SpecError> {
+    let x = want_finite(v, what)?;
+    if x >= 0.0 && x <= MAX_EXACT && x.fract() == 0.0 {
+        Ok(x as u64)
+    } else {
+        Err(SpecError::schema(format!("{what} must be a non-negative integer")))
+    }
+}
+
+fn want_count_list(v: &Json, what: &str) -> Result<Vec<usize>, SpecError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| SpecError::schema(format!("{what} must be a list of positive integers")))?;
+    if arr.is_empty() {
+        return Err(SpecError::schema(format!("{what} must not be empty")));
+    }
+    arr.iter().map(|x| want_count(x, &format!("{what} entry"))).collect()
+}
+
+fn want_pos_list(v: &Json, what: &str) -> Result<Vec<f64>, SpecError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| SpecError::schema(format!("{what} must be a list of positive numbers")))?;
+    if arr.is_empty() {
+        return Err(SpecError::schema(format!("{what} must not be empty")));
+    }
+    arr.iter().map(|x| want_pos(x, &format!("{what} entry"))).collect()
+}
+
+/// `model:`/`models:` (or `system:`/`systems:`): singular is one string,
+/// plural a non-empty string list; naming both is ambiguous and rejects.
+fn name_list(j: &Json, singular: &str, plural: &str) -> Result<Option<Vec<String>>, SpecError> {
+    match (get(j, singular), get(j, plural)) {
+        (Some(_), Some(_)) => Err(SpecError::schema(format!(
+            "`{singular}:` and `{plural}:` are mutually exclusive"
+        ))),
+        (Some(v), None) => Ok(Some(vec![want_str(v, &format!("`{singular}`"))?])),
+        (None, Some(v)) => {
+            let arr = v.as_arr().ok_or_else(|| {
+                SpecError::schema(format!("`{plural}` must be a list of names"))
+            })?;
+            if arr.is_empty() {
+                return Err(SpecError::schema(format!("`{plural}` must not be empty")));
+            }
+            let names = arr
+                .iter()
+                .map(|x| want_str(x, &format!("`{plural}` entry")))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Some(names))
+        }
+        (None, None) => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL_SWEEP: &str = "\
+run: sweep
+models: [ResNet_v1_50, VGG16]
+systems: [aws_p3]
+scenario:
+  kind: online
+  count: 16
+batch_sizes: [1, 8]
+trace_level: none
+seed: 42
+label: nightly
+accelerator: gpu
+parallelism: 2
+dispatch:
+  batch: 8
+  wait_ms: 5
+  fair: true
+";
+
+    #[test]
+    fn full_sweep_spec_resolves() {
+        let s = EvalSpecFile::parse(FULL_SWEEP).unwrap();
+        assert_eq!(s.kind, RunKind::Sweep);
+        assert_eq!(s.models, vec!["ResNet_v1_50", "VGG16"]);
+        assert_eq!(s.systems, vec!["aws_p3"]);
+        assert_eq!(s.scenario, Scenario::Online { count: 16 });
+        assert_eq!(s.batch_sizes, vec![1, 8]);
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.run_label, "nightly");
+        assert_eq!(s.parallelism, 2);
+        let d = s.dispatch.as_ref().unwrap();
+        assert_eq!(d.max_batch_size, 8);
+        assert!(d.fair);
+        let plan = s.to_plan();
+        assert_eq!(plan.run_meta.label, "nightly");
+        assert_eq!(plan.scenarios, vec![Scenario::Online { count: 16 }]);
+    }
+
+    #[test]
+    fn defaults_mirror_the_flag_path() {
+        let s = EvalSpecFile::parse("run: eval\nmodel: ResNet_v1_50\n").unwrap();
+        assert_eq!(s.systems, crate::sysmodel::table1_system_names());
+        assert_eq!(s.scenario, Scenario::Online { count: 16 });
+        assert_eq!(s.batch_sizes, vec![1]);
+        assert_eq!(s.trace_level, TraceLevel::None);
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.parallelism, 4);
+        assert!(s.dispatch.is_none());
+        assert_eq!(s.run_label, "");
+    }
+
+    #[test]
+    fn front_end_rejects_tabs_with_line_number() {
+        let err = EvalSpecFile::parse("run: eval\nscenario:\n\tkind: online\n").unwrap_err();
+        assert_eq!(err.line, 3);
+        assert!(err.msg.contains("tab"), "{}", err.msg);
+    }
+
+    #[test]
+    fn front_end_rejects_odd_indent_with_line_number() {
+        let err =
+            EvalSpecFile::parse("run: eval\nscenario:\n   kind: online\n").unwrap_err();
+        assert_eq!(err.line, 3);
+        assert!(err.msg.contains("odd indentation"), "{}", err.msg);
+    }
+
+    #[test]
+    fn front_end_rejects_empty_and_non_mapping_docs() {
+        assert!(EvalSpecFile::parse("").unwrap_err().msg.contains("empty"));
+        assert!(EvalSpecFile::parse("# just a comment\n").unwrap_err().msg.contains("empty"));
+        assert!(EvalSpecFile::parse("- a\n- b\n").unwrap_err().msg.contains("mapping"));
+    }
+
+    #[test]
+    fn duplicate_keys_reject_with_line_number() {
+        let err = EvalSpecFile::parse("run: eval\nmodel: A\nmodel: B\n").unwrap_err();
+        assert_eq!(err.line, 3);
+        assert!(err.msg.contains("duplicate"), "{}", err.msg);
+    }
+
+    #[test]
+    fn unknown_keys_reject_everywhere() {
+        let err = EvalSpecFile::parse("run: eval\nmodel: A\nbatchsizes: [1]\n").unwrap_err();
+        assert!(err.msg.contains("batchsizes"), "{}", err.msg);
+        let err = EvalSpecFile::parse(
+            "run: eval\nmodel: A\ndispatch:\n  batch: 8\n  waitms: 5\n",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("waitms"), "{}", err.msg);
+    }
+
+    #[test]
+    fn typed_fields_reject_bad_values() {
+        for (spec, needle) in [
+            ("run: warp\nmodel: A\n", "unknown run kind"),
+            ("run: eval\n", "`model:` or `models:`"),
+            ("run: eval\nmodel: A\nmodels: [B]\n", "mutually exclusive"),
+            ("run: eval\nmodels: []\n", "must not be empty"),
+            ("run: eval\nmodel: A\nseed: 1.5\n", "non-negative integer"),
+            ("run: eval\nmodel: A\nseed: -1\n", "non-negative integer"),
+            ("run: eval\nmodel: A\nbatch_sizes: [0]\n", "positive integer"),
+            ("run: eval\nmodel: A\nbatch_sizes: 8\n", "must be a list"),
+            ("run: eval\nmodel: A\ntrace_level: ful\n", "trace_level"),
+            ("run: eval\nmodel: A\naccelerator: gup\n", "accelerator"),
+            ("run: eval\nmodel: A\nparallelism: 0\n", "positive integer"),
+            ("run: eval\nmodel: A\nscenario: online\n", "must be a mapping"),
+            ("run: eval\nmodel: A\nscenario:\n  kind: online\n", "scenario"),
+            ("run: eval\nmodel: A\ndispatch:\n  wait_ms: 0\n", "positive"),
+        ] {
+            let err = EvalSpecFile::parse(spec).unwrap_err();
+            assert!(err.msg.contains(needle), "spec {spec:?}: got {:?}", err.msg);
+        }
+    }
+
+    #[test]
+    fn kind_block_consistency_is_enforced() {
+        let err = EvalSpecFile::parse("run: regress\nmodel: A\n").unwrap_err();
+        assert!(err.msg.contains("requires a `regress:` block"), "{}", err.msg);
+        let err = EvalSpecFile::parse(
+            "run: eval\nmodel: A\nregress:\n  control: a\n  treatment: b\n",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("requires run: regress"), "{}", err.msg);
+        let err =
+            EvalSpecFile::parse("run: eval\nmodel: A\nslo:\n  percentile: 99\n").unwrap_err();
+        assert!(err.msg.contains("run: slo-search"), "{}", err.msg);
+        let err = EvalSpecFile::parse(
+            "run: regress\nmodel: A\nregress:\n  control: x\n  treatment: x\n",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("different run lines"), "{}", err.msg);
+    }
+
+    #[test]
+    fn admission_block_parses_tenant_policies() {
+        let s = EvalSpecFile::parse(
+            "run: autoscale\nmodel: A\nadmission:\n  tenants:\n    - tenant: 1\n      \
+             priority: low\n      rate_per_s: 500\n      burst: 64\n      deadline_ms: 50\n",
+        )
+        .unwrap();
+        let adm = s.admission.unwrap();
+        let p = adm.policy_for(1);
+        assert_eq!(p.priority, Priority::Low);
+        assert_eq!(p.rate_per_s, Some(500.0));
+        assert_eq!(p.burst, 64.0);
+        assert_eq!(p.queue_deadline_ms, Some(50.0));
+        assert_eq!(adm.policy_for(0).priority, Priority::High);
+    }
+
+    #[test]
+    fn digest_is_invariant_under_key_reordering() {
+        let reordered = "\
+label: nightly
+dispatch:
+  fair: true
+  wait_ms: 5
+  batch: 8
+parallelism: 2
+accelerator: gpu
+seed: 42
+trace_level: none
+batch_sizes: [1, 8]
+scenario:
+  count: 16
+  kind: online
+systems: [aws_p3]
+models: [ResNet_v1_50, VGG16]
+run: sweep
+";
+        let a = EvalSpecFile::parse(FULL_SWEEP).unwrap();
+        let b = EvalSpecFile::parse(reordered).unwrap();
+        assert_eq!(a.canonical_json().to_string(), b.canonical_json().to_string());
+        assert_eq!(a.digest(), b.digest());
+        // And a one-field change does move the digest.
+        let c = EvalSpecFile::parse(&FULL_SWEEP.replace("seed: 42", "seed: 43")).unwrap();
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn plan_digests_match_the_flag_built_plan() {
+        let s = EvalSpecFile::parse(FULL_SWEEP).unwrap();
+        let from_spec = s.to_plan();
+        // What build_sweep_plan in main.rs would produce for the
+        // flag-equivalent invocation.
+        let mut by_hand = Plan::new(
+            vec!["ResNet_v1_50".into(), "VGG16".into()],
+            vec!["aws_p3".into()],
+        );
+        by_hand.scenarios = vec![Scenario::Online { count: 16 }];
+        by_hand.batch_sizes = vec![1, 8];
+        by_hand.seed = 42;
+        by_hand.parallelism = 2;
+        by_hand.dispatch = Some(BatcherConfig::new(8, 5.0).with_fairness());
+        by_hand.run_meta = RunMeta::labeled("nightly");
+        let registry = crate::registry::Registry::new();
+        for m in crate::zoo::all() {
+            registry.register_manifest(m.manifest());
+        }
+        for (a, b) in from_spec.cells().iter().zip(by_hand.cells().iter()) {
+            assert_eq!(
+                from_spec.digest(&registry, a),
+                by_hand.digest(&registry, b),
+                "cell {} digests diverge between spec and flag front-ends",
+                a.label()
+            );
+        }
+    }
+}

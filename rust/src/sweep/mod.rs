@@ -312,6 +312,14 @@ pub fn run(server: &Arc<Server>, plan: &Plan) -> Outcome {
     let t0 = std::time::Instant::now();
     let total = plan.cells().len();
     let part = plan.partition(&server.registry, &server.evaldb);
+    // Dashboard progress: the cross-product size up front, then memoized /
+    // unresolvable cells settle immediately; executed cells tick in as
+    // their groups complete.
+    server.gauges.sweep_started(total);
+    server.gauges.cells_memoized(part.memoized);
+    if !part.failed.is_empty() {
+        server.gauges.cells_failed(part.failed.len());
+    }
     let mut failed = part.failed;
     let mut records = part.records;
 
@@ -329,6 +337,9 @@ pub fn run(server: &Arc<Server>, plan: &Plan) -> Outcome {
         let mut out = Vec::with_capacity(cells.len());
         for (cell, _digest) in cells {
             let result = execute_cell(&server2, &plan2, &cell);
+            if result.is_ok() {
+                server2.gauges.cell_executed();
+            }
             out.push((cell, result));
         }
         out
@@ -352,9 +363,13 @@ pub fn run(server: &Arc<Server>, plan: &Plan) -> Outcome {
         match execute_cell(server, plan, &cell) {
             Ok(mut rs) => {
                 executed += 1;
+                server.gauges.cell_executed();
                 records.append(&mut rs);
             }
-            Err(e) => failed.push((cell, format!("{first_err}; retry: {e}"))),
+            Err(e) => {
+                server.gauges.cells_failed(1);
+                failed.push((cell, format!("{first_err}; retry: {e}")));
+            }
         }
     }
     Outcome {

@@ -81,6 +81,69 @@ impl Args {
     pub fn require(&self, key: &str) -> Result<&str, String> {
         self.opt(key).ok_or_else(|| format!("missing required option --{key}"))
     }
+
+    /// Strict numeric option: absent → `default`, present-but-malformed →
+    /// an error naming the offending token. Unlike [`Args::u64_or`], a typo
+    /// like `--count 1O` fails loudly instead of silently running the
+    /// default experiment.
+    pub fn try_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        strict_parse(self.opt(key), key, default)
+    }
+
+    /// Strict variant of [`Args::usize_or`]; see [`Args::try_u64`].
+    pub fn try_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        strict_parse(self.opt(key), key, default)
+    }
+
+    /// Strict variant of [`Args::f64_or`]; see [`Args::try_u64`]. Rejects
+    /// non-finite values — `--qps inf` is never a real experiment.
+    pub fn try_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        let v: f64 = strict_parse(self.opt(key), key, default)?;
+        if v.is_finite() {
+            Ok(v)
+        } else {
+            Err(format!("invalid --{key} value {v:?} (finite number expected)"))
+        }
+    }
+
+    /// Strict comma-separated numeric list: every token must parse, and a
+    /// malformed one is named in the error (`--qps 10,abc,20` names `abc`).
+    /// Absent option → empty list.
+    pub fn try_list_f64(&self, key: &str) -> Result<Vec<f64>, String> {
+        self.list(key)
+            .iter()
+            .map(|t| {
+                t.parse::<f64>()
+                    .ok()
+                    .filter(|v| v.is_finite())
+                    .ok_or_else(|| format!("invalid --{key} list entry {t:?} (number expected)"))
+            })
+            .collect()
+    }
+
+    /// Strict comma-separated integer list; see [`Args::try_list_f64`].
+    pub fn try_list_usize(&self, key: &str) -> Result<Vec<usize>, String> {
+        self.list(key)
+            .iter()
+            .map(|t| {
+                t.parse::<usize>()
+                    .map_err(|_| format!("invalid --{key} list entry {t:?} (integer expected)"))
+            })
+            .collect()
+    }
+}
+
+fn strict_parse<T: std::str::FromStr>(
+    opt: Option<&str>,
+    key: &str,
+    default: T,
+) -> Result<T, String> {
+    match opt {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| format!("invalid --{key} value {v:?} (number expected)")),
+    }
 }
 
 /// A subcommand description for usage output.
@@ -138,6 +201,30 @@ mod tests {
     fn require_reports_missing() {
         let a = Args::parse(&[]);
         assert!(a.require("model").unwrap_err().contains("--model"));
+    }
+
+    #[test]
+    fn strict_numeric_options_name_the_offending_token() {
+        let a = Args::parse(&toks(&["--count", "1O", "--qps", "inf", "--seed", "42"]));
+        let err = a.try_usize("count", 8).unwrap_err();
+        assert!(err.contains("--count") && err.contains("1O"), "{err}");
+        let err = a.try_f64("qps", 1.0).unwrap_err();
+        assert!(err.contains("--qps"), "{err}");
+        assert_eq!(a.try_u64("seed", 0), Ok(42));
+        // Absent options still fall back to the default.
+        assert_eq!(a.try_f64("rate", 2.5), Ok(2.5));
+        assert_eq!(a.try_usize("batches", 3), Ok(3));
+    }
+
+    #[test]
+    fn strict_lists_reject_any_malformed_entry() {
+        let a = Args::parse(&toks(&["--qps", "10,abc,20", "--batches", "1,2,4"]));
+        let err = a.try_list_f64("qps").unwrap_err();
+        assert!(err.contains("abc") && err.contains("--qps"), "{err}");
+        assert_eq!(a.try_list_usize("batches"), Ok(vec![1, 2, 4]));
+        assert_eq!(a.try_list_f64("missing"), Ok(vec![]));
+        let b = Args::parse(&toks(&["--batches", "1,2.5"]));
+        assert!(b.try_list_usize("batches").unwrap_err().contains("2.5"));
     }
 
     #[test]

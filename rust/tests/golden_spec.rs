@@ -1,0 +1,124 @@
+//! Golden-fixture + equivalence tests for `mlms run`: the committed
+//! quickstart spec's resolved canonical JSON is pinned byte for byte
+//! (`tests/fixtures/golden_spec.json`), its digest is the SHA-256 of
+//! exactly those bytes, and — the property the tentpole exists for — a
+//! spec-driven run and its flag-equivalent invocation produce the same
+//! per-cell `EvalSpec` digests, hit the same memoization lines in the
+//! eval DB, and render byte-identical reports. An intentional schema or
+//! canonicalization change must regenerate the fixture in the same
+//! commit.
+
+use mlmodelscope::agent::sim_agent;
+use mlmodelscope::analysis::model_system_matrix;
+use mlmodelscope::evaldb::{EvalDb, RunMeta};
+use mlmodelscope::registry::Registry;
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::server::Server;
+use mlmodelscope::spec::EvalSpecFile;
+use mlmodelscope::sweep::{run, Plan};
+use mlmodelscope::sysmodel::Device;
+use mlmodelscope::traceserver::TraceServer;
+use mlmodelscope::tracing::TraceLevel;
+use mlmodelscope::util::sha256::sha256_hex;
+use std::sync::Arc;
+
+fn fixture_path(name: &str) -> String {
+    format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn quickstart() -> EvalSpecFile {
+    let path = format!("{}/../examples/specs/quickstart.yaml", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).expect("committed example spec");
+    EvalSpecFile::parse(&text).expect("quickstart.yaml must stay valid")
+}
+
+/// What `mlms sweep --models ResNet_v1_50,VGG16 --systems aws_p3
+/// --scenario online --count 8 --batches 1,4 --seed 42` builds — the
+/// flag-equivalent of the quickstart spec, written out by hand so drift
+/// in either front-end breaks the test.
+fn flag_equivalent_plan() -> Plan {
+    let mut plan = Plan::new(
+        vec!["ResNet_v1_50".to_string(), "VGG16".to_string()],
+        vec!["aws_p3".to_string()],
+    );
+    plan.scenarios = vec![Scenario::Online { count: 8 }];
+    plan.batch_sizes = vec![1, 4];
+    plan.seed = 42;
+    plan.run_meta = RunMeta::labeled("quickstart");
+    plan
+}
+
+fn platform() -> Arc<Server> {
+    let server = Server::new(Registry::new(), Arc::new(EvalDb::in_memory()), TraceServer::new());
+    server.register_zoo();
+    let (agent, _sim, _tracer) = sim_agent(
+        "aws_p3",
+        Device::Gpu,
+        TraceLevel::None,
+        server.evaldb.clone(),
+        server.traces.clone(),
+    );
+    server.attach_local_agent(agent);
+    server
+}
+
+#[test]
+fn quickstart_canonical_json_is_pinned() {
+    let spec = quickstart();
+    let fixture = std::fs::read_to_string(fixture_path("golden_spec.json")).expect("golden");
+    let pinned = fixture.trim_end();
+    assert_eq!(
+        spec.canonical_json().to_string(),
+        pinned,
+        "resolved quickstart spec drifted from tests/fixtures/golden_spec.json — if intentional, regenerate the fixture in this commit"
+    );
+    // The digest is the SHA-256 of exactly the pinned bytes.
+    assert_eq!(spec.digest(), sha256_hex(pinned.as_bytes()));
+}
+
+#[test]
+fn spec_and_flag_plans_share_every_cell_digest() {
+    let spec = quickstart();
+    let from_spec = spec.to_plan();
+    let by_flags = flag_equivalent_plan();
+    let registry = Registry::new();
+    for m in mlmodelscope::zoo::all() {
+        registry.register_manifest(m.manifest());
+    }
+    let spec_cells = from_spec.cells();
+    let flag_cells = by_flags.cells();
+    assert_eq!(spec_cells.len(), flag_cells.len());
+    assert_eq!(spec_cells.len(), 4, "2 models x 1 system x 1 scenario x 2 batch sizes");
+    for (a, b) in spec_cells.iter().zip(flag_cells.iter()) {
+        assert_eq!(a.label(), b.label());
+        let da = from_spec.digest(&registry, a).expect("zoo model");
+        let db = by_flags.digest(&registry, b).expect("zoo model");
+        assert_eq!(da, db, "cell {}: spec and flag digests diverge", a.label());
+    }
+}
+
+#[test]
+fn spec_run_memoizes_against_flag_run_and_reports_identically() {
+    let server = platform();
+    // First pass: the flag-built plan executes every cell.
+    let flag_outcome = run(&server, &flag_equivalent_plan());
+    assert!(flag_outcome.failed.is_empty(), "{:?}", flag_outcome.failed);
+    assert_eq!(flag_outcome.executed, 4);
+    let models = ["ResNet_v1_50".to_string(), "VGG16".to_string()];
+    let flag_report = model_system_matrix(&models, &server.evaldb).render();
+    // Second pass: the spec-built plan against the same store. Same
+    // digests → every cell memoizes; nothing executes.
+    let spec = quickstart();
+    let spec_outcome = run(&server, &spec.to_plan());
+    assert!(spec_outcome.failed.is_empty(), "{:?}", spec_outcome.failed);
+    assert_eq!(
+        spec_outcome.executed, 0,
+        "a spec-driven run must hit the flag run's memoization lines"
+    );
+    assert_eq!(spec_outcome.memoized, 4);
+    let spec_report = model_system_matrix(&spec.models, &server.evaldb).render();
+    assert_eq!(
+        spec_report, flag_report,
+        "spec-driven and flag-driven runs must render byte-identical reports"
+    );
+}

@@ -117,10 +117,13 @@ fn malformed_mlperf_specs_are_rejected_never_defaulted() {
         ),
     ]);
     assert_eq!(Scenario::from_json(&bad_mix), None, "a bad tenant poisons the whole mix");
-    // Contrast: the legacy grammar keeps its lenient defaults, so old
-    // stored specs still parse. Strictness is scoped to the MLPerf modes.
+    // The legacy grammar follows the same strict contract now: a bare kind
+    // with no fields is rejected, never defaulted — the spec layer depends
+    // on every stored digest describing exactly the experiment that ran.
     let legacy = Json::obj(vec![("kind", Json::str("online"))]);
-    assert_eq!(Scenario::from_json(&legacy), Some(Scenario::Online { count: 32 }));
+    assert_eq!(Scenario::from_json(&legacy), None, "legacy kinds no longer invent defaults");
+    let full = Json::parse(r#"{"kind":"online","count":32}"#).unwrap();
+    assert_eq!(Scenario::from_json(&full), Some(Scenario::Online { count: 32 }));
 }
 
 #[test]

@@ -1,0 +1,113 @@
+//! Integration tests for the declarative spec front-end: the strict YAML
+//! subset (tabs, odd indents, duplicate keys, empty documents reject with
+//! 1-based line numbers), the strict schema (unknown keys, wrong types),
+//! and the parse → canonical JSON → digest invariant under key
+//! reordering. The committed example specs under `examples/specs/` must
+//! always parse — they are documentation that compiles.
+
+use mlmodelscope::scenario::Scenario;
+use mlmodelscope::spec::{parse_spec_yaml, EvalSpecFile, RunKind};
+
+fn example_path(name: &str) -> String {
+    format!("{}/../examples/specs/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn committed_example_specs_parse() {
+    let quick = std::fs::read_to_string(example_path("quickstart.yaml")).expect("example");
+    let s = EvalSpecFile::parse(&quick).expect("quickstart.yaml must stay valid");
+    assert_eq!(s.kind, RunKind::Sweep);
+    assert_eq!(s.models, vec!["ResNet_v1_50", "VGG16"]);
+    assert_eq!(s.scenario, Scenario::Online { count: 8 });
+    assert_eq!(s.run_label, "quickstart");
+
+    let auto = std::fs::read_to_string(example_path("autoscale_tenants.yaml")).expect("example");
+    let s = EvalSpecFile::parse(&auto).expect("autoscale_tenants.yaml must stay valid");
+    assert_eq!(s.kind, RunKind::Autoscale);
+    let adm = s.admission.expect("admission block");
+    assert_eq!(adm.policy_for(1).rate_per_s, Some(500.0));
+    let block = s.autoscale.expect("autoscale block");
+    assert_eq!(block.max_agents, 8);
+    assert_eq!(block.bound_ms, 10.0);
+}
+
+#[test]
+fn tab_indentation_rejects_with_line_number() {
+    let err = parse_spec_yaml("run: eval\nscenario:\n\tkind: online\n").unwrap_err();
+    assert_eq!(err.line, 3);
+    assert!(err.msg.contains("tab"), "{}", err.msg);
+    assert!(
+        err.to_string().starts_with("spec error at line 3:"),
+        "display form carries the line: {err}"
+    );
+}
+
+#[test]
+fn odd_indentation_rejects_with_line_number() {
+    let err = parse_spec_yaml("a: 1\nb:\n   c: 2\n").unwrap_err();
+    assert_eq!(err.line, 3);
+    assert!(err.msg.contains("odd indentation of 3 space(s)"), "{}", err.msg);
+}
+
+#[test]
+fn duplicate_keys_reject_with_line_number() {
+    let err = parse_spec_yaml("run: eval\nseed: 1\nseed: 2\n").unwrap_err();
+    assert_eq!(err.line, 3);
+    assert!(err.msg.contains("duplicate"), "{}", err.msg);
+}
+
+#[test]
+fn empty_and_non_mapping_documents_reject() {
+    for doc in ["", "\n\n", "# only comments\n", "---\n"] {
+        let err = parse_spec_yaml(doc).unwrap_err();
+        assert!(err.msg.contains("empty"), "{doc:?}: {}", err.msg);
+    }
+    let err = parse_spec_yaml("- one\n- two\n").unwrap_err();
+    assert!(err.msg.contains("mapping"), "{}", err.msg);
+    // Schema errors (line unknown) render without a line number.
+    let err = EvalSpecFile::parse("run: eval\n").unwrap_err();
+    assert_eq!(err.line, 0);
+    assert!(err.to_string().starts_with("spec error: "), "{err}");
+}
+
+#[test]
+fn unknown_and_mistyped_fields_reject() {
+    for (doc, needle) in [
+        ("run: eval\nmodel: A\nbatch_size: [1]\n", "unknown key `batch_size`"),
+        ("run: eval\nmodel: A\nseed: soon\n", "`seed`"),
+        ("run: eval\nmodel: A\nparallelism: 2.5\n", "positive integer"),
+        ("run: sweep\nmodel: A\nscenario:\n  kind: warp\n", "scenario"),
+        (
+            "run: autoscale\nmodel: A\nautoscale:\n  min_agents: 4\n  max_agents: 2\n",
+            "max_agents",
+        ),
+    ] {
+        let err = EvalSpecFile::parse(doc).unwrap_err();
+        assert!(err.msg.contains(needle), "{doc:?}: got {:?}", err.msg);
+    }
+}
+
+#[test]
+fn digest_is_invariant_under_key_reordering_and_formatting() {
+    let a = EvalSpecFile::parse(
+        "run: sweep\nmodels: [ResNet_v1_50, VGG16]\nsystems: [aws_p3]\n\
+         scenario:\n  kind: online\n  count: 8\nbatch_sizes: [1, 4]\nseed: 42\n",
+    )
+    .unwrap();
+    // Same spec: keys reordered, comments and blank lines sprinkled in.
+    let b = EvalSpecFile::parse(
+        "# nightly quickstart\nseed: 42\n\nbatch_sizes: [1, 4]\n\
+         scenario:\n  count: 8\n  kind: online\n\nsystems: [aws_p3]\n\
+         models: [ResNet_v1_50, VGG16]\nrun: sweep\n",
+    )
+    .unwrap();
+    assert_eq!(a.canonical_json().to_string(), b.canonical_json().to_string());
+    assert_eq!(a.digest(), b.digest());
+    // One changed value moves the digest.
+    let c = EvalSpecFile::parse(
+        "run: sweep\nmodels: [ResNet_v1_50, VGG16]\nsystems: [aws_p3]\n\
+         scenario:\n  kind: online\n  count: 8\nbatch_sizes: [1, 8]\nseed: 42\n",
+    )
+    .unwrap();
+    assert_ne!(a.digest(), c.digest());
+}
